@@ -1,0 +1,45 @@
+//! Quickstart: load the tiny artifacts, fine-tune with LSP-Offload for a
+//! handful of steps, and print the loss curve + offload accounting.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use lsp_offload::coordinator::policy::PolicyKind;
+use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+use lsp_offload::model::manifest::find_artifacts;
+use lsp_offload::runtime::Engine;
+
+fn main() -> Result<()> {
+    let dir = find_artifacts(None, "tiny")?;
+    println!("loading artifacts from {} ...", dir.display());
+    let eng = Engine::load(&dir)?;
+    println!(
+        "model: {} params, {} layers, {} LSP'd matrices per block",
+        eng.man.config.n_params,
+        eng.man.config.n_layer,
+        eng.man.kinds.len()
+    );
+
+    let cfg = TrainConfig {
+        policy: PolicyKind::Lsp,
+        steps: 30,
+        bw_bytes_per_s: 0.05e9, // emulate a thin PCIe link
+        check_freq: 10,         // Alg. 1 CheckFreq
+        alpha: 0.5,
+        eval_every: 10,
+        log_every: 5,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&eng, cfg)?;
+    let report = trainer.train()?;
+    report.print();
+    trainer.metrics.print_phase_breakdown();
+
+    println!("\nloss curve (every 5 steps):");
+    for (step, loss) in report.loss_curve.iter().step_by(5) {
+        println!("  step {step:>4}  loss {loss:.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Schedule explorer: sweep the DES over the paper's testbeds, models and
+//! subspace sizes, regenerating the data behind Figs 2, 3, 6 and 7a plus a
+//! d-sweep showing where communication becomes the bottleneck (the paper's
+//! "set d as large as possible while communication is not a bottleneck").
+//!
+//! ```sh
+//! cargo run --release --example schedule_explorer
+//! ```
+
+use anyhow::Result;
+use lsp_offload::analyze;
+use lsp_offload::model::memory::PaperModel;
+use lsp_offload::sim::{build_schedule, HardwareProfile, ScheduleKind, Workload};
+
+fn main() -> Result<()> {
+    // ---- Fig. 2: Zero's slowdown breakdown on both testbeds -------------
+    println!("== Fig. 2: Zero-Offload slowdown breakdown ==");
+    let fig2 = [
+        ("laptop", PaperModel::Gpt2_774M, 1024u64),
+        ("laptop", PaperModel::Gpt2_1_3B, 512),
+        ("workstation", PaperModel::Llama3B, 4096),
+        ("workstation", PaperModel::Llama7B, 2048),
+    ];
+    for (hw_name, model, tokens) in fig2 {
+        let hw = HardwareProfile::by_name(hw_name).unwrap();
+        let w = Workload::paper(model, tokens, (model.hidden() / 2) as usize);
+        let rep = build_schedule(ScheduleKind::Zero, &hw, &w, 4)?;
+        println!("{:12} {:22}", hw_name, model.name());
+        rep.print_row();
+    }
+
+    // ---- Fig. 3: the four pipelines on the workstation -------------------
+    println!("\n== Fig. 3: pipeline comparison (llama-7B / workstation) ==");
+    let hw = HardwareProfile::workstation();
+    let w = Workload::paper(PaperModel::Llama7B, 2048, 2048);
+    for kind in ScheduleKind::ALL {
+        build_schedule(kind, &hw, &w, 4)?.print_row();
+    }
+
+    // ---- Fig. 6: throughput ablation -------------------------------------
+    println!("\n== Fig. 6: throughput ablation (iterations/s) ==");
+    let cases: [(&str, ScheduleKind, usize); 5] = [
+        ("zero-offload", ScheduleKind::Zero, 2048),
+        ("+layerwise", ScheduleKind::ZeroLayerwise, 2048),
+        ("lsp(d=1024)", ScheduleKind::LspLayerwise, 1024),
+        ("lsp(d=2048)", ScheduleKind::LspLayerwise, 2048),
+        ("native", ScheduleKind::Native, 2048),
+    ];
+    let native_t = build_schedule(ScheduleKind::Native, &hw, &w, 4)?.iter_time;
+    for (label, kind, d) in cases {
+        let w = Workload::paper(PaperModel::Llama7B, 2048, d);
+        let rep = build_schedule(kind, &hw, &w, 4)?;
+        println!(
+            "  {:14} {:>8.4} it/s  (slowdown vs native {:>5.1}%)",
+            label,
+            1.0 / rep.iter_time,
+            (rep.iter_time / native_t - 1.0) * 100.0
+        );
+    }
+
+    // ---- Fig. 7a: per-iteration breakdown --------------------------------
+    println!("\n== Fig. 7a: per-iteration breakdown (DeepSeek-1.3B / laptop) ==");
+    let hw_l = HardwareProfile::laptop();
+    let w_l = Workload::paper(PaperModel::DeepseekCoder1_3B, 384, 1024);
+    for kind in [ScheduleKind::Zero, ScheduleKind::LspLayerwise] {
+        build_schedule(kind, &hw_l, &w_l, 4)?.print_row();
+    }
+
+    // ---- d-sweep: when does communication bite? ---------------------------
+    println!("\n== subspace-size sweep (llama-7B / workstation) ==");
+    println!("{:>8} {:>12} {:>14} {:>10}", "d", "iter time", "comm/layer", "slowdown");
+    for d in [256, 512, 1024, 2048, 4096] {
+        let w = Workload::paper(PaperModel::Llama7B, 2048, d);
+        let rep = build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 4)?;
+        let c = lsp_offload::sim::cost_model::Costs::derive(&hw, &w);
+        println!(
+            "{:>8} {:>12} {:>14} {:>9.2}x",
+            d,
+            lsp_offload::util::human_secs(rep.iter_time),
+            lsp_offload::util::human_secs(c.offload_layer_sub + c.upload_layer_sub),
+            rep.iter_time / native_t,
+        );
+    }
+
+    // ---- closed forms -----------------------------------------------------
+    println!("\n== Eq.1 vs Eq.4 ==");
+    analyze::print_critical_paths(&hw, &w);
+    Ok(())
+}

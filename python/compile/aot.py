@@ -1,0 +1,259 @@
+"""AOT compiler: lower every L2/L1 entry point to HLO *text* + manifest.json.
+
+Run once at build time (``make artifacts``); Python is never on the request
+path.  The rust coordinator loads ``artifacts/manifest.json`` for shapes and
+``artifacts/<entry>.hlo.txt`` for each executable.
+
+Interchange is HLO text, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (what the ``xla``
+rust crate links) rejects; the text parser re-assigns ids.  Lowering path:
+jitted fn -> stablehlo -> ``mlir_module_to_xla_computation`` (return_tuple=
+True, so rust unwraps a tuple uniformly) -> ``as_hlo_text``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import proj_learn
+from .kernels import formats
+from .kernels.fused_adam import fused_adam
+from .kernels.lsp_decompress import lsp_apply
+from .kernels.lsp_project import lsp_compress
+from .kernels import ref as kref
+
+PRESETS: dict[str, M.ModelConfig] = {
+    # Fast AOT + pytest + rust integration tests.
+    "tiny": M.ModelConfig(vocab=64, d_model=32, n_head=2, d_ff=64,
+                          n_layer=2, seq=16, batch=2, r=2),
+    # Default e2e driver scale (~1M params).
+    "small": M.ModelConfig(vocab=256, d_model=128, n_head=4, d_ff=512,
+                           n_layer=4, seq=64, batch=8, r=4),
+    # Ablation scale (~5M params).
+    "mid": M.ModelConfig(vocab=256, d_model=256, n_head=8, d_ff=1024,
+                         n_layer=6, seq=128, batch=8, r=4),
+    # GPT2-small-like (~100M params with embeddings); CPU-PJRT heavy.
+    "gpt2s": M.ModelConfig(vocab=50304, d_model=768, n_head=12, d_ff=3072,
+                           n_layer=12, seq=256, batch=4, r=8),
+}
+
+_F32 = jnp.float32
+_I32 = jnp.int32
+
+
+def _spec(shape, dtype=_F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """Single-output entries are lowered with return_tuple=False so their
+    PJRT output buffer can feed the next executable directly (no host
+    round-trip); multi-output entries get a tuple root."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _dt_name(dt) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+class Builder:
+    def __init__(self, cfg: M.ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.entries = []
+
+    def add(self, name: str, fn, args: list[tuple[str, jax.ShapeDtypeStruct]]):
+        specs = [s for _, s in args]
+        # keep_unused: the manifest promises the rust side that HLO
+        # parameters == declared args (e.g. block_bwd's b_pr grad does not
+        # depend on b_pr's value, but the arg must survive DCE).
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        outs = jax.eval_shape(fn, *specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        tuple_out = len(outs) > 1
+        text = to_hlo_text(lowered, return_tuple=tuple_out)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "file": fname,
+            "tuple_out": tuple_out,
+            "args": [
+                {"name": n, "dtype": _dt_name(s.dtype), "shape": list(s.shape)}
+                for n, s in args
+            ],
+            "outs": [
+                {"dtype": _dt_name(o.dtype), "shape": list(o.shape)}
+                for o in outs
+            ],
+        })
+        print(f"  lowered {name:24s} ({len(text)} chars)")
+
+
+def build(cfg: M.ModelConfig, out_dir: str, *, monolith: bool,
+          preset: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(cfg, out_dir)
+    B, T, V, D = cfg.batch, cfg.seq, cfg.vocab, cfg.d_model
+    bp = M.block_param_specs(cfg)
+    block_args = [(n, _spec(s)) for n, s in bp]
+
+    # ---- model layer entries -------------------------------------------
+    b.add("embed_fwd", M.embed_fwd, [
+        ("tokens", _spec((B, T), _I32)),
+        ("wte", _spec((V, D))), ("wpe", _spec((T, D))),
+    ])
+    b.add("block_fwd", functools.partial(M.block_fwd, n_head=cfg.n_head),
+          [("h", _spec((B, T, D)))] + block_args)
+    b.add("block_bwd", functools.partial(M.block_bwd, n_head=cfg.n_head),
+          [("h_in", _spec((B, T, D)))] + block_args
+          + [("d_out", _spec((B, T, D)))])
+    head_args = [("h", _spec((B, T, D))), ("lnf_g", _spec((D,))),
+                 ("lnf_b", _spec((D,))), ("wte", _spec((V, D))),
+                 ("targets", _spec((B, T), _I32))]
+    b.add("head_loss_fwd", M.head_loss_fwd, head_args)
+    b.add("head_loss_bwd", M.head_loss_bwd, head_args)
+    b.add("embed_bwd", functools.partial(M.embed_bwd, vocab=V), [
+        ("tokens", _spec((B, T), _I32)), ("d_h", _spec((B, T, D))),
+    ])
+
+    # ---- LSP entries, one set per weight kind --------------------------
+    kinds_meta = {}
+    for kind in M.LSP_KINDS:
+        m, n = cfg.kind_dims(kind)
+        d = cfg.subspace(kind)
+        r = cfg.r
+        lp = formats.gather_len(m, d, r)
+        lq = formats.gather_len(n, d, r)
+        kinds_meta[kind] = {
+            "m": m, "n": n, "d": d, "r": r, "lp": lp, "lq": lq,
+            "param_index": M.LSP_KINDS[kind][0],
+        }
+        row_p = [("p_idx", _spec((m, r), _I32)), ("p_val", _spec((m, r)))]
+        row_q = [("q_idx", _spec((n, r), _I32)), ("q_val", _spec((n, r)))]
+
+        b.add(f"compress_{kind}", lsp_compress, [
+            ("g", _spec((m, n))),
+            ("p_gidx", _spec((d, lp), _I32)), ("p_gval", _spec((d, lp))),
+            ("q_gidx", _spec((d, lq), _I32)), ("q_gval", _spec((d, lq))),
+        ])
+        b.add(f"apply_{kind}", lsp_apply,
+              [("w", _spec((m, n)))] + row_p + row_q
+              + [("ds", _spec((d, d))), ("lr", _spec((1, 1)))])
+        b.add(f"bias_{kind}",
+              functools.partial(kref.bias_ref, d=d),
+              [("g", _spec((m, n)))] + row_p + row_q)
+        b.add(f"learn_{kind}",
+              functools.partial(proj_learn.learn_step, d=d, beta=1e-4),
+              [("g", _spec((m, n)))] + row_p + row_q + [
+                  ("mp", _spec((m, r))), ("vp", _spec((m, r))),
+                  ("mq", _spec((n, r))), ("vq", _spec((n, r))),
+                  ("t", _spec((1, 1))), ("lr", _spec((1, 1))),
+              ])
+        b.add(f"adam_sub_{kind}", fused_adam, [
+            ("g", _spec((d, d))), ("m", _spec((d, d))),
+            ("v", _spec((d, d))), ("t", _spec((1, 1))),
+        ])
+        b.add(f"state_proj_{kind}",
+              functools.partial(proj_learn.project_state, d=d),
+              [("m_s", _spec((d, d))), ("v_s", _spec((d, d)))]
+              + [("p_idx_old", _spec((m, r), _I32)), ("p_val_old", _spec((m, r))),
+                 ("q_idx_old", _spec((n, r), _I32)), ("q_val_old", _spec((n, r))),
+                 ("p_idx_new", _spec((m, r), _I32)), ("p_val_new", _spec((m, r))),
+                 ("q_idx_new", _spec((n, r), _I32)), ("q_val_new", _spec((n, r)))])
+
+    # ---- projector-learning d-sweep (Fig 9 bias study) ------------------
+    # One extra learn entry per sweep point for the "fc" kind so the bias
+    # study can compare *learned* projectors across subspace sizes.
+    fc_m, fc_n = cfg.kind_dims("fc")
+    fc_d = cfg.subspace("fc")
+    for d_sweep in sorted({max(8, fc_d // 4), max(8, fc_d // 2), fc_d,
+                           min(min(fc_m, fc_n), fc_d * 2)}):
+        if d_sweep == fc_d:
+            continue  # already covered by learn_fc
+        b.add(f"learn_sweep_fc_d{d_sweep}",
+              functools.partial(proj_learn.learn_step, d=d_sweep, beta=1e-4),
+              [("g", _spec((fc_m, fc_n)))]
+              + [("p_idx", _spec((fc_m, cfg.r), _I32)), ("p_val", _spec((fc_m, cfg.r)))]
+              + [("q_idx", _spec((fc_n, cfg.r), _I32)), ("q_val", _spec((fc_n, cfg.r)))]
+              + [
+                  ("mp", _spec((fc_m, cfg.r))), ("vp", _spec((fc_m, cfg.r))),
+                  ("mq", _spec((fc_n, cfg.r))), ("vq", _spec((fc_n, cfg.r))),
+                  ("t", _spec((1, 1))), ("lr", _spec((1, 1))),
+              ])
+
+    # ---- dense apply (axpy) for every distinct parameter length --------
+    # Used for non-LSP params always, and for LSP'd matrices by the
+    # Zero-Offload baseline (full-gradient offload).
+    lens = set()
+    lens.add(V * D)
+    lens.add(T * D)
+    lens.add(2 * D)  # lnf_g + lnf_b packed
+    for name, shape in bp:
+        sz = 1
+        for s in shape:
+            sz *= s
+        lens.add(sz)
+    for ln in sorted(lens):
+        b.add(f"axpy_{ln}",
+              lambda w, delta, lr: (w - lr.reshape(()) * delta,),
+              [("w", _spec((ln,))), ("delta", _spec((ln,))),
+               ("lr", _spec((1, 1)))])
+
+    # ---- monolithic train step (native baseline + parity oracle) -------
+    if monolith:
+        flat_params = [("wte", _spec((V, D))), ("wpe", _spec((T, D)))]
+        for i in range(cfg.n_layer):
+            flat_params += [(f"b{i}_{n}", _spec(s)) for n, s in bp]
+        flat_params += [("lnf_g", _spec((D,))), ("lnf_b", _spec((D,)))]
+        b.add("train_step", functools.partial(M.train_step, cfg=cfg),
+              [("tokens", _spec((B, T), _I32)),
+               ("targets", _spec((B, T), _I32))] + flat_params)
+
+    manifest = {
+        "preset": preset,
+        "config": {
+            "vocab": V, "d_model": D, "n_head": cfg.n_head,
+            "d_ff": cfg.d_ff, "n_layer": cfg.n_layer, "seq": T, "batch": B,
+            "r": cfg.r, "d_frac": cfg.d_frac,
+            "n_params": int(M.n_params(cfg)),
+        },
+        "kinds": kinds_meta,
+        "block_params": [{"name": n, "shape": list(s)} for n, s in bp],
+        "axpy_lens": sorted(lens),
+        "entries": b.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(b.entries)} entries to {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--no-monolith", action="store_true",
+                    help="skip the monolithic train_step entry")
+    args = ap.parse_args()
+    cfg = PRESETS[args.preset]
+    print(f"preset={args.preset} n_params={M.n_params(cfg):,}")
+    build(cfg, args.out_dir, monolith=not args.no_monolith,
+          preset=args.preset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""L1 Pallas kernels for LSP-Offload.
+
+Every kernel here runs with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode lowers the kernel to plain HLO
+that any backend (including the rust ``xla`` crate's CPU client) can run.
+Real-TPU performance is estimated analytically in DESIGN.md from the
+BlockSpecs (VMEM footprint, MXU utilization).
+
+Modules:
+  formats        -- (d,r)-sparse projector layouts (row / padded-gather) + RNG
+  ref            -- pure-jnp oracles every kernel is tested against
+  lsp_project    -- compress  S = P^T G Q           (the paper's GPU-side hot spot)
+  lsp_decompress -- apply     W' = W - lr * P dS Q^T
+  fused_adam     -- the CPU-side parameter-update step (Zero-Offload's UPD)
+  tiled_matmul   -- dense MXU-tiled matmul (paper-faithful dense compress path)
+  attention      -- flash-style causal attention fwd with recompute bwd
+"""

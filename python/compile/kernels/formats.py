@@ -1,0 +1,99 @@
+"""(d, r)-sparse projector storage formats.
+
+Definition 1 of the paper: a projector ``P in R^{m x d}`` is (d, r)-sparse if
+every *row* has exactly ``r`` non-zero values.  We store it in two layouts:
+
+ROW layout  (the canonical one, what the optimizer learns):
+    idx : int32[m, r]   -- column index of each non-zero
+    val : f32  [m, r]   -- its value
+
+GATHER layout (padded CSC of P^T, what the compress kernel consumes):
+    gidx : int32[d, L]  -- for subspace row j, the input rows that touch it
+    gval : f32  [d, L]  -- the matching values (0 for padding slots)
+
+``L`` must be static for AOT lowering, so non-zero *positions* are sampled
+with a **balanced** construction: for each of the r "hash functions" we draw
+a random permutation of the m rows and deal columns round-robin.  Every
+subspace column then receives exactly ``ceil(m/d)`` entries per hash, hence
+``L = r * ceil(m/d)`` exactly — no data-dependent padding.  This keeps the
+JL-style unbiasedness of random sparse embeddings (Kane & Nelson 2014) while
+making every shape static.
+
+The rust coordinator re-implements both layouts bit-compatibly
+(``rust/src/sparse/``); only the *shapes* must agree, the RNG need not.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "gather_len",
+    "make_positions",
+    "init_values",
+    "row_to_gather",
+    "densify",
+]
+
+
+def gather_len(m: int, d: int, r: int) -> int:
+    """Static padded length of the gather layout: r * ceil(m / d)."""
+    return r * ((m + d - 1) // d)
+
+
+def make_positions(m: int, d: int, r: int, seed: int = 0) -> np.ndarray:
+    """Balanced random non-zero positions, int32[m, r].
+
+    For hash k: rows are randomly permuted and dealt round-robin over the d
+    subspace columns, so column loads are exactly balanced.
+    """
+    if not (0 < r <= d):
+        raise ValueError(f"need 0 < r <= d, got r={r} d={d}")
+    rng = np.random.default_rng(seed)
+    idx = np.empty((m, r), dtype=np.int32)
+    for k in range(r):
+        perm = rng.permutation(m)
+        idx[perm, k] = (np.arange(m) % d).astype(np.int32)
+    return idx
+
+
+def init_values(m: int, r: int, seed: int = 0) -> np.ndarray:
+    """JL init: values ~ N(0, 1/sqrt(r)), f32[m, r] (paper, Learned sparse
+    projectors paragraph)."""
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((m, r)) / np.sqrt(r)).astype(np.float32)
+
+
+def row_to_gather(
+    idx: np.ndarray, val: np.ndarray, d: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Convert ROW layout -> GATHER layout.
+
+    Returns (gidx int32[d, L], gval f32[d, L]).  Padding slots carry index 0
+    and value 0 so the kernel's weighted gather is a no-op for them.
+    """
+    m, r = idx.shape
+    L = gather_len(m, d, r)
+    gidx = np.zeros((d, L), dtype=np.int32)
+    gval = np.zeros((d, L), dtype=np.float32)
+    fill = np.zeros(d, dtype=np.int64)
+    # Stable row-major walk keeps the layout deterministic given (idx, val).
+    for i in range(m):
+        for k in range(r):
+            j = int(idx[i, k])
+            s = fill[j]
+            if s >= L:  # only possible if positions are not balanced
+                raise ValueError("column load exceeds static gather length")
+            gidx[j, s] = i
+            gval[j, s] = val[i, k]
+            fill[j] = s + 1
+    return gidx, gval
+
+
+def densify(idx: np.ndarray, val: np.ndarray, d: int) -> np.ndarray:
+    """ROW layout -> dense f32[m, d] (duplicate positions accumulate)."""
+    m, r = idx.shape
+    out = np.zeros((m, d), dtype=np.float32)
+    rows = np.repeat(np.arange(m), r)
+    np.add.at(out, (rows, idx.reshape(-1)), val.reshape(-1).astype(np.float32))
+    return out

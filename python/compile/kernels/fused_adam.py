@@ -1,0 +1,68 @@
+"""Pallas fused-Adam kernel — the CPU-side UPD step of the offload schedule.
+
+Zero-Offload's CPU update is a fused SIMD Adam loop (paper, Implementation);
+LSP-Offload runs the same update but over the d x d subspace gradient.  This
+kernel fuses moment update, bias correction, and step computation into one
+pass so each of g/m/v is read once and delta/m'/v' written once — on TPU one
+HBM->VMEM->HBM stream per array tiled over VPU lanes; on the CPU PJRT client
+XLA fuses the lowered elementwise graph into a single loop, which is also
+what the rust-native fused Adam (rust/src/optim) implements.
+
+``delta`` is unscaled (m_hat / (sqrt(v_hat)+eps)); the learning rate is
+applied at decompress time on the GPU side (Alg. 1 line 17).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_adam"]
+
+
+def _adam_kernel(g_ref, m_ref, v_ref, t_ref, delta_ref, m_out_ref, v_out_ref,
+                 *, beta1: float, beta2: float, eps: float):
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    t = t_ref[0, 0]
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * (g * g)
+    mhat = m2 / (1.0 - jnp.power(beta1, t))
+    vhat = v2 / (1.0 - jnp.power(beta2, t))
+    delta_ref[...] = mhat / (jnp.sqrt(vhat) + eps)
+    m_out_ref[...] = m2
+    v_out_ref[...] = v2
+
+
+def fused_adam(g, m, v, t, *, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One fused Adam step over a 2-D tensor.
+
+    Args:
+      g, m, v: f32[a, b] gradient and first/second moments.
+      t:       f32[1, 1] 1-based step count (for bias correction).
+    Returns:
+      (delta, m', v') each f32[a, b].
+    """
+    a, b = g.shape
+    ba = _row_tile(a)
+    shp = jax.ShapeDtypeStruct((a, b), jnp.float32)
+    blk = lambda: pl.BlockSpec((ba, b), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps),
+        grid=(a // ba,),
+        in_specs=[blk(), blk(), blk(), pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[blk(), blk(), blk()],
+        out_shape=[shp, shp, shp],
+        interpret=True,
+    )(g, m, v, t)
+
+
+def _row_tile(n: int, target: int = 256) -> int:
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t

@@ -1,0 +1,103 @@
+"""Pallas compress kernel: S = P^T G Q with (d, r)-sparse P, Q.
+
+The paper ships *dense* multiplies over sparsely-stored projectors and lists
+"specialized sparse-matrix multiplication kernels" as future work (Limitation
+section).  This kernel is that future work: the scatter `P^T G` is rewritten
+as a *gather* over the padded-CSC layout (see formats.py), which on a real
+TPU becomes, per (d-tile, n-tile), a small one-hot x G-tile matmul on the MXU
+with G tiles double-buffered through VMEM.  Under interpret mode the gather
+runs as plain numpy, which is what the CPU PJRT client executes.
+
+Two stages, each its own pallas_call with a real grid:
+
+  stage 1:  A = P^T G        grid over d-tiles of A's rows
+  stage 2:  S = A Q          grid over d-tiles of S's columns
+
+VMEM budget per grid step (stage 1): bd*L (idx+val) + m*n (G tile; on TPU the
+n axis would be a second grid dim) + bd*n (out).  DESIGN.md carries the
+footprint/MXU analysis for the paper's shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lsp_compress", "pt_g_kernel", "a_q_kernel"]
+
+
+def _tile(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is <= target (grid tiles must divide)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def pt_g_kernel(gidx_ref, gval_ref, g_ref, out_ref, *, L: int):
+    """A[j, :] = sum_l gval[j, l] * G[gidx[j, l], :] for a tile of j."""
+    g = g_ref[...]  # [m, n]
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
+    for l in range(L):  # L is small & static: r * ceil(m/d)
+        rows = gidx_ref[:, l]  # [bd]
+        acc = acc + gval_ref[:, l][:, None] * jnp.take(g, rows, axis=0)
+    out_ref[...] = acc
+
+
+def a_q_kernel(gidx_ref, gval_ref, a_ref, out_ref, *, L: int):
+    """S[:, c] = sum_l gval[c, l] * A[:, gidx[c, l]] for a tile of c."""
+    a = a_ref[...]  # [d, n]
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
+    for l in range(L):
+        cols = gidx_ref[:, l]  # [bc]
+        acc = acc + gval_ref[:, l][None, :] * jnp.take(a, cols, axis=1)
+    out_ref[...] = acc
+
+
+def lsp_compress(g, p_gidx, p_gval, q_gidx, q_gval):
+    """S = P^T G Q.
+
+    Args:
+      g:      f32[m, n] gradient.
+      p_gidx: int32[d, Lp] gather layout of P   (row->subspace, see formats).
+      p_gval: f32  [d, Lp]
+      q_gidx: int32[d, Lq] gather layout of Q.
+      q_gval: f32  [d, Lq]
+    Returns:
+      f32[d, d] compressed gradient.
+    """
+    m, n = g.shape
+    d, lp = p_gidx.shape
+    _, lq = q_gidx.shape
+
+    bd = _tile(d)
+    a = pl.pallas_call(
+        functools.partial(pt_g_kernel, L=lp),
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((bd, lp), lambda i: (i, 0)),
+            pl.BlockSpec((bd, lp), lambda i: (i, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        interpret=True,
+    )(p_gidx, p_gval, g)
+
+    bc = _tile(d)
+    s = pl.pallas_call(
+        functools.partial(a_q_kernel, L=lq),
+        grid=(d // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, lq), lambda i: (i, 0)),
+            pl.BlockSpec((bc, lq), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, bc), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(q_gidx, q_gval, a)
+    return s

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the single source of truth for correctness: pytest asserts each
+Pallas kernel (interpret mode) against the functions below, and the rust
+integration tests check the loaded HLO artifacts against values produced by
+the same math re-implemented in rust/src/sparse + rust/src/optim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "densify",
+    "lsp_compress_ref",
+    "lsp_apply_ref",
+    "bias_ref",
+    "adam_ref",
+    "matmul_ref",
+    "attention_ref",
+]
+
+
+def densify(idx: jax.Array, val: jax.Array, d: int) -> jax.Array:
+    """ROW-layout (idx int32[m,r], val f32[m,r]) -> dense f32[m,d].
+
+    Built from one-hots so it is differentiable w.r.t. ``val`` — the
+    projector-learning step (Eq. 3) takes gradients through this.
+    """
+    one_hot = jax.nn.one_hot(idx, d, dtype=val.dtype)  # [m, r, d]
+    return jnp.einsum("mr,mrd->md", val, one_hot)
+
+
+def lsp_compress_ref(g, p_idx, p_val, q_idx, q_val, d: int):
+    """S = P^T G Q  (Alg. 1 line 15), f32[d, d]."""
+    p = densify(p_idx, p_val, d)  # [m, d]
+    q = densify(q_idx, q_val, d)  # [n, d]
+    return p.T @ g @ q
+
+
+def lsp_apply_ref(w, p_idx, p_val, q_idx, q_val, ds, lr):
+    """W' = W - lr * P dS Q^T  (Alg. 1 line 17)."""
+    d = ds.shape[0]
+    p = densify(p_idx, p_val, d)
+    q = densify(q_idx, q_val, d)
+    return w - lr * (p @ ds @ q.T)
+
+
+def bias_ref(g, p_idx, p_val, q_idx, q_val, d: int):
+    """Relative estimation bias ||P P^T G Q Q^T - G||_F / ||G||_F (Def. 2).
+
+    Returns (rel_bias, abs_bias, g_norm) each shaped (1, 1) so the rust side
+    never has to deal with rank-0 literals.
+    """
+    p = densify(p_idx, p_val, d)
+    q = densify(q_idx, q_val, d)
+    est = p @ (p.T @ g @ q) @ q.T
+    abs_bias = jnp.linalg.norm(est - g)
+    g_norm = jnp.linalg.norm(g)
+    rel = abs_bias / jnp.maximum(g_norm, 1e-30)
+    one = lambda x: x.reshape(1, 1)
+    return one(rel), one(abs_bias), one(g_norm)
+
+
+def adam_ref(g, m, v, t, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One Adam moment update; returns (delta, m', v').
+
+    ``delta`` is the *unscaled* step m_hat / (sqrt(v_hat) + eps); the learning
+    rate is applied GPU-side at decompress time (Alg. 1 line 17), matching
+    Zero-Offload's split where the CPU computes delta and the GPU applies it.
+    ``t`` is the 1-based step count, f32[1,1].
+    """
+    t = t.reshape(())
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * (g * g)
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    delta = mhat / (jnp.sqrt(vhat) + eps)
+    return delta, m2, v2
+
+
+def matmul_ref(a, b):
+    return a @ b
+
+
+def attention_ref(q, k, v):
+    """Causal multi-head attention. q,k,v: f32[B, H, T, Dh]."""
+    t = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    att = jnp.where(mask, att, jnp.finfo(att.dtype).min)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", att, v)

@@ -1,0 +1,60 @@
+"""Classic MXU-tiled dense matmul Pallas kernel.
+
+This is the paper-faithful *dense* compress path: LSP-Offload as published
+densifies the sparse projectors on the GPU and runs dense GEMMs (the sparse
+kernel is its stated future work, implemented here in lsp_project.py).  The
+tiled kernel also documents the TPU mapping we assume in the perf model:
+(bm, bn) output tiles accumulated over bk-sized K panels, A/B panels
+double-buffered through VMEM, bf16 inputs -> f32 accumulation on the MXU.
+
+The K axis is the innermost grid dimension and the output BlockSpec does not
+depend on it, so the same output tile is revisited across K steps and used
+as the accumulator (the standard Pallas matmul pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tiled_matmul"]
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _tile(n: int, target: int) -> int:
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def tiled_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = A @ B over a (M/bm, N/bn, K/bk) grid. a: f32[M,K], b: f32[K,N]."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

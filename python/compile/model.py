@@ -1,0 +1,225 @@
+"""L2: GPT-style decoder model, exposed as per-layer AOT entry points.
+
+The rust coordinator schedules fwd/bwd *layer by layer* (the paper's Alg. 3),
+so instead of one monolithic train step we lower one executable per layer
+*type* and reuse it across layers by passing that layer's weights as runtime
+arguments:
+
+  embed_fwd      tokens, wte, wpe                  -> h0
+  block_fwd      h, <12 block params>              -> h_out
+  block_bwd      h_in, <12 block params>, d_out    -> d_in, <12 grads>
+                 (recomputes the forward inside jax.vjp = the paper's
+                  gradient-checkpointing configuration)
+  head_loss_fwd  h, lnf_g, lnf_b, wte, targets     -> loss            (eval)
+  head_loss_bwd  h, lnf_g, lnf_b, wte, targets     -> loss, d_h, d_lnf_g,
+                                                      d_lnf_b, d_wte
+  embed_bwd      tokens, d_h0                      -> d_wte, d_wpe
+  train_step     tokens, targets, <all params>     -> loss, <all grads>
+                 (monolithic; the no-offload "native" baseline + parity tests)
+
+Canonical per-block parameter order (index -> name), shared with the rust
+side through manifest.json:
+
+  0 ln1_g[D]  1 ln1_b[D]  2 w_qkv[D,3D]  3 b_qkv[3D]  4 w_o[D,D]  5 b_o[D]
+  6 ln2_g[D]  7 ln2_b[D]  8 w_fc[D,F]    9 b_fc[F]   10 w_pr[F,D] 11 b_pr[D]
+
+LSP projectors attach to the four matrices (2, 4, 8, 10), kinds
+"qkv" / "attn_o" / "fc" / "proj".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.attention import flash_attention
+
+__all__ = [
+    "ModelConfig",
+    "BLOCK_PARAM_NAMES",
+    "LSP_KINDS",
+    "block_param_specs",
+    "embed_fwd",
+    "block_fwd",
+    "block_bwd",
+    "head_loss_fwd",
+    "head_loss_bwd",
+    "embed_bwd",
+    "train_step",
+    "n_params",
+]
+
+BLOCK_PARAM_NAMES = (
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_o", "b_o",
+    "ln2_g", "ln2_b", "w_fc", "b_fc", "w_pr", "b_pr",
+)
+
+# name -> (block param index, (m, n) as a function of (D, F))
+LSP_KINDS = {
+    "qkv": (2, lambda d, f: (d, 3 * d)),
+    "attn_o": (4, lambda d, f: (d, d)),
+    "fc": (8, lambda d, f: (d, f)),
+    "proj": (10, lambda d, f: (f, d)),
+}
+
+_LN_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model + training-shape configuration baked into the artifacts."""
+
+    vocab: int
+    d_model: int
+    n_head: int
+    d_ff: int
+    n_layer: int
+    seq: int
+    batch: int
+    # LSP hyperparameters (paper: d = n/2, small r such as 4 or 8)
+    r: int = 4
+    d_frac: float = 0.5
+
+    def __post_init__(self):
+        assert self.d_model % self.n_head == 0
+
+    def subspace(self, kind: str) -> int:
+        """d for a weight kind: d_frac * min(m, n), rounded to a multiple of 8."""
+        _, dims = LSP_KINDS[kind]
+        m, n = dims(self.d_model, self.d_ff)
+        d = max(8, int(min(m, n) * self.d_frac))
+        return d - d % 8
+
+    def kind_dims(self, kind: str) -> tuple[int, int]:
+        _, dims = LSP_KINDS[kind]
+        return dims(self.d_model, self.d_ff)
+
+
+def block_param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        ("ln1_g", (d,)), ("ln1_b", (d,)),
+        ("w_qkv", (d, 3 * d)), ("b_qkv", (3 * d,)),
+        ("w_o", (d, d)), ("b_o", (d,)),
+        ("ln2_g", (d,)), ("ln2_b", (d,)),
+        ("w_fc", (d, f)), ("b_fc", (f,)),
+        ("w_pr", (f, d)), ("b_pr", (d,)),
+    ]
+
+
+def n_params(cfg: ModelConfig) -> int:
+    per_block = sum(
+        int(jnp.prod(jnp.array(s))) for _, s in block_param_specs(cfg)
+    )
+    return (
+        cfg.vocab * cfg.d_model
+        + cfg.seq * cfg.d_model
+        + cfg.n_layer * per_block
+        + 2 * cfg.d_model
+    )
+
+
+def _layer_norm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + _LN_EPS) * g + b
+
+
+def _attention(q, k, v):
+    if os.environ.get("LSP_ATTN", "ref") == "pallas":
+        return flash_attention(q, k, v)
+    return kref.attention_ref(q, k, v)
+
+
+def _block_fn(h, params: Sequence[jax.Array], n_head: int):
+    (ln1_g, ln1_b, w_qkv, b_qkv, w_o, b_o,
+     ln2_g, ln2_b, w_fc, b_fc, w_pr, b_pr) = params
+    bsz, t, d = h.shape
+    dh = d // n_head
+
+    a = _layer_norm(h, ln1_g, ln1_b)
+    qkv = a @ w_qkv + b_qkv  # [B, T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    split = lambda x: x.reshape(bsz, t, n_head, dh).transpose(0, 2, 1, 3)
+    att = _attention(split(q), split(k), split(v))  # [B, H, T, dh]
+    att = att.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    h = h + att @ w_o + b_o
+
+    mlp_in = _layer_norm(h, ln2_g, ln2_b)
+    h = h + jax.nn.gelu(mlp_in @ w_fc + b_fc) @ w_pr + b_pr
+    return h
+
+
+def _head_loss_fn(h, lnf_g, lnf_b, wte, targets):
+    hn = _layer_norm(h, lnf_g, lnf_b)
+    logits = hn @ wte.T  # tied embedding head, [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean().reshape(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (every one returns a tuple; aot.py lowers them as-is).
+# ---------------------------------------------------------------------------
+
+def embed_fwd(tokens, wte, wpe):
+    return (jnp.take(wte, tokens, axis=0) + wpe[None, :, :],)
+
+
+def block_fwd(h, *params, n_head: int):
+    return (_block_fn(h, params, n_head),)
+
+
+def block_bwd(h_in, *params_and_dout, n_head: int):
+    *params, d_out = params_and_dout
+    fn = lambda h, ps: _block_fn(h, ps, n_head)
+    _, vjp = jax.vjp(fn, h_in, tuple(params))
+    d_in, d_params = vjp(d_out)
+    return (d_in, *d_params)
+
+
+def head_loss_fwd(h, lnf_g, lnf_b, wte, targets):
+    return (_head_loss_fn(h, lnf_g, lnf_b, wte, targets),)
+
+
+def head_loss_bwd(h, lnf_g, lnf_b, wte, targets):
+    loss, grads = jax.value_and_grad(
+        lambda *a: _head_loss_fn(*a, targets).reshape(()), argnums=(0, 1, 2, 3)
+    )(h, lnf_g, lnf_b, wte)
+    return (loss.reshape(1, 1), *grads)
+
+
+def embed_bwd(tokens, d_h, *, vocab: int):
+    d_model = d_h.shape[-1]
+    d_wte = jnp.zeros((vocab, d_model), d_h.dtype).at[tokens].add(d_h)
+    d_wpe = d_h.sum(axis=0)
+    return (d_wte, d_wpe)
+
+
+def train_step(tokens, targets, wte, wpe, *rest, cfg: ModelConfig):
+    """Monolithic fwd+bwd: the native (no-offload) baseline + parity oracle.
+
+    ``rest`` = n_layer * 12 block params followed by lnf_g, lnf_b.
+    Returns (loss, d_wte, d_wpe, <block grads in order>, d_lnf_g, d_lnf_b).
+    """
+    npb = len(BLOCK_PARAM_NAMES)
+    blocks = [rest[i * npb:(i + 1) * npb] for i in range(cfg.n_layer)]
+    lnf_g, lnf_b = rest[cfg.n_layer * npb:]
+
+    def loss_fn(wte, wpe, blocks, lnf_g, lnf_b):
+        h = embed_fwd(tokens, wte, wpe)[0]
+        for bp in blocks:
+            h = _block_fn(h, bp, cfg.n_head)
+        return _head_loss_fn(h, lnf_g, lnf_b, wte, targets).reshape(())
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3, 4))(
+        wte, wpe, [tuple(b) for b in blocks], lnf_g, lnf_b
+    )
+    d_wte, d_wpe, d_blocks, d_lnf_g, d_lnf_b = grads
+    flat = [g for blk in d_blocks for g in blk]
+    return (loss.reshape(1, 1), d_wte, d_wpe, *flat, d_lnf_g, d_lnf_b)

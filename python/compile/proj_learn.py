@@ -1,0 +1,89 @@
+"""Projector learning: fit the non-zero *values* of the (d, r)-sparse
+projectors to a calibration gradient (paper Eq. 3).
+
+    min_{P,Q}  ||P P^T G Q Q^T - G||_F  +  beta * (||P||_F + ||Q||_F)
+
+Non-zero *positions* are fixed (sampled by the balanced construction in
+formats.py / rust sparse::); only the values are trained, with Adam.  One
+``learn_step`` call is one Adam step; the rust projector manager (Alg. 1
+MAYBEUPDATE) iterates it until the relative bias drops below alpha or a
+step budget ("Timeout") is exhausted, then projects the optimizer state onto
+the new subspace (Alg. 1 lines 8-9).
+
+All state (values + Adam moments) is threaded through arguments so the
+artifact stays pure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+
+__all__ = ["learn_step", "project_state", "eq3_loss"]
+
+_BETA1, _BETA2, _EPS = 0.9, 0.999, 1e-8
+
+
+def eq3_loss(g, p_idx, p_val, q_idx, q_val, d: int, beta: float):
+    p = kref.densify(p_idx, p_val, d)
+    q = kref.densify(q_idx, q_val, d)
+    est = p @ (p.T @ g @ q) @ q.T
+    bias = jnp.linalg.norm(est - g)
+    reg = jnp.linalg.norm(p) + jnp.linalg.norm(q)
+    return bias + beta * reg, bias
+
+
+def learn_step(g, p_idx, p_val, q_idx, q_val,
+               mp, vp, mq, vq, t, lr, *, d: int, beta: float):
+    """One Adam step on (p_val, q_val) against Eq. 3.
+
+    Args:
+      g:            f32[m, n] calibration gradient.
+      p_idx/q_idx:  int32[m, r] / int32[n, r] fixed positions.
+      p_val/q_val:  f32 values being learned.
+      mp/vp/mq/vq:  Adam moments, same shapes as the values.
+      t:            f32[1, 1] 1-based step.
+      lr:           f32[1, 1] learning rate.
+    Returns:
+      (p_val', q_val', mp', vp', mq', vq', rel_bias[1,1])
+    """
+
+    def loss_fn(pv, qv):
+        loss, bias = eq3_loss(g, p_idx, pv, q_idx, qv, d, beta)
+        return loss, bias
+
+    (_, bias), (gp, gq) = jax.value_and_grad(loss_fn, argnums=(0, 1),
+                                             has_aux=True)(p_val, q_val)
+
+    def adam(val, grad, m, v):
+        ts = t.reshape(())
+        m2 = _BETA1 * m + (1 - _BETA1) * grad
+        v2 = _BETA2 * v + (1 - _BETA2) * grad * grad
+        mhat = m2 / (1 - _BETA1 ** ts)
+        vhat = v2 / (1 - _BETA2 ** ts)
+        return val - lr.reshape(()) * mhat / (jnp.sqrt(vhat) + _EPS), m2, v2
+
+    p2, mp2, vp2 = adam(p_val, gp, mp, vp)
+    q2, mq2, vq2 = adam(q_val, gq, mq, vq)
+    g_norm = jnp.maximum(jnp.linalg.norm(g), 1e-30)
+    return (p2, q2, mp2, vp2, mq2, vq2, (bias / g_norm).reshape(1, 1))
+
+
+def project_state(m_s, v_s, p_idx_old, p_val_old, q_idx_old, q_val_old,
+                  p_idx_new, p_val_new, q_idx_new, q_val_new, *, d: int):
+    """Project subspace Adam state onto a new subspace (Alg. 1 lines 8-9).
+
+      M' = (P_new^T P_old) M (Q_old^T Q_new)
+      V' = (P_new^T P_old)^2 V (Q_old^T Q_new)^2   (elementwise squares)
+    """
+    po = kref.densify(p_idx_old, p_val_old, d)
+    qo = kref.densify(q_idx_old, q_val_old, d)
+    pn = kref.densify(p_idx_new, p_val_new, d)
+    qn = kref.densify(q_idx_new, q_val_new, d)
+    tp = pn.T @ po  # [d, d]
+    tq = qo.T @ qn  # [d, d]
+    m2 = tp @ m_s @ tq
+    v2 = (tp * tp) @ v_s @ (tq * tq)
+    return (m2, v2)

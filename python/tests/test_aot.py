@@ -1,0 +1,94 @@
+"""AOT pipeline tests: lowering produces parseable HLO text with the
+shapes the manifest promises, for the tiny preset."""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model as M
+
+pytestmark = pytest.mark.filterwarnings("ignore")
+
+
+@pytest.fixture(scope="module")
+def tiny_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("art_tiny")
+    aot.build(aot.PRESETS["tiny"], str(out), monolith=True, preset="tiny")
+    return out
+
+
+def test_manifest_schema(tiny_dir):
+    man = json.loads((tiny_dir / "manifest.json").read_text())
+    assert man["preset"] == "tiny"
+    cfg = man["config"]
+    assert cfg["d_model"] == 32 and cfg["n_layer"] == 2
+    assert cfg["n_params"] == M.n_params(aot.PRESETS["tiny"])
+    assert set(man["kinds"]) == {"qkv", "attn_o", "fc", "proj"}
+    names = {e["name"] for e in man["entries"]}
+    for required in ["embed_fwd", "block_fwd", "block_bwd", "head_loss_fwd",
+                     "head_loss_bwd", "embed_bwd", "train_step",
+                     "compress_qkv", "apply_fc", "bias_proj", "learn_attn_o",
+                     "adam_sub_qkv", "state_proj_fc"]:
+        assert required in names, required
+    # Every entry's file exists and is non-trivial HLO text.
+    for e in man["entries"]:
+        text = (tiny_dir / e["file"]).read_text()
+        assert "ENTRY" in text and "parameter(0)" in text, e["name"]
+
+
+def test_hlo_parameter_counts_match_manifest(tiny_dir):
+    man = json.loads((tiny_dir / "manifest.json").read_text())
+    for e in man["entries"]:
+        text = (tiny_dir / e["file"]).read_text()
+        entry_body = text[text.index("ENTRY"):]
+        params = set(re.findall(r"parameter\((\d+)\)", entry_body))
+        assert len(params) == len(e["args"]), \
+            f"{e['name']}: HLO has {len(params)} params, manifest {len(e['args'])}"
+
+
+def test_tuple_out_flags(tiny_dir):
+    man = json.loads((tiny_dir / "manifest.json").read_text())
+    by_name = {e["name"]: e for e in man["entries"]}
+    assert not by_name["block_fwd"]["tuple_out"]
+    assert not by_name["compress_qkv"]["tuple_out"]
+    assert by_name["block_bwd"]["tuple_out"]
+    assert by_name["train_step"]["tuple_out"]
+    # Single-output entries have exactly one out; block_bwd has 1 + 12.
+    assert len(by_name["block_fwd"]["outs"]) == 1
+    assert len(by_name["block_bwd"]["outs"]) == 13
+
+
+def test_gather_lens_are_static(tiny_dir):
+    man = json.loads((tiny_dir / "manifest.json").read_text())
+    for kind, km in man["kinds"].items():
+        import math
+        assert km["lp"] == km["r"] * math.ceil(km["m"] / km["d"]), kind
+        assert km["lq"] == km["r"] * math.ceil(km["n"] / km["d"]), kind
+
+
+def test_cli_help_and_presets():
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--help"],
+        capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0
+    for preset in aot.PRESETS:
+        assert preset in out.stdout
+
+
+def test_axpy_lens_cover_all_params(tiny_dir):
+    man = json.loads((tiny_dir / "manifest.json").read_text())
+    lens = set(man["axpy_lens"])
+    cfg = man["config"]
+    assert cfg["vocab"] * cfg["d_model"] in lens  # wte
+    assert cfg["seq"] * cfg["d_model"] in lens    # wpe
+    for bp in man["block_params"]:
+        size = 1
+        for s in bp["shape"]:
+            size *= s
+        assert size in lens, bp["name"]

@@ -1,0 +1,215 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeping shapes and magnitudes (the session's core
+correctness signal for the compile path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import formats, ref
+from compile.kernels.attention import flash_attention
+from compile.kernels.fused_adam import fused_adam
+from compile.kernels.lsp_decompress import lsp_apply
+from compile.kernels.lsp_project import lsp_compress
+from compile.kernels.tiled_matmul import tiled_matmul
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def make_pair(m, n, d, r, seed):
+    p_idx = formats.make_positions(m, d, r, seed)
+    p_val = formats.init_values(m, r, seed + 1)
+    q_idx = formats.make_positions(n, d, r, seed + 2)
+    q_val = formats.init_values(n, r, seed + 3)
+    return p_idx, p_val, q_idx, q_val
+
+
+@given(
+    m=st.integers(8, 96),
+    n=st.integers(8, 96),
+    d_pow=st.integers(2, 5),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_compress_matches_ref(m, n, d_pow, r, seed):
+    d = 2**d_pow
+    r = min(r, d)
+    p_idx, p_val, q_idx, q_val = make_pair(m, n, d, r, seed)
+    g = np.random.default_rng(seed).standard_normal((m, n)).astype(np.float32)
+
+    want = ref.lsp_compress_ref(
+        jnp.asarray(g), jnp.asarray(p_idx), jnp.asarray(p_val),
+        jnp.asarray(q_idx), jnp.asarray(q_val), d)
+    pg = formats.row_to_gather(p_idx, p_val, d)
+    qg = formats.row_to_gather(q_idx, q_val, d)
+    got = lsp_compress(jnp.asarray(g), jnp.asarray(pg[0]), jnp.asarray(pg[1]),
+                       jnp.asarray(qg[0]), jnp.asarray(qg[1]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(8, 80),
+    n=st.integers(8, 80),
+    d_pow=st.integers(2, 5),
+    r=st.integers(1, 4),
+    lr=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_apply_matches_ref(m, n, d_pow, r, lr, seed):
+    d = 2**d_pow
+    r = min(r, d)
+    p_idx, p_val, q_idx, q_val = make_pair(m, n, d, r, seed)
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((m, n)).astype(np.float32)
+    ds = rng.standard_normal((d, d)).astype(np.float32)
+
+    want = ref.lsp_apply_ref(jnp.asarray(w), jnp.asarray(p_idx),
+                             jnp.asarray(p_val), jnp.asarray(q_idx),
+                             jnp.asarray(q_val), jnp.asarray(ds), lr)
+    got = lsp_apply(jnp.asarray(w), jnp.asarray(p_idx), jnp.asarray(p_val),
+                    jnp.asarray(q_idx), jnp.asarray(q_val), jnp.asarray(ds),
+                    jnp.full((1, 1), lr, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(
+    a=st.integers(1, 128),
+    b=st.integers(1, 64),
+    t=st.integers(1, 5),
+    scale=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_fused_adam_matches_ref(a, b, t, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = (rng.standard_normal((a, b)) * scale).astype(np.float32)
+    m = (rng.standard_normal((a, b)) * scale * 0.1).astype(np.float32)
+    v = np.abs(rng.standard_normal((a, b)) * scale * 0.01).astype(np.float32)
+    ts = jnp.full((1, 1), float(t), jnp.float32)
+    want = ref.adam_ref(jnp.asarray(g), jnp.asarray(m), jnp.asarray(v), ts)
+    got = fused_adam(jnp.asarray(g), jnp.asarray(m), jnp.asarray(v), ts)
+    for w, o in zip(want, got):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.integers(1, 100),
+    k=st.integers(1, 100),
+    n=st.integers(1, 100),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_tiled_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = tiled_matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-3, atol=1e-3)
+
+
+@given(
+    bsz=st.integers(1, 3),
+    h=st.integers(1, 3),
+    t_pow=st.integers(2, 6),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_matches_ref(bsz, h, t_pow, dh, seed):
+    t = 2**t_pow
+    rng = np.random.default_rng(seed)
+    q = (rng.standard_normal((bsz, h, t, dh)) * 0.5).astype(np.float32)
+    k = (rng.standard_normal((bsz, h, t, dh)) * 0.5).astype(np.float32)
+    v = rng.standard_normal((bsz, h, t, dh)).astype(np.float32)
+    want = ref.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_grad_matches_ref():
+    rng = np.random.default_rng(0)
+    q = (rng.standard_normal((2, 2, 32, 16)) * 0.5).astype(np.float32)
+    k = (rng.standard_normal((2, 2, 32, 16)) * 0.5).astype(np.float32)
+    v = rng.standard_normal((2, 2, 32, 16)).astype(np.float32)
+    f = lambda *a: (flash_attention(*a) ** 2).sum()
+    fr = lambda *a: (ref.attention_ref(*a) ** 2).sum()
+    g1 = jax.grad(f, argnums=(0, 1, 2))(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    g2 = jax.grad(fr, argnums=(0, 1, 2))(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_causality():
+    """Future tokens must not influence earlier outputs."""
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal((1, 1, 16, 8)).astype(np.float32)
+    k = rng.standard_normal((1, 1, 16, 8)).astype(np.float32)
+    v = rng.standard_normal((1, 1, 16, 8)).astype(np.float32)
+    out1 = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
+    k2, v2 = k.copy(), v.copy()
+    k2[0, 0, -1] += 100.0
+    v2[0, 0, -1] -= 50.0
+    out2 = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2)))
+    np.testing.assert_allclose(out1[0, 0, :-1], out2[0, 0, :-1], atol=1e-5)
+    assert np.abs(out1[0, 0, -1] - out2[0, 0, -1]).max() > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Format invariants
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(4, 200),
+    d_pow=st.integers(2, 6),
+    r=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_balanced_positions_and_gather_roundtrip(m, d_pow, r, seed):
+    d = 2**d_pow
+    r = min(r, d)
+    idx = formats.make_positions(m, d, r, seed)
+    assert idx.shape == (m, r)
+    assert idx.min() >= 0 and idx.max() < d
+    # Exact balance: every column holds exactly L = r * ceil(m/d) entries.
+    loads = np.bincount(idx.reshape(-1), minlength=d)
+    assert loads.max() <= formats.gather_len(m, d, r)
+    # Gather layout reconstructs the same dense matrix.
+    val = formats.init_values(m, r, seed + 9)
+    dense = formats.densify(idx, val, d)
+    gidx, gval = formats.row_to_gather(idx, val, d)
+    dense2 = np.zeros((m, d), np.float32)
+    for j in range(d):
+        for s in range(gidx.shape[1]):
+            if gval[j, s] != 0.0:
+                dense2[gidx[j, s], j] += gval[j, s]
+    np.testing.assert_allclose(dense2, dense, atol=1e-6)
+
+
+def test_jl_unbiasedness():
+    """E[P P^T] ~ I scaling: random sparse projection preserves norms on
+    average (the JL property motivating the init)."""
+    m, d, r = 64, 256, 4
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(m).astype(np.float32)
+    ratios = []
+    for s in range(64):
+        idx = formats.make_positions(m, d, r, s)
+        val = formats.init_values(m, r, 1000 + s)
+        p = formats.densify(idx, val, d)
+        ratios.append(float(np.linalg.norm(p.T @ x) / np.linalg.norm(x)))
+    mean = np.mean(ratios)
+    assert 0.85 < mean < 1.15, f"JL norm preservation broken: {mean}"
+
+
+def test_compress_rejects_bad_r():
+    with pytest.raises(ValueError):
+        formats.make_positions(8, 4, 5)

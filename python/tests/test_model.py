@@ -1,0 +1,161 @@
+"""L2 model correctness: per-layer entries compose to the monolithic
+train_step, gradients match autodiff, and shapes/param counts line up."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_head=2, d_ff=64,
+                    n_layer=2, seq=16, batch=2, r=2)
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"wte": rng.standard_normal((cfg.vocab, cfg.d_model)) * 0.05,
+              "wpe": rng.standard_normal((cfg.seq, cfg.d_model)) * 0.05}
+    blocks = []
+    for _ in range(cfg.n_layer):
+        blk = []
+        for name, shape in M.block_param_specs(cfg):
+            if name.endswith("_g"):
+                blk.append(np.ones(shape))
+            elif name.startswith("b_") or name.endswith("_b"):
+                blk.append(np.zeros(shape))
+            else:
+                blk.append(rng.standard_normal(shape) * 0.05)
+        blocks.append([jnp.asarray(a, jnp.float32) for a in blk])
+    params = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+    lnf_g = jnp.ones((cfg.d_model,), jnp.float32)
+    lnf_b = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params, blocks, lnf_g, lnf_b
+
+
+def batch(cfg, seed=1):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32)
+    tgts = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32)
+    return jnp.asarray(toks), jnp.asarray(tgts)
+
+
+def test_param_count_formula():
+    n = M.n_params(CFG)
+    per_block = 32 * 2 + (32 * 96 + 96) + (32 * 32 + 32) + 32 * 2 \
+        + (32 * 64 + 64) + (64 * 32 + 32)
+    assert n == 64 * 32 + 16 * 32 + 2 * per_block + 2 * 32
+
+
+def test_block_fwd_shapes_and_residual():
+    params, blocks, _, _ = init_params(CFG)
+    h = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (CFG.batch, CFG.seq, CFG.d_model)).astype(np.float32))
+    out = M.block_fwd(h, *blocks[0], n_head=CFG.n_head)[0]
+    assert out.shape == h.shape
+    # With zero weights the block is an identity (residual path only).
+    zero_blk = [jnp.zeros_like(p) if p.ndim == 2 else p for p in blocks[0]]
+    out0 = M.block_fwd(h, *zero_blk, n_head=CFG.n_head)[0]
+    # attention with zero qkv -> av=0, mlp zero -> identity
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(h), atol=1e-5)
+
+
+def test_per_layer_composition_matches_train_step():
+    params, blocks, lnf_g, lnf_b = init_params(CFG)
+    toks, tgts = batch(CFG)
+
+    h = M.embed_fwd(toks, params["wte"], params["wpe"])[0]
+    h_ins = []
+    for blk in blocks:
+        h_ins.append(h)
+        h = M.block_fwd(h, *blk, n_head=CFG.n_head)[0]
+    loss_layered = M.head_loss_fwd(h, lnf_g, lnf_b, params["wte"], tgts)[0]
+
+    flat = [params["wte"], params["wpe"]]
+    for blk in blocks:
+        flat += blk
+    flat += [lnf_g, lnf_b]
+    outs = M.train_step(toks, tgts, *flat, cfg=CFG)
+    loss_mono = outs[0]
+    np.testing.assert_allclose(np.asarray(loss_layered), np.asarray(loss_mono),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_block_bwd_matches_autodiff():
+    _, blocks, _, _ = init_params(CFG)
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.standard_normal(
+        (CFG.batch, CFG.seq, CFG.d_model)).astype(np.float32))
+    d_out = jnp.asarray(rng.standard_normal(h.shape).astype(np.float32))
+
+    outs = M.block_bwd(h, *blocks[0], d_out, n_head=CFG.n_head)
+    d_in = outs[0]
+
+    fn = lambda h, ps: M.block_fwd(h, *ps, n_head=CFG.n_head)[0]
+    _, vjp = jax.vjp(fn, h, tuple(blocks[0]))
+    want_d_in, want_d_ps = vjp(d_out)
+    np.testing.assert_allclose(np.asarray(d_in), np.asarray(want_d_in),
+                               rtol=1e-4, atol=1e-4)
+    for got, want in zip(outs[1:], want_d_ps):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_head_loss_bwd_grad_is_correct():
+    params, _, lnf_g, lnf_b = init_params(CFG)
+    toks, tgts = batch(CFG)
+    rng = np.random.default_rng(4)
+    h = jnp.asarray(rng.standard_normal(
+        (CFG.batch, CFG.seq, CFG.d_model)).astype(np.float32))
+    outs = M.head_loss_bwd(h, lnf_g, lnf_b, params["wte"], tgts)
+    loss, d_h = outs[0], outs[1]
+    fn = lambda h: M.head_loss_fwd(h, lnf_g, lnf_b, params["wte"], tgts)[0].reshape(())
+    want = jax.grad(fn)(h)
+    np.testing.assert_allclose(np.asarray(d_h), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert float(loss[0, 0]) > 0
+
+
+def test_embed_bwd_scatter():
+    toks = jnp.asarray([[1, 1, 2]], jnp.int32)
+    d_h = jnp.ones((1, 3, 4), jnp.float32)
+    d_wte, d_wpe = M.embed_bwd(toks, d_h, vocab=8)
+    assert d_wte.shape == (8, 4)
+    np.testing.assert_allclose(np.asarray(d_wte[1]), 2 * np.ones(4))
+    np.testing.assert_allclose(np.asarray(d_wte[2]), np.ones(4))
+    np.testing.assert_allclose(np.asarray(d_wte[0]), np.zeros(4))
+    np.testing.assert_allclose(np.asarray(d_wpe), np.ones((3, 4)))
+
+
+def test_loss_at_init_near_uniform():
+    params, blocks, lnf_g, lnf_b = init_params(CFG)
+    toks, tgts = batch(CFG)
+    h = M.embed_fwd(toks, params["wte"], params["wpe"])[0]
+    for blk in blocks:
+        h = M.block_fwd(h, *blk, n_head=CFG.n_head)[0]
+    loss = float(M.head_loss_fwd(h, lnf_g, lnf_b, params["wte"], tgts)[0][0, 0])
+    assert abs(loss - np.log(CFG.vocab)) < 0.5, loss
+
+
+def test_subspace_sizes():
+    assert CFG.subspace("qkv") == 16
+    assert CFG.subspace("attn_o") == 16
+    assert CFG.subspace("fc") == 16
+    assert CFG.subspace("proj") == 16
+    assert CFG.kind_dims("qkv") == (32, 96)
+    assert CFG.kind_dims("proj") == (64, 32)
+
+
+def test_pallas_attention_path(monkeypatch):
+    """The model works with the Pallas flash-attention fwd as well."""
+    monkeypatch.setenv("LSP_ATTN", "pallas")
+    _, blocks, _, _ = init_params(CFG)
+    h = jnp.asarray(np.random.default_rng(5).standard_normal(
+        (CFG.batch, CFG.seq, CFG.d_model)).astype(np.float32))
+    out_pallas = M.block_fwd(h, *blocks[0], n_head=CFG.n_head)[0]
+    monkeypatch.setenv("LSP_ATTN", "ref")
+    out_ref = M.block_fwd(h, *blocks[0], n_head=CFG.n_head)[0]
+    np.testing.assert_allclose(np.asarray(out_pallas), np.asarray(out_ref),
+                               rtol=1e-4, atol=1e-4)

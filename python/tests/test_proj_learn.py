@@ -1,0 +1,101 @@
+"""Projector learning (Eq. 3) and optimizer-state projection tests."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import proj_learn
+from compile.kernels import formats, ref
+
+
+def setup(m, n, d, r, seed):
+    p_idx = jnp.asarray(formats.make_positions(m, d, r, seed))
+    p_val = jnp.asarray(formats.init_values(m, r, seed + 1))
+    q_idx = jnp.asarray(formats.make_positions(n, d, r, seed + 2))
+    q_val = jnp.asarray(formats.init_values(n, r, seed + 3))
+    return p_idx, p_val, q_idx, q_val
+
+
+def run_learn(g, p_idx, p_val, q_idx, q_val, d, steps, lr=0.02):
+    m, r = p_val.shape
+    n = q_val.shape[0]
+    mp = jnp.zeros((m, r)); vp = jnp.zeros((m, r))
+    mq = jnp.zeros((n, r)); vq = jnp.zeros((n, r))
+    bias = None
+    for t in range(1, steps + 1):
+        out = proj_learn.learn_step(
+            g, p_idx, p_val, q_idx, q_val, mp, vp, mq, vq,
+            jnp.full((1, 1), float(t)), jnp.full((1, 1), lr),
+            d=d, beta=1e-4)
+        p_val, q_val, mp, vp, mq, vq, bias = out
+    return p_val, q_val, float(bias[0, 0])
+
+
+def test_learning_reduces_bias_on_low_rank_gradient():
+    m, n, d, r = 48, 56, 16, 2
+    rng = np.random.default_rng(0)
+    g = jnp.asarray((rng.standard_normal((m, 3)) @
+                     rng.standard_normal((3, n))).astype(np.float32))
+    p_idx, p_val, q_idx, q_val = setup(m, n, d, r, 5)
+    bias0 = float(ref.bias_ref(g, p_idx, p_val, q_idx, q_val, d)[0][0, 0])
+    _, _, bias_end = run_learn(g, p_idx, p_val, q_idx, q_val, d, steps=60)
+    assert bias_end < bias0 * 0.8, (bias0, bias_end)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_learn_step_bias_output_matches_bias_ref(seed):
+    m, n, d, r = 24, 20, 8, 2
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    p_idx, p_val, q_idx, q_val = setup(m, n, d, r, seed)
+    out = proj_learn.learn_step(
+        g, p_idx, p_val, q_idx, q_val,
+        jnp.zeros((m, r)), jnp.zeros((m, r)),
+        jnp.zeros((n, r)), jnp.zeros((n, r)),
+        jnp.ones((1, 1)), jnp.full((1, 1), 0.01), d=d, beta=1e-4)
+    # The reported bias is the *pre-update* bias.
+    want = float(ref.bias_ref(g, p_idx, p_val, q_idx, q_val, d)[0][0, 0])
+    np.testing.assert_allclose(float(out[6][0, 0]), want, rtol=1e-4)
+
+
+def test_state_projection_identity_when_subspace_unchanged():
+    """Projecting onto the same orthonormal-ish subspace should roughly
+    preserve the moments; exactly identity when P^T P = I."""
+    m, n, d, r = 16, 16, 16, 1
+    # Identity projectors: idx = row index, val = 1.
+    eye_idx = jnp.arange(m, dtype=jnp.int32).reshape(m, 1)
+    ones = jnp.ones((m, 1), jnp.float32)
+    ms = jnp.asarray(np.random.default_rng(1).standard_normal((d, d)).astype(np.float32))
+    vs = jnp.abs(jnp.asarray(np.random.default_rng(2).standard_normal((d, d)).astype(np.float32)))
+    out = proj_learn.project_state(
+        ms, vs, eye_idx, ones, eye_idx, ones, eye_idx, ones, eye_idx, ones, d=d)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ms), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(vs), rtol=1e-4, atol=1e-5)
+
+
+def test_state_projection_shapes_and_scale():
+    m, n, d, r = 32, 24, 8, 2
+    p_idx, p_val, q_idx, q_val = setup(m, n, d, r, 9)
+    p2_idx, p2_val, q2_idx, q2_val = setup(m, n, d, r, 29)
+    ms = jnp.ones((d, d), jnp.float32)
+    vs = jnp.ones((d, d), jnp.float32)
+    m2, v2 = proj_learn.project_state(
+        ms, vs, p_idx, p_val, q_idx, q_val, p2_idx, p2_val, q2_idx, q2_val, d=d)
+    assert m2.shape == (d, d) and v2.shape == (d, d)
+    # V projection uses elementwise squares -> stays non-negative.
+    assert float(jnp.min(v2)) >= 0.0
+    assert np.isfinite(np.asarray(m2)).all()
+
+
+def test_eq3_regularizer_term():
+    m, n, d, r = 16, 16, 8, 2
+    p_idx, p_val, q_idx, q_val = setup(m, n, d, r, 3)
+    g = jnp.zeros((m, n), jnp.float32)
+    # With G = 0, loss = beta * (||P|| + ||Q||) and bias = 0.
+    loss, bias = proj_learn.eq3_loss(g, p_idx, p_val, q_idx, q_val, d, beta=0.5)
+    assert float(bias) < 1e-6
+    p = ref.densify(p_idx, p_val, d)
+    q = ref.densify(q_idx, q_val, d)
+    want = 0.5 * (float(jnp.linalg.norm(p)) + float(jnp.linalg.norm(q)))
+    np.testing.assert_allclose(float(loss), want, rtol=1e-5)

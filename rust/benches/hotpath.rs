@@ -1,0 +1,134 @@
+//! Hot-path micro-benchmarks (own harness; criterion unavailable offline).
+//! Targets of the §Perf pass: the fused CPU Adam (the offload target's
+//! dominant kernel), host sparse compress/decompress, the matmul substrate,
+//! the DES engine, the priority queue, and the JSON/manifest parser.
+//! Run with `cargo bench --bench hotpath [-- <filter>]`.
+
+use lsp_offload::model::memory::PaperModel;
+use lsp_offload::optim::AdamState;
+use lsp_offload::sim::{build_schedule, HardwareProfile, ScheduleKind, Workload};
+use lsp_offload::sparse::ProjectorPair;
+use lsp_offload::tensor::ops::matmul;
+use lsp_offload::tensor::Tensor;
+use lsp_offload::util::bench::bench;
+use lsp_offload::util::rng::Rng;
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && a != "bench");
+    let want = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
+    let budget = 1.0;
+
+    if want("adam") {
+        // The CPU-side UPD step: params/s is the number the cost model's
+        // `cpu_adam_params_per_s` wants to know for THIS machine.
+        for n in [1 << 14, 1 << 18, 1 << 21] {
+            let mut st = AdamState::new(n);
+            let mut rng = Rng::new(1);
+            let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut delta = vec![0f32; n];
+            let r = bench(&format!("fused_adam n={n}"), budget, || {
+                st.fused_step(&g, &mut delta);
+            });
+            println!("    -> {:.2} G params/s", n as f64 / r.min / 1e9);
+        }
+    }
+
+    if want("compress") {
+        let mut rng = Rng::new(2);
+        for (m, n, d, r) in [(512, 512, 256, 4), (1024, 1024, 512, 4)] {
+            let pair = ProjectorPair::init(m, n, d, r, &mut rng);
+            let g = Tensor::randn(&[m, n], 1.0, &mut rng);
+            bench(&format!("sparse_compress {m}x{n} d={d} r={r}"), budget, || {
+                std::hint::black_box(pair.compress(&g).unwrap());
+            });
+            let ds = Tensor::randn(&[d, d], 1.0, &mut rng);
+            bench(&format!("sparse_decompress {m}x{n} d={d} r={r}"), budget, || {
+                std::hint::black_box(pair.decompress(&ds).unwrap());
+            });
+        }
+    }
+
+    if want("matmul") {
+        let mut rng = Rng::new(3);
+        for s in [128usize, 256, 512] {
+            let a = Tensor::randn(&[s, s], 1.0, &mut rng);
+            let b = Tensor::randn(&[s, s], 1.0, &mut rng);
+            let r = bench(&format!("matmul {s}x{s}"), budget, || {
+                std::hint::black_box(matmul(&a, &b).unwrap());
+            });
+            println!("    -> {:.2} GFLOP/s", 2.0 * (s as f64).powi(3) / r.min / 1e9);
+        }
+    }
+
+    if want("sim") {
+        let hw = HardwareProfile::workstation();
+        let w = Workload::paper(PaperModel::Llama7B, 2048, 2048);
+        bench("des_lsp_layerwise_4iters", budget, || {
+            std::hint::black_box(
+                build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 4).unwrap(),
+            );
+        });
+        bench("des_zero_4iters", budget, || {
+            std::hint::black_box(build_schedule(ScheduleKind::Zero, &hw, &w, 4).unwrap());
+        });
+    }
+
+    if want("queue") {
+        use lsp_offload::coordinator::comm::PrioQueue;
+        let q: PrioQueue<u64> = PrioQueue::new();
+        bench("prio_queue push+pop x64", budget, || {
+            for i in 0..64u64 {
+                q.push((i % 7) as i64, i);
+            }
+            for _ in 0..64 {
+                std::hint::black_box(q.try_pop());
+            }
+        });
+    }
+
+    if want("json") {
+        // Manifest-scale JSON parse (startup path).
+        let blob = {
+            let entries: Vec<String> = (0..40)
+                .map(|i| {
+                    format!(
+                        r#"{{"name":"e{i}","file":"e{i}.hlo.txt","tuple_out":false,
+                           "args":[{{"name":"x","dtype":"f32","shape":[64,128]}}],
+                           "outs":[{{"dtype":"f32","shape":[64,128]}}]}}"#
+                    )
+                })
+                .collect();
+            format!(r#"{{"entries":[{}]}}"#, entries.join(","))
+        };
+        bench("json_parse manifest-scale", budget, || {
+            std::hint::black_box(lsp_offload::util::json::Json::parse(&blob).unwrap());
+        });
+    }
+
+    if want("engine") {
+        // PJRT dispatch overhead: smallest executable round-trip.
+        match lsp_offload::model::manifest::find_artifacts(None, "tiny")
+            .and_then(|d| lsp_offload::runtime::Engine::load(&d))
+        {
+            Ok(eng) => {
+                let len = eng.man.axpy_lens[0];
+                let e = eng.exec(&format!("axpy_{len}")).unwrap();
+                let w = vec![1.0f32; len];
+                let d = vec![0.5f32; len];
+                bench(&format!("pjrt axpy_{len} round-trip"), budget, || {
+                    let out = e
+                        .call(&[
+                            eng.lit_f32(&[len], &w).unwrap(),
+                            eng.lit_f32(&[len], &d).unwrap(),
+                            eng.lit_scalar(0.1).unwrap(),
+                        ])
+                        .unwrap();
+                    std::hint::black_box(out);
+                });
+            }
+            Err(e) => println!("(pjrt bench skipped: {e})"),
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Regenerates every table and figure of the paper's evaluation from the
+//! analytic models + DES (+ the real engine where artifacts are present).
+//! Run with `cargo bench --bench paper_tables [-- <filter>]`.
+//!
+//! Sections: table1 table5 table2 fig2 fig3 fig4 fig6 fig7a eq14 fig9 fig5
+//! (long real-engine runs live in examples/; this harness prints the
+//! model-driven counterparts and a short real confirmation on tiny
+//! artifacts.)
+
+use lsp_offload::analyze;
+use lsp_offload::linalg::effective_rank;
+use lsp_offload::model::memory::PaperModel;
+use lsp_offload::sim::{build_schedule, HardwareProfile, ScheduleKind, Workload};
+use lsp_offload::sparse::ProjectorPair;
+use lsp_offload::tensor::Tensor;
+use lsp_offload::util::rng::Rng;
+
+fn want(filter: &Option<String>, name: &str) -> bool {
+    filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+}
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && a != "bench");
+
+    if want(&filter, "table1") {
+        println!("\n================ Table 1 ================");
+        analyze::ConfigTable::build(
+            PaperModel::Llama7B,
+            HardwareProfile::workstation(),
+            2048,
+        )
+        .print();
+    }
+    if want(&filter, "table5") {
+        println!("\n================ Table 5 ================");
+        analyze::ConfigTable::build(PaperModel::Gpt2_1_3B, HardwareProfile::laptop(), 512)
+            .print();
+    }
+    if want(&filter, "table2") {
+        println!("\n================ Table 2 ================");
+        for tau in [1, 4] {
+            analyze::print_table2(2048, 2048, 512, 1024, 4, tau);
+        }
+    }
+
+    if want(&filter, "fig2") {
+        println!("\n================ Fig. 2: Zero slowdown breakdown ================");
+        let cases = [
+            ("laptop", PaperModel::Gpt2_774M, 1024u64, "GPT2-774M"),
+            ("laptop", PaperModel::Gpt2_1_3B, 512, "GPT2-1.3B"),
+            ("workstation", PaperModel::Llama3B, 4096, "Llama-3B"),
+            ("workstation", PaperModel::Llama7B, 2048, "llama-7B"),
+        ];
+        for (hw_name, model, tokens, label) in cases {
+            let hw = HardwareProfile::by_name(hw_name).unwrap();
+            let w = Workload::paper(model, tokens, (model.hidden() / 2) as usize);
+            let rep = build_schedule(ScheduleKind::Zero, &hw, &w, 4).unwrap();
+            println!("{hw_name:12} {label:16}");
+            rep.print_row();
+        }
+        println!("(paper: slowdowns 1.93x-4.28x; comm is the dominant exposed term)");
+    }
+
+    if want(&filter, "fig3") {
+        println!("\n================ Fig. 3: pipelines (llama-7B / workstation) ================");
+        let hw = HardwareProfile::workstation();
+        let w = Workload::paper(PaperModel::Llama7B, 2048, 2048);
+        for kind in ScheduleKind::ALL {
+            build_schedule(kind, &hw, &w, 4).unwrap().print_row();
+        }
+    }
+
+    if want(&filter, "fig4") {
+        println!("\n================ Fig. 4: optimization-space rank ================");
+        let (m, n, d, r) = (64, 64, 16, 2);
+        let mut rng = Rng::new(4);
+        let mut accum = Tensor::zeros(&[m, n]);
+        println!("accumulated rank of sum_t P_t S_t Q_t^T (d={d}, vs LoRA rank=r={r}):");
+        for tau in 1..=6 {
+            let pair = ProjectorPair::init(m, n, d, r, &mut rng);
+            let ds = Tensor::randn(&[d, d], 1.0, &mut rng);
+            lsp_offload::tensor::ops::axpy(&mut accum, 1.0, &pair.decompress(&ds).unwrap());
+            let er = effective_rank(&accum, 48, &mut rng).unwrap();
+            println!("  tau={tau}: effective rank {er:.1}");
+        }
+    }
+
+    if want(&filter, "fig6") {
+        println!("\n================ Fig. 6: throughput ablation ================");
+        let hw = HardwareProfile::workstation();
+        let native = build_schedule(
+            ScheduleKind::Native,
+            &hw,
+            &Workload::paper(PaperModel::Llama7B, 2048, 2048),
+            4,
+        )
+        .unwrap()
+        .iter_time;
+        let cases: [(&str, ScheduleKind, usize); 5] = [
+            ("zero-offload", ScheduleKind::Zero, 2048),
+            ("+layerwise", ScheduleKind::ZeroLayerwise, 2048),
+            ("lsp(d=1024)", ScheduleKind::LspLayerwise, 1024),
+            ("lsp(d=2048)", ScheduleKind::LspLayerwise, 2048),
+            ("native", ScheduleKind::Native, 2048),
+        ];
+        for (label, kind, d) in cases {
+            let w = Workload::paper(PaperModel::Llama7B, 2048, d);
+            let rep = build_schedule(kind, &hw, &w, 4).unwrap();
+            println!(
+                "  {:14} {:>7.4} it/s   slowdown vs native {:>6.1}%",
+                label,
+                1.0 / rep.iter_time,
+                (rep.iter_time / native - 1.0) * 100.0
+            );
+        }
+        println!("(paper: +layerwise = +18% over zero; LSP within 10.6-16.7% of native)");
+    }
+
+    if want(&filter, "fig7a") {
+        println!("\n================ Fig. 7a: per-iteration breakdown ================");
+        let hw = HardwareProfile::laptop();
+        let w = Workload::paper(PaperModel::DeepseekCoder1_3B, 384, 1024);
+        for kind in [ScheduleKind::Zero, ScheduleKind::LspLayerwise] {
+            build_schedule(kind, &hw, &w, 4).unwrap().print_row();
+        }
+        println!("(paper: LSP cuts ~50% of per-iteration latency vs Zero here)");
+    }
+
+    if want(&filter, "eq14") {
+        println!("\n================ Eq. 1 vs Eq. 4 critical paths ================");
+        for (hw, model, tokens) in [
+            (HardwareProfile::workstation(), PaperModel::Llama7B, 2048u64),
+            (HardwareProfile::laptop(), PaperModel::Gpt2_1_3B, 512),
+        ] {
+            let w = Workload::paper(model, tokens, (model.hidden() / 2) as usize);
+            analyze::print_critical_paths(&hw, &w);
+        }
+    }
+
+    if want(&filter, "fig9") {
+        println!("\n================ Fig. 7b / Fig. 9: estimation bias ================");
+        match lsp_offload::model::manifest::find_artifacts(None, "tiny")
+            .and_then(|d| lsp_offload::runtime::Engine::load(&d))
+        {
+            Ok(eng) => {
+                let rep = lsp_offload::analyze::bias_study::run(&eng, 3, 3, 7).unwrap();
+                rep.print();
+            }
+            Err(e) => println!("(skipped: tiny artifacts unavailable: {e})"),
+        }
+    }
+
+    if want(&filter, "fig5") {
+        println!("\n================ Fig. 5: loss-vs-time (short real run) ================");
+        run_fig5_short();
+    }
+}
+
+/// Short real-engine Fig. 5 confirmation on the tiny artifacts: LSP moves
+/// orders of magnitude fewer bytes and finishes the same steps sooner than
+/// Zero under the same emulated link.
+fn run_fig5_short() {
+    use lsp_offload::coordinator::policy::PolicyKind;
+    use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+    let Ok(dir) = lsp_offload::model::manifest::find_artifacts(None, "tiny") else {
+        println!("(skipped: artifacts unavailable)");
+        return;
+    };
+    let Ok(eng) = lsp_offload::runtime::Engine::load(&dir) else {
+        println!("(skipped: engine load failed)");
+        return;
+    };
+    for policy in [PolicyKind::Lsp, PolicyKind::Zero] {
+        let cfg = TrainConfig {
+            policy,
+            steps: 20,
+            bw_bytes_per_s: 0.02e9,
+            check_freq: 10,
+            eval_every: 0,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(&eng, cfg).unwrap();
+        let rep = tr.train().unwrap();
+        println!(
+            "  {:5} 20 steps: wall {:>9}, final loss {:.4}, d2h {:>10}",
+            rep.policy,
+            lsp_offload::util::human_secs(rep.wall_secs),
+            rep.final_train_loss,
+            lsp_offload::util::human_bytes(rep.d2h_bytes),
+        );
+    }
+}

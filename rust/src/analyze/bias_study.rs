@@ -1,0 +1,249 @@
+//! Estimation-bias study (Figs 7b / 9): learned (d, r)-sparse projectors vs
+//! random sparse projectors vs GaLore's SVD projector, evaluated on *real*
+//! model gradients, separately on the calibration gradient (train error)
+//! and on held-out gradients (generalization).
+//!
+//! Gradients come from the monolithic `train_step` artifact: we run a short
+//! native fine-tune on the synthetic corpus and collect layer-0 gradients
+//! for every LSP kind, split into calibration / validation.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::data::{Batcher, Corpus};
+use crate::linalg::randomized_svd;
+use crate::model::ParamStore;
+use crate::optim::AdamState;
+use crate::runtime::Engine;
+use crate::sparse::ProjectorPair;
+use crate::tensor::ops::{matmul, matmul_tn, sub};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct BiasRow {
+    pub kind: String,
+    pub method: String,
+    pub d: usize,
+    pub r: usize,
+    pub calib_bias: f32,
+    pub val_bias: f32,
+}
+
+#[derive(Debug)]
+pub struct BiasReport {
+    pub rows: Vec<BiasRow>,
+}
+
+impl BiasReport {
+    pub fn print(&self) {
+        println!("estimation bias (relative ||PP^T G QQ^T - G||_F / ||G||_F):");
+        println!(
+            "| {:8} | {:22} | {:>4} | {:>3} | {:>11} | {:>9} |",
+            "kind", "method", "d", "r", "calib bias", "val bias"
+        );
+        for r in &self.rows {
+            println!(
+                "| {:8} | {:22} | {:>4} | {:>3} | {:>11.4} | {:>9.4} |",
+                r.kind, r.method, r.d, r.r, r.calib_bias, r.val_bias
+            );
+        }
+    }
+}
+
+/// Collect per-kind layer-0 gradients from `steps` native training steps.
+fn collect_grads(
+    eng: &Engine,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<(String, Vec<Tensor>)>> {
+    let man = eng.man.clone();
+    let c = &man.config;
+    let mut params = ParamStore::init(&man, seed)?;
+    let corpus = Corpus::synthetic(c.vocab, (c.batch * c.seq + 1) * (steps + 2) * 4, seed ^ 0x5);
+    let mut batcher = Batcher::new(&corpus, c.batch, c.seq, seed);
+    let mono = eng.exec("train_step")?;
+    let mut states: Vec<AdamState> =
+        params.tensors.iter().map(|t| AdamState::new(t.len())).collect();
+
+    let mut per_kind: Vec<(String, Vec<Tensor>)> =
+        man.kinds.keys().map(|k| (k.clone(), Vec::new())).collect();
+    for _ in 0..steps {
+        let b = batcher.next_batch();
+        let mut args: Vec<Literal> = vec![
+            eng.lit_i32(&[c.batch, c.seq], &b.tokens)?,
+            eng.lit_i32(&[c.batch, c.seq], &b.targets)?,
+        ];
+        for t in &params.tensors {
+            args.push(eng.lit_tensor(t)?);
+        }
+        let outs = mono.call(&args)?;
+        // outs: loss, then grads aligned with params order.
+        for (ki, (kind, grads)) in per_kind.iter_mut().enumerate() {
+            let meta = &man.kinds[kind];
+            let pidx = 2 + meta.param_index; // layer 0 block starts at 2
+            let g = eng.to_tensor(&outs[1 + pidx], &[meta.m, meta.n])?;
+            grads.push(g);
+            let _ = ki;
+        }
+        // Native Adam update so later gradients are from evolving weights.
+        for (i, t) in params.tensors.iter_mut().enumerate() {
+            let g: Vec<f32> = eng.to_vec_f32(&outs[1 + i])?;
+            let delta = states[i].step_vec(&g);
+            for (wv, dv) in t.data_mut().iter_mut().zip(&delta) {
+                *wv -= 1e-3 * dv;
+            }
+        }
+    }
+    Ok(per_kind)
+}
+
+fn mean_grad(grads: &[Tensor]) -> Tensor {
+    let mut acc = Tensor::zeros(grads[0].shape());
+    for g in grads {
+        crate::tensor::ops::axpy(&mut acc, 1.0 / grads.len() as f32, g);
+    }
+    acc
+}
+
+fn pair_bias_on(pair: &ProjectorPair, grads: &[Tensor]) -> f32 {
+    let mut acc = 0.0;
+    for g in grads {
+        acc += pair.bias(g).unwrap().0;
+    }
+    acc / grads.len() as f32
+}
+
+/// One-sided GaLore bias: `||P P^T G - G||_F / ||G||_F` with P = top-rank
+/// left singular vectors of the calibration gradient.
+fn galore_bias(p: &Tensor, grads: &[Tensor]) -> Result<f32> {
+    let mut acc = 0.0;
+    for g in grads {
+        let proj = matmul(p, &matmul_tn(p, g)?)?;
+        acc += sub(&proj, g).frob_norm() / g.frob_norm().max(1e-30);
+    }
+    Ok(acc / grads.len() as f32)
+}
+
+/// Learn projector values on `calib` with the `learn_<kind>` artifact.
+fn learn_pair(
+    eng: &Engine,
+    entry: &str,
+    pair: &mut ProjectorPair,
+    calib: &Tensor,
+    budget: u32,
+    lr: f32,
+) -> Result<()> {
+    let (m, n, r) = (pair.p.rows, pair.q.rows, pair.p.r);
+    let e = eng.exec(entry)?;
+    let mut p_val = pair.p.val.clone();
+    let mut q_val = pair.q.val.clone();
+    let mut mp = vec![0f32; p_val.len()];
+    let mut vp = vec![0f32; p_val.len()];
+    let mut mq = vec![0f32; q_val.len()];
+    let mut vq = vec![0f32; q_val.len()];
+    for t in 1..=budget {
+        let out = e.call(&[
+            eng.lit_tensor(calib)?,
+            eng.lit_i32(&[m, r], &pair.p.idx)?,
+            eng.lit_f32(&[m, r], &p_val)?,
+            eng.lit_i32(&[n, r], &pair.q.idx)?,
+            eng.lit_f32(&[n, r], &q_val)?,
+            eng.lit_f32(&[m, r], &mp)?,
+            eng.lit_f32(&[m, r], &vp)?,
+            eng.lit_f32(&[n, r], &mq)?,
+            eng.lit_f32(&[n, r], &vq)?,
+            eng.lit_scalar(t as f32)?,
+            eng.lit_scalar(lr)?,
+        ])?;
+        p_val = eng.to_vec_f32(&out[0])?;
+        q_val = eng.to_vec_f32(&out[1])?;
+        mp = eng.to_vec_f32(&out[2])?;
+        vp = eng.to_vec_f32(&out[3])?;
+        mq = eng.to_vec_f32(&out[4])?;
+        vq = eng.to_vec_f32(&out[5])?;
+    }
+    pair.p.val = p_val;
+    pair.q.val = q_val;
+    Ok(())
+}
+
+pub fn run(eng: &Engine, n_calib: usize, n_val: usize, seed: u64) -> Result<BiasReport> {
+    let man = eng.man.clone();
+    let per_kind = collect_grads(eng, n_calib + n_val, seed)?;
+    let mut rng = Rng::new(seed ^ 0x1ce);
+    let mut rows = Vec::new();
+
+    for (kind, grads) in &per_kind {
+        let meta = &man.kinds[kind];
+        let (calib_set, val_set) = grads.split_at(n_calib);
+        let calib = mean_grad(calib_set);
+
+        // Random sparse projector (JL init, unlearned).
+        let random_pair = ProjectorPair::init(meta.m, meta.n, meta.d, meta.r, &mut rng);
+        rows.push(BiasRow {
+            kind: kind.clone(),
+            method: "sparse-random".into(),
+            d: meta.d,
+            r: meta.r,
+            calib_bias: random_pair.bias(&calib).unwrap().0,
+            val_bias: pair_bias_on(&random_pair, val_set),
+        });
+
+        // Learned sparse projector (Eq. 3 on the calibration gradient).
+        let mut learned = random_pair.clone();
+        learn_pair(eng, &format!("learn_{kind}"), &mut learned, &calib, 120, 0.02)?;
+        rows.push(BiasRow {
+            kind: kind.clone(),
+            method: "sparse-learned".into(),
+            d: meta.d,
+            r: meta.r,
+            calib_bias: learned.bias(&calib).unwrap().0,
+            val_bias: pair_bias_on(&learned, val_set),
+        });
+
+        // GaLore SVD projectors at a few (distinct) ranks.
+        let mut ranks: Vec<usize> = [meta.r, 4 * meta.r, meta.d / 2]
+            .into_iter()
+            .map(|r| r.max(1).min(meta.m.min(meta.n)))
+            .collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        for rank in ranks {
+            let svd = randomized_svd(&calib, rank, 2, &mut rng)?;
+            rows.push(BiasRow {
+                kind: kind.clone(),
+                method: format!("galore-svd(rank={rank})"),
+                d: rank,
+                r: rank,
+                calib_bias: galore_bias(&svd.u, std::slice::from_ref(&calib))?,
+                val_bias: galore_bias(&svd.u, val_set)?,
+            });
+        }
+    }
+
+    // d-sweep with learned projectors, if the artifacts carry sweep entries.
+    for (name, _) in man.entries.iter() {
+        if let Some(rest) = name.strip_prefix("learn_sweep_") {
+            // learn_sweep_<kind>_d<d>
+            let Some((kind, dstr)) = rest.rsplit_once("_d") else { continue };
+            let Ok(d) = dstr.parse::<usize>() else { continue };
+            let meta = &man.kinds[kind];
+            let grads = &per_kind.iter().find(|(k, _)| k == kind).unwrap().1;
+            let (calib_set, val_set) = grads.split_at(n_calib);
+            let calib = mean_grad(calib_set);
+            let mut pair = ProjectorPair::init(meta.m, meta.n, d, meta.r, &mut rng);
+            learn_pair(eng, name, &mut pair, &calib, 120, 0.02)?;
+            rows.push(BiasRow {
+                kind: kind.to_string(),
+                method: "sparse-learned-sweep".into(),
+                d,
+                r: meta.r,
+                calib_bias: pair.bias(&calib).unwrap().0,
+                val_bias: pair_bias_on(&pair, val_set),
+            });
+        }
+    }
+
+    Ok(BiasReport { rows })
+}

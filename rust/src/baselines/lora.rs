@@ -1,0 +1,114 @@
+//! LoRA (Hu et al. 2021): `W = W0 + A B` with trainable rank-r adapters.
+//!
+//! The base weight is frozen; given the full-weight gradient `G` from the
+//! shared bwd path, the adapter gradients are `dA = G B^T`, `dB = A^T G`
+//! (exact, since `W` is affine in `A`, `B`).  Adam runs "on device" (no
+//! offload) — matching how LoRA needs no CPU offloading in the paper's
+//! comparison; its weakness there is the rank-r optimization space.
+
+use anyhow::Result;
+
+use crate::optim::AdamState;
+use crate::tensor::ops::{matmul, matmul_nt, matmul_tn};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct LoraState {
+    pub w0: Tensor,
+    pub a: Tensor, // [m, rank]
+    pub b: Tensor, // [rank, n]
+    st_a: AdamState,
+    st_b: AdamState,
+    pub rank: usize,
+    /// LoRA scaling alpha / rank (paper's DeepSeek runs use alpha = 32).
+    pub scale: f32,
+}
+
+impl LoraState {
+    pub fn init(w0: Tensor, rank: usize, alpha: f32, rng: &mut Rng) -> LoraState {
+        let (m, n) = (w0.rows(), w0.cols());
+        // Standard LoRA init: A ~ N(0, 1/rank), B = 0 => W starts at W0.
+        let a = Tensor::randn(&[m, rank], 1.0 / rank as f32, rng);
+        let b = Tensor::zeros(&[rank, n]);
+        LoraState {
+            w0,
+            st_a: AdamState::new(m * rank),
+            st_b: AdamState::new(rank * n),
+            a,
+            b,
+            rank,
+            scale: alpha / rank as f32,
+        }
+    }
+
+    /// One update from the full-weight gradient; returns the new effective
+    /// weight `W0 + scale * A B` to upload.
+    pub fn step(&mut self, g: &Tensor, lr: f32) -> Result<Tensor> {
+        // d(A) = scale * G B^T ; d(B) = scale * A^T G.
+        let mut da = matmul_nt(g, &self.b)?;
+        crate::tensor::ops::scale(&mut da, self.scale);
+        let mut db = matmul_tn(&self.a, g)?;
+        crate::tensor::ops::scale(&mut db, self.scale);
+        let delta_a = self.st_a.step_vec(da.data());
+        let delta_b = self.st_b.step_vec(db.data());
+        for (w, d) in self.a.data_mut().iter_mut().zip(&delta_a) {
+            *w -= lr * d;
+        }
+        for (w, d) in self.b.data_mut().iter_mut().zip(&delta_b) {
+            *w -= lr * d;
+        }
+        self.effective()
+    }
+
+    pub fn effective(&self) -> Result<Tensor> {
+        let mut ab = matmul(&self.a, &self.b)?;
+        crate::tensor::ops::scale(&mut ab, self.scale);
+        let mut w = self.w0.clone();
+        crate::tensor::ops::axpy(&mut w, 1.0, &ab);
+        Ok(w)
+    }
+
+    /// Extra "GPU" memory for adapters + their optimizer state (bytes).
+    pub fn extra_bytes(&self) -> usize {
+        (self.a.len() + self.b.len()) * 4 + self.st_a.size_bytes() + self.st_b.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_w0_and_descends() {
+        let mut rng = Rng::new(3);
+        let w0 = Tensor::randn(&[12, 10], 1.0, &mut rng);
+        let mut lora = LoraState::init(w0.clone(), 4, 8.0, &mut rng);
+        assert!(lora.effective().unwrap().allclose(&w0, 1e-6), "B=0 => W=W0");
+
+        // Descend on f(W) = 0.5||W - T||^2 (gradient = W - T).
+        let target = Tensor::randn(&[12, 10], 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        let mut w = w0.clone();
+        for _ in 0..60 {
+            let g = crate::tensor::ops::sub(&w, &target);
+            w = lora.step(&g, 0.05).unwrap();
+            let loss = crate::tensor::ops::sub(&w, &target).frob_norm();
+            last = loss;
+        }
+        let initial = crate::tensor::ops::sub(&w0, &target).frob_norm();
+        assert!(last < initial * 0.9, "LoRA failed to descend: {last} vs {initial}");
+    }
+
+    #[test]
+    fn rank_limits_update_rank() {
+        let mut rng = Rng::new(5);
+        let w0 = Tensor::zeros(&[16, 16]);
+        let mut lora = LoraState::init(w0.clone(), 2, 2.0, &mut rng);
+        let g = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let w = lora.step(&g, 0.1).unwrap();
+        // Delta W = A B has rank <= 2.
+        let delta = crate::tensor::ops::sub(&w, &w0);
+        let er = crate::linalg::effective_rank(&delta, 8, &mut rng).unwrap();
+        assert!(er < 2.6, "effective rank {er} exceeds LoRA rank bound");
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation baselines: LoRA and GaLore (the PEFT comparators), plus the
+//! glue the trainer uses to run them over the same PJRT fwd/bwd path.
+//! Zero-Offload is not here — it shares LSP's offload machinery (full
+//! gradients through the throttled links) and lives in the trainer.
+
+pub mod galore;
+pub mod lora;
+
+pub use galore::GaloreState;
+pub use lora::LoraState;

@@ -1,0 +1,207 @@
+//! Config system: CLI flag parsing (no clap offline) + JSON run-config
+//! files that map onto `TrainConfig` and the simulator knobs.
+//!
+//! Precedence: defaults < JSON config file (`--config path`) < CLI flags.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::policy::PolicyKind;
+use crate::coordinator::trainer::TrainConfig;
+use crate::util::json::Json;
+
+/// `--key value` / `--flag` parser. Positional args are kept in order.
+#[derive(Debug, Default)]
+pub struct CliArgs {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl CliArgs {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<CliArgs> {
+        let mut out = CliArgs::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key} {v:?} is not a number")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{key} {v:?} is not an integer")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.get(key)
+            .map(|v| match v {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("--{key} {other:?} is not a bool"),
+            })
+            .transpose()
+    }
+}
+
+/// Apply a JSON object onto a TrainConfig.
+pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
+    let obj = j.as_obj()?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "policy" => {
+                cfg.policy = PolicyKind::by_name(v.as_str()?)
+                    .ok_or_else(|| anyhow::anyhow!("unknown policy {v}"))?
+            }
+            "steps" => cfg.steps = v.as_usize()? as u64,
+            "lr" => cfg.lr = v.as_f64()? as f32,
+            "bw_gbps" => cfg.bw_bytes_per_s = v.as_f64()? * 1e9,
+            "time_scale" => cfg.time_scale = v.as_f64()?,
+            "cpu_scale" => cfg.cpu_scale = v.as_f64()?,
+            "check_freq" => cfg.check_freq = v.as_usize()? as u64,
+            "alpha" => cfg.alpha = v.as_f64()? as f32,
+            "learn_budget" => cfg.learn_budget = v.as_usize()? as u32,
+            "learn_lr" => cfg.learn_lr = v.as_f64()? as f32,
+            "eval_every" => cfg.eval_every = v.as_usize()? as u64,
+            "eval_batches" => cfg.eval_batches = v.as_usize()?,
+            "seed" => cfg.seed = v.as_usize()? as u64,
+            "lcfs" => cfg.lcfs = v.as_bool()?,
+            "rank" => cfg.rank = v.as_usize()?,
+            "galore_update_freq" => cfg.galore_update_freq = v.as_usize()? as u64,
+            "log_every" => cfg.log_every = v.as_usize()? as u64,
+            "corpus_len" => cfg.corpus_len = v.as_usize()?,
+            "glue_task" => cfg.glue_task = v.as_bool()?,
+            "max_wall_secs" => cfg.max_wall_secs = v.as_f64()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// Build a TrainConfig from defaults + optional file + CLI flags.
+pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        apply_json(&mut cfg, &Json::parse(&text)?)?;
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.policy =
+            PolicyKind::by_name(p).ok_or_else(|| anyhow::anyhow!("unknown policy {p:?}"))?;
+    }
+    if let Some(v) = args.get_u64("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = args.get_f64("lr")? {
+        cfg.lr = v as f32;
+    }
+    if let Some(v) = args.get_f64("bw-gbps")? {
+        cfg.bw_bytes_per_s = v * 1e9;
+    }
+    if let Some(v) = args.get_f64("time-scale")? {
+        cfg.time_scale = v;
+    }
+    if let Some(v) = args.get_f64("cpu-scale")? {
+        cfg.cpu_scale = v;
+    }
+    if let Some(v) = args.get_u64("check-freq")? {
+        cfg.check_freq = v;
+    }
+    if let Some(v) = args.get_f64("alpha")? {
+        cfg.alpha = v as f32;
+    }
+    if let Some(v) = args.get_u64("learn-budget")? {
+        cfg.learn_budget = v as u32;
+    }
+    if let Some(v) = args.get_u64("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = args.get_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_bool("lcfs")? {
+        cfg.lcfs = v;
+    }
+    if let Some(v) = args.get_u64("rank")? {
+        cfg.rank = v as usize;
+    }
+    if let Some(v) = args.get_u64("log-every")? {
+        cfg.log_every = v;
+    }
+    if let Some(v) = args.get_u64("corpus-len")? {
+        cfg.corpus_len = v as usize;
+    }
+    if let Some(v) = args.get_bool("glue")? {
+        cfg.glue_task = v;
+    }
+    if let Some(v) = args.get_f64("budget-secs")? {
+        cfg.max_wall_secs = v;
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> CliArgs {
+        CliArgs::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = argv("train --steps 20 --lcfs --bw-gbps=0.5 extra");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get_u64("steps").unwrap(), Some(20));
+        assert_eq!(a.get_bool("lcfs").unwrap(), Some(true));
+        assert_eq!(a.get_f64("bw-gbps").unwrap(), Some(0.5));
+        assert!(a.get_f64("steps").is_ok());
+        assert!(argv("--steps abc").get_u64("steps").is_err());
+    }
+
+    #[test]
+    fn train_config_overrides() {
+        let a = argv("train --policy zero --steps 7 --alpha 0.3");
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.policy, PolicyKind::Zero);
+        assert_eq!(cfg.steps, 7);
+        assert!((cfg.alpha - 0.3).abs() < 1e-6);
+        // Defaults survive.
+        assert_eq!(cfg.eval_batches, TrainConfig::default().eval_batches);
+    }
+
+    #[test]
+    fn json_config_file() {
+        let j = Json::parse(r#"{"policy": "galore", "rank": 16, "lr": 0.0001}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.policy, PolicyKind::Galore);
+        assert_eq!(cfg.rank, 16);
+        assert!((cfg.lr - 1e-4).abs() < 1e-9);
+        // Unknown keys rejected.
+        let bad = Json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(apply_json(&mut cfg, &bad).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Inter-domain communication: blocking priority queues and
+//! bandwidth-throttled link threads that emulate the two PCIe directions.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A parameter (or subspace) identified by its flat index in the
+/// `ParamStore`, plus the LSP kind when the payload is a subspace gradient.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ParamKey {
+    pub param_index: usize,
+    /// `Some(kind)` when the payload lives in the d x d subspace.
+    pub kind: Option<String>,
+}
+
+/// Gradient heading CPU-ward (GPU -> CPU direction).
+#[derive(Debug, Clone)]
+pub struct OffloadMsg {
+    pub key: ParamKey,
+    pub data: Vec<f32>,
+    pub prio: i64,
+    /// Training step that produced this gradient (for logging).
+    pub step: u64,
+}
+
+/// Update delta heading GPU-ward (CPU -> GPU direction).
+#[derive(Debug, Clone)]
+pub struct DeltaMsg {
+    pub key: ParamKey,
+    pub delta: Vec<f32>,
+    pub prio: i64,
+    pub step: u64,
+}
+
+/// Blocking min-heap priority queue (lowest prio value served first; FIFO
+/// among equal priorities). `close()` unblocks all poppers with `None`.
+pub struct PrioQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    cond: Condvar,
+}
+
+struct QueueInner<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    closed: bool,
+}
+
+struct Entry<T> {
+    prio: i64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.prio == other.prio && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert for min-prio-first, FIFO ties.
+        other
+            .prio
+            .cmp(&self.prio)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Default for PrioQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> PrioQueue<T> {
+    pub fn new() -> Self {
+        PrioQueue {
+            inner: Mutex::new(QueueInner { heap: BinaryHeap::new(), seq: 0, closed: false }),
+            cond: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, prio: i64, item: T) {
+        let mut g = self.inner.lock().unwrap();
+        let seq = g.seq;
+        g.seq += 1;
+        g.heap.push(Entry { prio, seq, item });
+        drop(g);
+        self.cond.notify_one();
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(e) = g.heap.pop() {
+                return Some(e.item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cond.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().heap.pop().map(|e| e.item)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+}
+
+/// A bandwidth-throttled unidirectional link: a worker thread pops from the
+/// ingress queue, sleeps `bytes / bandwidth * time_scale`, then forwards to
+/// the egress queue.  Counts bytes and busy time for the breakdown report.
+pub struct Link {
+    pub name: &'static str,
+    pub bytes_per_s: f64,
+    pub time_scale: f64,
+    pub bytes_moved: Arc<AtomicU64>,
+    pub busy_ns: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Link {
+    /// Spawn a link moving `M` messages from `ingress` to `egress`.
+    /// `size_of` maps a message to its wire size in bytes.
+    pub fn spawn<M, F>(
+        name: &'static str,
+        bytes_per_s: f64,
+        time_scale: f64,
+        ingress: Arc<PrioQueue<M>>,
+        egress: Arc<PrioQueue<M>>,
+        size_of: F,
+        prio_of: fn(&M) -> i64,
+    ) -> Link
+    where
+        M: Send + 'static,
+        F: Fn(&M) -> usize + Send + 'static,
+    {
+        let bytes_moved = Arc::new(AtomicU64::new(0));
+        let busy_ns = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (bm, bn, st) = (bytes_moved.clone(), busy_ns.clone(), stop.clone());
+        let handle = std::thread::Builder::new()
+            .name(format!("link-{name}"))
+            .spawn(move || {
+                while let Some(msg) = ingress.pop() {
+                    if st.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let bytes = size_of(&msg);
+                    let secs = bytes as f64 / bytes_per_s * time_scale;
+                    let t0 = std::time::Instant::now();
+                    if secs > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(secs));
+                    }
+                    bm.fetch_add(bytes as u64, Ordering::Relaxed);
+                    bn.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let p = prio_of(&msg);
+                    egress.push(p, msg);
+                }
+            })
+            .expect("spawn link thread");
+        Link {
+            name,
+            bytes_per_s,
+            time_scale,
+            bytes_moved,
+            busy_ns,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prio_queue_orders_and_fifo_ties() {
+        let q: PrioQueue<&str> = PrioQueue::new();
+        q.push(5, "later");
+        q.push(1, "first");
+        q.push(5, "even-later");
+        q.push(-3, "now");
+        assert_eq!(q.pop(), Some("now"));
+        assert_eq!(q.pop(), Some("first"));
+        assert_eq!(q.pop(), Some("later"));
+        assert_eq!(q.pop(), Some("even-later"));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn prio_queue_blocking_across_threads() {
+        let q = Arc::new(PrioQueue::<u64>::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut sum = 0;
+            while let Some(x) = q2.pop() {
+                sum += x;
+            }
+            sum
+        });
+        for i in 1..=10 {
+            q.push(0, i);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), 55);
+    }
+
+    #[test]
+    fn link_throttles_and_counts() {
+        let ingress = Arc::new(PrioQueue::<Vec<u8>>::new());
+        let egress = Arc::new(PrioQueue::<Vec<u8>>::new());
+        // 1 MB/s: a 10 KB message should take ~10 ms.
+        let mut link = Link::spawn(
+            "test",
+            1e6,
+            1.0,
+            ingress.clone(),
+            egress.clone(),
+            |m: &Vec<u8>| m.len(),
+            |_| 0,
+        );
+        let t0 = std::time::Instant::now();
+        ingress.push(0, vec![0u8; 10_000]);
+        let got = egress.pop().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(got.len(), 10_000);
+        assert!(dt >= 0.009, "transfer too fast: {dt}");
+        assert_eq!(link.bytes_moved.load(Ordering::Relaxed), 10_000);
+        assert!(link.busy_secs() >= 0.009);
+        ingress.close();
+        link.stop();
+    }
+}

@@ -1,0 +1,104 @@
+//! Training metrics: loss curve, per-phase timing, throughput, comm volume.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::stats::Series;
+
+#[derive(Default)]
+pub struct Metrics {
+    /// (step, train loss).
+    pub loss: Vec<(u64, f32)>,
+    /// (step, eval loss).
+    pub eval_loss: Vec<(u64, f32)>,
+    /// (step, wall seconds since start).
+    pub wall: Vec<(u64, f64)>,
+    /// Named phase timings ("fwd", "bwd", "compress", "stall_e", ...).
+    pub phases: BTreeMap<&'static str, Series>,
+    pub steps: u64,
+}
+
+impl Metrics {
+    pub fn phase(&mut self, name: &'static str) -> &mut Series {
+        self.phases.entry(name).or_default()
+    }
+
+    pub fn record_loss(&mut self, step: u64, loss: f32, wall: f64) {
+        self.loss.push((step, loss));
+        self.wall.push((step, wall));
+        self.steps = self.steps.max(step + 1);
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.loss.last().map(|&(_, l)| l)
+    }
+
+    /// Rolling mean of the last `k` training losses.
+    pub fn rolling_loss(&self, k: usize) -> Option<f32> {
+        if self.loss.is_empty() {
+            return None;
+        }
+        let tail = &self.loss[self.loss.len().saturating_sub(k)..];
+        Some(tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn print_phase_breakdown(&self) {
+        println!("per-step phase breakdown (mean over {} steps):", self.steps);
+        let total: f64 = self.phases.values().map(|s| s.mean()).sum();
+        for (name, s) in &self.phases {
+            println!(
+                "  {:10} {:>10}  ({:>5.1}%)  n={}",
+                name,
+                crate::util::human_secs(s.mean()),
+                if total > 0.0 { s.mean() / total * 100.0 } else { 0.0 },
+                s.n()
+            );
+        }
+    }
+
+    /// Write `step,wall_secs,train_loss` CSV (plus eval rows) for plotting.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "kind,step,wall_secs,loss")?;
+        for (i, &(step, loss)) in self.loss.iter().enumerate() {
+            let wall = self.wall.get(i).map(|&(_, w)| w).unwrap_or(0.0);
+            writeln!(f, "train,{step},{wall:.4},{loss:.6}")?;
+        }
+        for &(step, loss) in &self.eval_loss {
+            writeln!(f, "eval,{step},,{loss:.6}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rolling_loss_and_csv() {
+        let mut m = Metrics::default();
+        for s in 0..10u64 {
+            m.record_loss(s, 10.0 - s as f32, s as f64 * 0.1);
+        }
+        m.eval_loss.push((9, 1.5));
+        assert_eq!(m.last_loss(), Some(1.0));
+        assert!((m.rolling_loss(2).unwrap() - 1.5).abs() < 1e-6);
+        m.phase("fwd").push(0.01);
+        m.phase("fwd").push(0.03);
+        assert!((m.phases["fwd"].mean() - 0.02).abs() < 1e-9);
+
+        let dir = std::env::temp_dir().join("lsp_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("curve.csv");
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("kind,step,wall_secs,loss"));
+        assert!(text.contains("eval,9,,1.5"));
+        assert_eq!(text.lines().count(), 12);
+    }
+}

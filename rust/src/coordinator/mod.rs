@@ -1,0 +1,31 @@
+//! The LSP-Offload coordinator — the paper's system contribution, running
+//! for real over the PJRT artifacts.
+//!
+//! Thread topology (PJRT's client is `Rc`-based, so all "GPU" work stays on
+//! the driver thread):
+//!
+//! ```text
+//!   driver thread (GPU domain: PJRT fwd/bwd/compress/apply, data, control)
+//!        | OffloadMsg (grad / subspace grad)        ^ DeltaMsg
+//!        v                                          |
+//!   [D2H link thread] --> [CPU update thread] --> [H2D link thread]
+//!     token-bucket          fused Adam over         token-bucket
+//!     bandwidth             per-key AdamState       bandwidth
+//! ```
+//!
+//! Every queue is a priority queue, so the paper's FCFS -> LCFS transition
+//! (Alg. 3) is a matter of the priorities the scheduler assigns.  The link
+//! threads sleep `bytes / bandwidth * time_scale`, emulating the PCIe
+//! budget of the simulated testbed on top of real compute.
+
+pub mod comm;
+pub mod metrics;
+pub mod policy;
+pub mod projector_mgr;
+pub mod trainer;
+pub mod worker;
+
+pub use comm::{DeltaMsg, Link, OffloadMsg, PrioQueue};
+pub use metrics::Metrics;
+pub use policy::{Policy, PolicyKind};
+pub use trainer::{TrainConfig, Trainer, TrainReport};

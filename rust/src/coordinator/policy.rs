@@ -1,0 +1,67 @@
+//! Update policies the trainer can run.  `Lsp` is the paper's system; the
+//! rest are the evaluation baselines.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Everything "on device": host-side Adam applied immediately, no
+    /// throttled links (the no-offload upper bound of Fig. 6).
+    Native,
+    /// Zero-Offload (Alg. 2): full gradients cross the link, fused CPU Adam,
+    /// deltas return, barrier at end of step.
+    Zero,
+    /// LSP-Offload (Alg. 1 + Alg. 3): learned sparse projectors compress
+    /// gradients on the GPU, layer-wise pipelined offload/update/upload with
+    /// per-layer events gating the next iteration's forward.
+    Lsp,
+    /// LoRA adapters (PEFT baseline): rank-r A/B per matrix, trained
+    /// "on device", base weights frozen.
+    Lora,
+    /// GaLore (PEFT baseline): periodic SVD projector, rank-r subspace Adam
+    /// "on device".
+    Galore,
+}
+
+impl PolicyKind {
+    pub fn by_name(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(PolicyKind::Native),
+            "zero" | "zero-offload" => Some(PolicyKind::Zero),
+            "lsp" | "lsp-offload" => Some(PolicyKind::Lsp),
+            "lora" => Some(PolicyKind::Lora),
+            "galore" => Some(PolicyKind::Galore),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Native => "native",
+            PolicyKind::Zero => "zero",
+            PolicyKind::Lsp => "lsp",
+            PolicyKind::Lora => "lora",
+            PolicyKind::Galore => "galore",
+        }
+    }
+
+    /// Does this policy ship work through the throttled links?
+    pub fn offloads(&self) -> bool {
+        matches!(self, PolicyKind::Zero | PolicyKind::Lsp)
+    }
+}
+
+/// Re-export for trainer convenience.
+pub use PolicyKind as Policy;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(PolicyKind::by_name("LSP"), Some(PolicyKind::Lsp));
+        assert_eq!(PolicyKind::by_name("zero-offload"), Some(PolicyKind::Zero));
+        assert_eq!(PolicyKind::by_name("bogus"), None);
+        assert!(PolicyKind::Zero.offloads());
+        assert!(!PolicyKind::Lora.offloads());
+    }
+}

@@ -1,0 +1,194 @@
+//! Projector manager — Alg. 1's `MAYBEUPDATE` plus the device-buffer
+//! bookkeeping for the (d, r)-sparse projectors.
+//!
+//! Per (layer, kind) it owns the host `ProjectorPair`, the four device
+//! buffers the compress kernel needs (gather layout) and the four the apply
+//! kernel needs (row layout).  Every `check_freq` steps the trainer hands it
+//! the current gradient; if the relative estimation bias exceeds `alpha` it
+//! re-learns the projector values on that gradient (via the `learn_<kind>`
+//! artifact, i.e. Eq. 3 optimized on the GPU domain) and projects the
+//! CPU-resident subspace Adam moments onto the new subspace (Alg. 1 lines
+//! 8-9, via `state_proj_<kind>`).
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::coordinator::comm::ParamKey;
+use crate::coordinator::worker::SharedStates;
+use crate::model::manifest::KindMeta;
+use crate::runtime::Engine;
+use crate::sparse::ProjectorPair;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct ProjState {
+    pub kind: String,
+    pub meta: KindMeta,
+    pub pair: ProjectorPair,
+    /// Gather-layout buffers for compress: p_gidx, p_gval, q_gidx, q_gval.
+    pub gather_bufs: [PjRtBuffer; 4],
+    /// Row-layout buffers for apply: p_idx, p_val, q_idx, q_val.
+    pub row_bufs: [PjRtBuffer; 4],
+    /// Subspace refreshes so far (tau in Table 2).
+    pub tau: u64,
+    pub last_bias: f32,
+    /// Count of learn-entry invocations (for overhead accounting).
+    pub learn_steps: u64,
+}
+
+impl ProjState {
+    pub fn init(eng: &Engine, kind: &str, meta: &KindMeta, rng: &mut Rng) -> Result<ProjState> {
+        let pair = ProjectorPair::init(meta.m, meta.n, meta.d, meta.r, rng);
+        let (gather_bufs, row_bufs) = upload_projector(eng, meta, &pair)?;
+        Ok(ProjState {
+            kind: kind.to_string(),
+            meta: meta.clone(),
+            pair,
+            gather_bufs,
+            row_bufs,
+            tau: 0,
+            last_bias: f32::INFINITY,
+            learn_steps: 0,
+        })
+    }
+
+    /// `MAYBEUPDATE` (Alg. 1): check bias on `g`; if above `alpha`, re-learn
+    /// values on `g` (up to `budget` Adam steps or until below `alpha`) and
+    /// project the subspace optimizer state.  Returns the (possibly new)
+    /// relative bias.
+    #[allow(clippy::too_many_arguments)]
+    pub fn maybe_update(
+        &mut self,
+        eng: &Engine,
+        g: &Tensor,
+        alpha: f32,
+        budget: u32,
+        learn_lr: f32,
+        states: &SharedStates,
+        state_key: &ParamKey,
+    ) -> Result<f32> {
+        let (rel, _, _) = self.pair.bias(g)?;
+        self.last_bias = rel;
+        if rel <= alpha {
+            return Ok(rel);
+        }
+        let old_pair = self.pair.clone();
+        let rel = self.learn(eng, g, alpha, budget, learn_lr)?;
+        self.tau += 1;
+        self.last_bias = rel;
+        // Re-upload both layouts.
+        let (gb, rb) = upload_projector(eng, &self.meta, &self.pair)?;
+        self.gather_bufs = gb;
+        self.row_bufs = rb;
+        // Project CPU-resident subspace Adam state onto the new subspace.
+        self.project_state(eng, &old_pair, states, state_key)?;
+        Ok(rel)
+    }
+
+    /// Run the `learn_<kind>` artifact until bias <= alpha or budget is out.
+    /// The calibration gradient (the big operand) is uploaded ONCE; per-step
+    /// state rides in device buffers via `call_b`.
+    fn learn(
+        &mut self,
+        eng: &Engine,
+        g: &Tensor,
+        alpha: f32,
+        budget: u32,
+        learn_lr: f32,
+    ) -> Result<f32> {
+        let m = &self.meta;
+        let e = eng.exec(&format!("learn_{}", self.kind))?;
+        let g_buf = eng.upload(g)?;
+        let p_idx = eng.upload_i32(&[m.m, m.r], &self.pair.p.idx)?;
+        let q_idx = eng.upload_i32(&[m.n, m.r], &self.pair.q.idx)?;
+        let lr_buf = eng.upload_f32(&[1, 1], &[learn_lr])?;
+        let mut p_val = self.pair.p.val.clone();
+        let mut q_val = self.pair.q.val.clone();
+        let mut mp = vec![0f32; p_val.len()];
+        let mut vp = vec![0f32; p_val.len()];
+        let mut mq = vec![0f32; q_val.len()];
+        let mut vq = vec![0f32; q_val.len()];
+        let mut rel = self.last_bias;
+        for t in 1..=budget {
+            let t_buf = eng.upload_f32(&[1, 1], &[t as f32])?;
+            let pv = eng.upload_f32(&[m.m, m.r], &p_val)?;
+            let qv = eng.upload_f32(&[m.n, m.r], &q_val)?;
+            let mpb = eng.upload_f32(&[m.m, m.r], &mp)?;
+            let vpb = eng.upload_f32(&[m.m, m.r], &vp)?;
+            let mqb = eng.upload_f32(&[m.n, m.r], &mq)?;
+            let vqb = eng.upload_f32(&[m.n, m.r], &vq)?;
+            let out = e
+                .call_b(&[&g_buf, &p_idx, &pv, &q_idx, &qv, &mpb, &vpb, &mqb, &vqb,
+                          &t_buf, &lr_buf])?
+                .host()?;
+            p_val = eng.to_vec_f32(&out[0])?;
+            q_val = eng.to_vec_f32(&out[1])?;
+            mp = eng.to_vec_f32(&out[2])?;
+            vp = eng.to_vec_f32(&out[3])?;
+            mq = eng.to_vec_f32(&out[4])?;
+            vq = eng.to_vec_f32(&out[5])?;
+            rel = eng.to_vec_f32(&out[6])?[0];
+            self.learn_steps += 1;
+            if rel <= alpha {
+                break;
+            }
+        }
+        self.pair.p.val = p_val;
+        self.pair.q.val = q_val;
+        Ok(rel)
+    }
+
+    /// `M' = (P_new^T P_old) M (Q_old^T Q_new)`, `V'` with squares, via the
+    /// `state_proj_<kind>` artifact against the shared CPU state map.
+    fn project_state(
+        &self,
+        eng: &Engine,
+        old_pair: &ProjectorPair,
+        states: &SharedStates,
+        key: &ParamKey,
+    ) -> Result<()> {
+        let mut guard = states.lock().unwrap();
+        let Some(state) = guard.get_mut(key) else {
+            return Ok(()); // no moments accumulated yet
+        };
+        let m = &self.meta;
+        let e = eng.exec(&format!("state_proj_{}", self.kind))?;
+        let out = e.call(&[
+            eng.lit_f32(&[m.d, m.d], &state.m)?,
+            eng.lit_f32(&[m.d, m.d], &state.v)?,
+            eng.lit_i32(&[m.m, m.r], &old_pair.p.idx)?,
+            eng.lit_f32(&[m.m, m.r], &old_pair.p.val)?,
+            eng.lit_i32(&[m.n, m.r], &old_pair.q.idx)?,
+            eng.lit_f32(&[m.n, m.r], &old_pair.q.val)?,
+            eng.lit_i32(&[m.m, m.r], &self.pair.p.idx)?,
+            eng.lit_f32(&[m.m, m.r], &self.pair.p.val)?,
+            eng.lit_i32(&[m.n, m.r], &self.pair.q.idx)?,
+            eng.lit_f32(&[m.n, m.r], &self.pair.q.val)?,
+        ])?;
+        state.m = eng.to_vec_f32(&out[0])?;
+        state.v = eng.to_vec_f32(&out[1])?;
+        Ok(())
+    }
+}
+
+fn upload_projector(
+    eng: &Engine,
+    meta: &KindMeta,
+    pair: &ProjectorPair,
+) -> Result<([PjRtBuffer; 4], [PjRtBuffer; 4])> {
+    let (pgi, pgv) = pair.p.to_gather()?;
+    let (qgi, qgv) = pair.q.to_gather()?;
+    let gather = [
+        eng.upload_i32(&[meta.d, meta.lp], &pgi)?,
+        eng.upload_f32(&[meta.d, meta.lp], &pgv)?,
+        eng.upload_i32(&[meta.d, meta.lq], &qgi)?,
+        eng.upload_f32(&[meta.d, meta.lq], &qgv)?,
+    ];
+    let row = [
+        eng.upload_i32(&[meta.m, meta.r], &pair.p.idx)?,
+        eng.upload_f32(&[meta.m, meta.r], &pair.p.val)?,
+        eng.upload_i32(&[meta.n, meta.r], &pair.q.idx)?,
+        eng.upload_f32(&[meta.n, meta.r], &pair.q.val)?,
+    ];
+    Ok((gather, row))
+}

@@ -1,0 +1,130 @@
+//! CPU-side update server: the offload target.
+//!
+//! One thread owning all CPU-resident Adam state (the 42 GB that does not
+//! fit on the paper's GPUs).  Pops gradients off the D2H egress queue in
+//! priority order, runs the fused Adam (rust-native — the analogue of
+//! Zero-Offload's fused SIMD CPU Adam), and pushes the unscaled delta into
+//! the H2D ingress queue.  An optional `compute_scale` sleep emulates a
+//! slower CPU than the host machine (for schedule studies).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::comm::{DeltaMsg, OffloadMsg, ParamKey, PrioQueue};
+use crate::optim::AdamState;
+
+/// Adam states shared with the projector manager (which must re-project the
+/// subspace moments on a subspace switch — Alg. 1 lines 8-9).
+pub type SharedStates = Arc<Mutex<HashMap<ParamKey, AdamState>>>;
+
+pub struct CpuUpdater {
+    pub states: SharedStates,
+    pub busy_ns: Arc<AtomicU64>,
+    pub updates_done: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CpuUpdater {
+    pub fn spawn(
+        ingress: Arc<PrioQueue<OffloadMsg>>,
+        egress: Arc<PrioQueue<DeltaMsg>>,
+        compute_scale: f64,
+    ) -> CpuUpdater {
+        let states: SharedStates = Arc::new(Mutex::new(HashMap::new()));
+        let busy_ns = Arc::new(AtomicU64::new(0));
+        let updates_done = Arc::new(AtomicU64::new(0));
+        let (st, bn, ud) = (states.clone(), busy_ns.clone(), updates_done.clone());
+        let handle = std::thread::Builder::new()
+            .name("cpu-updater".into())
+            .spawn(move || {
+                while let Some(msg) = ingress.pop() {
+                    let t0 = std::time::Instant::now();
+                    let mut delta = vec![0f32; msg.data.len()];
+                    {
+                        let mut states = st.lock().unwrap();
+                        let state = states
+                            .entry(msg.key.clone())
+                            .or_insert_with(|| AdamState::new(msg.data.len()));
+                        debug_assert_eq!(state.m.len(), msg.data.len());
+                        state.fused_step(&msg.data, &mut delta);
+                    }
+                    let elapsed = t0.elapsed();
+                    if compute_scale > 1.0 {
+                        std::thread::sleep(elapsed.mul_f64(compute_scale - 1.0));
+                    }
+                    bn.fetch_add(
+                        (elapsed.as_nanos() as f64 * compute_scale) as u64,
+                        Ordering::Relaxed,
+                    );
+                    ud.fetch_add(1, Ordering::Relaxed);
+                    egress.push(
+                        msg.prio,
+                        DeltaMsg { key: msg.key, delta, prio: msg.prio, step: msg.step },
+                    );
+                }
+            })
+            .expect("spawn cpu-updater");
+        CpuUpdater { states, busy_ns, updates_done, handle: Some(handle) }
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn updater_runs_adam_and_forwards() {
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::new());
+        let mut upd = CpuUpdater::spawn(ingress.clone(), egress.clone(), 1.0);
+
+        let key = ParamKey { param_index: 3, kind: None };
+        ingress.push(0, OffloadMsg { key: key.clone(), data: vec![0.5, -0.5], prio: 0, step: 1 });
+        let d1 = egress.pop().unwrap();
+        assert_eq!(d1.key, key);
+        // First Adam step = sign(g).
+        assert!((d1.delta[0] - 1.0).abs() < 1e-4);
+        assert!((d1.delta[1] + 1.0).abs() < 1e-4);
+
+        // Second step reuses the same state (step count advances).
+        ingress.push(0, OffloadMsg { key: key.clone(), data: vec![0.5, -0.5], prio: 0, step: 2 });
+        let d2 = egress.pop().unwrap();
+        assert!(d2.delta[0] > 0.9, "second step keeps direction");
+        assert_eq!(upd.updates_done.load(Ordering::Relaxed), 2);
+        assert_eq!(upd.states.lock().unwrap().get(&key).unwrap().step, 2);
+
+        ingress.close();
+        upd.join();
+    }
+
+    #[test]
+    fn distinct_keys_have_distinct_state() {
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::new());
+        let mut upd = CpuUpdater::spawn(ingress.clone(), egress.clone(), 1.0);
+        let k1 = ParamKey { param_index: 0, kind: None };
+        let k2 = ParamKey { param_index: 0, kind: Some("qkv".into()) };
+        ingress.push(0, OffloadMsg { key: k1.clone(), data: vec![1.0], prio: 0, step: 1 });
+        ingress.push(0, OffloadMsg { key: k2.clone(), data: vec![1.0, 2.0], prio: 0, step: 1 });
+        let _ = egress.pop().unwrap();
+        let _ = egress.pop().unwrap();
+        let states = upd.states.lock().unwrap();
+        assert_eq!(states.len(), 2);
+        assert_eq!(states[&k1].m.len(), 1);
+        assert_eq!(states[&k2].m.len(), 2);
+        drop(states);
+        ingress.close();
+        upd.join();
+    }
+}

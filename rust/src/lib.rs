@@ -1,0 +1,39 @@
+//! # LSP-Offload
+//!
+//! Reproduction of *"Practical Offloading for Fine-Tuning LLM on Commodity
+//! GPU via Learned Sparse Projectors"* (Chen et al., AAAI 2025) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the offload coordinator: the paper's layer-wise
+//!   schedule (Alg. 3), throttled full-duplex PCIe links, the CPU-side fused
+//!   Adam, the projector manager (Alg. 1 `MAYBEUPDATE`), the Zero-Offload /
+//!   LoRA / GaLore baselines, a discrete-event simulator of the paper's
+//!   hardware testbeds, and the analytic models of the Motivation section.
+//! * **L2 (`python/compile`, build-time only)** — the GPT-style model
+//!   lowered per-layer to HLO text artifacts.
+//! * **L1 (`python/compile/kernels`)** — Pallas kernels for compress
+//!   (`PᵀGQ`), decompress-apply, and the fused Adam update.
+//!
+//! Python never runs on the training path: `make artifacts` AOT-compiles
+//! everything; the binary loads `artifacts/<preset>/` via PJRT (`runtime`).
+//!
+//! The offline build environment provides only the `xla` and `anyhow`
+//! crates, so `util` carries the substrates a richer environment would pull
+//! from crates.io: a JSON parser/printer, a deterministic RNG, a micro
+//! benchmarking harness, and a property-testing helper.
+
+pub mod analyze;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

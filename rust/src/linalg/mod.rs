@@ -1,0 +1,285 @@
+//! Numerical linear algebra for the baselines and analyses:
+//! modified Gram-Schmidt QR, randomized subspace-iteration SVD (GaLore's
+//! projector), and an effective-rank estimator (Fig. 4 study).
+
+use anyhow::Result;
+
+use crate::tensor::ops::{matmul, matmul_nt, matmul_tn};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Thin QR via modified Gram-Schmidt *with re-orthogonalization* ("twice is
+/// enough"), robust to rank-deficient input: columns whose residual norm
+/// falls below a relative tolerance are zeroed rather than normalized into
+/// noise.  Returns (Q [m, k], R [k, k]) with A = Q R and Q^T Q = I on the
+/// non-zero columns.
+pub fn qr(a: &Tensor) -> (Tensor, Tensor) {
+    let (m, k) = (a.rows(), a.cols());
+    let mut q = a.clone();
+    let mut r = Tensor::zeros(&[k, k]);
+    let tol = 1e-6f32 * a.frob_norm().max(1e-30);
+    for j in 0..k {
+        for _pass in 0..2 {
+            for l in 0..j {
+                let mut proj = 0.0f32;
+                for i in 0..m {
+                    proj += q.at2(i, l) * q.at2(i, j);
+                }
+                if proj != 0.0 {
+                    let rv = r.at2(l, j) + proj;
+                    r.set2(l, j, rv);
+                    for i in 0..m {
+                        let v = q.at2(i, j) - proj * q.at2(i, l);
+                        q.set2(i, j, v);
+                    }
+                }
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..m {
+            norm += (q.at2(i, j) as f64).powi(2);
+        }
+        let norm = norm.sqrt() as f32;
+        if norm <= tol {
+            // Rank-deficient direction: zero it out entirely.
+            r.set2(j, j, 0.0);
+            for i in 0..m {
+                q.set2(i, j, 0.0);
+            }
+        } else {
+            r.set2(j, j, norm);
+            let inv = 1.0 / norm;
+            for i in 0..m {
+                q.set2(i, j, q.at2(i, j) * inv);
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Result of a truncated SVD: A ~ U diag(S) V^T.
+pub struct Svd {
+    pub u: Tensor, // [m, k]
+    pub s: Vec<f32>,
+    pub v: Tensor, // [n, k]
+}
+
+/// Randomized subspace-iteration SVD (Halko et al.) — how GaLore computes
+/// its rank-k projector `P = [u_1..u_k]` from a gradient matrix.
+pub fn randomized_svd(a: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> Result<Svd> {
+    let (m, n) = (a.rows(), a.cols());
+    let k = k.min(m).min(n);
+    let over = (k + 4).min(n.min(m)); // small oversampling
+    let omega = Tensor::randn(&[n, over], 1.0, rng);
+    let mut y = matmul(a, &omega)?; // [m, over]
+    for _ in 0..iters {
+        let (qy, _) = qr(&y);
+        let z = matmul_tn(a, &qy)?; // [n, over] = A^T Q
+        let (qz, _) = qr(&z);
+        y = matmul(a, &qz)?;
+    }
+    let (q, _) = qr(&y); // [m, over]
+    let b = matmul_tn(&q, a)?; // [over, n]
+    // SVD of the small matrix B via eigen-decomposition of B B^T (Jacobi).
+    let bbt = matmul_nt(&b, &b)?; // [over, over]
+    let (evals, evecs) = sym_eig_jacobi(&bbt, 100);
+    // Sort descending.
+    let mut order: Vec<usize> = (0..over).collect();
+    order.sort_by(|&i, &j| evals[j].total_cmp(&evals[i]));
+    let mut u = Tensor::zeros(&[m, k]);
+    let mut v = Tensor::zeros(&[n, k]);
+    let mut s = Vec::with_capacity(k);
+    for (col, &oi) in order.iter().take(k).enumerate() {
+        let sigma = evals[oi].max(0.0).sqrt();
+        s.push(sigma);
+        // u_col = Q * evec
+        for i in 0..m {
+            let mut acc = 0.0f32;
+            for l in 0..over {
+                acc += q.at2(i, l) * evecs.at2(l, oi);
+            }
+            u.set2(i, col, acc);
+        }
+        // v_col = B^T evec / sigma
+        if sigma > 1e-12 {
+            for jn in 0..n {
+                let mut acc = 0.0f32;
+                for l in 0..over {
+                    acc += b.at2(l, jn) * evecs.at2(l, oi);
+                }
+                v.set2(jn, col, acc / sigma);
+            }
+        }
+    }
+    Ok(Svd { u, s, v })
+}
+
+/// Cyclic Jacobi eigen-decomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors-as-columns).
+pub fn sym_eig_jacobi(a: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut m = a.clone();
+    let mut v = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        v.set2(i, i, 1.0);
+    }
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += (m.at2(p, q) as f64).powi(2);
+            }
+        }
+        if off.sqrt() < 1e-10 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at2(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m.at2(p, p);
+                let aqq = m.at2(q, q);
+                let theta = 0.5 * (aqq - app) as f64 / apq as f64;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                let (c, s) = (c as f32, s as f32);
+                for i in 0..n {
+                    let mip = m.at2(i, p);
+                    let miq = m.at2(i, q);
+                    m.set2(i, p, c * mip - s * miq);
+                    m.set2(i, q, s * mip + c * miq);
+                }
+                for i in 0..n {
+                    let mpi = m.at2(p, i);
+                    let mqi = m.at2(q, i);
+                    m.set2(p, i, c * mpi - s * mqi);
+                    m.set2(q, i, s * mpi + c * mqi);
+                }
+                for i in 0..n {
+                    let vip = v.at2(i, p);
+                    let viq = v.at2(i, q);
+                    v.set2(i, p, c * vip - s * viq);
+                    v.set2(i, q, s * vip + c * viq);
+                }
+            }
+        }
+    }
+    let evals = (0..n).map(|i| m.at2(i, i)).collect();
+    (evals, v)
+}
+
+/// Effective rank (participation ratio of singular values):
+/// `(sum s_i)^2 / sum s_i^2`.  Used for the Fig. 4 optimization-space study.
+pub fn effective_rank(a: &Tensor, probe: usize, rng: &mut Rng) -> Result<f64> {
+    let svd = randomized_svd(a, probe.min(a.rows()).min(a.cols()), 2, rng)?;
+    let sum: f64 = svd.s.iter().map(|&x| x as f64).sum();
+    let sq: f64 = svd.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if sq <= 0.0 {
+        return Ok(0.0);
+    }
+    Ok(sum * sum / sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+    use crate::util::prop::check;
+
+    #[test]
+    fn qr_orthonormal_and_reconstructs() {
+        let mut rng = Rng::new(11);
+        let a = Tensor::randn(&[20, 6], 1.0, &mut rng);
+        let (q, r) = qr(&a);
+        // Q^T Q = I
+        let qtq = matmul_tn(&q, &q).unwrap();
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.at2(i, j) - want).abs() < 1e-4, "qtq[{i}][{j}]");
+            }
+        }
+        // QR = A
+        let back = matmul(&q, &r).unwrap();
+        assert!(back.allclose(&a, 1e-4));
+    }
+
+    #[test]
+    fn jacobi_recovers_diagonal() {
+        let mut d = Tensor::zeros(&[3, 3]);
+        d.set2(0, 0, 3.0);
+        d.set2(1, 1, -1.0);
+        d.set2(2, 2, 0.5);
+        let (mut evals, _) = sym_eig_jacobi(&d, 10);
+        evals.sort_by(|a, b| b.total_cmp(a));
+        assert!((evals[0] - 3.0).abs() < 1e-6);
+        assert!((evals[1] - 0.5).abs() < 1e-6);
+        assert!((evals[2] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn svd_recovers_low_rank_matrix() {
+        let mut rng = Rng::new(2);
+        // Build an exactly rank-3 matrix.
+        let u = Tensor::randn(&[24, 3], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 18], 1.0, &mut rng);
+        let a = matmul(&u, &v).unwrap();
+        let svd = randomized_svd(&a, 3, 3, &mut rng).unwrap();
+        // Reconstruction error should be tiny.
+        let mut recon = Tensor::zeros(&[24, 18]);
+        for col in 0..3 {
+            for i in 0..24 {
+                for j in 0..18 {
+                    let val = recon.at2(i, j)
+                        + svd.s[col] * svd.u.at2(i, col) * svd.v.at2(j, col);
+                    recon.set2(i, j, val);
+                }
+            }
+        }
+        let rel = crate::tensor::ops::sub(&recon, &a).frob_norm() / a.frob_norm();
+        assert!(rel < 1e-3, "rel recon err {rel}");
+    }
+
+    #[test]
+    fn svd_singular_values_sorted_nonneg() {
+        check(
+            "svd-sorted",
+            8,
+            |r| {
+                let m = 6 + r.below(20);
+                let n = 6 + r.below(20);
+                Tensor::randn(&[m, n], 1.0, r)
+            },
+            |a| {
+                let mut rng = Rng::new(99);
+                let svd = randomized_svd(a, 4, 2, &mut rng).map_err(|e| e.to_string())?;
+                for w in svd.s.windows(2) {
+                    if w[1] > w[0] + 1e-4 {
+                        return Err(format!("unsorted {:?}", svd.s));
+                    }
+                }
+                if svd.s.iter().any(|&s| s < 0.0) {
+                    return Err("negative sv".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn effective_rank_of_low_rank() {
+        let mut rng = Rng::new(4);
+        let u = Tensor::randn(&[30, 2], 1.0, &mut rng);
+        let v = Tensor::randn(&[2, 30], 1.0, &mut rng);
+        let a = matmul(&u, &v).unwrap();
+        let er = effective_rank(&a, 8, &mut rng).unwrap();
+        assert!(er < 2.5, "effective rank {er} for rank-2 matrix");
+        let full = Tensor::randn(&[30, 30], 1.0, &mut rng);
+        let er_full = effective_rank(&full, 16, &mut rng).unwrap();
+        assert!(er_full > er, "full {er_full} vs low {er}");
+    }
+}

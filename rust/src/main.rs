@@ -1,0 +1,146 @@
+//! `lsp-offload` — launcher CLI.
+//!
+//! ```text
+//! lsp-offload analyze   [--profile workstation|laptop]
+//!     Tables 1/5, Table 2, the Observation bound, Eq.1 vs Eq.4.
+//! lsp-offload simulate  [--schedule all|zero|lsp-layerwise|...]
+//!                       [--profile ...] [--model llama7b|gpt2-1.3b]
+//!                       [--tokens N] [--d-sub N] [--iters N]
+//!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a).
+//! lsp-offload train     [--preset tiny|small|mid] [--policy lsp|zero|...]
+//!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
+//!     Real training over the PJRT artifacts with throttled links.
+//! lsp-offload bias      [--preset tiny|small] [--calib N] [--val N]
+//!     Estimation-bias study: learned sparse vs random vs GaLore SVD
+//!     (Figs 7b/9).
+//! ```
+
+use anyhow::{bail, Context, Result};
+use lsp_offload::analyze;
+use lsp_offload::config::{train_config_from, CliArgs};
+use lsp_offload::coordinator::trainer::Trainer;
+use lsp_offload::model::manifest::find_artifacts;
+use lsp_offload::model::memory::PaperModel;
+use lsp_offload::runtime::Engine;
+use lsp_offload::sim::{build_schedule, HardwareProfile, ScheduleKind, Workload};
+
+fn main() -> Result<()> {
+    let args = CliArgs::parse(std::env::args().skip(1))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "analyze" => cmd_analyze(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "bias" => cmd_bias(&args),
+        "help" | _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "lsp-offload: LSP-Offload (AAAI'25) reproduction.
+subcommands: analyze | simulate | train | bias   (see module docs)";
+
+fn profile(args: &CliArgs) -> Result<HardwareProfile> {
+    let name = args.get("profile").unwrap_or("workstation");
+    HardwareProfile::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown profile {name:?}"))
+}
+
+fn paper_model(args: &CliArgs) -> Result<PaperModel> {
+    Ok(match args.get("model").unwrap_or("llama7b") {
+        "llama7b" | "llama-7b" => PaperModel::Llama7B,
+        "gpt2-1.3b" | "gpt2_1_3b" => PaperModel::Gpt2_1_3B,
+        "gpt2-774m" => PaperModel::Gpt2_774M,
+        "llama3b" | "llama-3b" => PaperModel::Llama3B,
+        "deepseek-1.3b" => PaperModel::DeepseekCoder1_3B,
+        "deepseek-6.7b" => PaperModel::DeepseekCoder6_7B,
+        other => bail!("unknown model {other:?}"),
+    })
+}
+
+fn workload(args: &CliArgs) -> Result<(HardwareProfile, Workload)> {
+    let hw = profile(args)?;
+    let model = paper_model(args)?;
+    let tokens = args.get_u64("tokens")?.unwrap_or(2048);
+    let d_sub = args.get_u64("d-sub")?.unwrap_or(model.hidden() / 2) as usize;
+    Ok((hw, Workload::paper(model, tokens, d_sub)))
+}
+
+fn cmd_analyze(args: &CliArgs) -> Result<()> {
+    let hw = profile(args)?;
+    let model = paper_model(args)?;
+    let tokens = args.get_u64("tokens")?.unwrap_or(2048);
+    let table = analyze::ConfigTable::build(model, hw.clone(), tokens);
+    table.print();
+    println!();
+    analyze::print_table2(
+        model.hidden(),
+        model.hidden(),
+        args.get_u64("rank")?.unwrap_or(512),
+        args.get_u64("d-sub")?.unwrap_or(model.hidden() / 2),
+        args.get_u64("r")?.unwrap_or(4),
+        args.get_u64("tau")?.unwrap_or(1),
+    );
+    println!();
+    let (hw, w) = workload(args)?;
+    analyze::print_critical_paths(&hw, &w);
+    Ok(())
+}
+
+fn cmd_simulate(args: &CliArgs) -> Result<()> {
+    let (hw, w) = workload(args)?;
+    let iters = args.get_u64("iters")?.unwrap_or(4) as usize;
+    let which = args.get("schedule").unwrap_or("all");
+    println!(
+        "simulating {} on {} (tokens={}, d={}, {} iters)",
+        w.name, hw.name, w.tokens, w.d_sub, iters
+    );
+    let kinds: Vec<ScheduleKind> = if which == "all" {
+        ScheduleKind::ALL.to_vec()
+    } else {
+        vec![ScheduleKind::by_name(which)
+            .ok_or_else(|| anyhow::anyhow!("unknown schedule {which:?}"))?]
+    };
+    for kind in kinds {
+        let rep = build_schedule(kind, &hw, &w, iters)?;
+        rep.print_row();
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &CliArgs) -> Result<()> {
+    let preset = args.get("preset").unwrap_or("tiny");
+    let dir = find_artifacts(args.get("artifacts"), preset)?;
+    println!("loading artifacts from {} ...", dir.display());
+    let eng = Engine::load(&dir).context("loading artifacts (run `make artifacts`)")?;
+    let cfg = train_config_from(args)?;
+    println!(
+        "training preset={} policy={} steps={} bw={:.3} GB/s lcfs={}",
+        preset,
+        cfg.policy.name(),
+        cfg.steps,
+        cfg.bw_bytes_per_s / 1e9,
+        cfg.lcfs
+    );
+    let mut tr = Trainer::new(&eng, cfg)?;
+    let report = tr.train()?;
+    report.print();
+    tr.metrics.print_phase_breakdown();
+    if let Some(csv) = args.get("csv") {
+        tr.metrics.write_csv(std::path::Path::new(csv))?;
+        println!("wrote loss curve to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_bias(args: &CliArgs) -> Result<()> {
+    let preset = args.get("preset").unwrap_or("tiny");
+    let dir = find_artifacts(args.get("artifacts"), preset)?;
+    let eng = Engine::load(&dir)?;
+    let calib = args.get_u64("calib")?.unwrap_or(4) as usize;
+    let val = args.get_u64("val")?.unwrap_or(4) as usize;
+    let report = analyze::bias_study::run(&eng, calib, val, args.get_u64("seed")?.unwrap_or(7))?;
+    report.print();
+    Ok(())
+}

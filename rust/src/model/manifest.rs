@@ -1,0 +1,259 @@
+//! Parse `artifacts/<preset>/manifest.json`.
+//!
+//! The manifest is the contract between the build-time python compiler and
+//! the runtime rust coordinator: model dimensions, per-kind LSP subspace
+//! metadata, the canonical block-parameter list, and for every HLO entry the
+//! argument order / dtypes / shapes plus whether its root is a tuple.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub n_layer: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub r: usize,
+    pub d_frac: f64,
+    pub n_params: usize,
+}
+
+/// Per weight-kind LSP metadata ("qkv", "attn_o", "fc", "proj").
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindMeta {
+    pub m: usize,
+    pub n: usize,
+    pub d: usize,
+    pub r: usize,
+    pub lp: usize,
+    pub lq: usize,
+    /// Index into the canonical 12-entry block parameter list.
+    pub param_index: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub tuple_out: bool,
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub config: ModelCfg,
+    pub kinds: BTreeMap<String, KindMeta>,
+    /// Canonical per-block parameter (name, shape) list, in artifact order.
+    pub block_params: Vec<(String, Vec<usize>)>,
+    pub axpy_lens: Vec<usize>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let c = j.at(&["config"])?;
+        let config = ModelCfg {
+            vocab: c.at(&["vocab"])?.as_usize()?,
+            d_model: c.at(&["d_model"])?.as_usize()?,
+            n_head: c.at(&["n_head"])?.as_usize()?,
+            d_ff: c.at(&["d_ff"])?.as_usize()?,
+            n_layer: c.at(&["n_layer"])?.as_usize()?,
+            seq: c.at(&["seq"])?.as_usize()?,
+            batch: c.at(&["batch"])?.as_usize()?,
+            r: c.at(&["r"])?.as_usize()?,
+            d_frac: c.at(&["d_frac"])?.as_f64()?,
+            n_params: c.at(&["n_params"])?.as_usize()?,
+        };
+
+        let mut kinds = BTreeMap::new();
+        for (k, v) in j.at(&["kinds"])?.as_obj()? {
+            kinds.insert(
+                k.clone(),
+                KindMeta {
+                    m: v.at(&["m"])?.as_usize()?,
+                    n: v.at(&["n"])?.as_usize()?,
+                    d: v.at(&["d"])?.as_usize()?,
+                    r: v.at(&["r"])?.as_usize()?,
+                    lp: v.at(&["lp"])?.as_usize()?,
+                    lq: v.at(&["lq"])?.as_usize()?,
+                    param_index: v.at(&["param_index"])?.as_usize()?,
+                },
+            );
+        }
+
+        let mut block_params = Vec::new();
+        for bp in j.at(&["block_params"])?.as_arr()? {
+            block_params.push((
+                bp.at(&["name"])?.as_str()?.to_string(),
+                bp.at(&["shape"])?.usize_vec()?,
+            ));
+        }
+
+        let axpy_lens = j.at(&["axpy_lens"])?.usize_vec()?;
+
+        let parse_specs = |arr: &Json| -> Result<Vec<ArgSpec>> {
+            arr.as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a
+                            .get("name")
+                            .map(|n| n.as_str().map(str::to_string))
+                            .transpose()?
+                            .unwrap_or_default(),
+                        dtype: DType::parse(a.at(&["dtype"])?.as_str()?)?,
+                        shape: a.at(&["shape"])?.usize_vec()?,
+                    })
+                })
+                .collect()
+        };
+
+        let mut entries = BTreeMap::new();
+        for e in j.at(&["entries"])?.as_arr()? {
+            let name = e.at(&["name"])?.as_str()?.to_string();
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name,
+                    file: dir.join(e.at(&["file"])?.as_str()?),
+                    tuple_out: e.at(&["tuple_out"])?.as_bool()?,
+                    args: parse_specs(e.at(&["args"])?)?,
+                    outs: parse_specs(e.at(&["outs"])?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            preset: j.at(&["preset"])?.as_str()?.to_string(),
+            config,
+            kinds,
+            block_params,
+            axpy_lens,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no entry {name:?} (preset {})", self.preset))
+    }
+
+    /// Kind name for a block-parameter index, if that parameter is LSP'd.
+    pub fn kind_for_param(&self, param_index: usize) -> Option<(&str, &KindMeta)> {
+        self.kinds
+            .iter()
+            .find(|(_, m)| m.param_index == param_index)
+            .map(|(k, m)| (k.as_str(), m))
+    }
+}
+
+/// Locate an artifacts directory: explicit path, else `$LSP_ARTIFACTS`,
+/// else `artifacts/<preset>` relative to the workspace.
+pub fn find_artifacts(explicit: Option<&str>, preset: &str) -> Result<PathBuf> {
+    if let Some(p) = explicit {
+        return Ok(PathBuf::from(p));
+    }
+    if let Ok(p) = std::env::var("LSP_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    for base in ["artifacts", "../artifacts"] {
+        let p = Path::new(base).join(preset);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+    }
+    bail!(
+        "no artifacts found for preset {preset:?}; run `make artifacts` \
+         or set LSP_ARTIFACTS"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal manifest with the same schema aot.py emits.
+    pub(crate) const SAMPLE: &str = r#"{
+      "preset": "tiny",
+      "config": {"vocab": 64, "d_model": 32, "n_head": 2, "d_ff": 64,
+                 "n_layer": 2, "seq": 16, "batch": 2, "r": 2, "d_frac": 0.5,
+                 "n_params": 19712},
+      "kinds": {"qkv": {"m": 32, "n": 96, "d": 16, "r": 2, "lp": 4, "lq": 12,
+                        "param_index": 2}},
+      "block_params": [{"name": "ln1_g", "shape": [32]},
+                       {"name": "w_qkv", "shape": [32, 96]}],
+      "axpy_lens": [32, 3072],
+      "entries": [
+        {"name": "block_fwd", "file": "block_fwd.hlo.txt", "tuple_out": false,
+         "args": [{"name": "h", "dtype": "f32", "shape": [2, 16, 32]}],
+         "outs": [{"dtype": "f32", "shape": [2, 16, 32]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("lsp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.config.d_model, 32);
+        assert_eq!(m.config.n_params, 19712);
+        let k = &m.kinds["qkv"];
+        assert_eq!((k.m, k.n, k.d, k.r), (32, 96, 16, 2));
+        assert_eq!(m.kind_for_param(2).unwrap().0, "qkv");
+        assert!(m.kind_for_param(3).is_none());
+        let e = m.entry("block_fwd").unwrap();
+        assert!(!e.tuple_out);
+        assert_eq!(e.args[0].shape, vec![2, 16, 32]);
+        assert_eq!(e.args[0].elems(), 1024);
+        assert!(m.entry("nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Model metadata: the artifact manifest (single source of truth for every
+//! shape, written by `python/compile/aot.py`), host-side parameter store,
+//! and the memory accountant behind Tables 1, 2 and 5.
+
+pub mod manifest;
+pub mod memory;
+pub mod params;
+
+pub use manifest::{ArgSpec, EntrySpec, KindMeta, Manifest, ModelCfg};
+pub use params::ParamStore;

@@ -1,0 +1,142 @@
+//! Host-side parameter store.
+//!
+//! Parameters are initialized here (GPT-2-style: N(0, 0.02) matrices, zero
+//! biases, unit layer-norm gains) and then *uploaded once* to the PJRT
+//! device domain by the trainer; afterwards the device buffers are the
+//! primary copy and this store only mirrors what the CPU side needs
+//! (optimizer state shapes, Zero-baseline full gradients).
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::manifest::Manifest;
+
+/// Flat parameter naming: `wte`, `wpe`, `b{layer}_{name}`, `lnf_g`, `lnf_b`.
+#[derive(Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamStore {
+    /// Initialize all parameters for the manifest's model config.
+    pub fn init(man: &Manifest, seed: u64) -> Result<ParamStore> {
+        let mut rng = Rng::new(seed);
+        let cfg = &man.config;
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let std = 0.02f32;
+
+        names.push("wte".into());
+        tensors.push(Tensor::randn(&[cfg.vocab, cfg.d_model], std, &mut rng));
+        names.push("wpe".into());
+        tensors.push(Tensor::randn(&[cfg.seq, cfg.d_model], std, &mut rng));
+
+        for layer in 0..cfg.n_layer {
+            for (pname, shape) in &man.block_params {
+                let t = init_one(pname, shape, cfg.n_layer, std, &mut rng);
+                names.push(format!("b{layer}_{pname}"));
+                tensors.push(t);
+            }
+        }
+        names.push("lnf_g".into());
+        tensors.push(Tensor::full(&[cfg.d_model], 1.0));
+        names.push("lnf_b".into());
+        tensors.push(Tensor::zeros(&[cfg.d_model]));
+
+        Ok(ParamStore { names, tensors })
+    }
+
+    pub fn index(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index(name).map(|i| &self.tensors[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Indices of the 12 block params of `layer` in flat order.
+    pub fn block_range(&self, man: &Manifest, layer: usize) -> std::ops::Range<usize> {
+        let npb = man.block_params.len();
+        let start = 2 + layer * npb;
+        start..start + npb
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+fn init_one(name: &str, shape: &[usize], n_layer: usize, std: f32, rng: &mut Rng) -> Tensor {
+    if name.ends_with("_g") {
+        Tensor::full(shape, 1.0)
+    } else if name.starts_with("b_") || name.ends_with("_b") {
+        Tensor::zeros(shape)
+    } else if name == "w_pr" || name == "w_o" {
+        // GPT-2 residual-stream scaling: 0.02 / sqrt(2 * n_layer).
+        Tensor::randn(shape, std / (2.0 * n_layer as f32).sqrt(), rng)
+    } else {
+        Tensor::randn(shape, std, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        let dir = std::env::temp_dir().join("lsp_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Reuse the manifest sample from the manifest tests.
+        let sample = r#"{
+          "preset": "tiny",
+          "config": {"vocab": 64, "d_model": 32, "n_head": 2, "d_ff": 64,
+                     "n_layer": 2, "seq": 16, "batch": 2, "r": 2,
+                     "d_frac": 0.5, "n_params": 0},
+          "kinds": {},
+          "block_params": [{"name": "ln1_g", "shape": [32]},
+                           {"name": "ln1_b", "shape": [32]},
+                           {"name": "w_qkv", "shape": [32, 96]},
+                           {"name": "b_qkv", "shape": [96]}],
+          "axpy_lens": [],
+          "entries": []
+        }"#;
+        std::fs::write(dir.join("manifest.json"), sample).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn init_layout_and_kinds() {
+        let man = tiny_manifest();
+        let ps = ParamStore::init(&man, 7).unwrap();
+        // wte, wpe, 2 layers x 4 params, lnf_g, lnf_b
+        assert_eq!(ps.len(), 2 + 2 * 4 + 2);
+        assert_eq!(ps.names[0], "wte");
+        assert_eq!(ps.get("wte").unwrap().shape(), &[64, 32]);
+        assert_eq!(ps.names[2], "b0_ln1_g");
+        assert_eq!(ps.block_range(&man, 1), 6..10);
+        assert_eq!(ps.names[6], "b1_ln1_g");
+        // ln gains are ones, biases zeros.
+        assert!(ps.get("b0_ln1_g").unwrap().data().iter().all(|&x| x == 1.0));
+        assert!(ps.get("b0_b_qkv").unwrap().data().iter().all(|&x| x == 0.0));
+        assert_eq!(ps.get("lnf_g").unwrap().len(), 32);
+        // Deterministic re-init.
+        let ps2 = ParamStore::init(&man, 7).unwrap();
+        assert!(ps.get("wte").unwrap().allclose(ps2.get("wte").unwrap(), 0.0));
+    }
+}

@@ -1,0 +1,233 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! `Engine` wraps the `xla` crate's CPU PJRT client: it reads
+//! `manifest.json`, parses each `<entry>.hlo.txt` (text, never serialized
+//! protos — xla_extension 0.5.1 rejects jax's 64-bit instruction ids),
+//! compiles it once, and exposes typed call helpers.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so *all* PJRT calls stay on the
+//! coordinator's device thread; CPU-side work (fused Adam, projector math)
+//! runs on plain rust worker threads and communicates through host vectors.
+//! That split mirrors the paper's hardware: the PJRT domain plays "GPU", the
+//! rust host side plays "CPU", and every crossing is metered by
+//! `coordinator::comm`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtLoadedExecutable};
+
+use crate::model::manifest::{ArgSpec, DType, EntrySpec, Manifest};
+use crate::tensor::Tensor;
+
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub man: Manifest,
+    execs: BTreeMap<String, Exec>,
+    /// Bytes moved host->device and device->host through this engine
+    /// (literal marshalling), for the comm accounting.
+    pub h2d_bytes: std::cell::Cell<u64>,
+    pub d2h_bytes: std::cell::Cell<u64>,
+}
+
+pub struct Exec {
+    pub spec: EntrySpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load the manifest and compile every entry eagerly.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let man = Manifest::load(artifacts_dir)?;
+        Self::load_with_manifest(man)
+    }
+
+    pub fn load_with_manifest(man: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut execs = BTreeMap::new();
+        for (name, spec) in &man.entries {
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling entry {name}"))?;
+            execs.insert(name.clone(), Exec { spec: spec.clone(), exe });
+        }
+        Ok(Engine {
+            client,
+            man,
+            execs,
+            h2d_bytes: std::cell::Cell::new(0),
+            d2h_bytes: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        self.execs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&Exec> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no compiled entry {name:?}"))
+    }
+
+    // ---- literal marshalling -------------------------------------------
+
+    pub fn lit_f32(&self, shape: &[usize], data: &[f32]) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("lit_f32 shape {:?} vs {} elems", shape, data.len());
+        }
+        self.h2d_bytes.set(self.h2d_bytes.get() + (data.len() * 4) as u64);
+        let lit = Literal::vec1(data);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn lit_tensor(&self, t: &Tensor) -> Result<Literal> {
+        self.lit_f32(t.shape(), t.data())
+    }
+
+    pub fn lit_i32(&self, shape: &[usize], data: &[i32]) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("lit_i32 shape {:?} vs {} elems", shape, data.len());
+        }
+        self.h2d_bytes.set(self.h2d_bytes.get() + (data.len() * 4) as u64);
+        let lit = Literal::vec1(data);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn lit_scalar(&self, v: f32) -> Result<Literal> {
+        self.lit_f32(&[1, 1], &[v])
+    }
+
+    pub fn to_tensor(&self, lit: &Literal, shape: &[usize]) -> Result<Tensor> {
+        let v: Vec<f32> = lit.to_vec()?;
+        self.d2h_bytes.set(self.d2h_bytes.get() + (v.len() * 4) as u64);
+        Tensor::new(shape, v)
+    }
+
+    pub fn to_vec_f32(&self, lit: &Literal) -> Result<Vec<f32>> {
+        let v: Vec<f32> = lit.to_vec()?;
+        self.d2h_bytes.set(self.d2h_bytes.get() + (v.len() * 4) as u64);
+        Ok(v)
+    }
+
+    // ---- device buffers -------------------------------------------------
+
+    /// Upload a host tensor to the device domain.
+    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        self.h2d_bytes.set(self.h2d_bytes.get() + t.size_bytes() as u64);
+        Ok(self.client.buffer_from_host_buffer(t.data(), t.shape(), None)?)
+    }
+
+    pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<PjRtBuffer> {
+        self.h2d_bytes.set(self.h2d_bytes.get() + (data.len() * 4) as u64);
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    pub fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<PjRtBuffer> {
+        self.h2d_bytes.set(self.h2d_bytes.get() + (data.len() * 4) as u64);
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Download a device buffer to a host tensor.
+    pub fn download(&self, b: &PjRtBuffer, shape: &[usize]) -> Result<Tensor> {
+        let lit = b.to_literal_sync()?;
+        self.to_tensor(&lit, shape)
+    }
+
+    pub fn download_vec(&self, b: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = b.to_literal_sync()?;
+        self.to_vec_f32(&lit)
+    }
+}
+
+impl Exec {
+    fn check_args(&self, n: usize) -> Result<()> {
+        if n != self.spec.args.len() {
+            bail!(
+                "entry {} wants {} args, got {n}",
+                self.spec.name,
+                self.spec.args.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with host literals; returns one literal per declared output.
+    pub fn call(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.check_args(args.len())?;
+        let out = self.exe.execute::<Literal>(args)?;
+        let first = out
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("entry {} produced no output", self.spec.name))?;
+        let lit = first.to_literal_sync()?;
+        if self.spec.tuple_out {
+            Ok(lit.to_tuple()?)
+        } else {
+            Ok(vec![lit])
+        }
+    }
+
+    /// Execute with device buffers. For single-output entries the result
+    /// stays on device; tuple outputs force a host sync (by PJRT API shape),
+    /// which is fine — every tuple entry in this system is a boundary where
+    /// data leaves the device anyway (gradient offload).
+    pub fn call_b(&self, args: &[&PjRtBuffer]) -> Result<BufOut> {
+        self.check_args(args.len())?;
+        let out = self.exe.execute_b::<&PjRtBuffer>(args)?;
+        let first = out
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("entry {} produced no output", self.spec.name))?;
+        if self.spec.tuple_out {
+            let lit = first.to_literal_sync()?;
+            Ok(BufOut::Host(lit.to_tuple()?))
+        } else {
+            Ok(BufOut::Device(first))
+        }
+    }
+
+    pub fn out_spec(&self, i: usize) -> &ArgSpec {
+        &self.spec.outs[i]
+    }
+}
+
+/// Output of a buffer-level call.
+pub enum BufOut {
+    Device(PjRtBuffer),
+    Host(Vec<Literal>),
+}
+
+impl BufOut {
+    pub fn device(self) -> Result<PjRtBuffer> {
+        match self {
+            BufOut::Device(b) => Ok(b),
+            BufOut::Host(_) => bail!("expected device output, got host tuple"),
+        }
+    }
+
+    pub fn host(self) -> Result<Vec<Literal>> {
+        match self {
+            BufOut::Host(v) => Ok(v),
+            BufOut::Device(_) => bail!("expected host tuple, got device buffer"),
+        }
+    }
+}
+
+/// dtype helper for raw byte moves.
+pub fn elem_type(dt: DType) -> ElementType {
+    match dt {
+        DType::F32 => ElementType::F32,
+        DType::I32 => ElementType::S32,
+    }
+}

@@ -1,0 +1,489 @@
+//! Task-DAG builders for every offloading pipeline of Fig. 3 plus the
+//! no-offload native baseline and LSP ablations.
+//!
+//! Each builder lays out `iters` back-to-back iterations so steady-state
+//! per-iteration time can be measured without the cold-start transient.
+
+use anyhow::Result;
+
+use super::cost_model::{Costs, HardwareProfile, Workload};
+use super::engine::{makespan, Resource, Sim, TaskId};
+use super::report::IterReport;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Everything on the GPU (assumes infinite GPU memory) — the paper's
+    /// "native" upper bound in Fig. 6.
+    Native,
+    /// Swap-only offloading (Fig. 3c): all compute on the GPU, memory
+    /// streamed in/out; bounded below by the Observation.
+    SwapOnly,
+    /// Zero-Offload (Alg. 2 / Fig. 3a).
+    Zero,
+    /// Zero with delayed parameter update (Fig. 3b): previous iteration's
+    /// UPD overlaps current FWD+BWD; the two PCIe directions are serialized
+    /// (the paper notes Zero cannot parallelize them without extra buffers).
+    ZeroDelayed,
+    /// Zero + our layer-wise schedule but *without* subspace compression
+    /// (the "+layerwise" ablation column of Fig. 6).
+    ZeroLayerwise,
+    /// Full LSP-Offload (Alg. 3 / Fig. 3d): compress + layer-wise overlap
+    /// with the FCFS->LCFS transition heuristic.
+    LspLayerwise,
+}
+
+impl ScheduleKind {
+    pub fn by_name(s: &str) -> Option<ScheduleKind> {
+        match s {
+            "native" => Some(ScheduleKind::Native),
+            "swap" | "swap-only" => Some(ScheduleKind::SwapOnly),
+            "zero" => Some(ScheduleKind::Zero),
+            "zero-delayed" | "delayed" => Some(ScheduleKind::ZeroDelayed),
+            "zero-layerwise" | "layerwise" => Some(ScheduleKind::ZeroLayerwise),
+            "lsp" | "lsp-layerwise" => Some(ScheduleKind::LspLayerwise),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Native => "native",
+            ScheduleKind::SwapOnly => "swap-only",
+            ScheduleKind::Zero => "zero",
+            ScheduleKind::ZeroDelayed => "zero-delayed",
+            ScheduleKind::ZeroLayerwise => "zero-layerwise",
+            ScheduleKind::LspLayerwise => "lsp-layerwise",
+        }
+    }
+
+    pub const ALL: [ScheduleKind; 6] = [
+        ScheduleKind::Native,
+        ScheduleKind::SwapOnly,
+        ScheduleKind::Zero,
+        ScheduleKind::ZeroDelayed,
+        ScheduleKind::ZeroLayerwise,
+        ScheduleKind::LspLayerwise,
+    ];
+}
+
+/// Build the task DAG for `kind` without running it (property tests).
+pub fn build_sim(kind: ScheduleKind, hw: &HardwareProfile, w: &Workload, iters: usize) -> Sim {
+    let c = Costs::derive(hw, w);
+    let mut sim = Sim::new();
+    match kind {
+        ScheduleKind::Native => native(&mut sim, &c, w, iters),
+        ScheduleKind::SwapOnly => swap_only(&mut sim, &c, hw, w, iters),
+        ScheduleKind::Zero => zero(&mut sim, &c, w, iters, false),
+        ScheduleKind::ZeroDelayed => zero_delayed(&mut sim, &c, w, iters),
+        ScheduleKind::ZeroLayerwise => layerwise(&mut sim, &c, w, iters, false),
+        ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
+    }
+    sim
+}
+
+/// Build and run `iters` iterations of `kind`; returns the report.
+pub fn build_schedule(
+    kind: ScheduleKind,
+    hw: &HardwareProfile,
+    w: &Workload,
+    iters: usize,
+) -> Result<IterReport> {
+    let c = Costs::derive(hw, w);
+    let mut sim = Sim::new();
+    match kind {
+        ScheduleKind::Native => native(&mut sim, &c, w, iters),
+        ScheduleKind::SwapOnly => swap_only(&mut sim, &c, hw, w, iters),
+        ScheduleKind::Zero => zero(&mut sim, &c, w, iters, false),
+        ScheduleKind::ZeroDelayed => zero_delayed(&mut sim, &c, w, iters),
+        ScheduleKind::ZeroLayerwise => layerwise(&mut sim, &c, w, iters, false),
+        ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
+    }
+    let sched = sim.run()?;
+    Ok(IterReport::from_schedule(
+        kind.name(),
+        &sched,
+        iters,
+        c.gpu_compute(w.n_layers),
+        makespan(&sched),
+    ))
+}
+
+fn native(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
+    let n = w.n_layers;
+    let mut prev: Option<TaskId> = None;
+    for it in 0..iters {
+        for l in 0..n {
+            let deps: Vec<_> = prev.into_iter().collect();
+            prev = Some(sim.add(format!("i{it}.fwd{l}"), Resource::Gpu, c.fwd_layer_gpu, &deps));
+        }
+        for l in (0..n).rev() {
+            let deps: Vec<_> = prev.into_iter().collect();
+            prev = Some(sim.add(format!("i{it}.bwd{l}"), Resource::Gpu, c.bwd_layer_gpu, &deps));
+        }
+        // On-GPU fused Adam: memory-bandwidth-bound.
+        let deps: Vec<_> = prev.into_iter().collect();
+        prev = Some(sim.add(
+            format!("i{it}.upd"),
+            Resource::Gpu,
+            c.upd_layer_gpu_native * n as f64,
+            &deps,
+        ));
+    }
+}
+
+fn swap_only(sim: &mut Sim, c: &Costs, hw: &HardwareProfile, w: &Workload, iters: usize) {
+    // All compute on GPU; every iteration must move >= M_tot - M_gpu bytes
+    // (Observation). We stream it as per-layer h2d chunks feeding compute.
+    let n = w.n_layers;
+    // M_tot = weights + grads + optimizer state (fp16 x4 per param) plus
+    // activations (no checkpointing in swap-type systems): ~12 floats per
+    // token per hidden unit per layer.
+    let hidden = ((w.params_per_layer() / 12) as f64).sqrt();
+    let act_bytes =
+        (w.tokens as f64) * (n as f64) * 12.0 * hidden * w.bytes_per_param as f64;
+    let m_tot = (w.params * w.bytes_per_param) as f64 * 4.0 + act_bytes;
+    let deficit = (m_tot - hw.gpu_mem_bytes as f64).max(0.0);
+    // The Observation: every byte beyond GPU memory crosses the link *each
+    // way* every iteration (fetched before use, evicted after update).
+    // Swap traffic is bulk + unpinned: the paper's own 40 GB -> 5.33 s
+    // arithmetic implies ~7.5 GB/s effective (see HardwareProfile).
+    let per_layer_in = deficit / (n as f64) / hw.swap_bytes_per_s;
+    let per_layer_out = deficit / (n as f64) / hw.swap_bytes_per_s;
+    let mut prev: Option<TaskId> = None;
+    for it in 0..iters {
+        let mut swaps = Vec::new();
+        for l in 0..n {
+            let sw =
+                sim.add(format!("i{it}.swapin{l}"), Resource::H2D, per_layer_in, &[]);
+            let mut deps: Vec<_> = prev.into_iter().collect();
+            deps.push(sw);
+            prev = Some(sim.add(format!("i{it}.fwd{l}"), Resource::Gpu, c.fwd_layer_gpu, &deps));
+            swaps.push(sw);
+        }
+        for l in (0..n).rev() {
+            let sw =
+                sim.add(format!("i{it}.swapout{l}"), Resource::D2H, per_layer_out, &[]);
+            let mut deps: Vec<_> = prev.into_iter().collect();
+            deps.push(sw);
+            prev = Some(sim.add(format!("i{it}.bwd{l}"), Resource::Gpu, c.bwd_layer_gpu, &deps));
+        }
+        let deps: Vec<_> = prev.into_iter().collect();
+        prev = Some(sim.add(
+            format!("i{it}.upd"),
+            Resource::Gpu,
+            c.upd_layer_gpu_native * n as f64,
+            &deps,
+        ));
+    }
+}
+
+/// Zero-Offload, Alg. 2: full gradients offloaded as bwd proceeds; the CPU
+/// update starts after the backward finishes (optimizer step is atomic over
+/// the full parameter set in Zero's implementation); the delta upload
+/// overlaps the CPU update of later chunks; GPU applies deltas at the end.
+fn zero(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, _delayed: bool) {
+    let n = w.n_layers;
+    let mut apply_done: Option<TaskId> = None;
+    for it in 0..iters {
+        let mut prev = apply_done;
+        for l in 0..n {
+            let deps: Vec<_> = prev.into_iter().collect();
+            prev = Some(sim.add(format!("i{it}.fwd{l}"), Resource::Gpu, c.fwd_layer_gpu, &deps));
+        }
+        let mut offloads = Vec::new();
+        let mut last_off: Option<TaskId> = None;
+        let mut bwd_last = prev.unwrap();
+        for l in (0..n).rev() {
+            let bwd = sim.add(
+                format!("i{it}.bwd{l}"),
+                Resource::Gpu,
+                c.bwd_layer_gpu,
+                &[bwd_last],
+            );
+            bwd_last = bwd;
+            // Gradient offload overlaps deeper layers' bwd (FCFS on D2H).
+            let mut odeps = vec![bwd];
+            odeps.extend(last_off);
+            let off = sim.add(
+                format!("i{it}.off{l}"),
+                Resource::D2H,
+                c.offload_layer_full,
+                &odeps,
+            );
+            last_off = Some(off);
+            offloads.push(off);
+        }
+        // CPU update: starts when backward AND all offloads are done
+        // (Zero's fused CPU Adam runs over the whole gradient buffer),
+        // chunked so uploads can overlap subsequent chunks.
+        let mut upd_deps: Vec<TaskId> = offloads.clone();
+        upd_deps.push(bwd_last);
+        let mut upload_last: Option<TaskId> = None;
+        let mut uploads = Vec::new();
+        let mut upd_prev: Option<TaskId> = None;
+        for ch in 0..n {
+            let mut deps = if ch == 0 { upd_deps.clone() } else { vec![] };
+            deps.extend(upd_prev);
+            let upd = sim.add(
+                format!("i{it}.upd{ch}"),
+                Resource::Cpu,
+                c.upd_layer_cpu_full,
+                &deps,
+            );
+            upd_prev = Some(upd);
+            let mut udeps = vec![upd];
+            udeps.extend(upload_last);
+            let up = sim.add(
+                format!("i{it}.up{ch}"),
+                Resource::H2D,
+                c.upload_layer_full,
+                &udeps,
+            );
+            upload_last = Some(up);
+            uploads.push(up);
+        }
+        let apply = sim.add(
+            format!("i{it}.apply"),
+            Resource::Gpu,
+            c.apply_layer_full_gpu * n as f64,
+            &uploads,
+        );
+        apply_done = Some(apply);
+    }
+}
+
+/// Zero with delayed parameter update (Fig. 3b): iteration t's CPU update +
+/// comm run concurrently with iteration t+1's fwd/bwd (stale weights).
+/// Paper: to avoid extra buffers, d2h and h2d cannot be parallelized —
+/// modelled by routing *both* directions through the H2D server.
+fn zero_delayed(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
+    let n = w.n_layers;
+    let mut prev_upd_chain: Option<TaskId> = None;
+    // One-step staleness: iteration t's fwd/bwd overlaps the CPU update of
+    // iteration t-1's gradients, so fwd(t) only waits for the *t-2* delta
+    // upload (the paper's accuracy-affecting trade).
+    let mut prev_iter_uploads: Option<TaskId> = None;
+    let mut prev2_iter_uploads: Option<TaskId> = None;
+    for it in 0..iters {
+        let gate = prev2_iter_uploads;
+        let mut prev: Option<TaskId> = None;
+        for l in 0..n {
+            let mut deps: Vec<_> = prev.into_iter().collect();
+            if l == 0 {
+                deps.extend(gate);
+            }
+            prev = Some(sim.add(format!("i{it}.fwd{l}"), Resource::Gpu, c.fwd_layer_gpu, &deps));
+        }
+        let mut bwd_last = prev.unwrap();
+        let mut offloads = Vec::new();
+        let mut last_off = prev_upd_chain; // serialize with previous comm
+        for l in (0..n).rev() {
+            let bwd = sim.add(
+                format!("i{it}.bwd{l}"),
+                Resource::Gpu,
+                c.bwd_layer_gpu,
+                &[bwd_last],
+            );
+            bwd_last = bwd;
+            let mut odeps = vec![bwd];
+            odeps.extend(last_off);
+            let off = sim.add(
+                format!("i{it}.off{l}"),
+                Resource::H2D, // shared channel (no duplex in delayed mode)
+                c.offload_layer_full,
+                &odeps,
+            );
+            last_off = Some(off);
+            offloads.push(off);
+        }
+        // Delayed update: runs after offloads but does NOT gate next fwd.
+        let mut upd_prev: Option<TaskId> = None;
+        let mut up_last: Option<TaskId> = None;
+        for ch in 0..n {
+            let mut deps: Vec<TaskId> = if ch == 0 { offloads.clone() } else { vec![] };
+            deps.extend(upd_prev);
+            let upd = sim.add(
+                format!("i{it}.upd{ch}"),
+                Resource::Cpu,
+                c.upd_layer_cpu_full,
+                &deps,
+            );
+            upd_prev = Some(upd);
+            let mut udeps = vec![upd];
+            udeps.extend(up_last);
+            up_last = Some(sim.add(
+                format!("i{it}.up{ch}"),
+                Resource::H2D,
+                c.upload_layer_full,
+                &udeps,
+            ));
+        }
+        prev_upd_chain = up_last;
+        prev2_iter_uploads = prev_iter_uploads;
+        prev_iter_uploads = up_last;
+    }
+}
+
+/// Layer-wise schedule (Alg. 3). With `compress = true` this is full
+/// LSP-Offload (subspace-sized comm + CPU update, plus GPU compress/apply);
+/// with `false` it is the "+layerwise" Fig. 6 ablation over full gradients.
+fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: bool) {
+    let n = w.n_layers;
+    let (off_t, up_t, upd_t) = if compress {
+        (c.offload_layer_sub, c.upload_layer_sub, c.upd_layer_cpu_sub)
+    } else {
+        (c.offload_layer_full, c.upload_layer_full, c.upd_layer_cpu_full)
+    };
+    // TransitionLayer heuristic (paper appendix): deepest layer whose
+    // pipeline tail could block the next iteration's first fwd.
+    let tail = off_t + up_t + upd_t;
+    let per = off_t.max(up_t).max(upd_t).max(1e-12);
+    let bwd_total = c.bwd_layer_gpu * n as f64;
+    let transition = ((bwd_total - tail) / per).floor().clamp(0.0, n as f64) as usize;
+
+    // apply_done[l] = apply task of layer l from the previous iteration.
+    let mut apply_done: Vec<Option<TaskId>> = vec![None; n];
+    for it in 0..iters {
+        let mut prev: Option<TaskId> = None;
+        for l in 0..n {
+            // Wait for event e_l: fwd after this layer's params updated.
+            let mut deps: Vec<_> = prev.into_iter().collect();
+            deps.extend(apply_done[l]);
+            prev = Some(sim.add(format!("i{it}.fwd{l}"), Resource::Gpu, c.fwd_layer_gpu, &deps));
+        }
+        let mut bwd_prev = prev.unwrap();
+        for l in (0..n).rev() {
+            let bwd = sim.add(
+                format!("i{it}.bwd{l}"),
+                Resource::Gpu,
+                c.bwd_layer_gpu,
+                &[bwd_prev],
+            );
+            bwd_prev = bwd;
+            // FCFS first (deep layers first-come), LCFS past the transition:
+            // shallower layers jump the queue so the next iteration's first
+            // fwd is unblocked sooner. Lower priority value = served first.
+            let depth = n - 1 - l; // order of arrival in the backward pass
+            let prio = if depth < transition { depth as i64 } else { -(l as i64 + 1) };
+            let (cmp, compress_dep) = if compress {
+                let t = sim.add(
+                    format!("i{it}.cmp{l}"),
+                    Resource::Gpu,
+                    c.compress_layer_gpu,
+                    &[bwd],
+                );
+                (Some(t), t)
+            } else {
+                (None, bwd)
+            };
+            let _ = cmp;
+            let off =
+                sim.add_prio(format!("i{it}.off{l}"), Resource::D2H, off_t, &[compress_dep], prio);
+            let upd = sim.add_prio(format!("i{it}.upd{l}"), Resource::Cpu, upd_t, &[off], prio);
+            let up = sim.add_prio(format!("i{it}.up{l}"), Resource::H2D, up_t, &[upd], prio);
+            let apply_cost = if compress { c.apply_layer_gpu } else { c.apply_layer_full_gpu };
+            // Apply on GPU; low priority so it never preempts fwd/bwd order
+            // but must finish before next iteration's fwd of this layer.
+            let apply = sim.add_prio(
+                format!("i{it}.apply{l}"),
+                Resource::Gpu,
+                apply_cost,
+                &[up],
+                1000 + l as i64,
+            );
+            apply_done[l] = Some(apply);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::memory::PaperModel;
+
+    fn setup() -> (HardwareProfile, Workload) {
+        (
+            HardwareProfile::workstation(),
+            Workload::paper(PaperModel::Llama7B, 2048, 2048),
+        )
+    }
+
+    #[test]
+    fn all_schedules_run_and_validate() {
+        let (hw, w) = setup();
+        for kind in ScheduleKind::ALL {
+            let rep = build_schedule(kind, &hw, &w, 3).unwrap();
+            assert!(rep.iter_time > 0.0, "{kind:?}");
+            assert!(rep.iter_time.is_finite());
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // native <= lsp < zero-layerwise <= zero; swap is comm-bound worst.
+        let (hw, w) = setup();
+        let t = |k| build_schedule(k, &hw, &w, 3).unwrap().iter_time;
+        let native = t(ScheduleKind::Native);
+        let lsp = t(ScheduleKind::LspLayerwise);
+        let zero = t(ScheduleKind::Zero);
+        let zero_lw = t(ScheduleKind::ZeroLayerwise);
+        let swap = t(ScheduleKind::SwapOnly);
+        // LSP is near-native; in the idealized DES it can even edge out
+        // native because the full on-GPU Adam (0.11 s) is replaced by a
+        // ~4 ms compress (the paper's real runs show +10-17%).
+        assert!(lsp >= native * 0.85, "native {native} lsp {lsp}");
+        assert!(lsp <= native * 1.4, "LSP should be near-native: {lsp} vs {native}");
+        assert!(lsp < zero, "lsp {lsp} zero {zero}");
+        assert!(zero_lw <= zero * 1.001, "zero_lw {zero_lw} zero {zero}");
+        assert!(swap > zero, "swap {swap} should be worst, zero {zero}");
+    }
+
+    #[test]
+    fn lsp_near_native_on_workstation() {
+        // Paper Fig. 6: LSP incurs ~10-17% slowdown over native.
+        let (hw, w) = setup();
+        let native = build_schedule(ScheduleKind::Native, &hw, &w, 3).unwrap().iter_time;
+        let lsp = build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 3).unwrap().iter_time;
+        let slowdown = lsp / native;
+        assert!(slowdown < 1.4, "LSP slowdown vs native: {slowdown}");
+    }
+
+    #[test]
+    fn zero_slowdown_matches_eq1() {
+        let (hw, w) = setup();
+        let c = super::super::cost_model::Costs::derive(&hw, &w);
+        let des = build_schedule(ScheduleKind::Zero, &hw, &w, 4).unwrap().iter_time;
+        let eq1 = super::super::cost_model::eq1_zero_iter(&c, w.n_layers);
+        let rel = (des - eq1).abs() / eq1;
+        assert!(rel < 0.15, "DES {des} vs Eq.1 {eq1} ({rel})");
+    }
+
+    #[test]
+    fn lsp_within_eq4_envelope() {
+        let (hw, w) = setup();
+        let c = super::super::cost_model::Costs::derive(&hw, &w);
+        let des = build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 4).unwrap().iter_time;
+        let eq4 = super::super::cost_model::eq4_lsp_iter(&c, w.n_layers);
+        // DES must not beat the analytic lower bound, and should be close.
+        assert!(des >= eq4 * 0.95, "DES {des} below Eq.4 {eq4}");
+        assert!(des <= eq4 * 1.35, "DES {des} far above Eq.4 {eq4}");
+    }
+
+    #[test]
+    fn delayed_update_improves_zero_throughput() {
+        let (hw, w) = setup();
+        let zero = build_schedule(ScheduleKind::Zero, &hw, &w, 4).unwrap().iter_time;
+        let delayed = build_schedule(ScheduleKind::ZeroDelayed, &hw, &w, 4).unwrap().iter_time;
+        assert!(delayed < zero * 1.05, "delayed {delayed} vs zero {zero}");
+    }
+
+    #[test]
+    fn laptop_slowdowns_in_fig2_band() {
+        // Fig. 2: Zero slows training 1.93x-4.28x across configs.
+        let hw = HardwareProfile::laptop();
+        let w = Workload::paper(PaperModel::Gpt2_1_3B, 512, 1024);
+        let rep = build_schedule(ScheduleKind::Zero, &hw, &w, 3).unwrap();
+        let slow = rep.iter_time / rep.gpu_compute;
+        assert!((1.5..5.5).contains(&slow), "laptop zero slowdown {slow}");
+    }
+}

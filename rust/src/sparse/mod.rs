@@ -1,0 +1,343 @@
+//! (d, r)-sparse projectors — Definition 1 of the paper.
+//!
+//! Mirrors `python/compile/kernels/formats.py` exactly (shapes, balanced
+//! position sampling, padded gather layout); the Pallas compress kernel
+//! consumes the GATHER layout, the decompress/learn entries the ROW layout.
+//! Host-side compress/apply/bias here serve three roles: oracle for the
+//! runtime artifacts in integration tests, compute path for CPU-side
+//! baselines, and the projector manager's cheap bias estimates.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::ops::{matmul, matmul_tn};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One (d, r)-sparse projector in ROW layout: `rows x d` with exactly `r`
+/// non-zeros per row at `idx`, values `val` (both `[rows, r]` row-major).
+#[derive(Debug, Clone)]
+pub struct SparseProjector {
+    pub rows: usize,
+    pub d: usize,
+    pub r: usize,
+    pub idx: Vec<i32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseProjector {
+    /// Balanced random positions + JL `N(0, 1/sqrt(r))` values.
+    ///
+    /// For each of the r hash functions, rows are randomly permuted and
+    /// dealt round-robin over the d subspace columns, so each column
+    /// receives exactly `ceil(rows/d)` entries per hash — this makes the
+    /// padded gather length static (`gather_len`), which the AOT artifacts
+    /// require.
+    pub fn init(rows: usize, d: usize, r: usize, rng: &mut Rng) -> Self {
+        assert!(r > 0 && r <= d, "need 0 < r <= d");
+        let mut idx = vec![0i32; rows * r];
+        for k in 0..r {
+            let perm = rng.permutation(rows);
+            for (i, &row) in perm.iter().enumerate() {
+                idx[row * r + k] = (i % d) as i32;
+            }
+        }
+        let std = 1.0 / (r as f32).sqrt();
+        let val = rng.normal_vec(rows * r, std);
+        SparseProjector { rows, d, r, idx, val }
+    }
+
+    /// Static padded gather length: `r * ceil(rows / d)`.
+    pub fn gather_len(&self) -> usize {
+        self.r * self.rows.div_ceil(self.d)
+    }
+
+    /// GATHER layout (padded CSC of P^T): `(gidx, gval)`, both `[d, L]`.
+    /// Padding slots are (index 0, value 0).
+    pub fn to_gather(&self) -> Result<(Vec<i32>, Vec<f32>)> {
+        let l = self.gather_len();
+        let mut gidx = vec![0i32; self.d * l];
+        let mut gval = vec![0f32; self.d * l];
+        let mut fill = vec![0usize; self.d];
+        for i in 0..self.rows {
+            for k in 0..self.r {
+                let j = self.idx[i * self.r + k] as usize;
+                if fill[j] >= l {
+                    bail!("column {j} load exceeds static gather length {l}");
+                }
+                gidx[j * l + fill[j]] = i as i32;
+                gval[j * l + fill[j]] = self.val[i * self.r + k];
+                fill[j] += 1;
+            }
+        }
+        Ok((gidx, gval))
+    }
+
+    /// Dense `[rows, d]` matrix (duplicate positions accumulate).
+    pub fn densify(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.d]);
+        for i in 0..self.rows {
+            for k in 0..self.r {
+                let j = self.idx[i * self.r + k] as usize;
+                let v = t.at2(i, j) + self.val[i * self.r + k];
+                t.set2(i, j, v);
+            }
+        }
+        t
+    }
+
+    /// Memory held on the "GPU" for this projector: idx (i32) + val (f32).
+    pub fn nnz_bytes(&self) -> usize {
+        self.rows * self.r * 8
+    }
+}
+
+/// The pair (P, Q) attached to one weight matrix `W in R^{m x n}`.
+#[derive(Debug, Clone)]
+pub struct ProjectorPair {
+    pub p: SparseProjector, // [m, d]
+    pub q: SparseProjector, // [n, d]
+}
+
+impl ProjectorPair {
+    pub fn init(m: usize, n: usize, d: usize, r: usize, rng: &mut Rng) -> Self {
+        ProjectorPair {
+            p: SparseProjector::init(m, d, r, rng),
+            q: SparseProjector::init(n, d, r, rng),
+        }
+    }
+
+    /// Compress: `S = P^T G Q`, `[d, d]`.  Host path used by CPU-side
+    /// baselines and as the artifact oracle; the sparse structure is
+    /// exploited directly (O(nnz * n + nnz * d) instead of dense GEMMs).
+    pub fn compress(&self, g: &Tensor) -> Result<Tensor> {
+        let (m, n) = (g.rows(), g.cols());
+        if m != self.p.rows || n != self.q.rows {
+            bail!("compress shape mismatch: G {:?} vs P rows {} / Q rows {}",
+                  g.shape(), self.p.rows, self.q.rows);
+        }
+        let d = self.p.d;
+        // A = P^T G: scatter-add rows of G.
+        let mut a = Tensor::zeros(&[d, n]);
+        let gd = g.data();
+        let ad = a.data_mut();
+        for i in 0..m {
+            let grow = &gd[i * n..(i + 1) * n];
+            for k in 0..self.p.r {
+                let j = self.p.idx[i * self.p.r + k] as usize;
+                let v = self.p.val[i * self.p.r + k];
+                if v == 0.0 {
+                    continue;
+                }
+                let arow = &mut ad[j * n..(j + 1) * n];
+                for (av, gv) in arow.iter_mut().zip(grow) {
+                    *av += v * gv;
+                }
+            }
+        }
+        // S = A Q: walk rows of A so both the read stream (A row) and the
+        // write stream (S row) stay contiguous (see EXPERIMENTS.md §Perf).
+        let mut s = Tensor::zeros(&[d, d]);
+        let ad = a.data();
+        let sd = s.data_mut();
+        for row in 0..d {
+            let arow = &ad[row * n..(row + 1) * n];
+            let srow = &mut sd[row * d..(row + 1) * d];
+            for (jn, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let base = jn * self.q.r;
+                for k in 0..self.q.r {
+                    let c = self.q.idx[base + k] as usize;
+                    srow[c] += self.q.val[base + k] * av;
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    /// Decompress the subspace delta back: `D = P dS Q^T`, `[m, n]`.
+    pub fn decompress(&self, ds: &Tensor) -> Result<Tensor> {
+        let d = self.p.d;
+        if ds.rows() != d || ds.cols() != d {
+            bail!("decompress wants [{d},{d}], got {:?}", ds.shape());
+        }
+        let (m, n) = (self.p.rows, self.q.rows);
+        // X = P dS: gather rows of dS.
+        let mut x = Tensor::zeros(&[m, d]);
+        let dsd = ds.data();
+        let xd = x.data_mut();
+        for i in 0..m {
+            for k in 0..self.p.r {
+                let j = self.p.idx[i * self.p.r + k] as usize;
+                let v = self.p.val[i * self.p.r + k];
+                let xrow = &mut xd[i * d..(i + 1) * d];
+                let dsrow = &dsd[j * d..(j + 1) * d];
+                for (xv, dv) in xrow.iter_mut().zip(dsrow) {
+                    *xv += v * dv;
+                }
+            }
+        }
+        // Y = X Q^T: out[i, j] = sum_k q_val[j,k] * X[i, q_idx[j,k]].
+        // Walk output rows so writes are contiguous and the X row stays hot.
+        let mut y = Tensor::zeros(&[m, n]);
+        let xd = x.data();
+        let yd = y.data_mut();
+        for i in 0..m {
+            let xrow = &xd[i * d..(i + 1) * d];
+            let yrow = &mut yd[i * n..(i + 1) * n];
+            for (jn, yv) in yrow.iter_mut().enumerate() {
+                let base = jn * self.q.r;
+                let mut acc = 0.0f32;
+                for k in 0..self.q.r {
+                    let c = self.q.idx[base + k] as usize;
+                    acc += self.q.val[base + k] * xrow[c];
+                }
+                *yv += acc;
+            }
+        }
+        Ok(y)
+    }
+
+    /// Apply: `W <- W - lr * P dS Q^T` (Alg. 1 line 17).
+    pub fn apply(&self, w: &mut Tensor, ds: &Tensor, lr: f32) -> Result<()> {
+        let delta = self.decompress(ds)?;
+        crate::tensor::ops::axpy(w, -lr, &delta);
+        Ok(())
+    }
+
+    /// Estimation bias `b(G) = P P^T G Q Q^T - G` (Definition 2); returns
+    /// `(rel, abs, ||G||_F)` with `rel = abs / ||G||_F`.
+    pub fn bias(&self, g: &Tensor) -> Result<(f32, f32, f32)> {
+        let s = self.compress(g)?;
+        let est = self.decompress(&s)?;
+        let diff = crate::tensor::ops::sub(&est, g);
+        let abs = diff.frob_norm();
+        let gn = g.frob_norm().max(1e-30);
+        Ok((abs / gn, abs, gn))
+    }
+
+    /// Dense-oracle compress (for tests): densify + two GEMMs.
+    pub fn compress_dense(&self, g: &Tensor) -> Result<Tensor> {
+        let p = self.p.densify();
+        let q = self.q.densify();
+        matmul(&matmul_tn(&p, g)?, &q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn balanced_positions_exact_loads() {
+        let mut rng = Rng::new(0);
+        let p = SparseProjector::init(96, 16, 3, &mut rng);
+        let l = p.gather_len();
+        assert_eq!(l, 3 * 6);
+        let mut loads = vec![0usize; 16];
+        for &j in &p.idx {
+            loads[j as usize] += 1;
+        }
+        for &ld in &loads {
+            assert_eq!(ld, l, "every column receives exactly L entries");
+        }
+        p.to_gather().unwrap(); // must not overflow
+    }
+
+    #[test]
+    fn compress_matches_dense_oracle() {
+        check(
+            "sparse-compress-vs-dense",
+            10,
+            |r| {
+                let m = 8 + r.below(40);
+                let n = 8 + r.below(40);
+                let d = 4 + r.below(m.min(n).saturating_sub(4).max(1));
+                let rr = 1 + r.below(3.min(d));
+                let pair = ProjectorPair::init(m, n, d, rr, r);
+                let g = Tensor::randn(&[m, n], 1.0, r);
+                (pair, g)
+            },
+            |(pair, g)| {
+                let fast = pair.compress(g).map_err(|e| e.to_string())?;
+                let slow = pair.compress_dense(g).map_err(|e| e.to_string())?;
+                if fast.allclose(&slow, 1e-3) {
+                    Ok(())
+                } else {
+                    Err(format!("diff {}", fast.max_abs_diff(&slow)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn decompress_matches_dense_oracle() {
+        let mut rng = Rng::new(5);
+        let pair = ProjectorPair::init(24, 30, 8, 2, &mut rng);
+        let ds = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let fast = pair.decompress(&ds).unwrap();
+        let p = pair.p.densify();
+        let q = pair.q.densify();
+        let slow = matmul(&matmul(&p, &ds).unwrap(), &crate::tensor::ops::transpose(&q)).unwrap();
+        assert!(fast.allclose(&slow, 1e-4));
+    }
+
+    #[test]
+    fn bias_zero_when_projector_identity_like() {
+        // With d == m == n and P = Q = I (r=1, idx=i, val=1), bias is 0.
+        let n = 12;
+        let mut p = SparseProjector::init(n, n, 1, &mut Rng::new(1));
+        for i in 0..n {
+            p.idx[i] = i as i32;
+            p.val[i] = 1.0;
+        }
+        let pair = ProjectorPair { p: p.clone(), q: p };
+        let g = Tensor::randn(&[n, n], 1.0, &mut Rng::new(2));
+        let (rel, _, _) = pair.bias(&g).unwrap();
+        assert!(rel < 1e-5, "identity projector bias {rel}");
+    }
+
+    #[test]
+    fn bias_decreases_with_d() {
+        // Paper Fig. 9: increasing d consistently reduces estimation bias.
+        let mut rng = Rng::new(7);
+        let g = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for d in [8, 16, 32, 64] {
+            // Average over a few random projectors to reduce variance.
+            let mut acc = 0.0;
+            for s in 0..5 {
+                let mut r2 = Rng::new(100 + s);
+                let pair = ProjectorPair::init(64, 64, d, 2, &mut r2);
+                acc += pair.bias(&g).unwrap().0;
+            }
+            let b = acc / 5.0;
+            assert!(b < last * 1.05, "bias did not shrink: d={d} bias={b} last={last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn apply_changes_weights_in_descent_direction() {
+        let mut rng = Rng::new(9);
+        let pair = ProjectorPair::init(16, 16, 8, 2, &mut rng);
+        let mut w = Tensor::zeros(&[16, 16]);
+        let ds = Tensor::full(&[8, 8], 1.0);
+        pair.apply(&mut w, &ds, 0.1).unwrap();
+        let delta = pair.decompress(&ds).unwrap();
+        let mut expect = Tensor::zeros(&[16, 16]);
+        crate::tensor::ops::axpy(&mut expect, -0.1, &delta);
+        assert!(w.allclose(&expect, 1e-6));
+    }
+
+    #[test]
+    fn nnz_bytes_independent_of_d() {
+        // The paper's key memory claim: GPU memory is O((m+n) r), not O(d^2).
+        let mut rng = Rng::new(3);
+        let small = SparseProjector::init(256, 16, 4, &mut rng);
+        let large = SparseProjector::init(256, 128, 4, &mut rng);
+        assert_eq!(small.nnz_bytes(), large.nnz_bytes());
+    }
+}

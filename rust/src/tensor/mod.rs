@@ -1,0 +1,168 @@
+//! Host tensor substrate: dense row-major f32 tensors plus the handful of
+//! BLAS-like ops the coordinator needs on its side of the PCIe boundary
+//! (baseline projections, fused Adam, projector maintenance, tests).
+//!
+//! This is deliberately *not* a general autodiff array library — model
+//! fwd/bwd runs inside the AOT-compiled XLA artifacts.  The hot paths here
+//! (`matmul` family, axpy) are tuned in the §Perf pass: blocked loops over
+//! contiguous rows so the single-core CPU stays in L1/L2.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+pub mod ops;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, std) }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![1, 1], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-matrix {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.size_bytes(), 24);
+        assert!(Tensor::new(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_size() {
+        let t = Tensor::zeros(&[4, 3]);
+        assert!(t.clone().reshape(&[2, 6]).is_ok());
+        assert!(t.reshape(&[5, 2]).is_err());
+    }
+
+    #[test]
+    fn frob_norm_matches_manual() {
+        let t = Tensor::new(&[1, 3], vec![3.0, 4.0, 0.0]).unwrap();
+        assert!((t.frob_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randn_std() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[100, 100], 0.02, &mut rng);
+        let var = t.data().iter().map(|x| x * x).sum::<f32>() / t.len() as f32;
+        assert!((var.sqrt() - 0.02).abs() < 0.002);
+    }
+}

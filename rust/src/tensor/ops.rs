@@ -1,0 +1,216 @@
+//! Dense linear-algebra ops on host tensors.
+//!
+//! `matmul` is the host hot path for the GaLore/LoRA baselines and the
+//! projector manager; it uses an ikj loop order (stream rows of B against an
+//! accumulator row of C) which vectorizes well and is cache-friendly for
+//! row-major data.  All ops are single-threaded by design — the coordinator
+//! dedicates its worker threads at the schedule level, not inside kernels.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// C = A @ B.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    if k != k2 {
+        bail!("matmul shape mismatch: {:?} @ {:?}", a.shape(), b.shape());
+    }
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i in 0..m {
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for l in 0..k {
+            let av = ad[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[l * n..(l + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// C = A^T @ B  (A: [k, m], B: [k, n] -> C: [m, n]) without materializing A^T.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    if k != k2 {
+        bail!("matmul_tn shape mismatch: {:?}^T @ {:?}", a.shape(), b.shape());
+    }
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for l in 0..k {
+        let arow = &ad[l * m..(l + 1) * m];
+        let brow = &bd[l * n..(l + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// C = A @ B^T  (A: [m, k], B: [n, k] -> C: [m, n]); dot-product form.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    if k != k2 {
+        bail!("matmul_nt shape mismatch: {:?} @ {:?}^T", a.shape(), b.shape());
+    }
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            cd[i * n + j] = acc;
+        }
+    }
+    Ok(c)
+}
+
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let mut t = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            t.set2(j, i, a.at2(i, j));
+        }
+    }
+    t
+}
+
+/// y += alpha * x (elementwise, any matching shapes).
+pub fn axpy(y: &mut Tensor, alpha: f32, x: &Tensor) {
+    assert_eq!(y.shape(), x.shape());
+    for (yv, xv) in y.data_mut().iter_mut().zip(x.data()) {
+        *yv += alpha * xv;
+    }
+}
+
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x - y).collect();
+    Tensor::new(a.shape(), data).unwrap()
+}
+
+pub fn scale(a: &mut Tensor, s: f32) {
+    for v in a.data_mut() {
+        *v *= s;
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(r: &mut Rng, m: usize, n: usize) -> Tensor {
+        Tensor::randn(&[m, n], 1.0, r)
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        assert!(matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(5);
+        let a = rand_mat(&mut r, 7, 4);
+        assert!(transpose(&transpose(&a)).allclose(&a, 0.0));
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transpose() {
+        check(
+            "tn/nt-vs-transpose",
+            20,
+            |r| {
+                let (m, k, n) = (1 + r.below(12), 1 + r.below(12), 1 + r.below(12));
+                (rand_mat(r, k, m), rand_mat(r, k, n), rand_mat(r, m, n))
+            },
+            |(a, b, c)| {
+                let tn = matmul_tn(a, b).unwrap();
+                let tn_ref = matmul(&transpose(a), b).unwrap();
+                if !tn.allclose(&tn_ref, 1e-4) {
+                    return Err("tn mismatch".into());
+                }
+                let nt = matmul_nt(b, c).unwrap();
+                let nt_ref = matmul(b, &transpose(c)).unwrap();
+                if !nt.allclose(&nt_ref, 1e-4) {
+                    return Err("nt mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matmul_associativity_property() {
+        check(
+            "matmul-assoc",
+            10,
+            |r| {
+                let (m, k, l, n) =
+                    (1 + r.below(8), 1 + r.below(8), 1 + r.below(8), 1 + r.below(8));
+                (rand_mat(r, m, k), rand_mat(r, k, l), rand_mat(r, l, n))
+            },
+            |(a, b, c)| {
+                let left = matmul(&matmul(a, b).unwrap(), c).unwrap();
+                let right = matmul(a, &matmul(b, c).unwrap()).unwrap();
+                if left.allclose(&right, 1e-3) {
+                    Ok(())
+                } else {
+                    Err(format!("assoc diff {}", left.max_abs_diff(&right)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn axpy_and_sub() {
+        let mut y = Tensor::new(&[1, 3], vec![1., 2., 3.]).unwrap();
+        let x = Tensor::new(&[1, 3], vec![1., 1., 1.]).unwrap();
+        axpy(&mut y, 2.0, &x);
+        assert_eq!(y.data(), &[3., 4., 5.]);
+        let d = sub(&y, &x);
+        assert_eq!(d.data(), &[2., 3., 4.]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall time with warmup, adaptive iteration count targeting a
+//! fixed measurement budget, and reports mean / std / p50 / min.  Used by
+//! `rust/benches/*.rs` (built with `harness = false`).
+
+use std::time::Instant;
+
+use super::stats::Series;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub min: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:40} {:>10} iters  mean {:>12}  p50 {:>12}  min {:>12}  (+/- {:>10})",
+            self.name,
+            self.iters,
+            super::human_secs(self.mean),
+            super::human_secs(self.p50),
+            super::human_secs(self.min),
+            super::human_secs(self.std),
+        );
+    }
+}
+
+/// Run `f` repeatedly for ~`budget_secs` (after warmup) and report stats.
+pub fn bench<F: FnMut()>(name: &str, budget_secs: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration: one timed call decides batching.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let target_samples = 30usize;
+    let per_sample = (budget_secs / target_samples as f64).max(once);
+    let batch = (per_sample / once).round().max(1.0) as usize;
+
+    let mut series = Series::default();
+    let deadline = Instant::now();
+    let mut total_iters = 0usize;
+    while deadline.elapsed().as_secs_f64() < budget_secs && series.n() < 1000 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        series.push(t.elapsed().as_secs_f64() / batch as f64);
+        total_iters += batch;
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean: series.mean(),
+        std: series.std(),
+        p50: series.percentile(50.0),
+        min: series.min(),
+    };
+    r.report();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", 0.05, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean > 0.0);
+        std::hint::black_box(x);
+    }
+}

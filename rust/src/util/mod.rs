@@ -1,0 +1,55 @@
+//! Small self-contained substrates (no crates.io in this environment):
+//! JSON, RNG, timing/stats, micro-bench harness, property-test helper.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count human-readably (GiB/MiB/KiB).
+pub fn human_bytes(b: u64) -> String {
+    const G: f64 = (1u64 << 30) as f64;
+    const M: f64 = (1u64 << 20) as f64;
+    const K: f64 = (1u64 << 10) as f64;
+    let bf = b as f64;
+    if bf >= G {
+        format!("{:.2} GiB", bf / G)
+    } else if bf >= M {
+        format!("{:.2} MiB", bf / M)
+    } else if bf >= K {
+        format!("{:.2} KiB", bf / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn human_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(14 << 30), "14.00 GiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(2.5), "2.500 s");
+        assert_eq!(human_secs(0.0025), "2.500 ms");
+        assert_eq!(human_secs(0.0000025), "2.5 us");
+    }
+}

@@ -1,0 +1,52 @@
+//! Tiny property-testing helper (proptest is unavailable offline).
+//!
+//! `check(cases, gen, prop)` draws `cases` random inputs from `gen` and
+//! asserts `prop`; on failure it reports the seed + case index so the case
+//! is exactly reproducible (all generation flows through `util::rng::Rng`).
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` random inputs. Panics with the failing seed/case.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> std::result::Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let seed = std::env::var("LSP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |r| (r.below(100) as i64, r.below(100) as i64), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics() {
+        check("always-fails", 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

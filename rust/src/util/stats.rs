@@ -1,0 +1,104 @@
+//! Timing + summary statistics used by metrics and the bench harness.
+
+use std::time::Instant;
+
+/// Accumulates duration samples for one phase (e.g. "bwd", "offload").
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    pub samples: Vec<f64>,
+}
+
+impl Series {
+    pub fn push(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.total() / self.samples.len() as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((s.len() - 1) as f64 * p / 100.0).round() as usize;
+        s[idx]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Scoped stopwatch: `let _t = sw.start();` records on drop.
+pub struct Stopwatch<'a> {
+    series: &'a mut Series,
+    t0: Instant,
+}
+
+impl Series {
+    pub fn start(&mut self) -> Stopwatch<'_> {
+        Stopwatch { series: self, t0: Instant::now() }
+    }
+}
+
+impl Drop for Stopwatch<'_> {
+    fn drop(&mut self) {
+        self.series.push(self.t0.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n(), 4);
+        assert_eq!(s.total(), 10.0);
+        assert_eq!(s.mean(), 2.5);
+        assert!((s.std() - 1.2909944).abs() < 1e-6);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+        assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn stopwatch_records() {
+        let mut s = Series::default();
+        {
+            let _t = s.start();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(s.n(), 1);
+        assert!(s.samples[0] >= 0.002);
+    }
+}

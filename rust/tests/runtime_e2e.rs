@@ -1,0 +1,479 @@
+//! Runtime integration tests: load the tiny artifacts and cross-check every
+//! executable against the rust host oracles (sparse/, optim/, tensor/).
+//!
+//! These tests require `make artifacts` (or `LSP_ARTIFACTS` pointing at a
+//! tiny artifact build); they skip with a note otherwise so `cargo test`
+//! stays green on a fresh checkout.
+
+use lsp_offload::model::manifest::find_artifacts;
+use lsp_offload::optim::AdamState;
+use lsp_offload::runtime::Engine;
+use lsp_offload::sparse::ProjectorPair;
+use lsp_offload::tensor::Tensor;
+use lsp_offload::util::rng::Rng;
+
+/// Compile once per thread, share across that thread's tests.
+fn with_engine(f: impl FnOnce(&Engine)) {
+    thread_local! {
+        static ENGINE: std::cell::OnceCell<Option<Engine>> =
+            const { std::cell::OnceCell::new() };
+    }
+    ENGINE.with(|c| {
+        let eng = c.get_or_init(|| {
+            let dir = find_artifacts(None, "tiny").ok()?;
+            Engine::load(&dir).ok()
+        });
+        match eng {
+            Some(e) => f(e),
+            None => eprintln!("SKIP: tiny artifacts not found; run `make artifacts`"),
+        }
+    });
+}
+
+#[test]
+fn embed_fwd_adds_wte_and_wpe() {
+    with_engine(|eng| {
+        let cfg = eng.man.config.clone();
+        let e = eng.exec("embed_fwd").unwrap();
+        let tokens = vec![1i32; cfg.batch * cfg.seq];
+        let wte = vec![0.5f32; cfg.vocab * cfg.d_model];
+        let wpe = vec![0.25f32; cfg.seq * cfg.d_model];
+        let out = e
+            .call(&[
+                eng.lit_i32(&[cfg.batch, cfg.seq], &tokens).unwrap(),
+                eng.lit_f32(&[cfg.vocab, cfg.d_model], &wte).unwrap(),
+                eng.lit_f32(&[cfg.seq, cfg.d_model], &wpe).unwrap(),
+            ])
+            .unwrap();
+        let h = eng.to_vec_f32(&out[0]).unwrap();
+        assert_eq!(h.len(), cfg.batch * cfg.seq * cfg.d_model);
+        assert!(h.iter().all(|&x| (x - 0.75).abs() < 1e-6));
+    });
+}
+
+#[test]
+fn compress_artifact_matches_host_oracle() {
+    with_engine(|eng| {
+        let mut rng = Rng::new(11);
+        let kinds = eng.man.kinds.clone();
+        for (kind, km) in &kinds {
+            let pair = ProjectorPair::init(km.m, km.n, km.d, km.r, &mut rng);
+            let g = Tensor::randn(&[km.m, km.n], 1.0, &mut rng);
+            let want = pair.compress(&g).unwrap();
+
+            let (pgi, pgv) = pair.p.to_gather().unwrap();
+            let (qgi, qgv) = pair.q.to_gather().unwrap();
+            let e = eng.exec(&format!("compress_{kind}")).unwrap();
+            let out = e
+                .call(&[
+                    eng.lit_tensor(&g).unwrap(),
+                    eng.lit_i32(&[km.d, km.lp], &pgi).unwrap(),
+                    eng.lit_f32(&[km.d, km.lp], &pgv).unwrap(),
+                    eng.lit_i32(&[km.d, km.lq], &qgi).unwrap(),
+                    eng.lit_f32(&[km.d, km.lq], &qgv).unwrap(),
+                ])
+                .unwrap();
+            let got = eng.to_tensor(&out[0], &[km.d, km.d]).unwrap();
+            let err = got.max_abs_diff(&want);
+            assert!(err < 1e-3, "compress_{kind} diff {err}");
+        }
+    });
+}
+
+#[test]
+fn apply_artifact_matches_host_oracle() {
+    with_engine(|eng| {
+        let mut rng = Rng::new(13);
+        let (kind, km) = {
+            let (k, m) = eng.man.kinds.iter().next().unwrap();
+            (k.clone(), m.clone())
+        };
+        let pair = ProjectorPair::init(km.m, km.n, km.d, km.r, &mut rng);
+        let w0 = Tensor::randn(&[km.m, km.n], 1.0, &mut rng);
+        let ds = Tensor::randn(&[km.d, km.d], 1.0, &mut rng);
+        let lr = 0.05f32;
+
+        let mut want = w0.clone();
+        pair.apply(&mut want, &ds, lr).unwrap();
+
+        let e = eng.exec(&format!("apply_{kind}")).unwrap();
+        let out = e
+            .call(&[
+                eng.lit_tensor(&w0).unwrap(),
+                eng.lit_i32(&[km.m, km.r], &pair.p.idx).unwrap(),
+                eng.lit_f32(&[km.m, km.r], &pair.p.val).unwrap(),
+                eng.lit_i32(&[km.n, km.r], &pair.q.idx).unwrap(),
+                eng.lit_f32(&[km.n, km.r], &pair.q.val).unwrap(),
+                eng.lit_tensor(&ds).unwrap(),
+                eng.lit_scalar(lr).unwrap(),
+            ])
+            .unwrap();
+        let got = eng.to_tensor(&out[0], &[km.m, km.n]).unwrap();
+        let err = got.max_abs_diff(&want);
+        assert!(err < 1e-3, "apply_{kind} diff {err}");
+    });
+}
+
+#[test]
+fn bias_artifact_matches_host_oracle() {
+    with_engine(|eng| {
+        let mut rng = Rng::new(17);
+        let (kind, km) = {
+            let (k, m) = eng.man.kinds.iter().next().unwrap();
+            (k.clone(), m.clone())
+        };
+        let pair = ProjectorPair::init(km.m, km.n, km.d, km.r, &mut rng);
+        let g = Tensor::randn(&[km.m, km.n], 1.0, &mut rng);
+        let (rel_want, abs_want, norm_want) = pair.bias(&g).unwrap();
+
+        let e = eng.exec(&format!("bias_{kind}")).unwrap();
+        let out = e
+            .call(&[
+                eng.lit_tensor(&g).unwrap(),
+                eng.lit_i32(&[km.m, km.r], &pair.p.idx).unwrap(),
+                eng.lit_f32(&[km.m, km.r], &pair.p.val).unwrap(),
+                eng.lit_i32(&[km.n, km.r], &pair.q.idx).unwrap(),
+                eng.lit_f32(&[km.n, km.r], &pair.q.val).unwrap(),
+            ])
+            .unwrap();
+        let rel = eng.to_vec_f32(&out[0]).unwrap()[0];
+        let abs = eng.to_vec_f32(&out[1]).unwrap()[0];
+        let norm = eng.to_vec_f32(&out[2]).unwrap()[0];
+        assert!((rel - rel_want).abs() < 1e-3, "rel {rel} vs {rel_want}");
+        assert!((abs - abs_want).abs() / abs_want.max(1.0) < 1e-3);
+        assert!((norm - norm_want).abs() / norm_want < 1e-4);
+    });
+}
+
+#[test]
+fn adam_sub_artifact_matches_native_fused_adam() {
+    with_engine(|eng| {
+        let mut rng = Rng::new(19);
+        let (kind, km) = {
+            let (k, m) = eng.man.kinds.iter().next().unwrap();
+            (k.clone(), m.clone())
+        };
+        let n = km.d * km.d;
+        let mut native = AdamState::new(n);
+        let mut m = vec![0f32; n];
+        let mut v = vec![0f32; n];
+        let e = eng.exec(&format!("adam_sub_{kind}")).unwrap();
+        for t in 1..=3 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let want = native.step_vec(&g);
+            let out = e
+                .call(&[
+                    eng.lit_f32(&[km.d, km.d], &g).unwrap(),
+                    eng.lit_f32(&[km.d, km.d], &m).unwrap(),
+                    eng.lit_f32(&[km.d, km.d], &v).unwrap(),
+                    eng.lit_scalar(t as f32).unwrap(),
+                ])
+                .unwrap();
+            let delta = eng.to_vec_f32(&out[0]).unwrap();
+            m = eng.to_vec_f32(&out[1]).unwrap();
+            v = eng.to_vec_f32(&out[2]).unwrap();
+            let max_err = delta
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-4, "step {t}: adam delta diff {max_err}");
+        }
+    });
+}
+
+#[test]
+fn learn_step_reduces_estimation_bias() {
+    with_engine(|eng| {
+        let mut rng = Rng::new(23);
+        let (kind, km) = {
+            let (k, m) = eng.man.kinds.iter().next().unwrap();
+            (k.clone(), m.clone())
+        };
+        let pair = ProjectorPair::init(km.m, km.n, km.d, km.r, &mut rng);
+        // A gradient with low-rank structure (realistic for transformer
+        // gradients and learnable by the projector).
+        let u = Tensor::randn(&[km.m, 2], 1.0, &mut rng);
+        let v = Tensor::randn(&[2, km.n], 1.0, &mut rng);
+        let g = lsp_offload::tensor::ops::matmul(&u, &v).unwrap();
+
+        let e = eng.exec(&format!("learn_{kind}")).unwrap();
+        let mut p_val = pair.p.val.clone();
+        let mut q_val = pair.q.val.clone();
+        let mut mp = vec![0f32; p_val.len()];
+        let mut vp = vec![0f32; p_val.len()];
+        let mut mq = vec![0f32; q_val.len()];
+        let mut vq = vec![0f32; q_val.len()];
+        let mut first_bias = 0f32;
+        let mut last_bias = 0f32;
+        for t in 1..=30 {
+            let out = e
+                .call(&[
+                    eng.lit_tensor(&g).unwrap(),
+                    eng.lit_i32(&[km.m, km.r], &pair.p.idx).unwrap(),
+                    eng.lit_f32(&[km.m, km.r], &p_val).unwrap(),
+                    eng.lit_i32(&[km.n, km.r], &pair.q.idx).unwrap(),
+                    eng.lit_f32(&[km.n, km.r], &q_val).unwrap(),
+                    eng.lit_f32(&[km.m, km.r], &mp).unwrap(),
+                    eng.lit_f32(&[km.m, km.r], &vp).unwrap(),
+                    eng.lit_f32(&[km.n, km.r], &mq).unwrap(),
+                    eng.lit_f32(&[km.n, km.r], &vq).unwrap(),
+                    eng.lit_scalar(t as f32).unwrap(),
+                    eng.lit_scalar(0.02).unwrap(),
+                ])
+                .unwrap();
+            p_val = eng.to_vec_f32(&out[0]).unwrap();
+            q_val = eng.to_vec_f32(&out[1]).unwrap();
+            mp = eng.to_vec_f32(&out[2]).unwrap();
+            vp = eng.to_vec_f32(&out[3]).unwrap();
+            mq = eng.to_vec_f32(&out[4]).unwrap();
+            vq = eng.to_vec_f32(&out[5]).unwrap();
+            let bias = eng.to_vec_f32(&out[6]).unwrap()[0];
+            if t == 1 {
+                first_bias = bias;
+            }
+            last_bias = bias;
+        }
+        assert!(
+            last_bias < first_bias * 0.9,
+            "learning did not reduce bias: {first_bias} -> {last_bias}"
+        );
+    });
+}
+
+#[test]
+fn axpy_entries_apply_delta() {
+    with_engine(|eng| {
+        let len = eng.man.axpy_lens[0];
+        let e = eng.exec(&format!("axpy_{len}")).unwrap();
+        let w = vec![1.0f32; len];
+        let delta = vec![0.5f32; len];
+        let out = e
+            .call(&[
+                eng.lit_f32(&[len], &w).unwrap(),
+                eng.lit_f32(&[len], &delta).unwrap(),
+                eng.lit_scalar(0.1).unwrap(),
+            ])
+            .unwrap();
+        let got = eng.to_vec_f32(&out[0]).unwrap();
+        assert!(got.iter().all(|&x| (x - 0.95).abs() < 1e-6));
+    });
+}
+
+#[test]
+fn per_layer_composition_matches_monolith_train_step() {
+    with_engine(|eng| {
+        use lsp_offload::model::ParamStore;
+        let cfg = eng.man.config.clone();
+        let ps = ParamStore::init(&eng.man, 42).unwrap();
+        let mut rng = Rng::new(7);
+        let tokens: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let targets: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+        // ---- monolith --------------------------------------------------
+        let mono = eng.exec("train_step").unwrap();
+        let mut args = vec![
+            eng.lit_i32(&[cfg.batch, cfg.seq], &tokens).unwrap(),
+            eng.lit_i32(&[cfg.batch, cfg.seq], &targets).unwrap(),
+        ];
+        for t in &ps.tensors {
+            args.push(eng.lit_tensor(t).unwrap());
+        }
+        let mono_out = mono.call(&args).unwrap();
+        let mono_loss = eng.to_vec_f32(&mono_out[0]).unwrap()[0];
+        assert!(mono_loss.is_finite() && mono_loss > 0.0);
+
+        // ---- per-layer composition (fwd) --------------------------------
+        let ef = eng.exec("embed_fwd").unwrap();
+        let mut h = ef
+            .call(&[
+                eng.lit_i32(&[cfg.batch, cfg.seq], &tokens).unwrap(),
+                eng.lit_tensor(ps.get("wte").unwrap()).unwrap(),
+                eng.lit_tensor(ps.get("wpe").unwrap()).unwrap(),
+            ])
+            .unwrap()
+            .remove(0);
+        let bf = eng.exec("block_fwd").unwrap();
+        let mut h_inputs: Vec<Vec<f32>> = Vec::new();
+        for layer in 0..cfg.n_layer {
+            h_inputs.push(h.to_vec::<f32>().unwrap());
+            let mut args = vec![h];
+            for i in ps.block_range(&eng.man, layer) {
+                args.push(eng.lit_tensor(&ps.tensors[i]).unwrap());
+            }
+            h = bf.call(&args).unwrap().remove(0);
+        }
+        let hb = eng.exec("head_loss_bwd").unwrap();
+        let out = hb
+            .call(&[
+                h,
+                eng.lit_tensor(ps.get("lnf_g").unwrap()).unwrap(),
+                eng.lit_tensor(ps.get("lnf_b").unwrap()).unwrap(),
+                eng.lit_tensor(ps.get("wte").unwrap()).unwrap(),
+                eng.lit_i32(&[cfg.batch, cfg.seq], &targets).unwrap(),
+            ])
+            .unwrap();
+        let loss = eng.to_vec_f32(&out[0]).unwrap()[0];
+        assert!(
+            (loss - mono_loss).abs() < 1e-4,
+            "per-layer loss {loss} vs monolith {mono_loss}"
+        );
+
+        // ---- per-layer bwd: compare layer-0 grads to the monolith -------
+        let hshape = [cfg.batch, cfg.seq, cfg.d_model];
+        let mut d_h = out[1].to_vec::<f32>().unwrap();
+        let bb = eng.exec("block_bwd").unwrap();
+        for layer in (0..cfg.n_layer).rev() {
+            let mut args = vec![eng.lit_f32(&hshape, &h_inputs[layer]).unwrap()];
+            for i in ps.block_range(&eng.man, layer) {
+                args.push(eng.lit_tensor(&ps.tensors[i]).unwrap());
+            }
+            args.push(eng.lit_f32(&hshape, &d_h).unwrap());
+            let outs = bb.call(&args).unwrap();
+            d_h = outs[0].to_vec::<f32>().unwrap();
+            if layer == 0 {
+                // Monolith outputs: loss, d_wte, d_wpe, <block grads>, ...
+                let npb = eng.man.block_params.len();
+                for p in 0..npb {
+                    let mono_g = eng.to_vec_f32(&mono_out[3 + p]).unwrap();
+                    let got_g = eng.to_vec_f32(&outs[1 + p]).unwrap();
+                    let max_err = mono_g
+                        .iter()
+                        .zip(&got_g)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0f32, f32::max);
+                    assert!(max_err < 2e-3, "layer0 param {p} grad diff {max_err}");
+                }
+            }
+        }
+
+        // embed_bwd consumes the final d_h.
+        let eb = eng.exec("embed_bwd").unwrap();
+        let outs = eb
+            .call(&[
+                eng.lit_i32(&[cfg.batch, cfg.seq], &tokens).unwrap(),
+                eng.lit_f32(&hshape, &d_h).unwrap(),
+            ])
+            .unwrap();
+        let d_wpe = eng.to_vec_f32(&outs[1]).unwrap();
+        assert_eq!(d_wpe.len(), cfg.seq * cfg.d_model);
+    });
+}
+
+#[test]
+fn trainer_all_policies_step_and_descend() {
+    use lsp_offload::coordinator::policy::PolicyKind;
+    use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+    with_engine(|eng| {
+        for policy in [
+            PolicyKind::Native,
+            PolicyKind::Zero,
+            PolicyKind::Lsp,
+            PolicyKind::Lora,
+            PolicyKind::Galore,
+        ] {
+            let cfg = TrainConfig {
+                policy,
+                steps: 8,
+                bw_bytes_per_s: 1e9, // fast link: this test is about plumbing
+                check_freq: 4,
+                alpha: 0.9,
+                learn_budget: 5,
+                eval_every: 0,
+                log_every: 0,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(eng, cfg).unwrap();
+            let rep = tr.train().unwrap();
+            assert_eq!(rep.steps, 8, "{policy:?}");
+            let first = rep.loss_curve.first().unwrap().1;
+            let last = rep.final_train_loss;
+            assert!(first.is_finite() && last.is_finite(), "{policy:?}");
+            // Within 8 steps the loss must not blow up; most policies dip.
+            assert!(last < first * 1.1, "{policy:?}: {first} -> {last}");
+            if policy.offloads() {
+                assert!(rep.d2h_bytes > 0, "{policy:?} moved no gradients");
+                assert_eq!(rep.d2h_bytes, rep.h2d_bytes, "{policy:?} asymmetric");
+            } else {
+                assert_eq!(rep.d2h_bytes, 0, "{policy:?} should not offload");
+            }
+            if policy == PolicyKind::Lsp {
+                assert!(rep.projector_refreshes > 0, "projectors never learned");
+            }
+        }
+    });
+}
+
+#[test]
+fn trainer_lsp_moves_far_less_than_zero() {
+    use lsp_offload::coordinator::policy::PolicyKind;
+    use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+    with_engine(|eng| {
+        let run = |policy| {
+            let cfg = TrainConfig {
+                policy,
+                steps: 4,
+                bw_bytes_per_s: 1e9,
+                check_freq: 0, // no projector churn; traffic accounting only
+                eval_every: 0,
+                log_every: 0,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(eng, cfg).unwrap();
+            tr.train().unwrap()
+        };
+        let zero = run(PolicyKind::Zero);
+        let lsp = run(PolicyKind::Lsp);
+        // Per LSP'd matrix: d^2 vs m*n elements; plus shared small params.
+        assert!(
+            lsp.d2h_bytes * 2 < zero.d2h_bytes,
+            "lsp {} vs zero {}",
+            lsp.d2h_bytes,
+            zero.d2h_bytes
+        );
+    });
+}
+
+#[test]
+fn trainer_deterministic_given_seed_native() {
+    use lsp_offload::coordinator::policy::PolicyKind;
+    use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+    with_engine(|eng| {
+        let run = || {
+            let cfg = TrainConfig {
+                policy: PolicyKind::Native,
+                steps: 4,
+                eval_every: 0,
+                log_every: 0,
+                seed: 77,
+                ..TrainConfig::default()
+            };
+            let mut tr = Trainer::new(eng, cfg).unwrap();
+            tr.train().unwrap().loss_curve
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "native training must be bit-deterministic");
+    });
+}
+
+#[test]
+fn eval_loss_is_finite_and_near_uniform_at_init() {
+    use lsp_offload::coordinator::policy::PolicyKind;
+    use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+    with_engine(|eng| {
+        let cfg = TrainConfig {
+            policy: PolicyKind::Native,
+            steps: 1,
+            eval_every: 0,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(eng, cfg).unwrap();
+        let el = tr.eval_loss().unwrap();
+        let uniform = (eng.man.config.vocab as f32).ln();
+        assert!((el - uniform).abs() < 1.0, "eval {el} vs ln(V) {uniform}");
+    });
+}

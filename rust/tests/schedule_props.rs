@@ -1,0 +1,186 @@
+//! Property tests over the DES scheduler and the offload pipelines
+//! (hand-rolled `util::prop` — proptest is unavailable offline).
+
+use lsp_offload::model::memory::PaperModel;
+use lsp_offload::sim::cost_model::{HardwareProfile, Workload};
+use lsp_offload::sim::engine::{makespan, validate, Resource, Sim};
+use lsp_offload::sim::schedules::{build_schedule, build_sim, ScheduleKind};
+use lsp_offload::util::prop::check;
+use lsp_offload::util::rng::Rng;
+
+/// Random DAGs: every schedule produced by the engine respects deps and
+/// never overlaps tasks on a single-server resource.
+#[test]
+fn random_dags_schedule_validly() {
+    check(
+        "sim-valid-schedules",
+        40,
+        |r: &mut Rng| {
+            let mut sim = Sim::new();
+            let n = 5 + r.below(40);
+            for i in 0..n {
+                let res = match r.below(4) {
+                    0 => Resource::Gpu,
+                    1 => Resource::Cpu,
+                    2 => Resource::H2D,
+                    _ => Resource::D2H,
+                };
+                // Deps drawn from earlier tasks only (keeps it a DAG).
+                let mut deps = Vec::new();
+                if i > 0 {
+                    for _ in 0..r.below(3) {
+                        deps.push(r.below(i));
+                    }
+                    deps.sort_unstable();
+                    deps.dedup();
+                }
+                let dur = r.f64() * 2.0;
+                let prio = r.below(7) as i64 - 3;
+                sim.add_prio(format!("t{i}"), res, dur, &deps, prio);
+            }
+            sim
+        },
+        |sim| {
+            let sched = sim.run().map_err(|e| e.to_string())?;
+            validate(sim.tasks(), &sched)?;
+            // Makespan is at least the busiest resource's total work.
+            for &res in &lsp_offload::sim::engine::ALL_RESOURCES {
+                let busy: f64 = sim
+                    .tasks()
+                    .iter()
+                    .filter(|t| t.resource == res)
+                    .map(|t| t.duration)
+                    .sum();
+                if makespan(&sched) + 1e-9 < busy {
+                    return Err(format!("makespan below {res:?} busy time"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// All paper schedules validate across random workload scales, and the
+/// key dominance relations hold: lsp <= zero, native <= zero.
+#[test]
+fn paper_schedules_hold_orderings_across_scales() {
+    check(
+        "schedule-orderings",
+        15,
+        |r: &mut Rng| {
+            let hw = if r.below(2) == 0 {
+                HardwareProfile::workstation()
+            } else {
+                HardwareProfile::laptop()
+            };
+            let model = match r.below(3) {
+                0 => PaperModel::Llama7B,
+                1 => PaperModel::Gpt2_1_3B,
+                _ => PaperModel::DeepseekCoder1_3B,
+            };
+            let tokens = 256 * (1 + r.below(16)) as u64;
+            let d_sub = 256 * (1 + r.below(8));
+            (hw, Workload::paper(model, tokens, d_sub))
+        },
+        |(hw, w)| {
+            let run = |k| -> Result<f64, String> {
+                let sim = build_sim(k, hw, w, 3);
+                let sched = sim.run().map_err(|e| e.to_string())?;
+                validate(sim.tasks(), &sched)?;
+                Ok(build_schedule(k, hw, w, 3).map_err(|e| e.to_string())?.iter_time)
+            };
+            let native = run(ScheduleKind::Native)?;
+            let zero = run(ScheduleKind::Zero)?;
+            let lsp = run(ScheduleKind::LspLayerwise)?;
+            let zero_lw = run(ScheduleKind::ZeroLayerwise)?;
+            if lsp > zero * 1.02 {
+                return Err(format!("lsp {lsp} slower than zero {zero}"));
+            }
+            if native > zero * 1.02 {
+                return Err(format!("native {native} slower than zero {zero}"));
+            }
+            if zero_lw > zero * 1.05 {
+                return Err(format!("layerwise {zero_lw} slower than zero {zero}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Eq. 4 structure: LSP's iteration time never falls below any of its four
+/// lower-bound terms (GPU path, either link, CPU update).
+#[test]
+fn lsp_iter_respects_eq4_lower_bounds() {
+    check(
+        "eq4-lower-bounds",
+        12,
+        |r: &mut Rng| {
+            let hw = HardwareProfile::workstation();
+            let tokens = 512 * (1 + r.below(8)) as u64;
+            let d_sub = 512 * (1 + r.below(4));
+            (hw, Workload::paper(PaperModel::Llama7B, tokens, d_sub))
+        },
+        |(hw, w)| {
+            let c = lsp_offload::sim::cost_model::Costs::derive(hw, w);
+            let n = w.n_layers as f64;
+            let iter = build_schedule(ScheduleKind::LspLayerwise, hw, w, 4)
+                .map_err(|e| e.to_string())?
+                .iter_time;
+            let bounds = [
+                n * (c.fwd_layer_gpu + c.bwd_layer_gpu),
+                n * c.offload_layer_sub,
+                n * c.upload_layer_sub,
+                n * c.upd_layer_cpu_sub,
+            ];
+            for (i, b) in bounds.iter().enumerate() {
+                if iter < b * 0.999 {
+                    return Err(format!("iter {iter} below bound {i} = {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The priority queue + link pipeline preserves every message exactly once
+/// (no loss, no duplication) under concurrent producers.
+#[test]
+fn pipeline_delivers_exactly_once() {
+    use lsp_offload::coordinator::comm::{Link, PrioQueue};
+    use std::sync::Arc;
+
+    check(
+        "pipeline-exactly-once",
+        8,
+        |r: &mut Rng| (1 + r.below(50), 1 + r.below(4)),
+        |&(n_msgs, _)| {
+            let ingress = Arc::new(PrioQueue::<(u64, Vec<u8>)>::new());
+            let egress = Arc::new(PrioQueue::<(u64, Vec<u8>)>::new());
+            let mut link = Link::spawn(
+                "prop",
+                1e12,
+                1.0,
+                ingress.clone(),
+                egress.clone(),
+                |m: &(u64, Vec<u8>)| m.1.len(),
+                |_| 0,
+            );
+            for i in 0..n_msgs {
+                ingress.push(0, (i as u64, vec![0u8; 16]));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..n_msgs {
+                let (id, _) = egress.pop().ok_or("queue closed early")?;
+                if !seen.insert(id) {
+                    return Err(format!("duplicate message {id}"));
+                }
+            }
+            ingress.close();
+            link.stop();
+            if !egress.is_empty() {
+                return Err("extra messages appeared".into());
+            }
+            Ok(())
+        },
+    );
+}
