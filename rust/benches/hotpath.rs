@@ -1,29 +1,65 @@
 //! Hot-path micro-benchmarks (own harness; criterion unavailable offline).
-//! Targets of the §Perf pass: the fused CPU Adam (the offload target's
-//! dominant kernel), host sparse compress/decompress, the matmul substrate,
-//! the DES engine, the priority queue, and the JSON/manifest parser.
-//! Run with `cargo bench --bench hotpath [-- <filter>]`.
+//! Targets of the §Perf pass: the blocked matmul substrate vs its naive
+//! reference, host sparse compress/decompress (streamed vs ROW-scalar
+//! reference), the fused CPU Adam, the DES engine, the priority queue, and
+//! the JSON/manifest parser.
+//!
+//! Run with `cargo bench --bench hotpath [-- <filter>]`.  The special
+//! argument `smoke` shrinks shapes and budget for CI (`scripts/check.sh`).
+//! A full unfiltered run writes the blocked-vs-ref numbers machine-readably
+//! to `BENCH_hotpath.json` at the repo root so later PRs can track the perf
+//! trajectory; smoke/filtered runs write `BENCH_hotpath.smoke.json`.
 
 use lsp_offload::model::memory::PaperModel;
 use lsp_offload::optim::AdamState;
 use lsp_offload::sim::{build_schedule, HardwareProfile, ScheduleKind, Workload};
 use lsp_offload::sparse::ProjectorPair;
-use lsp_offload::tensor::ops::matmul;
+use lsp_offload::tensor::kernel::KernelConfig;
+use lsp_offload::tensor::ops::{matmul_ref, matmul_with};
 use lsp_offload::tensor::Tensor;
 use lsp_offload::util::bench::bench;
+use lsp_offload::util::json::Json;
 use lsp_offload::util::rng::Rng;
 
+fn result_row(
+    name: &str,
+    shape: &str,
+    impl_name: &str,
+    secs: f64,
+    gops: Option<f64>,
+    speedup_vs_ref: Option<f64>,
+) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(name.to_string())),
+        ("shape", Json::Str(shape.to_string())),
+        ("impl", Json::Str(impl_name.to_string())),
+        ("secs_min", Json::Num(secs)),
+    ];
+    if let Some(g) = gops {
+        pairs.push(("gops", Json::Num(g)));
+    }
+    if let Some(s) = speedup_vs_ref {
+        pairs.push(("speedup_vs_ref", Json::Num(s)));
+    }
+    Json::obj(pairs)
+}
+
 fn main() {
-    let filter = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-') && a != "bench");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "smoke");
+    let filter = args
+        .into_iter()
+        .find(|a| !a.starts_with('-') && a != "bench" && a != "smoke");
     let want = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
-    let budget = 1.0;
+    let budget = if smoke { 0.05 } else { 1.0 };
+    let threads = KernelConfig::default().resolved_threads().min(4);
+    let mut results: Vec<Json> = Vec::new();
 
     if want("adam") {
         // The CPU-side UPD step: params/s is the number the cost model's
         // `cpu_adam_params_per_s` wants to know for THIS machine.
-        for n in [1 << 14, 1 << 18, 1 << 21] {
+        let sizes: &[usize] = if smoke { &[1 << 14] } else { &[1 << 14, 1 << 18, 1 << 21] };
+        for &n in sizes {
             let mut st = AdamState::new(n);
             let mut rng = Rng::new(1);
             let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
@@ -31,48 +67,133 @@ fn main() {
             let r = bench(&format!("fused_adam n={n}"), budget, || {
                 st.fused_step(&g, &mut delta);
             });
-            println!("    -> {:.2} G params/s", n as f64 / r.min / 1e9);
-        }
-    }
-
-    if want("compress") {
-        let mut rng = Rng::new(2);
-        for (m, n, d, r) in [(512, 512, 256, 4), (1024, 1024, 512, 4)] {
-            let pair = ProjectorPair::init(m, n, d, r, &mut rng);
-            let g = Tensor::randn(&[m, n], 1.0, &mut rng);
-            bench(&format!("sparse_compress {m}x{n} d={d} r={r}"), budget, || {
-                std::hint::black_box(pair.compress(&g).unwrap());
-            });
-            let ds = Tensor::randn(&[d, d], 1.0, &mut rng);
-            bench(&format!("sparse_decompress {m}x{n} d={d} r={r}"), budget, || {
-                std::hint::black_box(pair.decompress(&ds).unwrap());
-            });
+            let gps = n as f64 / r.min / 1e9;
+            println!("    -> {gps:.2} G params/s");
+            results.push(result_row("fused_adam", &format!("n={n}"), "fused", r.min, Some(gps), None));
         }
     }
 
     if want("matmul") {
+        // Blocked vs naive reference. The acceptance target for this PR:
+        // blocked @ threads=4 must be >= 3x the reference at 1024x1024.
         let mut rng = Rng::new(3);
-        for s in [128usize, 256, 512] {
+        let sizes: &[usize] = if smoke { &[128, 256] } else { &[256, 512, 1024] };
+        for &s in sizes {
             let a = Tensor::randn(&[s, s], 1.0, &mut rng);
             let b = Tensor::randn(&[s, s], 1.0, &mut rng);
-            let r = bench(&format!("matmul {s}x{s}"), budget, || {
-                std::hint::black_box(matmul(&a, &b).unwrap());
+            let flops = 2.0 * (s as f64).powi(3);
+            let shape = format!("{s}x{s}x{s}");
+            let r_ref = bench(&format!("matmul_ref {s}x{s}"), budget, || {
+                std::hint::black_box(matmul_ref(&a, &b).unwrap());
             });
-            println!("    -> {:.2} GFLOP/s", 2.0 * (s as f64).powi(3) / r.min / 1e9);
+            results.push(result_row("matmul", &shape, "ref", r_ref.min, Some(flops / r_ref.min / 1e9), None));
+            let cfg1 = KernelConfig::with_threads(1);
+            let r_b1 = bench(&format!("matmul_blocked(t=1) {s}x{s}"), budget, || {
+                std::hint::black_box(matmul_with(&a, &b, &cfg1).unwrap());
+            });
+            results.push(result_row(
+                "matmul",
+                &shape,
+                "blocked_t1",
+                r_b1.min,
+                Some(flops / r_b1.min / 1e9),
+                Some(r_ref.min / r_b1.min),
+            ));
+            let cfgn = KernelConfig::with_threads(threads);
+            let r_bn = bench(&format!("matmul_blocked(t={threads}) {s}x{s}"), budget, || {
+                std::hint::black_box(matmul_with(&a, &b, &cfgn).unwrap());
+            });
+            results.push(result_row(
+                "matmul",
+                &shape,
+                &format!("blocked_t{threads}"),
+                r_bn.min,
+                Some(flops / r_bn.min / 1e9),
+                Some(r_ref.min / r_bn.min),
+            ));
+            println!(
+                "    -> ref {:.2} GFLOP/s | blocked t=1 {:.2} GFLOP/s ({:.2}x) | t={} {:.2} GFLOP/s ({:.2}x)",
+                flops / r_ref.min / 1e9,
+                flops / r_b1.min / 1e9,
+                r_ref.min / r_b1.min,
+                threads,
+                flops / r_bn.min / 1e9,
+                r_ref.min / r_bn.min,
+            );
+        }
+        if !smoke {
+            // Paper-relevant large shape, blocked only (the naive reference
+            // would eat the whole budget by itself).
+            let s = 2048;
+            let a = Tensor::randn(&[s, s], 1.0, &mut rng);
+            let b = Tensor::randn(&[s, s], 1.0, &mut rng);
+            let flops = 2.0 * (s as f64).powi(3);
+            let cfgn = KernelConfig::with_threads(threads);
+            let r = bench(&format!("matmul_blocked(t={threads}) {s}x{s}"), 2.0, || {
+                std::hint::black_box(matmul_with(&a, &b, &cfgn).unwrap());
+            });
+            let g = flops / r.min / 1e9;
+            println!("    -> {g:.2} GFLOP/s");
+            results.push(result_row(
+                "matmul",
+                &format!("{s}x{s}x{s}"),
+                &format!("blocked_t{threads}"),
+                r.min,
+                Some(g),
+                None,
+            ));
         }
     }
 
-    if want("sim") {
-        let hw = HardwareProfile::workstation();
-        let w = Workload::paper(PaperModel::Llama7B, 2048, 2048);
-        bench("des_lsp_layerwise_4iters", budget, || {
-            std::hint::black_box(
-                build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 4).unwrap(),
-            );
-        });
-        bench("des_zero_4iters", budget, || {
-            std::hint::black_box(build_schedule(ScheduleKind::Zero, &hw, &w, 4).unwrap());
-        });
+    if want("compress") {
+        // Streamed GATHER-layout compress/decompress vs the ROW-scalar
+        // reference, at the paper-relevant (m, n, d, r) shapes.
+        let mut rng = Rng::new(2);
+        let shapes: &[(usize, usize, usize, usize)] = if smoke {
+            &[(512, 512, 256, 4)]
+        } else {
+            &[(512, 512, 256, 4), (1024, 1024, 512, 4), (2048, 2048, 512, 4)]
+        };
+        let cfgn = KernelConfig::with_threads(threads);
+        for &(m, n, d, r) in shapes {
+            let pair = ProjectorPair::init(m, n, d, r, &mut rng);
+            let g = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let shape = format!("{m}x{n} d={d} r={r}");
+            let rr = bench(&format!("sparse_compress_ref {shape}"), budget, || {
+                std::hint::black_box(pair.compress_ref(&g).unwrap());
+            });
+            results.push(result_row("sparse_compress", &shape, "ref", rr.min, None, None));
+            let rs = bench(&format!("sparse_compress(t={threads}) {shape}"), budget, || {
+                std::hint::black_box(pair.compress_with(&g, &cfgn).unwrap());
+            });
+            results.push(result_row(
+                "sparse_compress",
+                &shape,
+                &format!("streamed_t{threads}"),
+                rs.min,
+                None,
+                Some(rr.min / rs.min),
+            ));
+            println!("    -> compress speedup {:.2}x", rr.min / rs.min);
+
+            let ds = Tensor::randn(&[d, d], 1.0, &mut rng);
+            let dr = bench(&format!("sparse_decompress_ref {shape}"), budget, || {
+                std::hint::black_box(pair.decompress_ref(&ds).unwrap());
+            });
+            results.push(result_row("sparse_decompress", &shape, "ref", dr.min, None, None));
+            let dsn = bench(&format!("sparse_decompress(t={threads}) {shape}"), budget, || {
+                std::hint::black_box(pair.decompress_with(&ds, &cfgn).unwrap());
+            });
+            results.push(result_row(
+                "sparse_decompress",
+                &shape,
+                &format!("streamed_t{threads}"),
+                dsn.min,
+                None,
+                Some(dr.min / dsn.min),
+            ));
+            println!("    -> decompress speedup {:.2}x", dr.min / dsn.min);
+        }
     }
 
     if want("queue") {
@@ -88,7 +209,20 @@ fn main() {
         });
     }
 
-    if want("json") {
+    if !smoke && want("sim") {
+        let hw = HardwareProfile::workstation();
+        let w = Workload::paper(PaperModel::Llama7B, 2048, 2048);
+        bench("des_lsp_layerwise_4iters", budget, || {
+            std::hint::black_box(
+                build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 4).unwrap(),
+            );
+        });
+        bench("des_zero_4iters", budget, || {
+            std::hint::black_box(build_schedule(ScheduleKind::Zero, &hw, &w, 4).unwrap());
+        });
+    }
+
+    if !smoke && want("json") {
         // Manifest-scale JSON parse (startup path).
         let blob = {
             let entries: Vec<String> = (0..40)
@@ -107,7 +241,7 @@ fn main() {
         });
     }
 
-    if want("engine") {
+    if !smoke && want("engine") {
         // PJRT dispatch overhead: smallest executable round-trip.
         match lsp_offload::model::manifest::find_artifacts(None, "tiny")
             .and_then(|d| lsp_offload::runtime::Engine::load(&d))
@@ -129,6 +263,38 @@ fn main() {
                 });
             }
             Err(e) => println!("(pjrt bench skipped: {e})"),
+        }
+    }
+
+    // ---- machine-readable trajectory -----------------------------------
+    let out = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("filter", filter.clone().map(Json::Str).unwrap_or(Json::Null)),
+        ("threads", Json::Num(threads as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let text = format!("{out}\n");
+    // Only a full, unfiltered run owns the trajectory file; smoke/filtered
+    // runs always land in BENCH_hotpath.smoke.json so tiny-shape or partial
+    // data never masquerades as the cross-PR source of truth.
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/../");
+    let full_run = !smoke && filter.is_none();
+    let path = if full_run {
+        format!("{root}BENCH_hotpath.json")
+    } else {
+        format!("{root}BENCH_hotpath.smoke.json")
+    };
+    match std::fs::write(&path, &text) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => {
+            // Fall back to cwd, keeping the same smoke/full name so partial
+            // data can never land in the trajectory file.
+            let fallback = if full_run { "BENCH_hotpath.json" } else { "BENCH_hotpath.smoke.json" };
+            eprintln!("could not write {path} ({e}); writing ./{fallback}");
+            if let Err(e2) = std::fs::write(fallback, &text) {
+                eprintln!("could not write ./{fallback} either ({e2}); results stdout-only");
+            }
         }
     }
 }

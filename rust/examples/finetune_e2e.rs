@@ -6,12 +6,12 @@
 //! ```sh
 //! make artifacts
 //! cargo run --release --example finetune_e2e -- [preset] [steps] [bw_gbps]
-//! # defaults: small 120 0.05   (tiny 40 0.05 for a fast run)
+//! # defaults: small 120 0.02   (tiny 40 0.02 for a fast run)
 //! ```
 //!
 //! Results (loss curves + breakdowns) are written to
-//! `target/e2e_<policy>.csv` and summarized on stdout; EXPERIMENTS.md
-//! records a reference run.
+//! `target/e2e_<policy>.csv` and summarized on stdout; ROADMAP.md records
+//! reference numbers.
 
 use anyhow::Result;
 use lsp_offload::coordinator::policy::PolicyKind;

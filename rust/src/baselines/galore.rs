@@ -5,7 +5,8 @@
 //! refreshes the gradient is projected to `S = P^T G` (r x n), Adam runs in
 //! that subspace, and the update `P dS` is applied at full size.  Memory
 //! and compute scale with r — the linear coupling LSP's sparse projectors
-//! break (Table 2).
+//! break (Table 2).  All GEMMs here (SVD power iteration, project,
+//! apply) run on the blocked multi-threaded substrate via `tensor::ops`.
 
 use anyhow::Result;
 

@@ -4,7 +4,9 @@
 //! shared bwd path, the adapter gradients are `dA = G B^T`, `dB = A^T G`
 //! (exact, since `W` is affine in `A`, `B`).  Adam runs "on device" (no
 //! offload) — matching how LoRA needs no CPU offloading in the paper's
-//! comparison; its weakness there is the rank-r optimization space.
+//! comparison; its weakness there is the rank-r optimization space.  The
+//! adapter GEMMs (`matmul_nt`/`matmul_tn`/`matmul`) run on the blocked
+//! multi-threaded substrate honoring the installed `KernelConfig`.
 
 use anyhow::Result;
 

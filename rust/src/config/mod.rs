@@ -93,6 +93,11 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
             "corpus_len" => cfg.corpus_len = v.as_usize()?,
             "glue_task" => cfg.glue_task = v.as_bool()?,
             "max_wall_secs" => cfg.max_wall_secs = v.as_f64()?,
+            // Blocked host-kernel substrate (tensor::kernel::KernelConfig).
+            "kernel_threads" => cfg.kernel.threads = v.as_usize()?,
+            "kernel_block_m" => cfg.kernel.block_m = v.as_usize()?,
+            "kernel_block_n" => cfg.kernel.block_n = v.as_usize()?,
+            "kernel_block_k" => cfg.kernel.block_k = v.as_usize()?,
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -159,6 +164,18 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     if let Some(v) = args.get_f64("budget-secs")? {
         cfg.max_wall_secs = v;
     }
+    if let Some(v) = args.get_u64("kernel-threads")? {
+        cfg.kernel.threads = v as usize;
+    }
+    if let Some(v) = args.get_u64("kernel-block-m")? {
+        cfg.kernel.block_m = v as usize;
+    }
+    if let Some(v) = args.get_u64("kernel-block-n")? {
+        cfg.kernel.block_n = v as usize;
+    }
+    if let Some(v) = args.get_u64("kernel-block-k")? {
+        cfg.kernel.block_k = v as usize;
+    }
     Ok(cfg)
 }
 
@@ -190,6 +207,24 @@ mod tests {
         assert!((cfg.alpha - 0.3).abs() < 1e-6);
         // Defaults survive.
         assert_eq!(cfg.eval_batches, TrainConfig::default().eval_batches);
+    }
+
+    #[test]
+    fn kernel_config_flags_and_json() {
+        let a = argv("train --kernel-threads 2 --kernel-block-k=128");
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.kernel.threads, 2);
+        assert_eq!(cfg.kernel.block_k, 128);
+        // Untouched knobs keep KernelConfig::default().
+        let d = crate::tensor::kernel::KernelConfig::default();
+        assert_eq!(cfg.kernel.block_m, d.block_m);
+        assert_eq!(cfg.kernel.block_n, d.block_n);
+
+        let j = Json::parse(r#"{"kernel_threads": 3, "kernel_block_n": 64}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.kernel.threads, 3);
+        assert_eq!(cfg.kernel.block_n, 64);
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //! artifact, i.e. Eq. 3 optimized on the GPU domain) and projects the
 //! CPU-resident subspace Adam moments onto the new subspace (Alg. 1 lines
 //! 8-9, via `state_proj_<kind>`).
+//!
+//! The host-side bias estimate (`ProjectorPair::bias`, a compress +
+//! decompress round-trip) runs on the blocked multi-threaded kernel
+//! substrate; its worker width is the `KernelConfig` the trainer negotiates
+//! and installs at startup.
 
 use anyhow::Result;
 use xla::PjRtBuffer;

@@ -38,6 +38,7 @@ use crate::data::{Batch, Batcher, Corpus, DataSource, GlueBatcher};
 use crate::model::ParamStore;
 use crate::optim::AdamState;
 use crate::runtime::Engine;
+use crate::tensor::kernel::{self, KernelConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -75,6 +76,11 @@ pub struct TrainConfig {
     /// Stop after this many wall-clock seconds (0 = no limit) — the paper's
     /// equal-time-budget comparisons (Table 3, Fig. 5).
     pub max_wall_secs: f64,
+    /// Blocked host-kernel shape (worker width + cache blocks). The width
+    /// is *negotiated*: offloading policies dedicate three schedule-level
+    /// threads (two links + CPU updater), which `Trainer::new` subtracts
+    /// before installing the config process-wide.
+    pub kernel: KernelConfig,
 }
 
 impl Default for TrainConfig {
@@ -100,6 +106,7 @@ impl Default for TrainConfig {
             corpus_len: 200_000,
             glue_task: false,
             max_wall_secs: 0.0,
+            kernel: KernelConfig::default(),
         }
     }
 }
@@ -155,6 +162,19 @@ pub struct Trainer<'e> {
 
 impl<'e> Trainer<'e> {
     pub fn new(eng: &'e Engine, cfg: TrainConfig) -> Result<Trainer<'e>> {
+        // Kernel-width negotiation: the offload pipeline owns three
+        // schedule-level threads (d2h link, h2d link, CPU updater), so the
+        // blocked host kernels (compress oracle, bias checks, baseline
+        // GEMMs, fused Adam callers) get the remaining hardware threads.
+        // The install is process-wide. Thread-count changes never affect
+        // numerics (results are bit-identical for every worker count);
+        // block-size changes do reorder f32 accumulation, so a process must
+        // not mix trainers with different block configs — every in-repo
+        // driver constructs its trainers from one config (see ROADMAP.md
+        // §Perf for the per-instance follow-up).
+        let reserved = if cfg.policy.offloads() { 3 } else { 0 };
+        kernel::install(cfg.kernel.negotiated(reserved));
+
         let man = &eng.man;
         let rng = Rng::new(cfg.seed);
         let params = ParamStore::init(man, cfg.seed ^ 0xA5A5)?;

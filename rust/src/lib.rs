@@ -17,10 +17,14 @@
 //! Python never runs on the training path: `make artifacts` AOT-compiles
 //! everything; the binary loads `artifacts/<preset>/` via PJRT (`runtime`).
 //!
-//! The offline build environment provides only the `xla` and `anyhow`
-//! crates, so `util` carries the substrates a richer environment would pull
-//! from crates.io: a JSON parser/printer, a deterministic RNG, a micro
-//! benchmarking harness, and a property-testing helper.
+//! The offline build environment provides only `anyhow` plus the vendored
+//! `xla` API shim (`rust/vendor/xla` — swap it for the real xla_extension
+//! bindings to run artifacts), so `util` carries the substrates a richer
+//! environment would pull from crates.io: a JSON parser/printer, a
+//! deterministic RNG, a micro benchmarking harness, and a property-testing
+//! helper.  The host hot path (matmul family, sparse compress/decompress)
+//! runs on the blocked multi-threaded kernel substrate in `tensor::kernel`
+//! / `tensor::pool`, configured via `KernelConfig` (see ROADMAP.md §Perf).
 
 pub mod analyze;
 pub mod baselines;

@@ -1,10 +1,16 @@
 //! Numerical linear algebra for the baselines and analyses:
 //! modified Gram-Schmidt QR, randomized subspace-iteration SVD (GaLore's
 //! projector), and an effective-rank estimator (Fig. 4 study).
+//!
+//! §Perf pass: everything here rides the blocked kernel substrate — the
+//! GEMMs inside `randomized_svd` (including the U/V reconstruction, now
+//! expressed as GEMMs instead of scalar loops) dispatch through
+//! `tensor::ops`, and QR works on A^T so its column operations become
+//! contiguous, vectorizable row operations.
 
 use anyhow::Result;
 
-use crate::tensor::ops::{matmul, matmul_nt, matmul_tn};
+use crate::tensor::ops::{dot, matmul, matmul_nt, matmul_tn, transpose};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -13,48 +19,48 @@ use crate::util::rng::Rng;
 /// falls below a relative tolerance are zeroed rather than normalized into
 /// noise.  Returns (Q [m, k], R [k, k]) with A = Q R and Q^T Q = I on the
 /// non-zero columns.
+///
+/// Internally operates on A^T so each column lives in one contiguous,
+/// cache-friendly row (same arithmetic, same order — results are
+/// bit-identical to the column-strided form).
 pub fn qr(a: &Tensor) -> (Tensor, Tensor) {
     let (m, k) = (a.rows(), a.cols());
-    let mut q = a.clone();
+    let mut qt = transpose(a); // [k, m]: row j is column j of A
+    let qtd = qt.data_mut();
     let mut r = Tensor::zeros(&[k, k]);
     let tol = 1e-6f32 * a.frob_norm().max(1e-30);
     for j in 0..k {
         for _pass in 0..2 {
             for l in 0..j {
-                let mut proj = 0.0f32;
-                for i in 0..m {
-                    proj += q.at2(i, l) * q.at2(i, j);
-                }
+                let (head, tail) = qtd.split_at_mut(j * m);
+                let ql = &head[l * m..(l + 1) * m];
+                let qj = &mut tail[..m];
+                let proj = dot(ql, qj);
                 if proj != 0.0 {
                     let rv = r.at2(l, j) + proj;
                     r.set2(l, j, rv);
-                    for i in 0..m {
-                        let v = q.at2(i, j) - proj * q.at2(i, l);
-                        q.set2(i, j, v);
+                    for (x, &y) in qj.iter_mut().zip(ql) {
+                        *x -= proj * y;
                     }
                 }
             }
         }
-        let mut norm = 0.0f64;
-        for i in 0..m {
-            norm += (q.at2(i, j) as f64).powi(2);
-        }
-        let norm = norm.sqrt() as f32;
+        let qj = &mut qtd[j * m..(j + 1) * m];
+        let norm =
+            qj.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
         if norm <= tol {
             // Rank-deficient direction: zero it out entirely.
             r.set2(j, j, 0.0);
-            for i in 0..m {
-                q.set2(i, j, 0.0);
-            }
+            qj.fill(0.0);
         } else {
             r.set2(j, j, norm);
             let inv = 1.0 / norm;
-            for i in 0..m {
-                q.set2(i, j, q.at2(i, j) * inv);
+            for x in qj.iter_mut() {
+                *x *= inv;
             }
         }
     }
-    (q, r)
+    (transpose(&qt), r)
 }
 
 /// Result of a truncated SVD: A ~ U diag(S) V^T.
@@ -83,32 +89,26 @@ pub fn randomized_svd(a: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> Resu
     // SVD of the small matrix B via eigen-decomposition of B B^T (Jacobi).
     let bbt = matmul_nt(&b, &b)?; // [over, over]
     let (evals, evecs) = sym_eig_jacobi(&bbt, 100);
-    // Sort descending.
+    // Sort descending and gather the selected eigenvectors as columns, so
+    // the U/V reconstruction is two blocked GEMMs instead of scalar loops.
     let mut order: Vec<usize> = (0..over).collect();
     order.sort_by(|&i, &j| evals[j].total_cmp(&evals[i]));
-    let mut u = Tensor::zeros(&[m, k]);
-    let mut v = Tensor::zeros(&[n, k]);
+    let mut sel = Tensor::zeros(&[over, k]);
     let mut s = Vec::with_capacity(k);
     for (col, &oi) in order.iter().take(k).enumerate() {
-        let sigma = evals[oi].max(0.0).sqrt();
-        s.push(sigma);
-        // u_col = Q * evec
-        for i in 0..m {
-            let mut acc = 0.0f32;
-            for l in 0..over {
-                acc += q.at2(i, l) * evecs.at2(l, oi);
-            }
-            u.set2(i, col, acc);
+        s.push(evals[oi].max(0.0).sqrt());
+        for l in 0..over {
+            sel.set2(l, col, evecs.at2(l, oi));
         }
-        // v_col = B^T evec / sigma
-        if sigma > 1e-12 {
-            for jn in 0..n {
-                let mut acc = 0.0f32;
-                for l in 0..over {
-                    acc += b.at2(l, jn) * evecs.at2(l, oi);
-                }
-                v.set2(jn, col, acc / sigma);
-            }
+    }
+    // U = Q sel;  V = B^T sel with columns rescaled by 1/sigma (zeroed for
+    // numerically-vanishing singular values, matching the scalar original).
+    let u = matmul(&q, &sel)?; // [m, k]
+    let mut v = matmul_tn(&b, &sel)?; // [n, k]
+    for (col, &sigma) in s.iter().enumerate() {
+        let scale = if sigma > 1e-12 { 1.0 / sigma } else { 0.0 };
+        for i in 0..n {
+            v.set2(i, col, v.at2(i, col) * scale);
         }
     }
     Ok(Svd { u, s, v })

@@ -5,8 +5,10 @@
 //! kernel (paper, Implementation): one pass over g/m/v producing the
 //! unscaled delta (the learning rate is applied GPU-side at decompress,
 //! Alg. 1 line 17).  It must agree bit-for-bit in math (not order) with the
-//! Pallas `fused_adam` artifact — the cross-check lives in
-//! `rust/tests/runtime_e2e.rs`.
+//! Pallas `fused_adam` artifact — the artifact cross-check is
+//! `adam_sub_artifact_matches_native_fused_adam` in
+//! `rust/tests/runtime_e2e.rs` (skips without artifacts); the host-only
+//! textbook cross-check lives in `rust/tests/integration.rs`.
 
 use crate::tensor::Tensor;
 

@@ -6,11 +6,19 @@
 //! Host-side compress/apply/bias here serve three roles: oracle for the
 //! runtime artifacts in integration tests, compute path for CPU-side
 //! baselines, and the projector manager's cheap bias estimates.
+//!
+//! §Perf pass: `compress`/`decompress` run on the blocked kernel substrate
+//! — compress streams the GATHER layout (contiguous output rows, vectorized
+//! row axpys) instead of walking the ROW layout scalar-by-scalar, and both
+//! directions split their output rows across the `tensor::pool` workers.
+//! The original single-threaded ROW-layout walks survive as
+//! `compress_ref`/`decompress_ref` oracles.
 
 use anyhow::{bail, Result};
 
+use crate::tensor::kernel::{self, KernelConfig};
 use crate::tensor::ops::{matmul, matmul_tn};
-use crate::tensor::Tensor;
+use crate::tensor::{pool, Tensor};
 use crate::util::rng::Rng;
 
 /// One (d, r)-sparse projector in ROW layout: `rows x d` with exactly `r`
@@ -52,7 +60,9 @@ impl SparseProjector {
     }
 
     /// GATHER layout (padded CSC of P^T): `(gidx, gval)`, both `[d, L]`.
-    /// Padding slots are (index 0, value 0).
+    /// Padding slots are (index 0, value 0).  Entries within a subspace
+    /// column appear in (row, hash) order, so accumulating a column in
+    /// gather order reproduces the ROW-layout accumulation order exactly.
     pub fn to_gather(&self) -> Result<(Vec<i32>, Vec<f32>)> {
         let l = self.gather_len();
         let mut gidx = vec![0i32; self.d * l];
@@ -106,10 +116,80 @@ impl ProjectorPair {
         }
     }
 
-    /// Compress: `S = P^T G Q`, `[d, d]`.  Host path used by CPU-side
-    /// baselines and as the artifact oracle; the sparse structure is
-    /// exploited directly (O(nnz * n + nnz * d) instead of dense GEMMs).
+    /// Compress: `S = P^T G Q`, `[d, d]` (GATHER-streamed, parallel over
+    /// output rows; see module docs).  Uses the process-wide
+    /// `KernelConfig`.
     pub fn compress(&self, g: &Tensor) -> Result<Tensor> {
+        self.compress_with(g, &kernel::current())
+    }
+
+    pub fn compress_with(&self, g: &Tensor, cfg: &KernelConfig) -> Result<Tensor> {
+        let (m, n) = (g.rows(), g.cols());
+        if m != self.p.rows || n != self.q.rows {
+            bail!("compress shape mismatch: G {:?} vs P rows {} / Q rows {}",
+                  g.shape(), self.p.rows, self.q.rows);
+        }
+        let d = self.p.d;
+        let threads = cfg.resolved_threads();
+
+        // A = P^T G, streamed through P's GATHER layout: row j of A is the
+        // weighted sum of the G rows listed in gather column j, so every
+        // output row is written once, contiguously, by exactly one worker,
+        // and the inner loop is a vectorizable row axpy.
+        //
+        // The layout is rebuilt per call rather than cached: the projector
+        // manager rewrites `val` in place after learning, so a cache could
+        // go silently stale, and the O(nnz) rebuild is 1/n of the O(nnz*n)
+        // compute below.
+        let (pgi, pgv) = self.p.to_gather()?;
+        let lp = self.p.gather_len();
+        let gd = g.data();
+        let mut a = Tensor::zeros(&[d, n]);
+        pool::par_row_blocks(threads, d, n, 4, a.data_mut(), |rows, block| {
+            for (local, j) in rows.enumerate() {
+                let arow = &mut block[local * n..(local + 1) * n];
+                let base = j * lp;
+                for t in 0..lp {
+                    let v = pgv[base + t];
+                    if v == 0.0 {
+                        continue; // padding slot (or a zero-valued entry)
+                    }
+                    let src = pgi[base + t] as usize;
+                    let grow = &gd[src * n..(src + 1) * n];
+                    for (av, gv) in arow.iter_mut().zip(grow) {
+                        *av += v * gv;
+                    }
+                }
+            }
+        });
+
+        // S = A Q: walk rows of A so both the read stream (A row) and the
+        // write stream (S row) stay contiguous, parallel over S rows
+        // (see ROADMAP.md §Perf).
+        let mut s = Tensor::zeros(&[d, d]);
+        let ad = a.data();
+        let (q_idx, q_val, q_r) = (&self.q.idx, &self.q.val, self.q.r);
+        pool::par_row_blocks(threads, d, d, 4, s.data_mut(), |rows, block| {
+            for (local, row) in rows.enumerate() {
+                let arow = &ad[row * n..(row + 1) * n];
+                let srow = &mut block[local * d..(local + 1) * d];
+                for (jn, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let base = jn * q_r;
+                    for t in 0..q_r {
+                        srow[q_idx[base + t] as usize] += q_val[base + t] * av;
+                    }
+                }
+            }
+        });
+        Ok(s)
+    }
+
+    /// Reference compress: the original single-threaded ROW-layout walk
+    /// (oracle for the streamed implementation and the artifacts).
+    pub fn compress_ref(&self, g: &Tensor) -> Result<Tensor> {
         let (m, n) = (g.rows(), g.cols());
         if m != self.p.rows || n != self.q.rows {
             bail!("compress shape mismatch: G {:?} vs P rows {} / Q rows {}",
@@ -134,8 +214,7 @@ impl ProjectorPair {
                 }
             }
         }
-        // S = A Q: walk rows of A so both the read stream (A row) and the
-        // write stream (S row) stay contiguous (see EXPERIMENTS.md §Perf).
+        // S = A Q.
         let mut s = Tensor::zeros(&[d, d]);
         let ad = a.data();
         let sd = s.data_mut();
@@ -156,14 +235,71 @@ impl ProjectorPair {
         Ok(s)
     }
 
-    /// Decompress the subspace delta back: `D = P dS Q^T`, `[m, n]`.
+    /// Decompress the subspace delta back: `D = P dS Q^T`, `[m, n]`
+    /// (parallel over output rows).
     pub fn decompress(&self, ds: &Tensor) -> Result<Tensor> {
+        self.decompress_with(ds, &kernel::current())
+    }
+
+    pub fn decompress_with(&self, ds: &Tensor, cfg: &KernelConfig) -> Result<Tensor> {
         let d = self.p.d;
         if ds.rows() != d || ds.cols() != d {
             bail!("decompress wants [{d},{d}], got {:?}", ds.shape());
         }
         let (m, n) = (self.p.rows, self.q.rows);
-        // X = P dS: gather rows of dS.
+        let threads = cfg.resolved_threads();
+
+        // X = P dS: each output row gathers r rows of dS (vectorized row
+        // axpys; rows are independent, so the pool splits them).
+        let dsd = ds.data();
+        let (p_idx, p_val, p_r) = (&self.p.idx, &self.p.val, self.p.r);
+        let mut x = Tensor::zeros(&[m, d]);
+        pool::par_row_blocks(threads, m, d, 16, x.data_mut(), |rows, block| {
+            for (local, i) in rows.enumerate() {
+                let xrow = &mut block[local * d..(local + 1) * d];
+                let base = i * p_r;
+                for t in 0..p_r {
+                    let v = p_val[base + t];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let dsrow = &dsd[p_idx[base + t] as usize * d..][..d];
+                    for (xv, dv) in xrow.iter_mut().zip(dsrow) {
+                        *xv += v * dv;
+                    }
+                }
+            }
+        });
+
+        // Y = X Q^T: out[i, j] = sum_k q_val[j,k] * X[i, q_idx[j,k]].
+        // Walk output rows so writes are contiguous and the X row stays hot.
+        let xd = x.data();
+        let (q_idx, q_val, q_r) = (&self.q.idx, &self.q.val, self.q.r);
+        let mut y = Tensor::zeros(&[m, n]);
+        pool::par_row_blocks(threads, m, n, 8, y.data_mut(), |rows, block| {
+            for (local, i) in rows.enumerate() {
+                let xrow = &xd[i * d..(i + 1) * d];
+                let yrow = &mut block[local * n..(local + 1) * n];
+                for (jn, yv) in yrow.iter_mut().enumerate() {
+                    let base = jn * q_r;
+                    let mut acc = 0.0f32;
+                    for t in 0..q_r {
+                        acc += q_val[base + t] * xrow[q_idx[base + t] as usize];
+                    }
+                    *yv += acc;
+                }
+            }
+        });
+        Ok(y)
+    }
+
+    /// Reference decompress: original single-threaded walk (oracle).
+    pub fn decompress_ref(&self, ds: &Tensor) -> Result<Tensor> {
+        let d = self.p.d;
+        if ds.rows() != d || ds.cols() != d {
+            bail!("decompress wants [{d},{d}], got {:?}", ds.shape());
+        }
+        let (m, n) = (self.p.rows, self.q.rows);
         let mut x = Tensor::zeros(&[m, d]);
         let dsd = ds.data();
         let xd = x.data_mut();
@@ -178,8 +314,6 @@ impl ProjectorPair {
                 }
             }
         }
-        // Y = X Q^T: out[i, j] = sum_k q_val[j,k] * X[i, q_idx[j,k]].
-        // Walk output rows so writes are contiguous and the X row stays hot.
         let mut y = Tensor::zeros(&[m, n]);
         let xd = x.data();
         let yd = y.data_mut();
@@ -228,7 +362,7 @@ impl ProjectorPair {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop::check;
+    use crate::util::prop::{check, close_rel_frob};
 
     #[test]
     fn balanced_positions_exact_loads() {
@@ -244,6 +378,88 @@ mod tests {
             assert_eq!(ld, l, "every column receives exactly L entries");
         }
         p.to_gather().unwrap(); // must not overflow
+    }
+
+    /// GATHER -> ROW -> dense round-trip: the dense matrix reconstructed
+    /// from the gather layout must equal `densify()` of the ROW layout,
+    /// and every non-padding gather entry must map back to a ROW entry.
+    #[test]
+    fn to_gather_round_trips_with_row_layout() {
+        check(
+            "gather-row-roundtrip",
+            12,
+            |r| {
+                let rows = 8 + r.below(60);
+                let d = 2 + r.below(20);
+                let rr = 1 + r.below(3.min(d));
+                SparseProjector::init(rows, d, rr, r)
+            },
+            |p| {
+                let l = p.gather_len();
+                let (gidx, gval) = p.to_gather().map_err(|e| e.to_string())?;
+                if gidx.len() != p.d * l || gval.len() != p.d * l {
+                    return Err("gather layout shape".into());
+                }
+                // Dense from GATHER: entry (gidx[j][t], j) += gval[j][t].
+                let mut dense = Tensor::zeros(&[p.rows, p.d]);
+                for j in 0..p.d {
+                    for t in 0..l {
+                        let v = gval[j * l + t];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let i = gidx[j * l + t] as usize;
+                        if i >= p.rows {
+                            return Err(format!("gather row {i} out of range"));
+                        }
+                        dense.set2(i, j, dense.at2(i, j) + v);
+                    }
+                }
+                // ROW -> dense must agree (non-zero values: N(0, 1/sqrt r),
+                // zero draws have probability ~0 but cost us nothing).
+                if !dense.allclose(&p.densify(), 0.0) {
+                    return Err("gather-dense != row-dense".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The streamed/parallel paths must match the single-threaded ROW
+    /// oracles (bit-identical per row; compared at 1e-6 relative
+    /// Frobenius for slack).
+    #[test]
+    fn streamed_compress_decompress_match_refs() {
+        check(
+            "sparse-streamed-vs-ref",
+            12,
+            |r| {
+                let m = 8 + r.below(48);
+                let n = 8 + r.below(48);
+                let d = 4 + r.below(m.min(n).saturating_sub(4).max(1));
+                let rr = 1 + r.below(3.min(d));
+                let pair = ProjectorPair::init(m, n, d, rr, r);
+                let g = Tensor::randn(&[m, n], 1.0, r);
+                let ds = Tensor::randn(&[d, d], 1.0, r);
+                let cfg = KernelConfig::with_threads(1 + r.below(4));
+                (pair, g, ds, cfg)
+            },
+            |(pair, g, ds, cfg)| {
+                close_rel_frob(
+                    &pair.compress_with(g, cfg).map_err(|e| e.to_string())?,
+                    &pair.compress_ref(g).map_err(|e| e.to_string())?,
+                    1e-6,
+                )
+                .map_err(|e| format!("compress: {e}"))?;
+                close_rel_frob(
+                    &pair.decompress_with(ds, cfg).map_err(|e| e.to_string())?,
+                    &pair.decompress_ref(ds).map_err(|e| e.to_string())?,
+                    1e-6,
+                )
+                .map_err(|e| format!("decompress: {e}"))?;
+                Ok(())
+            },
+        );
     }
 
     #[test]

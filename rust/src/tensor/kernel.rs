@@ -1,0 +1,441 @@
+//! Blocked, register-tiled GEMM kernels — the host hot-path substrate.
+//!
+//! BLIS-style structure without explicit packing (row-major f32 needs none
+//! at these sizes): a `MR x NR` register-tile micro-kernel sits under cache
+//! blocking over K (`block_k`) and N (`block_n`), and the M dimension is
+//! split across the scoped worker pool (`tensor::pool`).  The B operand is
+//! touched `NR` contiguous floats at a time (one cache line), so a K-block
+//! of B occupies `block_k` cache lines and stays resident while the `MR`
+//! A-rows stream through registers.
+//!
+//! The naive triple loops survive as `ops::matmul_*_ref` oracles; property
+//! tests assert blocked == reference to within 1e-4 relative Frobenius
+//! error across randomized shapes and configs.
+//!
+//! `KernelConfig` is the knob surface: it is parsed by `config/`
+//! (`--kernel-threads`, `kernel_block_*`), negotiated by the coordinator
+//! (`Trainer` reserves its schedule-level threads), and installed
+//! process-wide for the `ops::matmul*` entry points.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use super::pool;
+
+/// Rows of C per register tile.
+pub const MR: usize = 4;
+/// Columns of C per register tile (one 64-byte cache line of f32).
+pub const NR: usize = 16;
+
+/// Shape of the blocked kernels: worker width plus cache-block sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Worker threads splitting the M dimension. `0` = auto-detect
+    /// (available parallelism, capped at 8).
+    pub threads: usize,
+    /// Minimum rows of C per worker (also the split granularity).
+    pub block_m: usize,
+    /// Columns of C per cache block (rounded up to `NR` internally).
+    pub block_n: usize,
+    /// Depth (K) per cache block.
+    pub block_k: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig { threads: 0, block_m: 32, block_n: 256, block_k: 256 }
+    }
+}
+
+impl KernelConfig {
+    pub fn with_threads(threads: usize) -> KernelConfig {
+        KernelConfig { threads, ..KernelConfig::default() }
+    }
+
+    pub fn single_threaded() -> KernelConfig {
+        KernelConfig::with_threads(1)
+    }
+
+    /// Resolve `threads == 0` to the machine's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        static AUTO: OnceLock<usize> = OnceLock::new();
+        *AUTO.get_or_init(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+        })
+    }
+
+    /// Coordinator negotiation: the trainer dedicates `reserved` threads at
+    /// the schedule level (link threads + CPU updater), so the kernels get
+    /// the remainder, never less than one.
+    pub fn negotiated(&self, reserved: usize) -> KernelConfig {
+        let threads = self.resolved_threads().saturating_sub(reserved).max(1);
+        KernelConfig { threads, ..*self }
+    }
+}
+
+// Process-wide config consumed by the `ops::matmul*` / `sparse` entry
+// points. 0 in a block slot means "default"; threads 0 already means auto.
+static G_THREADS: AtomicUsize = AtomicUsize::new(0);
+static G_BLOCK_M: AtomicUsize = AtomicUsize::new(0);
+static G_BLOCK_N: AtomicUsize = AtomicUsize::new(0);
+static G_BLOCK_K: AtomicUsize = AtomicUsize::new(0);
+
+/// Install `cfg` as the process-wide kernel configuration.
+pub fn install(cfg: KernelConfig) {
+    G_THREADS.store(cfg.threads, Ordering::Relaxed);
+    G_BLOCK_M.store(cfg.block_m, Ordering::Relaxed);
+    G_BLOCK_N.store(cfg.block_n, Ordering::Relaxed);
+    G_BLOCK_K.store(cfg.block_k, Ordering::Relaxed);
+}
+
+/// The process-wide kernel configuration (defaults where unset).
+pub fn current() -> KernelConfig {
+    let d = KernelConfig::default();
+    let or = |v: usize, dv: usize| if v == 0 { dv } else { v };
+    KernelConfig {
+        threads: G_THREADS.load(Ordering::Relaxed),
+        block_m: or(G_BLOCK_M.load(Ordering::Relaxed), d.block_m),
+        block_n: or(G_BLOCK_N.load(Ordering::Relaxed), d.block_n),
+        block_k: or(G_BLOCK_K.load(Ordering::Relaxed), d.block_k),
+    }
+}
+
+// ---- C = A @ B ----------------------------------------------------------
+
+/// Accumulate `C += A @ B` (A `[m,k]`, B `[k,n]`, C `[m,n]`, row-major).
+pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, cfg: &KernelConfig) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let min_rows = cfg.block_m.max(MR);
+    pool::par_row_blocks(cfg.resolved_threads(), m, n, min_rows, c, |rows, cblock| {
+        gemm_nn_rows(a, b, cblock, rows.start, rows.end, k, n, cfg);
+    });
+}
+
+fn gemm_nn_rows(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32], // rows r0..r1 of C
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    cfg: &KernelConfig,
+) {
+    let bk = cfg.block_k.max(8);
+    let bn = cfg.block_n.max(NR);
+    let mut l0 = 0;
+    while l0 < k {
+        let kb = bk.min(k - l0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = bn.min(n - j0);
+            let mut i = r0;
+            while i < r1 {
+                let h = MR.min(r1 - i);
+                let mut j = j0;
+                while j < j0 + nb {
+                    let w = NR.min(j0 + nb - j);
+                    let a_sub = &a[i * k + l0..];
+                    let b_sub = &b[l0 * n + j..];
+                    let c_sub = &mut c[(i - r0) * n + j..];
+                    if h == MR && w == NR {
+                        micro_nn_full(a_sub, k, b_sub, n, c_sub, n, kb);
+                    } else {
+                        micro_nn_edge(a_sub, k, b_sub, n, c_sub, n, kb, h, w);
+                    }
+                    j += w;
+                }
+                i += h;
+            }
+            j0 += nb;
+        }
+        l0 += kb;
+    }
+}
+
+/// Full `MR x NR` tile: C_tile += A_tile @ B_tile over `kb` depth steps.
+/// `a` starts at A[i][l0] (row stride `lda`), `b` at B[l0][j] (stride
+/// `ldb`), `c` at C[i][j] (stride `ldc`).
+#[inline]
+fn micro_nn_full(a: &[f32], lda: usize, b: &[f32], ldb: usize, c: &mut [f32], ldc: usize, kb: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..kb {
+        let brow = &b[l * ldb..l * ldb + NR];
+        for i in 0..MR {
+            let av = a[i * lda + l];
+            for (x, &bv) in acc[i].iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for (i, lane) in acc.iter().enumerate() {
+        for (cv, &x) in c[i * ldc..i * ldc + NR].iter_mut().zip(lane) {
+            *cv += x;
+        }
+    }
+}
+
+/// Partial tile (`h <= MR`, `w <= NR`) for the M/N edges.
+#[inline]
+fn micro_nn_edge(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    kb: usize,
+    h: usize,
+    w: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..kb {
+        let brow = &b[l * ldb..l * ldb + w];
+        for i in 0..h {
+            let av = a[i * lda + l];
+            for (x, &bv) in acc[i][..w].iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for i in 0..h {
+        for (cv, &x) in c[i * ldc..i * ldc + w].iter_mut().zip(&acc[i][..w]) {
+            *cv += x;
+        }
+    }
+}
+
+// ---- C = A^T @ B --------------------------------------------------------
+
+/// Accumulate `C += A^T @ B` (A `[k,m]`, B `[k,n]`, C `[m,n]`) without
+/// materializing the transpose. The register tile reads `MR` *contiguous*
+/// A elements per depth step (a row fragment of A is a column fragment of
+/// A^T), which makes this the best-vectorizing kernel of the family.
+pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize, cfg: &KernelConfig) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let min_rows = cfg.block_m.max(MR);
+    pool::par_row_blocks(cfg.resolved_threads(), m, n, min_rows, c, |rows, cblock| {
+        gemm_tn_rows(a, b, cblock, rows.start, rows.end, k, m, n, cfg);
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_rows(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+    cfg: &KernelConfig,
+) {
+    let bk = cfg.block_k.max(8);
+    let bn = cfg.block_n.max(NR);
+    let mut l0 = 0;
+    while l0 < k {
+        let kb = bk.min(k - l0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = bn.min(n - j0);
+            let mut i = r0;
+            while i < r1 {
+                let h = MR.min(r1 - i);
+                let mut j = j0;
+                while j < j0 + nb {
+                    let w = NR.min(j0 + nb - j);
+                    let a_sub = &a[l0 * m + i..];
+                    let b_sub = &b[l0 * n + j..];
+                    let c_sub = &mut c[(i - r0) * n + j..];
+                    micro_tn(a_sub, m, b_sub, n, c_sub, n, kb, h, w);
+                    j += w;
+                }
+                i += h;
+            }
+            j0 += nb;
+        }
+        l0 += kb;
+    }
+}
+
+/// `h x w` tile of C += A^T B: `a` starts at A[l0][i] (row stride `lda ==
+/// m`), so the `h` A-values per depth step are contiguous.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_tn(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    kb: usize,
+    h: usize,
+    w: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..kb {
+        let afrag = &a[l * lda..l * lda + h];
+        let brow = &b[l * ldb..l * ldb + w];
+        for (i, &av) in afrag.iter().enumerate() {
+            for (x, &bv) in acc[i][..w].iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for i in 0..h {
+        for (cv, &x) in c[i * ldc..i * ldc + w].iter_mut().zip(&acc[i][..w]) {
+            *cv += x;
+        }
+    }
+}
+
+// ---- C = A @ B^T --------------------------------------------------------
+
+/// Lanes for the dot-product accumulation in the NT kernel.
+const LANES: usize = 8;
+
+/// Accumulate `C += A @ B^T` (A `[m,k]`, B `[n,k]`, C `[m,n]`). Both
+/// operands are read along contiguous rows; B rows are processed in
+/// `block_n`-row blocks so a block stays cache-resident across consecutive
+/// A rows, and each dot product accumulates in `LANES` independent lanes so
+/// the compiler can vectorize it.
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, cfg: &KernelConfig) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        return;
+    }
+    let min_rows = cfg.block_m.max(MR);
+    // Keep the B block within ~256 KiB so it survives the i sweep.
+    let bn = cfg.block_n.min((1 << 16) / k.max(1)).max(4);
+    pool::par_row_blocks(cfg.resolved_threads(), m, n, min_rows, c, |rows, cblock| {
+        let r0 = rows.start;
+        // B-block loop OUTSIDE the row loop so the block actually stays
+        // cache-resident across consecutive A rows.
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = bn.min(n - j0);
+            for i in rows.clone() {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut cblock[(i - r0) * n..(i - r0 + 1) * n];
+                for j in j0..j0 + nb {
+                    let brow = &b[j * k..(j + 1) * k];
+                    crow[j] += dot_lanes(arow, brow);
+                }
+            }
+            j0 += nb;
+        }
+    });
+}
+
+/// Dot product with `LANES` independent accumulators (vectorizable; float
+/// summation order therefore differs from the scalar reference, which is
+/// why the oracles compare with a relative Frobenius tolerance).
+#[inline]
+pub fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let main = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut l = 0;
+    while l < main {
+        let xs = &x[l..l + LANES];
+        let ys = &y[l..l + LANES];
+        for s in 0..LANES {
+            acc[s] += xs[s] * ys[s];
+        }
+        l += LANES;
+    }
+    let mut tail = 0.0f32;
+    for l in main..n {
+        tail += x[l] * y[l];
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_config_defaults() {
+        let d = KernelConfig::default();
+        assert_eq!(d.threads, 0, "default is auto-detect");
+        assert!(d.resolved_threads() >= 1 && d.resolved_threads() <= 8);
+        assert!(d.block_m >= MR);
+        assert_eq!(d.block_n % NR, 0, "block_n aligned to the register tile");
+        assert!(d.block_k >= 8);
+        assert_eq!(KernelConfig::single_threaded().threads, 1);
+        assert_eq!(KernelConfig::single_threaded().resolved_threads(), 1);
+        // Negotiation never starves the kernels.
+        assert_eq!(KernelConfig::with_threads(4).negotiated(3).threads, 1);
+        assert_eq!(KernelConfig::with_threads(4).negotiated(99).threads, 1);
+        assert_eq!(KernelConfig::with_threads(6).negotiated(2).threads, 4);
+    }
+
+    #[test]
+    fn current_falls_back_to_defaults() {
+        // Unset slots read as defaults (threads 0 stays "auto").
+        let cur = current();
+        assert!(cur.block_m > 0 && cur.block_n > 0 && cur.block_k > 0);
+    }
+
+    #[test]
+    fn threads_do_not_change_results() {
+        // threads = 1 must reproduce the multi-threaded (and vice versa)
+        // results bit-for-bit: the M split never alters per-row arithmetic.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let (m, k, n) = (37, 29, 41);
+        let a: Vec<f32> = rng.normal_vec(m * k, 1.0);
+        let b: Vec<f32> = rng.normal_vec(k * n, 1.0);
+        let bt: Vec<f32> = rng.normal_vec(n * k, 1.0);
+        let at: Vec<f32> = rng.normal_vec(k * m, 1.0);
+        for threads in [2usize, 3, 5] {
+            let c1 = KernelConfig { threads: 1, block_m: 8, ..KernelConfig::default() };
+            let cn = KernelConfig { threads, block_m: 8, ..KernelConfig::default() };
+            let mut c_one = vec![0f32; m * n];
+            let mut c_many = vec![0f32; m * n];
+            gemm_nn(&a, &b, &mut c_one, m, k, n, &c1);
+            gemm_nn(&a, &b, &mut c_many, m, k, n, &cn);
+            assert_eq!(c_one, c_many, "nn threads={threads}");
+            let mut t_one = vec![0f32; m * n];
+            let mut t_many = vec![0f32; m * n];
+            gemm_tn(&at, &b, &mut t_one, k, m, n, &c1);
+            gemm_tn(&at, &b, &mut t_many, k, m, n, &cn);
+            assert_eq!(t_one, t_many, "tn threads={threads}");
+            let mut n_one = vec![0f32; m * n];
+            let mut n_many = vec![0f32; m * n];
+            gemm_nt(&a, &bt, &mut n_one, m, k, n, &c1);
+            gemm_nt(&a, &bt, &mut n_many, m, k, n, &cn);
+            assert_eq!(n_one, n_many, "nt threads={threads}");
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_scalar() {
+        let x: Vec<f32> = (0..37).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let y: Vec<f32> = (0..37).map(|i| 1.5 - (i as f32) * 0.125).collect();
+        let scalar: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot_lanes(&x, &y) - scalar).abs() < 1e-3);
+    }
+}

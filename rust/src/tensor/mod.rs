@@ -4,8 +4,9 @@
 //!
 //! This is deliberately *not* a general autodiff array library — model
 //! fwd/bwd runs inside the AOT-compiled XLA artifacts.  The hot paths here
-//! (`matmul` family, axpy) are tuned in the §Perf pass: blocked loops over
-//! contiguous rows so the single-core CPU stays in L1/L2.
+//! (`matmul` family) run on the blocked, register-tiled, multi-threaded
+//! kernel substrate in `kernel`/`pool` (§Perf pass); the naive loops
+//! survive as `ops::matmul_*_ref` oracles.
 
 use std::fmt;
 
@@ -13,7 +14,9 @@ use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;
 
+pub mod kernel;
 pub mod ops;
+pub mod pool;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, PartialEq)]
@@ -128,6 +131,18 @@ impl Tensor {
 
     pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
         self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+
+    /// Relative Frobenius error `||self - other||_F / max(||other||_F, eps)`
+    /// — the metric the blocked-vs-reference kernel properties use.
+    pub fn rel_frob_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a as f64) - (*b as f64);
+            num += d * d;
+        }
+        (num.sqrt() / (other.frob_norm() as f64).max(1e-30)) as f32
     }
 }
 

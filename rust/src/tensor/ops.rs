@@ -1,22 +1,80 @@
 //! Dense linear-algebra ops on host tensors.
 //!
-//! `matmul` is the host hot path for the GaLore/LoRA baselines and the
-//! projector manager; it uses an ikj loop order (stream rows of B against an
-//! accumulator row of C) which vectorizes well and is cache-friendly for
-//! row-major data.  All ops are single-threaded by design — the coordinator
-//! dedicates its worker threads at the schedule level, not inside kernels.
+//! The `matmul` family is the host hot path for the GaLore/LoRA baselines,
+//! the linalg substrate (QR / randomized SVD) and the projector manager.
+//! Since the §Perf pass each entry point dispatches to the blocked,
+//! register-tiled, multi-threaded kernels in `tensor::kernel` (worker width
+//! and block sizes come from the process-wide `KernelConfig`, which the
+//! coordinator negotiates against its own schedule-level threads).  The
+//! original single-threaded triple loops survive as `matmul_*_ref` — the
+//! oracles the property tests and `benches/hotpath.rs` compare against.
 
 use anyhow::{bail, Result};
 
+use super::kernel::{self, KernelConfig};
 use super::Tensor;
 
-/// C = A @ B.
-pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+fn mm_shapes(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     if k != k2 {
         bail!("matmul shape mismatch: {:?} @ {:?}", a.shape(), b.shape());
     }
+    Ok((m, k, n))
+}
+
+/// C = A @ B (blocked, multi-threaded).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_with(a, b, &kernel::current())
+}
+
+/// C = A @ B with an explicit kernel configuration.
+pub fn matmul_with(a: &Tensor, b: &Tensor, cfg: &KernelConfig) -> Result<Tensor> {
+    let (m, k, n) = mm_shapes(a, b)?;
+    let mut c = Tensor::zeros(&[m, n]);
+    kernel::gemm_nn(a.data(), b.data(), c.data_mut(), m, k, n, cfg);
+    Ok(c)
+}
+
+/// C = A^T @ B  (A: [k, m], B: [k, n] -> C: [m, n]) without materializing
+/// A^T (blocked, multi-threaded).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_tn_with(a, b, &kernel::current())
+}
+
+pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: &KernelConfig) -> Result<Tensor> {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    if k != k2 {
+        bail!("matmul_tn shape mismatch: {:?}^T @ {:?}", a.shape(), b.shape());
+    }
+    let mut c = Tensor::zeros(&[m, n]);
+    kernel::gemm_tn(a.data(), b.data(), c.data_mut(), k, m, n, cfg);
+    Ok(c)
+}
+
+/// C = A @ B^T  (A: [m, k], B: [n, k] -> C: [m, n]) (blocked,
+/// multi-threaded, lane-accumulated dot products).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    matmul_nt_with(a, b, &kernel::current())
+}
+
+pub fn matmul_nt_with(a: &Tensor, b: &Tensor, cfg: &KernelConfig) -> Result<Tensor> {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    if k != k2 {
+        bail!("matmul_nt shape mismatch: {:?} @ {:?}^T", a.shape(), b.shape());
+    }
+    let mut c = Tensor::zeros(&[m, n]);
+    kernel::gemm_nt(a.data(), b.data(), c.data_mut(), m, k, n, cfg);
+    Ok(c)
+}
+
+// ---- naive single-threaded references (oracles) -------------------------
+
+/// Reference C = A @ B: ikj loop order, zero-skip, single-threaded.
+pub fn matmul_ref(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k, n) = mm_shapes(a, b)?;
     let mut c = Tensor::zeros(&[m, n]);
     let ad = a.data();
     let bd = b.data();
@@ -37,8 +95,8 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     Ok(c)
 }
 
-/// C = A^T @ B  (A: [k, m], B: [k, n] -> C: [m, n]) without materializing A^T.
-pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+/// Reference C = A^T @ B.
+pub fn matmul_tn_ref(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (k, m) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     if k != k2 {
@@ -65,8 +123,14 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     Ok(c)
 }
 
-/// C = A @ B^T  (A: [m, k], B: [n, k] -> C: [m, n]); dot-product form.
-pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+/// Reference C = A @ B^T, dot-product form with zero-skip + row streaming:
+/// all-zero A rows are skipped outright, and B rows are visited in blocks
+/// small enough to stay cache-resident across consecutive A rows (the
+/// original form re-streamed all of B per A row, which made the oracle
+/// itself pathologically slow at bench shapes).  Zero-skip follows the
+/// sibling oracles' convention (`0 * x` treated as 0), so like them it
+/// diverges from the blocked kernels on non-finite inputs.
+pub fn matmul_nt_ref(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     if k != k2 {
@@ -76,16 +140,31 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let ad = a.data();
     let bd = b.data();
     let cd = c.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
+    // Zero-skip flags, computed once per A row (not once per B block).
+    let zero_row: Vec<bool> = (0..m)
+        .map(|i| ad[i * k..(i + 1) * k].iter().all(|&x| x == 0.0))
+        .collect();
+    // B-row block that fits in ~256 KiB.
+    let jb = ((1usize << 16) / k.max(1)).clamp(8, 512);
+    let mut j0 = 0;
+    while j0 < n {
+        let jend = (j0 + jb).min(n);
+        for i in 0..m {
+            if zero_row[i] {
+                continue; // zero-skip: C row stays zero
             }
-            cd[i * n + j] = acc;
+            let arow = &ad[i * k..(i + 1) * k];
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for j in j0..jend {
+                let brow = &bd[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                crow[j] = acc;
+            }
         }
+        j0 = jend;
     }
     Ok(c)
 }
@@ -128,7 +207,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop::check;
+    use crate::util::prop::{check, close_rel_frob};
     use crate::util::rng::Rng;
 
     fn rand_mat(r: &mut Rng, m: usize, n: usize) -> Tensor {
@@ -141,6 +220,8 @@ mod tests {
         let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]).unwrap();
         let c = matmul(&a, &b).unwrap();
         assert_eq!(c.data(), &[3., 3., 7., 7.]);
+        let cr = matmul_ref(&a, &b).unwrap();
+        assert_eq!(cr.data(), &[3., 3., 7., 7.]);
     }
 
     #[test]
@@ -148,6 +229,9 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[4, 2]);
         assert!(matmul(&a, &b).is_err());
+        assert!(matmul_ref(&a, &b).is_err());
+        assert!(matmul_tn(&a, &b).is_err());
+        assert!(matmul_nt(&a, &Tensor::zeros(&[4, 2])).is_err());
     }
 
     #[test]
@@ -180,6 +264,75 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The tentpole property: every blocked kernel matches its naive
+    /// single-threaded oracle to within 1e-4 relative Frobenius error,
+    /// across randomized shapes, thread counts and (deliberately awkward)
+    /// block sizes that exercise all edge-tile paths.
+    #[test]
+    fn blocked_kernels_match_reference_property() {
+        check(
+            "blocked-vs-ref",
+            24,
+            |r| {
+                let m = 1 + r.below(70);
+                let k = 1 + r.below(70);
+                let n = 1 + r.below(70);
+                let cfg = KernelConfig {
+                    threads: 1 + r.below(4),
+                    block_m: 1 + r.below(24),
+                    block_n: 1 + r.below(48),
+                    block_k: 1 + r.below(48),
+                };
+                (
+                    rand_mat(r, m, k), // A
+                    rand_mat(r, k, n), // B
+                    rand_mat(r, k, m), // A^T operand
+                    rand_mat(r, n, k), // B^T operand
+                    cfg,
+                )
+            },
+            |(a, b, at, bt, cfg)| {
+                close_rel_frob(
+                    &matmul_with(a, b, cfg).map_err(|e| e.to_string())?,
+                    &matmul_ref(a, b).map_err(|e| e.to_string())?,
+                    1e-4,
+                )
+                .map_err(|e| format!("nn: {e}"))?;
+                close_rel_frob(
+                    &matmul_tn_with(at, b, cfg).map_err(|e| e.to_string())?,
+                    &matmul_tn_ref(at, b).map_err(|e| e.to_string())?,
+                    1e-4,
+                )
+                .map_err(|e| format!("tn: {e}"))?;
+                close_rel_frob(
+                    &matmul_nt_with(a, bt, cfg).map_err(|e| e.to_string())?,
+                    &matmul_nt_ref(a, bt).map_err(|e| e.to_string())?,
+                    1e-4,
+                )
+                .map_err(|e| format!("nt: {e}"))?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nt_ref_zero_skip_keeps_exact_semantics() {
+        // Rows of zeros must yield rows of zeros, and a mixed matrix must
+        // match the blocked kernel.
+        let mut r = Rng::new(33);
+        let mut a = rand_mat(&mut r, 9, 21);
+        for v in a.data_mut()[2 * 21..3 * 21].iter_mut() {
+            *v = 0.0;
+        }
+        let b = rand_mat(&mut r, 13, 21);
+        let fast = matmul_nt(&a, &b).unwrap();
+        let slow = matmul_nt_ref(&a, &b).unwrap();
+        assert!(close_rel_frob(&fast, &slow, 1e-4).is_ok());
+        for j in 0..13 {
+            assert_eq!(slow.at2(2, j), 0.0, "zero-skipped row stays zero");
+        }
     }
 
     #[test]

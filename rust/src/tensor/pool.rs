@@ -1,0 +1,112 @@
+//! Scoped worker pool for the blocked host kernels.
+//!
+//! All hot-path kernels (blocked matmul family, sparse compress/decompress)
+//! parallelize the same way: the output matrix is split into contiguous row
+//! blocks, one per worker, so every worker owns a disjoint `&mut` slice and
+//! no locking is needed.  Workers are `std::thread::scope` threads (no
+//! external dependencies); the pool width comes from `KernelConfig` and is
+//! negotiated with the coordinator, which dedicates its own threads at the
+//! schedule level (links + CPU updater).
+//!
+//! Determinism: splitting the M dimension never changes per-row arithmetic,
+//! so results are bit-identical for every worker count (covered by
+//! `kernel::tests::threads_do_not_change_results`).
+
+use std::ops::Range;
+
+/// Workers actually worth spawning for `rows` rows given a minimum per-worker
+/// granularity (spawning a thread for a handful of rows costs more than the
+/// rows themselves).
+pub fn effective_workers(threads: usize, rows: usize, min_rows: usize) -> usize {
+    let by_work = rows / min_rows.max(1);
+    threads.max(1).min(by_work.max(1))
+}
+
+/// Run `f` over the `rows * row_len` output buffer `out`, split into
+/// contiguous row blocks across up to `threads` scoped workers.
+///
+/// `f(range, block)` receives the global row range it owns and the matching
+/// sub-slice of `out` (`block.len() == range.len() * row_len`).  With one
+/// effective worker, `f` runs inline on the caller's thread; otherwise the
+/// last block runs on the caller's thread while the rest run on scoped
+/// threads.
+pub fn par_row_blocks<F>(
+    threads: usize,
+    rows: usize,
+    row_len: usize,
+    min_rows: usize,
+    out: &mut [f32],
+    f: F,
+) where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), rows * row_len, "output buffer shape mismatch");
+    let workers = effective_workers(threads, rows, min_rows);
+    if workers <= 1 {
+        f(0..rows, out);
+        return;
+    }
+    let base = rows / workers;
+    let extra = rows % workers;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = out;
+        let mut row0 = 0usize;
+        for w in 0..workers {
+            let take = base + usize::from(w < extra);
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+            rest = tail;
+            let range = row0..row0 + take;
+            row0 += take;
+            if w + 1 == workers {
+                // The caller participates instead of idling in scope join.
+                f(range, block);
+            } else {
+                scope.spawn(move || f(range, block));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_workers_bounds() {
+        assert_eq!(effective_workers(4, 100, 8), 4);
+        assert_eq!(effective_workers(4, 10, 8), 1);
+        assert_eq!(effective_workers(4, 17, 8), 2);
+        assert_eq!(effective_workers(0, 100, 8), 1);
+        assert_eq!(effective_workers(1, 0, 8), 1);
+    }
+
+    #[test]
+    fn blocks_cover_all_rows_disjointly() {
+        for threads in [1usize, 2, 3, 5] {
+            let (rows, row_len) = (23usize, 7usize);
+            let mut out = vec![0f32; rows * row_len];
+            par_row_blocks(threads, rows, row_len, 1, &mut out, |range, block| {
+                assert_eq!(block.len(), range.len() * row_len);
+                for (local, r) in range.enumerate() {
+                    for c in 0..row_len {
+                        block[local * row_len + c] += (r * row_len + c) as f32;
+                    }
+                }
+            });
+            // Every cell written exactly once with its global index.
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as f32, "threads={threads} cell {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_output_is_fine() {
+        let mut out: Vec<f32> = Vec::new();
+        par_row_blocks(4, 0, 5, 1, &mut out, |range, block| {
+            assert!(range.is_empty());
+            assert!(block.is_empty());
+        });
+    }
+}

@@ -5,6 +5,22 @@
 //! is exactly reproducible (all generation flows through `util::rng::Rng`).
 
 use super::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Property-test comparator for the blocked kernels: `Ok(())` when `got`
+/// matches `want` to within `tol` relative Frobenius error, `Err` with the
+/// measured error otherwise.
+pub fn close_rel_frob(got: &Tensor, want: &Tensor, tol: f32) -> std::result::Result<(), String> {
+    if got.shape() != want.shape() {
+        return Err(format!("shape {:?} vs {:?}", got.shape(), want.shape()));
+    }
+    let rel = got.rel_frob_diff(want);
+    if rel <= tol {
+        Ok(())
+    } else {
+        Err(format!("relative Frobenius error {rel} > {tol}"))
+    }
+}
 
 /// Run `prop` on `cases` random inputs. Panics with the failing seed/case.
 pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
@@ -48,5 +64,15 @@ mod tests {
     #[should_panic(expected = "always-fails")]
     fn failing_property_panics() {
         check("always-fails", 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_rel_frob_accepts_and_rejects() {
+        let a = Tensor::new(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[1, 2], vec![1.0, 2.0 + 1e-6]).unwrap();
+        assert!(close_rel_frob(&a, &b, 1e-4).is_ok());
+        let c = Tensor::new(&[1, 2], vec![1.0, 3.0]).unwrap();
+        assert!(close_rel_frob(&a, &c, 1e-4).is_err());
+        assert!(close_rel_frob(&a, &Tensor::zeros(&[2, 1]), 1e-4).is_err());
     }
 }

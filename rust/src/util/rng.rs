@@ -1,7 +1,7 @@
 //! Deterministic RNG: SplitMix64 core with normal/uniform/permutation
 //! helpers.  All stochastic pieces of the system (init, data generation,
-//! projector positions) derive from explicit seeds so every experiment in
-//! EXPERIMENTS.md is exactly re-runnable.
+//! projector positions) derive from explicit seeds so every recorded
+//! experiment (see ROADMAP.md) is exactly re-runnable.
 
 #[derive(Debug, Clone)]
 pub struct Rng {

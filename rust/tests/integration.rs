@@ -12,6 +12,35 @@ use lsp_offload::tensor::ops::{axpy, matmul, sub};
 use lsp_offload::tensor::Tensor;
 use lsp_offload::util::rng::Rng;
 
+/// Host-only fused-Adam cross-check (the artifact-level counterpart lives
+/// in `runtime_e2e.rs` and needs `make artifacts`): the fused one-pass
+/// update must match the textbook two-moment form on a long random stream.
+#[test]
+fn fused_adam_matches_textbook_reference() {
+    use lsp_offload::optim::{ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
+    let n = 257;
+    let mut rng = Rng::new(31);
+    let mut st = AdamState::new(n);
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    for t in 1..=5u32 {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let d = st.step_vec(&g);
+        for i in 0..n {
+            m[i] = ADAM_BETA1 * m[i] + (1.0 - ADAM_BETA1) * g[i];
+            v[i] = ADAM_BETA2 * v[i] + (1.0 - ADAM_BETA2) * g[i] * g[i];
+            let mhat = m[i] / (1.0 - ADAM_BETA1.powi(t as i32));
+            let vhat = v[i] / (1.0 - ADAM_BETA2.powi(t as i32));
+            let want = mhat / (vhat.sqrt() + ADAM_EPS);
+            assert!(
+                (d[i] - want).abs() < 1e-4,
+                "step {t} elem {i}: fused {} vs textbook {want}",
+                d[i]
+            );
+        }
+    }
+}
+
 /// Fig. 4: accumulating updates from tau periodically-refreshed subspaces
 /// spans a much higher-rank space than a single LoRA/GaLore subspace.
 #[test]

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 entry point: build + tests + a smoke pass of the hot-path bench.
+#
+#   scripts/check.sh            # full tier-1 gate
+#   scripts/check.sh --bench    # additionally run the full (non-smoke) bench
+#
+# The smoke bench keeps a small budget (~seconds) and writes
+# BENCH_hotpath.smoke.json; only the full bench (here via --bench, or
+# `cargo bench --bench hotpath` directly) writes the cross-PR trajectory
+# file BENCH_hotpath.json at the repo root.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo bench --bench hotpath -- smoke =="
+cargo bench --bench hotpath -- smoke
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== cargo bench --bench hotpath (full) =="
+    cargo bench --bench hotpath
+fi
+
+echo "OK"
