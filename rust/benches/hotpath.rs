@@ -25,7 +25,7 @@ fn result_row(
     name: &str,
     shape: &str,
     impl_name: &str,
-    secs: f64,
+    r: &lsp_offload::util::bench::BenchResult,
     gops: Option<f64>,
     speedup_vs_ref: Option<f64>,
 ) -> Json {
@@ -33,7 +33,10 @@ fn result_row(
         ("name", Json::Str(name.to_string())),
         ("shape", Json::Str(shape.to_string())),
         ("impl", Json::Str(impl_name.to_string())),
-        ("secs_min", Json::Num(secs)),
+        ("secs_min", Json::Num(r.min)),
+        // Sample count so the regression gate can skip rows too noisy to
+        // judge (a smoke-budget min over 1-2 iterations is biased high).
+        ("iters", Json::Num(r.iters as f64)),
     ];
     if let Some(g) = gops {
         pairs.push(("gops", Json::Num(g)));
@@ -69,7 +72,24 @@ fn main() {
             });
             let gps = n as f64 / r.min / 1e9;
             println!("    -> {gps:.2} G params/s");
-            results.push(result_row("fused_adam", &format!("n={n}"), "fused", r.min, Some(gps), None));
+            results.push(result_row("fused_adam", &format!("n={n}"), "fused", &r, Some(gps), None));
+            // Parallel fused Adam (engages above optim::PAR_ADAM_MIN_LEN;
+            // below it this measures the single-threaded fallback).
+            let cfgn = KernelConfig::with_threads(threads);
+            let mut stp = AdamState::new(n);
+            let rp = bench(&format!("fused_adam_par(t={threads}) n={n}"), budget, || {
+                stp.fused_step_with(&g, &mut delta, &cfgn);
+            });
+            let gpsp = n as f64 / rp.min / 1e9;
+            println!("    -> par {gpsp:.2} G params/s ({:.2}x)", r.min / rp.min);
+            results.push(result_row(
+                "fused_adam",
+                &format!("n={n}"),
+                &format!("par_t{threads}"),
+                &rp,
+                Some(gpsp),
+                Some(r.min / rp.min),
+            ));
         }
     }
 
@@ -86,7 +106,7 @@ fn main() {
             let r_ref = bench(&format!("matmul_ref {s}x{s}"), budget, || {
                 std::hint::black_box(matmul_ref(&a, &b).unwrap());
             });
-            results.push(result_row("matmul", &shape, "ref", r_ref.min, Some(flops / r_ref.min / 1e9), None));
+            results.push(result_row("matmul", &shape, "ref", &r_ref, Some(flops / r_ref.min / 1e9), None));
             let cfg1 = KernelConfig::with_threads(1);
             let r_b1 = bench(&format!("matmul_blocked(t=1) {s}x{s}"), budget, || {
                 std::hint::black_box(matmul_with(&a, &b, &cfg1).unwrap());
@@ -95,7 +115,7 @@ fn main() {
                 "matmul",
                 &shape,
                 "blocked_t1",
-                r_b1.min,
+                &r_b1,
                 Some(flops / r_b1.min / 1e9),
                 Some(r_ref.min / r_b1.min),
             ));
@@ -107,7 +127,7 @@ fn main() {
                 "matmul",
                 &shape,
                 &format!("blocked_t{threads}"),
-                r_bn.min,
+                &r_bn,
                 Some(flops / r_bn.min / 1e9),
                 Some(r_ref.min / r_bn.min),
             ));
@@ -138,7 +158,7 @@ fn main() {
                 "matmul",
                 &format!("{s}x{s}x{s}"),
                 &format!("blocked_t{threads}"),
-                r.min,
+                &r,
                 Some(g),
                 None,
             ));
@@ -162,7 +182,7 @@ fn main() {
             let rr = bench(&format!("sparse_compress_ref {shape}"), budget, || {
                 std::hint::black_box(pair.compress_ref(&g).unwrap());
             });
-            results.push(result_row("sparse_compress", &shape, "ref", rr.min, None, None));
+            results.push(result_row("sparse_compress", &shape, "ref", &rr, None, None));
             let rs = bench(&format!("sparse_compress(t={threads}) {shape}"), budget, || {
                 std::hint::black_box(pair.compress_with(&g, &cfgn).unwrap());
             });
@@ -170,7 +190,7 @@ fn main() {
                 "sparse_compress",
                 &shape,
                 &format!("streamed_t{threads}"),
-                rs.min,
+                &rs,
                 None,
                 Some(rr.min / rs.min),
             ));
@@ -180,7 +200,7 @@ fn main() {
             let dr = bench(&format!("sparse_decompress_ref {shape}"), budget, || {
                 std::hint::black_box(pair.decompress_ref(&ds).unwrap());
             });
-            results.push(result_row("sparse_decompress", &shape, "ref", dr.min, None, None));
+            results.push(result_row("sparse_decompress", &shape, "ref", &dr, None, None));
             let dsn = bench(&format!("sparse_decompress(t={threads}) {shape}"), budget, || {
                 std::hint::black_box(pair.decompress_with(&ds, &cfgn).unwrap());
             });
@@ -188,7 +208,7 @@ fn main() {
                 "sparse_decompress",
                 &shape,
                 &format!("streamed_t{threads}"),
-                dsn.min,
+                &dsn,
                 None,
                 Some(dr.min / dsn.min),
             ));

@@ -58,7 +58,7 @@ fn main() -> Result<()> {
         let report = tr.train()?;
         report.print();
         let csv = format!("target/e2e_{}.csv", policy.name());
-        tr.metrics.write_csv(std::path::Path::new(&csv))?;
+        tr.metrics().write_csv(std::path::Path::new(&csv))?;
         println!("curve -> {csv}");
         rows.push(report);
     }

@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     let mut trainer = Trainer::new(&eng, cfg)?;
     let report = trainer.train()?;
     report.print();
-    trainer.metrics.print_phase_breakdown();
+    trainer.metrics().print_phase_breakdown();
 
     println!("\nloss curve (every 5 steps):");
     for (step, loss) in report.loss_curve.iter().step_by(5) {

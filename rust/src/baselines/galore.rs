@@ -10,9 +10,10 @@
 
 use anyhow::Result;
 
-use crate::linalg::randomized_svd;
+use crate::linalg::randomized_svd_with;
 use crate::optim::AdamState;
-use crate::tensor::ops::{matmul, matmul_tn};
+use crate::tensor::kernel::{self, KernelConfig};
+use crate::tensor::ops::{matmul_tn_with, matmul_with};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -32,11 +33,25 @@ impl GaloreState {
     }
 
     /// One GaLore update. Applies `w -= lr * scale * P delta_S` in place.
+    /// Uses the process-wide `KernelConfig`.
     pub fn step(&mut self, w: &mut Tensor, g: &Tensor, lr: f32, rng: &mut Rng) -> Result<()> {
+        self.step_with(w, g, lr, rng, &kernel::current())
+    }
+
+    /// `step` under an explicit per-instance `KernelConfig` (the
+    /// coordinator's entry point; also threaded into the randomized SVD).
+    pub fn step_with(
+        &mut self,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        rng: &mut Rng,
+        cfg: &KernelConfig,
+    ) -> Result<()> {
         let (m, n) = (g.rows(), g.cols());
         let k = self.rank.min(m).min(n);
         if self.p.is_none() || self.steps % self.update_freq == 0 {
-            let svd = randomized_svd(g, k, 2, rng)?;
+            let svd = randomized_svd_with(g, k, 2, rng, cfg)?;
             self.p = Some(svd.u);
             self.svd_count += 1;
             // GaLore keeps the optimizer state across refreshes (the
@@ -47,11 +62,11 @@ impl GaloreState {
         }
         self.steps += 1;
         let p = self.p.as_ref().unwrap();
-        let s = matmul_tn(p, g)?; // [k, n]
+        let s = matmul_tn_with(p, g, cfg)?; // [k, n]
         let st = self.st.as_mut().unwrap();
         let delta_s = st.step_vec(s.data());
         let delta_s = Tensor::new(&[k, n], delta_s)?;
-        let delta_w = matmul(p, &delta_s)?; // [m, n]
+        let delta_w = matmul_with(p, &delta_s, cfg)?; // [m, n]
         crate::tensor::ops::axpy(w, -lr * self.scale, &delta_w);
         Ok(())
     }

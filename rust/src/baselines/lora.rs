@@ -11,7 +11,8 @@
 use anyhow::Result;
 
 use crate::optim::AdamState;
-use crate::tensor::ops::{matmul, matmul_nt, matmul_tn};
+use crate::tensor::kernel::{self, KernelConfig};
+use crate::tensor::ops::{matmul_nt_with, matmul_tn_with, matmul_with};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -44,12 +45,19 @@ impl LoraState {
     }
 
     /// One update from the full-weight gradient; returns the new effective
-    /// weight `W0 + scale * A B` to upload.
+    /// weight `W0 + scale * A B` to upload.  Uses the process-wide
+    /// `KernelConfig`.
     pub fn step(&mut self, g: &Tensor, lr: f32) -> Result<Tensor> {
+        self.step_with(g, lr, &kernel::current())
+    }
+
+    /// `step` under an explicit per-instance `KernelConfig` (the
+    /// coordinator's entry point).
+    pub fn step_with(&mut self, g: &Tensor, lr: f32, cfg: &KernelConfig) -> Result<Tensor> {
         // d(A) = scale * G B^T ; d(B) = scale * A^T G.
-        let mut da = matmul_nt(g, &self.b)?;
+        let mut da = matmul_nt_with(g, &self.b, cfg)?;
         crate::tensor::ops::scale(&mut da, self.scale);
-        let mut db = matmul_tn(&self.a, g)?;
+        let mut db = matmul_tn_with(&self.a, g, cfg)?;
         crate::tensor::ops::scale(&mut db, self.scale);
         let delta_a = self.st_a.step_vec(da.data());
         let delta_b = self.st_b.step_vec(db.data());
@@ -59,11 +67,15 @@ impl LoraState {
         for (w, d) in self.b.data_mut().iter_mut().zip(&delta_b) {
             *w -= lr * d;
         }
-        self.effective()
+        self.effective_with(cfg)
     }
 
     pub fn effective(&self) -> Result<Tensor> {
-        let mut ab = matmul(&self.a, &self.b)?;
+        self.effective_with(&kernel::current())
+    }
+
+    pub fn effective_with(&self, cfg: &KernelConfig) -> Result<Tensor> {
+        let mut ab = matmul_with(&self.a, &self.b, cfg)?;
         crate::tensor::ops::scale(&mut ab, self.scale);
         let mut w = self.w0.clone();
         crate::tensor::ops::axpy(&mut w, 1.0, &ab);

@@ -93,7 +93,9 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
             "corpus_len" => cfg.corpus_len = v.as_usize()?,
             "glue_task" => cfg.glue_task = v.as_bool()?,
             "max_wall_secs" => cfg.max_wall_secs = v.as_f64()?,
-            // Blocked host-kernel substrate (tensor::kernel::KernelConfig).
+            // Blocked host-kernel substrate (tensor::kernel::KernelConfig);
+            // negotiated per trainer instance by PipelineCtx::new, never
+            // installed process-wide.
             "kernel_threads" => cfg.kernel.threads = v.as_usize()?,
             "kernel_block_m" => cfg.kernel.block_m = v.as_usize()?,
             "kernel_block_n" => cfg.kernel.block_n = v.as_usize()?,

@@ -6,6 +6,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::util::bufpool::PooledBuf;
+
 /// A parameter (or subspace) identified by its flat index in the
 /// `ParamStore`, plus the LSP kind when the payload is a subspace gradient.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -15,21 +17,24 @@ pub struct ParamKey {
     pub kind: Option<String>,
 }
 
-/// Gradient heading CPU-ward (GPU -> CPU direction).
-#[derive(Debug, Clone)]
+/// Gradient heading CPU-ward (GPU -> CPU direction).  The payload is a
+/// pooled handle: links forward the message as-is (zero-copy), and the
+/// consumer's drop returns the buffer to the pipeline's `BufPool`.
+#[derive(Debug)]
 pub struct OffloadMsg {
     pub key: ParamKey,
-    pub data: Vec<f32>,
+    pub data: PooledBuf,
     pub prio: i64,
     /// Training step that produced this gradient (for logging).
     pub step: u64,
 }
 
-/// Update delta heading GPU-ward (CPU -> GPU direction).
-#[derive(Debug, Clone)]
+/// Update delta heading GPU-ward (CPU -> GPU direction); payload pooled
+/// like `OffloadMsg`.
+#[derive(Debug)]
 pub struct DeltaMsg {
     pub key: ParamKey,
-    pub delta: Vec<f32>,
+    pub delta: PooledBuf,
     pub prio: i64,
     pub step: u64,
 }

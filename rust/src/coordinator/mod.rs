@@ -1,8 +1,34 @@
 //! The LSP-Offload coordinator — the paper's system contribution, running
 //! for real over the PJRT artifacts.
 //!
-//! Thread topology (PJRT's client is `Rc`-based, so all "GPU" work stays on
-//! the driver thread):
+//! # Layering
+//!
+//! The coordinator is a policy-trait pipeline engine in three layers:
+//!
+//! * **Step driver** (`trainer`) — policy-agnostic: drives per-layer
+//!   fwd/head/bwd through the PJRT artifacts, computes backward priorities
+//!   (FCFS→LCFS, Alg. 3), and hands every materialized gradient to the
+//!   configured policy.  It contains no `PolicyKind` dispatch.
+//! * **Policies** (`policies`) — one module per update policy implementing
+//!   `UpdatePolicy` (`init` / `dispatch_grad` / `apply_delta` /
+//!   `end_of_step` / `report_extras`).  Each owns its own state: LSP the
+//!   `ProjState` projectors, LoRA its adapters, GaLore its SVD projectors,
+//!   Native/GaLore their host Adam moments.  `policies::make_policy` is the
+//!   only remaining policy match in the coordinator.
+//! * **Pipeline substrate** (`pipeline::PipelineCtx`) — everything policies
+//!   share: engine handle, host parameter mirror + device buffers, the
+//!   priority queues and link/updater threads, the payload `BufPool`, the
+//!   pending-delta set, metrics, the *per-instance* negotiated
+//!   `KernelConfig`, and the training RNG.
+//!
+//! Link payloads are pooled (`util::bufpool`): messages carry `PooledBuf`
+//! handles that return their storage to the shared pool on drop, so the
+//! steady-state link hot path allocates no new payload buffers.
+//!
+//! # Thread topology
+//!
+//! PJRT's client is `Rc`-based, so all "GPU" work stays on the driver
+//! thread:
 //!
 //! ```text
 //!   driver thread (GPU domain: PJRT fwd/bwd/compress/apply, data, control)
@@ -17,15 +43,29 @@
 //! (Alg. 3) is a matter of the priorities the scheduler assigns.  The link
 //! threads sleep `bytes / bandwidth * time_scale`, emulating the PCIe
 //! budget of the simulated testbed on top of real compute.
+//!
+//! # Adding a policy
+//!
+//! Create `policies/<name>.rs` implementing `UpdatePolicy` over
+//! `PipelineCtx`, add a `PolicyKind` variant (`policy.rs`) and a
+//! constructor arm in `policies::make_policy` — the step driver, links,
+//! updater, pooling and per-layer events come for free.  See ROADMAP.md
+//! §Coordinator.
 
 pub mod comm;
 pub mod metrics;
+pub mod pipeline;
+pub mod policies;
 pub mod policy;
 pub mod projector_mgr;
+pub mod report;
 pub mod trainer;
 pub mod worker;
 
 pub use comm::{DeltaMsg, Link, OffloadMsg, PrioQueue};
 pub use metrics::Metrics;
+pub use pipeline::{PipelineCtx, TrainConfig};
+pub use policies::{make_policy, UpdatePolicy};
 pub use policy::{Policy, PolicyKind};
-pub use trainer::{TrainConfig, Trainer, TrainReport};
+pub use report::TrainReport;
+pub use trainer::Trainer;

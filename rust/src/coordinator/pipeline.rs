@@ -1,0 +1,274 @@
+//! `PipelineCtx` — the shared pipeline substrate every `UpdatePolicy`
+//! operates through.
+//!
+//! It owns everything that is policy-*independent*: the engine handle, the
+//! host parameter mirror and its device buffers, the offload queues and
+//! link/updater threads, the payload `BufPool`, metrics, the per-instance
+//! negotiated `KernelConfig`, and the training RNG.  Policies own their own
+//! state (projectors, adapters, host Adam moments) and receive `&mut
+//! PipelineCtx` on every trait call, so adding a schedule or policy never
+//! touches this file or the step driver.
+//!
+//! The kernel width here is *per instance*: `new` negotiates
+//! `cfg.kernel` against the schedule-level threads (two links + CPU
+//! updater for offloading policies) and keeps the result in `self.kernel`
+//! instead of installing it process-wide, so two trainers with different
+//! policies can coexist in one process (ROADMAP §Perf follow-up).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+use crate::coordinator::comm::{DeltaMsg, Link, OffloadMsg, ParamKey, PrioQueue};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::PolicyKind;
+use crate::coordinator::worker::{CpuUpdater, SharedStates};
+use crate::model::ParamStore;
+use crate::runtime::Engine;
+use crate::tensor::kernel::KernelConfig;
+use crate::util::bufpool::{BufPool, PooledBuf};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub policy: PolicyKind,
+    pub steps: u64,
+    pub lr: f32,
+    /// Emulated PCIe bandwidth per direction, bytes/s.
+    pub bw_bytes_per_s: f64,
+    /// Multiplier on emulated transfer time (1.0 = bw as configured).
+    pub time_scale: f64,
+    /// Multiplier on CPU update time (>1 emulates a slower CPU).
+    pub cpu_scale: f64,
+    /// Projector bias check frequency (Alg. 1 CheckFreq), 0 = never.
+    pub check_freq: u64,
+    /// Bias threshold alpha.
+    pub alpha: f32,
+    /// Max learn steps per projector refresh ("Timeout").
+    pub learn_budget: u32,
+    pub learn_lr: f32,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub seed: u64,
+    /// Enable the FCFS->LCFS transition (Alg. 3); false = pure FCFS.
+    pub lcfs: bool,
+    /// LoRA / GaLore rank.
+    pub rank: usize,
+    pub galore_update_freq: u64,
+    pub log_every: u64,
+    pub corpus_len: usize,
+    /// Train on the GLUE-like classification task instead of the LM corpus
+    /// (the Table 3 / Fig. 8 experiment).
+    pub glue_task: bool,
+    /// Stop after this many wall-clock seconds (0 = no limit) — the paper's
+    /// equal-time-budget comparisons (Table 3, Fig. 5).
+    pub max_wall_secs: f64,
+    /// Blocked host-kernel shape (worker width + cache blocks).  The width
+    /// is *negotiated per instance*: offloading policies dedicate three
+    /// schedule-level threads (two links + CPU updater), which
+    /// `PipelineCtx::new` subtracts and keeps on the context — nothing is
+    /// installed process-wide, so trainers with different configs coexist.
+    pub kernel: KernelConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            policy: PolicyKind::Lsp,
+            steps: 50,
+            lr: 1e-3,
+            bw_bytes_per_s: 0.1e9,
+            time_scale: 1.0,
+            cpu_scale: 1.0,
+            check_freq: 100,
+            alpha: 0.5,
+            learn_budget: 40,
+            learn_lr: 0.02,
+            eval_every: 25,
+            eval_batches: 4,
+            seed: 1234,
+            lcfs: true,
+            rank: 8,
+            galore_update_freq: 200,
+            log_every: 10,
+            corpus_len: 200_000,
+            glue_task: false,
+            max_wall_secs: 0.0,
+            kernel: KernelConfig::default(),
+        }
+    }
+}
+
+pub struct PipelineCtx<'e> {
+    pub eng: &'e Engine,
+    pub cfg: TrainConfig,
+    /// Negotiated per-instance kernel shape (never installed process-wide).
+    pub kernel: KernelConfig,
+    pub params: ParamStore,
+    /// Device-resident parameter buffers, indexed like `params.tensors`.
+    pub bufs: Vec<PjRtBuffer>,
+    pub metrics: Metrics,
+    /// Recycling pool backing every link payload.
+    pub pool: BufPool,
+    pub rng: Rng,
+    /// Keys with an offloaded gradient still in flight (its delta has not
+    /// been applied yet).
+    pub pending: HashSet<ParamKey>,
+    pub d2h_in: Arc<PrioQueue<OffloadMsg>>,
+    pub d2h_out: Arc<PrioQueue<OffloadMsg>>,
+    pub h2d_in: Arc<PrioQueue<DeltaMsg>>,
+    pub delta_out: Arc<PrioQueue<DeltaMsg>>,
+    pub links: Option<(Link, Link)>,
+    pub updater: Option<CpuUpdater>,
+}
+
+impl<'e> PipelineCtx<'e> {
+    pub fn new(eng: &'e Engine, cfg: TrainConfig) -> Result<PipelineCtx<'e>> {
+        // Kernel-width negotiation: the offload pipeline owns three
+        // schedule-level threads (d2h link, h2d link, CPU updater), so the
+        // blocked host kernels (bias checks, baseline GEMMs, fused Adam)
+        // get the remaining hardware threads.  Thread-count changes never
+        // affect numerics (results are bit-identical for every worker
+        // count); block-size changes do reorder f32 accumulation, which is
+        // why the config stays with this instance.
+        let reserved = if cfg.policy.offloads() { 3 } else { 0 };
+        let kernel = cfg.kernel.negotiated(reserved);
+
+        let rng = Rng::new(cfg.seed);
+        let params = ParamStore::init(&eng.man, cfg.seed ^ 0xA5A5)?;
+        let bufs = params
+            .tensors
+            .iter()
+            .map(|t| eng.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+
+        let pool = BufPool::new();
+        let d2h_in = Arc::new(PrioQueue::new());
+        let d2h_out = Arc::new(PrioQueue::new());
+        let h2d_in = Arc::new(PrioQueue::new());
+        let delta_out = Arc::new(PrioQueue::new());
+        let (links, updater) = if cfg.policy.offloads() {
+            let d2h = Link::spawn(
+                "d2h",
+                cfg.bw_bytes_per_s,
+                cfg.time_scale,
+                d2h_in.clone(),
+                d2h_out.clone(),
+                |m: &OffloadMsg| m.data.len() * 4,
+                |m| m.prio,
+            );
+            let h2d = Link::spawn(
+                "h2d",
+                cfg.bw_bytes_per_s,
+                cfg.time_scale,
+                h2d_in.clone(),
+                delta_out.clone(),
+                |m: &DeltaMsg| m.delta.len() * 4,
+                |m| m.prio,
+            );
+            // The updater owns ONE of the reserved schedule threads.
+            // Handing its parallel fused Adam the full negotiated width
+            // would double-book the cores the negotiation just granted the
+            // driver's kernels exactly when UPD overlaps bwd/compress (the
+            // point of the pipeline), and the contention-inflated busy time
+            // would skew the cpu_scale emulation.  Half the width (>=1)
+            // keeps big payloads parallel with bounded contention; numerics
+            // are unaffected (fused_step_with is bit-identical at every
+            // width).
+            let upd_kernel = KernelConfig { threads: (kernel.threads / 2).max(1), ..kernel };
+            let upd = CpuUpdater::spawn(
+                d2h_out.clone(),
+                h2d_in.clone(),
+                cfg.cpu_scale,
+                pool.clone(),
+                upd_kernel,
+            );
+            (Some((d2h, h2d)), Some(upd))
+        } else {
+            (None, None)
+        };
+
+        Ok(PipelineCtx {
+            eng,
+            cfg,
+            kernel,
+            params,
+            bufs,
+            metrics: Metrics::default(),
+            pool,
+            rng,
+            pending: HashSet::new(),
+            d2h_in,
+            d2h_out,
+            h2d_in,
+            delta_out,
+            links,
+            updater,
+        })
+    }
+
+    /// Re-upload the host mirror of parameter `idx` to the device.
+    pub fn upload_param(&mut self, idx: usize) -> Result<()> {
+        self.bufs[idx] = self.eng.upload(&self.params.tensors[idx])?;
+        Ok(())
+    }
+
+    /// Full-parameter update `w[idx] -= lr * delta` on the host mirror,
+    /// then re-upload (for Zero and friends, the upload *is* the delta
+    /// traffic — already metered by the h2d link the message crossed).
+    pub fn apply_host_step(&mut self, idx: usize, delta: &[f32]) -> Result<()> {
+        let lr = self.cfg.lr;
+        let w = &mut self.params.tensors[idx];
+        if w.len() != delta.len() {
+            bail!("delta size mismatch for param {idx}: {} vs {}", w.len(), delta.len());
+        }
+        for (wv, dv) in w.data_mut().iter_mut().zip(delta) {
+            *wv -= lr * dv;
+        }
+        self.upload_param(idx)
+    }
+
+    /// Mark `key` in flight and enqueue its gradient on the D2H link.
+    pub fn push_offload(&mut self, key: ParamKey, data: PooledBuf, prio: i64, step: u64) {
+        self.pending.insert(key.clone());
+        self.d2h_in.push(prio, OffloadMsg { key, data, prio, step });
+    }
+
+    /// Flat indices of the head/embedding params ("layer -1").
+    pub fn head_param_indices(&self) -> Vec<usize> {
+        ["wte", "wpe", "lnf_g", "lnf_b"]
+            .iter()
+            .filter_map(|n| self.params.index(n))
+            .collect()
+    }
+
+    pub fn all_param_indices(&self) -> Vec<usize> {
+        (0..self.params.len()).collect()
+    }
+
+    /// The CPU updater's shared per-key Adam states (needed by the
+    /// projector manager for subspace-switch re-projection).
+    pub fn shared_adam_states(&self) -> Option<SharedStates> {
+        self.updater.as_ref().map(|u| u.states.clone())
+    }
+}
+
+impl Drop for PipelineCtx<'_> {
+    fn drop(&mut self) {
+        // Close every queue first so each pipeline thread's blocking pop
+        // returns None and the thread exits; only then join.
+        self.d2h_in.close();
+        self.d2h_out.close();
+        self.h2d_in.close();
+        self.delta_out.close();
+        if let Some((mut a, mut b)) = self.links.take() {
+            a.stop();
+            b.stop();
+        }
+        if let Some(mut u) = self.updater.take() {
+            u.join();
+        }
+    }
+}

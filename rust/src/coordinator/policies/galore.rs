@@ -1,0 +1,66 @@
+//! GaLore policy (PEFT baseline): periodic randomized-SVD projector,
+//! rank-r subspace Adam "on device" for the block matrices; non-matrix
+//! params train through the shared host-Adam path.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::baselines::GaloreState;
+use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::policy::PolicyKind;
+use crate::optim::AdamState;
+use crate::tensor::Tensor;
+
+use super::{host_adam_step, UpdatePolicy};
+
+#[derive(Default)]
+pub struct GalorePolicy {
+    galore: HashMap<usize, GaloreState>,
+    /// Host Adam for the non-matrix params GaLore trains natively.
+    native: HashMap<usize, AdamState>,
+}
+
+impl UpdatePolicy for GalorePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Galore
+    }
+
+    fn init(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
+        let man = &ctx.eng.man;
+        for layer in 0..man.config.n_layer {
+            let range = ctx.params.block_range(man, layer);
+            for meta in man.kinds.values() {
+                let pidx = range.start + meta.param_index;
+                self.galore.insert(
+                    pidx,
+                    GaloreState::new(ctx.cfg.rank, ctx.cfg.galore_update_freq, 0.25),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn dispatch_grad(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: Tensor,
+        _step: u64,
+        _prio: i64,
+    ) -> Result<()> {
+        if let Some(gal) = self.galore.get_mut(&idx) {
+            gal.step_with(
+                &mut ctx.params.tensors[idx],
+                &g,
+                ctx.cfg.lr,
+                &mut ctx.rng,
+                &ctx.kernel,
+            )?;
+            ctx.upload_param(idx)
+        } else {
+            // GaLore trains non-matrix params natively.
+            host_adam_step(ctx, &mut self.native, idx, &g)
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! LoRA policy (PEFT baseline): rank-r A/B adapters per block matrix,
+//! trained "on device" from the shared full-weight gradient; base weights
+//! and every non-adapter param stay frozen.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::baselines::LoraState;
+use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::policy::PolicyKind;
+use crate::tensor::Tensor;
+
+use super::UpdatePolicy;
+
+#[derive(Default)]
+pub struct LoraPolicy {
+    lora: HashMap<usize, LoraState>,
+}
+
+impl UpdatePolicy for LoraPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Lora
+    }
+
+    fn init(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
+        let man = &ctx.eng.man;
+        let rank = ctx.cfg.rank;
+        for layer in 0..man.config.n_layer {
+            let range = ctx.params.block_range(man, layer);
+            for meta in man.kinds.values() {
+                let pidx = range.start + meta.param_index;
+                let w0 = ctx.params.tensors[pidx].clone();
+                self.lora.insert(
+                    pidx,
+                    LoraState::init(w0, rank, 4.0 * rank as f32, &mut ctx.rng),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn dispatch_grad(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: Tensor,
+        _step: u64,
+        _prio: i64,
+    ) -> Result<()> {
+        if let Some(lora) = self.lora.get_mut(&idx) {
+            let w_eff = lora.step_with(&g, ctx.cfg.lr, &ctx.kernel)?;
+            ctx.params.tensors[idx] = w_eff;
+            ctx.upload_param(idx)?;
+        }
+        // All other params frozen (PEFT).
+        Ok(())
+    }
+}

@@ -1,0 +1,160 @@
+//! LSP-Offload policy (Alg. 1 + Alg. 3): learned sparse projectors compress
+//! each matrix gradient on the GPU to a `d x d` subspace gradient, which
+//! ships over the d2h link; the CPU updater runs subspace Adam; the
+//! returning delta is decompress-applied on the GPU.  Every `check_freq`
+//! steps the projector manager re-checks the estimation bias and re-learns
+//! the projector values when it exceeds `alpha` (`MAYBEUPDATE`).
+//!
+//! Small non-matrix params (layer norms, biases) have no projector and take
+//! the full-gradient Zero path over the same links.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::coordinator::comm::{DeltaMsg, ParamKey};
+use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::policy::PolicyKind;
+use crate::coordinator::projector_mgr::ProjState;
+use crate::coordinator::report::TrainReport;
+use crate::tensor::Tensor;
+
+use super::UpdatePolicy;
+
+#[derive(Default)]
+pub struct LspPolicy {
+    /// Projectors keyed by flat param index.
+    projectors: HashMap<usize, ProjState>,
+}
+
+impl LspPolicy {
+    /// LSP path for a projected matrix: maybe-update projector, compress on
+    /// the GPU, ship the d x d gradient (payload adopted into the pool).
+    fn lsp_dispatch(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: &Tensor,
+        step: u64,
+        prio: i64,
+    ) -> Result<()> {
+        let eng = ctx.eng;
+        let check = ctx.cfg.check_freq > 0 && step % ctx.cfg.check_freq == 0;
+        if check {
+            let t0 = Instant::now();
+            let key = ParamKey {
+                param_index: idx,
+                kind: Some(self.projectors[&idx].kind.clone()),
+            };
+            let states = ctx
+                .shared_adam_states()
+                .expect("LSP policy requires the updater");
+            let st = self.projectors.get_mut(&idx).unwrap();
+            st.maybe_update(
+                eng,
+                g,
+                ctx.cfg.alpha,
+                ctx.cfg.learn_budget,
+                ctx.cfg.learn_lr,
+                &states,
+                &key,
+                &ctx.kernel,
+            )?;
+            ctx.metrics.phase("proj_check").push(t0.elapsed().as_secs_f64());
+        }
+        let st = &self.projectors[&idx];
+        let t0 = Instant::now();
+        let e = eng.exec(&format!("compress_{}", st.kind))?;
+        let g_buf = eng.upload(g)?;
+        let args: Vec<&PjRtBuffer> = vec![
+            &g_buf,
+            &st.gather_bufs[0],
+            &st.gather_bufs[1],
+            &st.gather_bufs[2],
+            &st.gather_bufs[3],
+        ];
+        let s_buf = e.call_b(&args)?.device()?;
+        let s_host = ctx.pool.adopt(eng.download_vec(&s_buf)?);
+        ctx.metrics.phase("compress").push(t0.elapsed().as_secs_f64());
+        let key = ParamKey { param_index: idx, kind: Some(st.kind.clone()) };
+        ctx.push_offload(key, s_host, prio, step);
+        Ok(())
+    }
+}
+
+impl UpdatePolicy for LspPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Lsp
+    }
+
+    fn init(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
+        let eng = ctx.eng;
+        let man = &eng.man;
+        for layer in 0..man.config.n_layer {
+            let range = ctx.params.block_range(man, layer);
+            for (kind, meta) in man.kinds.clone() {
+                let pidx = range.start + meta.param_index;
+                let st = ProjState::init(eng, &kind, &meta, &mut ctx.rng)?;
+                self.projectors.insert(pidx, st);
+            }
+        }
+        Ok(())
+    }
+
+    fn dispatch_grad(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: Tensor,
+        step: u64,
+        prio: i64,
+    ) -> Result<()> {
+        if self.projectors.contains_key(&idx) {
+            self.lsp_dispatch(ctx, idx, &g, step, prio)
+        } else {
+            // Small non-matrix params take the full-gradient path.
+            let key = ParamKey { param_index: idx, kind: None };
+            let data = ctx.pool.adopt(g.into_data());
+            ctx.push_offload(key, data, prio, step);
+            Ok(())
+        }
+    }
+
+    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+        let idx = msg.key.param_index;
+        if let Some(kind) = &msg.key.kind {
+            // Subspace delta: decompress-apply on the GPU (L1 kernel).
+            let eng = ctx.eng;
+            let st = self
+                .projectors
+                .get(&idx)
+                .with_context(|| format!("no projector for param {idx}"))?;
+            let meta = &st.meta;
+            let e = eng.exec(&format!("apply_{kind}"))?;
+            let ds = eng.upload_f32(&[meta.d, meta.d], &msg.delta)?;
+            let lr_buf = eng.upload_f32(&[1, 1], &[ctx.cfg.lr])?;
+            let args: Vec<&PjRtBuffer> = vec![
+                &ctx.bufs[idx],
+                &st.row_bufs[0],
+                &st.row_bufs[1],
+                &st.row_bufs[2],
+                &st.row_bufs[3],
+                &ds,
+                &lr_buf,
+            ];
+            let new_w = e.call_b(&args)?.device()?;
+            ctx.bufs[idx] = new_w;
+        } else {
+            // Full-parameter delta: host-mirror apply + re-upload.
+            ctx.apply_host_step(idx, &msg.delta)?;
+        }
+        ctx.pending.remove(&msg.key);
+        Ok(())
+    }
+
+    fn report_extras(&self, report: &mut TrainReport) {
+        report.projector_refreshes = self.projectors.values().map(|p| p.tau).sum();
+    }
+}

@@ -1,0 +1,36 @@
+//! Native policy: everything "on device" — host-side Adam applied
+//! immediately at dispatch, no throttled links (the no-offload upper bound
+//! of Fig. 6).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::policy::PolicyKind;
+use crate::optim::AdamState;
+use crate::tensor::Tensor;
+
+use super::{host_adam_step, UpdatePolicy};
+
+#[derive(Default)]
+pub struct NativePolicy {
+    states: HashMap<usize, AdamState>,
+}
+
+impl UpdatePolicy for NativePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Native
+    }
+
+    fn dispatch_grad(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: Tensor,
+        _step: u64,
+        _prio: i64,
+    ) -> Result<()> {
+        host_adam_step(ctx, &mut self.states, idx, &g)
+    }
+}

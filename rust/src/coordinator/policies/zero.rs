@@ -1,0 +1,51 @@
+//! Zero-Offload policy (Alg. 2): full gradients cross the d2h link, the CPU
+//! updater runs the fused Adam, deltas return over h2d, and the step ends
+//! with a barrier.  All optimizer state lives CPU-side in the updater.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::comm::{DeltaMsg, ParamKey};
+use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::policy::PolicyKind;
+use crate::tensor::Tensor;
+
+use super::{wait_for_params, UpdatePolicy};
+
+#[derive(Default)]
+pub struct ZeroPolicy;
+
+impl UpdatePolicy for ZeroPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Zero
+    }
+
+    fn dispatch_grad(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: Tensor,
+        step: u64,
+        prio: i64,
+    ) -> Result<()> {
+        let key = ParamKey { param_index: idx, kind: None };
+        let data = ctx.pool.adopt(g.into_data());
+        ctx.push_offload(key, data, prio, step);
+        Ok(())
+    }
+
+    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+        ctx.apply_host_step(msg.key.param_index, &msg.delta)?;
+        ctx.pending.remove(&msg.key);
+        Ok(())
+    }
+
+    fn end_of_step(&mut self, ctx: &mut PipelineCtx<'_>, _step: u64) -> Result<()> {
+        let t0 = Instant::now();
+        let all = ctx.all_param_indices();
+        wait_for_params(ctx, self, &all)?;
+        ctx.metrics.phase("barrier").push(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+}

@@ -10,10 +10,10 @@
 //! CPU-resident subspace Adam moments onto the new subspace (Alg. 1 lines
 //! 8-9, via `state_proj_<kind>`).
 //!
-//! The host-side bias estimate (`ProjectorPair::bias`, a compress +
+//! The host-side bias estimate (`ProjectorPair::bias_with`, a compress +
 //! decompress round-trip) runs on the blocked multi-threaded kernel
-//! substrate; its worker width is the `KernelConfig` the trainer negotiates
-//! and installs at startup.
+//! substrate; its worker width is the per-instance `KernelConfig` the
+//! coordinator negotiates and threads in through `PipelineCtx`.
 
 use anyhow::Result;
 use xla::PjRtBuffer;
@@ -23,6 +23,7 @@ use crate::coordinator::worker::SharedStates;
 use crate::model::manifest::KindMeta;
 use crate::runtime::Engine;
 use crate::sparse::ProjectorPair;
+use crate::tensor::kernel::KernelConfig;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -71,8 +72,9 @@ impl ProjState {
         learn_lr: f32,
         states: &SharedStates,
         state_key: &ParamKey,
+        kcfg: &KernelConfig,
     ) -> Result<f32> {
-        let (rel, _, _) = self.pair.bias(g)?;
+        let (rel, _, _) = self.pair.bias_with(g, kcfg)?;
         self.last_bias = rel;
         if rel <= alpha {
             return Ok(rel);

@@ -1,0 +1,54 @@
+//! End-of-run training report: throughput, comm volume, stall/busy
+//! breakdown, plus policy-specific extras filled in via
+//! `UpdatePolicy::report_extras`.
+
+#[derive(Debug)]
+pub struct TrainReport {
+    pub policy: &'static str,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub final_train_loss: f32,
+    pub final_eval_loss: Option<f32>,
+    pub tokens_per_s: f64,
+    pub d2h_bytes: u64,
+    pub h2d_bytes: u64,
+    pub stall_secs: f64,
+    pub cpu_busy_secs: f64,
+    pub link_busy_secs: (f64, f64),
+    pub projector_refreshes: u64,
+    /// Fraction of payload-buffer takes served from the recycling pool.
+    pub pool_hit_rate: f64,
+    pub loss_curve: Vec<(u64, f32)>,
+    pub eval_curve: Vec<(u64, f32)>,
+    pub wall_curve: Vec<(u64, f64)>,
+}
+
+impl TrainReport {
+    pub fn print(&self) {
+        println!("==== train report: {} ====", self.policy);
+        println!(
+            "steps {}  wall {}  tokens/s {:.1}",
+            self.steps,
+            crate::util::human_secs(self.wall_secs),
+            self.tokens_per_s
+        );
+        println!(
+            "final train loss {:.4}  eval loss {}",
+            self.final_train_loss,
+            self.final_eval_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into())
+        );
+        println!(
+            "offload traffic: d2h {} h2d {}  link busy {:.2}s/{:.2}s  cpu busy {:.2}s  stall {:.2}s  pool hits {:.0}%",
+            crate::util::human_bytes(self.d2h_bytes),
+            crate::util::human_bytes(self.h2d_bytes),
+            self.link_busy_secs.0,
+            self.link_busy_secs.1,
+            self.cpu_busy_secs,
+            self.stall_secs,
+            self.pool_hit_rate * 100.0,
+        );
+        if self.projector_refreshes > 0 {
+            println!("projector refreshes (sum tau): {}", self.projector_refreshes);
+        }
+    }
+}

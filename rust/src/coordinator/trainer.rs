@@ -1,7 +1,7 @@
-//! The end-to-end training engine: drives per-layer fwd/bwd through the
-//! PJRT artifacts and realizes each update policy, with LSP-Offload's
-//! layer-wise pipeline (Alg. 3) running over real threads and throttled
-//! links.
+//! The policy-agnostic step driver: drives per-layer fwd/bwd through the
+//! PJRT artifacts and hands every materialized gradient to the configured
+//! `UpdatePolicy`, with LSP-Offload's layer-wise pipeline (Alg. 3) running
+//! over real threads and throttled links.
 //!
 //! Per iteration (LSP policy):
 //!
@@ -20,299 +20,91 @@
 //! update of deep layers overlap the backward of shallow layers and the
 //! next forward — exactly the paper's pipeline.  Zero-Offload instead
 //! pushes full gradients and barriers at the end of the step (Alg. 2).
+//!
+//! This file contains no policy logic: how a gradient becomes an update
+//! lives entirely in `coordinator::policies` (one module per policy over
+//! the shared `coordinator::pipeline::PipelineCtx`).
 
-use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 use xla::PjRtBuffer;
 
-use crate::baselines::{GaloreState, LoraState};
-use crate::coordinator::comm::{DeltaMsg, Link, OffloadMsg, ParamKey, PrioQueue};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::policy::PolicyKind;
-use crate::coordinator::projector_mgr::ProjState;
-use crate::coordinator::worker::CpuUpdater;
+use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::policies::{self, make_policy, UpdatePolicy};
 use crate::data::{Batch, Batcher, Corpus, DataSource, GlueBatcher};
+use crate::model::manifest::Manifest;
 use crate::model::ParamStore;
-use crate::optim::AdamState;
 use crate::runtime::Engine;
-use crate::tensor::kernel::{self, KernelConfig};
 use crate::tensor::Tensor;
-use crate::util::rng::Rng;
 
-#[derive(Debug, Clone)]
-pub struct TrainConfig {
-    pub policy: PolicyKind,
-    pub steps: u64,
-    pub lr: f32,
-    /// Emulated PCIe bandwidth per direction, bytes/s.
-    pub bw_bytes_per_s: f64,
-    /// Multiplier on emulated transfer time (1.0 = bw as configured).
-    pub time_scale: f64,
-    /// Multiplier on CPU update time (>1 emulates a slower CPU).
-    pub cpu_scale: f64,
-    /// Projector bias check frequency (Alg. 1 CheckFreq), 0 = never.
-    pub check_freq: u64,
-    /// Bias threshold alpha.
-    pub alpha: f32,
-    /// Max learn steps per projector refresh ("Timeout").
-    pub learn_budget: u32,
-    pub learn_lr: f32,
-    pub eval_every: u64,
-    pub eval_batches: usize,
-    pub seed: u64,
-    /// Enable the FCFS->LCFS transition (Alg. 3); false = pure FCFS.
-    pub lcfs: bool,
-    /// LoRA / GaLore rank.
-    pub rank: usize,
-    pub galore_update_freq: u64,
-    pub log_every: u64,
-    pub corpus_len: usize,
-    /// Train on the GLUE-like classification task instead of the LM corpus
-    /// (the Table 3 / Fig. 8 experiment).
-    pub glue_task: bool,
-    /// Stop after this many wall-clock seconds (0 = no limit) — the paper's
-    /// equal-time-budget comparisons (Table 3, Fig. 5).
-    pub max_wall_secs: f64,
-    /// Blocked host-kernel shape (worker width + cache blocks). The width
-    /// is *negotiated*: offloading policies dedicate three schedule-level
-    /// threads (two links + CPU updater), which `Trainer::new` subtracts
-    /// before installing the config process-wide.
-    pub kernel: KernelConfig,
-}
-
-impl Default for TrainConfig {
-    fn default() -> Self {
-        TrainConfig {
-            policy: PolicyKind::Lsp,
-            steps: 50,
-            lr: 1e-3,
-            bw_bytes_per_s: 0.1e9,
-            time_scale: 1.0,
-            cpu_scale: 1.0,
-            check_freq: 100,
-            alpha: 0.5,
-            learn_budget: 40,
-            learn_lr: 0.02,
-            eval_every: 25,
-            eval_batches: 4,
-            seed: 1234,
-            lcfs: true,
-            rank: 8,
-            galore_update_freq: 200,
-            log_every: 10,
-            corpus_len: 200_000,
-            glue_task: false,
-            max_wall_secs: 0.0,
-            kernel: KernelConfig::default(),
-        }
-    }
-}
-
-#[derive(Debug)]
-pub struct TrainReport {
-    pub policy: &'static str,
-    pub steps: u64,
-    pub wall_secs: f64,
-    pub final_train_loss: f32,
-    pub final_eval_loss: Option<f32>,
-    pub tokens_per_s: f64,
-    pub d2h_bytes: u64,
-    pub h2d_bytes: u64,
-    pub stall_secs: f64,
-    pub cpu_busy_secs: f64,
-    pub link_busy_secs: (f64, f64),
-    pub projector_refreshes: u64,
-    pub loss_curve: Vec<(u64, f32)>,
-    pub eval_curve: Vec<(u64, f32)>,
-    pub wall_curve: Vec<(u64, f64)>,
-}
+// Re-exported so the established `coordinator::trainer::{TrainConfig,
+// TrainReport}` import paths keep working after the split.
+pub use crate::coordinator::pipeline::TrainConfig;
+pub use crate::coordinator::report::TrainReport;
 
 pub struct Trainer<'e> {
-    pub eng: &'e Engine,
-    pub cfg: TrainConfig,
-    pub params: ParamStore,
-    bufs: Vec<PjRtBuffer>,
-    pub metrics: Metrics,
-
-    // Offload machinery (Zero / Lsp).
-    d2h_in: Arc<PrioQueue<OffloadMsg>>,
-    d2h_out: Arc<PrioQueue<OffloadMsg>>,
-    h2d_in: Arc<PrioQueue<DeltaMsg>>,
-    delta_out: Arc<PrioQueue<DeltaMsg>>,
-    links: Option<(Link, Link)>,
-    updater: Option<CpuUpdater>,
-    pending: HashSet<ParamKey>,
-
-    // LSP projectors, keyed by flat param index.
-    projectors: HashMap<usize, ProjState>,
-    // Native host optimizer.
-    native_states: HashMap<usize, AdamState>,
-    // Baselines.
-    lora: HashMap<usize, LoraState>,
-    galore: HashMap<usize, GaloreState>,
-
-    rng: Rng,
+    ctx: PipelineCtx<'e>,
+    policy: Box<dyn UpdatePolicy>,
     batcher: DataSource,
     eval_batches: Vec<Batch>,
     t0: Instant,
 }
 
+/// Training stream + held-out eval batches (separate seeds).
+fn build_data(man: &Manifest, cfg: &TrainConfig) -> (DataSource, Vec<Batch>) {
+    let c = &man.config;
+    if cfg.glue_task {
+        let batcher = DataSource::Glue(GlueBatcher::new(c.vocab, c.seq, c.batch, cfg.seed ^ 0x77));
+        // Same planted patterns (same task seed), fresh noise stream.
+        let mut eval_b = GlueBatcher::new(c.vocab, c.seq, c.batch, cfg.seed ^ 0x77);
+        for _ in 0..50 {
+            eval_b.next_batch(); // advance past the training prefix
+        }
+        let eval: Vec<Batch> = (0..cfg.eval_batches).map(|_| eval_b.next_batch()).collect();
+        (batcher, eval)
+    } else {
+        // Train/eval are disjoint windows of the SAME synthetic language
+        // (same Markov structure): eval measures generalization, not a
+        // distribution shift.
+        let eval_len = (c.batch * c.seq + 1) * (cfg.eval_batches + 2);
+        let full = Corpus::synthetic(c.vocab, cfg.corpus_len + eval_len, cfg.seed);
+        let train = Corpus {
+            vocab: c.vocab,
+            tokens: full.tokens[..cfg.corpus_len].to_vec(),
+        };
+        let eval_c = Corpus {
+            vocab: c.vocab,
+            tokens: full.tokens[cfg.corpus_len..].to_vec(),
+        };
+        let batcher = DataSource::Lm(Batcher::new(&train, c.batch, c.seq, cfg.seed ^ 0x77));
+        let mut eval_b = Batcher::new(&eval_c, c.batch, c.seq, 1);
+        let eval: Vec<Batch> = (0..cfg.eval_batches).map(|_| eval_b.next_batch()).collect();
+        (batcher, eval)
+    }
+}
+
 impl<'e> Trainer<'e> {
     pub fn new(eng: &'e Engine, cfg: TrainConfig) -> Result<Trainer<'e>> {
-        // Kernel-width negotiation: the offload pipeline owns three
-        // schedule-level threads (d2h link, h2d link, CPU updater), so the
-        // blocked host kernels (compress oracle, bias checks, baseline
-        // GEMMs, fused Adam callers) get the remaining hardware threads.
-        // The install is process-wide. Thread-count changes never affect
-        // numerics (results are bit-identical for every worker count);
-        // block-size changes do reorder f32 accumulation, so a process must
-        // not mix trainers with different block configs — every in-repo
-        // driver constructs its trainers from one config (see ROADMAP.md
-        // §Perf for the per-instance follow-up).
-        let reserved = if cfg.policy.offloads() { 3 } else { 0 };
-        kernel::install(cfg.kernel.negotiated(reserved));
-
-        let man = &eng.man;
-        let rng = Rng::new(cfg.seed);
-        let params = ParamStore::init(man, cfg.seed ^ 0xA5A5)?;
-        let bufs = params
-            .tensors
-            .iter()
-            .map(|t| eng.upload(t))
-            .collect::<Result<Vec<_>>>()?;
-
-        // Data: training stream + held-out eval batches (separate seeds).
-        let c = &man.config;
-        let (batcher, eval_batches) = if cfg.glue_task {
-            let batcher =
-                DataSource::Glue(GlueBatcher::new(c.vocab, c.seq, c.batch, cfg.seed ^ 0x77));
-            // Same planted patterns (same task seed), fresh noise stream.
-            let mut eval_b = GlueBatcher::new(c.vocab, c.seq, c.batch, cfg.seed ^ 0x77);
-            for _ in 0..50 {
-                eval_b.next_batch(); // advance past the training prefix
-            }
-            let eval: Vec<Batch> = (0..cfg.eval_batches).map(|_| eval_b.next_batch()).collect();
-            (batcher, eval)
-        } else {
-            // Train/eval are disjoint windows of the SAME synthetic language
-            // (same Markov structure): eval measures generalization, not a
-            // distribution shift.
-            let eval_len = (c.batch * c.seq + 1) * (cfg.eval_batches + 2);
-            let full = Corpus::synthetic(c.vocab, cfg.corpus_len + eval_len, cfg.seed);
-            let train = Corpus {
-                vocab: c.vocab,
-                tokens: full.tokens[..cfg.corpus_len].to_vec(),
-            };
-            let eval_c = Corpus {
-                vocab: c.vocab,
-                tokens: full.tokens[cfg.corpus_len..].to_vec(),
-            };
-            let batcher = DataSource::Lm(Batcher::new(&train, c.batch, c.seq, cfg.seed ^ 0x77));
-            let mut eval_b = Batcher::new(&eval_c, c.batch, c.seq, 1);
-            let eval: Vec<Batch> = (0..cfg.eval_batches).map(|_| eval_b.next_batch()).collect();
-            (batcher, eval)
-        };
-
-        // Offload pipeline threads.
-        let d2h_in = Arc::new(PrioQueue::new());
-        let d2h_out = Arc::new(PrioQueue::new());
-        let h2d_in = Arc::new(PrioQueue::new());
-        let delta_out = Arc::new(PrioQueue::new());
-        let (links, updater) = if cfg.policy.offloads() {
-            let d2h = Link::spawn(
-                "d2h",
-                cfg.bw_bytes_per_s,
-                cfg.time_scale,
-                d2h_in.clone(),
-                d2h_out.clone(),
-                |m: &OffloadMsg| m.data.len() * 4,
-                |m| m.prio,
-            );
-            let h2d = Link::spawn(
-                "h2d",
-                cfg.bw_bytes_per_s,
-                cfg.time_scale,
-                h2d_in.clone(),
-                delta_out.clone(),
-                |m: &DeltaMsg| m.delta.len() * 4,
-                |m| m.prio,
-            );
-            let upd = CpuUpdater::spawn(d2h_out.clone(), h2d_in.clone(), cfg.cpu_scale);
-            (Some((d2h, h2d)), Some(upd))
-        } else {
-            (None, None)
-        };
-
-        let mut trainer = Trainer {
-            eng,
-            cfg,
-            params,
-            bufs,
-            metrics: Metrics::default(),
-            d2h_in,
-            d2h_out,
-            h2d_in,
-            delta_out,
-            links,
-            updater,
-            pending: HashSet::new(),
-            projectors: HashMap::new(),
-            native_states: HashMap::new(),
-            lora: HashMap::new(),
-            galore: HashMap::new(),
-            rng,
-            batcher,
-            eval_batches,
-            t0: Instant::now(),
-        };
-        trainer.init_policy_state()?;
-        Ok(trainer)
+        let (batcher, eval_batches) = build_data(&eng.man, &cfg);
+        let mut ctx = PipelineCtx::new(eng, cfg)?;
+        let mut policy = make_policy(ctx.cfg.policy);
+        policy.init(&mut ctx)?;
+        Ok(Trainer { ctx, policy, batcher, eval_batches, t0: Instant::now() })
     }
 
-    fn init_policy_state(&mut self) -> Result<()> {
-        let man = &self.eng.man;
-        match self.cfg.policy {
-            PolicyKind::Lsp => {
-                for layer in 0..man.config.n_layer {
-                    let range = self.params.block_range(man, layer);
-                    for (kind, meta) in man.kinds.clone() {
-                        let pidx = range.start + meta.param_index;
-                        let st = ProjState::init(self.eng, &kind, &meta, &mut self.rng)?;
-                        self.projectors.insert(pidx, st);
-                    }
-                }
-            }
-            PolicyKind::Lora => {
-                for layer in 0..man.config.n_layer {
-                    let range = self.params.block_range(man, layer);
-                    for meta in man.kinds.values() {
-                        let pidx = range.start + meta.param_index;
-                        let w0 = self.params.tensors[pidx].clone();
-                        self.lora.insert(
-                            pidx,
-                            LoraState::init(w0, self.cfg.rank, 4.0 * self.cfg.rank as f32, &mut self.rng),
-                        );
-                    }
-                }
-            }
-            PolicyKind::Galore => {
-                for layer in 0..man.config.n_layer {
-                    let range = self.params.block_range(man, layer);
-                    for meta in man.kinds.values() {
-                        let pidx = range.start + meta.param_index;
-                        self.galore.insert(
-                            pidx,
-                            GaloreState::new(self.cfg.rank, self.cfg.galore_update_freq, 0.25),
-                        );
-                    }
-                }
-            }
-            _ => {}
-        }
-        Ok(())
+    /// The policy-independent pipeline state (engine, params, queues, ...).
+    pub fn ctx(&self) -> &PipelineCtx<'e> {
+        &self.ctx
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.ctx.metrics
+    }
+
+    pub fn params(&self) -> &ParamStore {
+        &self.ctx.params
     }
 
     // ---- helpers --------------------------------------------------------
@@ -320,38 +112,46 @@ impl<'e> Trainer<'e> {
     fn upload_batch(&self, b: &Batch) -> Result<(PjRtBuffer, PjRtBuffer)> {
         let shape = [b.batch, b.seq];
         Ok((
-            self.eng.upload_i32(&shape, &b.tokens)?,
-            self.eng.upload_i32(&shape, &b.targets)?,
+            self.ctx.eng.upload_i32(&shape, &b.tokens)?,
+            self.ctx.eng.upload_i32(&shape, &b.targets)?,
         ))
     }
 
+    fn wait_for_params(&mut self, idxs: &[usize]) -> Result<()> {
+        policies::wait_for_params(&mut self.ctx, self.policy.as_mut(), idxs)
+    }
+
     /// Forward through all layers; returns (per-layer input buffers, final h).
-    fn forward(&mut self, tokens: &PjRtBuffer, wait_events: bool) -> Result<(Vec<PjRtBuffer>, PjRtBuffer)> {
-        let man = self.eng.man.clone();
+    fn forward(
+        &mut self,
+        tokens: &PjRtBuffer,
+        wait_events: bool,
+    ) -> Result<(Vec<PjRtBuffer>, PjRtBuffer)> {
+        let eng = self.ctx.eng;
+        let man = eng.man.clone();
         let c = &man.config;
         // Event for the embedding/head params ("layer -1").
         if wait_events {
-            let head_params: Vec<usize> = self.head_param_indices();
+            let head_params = self.ctx.head_param_indices();
             self.wait_for_params(&head_params)?;
         }
-        let ef = self.eng.exec("embed_fwd")?;
-        let wte = self.params.index("wte").unwrap();
-        let wpe = self.params.index("wpe").unwrap();
+        let ef = eng.exec("embed_fwd")?;
+        let wte = self.ctx.params.index("wte").unwrap();
+        let wpe = self.ctx.params.index("wpe").unwrap();
         let mut h = ef
-            .call_b(&[tokens, &self.bufs[wte], &self.bufs[wpe]])?
+            .call_b(&[tokens, &self.ctx.bufs[wte], &self.ctx.bufs[wpe]])?
             .device()?;
         let mut h_inputs = Vec::with_capacity(c.n_layer);
         for layer in 0..c.n_layer {
             if wait_events {
-                let range = self.params.block_range(&man, layer);
-                let idxs: Vec<usize> = range.collect();
+                let idxs: Vec<usize> = self.ctx.params.block_range(&man, layer).collect();
                 self.wait_for_params(&idxs)?;
             }
-            let bf = self.eng.exec("block_fwd")?;
-            let range = self.params.block_range(&man, layer);
+            let bf = eng.exec("block_fwd")?;
+            let range = self.ctx.params.block_range(&man, layer);
             let mut args: Vec<&PjRtBuffer> = vec![&h];
             for i in range {
-                args.push(&self.bufs[i]);
+                args.push(&self.ctx.bufs[i]);
             }
             let h_next = bf.call_b(&args)?.device()?;
             h_inputs.push(h);
@@ -360,196 +160,11 @@ impl<'e> Trainer<'e> {
         Ok((h_inputs, h))
     }
 
-    fn head_param_indices(&self) -> Vec<usize> {
-        ["wte", "wpe", "lnf_g", "lnf_b"]
-            .iter()
-            .filter_map(|n| self.params.index(n))
-            .collect()
-    }
-
-    /// Block until no pending deltas remain for `idxs`; applies every delta
-    /// that arrives meanwhile (also for other params — cheap and keeps the
-    /// queue drained).
-    fn wait_for_params(&mut self, idxs: &[usize]) -> Result<()> {
-        let needs = |pending: &HashSet<ParamKey>, idxs: &[usize]| {
-            idxs.iter().any(|i| pending.iter().any(|k| k.param_index == *i))
-        };
-        if !needs(&self.pending, idxs) {
-            // Opportunistically drain anything already arrived.
-            while let Some(msg) = self.delta_out.try_pop() {
-                self.apply_delta(msg)?;
-            }
-            return Ok(());
-        }
-        let t0 = Instant::now();
-        while needs(&self.pending, idxs) {
-            let Some(msg) = self.delta_out.pop() else {
-                bail!("delta queue closed while waiting");
-            };
-            self.apply_delta(msg)?;
-        }
-        self.metrics.phase("stall_e").push(t0.elapsed().as_secs_f64());
-        Ok(())
-    }
-
-    fn apply_delta(&mut self, msg: DeltaMsg) -> Result<()> {
-        let lr = self.cfg.lr;
-        let idx = msg.key.param_index;
-        if let Some(kind) = &msg.key.kind {
-            // Subspace delta: decompress-apply on the GPU (L1 kernel).
-            let st = self
-                .projectors
-                .get(&idx)
-                .with_context(|| format!("no projector for param {idx}"))?;
-            let meta = &st.meta;
-            let e = self.eng.exec(&format!("apply_{kind}"))?;
-            let ds = self.eng.upload_f32(&[meta.d, meta.d], &msg.delta)?;
-            let lr_buf = self.eng.upload_f32(&[1, 1], &[lr])?;
-            let args: Vec<&PjRtBuffer> = vec![
-                &self.bufs[idx],
-                &st.row_bufs[0],
-                &st.row_bufs[1],
-                &st.row_bufs[2],
-                &st.row_bufs[3],
-                &ds,
-                &lr_buf,
-            ];
-            let new_w = e.call_b(&args)?.device()?;
-            self.bufs[idx] = new_w;
-        } else {
-            // Full-parameter delta: apply on the host mirror and re-upload
-            // (the upload *is* Zero's delta traffic, already metered by the
-            // h2d link the message just crossed).
-            let w = &mut self.params.tensors[idx];
-            if w.len() != msg.delta.len() {
-                bail!("delta size mismatch for param {idx}");
-            }
-            for (wv, dv) in w.data_mut().iter_mut().zip(&msg.delta) {
-                *wv -= lr * dv;
-            }
-            self.bufs[idx] = self.eng.upload(&self.params.tensors[idx])?;
-        }
-        self.pending.remove(&msg.key);
-        Ok(())
-    }
-
-    /// Dispatch one parameter gradient according to the policy.
-    fn dispatch_grad(&mut self, idx: usize, g: Tensor, step: u64, prio: i64) -> Result<()> {
-        match self.cfg.policy {
-            PolicyKind::Native => {
-                let st = self
-                    .native_states
-                    .entry(idx)
-                    .or_insert_with(|| AdamState::new(g.len()));
-                let delta = st.step_vec(g.data());
-                let lr = self.cfg.lr;
-                let w = &mut self.params.tensors[idx];
-                for (wv, dv) in w.data_mut().iter_mut().zip(&delta) {
-                    *wv -= lr * dv;
-                }
-                self.bufs[idx] = self.eng.upload(&self.params.tensors[idx])?;
-            }
-            PolicyKind::Zero => {
-                let key = ParamKey { param_index: idx, kind: None };
-                self.pending.insert(key.clone());
-                self.d2h_in.push(prio, OffloadMsg { key, data: g.into_data(), prio, step });
-            }
-            PolicyKind::Lsp => {
-                if self.projectors.contains_key(&idx) {
-                    self.lsp_dispatch(idx, &g, step, prio)?;
-                } else {
-                    // Small non-matrix params take the full-gradient path.
-                    let key = ParamKey { param_index: idx, kind: None };
-                    self.pending.insert(key.clone());
-                    self.d2h_in.push(prio, OffloadMsg { key, data: g.into_data(), prio, step });
-                }
-            }
-            PolicyKind::Lora => {
-                if let Some(lora) = self.lora.get_mut(&idx) {
-                    let w_eff = lora.step(&g, self.cfg.lr)?;
-                    self.params.tensors[idx] = w_eff;
-                    self.bufs[idx] = self.eng.upload(&self.params.tensors[idx])?;
-                }
-                // All other params frozen (PEFT).
-            }
-            PolicyKind::Galore => {
-                if let Some(gal) = self.galore.get_mut(&idx) {
-                    let mut w = self.params.tensors[idx].clone();
-                    gal.step(&mut w, &g, self.cfg.lr, &mut self.rng)?;
-                    self.params.tensors[idx] = w;
-                    self.bufs[idx] = self.eng.upload(&self.params.tensors[idx])?;
-                } else {
-                    // GaLore trains non-matrix params natively.
-                    let st = self
-                        .native_states
-                        .entry(idx)
-                        .or_insert_with(|| AdamState::new(g.len()));
-                    let delta = st.step_vec(g.data());
-                    let lr = self.cfg.lr;
-                    let w = &mut self.params.tensors[idx];
-                    for (wv, dv) in w.data_mut().iter_mut().zip(&delta) {
-                        *wv -= lr * dv;
-                    }
-                    self.bufs[idx] = self.eng.upload(&self.params.tensors[idx])?;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// LSP path for a projected matrix: maybe-update projector, compress on
-    /// the GPU, ship the d x d gradient.
-    fn lsp_dispatch(&mut self, idx: usize, g: &Tensor, step: u64, prio: i64) -> Result<()> {
-        let check = self.cfg.check_freq > 0 && step % self.cfg.check_freq == 0;
-        if check {
-            let t0 = Instant::now();
-            let key = ParamKey {
-                param_index: idx,
-                kind: Some(self.projectors[&idx].kind.clone()),
-            };
-            let states = self
-                .updater
-                .as_ref()
-                .expect("LSP policy requires the updater")
-                .states
-                .clone();
-            let st = self.projectors.get_mut(&idx).unwrap();
-            st.maybe_update(
-                self.eng,
-                g,
-                self.cfg.alpha,
-                self.cfg.learn_budget,
-                self.cfg.learn_lr,
-                &states,
-                &key,
-            )?;
-            self.metrics.phase("proj_check").push(t0.elapsed().as_secs_f64());
-        }
-        let st = &self.projectors[&idx];
-        let t0 = Instant::now();
-        let e = self.eng.exec(&format!("compress_{}", st.kind))?;
-        let g_buf = self.eng.upload(g)?;
-        let args: Vec<&PjRtBuffer> = vec![
-            &g_buf,
-            &st.gather_bufs[0],
-            &st.gather_bufs[1],
-            &st.gather_bufs[2],
-            &st.gather_bufs[3],
-        ];
-        let s_buf = e.call_b(&args)?.device()?;
-        let s_host = self.eng.download_vec(&s_buf)?;
-        self.metrics.phase("compress").push(t0.elapsed().as_secs_f64());
-        let key = ParamKey { param_index: idx, kind: Some(st.kind.clone()) };
-        self.pending.insert(key.clone());
-        self.d2h_in.push(prio, OffloadMsg { key, data: s_host, prio, step });
-        Ok(())
-    }
-
     /// Backward priority for layer `l` of `n`: FCFS by arrival depth, then
     /// LCFS past the transition layer (Alg. 3 + appendix heuristic).
     fn prio_for_layer(&self, l: usize, n: usize) -> i64 {
         let depth = (n - 1 - l) as i64;
-        if !self.cfg.lcfs {
+        if !self.ctx.cfg.lcfs {
             return depth;
         }
         let transition = self.transition_layer(n);
@@ -563,13 +178,9 @@ impl<'e> Trainer<'e> {
     /// TransitionLayer = (T_bwd - tail) / max(per-layer stage) using
     /// measured phase means when available (paper appendix formula).
     fn transition_layer(&self, n: usize) -> usize {
-        let bwd = self.metrics.phases.get("bwd").map(|s| s.mean()).unwrap_or(0.0);
-        let comm = self
-            .metrics
-            .phases
-            .get("compress")
-            .map(|s| s.mean())
-            .unwrap_or(0.0);
+        let phases = &self.ctx.metrics.phases;
+        let bwd = phases.get("bwd").map(|s| s.mean()).unwrap_or(0.0);
+        let comm = phases.get("compress").map(|s| s.mean()).unwrap_or(0.0);
         if bwd <= 0.0 || comm <= 0.0 {
             return n / 2;
         }
@@ -583,13 +194,14 @@ impl<'e> Trainer<'e> {
 
     pub fn train(&mut self) -> Result<TrainReport> {
         self.t0 = Instant::now();
-        let man = self.eng.man.clone();
+        let eng = self.ctx.eng;
+        let man = eng.man.clone();
         let c = man.config.clone();
         let n_layer = c.n_layer;
         let mut steps_done = 0u64;
-        for step in 0..self.cfg.steps {
-            if self.cfg.max_wall_secs > 0.0
-                && self.t0.elapsed().as_secs_f64() >= self.cfg.max_wall_secs
+        for step in 0..self.ctx.cfg.steps {
+            if self.ctx.cfg.max_wall_secs > 0.0
+                && self.t0.elapsed().as_secs_f64() >= self.ctx.cfg.max_wall_secs
             {
                 break;
             }
@@ -597,20 +209,26 @@ impl<'e> Trainer<'e> {
             let batch = self.batcher.next_batch();
             let (tok_buf, tgt_buf) = self.upload_batch(&batch)?;
 
-            // FWD (with per-layer events under LSP).
+            // FWD (with per-layer events under offloading policies).
             let t_f = Instant::now();
-            let wait = self.cfg.policy.offloads();
+            let wait = self.ctx.cfg.policy.offloads();
             let (h_inputs, h) = self.forward(&tok_buf, wait)?;
-            self.metrics.phase("fwd").push(t_f.elapsed().as_secs_f64());
+            self.ctx.metrics.phase("fwd").push(t_f.elapsed().as_secs_f64());
 
             // HEAD: loss + d_h + head grads.
             let t_h = Instant::now();
-            let hb = self.eng.exec("head_loss_bwd")?;
-            let wte = self.params.index("wte").unwrap();
-            let lnf_g = self.params.index("lnf_g").unwrap();
-            let lnf_b = self.params.index("lnf_b").unwrap();
+            let hb = eng.exec("head_loss_bwd")?;
+            let wte = self.ctx.params.index("wte").unwrap();
+            let lnf_g = self.ctx.params.index("lnf_g").unwrap();
+            let lnf_b = self.ctx.params.index("lnf_b").unwrap();
             let outs = hb
-                .call_b(&[&h, &self.bufs[lnf_g], &self.bufs[lnf_b], &self.bufs[wte], &tgt_buf])?
+                .call_b(&[
+                    &h,
+                    &self.ctx.bufs[lnf_g],
+                    &self.ctx.bufs[lnf_b],
+                    &self.ctx.bufs[wte],
+                    &tgt_buf,
+                ])?
                 .host()?;
             let loss = outs[0].to_vec::<f32>()?[0];
             let hshape = [c.batch, c.seq, c.d_model];
@@ -618,46 +236,47 @@ impl<'e> Trainer<'e> {
             let d_lnf_g: Vec<f32> = outs[2].to_vec()?;
             let d_lnf_b: Vec<f32> = outs[3].to_vec()?;
             let d_wte_head: Vec<f32> = outs[4].to_vec()?;
-            self.metrics.phase("head").push(t_h.elapsed().as_secs_f64());
+            self.ctx.metrics.phase("head").push(t_h.elapsed().as_secs_f64());
 
             // BWD layer by layer (reverse), dispatching grads as they appear.
-            let bb = self.eng.exec("block_bwd")?;
+            let bb = eng.exec("block_bwd")?;
             for layer in (0..n_layer).rev() {
                 let t_b = Instant::now();
-                let range = self.params.block_range(&man, layer);
-                let d_h_buf = self.eng.upload_f32(&hshape, &d_h)?;
+                let range = self.ctx.params.block_range(&man, layer);
+                let d_h_buf = eng.upload_f32(&hshape, &d_h)?;
                 let mut args: Vec<&PjRtBuffer> = vec![&h_inputs[layer]];
                 for i in range.clone() {
-                    args.push(&self.bufs[i]);
+                    args.push(&self.ctx.bufs[i]);
                 }
                 args.push(&d_h_buf);
                 let outs = bb.call_b(&args)?.host()?;
                 d_h = outs[0].to_vec()?;
-                self.metrics.phase("bwd").push(t_b.elapsed().as_secs_f64());
+                self.ctx.metrics.phase("bwd").push(t_b.elapsed().as_secs_f64());
 
                 let prio = self.prio_for_layer(layer, n_layer);
                 for (pi, i) in range.enumerate() {
                     let spec = &man.block_params[pi];
                     let g = Tensor::new(&spec.1, outs[1 + pi].to_vec()?)?;
-                    self.dispatch_grad(i, g, step, prio)?;
+                    self.policy.dispatch_grad(&mut self.ctx, i, g, step, prio)?;
                 }
             }
 
             // EMBED BWD.
             let t_e = Instant::now();
-            let eb = self.eng.exec("embed_bwd")?;
-            let d_h_buf = self.eng.upload_f32(&hshape, &d_h)?;
+            let eb = eng.exec("embed_bwd")?;
+            let d_h_buf = eng.upload_f32(&hshape, &d_h)?;
             let outs = eb.call_b(&[&tok_buf, &d_h_buf])?.host()?;
             let mut d_wte: Vec<f32> = outs[0].to_vec()?;
             let d_wpe: Vec<f32> = outs[1].to_vec()?;
             for (a, b) in d_wte.iter_mut().zip(&d_wte_head) {
                 *a += b;
             }
-            self.metrics.phase("embed_bwd").push(t_e.elapsed().as_secs_f64());
+            self.ctx.metrics.phase("embed_bwd").push(t_e.elapsed().as_secs_f64());
 
             // Head/embedding params ship with the shallowest priority.
+            // (Policies that freeze them — LoRA — simply ignore the grads.)
             let prio = self.prio_for_layer(0, n_layer) - 1;
-            let wpe_i = self.params.index("wpe").unwrap();
+            let wpe_i = self.ctx.params.index("wpe").unwrap();
             let grads = [
                 (wte, Tensor::new(&[c.vocab, c.d_model], d_wte)?),
                 (wpe_i, Tensor::new(&[c.seq, c.d_model], d_wpe)?),
@@ -665,42 +284,33 @@ impl<'e> Trainer<'e> {
                 (lnf_b, Tensor::new(&[c.d_model], d_lnf_b)?),
             ];
             for (i, g) in grads {
-                // LoRA freezes everything but its adapters.
-                if self.cfg.policy == PolicyKind::Lora {
-                    continue;
-                }
-                self.dispatch_grad(i, g, step, prio)?;
+                self.policy.dispatch_grad(&mut self.ctx, i, g, step, prio)?;
             }
 
-            // Zero-Offload barriers here; LSP lets deltas drain into the
-            // next iteration's per-layer events.
-            if self.cfg.policy == PolicyKind::Zero {
-                let t_s = Instant::now();
-                let all: Vec<usize> = (0..self.params.len()).collect();
-                self.wait_for_params(&all)?;
-                self.metrics.phase("barrier").push(t_s.elapsed().as_secs_f64());
-            }
+            // Step boundary: Zero-Offload barriers; LSP lets deltas drain
+            // into the next iteration's per-layer events.
+            self.policy.end_of_step(&mut self.ctx, step)?;
 
             let wall = self.t0.elapsed().as_secs_f64();
-            self.metrics.record_loss(step, loss, wall);
-            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+            self.ctx.metrics.record_loss(step, loss, wall);
+            if self.ctx.cfg.log_every > 0 && step % self.ctx.cfg.log_every == 0 {
                 println!(
                     "[{}] step {:>5} loss {:.4} wall {:>8}",
-                    self.cfg.policy.name(),
+                    self.ctx.cfg.policy.name(),
                     step,
                     loss,
                     crate::util::human_secs(wall)
                 );
             }
-            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+            if self.ctx.cfg.eval_every > 0 && (step + 1) % self.ctx.cfg.eval_every == 0 {
                 let el = self.eval_loss()?;
-                self.metrics.eval_loss.push((step, el));
+                self.ctx.metrics.eval_loss.push((step, el));
             }
         }
 
         // Final drain so reported state is consistent.
-        if self.cfg.policy.offloads() {
-            let all: Vec<usize> = (0..self.params.len()).collect();
+        if self.ctx.cfg.policy.offloads() {
+            let all = self.ctx.all_param_indices();
             self.wait_for_params(&all)?;
         }
         self.report(steps_done)
@@ -708,31 +318,35 @@ impl<'e> Trainer<'e> {
 
     /// Mean eval loss over the held-out batches (forward only).
     pub fn eval_loss(&mut self) -> Result<f32> {
-        let man = self.eng.man.clone();
-        let c = &man.config;
-        let hf = self.eng.exec("head_loss_fwd")?;
-        let wte = self.params.index("wte").unwrap();
-        let lnf_g = self.params.index("lnf_g").unwrap();
-        let lnf_b = self.params.index("lnf_b").unwrap();
+        let eng = self.ctx.eng;
+        let hf = eng.exec("head_loss_fwd")?;
+        let wte = self.ctx.params.index("wte").unwrap();
+        let lnf_g = self.ctx.params.index("lnf_g").unwrap();
+        let lnf_b = self.ctx.params.index("lnf_b").unwrap();
         let mut total = 0f32;
         let batches = self.eval_batches.clone();
         for b in &batches {
             let (tok, tgt) = self.upload_batch(b)?;
             let (_, h) = self.forward(&tok, false)?;
             let out = hf
-                .call_b(&[&h, &self.bufs[lnf_g], &self.bufs[lnf_b], &self.bufs[wte], &tgt])?
+                .call_b(&[
+                    &h,
+                    &self.ctx.bufs[lnf_g],
+                    &self.ctx.bufs[lnf_b],
+                    &self.ctx.bufs[wte],
+                    &tgt,
+                ])?
                 .device()?;
-            total += self.eng.download_vec(&out)?[0];
+            total += eng.download_vec(&out)?[0];
         }
-        let _ = c;
         Ok(total / batches.len() as f32)
     }
 
     fn report(&mut self, steps_done: u64) -> Result<TrainReport> {
         let wall = self.t0.elapsed().as_secs_f64();
-        let tokens =
-            steps_done as f64 * (self.eng.man.config.batch * self.eng.man.config.seq) as f64;
-        let (d2h_bytes, h2d_bytes, link_busy) = match &self.links {
+        let c = &self.ctx.eng.man.config;
+        let tokens = steps_done as f64 * (c.batch * c.seq) as f64;
+        let (d2h_bytes, h2d_bytes, link_busy) = match &self.ctx.links {
             Some((d2h, h2d)) => (
                 d2h.bytes_moved.load(std::sync::atomic::Ordering::Relaxed),
                 h2d.bytes_moved.load(std::sync::atomic::Ordering::Relaxed),
@@ -740,71 +354,28 @@ impl<'e> Trainer<'e> {
             ),
             None => (0, 0, (0.0, 0.0)),
         };
-        Ok(TrainReport {
-            policy: self.cfg.policy.name(),
+        let metrics = &self.ctx.metrics;
+        let mut report = TrainReport {
+            policy: self.ctx.cfg.policy.name(),
             steps: steps_done,
             wall_secs: wall,
-            final_train_loss: self.metrics.rolling_loss(10).unwrap_or(f32::NAN),
-            final_eval_loss: self.metrics.eval_loss.last().map(|&(_, l)| l),
+            final_train_loss: metrics.rolling_loss(10).unwrap_or(f32::NAN),
+            final_eval_loss: metrics.eval_loss.last().map(|&(_, l)| l),
             tokens_per_s: tokens / wall,
             d2h_bytes,
             h2d_bytes,
-            stall_secs: self
-                .metrics
-                .phases
-                .get("stall_e")
-                .map(|s| s.total())
-                .unwrap_or(0.0)
-                + self.metrics.phases.get("barrier").map(|s| s.total()).unwrap_or(0.0),
-            cpu_busy_secs: self.updater.as_ref().map(|u| u.busy_secs()).unwrap_or(0.0),
+            stall_secs: metrics.phases.get("stall_e").map(|s| s.total()).unwrap_or(0.0)
+                + metrics.phases.get("barrier").map(|s| s.total()).unwrap_or(0.0),
+            cpu_busy_secs: self.ctx.updater.as_ref().map(|u| u.busy_secs()).unwrap_or(0.0),
             link_busy_secs: link_busy,
-            projector_refreshes: self.projectors.values().map(|p| p.tau).sum(),
-            loss_curve: self.metrics.loss.clone(),
-            eval_curve: self.metrics.eval_loss.clone(),
-            wall_curve: self.metrics.wall.clone(),
-        })
+            projector_refreshes: 0,
+            pool_hit_rate: self.ctx.pool.stats().hit_rate(),
+            loss_curve: metrics.loss.clone(),
+            eval_curve: metrics.eval_loss.clone(),
+            wall_curve: metrics.wall.clone(),
+        };
+        self.policy.report_extras(&mut report);
+        Ok(report)
     }
 }
 
-impl Drop for Trainer<'_> {
-    fn drop(&mut self) {
-        // Close every queue first so each pipeline thread's blocking pop
-        // returns None and the thread exits; only then join.
-        self.d2h_in.close();
-        self.d2h_out.close();
-        self.h2d_in.close();
-        self.delta_out.close();
-        if let Some((mut a, mut b)) = self.links.take() {
-            a.stop();
-            b.stop();
-        }
-        if let Some(mut u) = self.updater.take() {
-            u.join();
-        }
-    }
-}
-
-impl TrainReport {
-    pub fn print(&self) {
-        println!("==== train report: {} ====", self.policy);
-        println!("steps {}  wall {}  tokens/s {:.1}",
-                 self.steps, crate::util::human_secs(self.wall_secs), self.tokens_per_s);
-        println!(
-            "final train loss {:.4}  eval loss {}",
-            self.final_train_loss,
-            self.final_eval_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into())
-        );
-        println!(
-            "offload traffic: d2h {} h2d {}  link busy {:.2}s/{:.2}s  cpu busy {:.2}s  stall {:.2}s",
-            crate::util::human_bytes(self.d2h_bytes),
-            crate::util::human_bytes(self.h2d_bytes),
-            self.link_busy_secs.0,
-            self.link_busy_secs.1,
-            self.cpu_busy_secs,
-            self.stall_secs,
-        );
-        if self.projector_refreshes > 0 {
-            println!("projector refreshes (sum tau): {}", self.projector_refreshes);
-        }
-    }
-}

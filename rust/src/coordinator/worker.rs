@@ -3,9 +3,15 @@
 //! One thread owning all CPU-resident Adam state (the 42 GB that does not
 //! fit on the paper's GPUs).  Pops gradients off the D2H egress queue in
 //! priority order, runs the fused Adam (rust-native — the analogue of
-//! Zero-Offload's fused SIMD CPU Adam), and pushes the unscaled delta into
+//! Zero-Offload's fused SIMD CPU Adam, fanned across the kernel pool for
+//! large payloads via `fused_step_with`), and pushes the unscaled delta into
 //! the H2D ingress queue.  An optional `compute_scale` sleep emulates a
 //! slower CPU than the host machine (for schedule studies).
+//!
+//! Payload buffers are pooled: the delta is taken from the shared `BufPool`,
+//! and the consumed gradient handle drops back into it, so in steady state
+//! (`pooled_payloads_recycle_without_new_allocations`) the updater performs
+//! zero payload allocations per message.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -13,6 +19,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::comm::{DeltaMsg, OffloadMsg, ParamKey, PrioQueue};
 use crate::optim::AdamState;
+use crate::tensor::kernel::KernelConfig;
+use crate::util::bufpool::BufPool;
 
 /// Adam states shared with the projector manager (which must re-project the
 /// subspace moments on a subspace switch — Alg. 1 lines 8-9).
@@ -30,6 +38,8 @@ impl CpuUpdater {
         ingress: Arc<PrioQueue<OffloadMsg>>,
         egress: Arc<PrioQueue<DeltaMsg>>,
         compute_scale: f64,
+        pool: BufPool,
+        kernel: KernelConfig,
     ) -> CpuUpdater {
         let states: SharedStates = Arc::new(Mutex::new(HashMap::new()));
         let busy_ns = Arc::new(AtomicU64::new(0));
@@ -40,15 +50,19 @@ impl CpuUpdater {
             .spawn(move || {
                 while let Some(msg) = ingress.pop() {
                     let t0 = std::time::Instant::now();
-                    let mut delta = vec![0f32; msg.data.len()];
+                    let OffloadMsg { key, data, prio, step } = msg;
+                    let mut delta = pool.take_raw(data.len());
                     {
                         let mut states = st.lock().unwrap();
                         let state = states
-                            .entry(msg.key.clone())
-                            .or_insert_with(|| AdamState::new(msg.data.len()));
-                        debug_assert_eq!(state.m.len(), msg.data.len());
-                        state.fused_step(&msg.data, &mut delta);
+                            .entry(key.clone())
+                            .or_insert_with(|| AdamState::new(data.len()));
+                        debug_assert_eq!(state.m.len(), data.len());
+                        state.fused_step_with(&data, &mut delta, &kernel);
                     }
+                    // Return the gradient buffer to the pool before the
+                    // next pop so it can serve as that message's delta.
+                    drop(data);
                     let elapsed = t0.elapsed();
                     if compute_scale > 1.0 {
                         std::thread::sleep(elapsed.mul_f64(compute_scale - 1.0));
@@ -58,10 +72,7 @@ impl CpuUpdater {
                         Ordering::Relaxed,
                     );
                     ud.fetch_add(1, Ordering::Relaxed);
-                    egress.push(
-                        msg.prio,
-                        DeltaMsg { key: msg.key, delta, prio: msg.prio, step: msg.step },
-                    );
+                    egress.push(prio, DeltaMsg { key, delta, prio, step });
                 }
             })
             .expect("spawn cpu-updater");
@@ -83,14 +94,24 @@ impl CpuUpdater {
 mod tests {
     use super::*;
 
+    fn spawn_plain(
+        ingress: Arc<PrioQueue<OffloadMsg>>,
+        egress: Arc<PrioQueue<DeltaMsg>>,
+    ) -> CpuUpdater {
+        CpuUpdater::spawn(ingress, egress, 1.0, BufPool::new(), KernelConfig::single_threaded())
+    }
+
     #[test]
     fn updater_runs_adam_and_forwards() {
         let ingress = Arc::new(PrioQueue::new());
         let egress = Arc::new(PrioQueue::new());
-        let mut upd = CpuUpdater::spawn(ingress.clone(), egress.clone(), 1.0);
+        let mut upd = spawn_plain(ingress.clone(), egress.clone());
 
         let key = ParamKey { param_index: 3, kind: None };
-        ingress.push(0, OffloadMsg { key: key.clone(), data: vec![0.5, -0.5], prio: 0, step: 1 });
+        ingress.push(
+            0,
+            OffloadMsg { key: key.clone(), data: vec![0.5, -0.5].into(), prio: 0, step: 1 },
+        );
         let d1 = egress.pop().unwrap();
         assert_eq!(d1.key, key);
         // First Adam step = sign(g).
@@ -98,7 +119,10 @@ mod tests {
         assert!((d1.delta[1] + 1.0).abs() < 1e-4);
 
         // Second step reuses the same state (step count advances).
-        ingress.push(0, OffloadMsg { key: key.clone(), data: vec![0.5, -0.5], prio: 0, step: 2 });
+        ingress.push(
+            0,
+            OffloadMsg { key: key.clone(), data: vec![0.5, -0.5].into(), prio: 0, step: 2 },
+        );
         let d2 = egress.pop().unwrap();
         assert!(d2.delta[0] > 0.9, "second step keeps direction");
         assert_eq!(upd.updates_done.load(Ordering::Relaxed), 2);
@@ -112,11 +136,14 @@ mod tests {
     fn distinct_keys_have_distinct_state() {
         let ingress = Arc::new(PrioQueue::new());
         let egress = Arc::new(PrioQueue::new());
-        let mut upd = CpuUpdater::spawn(ingress.clone(), egress.clone(), 1.0);
+        let mut upd = spawn_plain(ingress.clone(), egress.clone());
         let k1 = ParamKey { param_index: 0, kind: None };
         let k2 = ParamKey { param_index: 0, kind: Some("qkv".into()) };
-        ingress.push(0, OffloadMsg { key: k1.clone(), data: vec![1.0], prio: 0, step: 1 });
-        ingress.push(0, OffloadMsg { key: k2.clone(), data: vec![1.0, 2.0], prio: 0, step: 1 });
+        ingress.push(0, OffloadMsg { key: k1.clone(), data: vec![1.0].into(), prio: 0, step: 1 });
+        ingress.push(
+            0,
+            OffloadMsg { key: k2.clone(), data: vec![1.0, 2.0].into(), prio: 0, step: 1 },
+        );
         let _ = egress.pop().unwrap();
         let _ = egress.pop().unwrap();
         let states = upd.states.lock().unwrap();
@@ -124,6 +151,49 @@ mod tests {
         assert_eq!(states[&k1].m.len(), 1);
         assert_eq!(states[&k2].m.len(), 2);
         drop(states);
+        ingress.close();
+        upd.join();
+    }
+
+    /// The steady-state recycling property the bufpool exists for: after
+    /// one warmup round-trip, every pool take (gradient here, delta in the
+    /// updater) is served from the shelf — misses stay flat while hits
+    /// grow, and the shelf never exceeds the working set.  (In the real
+    /// trainer the driver-side gradient is *adopted* from the PJRT download
+    /// rather than taken, so this pins the updater/delta side plus the
+    /// recycling loop itself; see `util::bufpool` docs.)
+    #[test]
+    fn pooled_payloads_recycle_without_new_allocations() {
+        let pool = BufPool::new();
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::new());
+        let mut upd = CpuUpdater::spawn(
+            ingress.clone(),
+            egress.clone(),
+            1.0,
+            pool.clone(),
+            KernelConfig::single_threaded(),
+        );
+        let key = ParamKey { param_index: 0, kind: None };
+        let rounds = 16u64;
+        let len = 1024usize;
+        for step in 0..rounds {
+            // Driver side: the gradient payload comes from the pool too
+            // (mirrors the trainer adopting/reusing download buffers).
+            let mut g = pool.take_raw(len);
+            g.fill(0.25);
+            ingress.push(0, OffloadMsg { key: key.clone(), data: g, prio: 0, step });
+            let d = egress.pop().unwrap();
+            assert_eq!(d.delta.len(), len);
+            drop(d); // delta handle returns to the pool (the "apply" site)
+        }
+        let s = pool.stats();
+        // Warmup allocates exactly two buffers (one gradient, one delta);
+        // every later take is a hit.
+        assert_eq!(s.misses, 2, "steady state must not allocate: {s:?}");
+        assert_eq!(s.hits, 2 * rounds - 2, "{s:?}");
+        assert!(s.hit_rate() > 0.9, "{s:?}");
+        assert!(s.shelved <= 2, "working set must stay bounded: {s:?}");
         ingress.close();
         upd.join();
     }

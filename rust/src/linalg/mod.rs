@@ -10,7 +10,8 @@
 
 use anyhow::Result;
 
-use crate::tensor::ops::{dot, matmul, matmul_nt, matmul_tn, transpose};
+use crate::tensor::kernel::{self, KernelConfig};
+use crate::tensor::ops::{dot, matmul_nt_with, matmul_tn_with, matmul_with, transpose};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -71,23 +72,37 @@ pub struct Svd {
 }
 
 /// Randomized subspace-iteration SVD (Halko et al.) — how GaLore computes
-/// its rank-k projector `P = [u_1..u_k]` from a gradient matrix.
+/// its rank-k projector `P = [u_1..u_k]` from a gradient matrix.  Uses the
+/// process-wide `KernelConfig`.
 pub fn randomized_svd(a: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> Result<Svd> {
+    randomized_svd_with(a, k, iters, rng, &kernel::current())
+}
+
+/// `randomized_svd` under an explicit per-instance `KernelConfig` (the
+/// coordinator threads its negotiated config through here via the GaLore
+/// baseline instead of relying on a process-wide install).
+pub fn randomized_svd_with(
+    a: &Tensor,
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+    cfg: &KernelConfig,
+) -> Result<Svd> {
     let (m, n) = (a.rows(), a.cols());
     let k = k.min(m).min(n);
     let over = (k + 4).min(n.min(m)); // small oversampling
     let omega = Tensor::randn(&[n, over], 1.0, rng);
-    let mut y = matmul(a, &omega)?; // [m, over]
+    let mut y = matmul_with(a, &omega, cfg)?; // [m, over]
     for _ in 0..iters {
         let (qy, _) = qr(&y);
-        let z = matmul_tn(a, &qy)?; // [n, over] = A^T Q
+        let z = matmul_tn_with(a, &qy, cfg)?; // [n, over] = A^T Q
         let (qz, _) = qr(&z);
-        y = matmul(a, &qz)?;
+        y = matmul_with(a, &qz, cfg)?;
     }
     let (q, _) = qr(&y); // [m, over]
-    let b = matmul_tn(&q, a)?; // [over, n]
+    let b = matmul_tn_with(&q, a, cfg)?; // [over, n]
     // SVD of the small matrix B via eigen-decomposition of B B^T (Jacobi).
-    let bbt = matmul_nt(&b, &b)?; // [over, over]
+    let bbt = matmul_nt_with(&b, &b, cfg)?; // [over, over]
     let (evals, evecs) = sym_eig_jacobi(&bbt, 100);
     // Sort descending and gather the selected eigenvectors as columns, so
     // the U/V reconstruction is two blocked GEMMs instead of scalar loops.
@@ -103,8 +118,8 @@ pub fn randomized_svd(a: &Tensor, k: usize, iters: usize, rng: &mut Rng) -> Resu
     }
     // U = Q sel;  V = B^T sel with columns rescaled by 1/sigma (zeroed for
     // numerically-vanishing singular values, matching the scalar original).
-    let u = matmul(&q, &sel)?; // [m, k]
-    let mut v = matmul_tn(&b, &sel)?; // [n, k]
+    let u = matmul_with(&q, &sel, cfg)?; // [m, k]
+    let mut v = matmul_tn_with(&b, &sel, cfg)?; // [n, k]
     for (col, &sigma) in s.iter().enumerate() {
         let scale = if sigma > 1e-12 { 1.0 / sigma } else { 0.0 };
         for i in 0..n {
@@ -187,7 +202,7 @@ pub fn effective_rank(a: &Tensor, probe: usize, rng: &mut Rng) -> Result<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::ops::matmul;
+    use crate::tensor::ops::{matmul, matmul_tn};
     use crate::util::prop::check;
 
     #[test]

@@ -126,9 +126,9 @@ fn cmd_train(args: &CliArgs) -> Result<()> {
     let mut tr = Trainer::new(&eng, cfg)?;
     let report = tr.train()?;
     report.print();
-    tr.metrics.print_phase_breakdown();
+    tr.metrics().print_phase_breakdown();
     if let Some(csv) = args.get("csv") {
-        tr.metrics.write_csv(std::path::Path::new(csv))?;
+        tr.metrics().write_csv(std::path::Path::new(csv))?;
         println!("wrote loss curve to {csv}");
     }
     Ok(())

@@ -10,11 +10,40 @@
 //! `rust/tests/runtime_e2e.rs` (skips without artifacts); the host-only
 //! textbook cross-check lives in `rust/tests/integration.rs`.
 
-use crate::tensor::Tensor;
+use crate::tensor::kernel::KernelConfig;
+use crate::tensor::{pool, Tensor};
 
 pub const ADAM_BETA1: f32 = 0.9;
 pub const ADAM_BETA2: f32 = 0.999;
 pub const ADAM_EPS: f32 = 1e-8;
+
+/// Payload length above which `fused_step_with` fans the element-wise loop
+/// out across scoped worker threads; below it the spawn overhead dominates
+/// the ~6 flops/element body.
+pub const PAR_ADAM_MIN_LEN: usize = 1 << 16;
+
+/// The fused-Adam loop body over one contiguous span.  Both the
+/// single-threaded oracle (`fused_step`) and the parallel path
+/// (`fused_step_with`) run exactly this function, and the math is purely
+/// element-wise, so splitting the span across workers is bit-identical to
+/// the oracle by construction (pinned by `parallel_fused_step_bit_identical`).
+#[inline]
+fn adam_span(m: &mut [f32], v: &mut [f32], g: &[f32], delta: &mut [f32], bc1: f32, bc2_sqrt: f32) {
+    let om_b1 = 1.0 - ADAM_BETA1;
+    let om_b2 = 1.0 - ADAM_BETA2;
+    for ((mi, vi), (gi, di)) in m
+        .iter_mut()
+        .zip(v.iter_mut())
+        .zip(g.iter().zip(delta.iter_mut()))
+    {
+        let gval = *gi;
+        let mval = ADAM_BETA1 * *mi + om_b1 * gval;
+        let vval = ADAM_BETA2 * *vi + om_b2 * gval * gval;
+        *mi = mval;
+        *vi = vval;
+        *di = (mval * bc1) / (vval.sqrt() * bc2_sqrt + ADAM_EPS);
+    }
+}
 
 /// Adam moment state for one parameter tensor.
 #[derive(Debug, Clone)]
@@ -34,7 +63,8 @@ impl AdamState {
     }
 
     /// Fused step: update moments in place, write the unscaled delta.
-    /// `delta` must be the same length as the gradient.
+    /// `delta` must be the same length as the gradient.  Single-threaded —
+    /// the oracle the parallel `fused_step_with` must match bit-for-bit.
     pub fn fused_step(&mut self, g: &[f32], delta: &mut [f32]) {
         assert_eq!(g.len(), self.m.len());
         assert_eq!(g.len(), delta.len());
@@ -46,21 +76,55 @@ impl AdamState {
         // lowers to a libm call and is ~10x slower — see §Perf log.)
         let bc1 = 1.0 / (1.0 - ADAM_BETA1.powf(t));
         let bc2_sqrt = (1.0 / (1.0 - ADAM_BETA2.powf(t))).sqrt();
-        let om_b1 = 1.0 - ADAM_BETA1;
-        let om_b2 = 1.0 - ADAM_BETA2;
-        for ((mi, vi), (gi, di)) in self
-            .m
-            .iter_mut()
-            .zip(self.v.iter_mut())
-            .zip(g.iter().zip(delta.iter_mut()))
-        {
-            let gval = *gi;
-            let m = ADAM_BETA1 * *mi + om_b1 * gval;
-            let v = ADAM_BETA2 * *vi + om_b2 * gval * gval;
-            *mi = m;
-            *vi = v;
-            *di = (m * bc1) / (v.sqrt() * bc2_sqrt + ADAM_EPS);
+        adam_span(&mut self.m, &mut self.v, g, delta, bc1, bc2_sqrt);
+    }
+
+    /// Fused step, parallel across the kernel pool width for payloads of at
+    /// least `PAR_ADAM_MIN_LEN` elements.  The element-wise body is shared
+    /// with `fused_step` (no reductions, no order dependence), so results
+    /// are bit-identical to the single-threaded oracle at every width.
+    pub fn fused_step_with(&mut self, g: &[f32], delta: &mut [f32], cfg: &KernelConfig) {
+        let threads = cfg.resolved_threads();
+        if threads <= 1 || g.len() < PAR_ADAM_MIN_LEN {
+            self.fused_step(g, delta);
+            return;
         }
+        assert_eq!(g.len(), self.m.len());
+        assert_eq!(g.len(), delta.len());
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 / (1.0 - ADAM_BETA1.powf(t));
+        let bc2_sqrt = (1.0 / (1.0 - ADAM_BETA2.powf(t))).sqrt();
+        let n = g.len();
+        let workers = threads.min(n);
+        // Ranges come from the pool's single split policy
+        // (`pool::split_ranges`); this site only carves the FOUR parallel
+        // slices (m, v, g, delta) along them, where the pool carves one
+        // output buffer.
+        std::thread::scope(|scope| {
+            let mut ms: &mut [f32] = &mut self.m;
+            let mut vs: &mut [f32] = &mut self.v;
+            let mut gs: &[f32] = g;
+            let mut ds: &mut [f32] = delta;
+            let mut ranges = pool::split_ranges(workers, n).peekable();
+            while let Some(range) = ranges.next() {
+                let take = range.len();
+                let (m0, m1) = std::mem::take(&mut ms).split_at_mut(take);
+                ms = m1;
+                let (v0, v1) = std::mem::take(&mut vs).split_at_mut(take);
+                vs = v1;
+                let (g0, g1) = gs.split_at(take);
+                gs = g1;
+                let (d0, d1) = std::mem::take(&mut ds).split_at_mut(take);
+                ds = d1;
+                if ranges.peek().is_none() {
+                    // The caller participates instead of idling in the join.
+                    adam_span(m0, v0, g0, d0, bc1, bc2_sqrt);
+                } else {
+                    scope.spawn(move || adam_span(m0, v0, g0, d0, bc1, bc2_sqrt));
+                }
+            }
+        });
     }
 
     /// Convenience: allocate the delta.
@@ -166,6 +230,48 @@ mod tests {
         assert!((d[0] - 1.0).abs() < 1e-4);
         assert!((d[1] + 1.0).abs() < 1e-4);
         assert_eq!(d[2], 0.0);
+    }
+
+    #[test]
+    fn parallel_fused_step_bit_identical() {
+        // Above the threshold, every worker count must reproduce the
+        // single-threaded oracle exactly: deltas, moments and step counter.
+        use crate::util::rng::Rng;
+        let n = PAR_ADAM_MIN_LEN + 1031; // odd tail exercises uneven splits
+        let mut rng = Rng::new(42);
+        let grads: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(n, 1.0)).collect();
+        let mut oracle = AdamState::new(n);
+        let mut oracle_deltas = Vec::new();
+        for g in &grads {
+            oracle_deltas.push(oracle.step_vec(g));
+        }
+        for threads in [2usize, 3, 5] {
+            let cfg = KernelConfig::with_threads(threads);
+            let mut st = AdamState::new(n);
+            for (g, want) in grads.iter().zip(&oracle_deltas) {
+                let mut d = vec![0f32; n];
+                st.fused_step_with(g, &mut d, &cfg);
+                assert_eq!(&d, want, "threads={threads}");
+            }
+            assert_eq!(st.step, oracle.step);
+            assert_eq!(st.m, oracle.m, "threads={threads}");
+            assert_eq!(st.v, oracle.v, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn small_payloads_take_the_single_threaded_path() {
+        // Below the threshold the fallback is literally fused_step.
+        let cfg = KernelConfig::with_threads(4);
+        let mut a = AdamState::new(8);
+        let mut b = AdamState::new(8);
+        let g = [0.5f32, -0.25, 0.0, 1.0, -1.0, 0.125, 2.0, -2.0];
+        let mut da = [0f32; 8];
+        let mut db = [0f32; 8];
+        a.fused_step(&g, &mut da);
+        b.fused_step_with(&g, &mut db, &cfg);
+        assert_eq!(da, db);
+        assert_eq!(a.step, b.step);
     }
 
     #[test]

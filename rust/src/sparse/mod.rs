@@ -124,12 +124,36 @@ impl ProjectorPair {
     }
 
     pub fn compress_with(&self, g: &Tensor, cfg: &KernelConfig) -> Result<Tensor> {
+        let d = self.p.d;
+        let mut s = Tensor::zeros(&[d, d]);
+        // Freshly zeroed allocation: skip the redundant fill in the
+        // reuse-oriented entry below.
+        self.compress_zeroed(g, cfg, s.data_mut())?;
+        Ok(s)
+    }
+
+    /// Compress into a caller-provided `[d, d]` buffer, overwriting its
+    /// contents, so callers can reuse storage (e.g. a `PooledBuf` payload)
+    /// instead of allocating per call.  The `_with` wrappers route through
+    /// the same kernel body; the trainer's LSP path compresses on the GPU,
+    /// so today the recurring host-side callers are the bias checks and
+    /// CPU baselines.
+    pub fn compress_into_with(&self, g: &Tensor, cfg: &KernelConfig, out: &mut [f32]) -> Result<()> {
+        out.fill(0.0);
+        self.compress_zeroed(g, cfg, out)
+    }
+
+    /// Kernel body; `out` must be a zeroed `[d, d]` buffer (accumulates).
+    fn compress_zeroed(&self, g: &Tensor, cfg: &KernelConfig, out: &mut [f32]) -> Result<()> {
         let (m, n) = (g.rows(), g.cols());
         if m != self.p.rows || n != self.q.rows {
             bail!("compress shape mismatch: G {:?} vs P rows {} / Q rows {}",
                   g.shape(), self.p.rows, self.q.rows);
         }
         let d = self.p.d;
+        if out.len() != d * d {
+            bail!("compress output wants {} elements, got {}", d * d, out.len());
+        }
         let threads = cfg.resolved_threads();
 
         // A = P^T G, streamed through P's GATHER layout: row j of A is the
@@ -166,10 +190,9 @@ impl ProjectorPair {
         // S = A Q: walk rows of A so both the read stream (A row) and the
         // write stream (S row) stay contiguous, parallel over S rows
         // (see ROADMAP.md §Perf).
-        let mut s = Tensor::zeros(&[d, d]);
         let ad = a.data();
         let (q_idx, q_val, q_r) = (&self.q.idx, &self.q.val, self.q.r);
-        pool::par_row_blocks(threads, d, d, 4, s.data_mut(), |rows, block| {
+        pool::par_row_blocks(threads, d, d, 4, out, |rows, block| {
             for (local, row) in rows.enumerate() {
                 let arow = &ad[row * n..(row + 1) * n];
                 let srow = &mut block[local * d..(local + 1) * d];
@@ -184,7 +207,7 @@ impl ProjectorPair {
                 }
             }
         });
-        Ok(s)
+        Ok(())
     }
 
     /// Reference compress: the original single-threaded ROW-layout walk
@@ -242,11 +265,30 @@ impl ProjectorPair {
     }
 
     pub fn decompress_with(&self, ds: &Tensor, cfg: &KernelConfig) -> Result<Tensor> {
+        let (m, n) = (self.p.rows, self.q.rows);
+        let mut y = Tensor::zeros(&[m, n]);
+        // Freshly zeroed allocation: skip the redundant fill.
+        self.decompress_zeroed(ds, cfg, y.data_mut())?;
+        Ok(y)
+    }
+
+    /// Decompress into a caller-provided `[m, n]` buffer, overwriting its
+    /// contents (storage-reuse variant; see `compress_into_with`).
+    pub fn decompress_into_with(&self, ds: &Tensor, cfg: &KernelConfig, out: &mut [f32]) -> Result<()> {
+        out.fill(0.0);
+        self.decompress_zeroed(ds, cfg, out)
+    }
+
+    /// Kernel body; `out` must be a zeroed `[m, n]` buffer (accumulates).
+    fn decompress_zeroed(&self, ds: &Tensor, cfg: &KernelConfig, out: &mut [f32]) -> Result<()> {
         let d = self.p.d;
         if ds.rows() != d || ds.cols() != d {
             bail!("decompress wants [{d},{d}], got {:?}", ds.shape());
         }
         let (m, n) = (self.p.rows, self.q.rows);
+        if out.len() != m * n {
+            bail!("decompress output wants {} elements, got {}", m * n, out.len());
+        }
         let threads = cfg.resolved_threads();
 
         // X = P dS: each output row gathers r rows of dS (vectorized row
@@ -275,8 +317,7 @@ impl ProjectorPair {
         // Walk output rows so writes are contiguous and the X row stays hot.
         let xd = x.data();
         let (q_idx, q_val, q_r) = (&self.q.idx, &self.q.val, self.q.r);
-        let mut y = Tensor::zeros(&[m, n]);
-        pool::par_row_blocks(threads, m, n, 8, y.data_mut(), |rows, block| {
+        pool::par_row_blocks(threads, m, n, 8, out, |rows, block| {
             for (local, i) in rows.enumerate() {
                 let xrow = &xd[i * d..(i + 1) * d];
                 let yrow = &mut block[local * n..(local + 1) * n];
@@ -290,7 +331,7 @@ impl ProjectorPair {
                 }
             }
         });
-        Ok(y)
+        Ok(())
     }
 
     /// Reference decompress: original single-threaded walk (oracle).
@@ -343,10 +384,17 @@ impl ProjectorPair {
     /// Estimation bias `b(G) = P P^T G Q Q^T - G` (Definition 2); returns
     /// `(rel, abs, ||G||_F)` with `rel = abs / ||G||_F`.
     pub fn bias(&self, g: &Tensor) -> Result<(f32, f32, f32)> {
-        let s = self.compress(g)?;
-        let est = self.decompress(&s)?;
-        let diff = crate::tensor::ops::sub(&est, g);
-        let abs = diff.frob_norm();
+        self.bias_with(g, &kernel::current())
+    }
+
+    /// Bias estimate under an explicit per-instance `KernelConfig` (the
+    /// projector manager's check path).  The difference is formed in place
+    /// (`est + (-1)·g`, exact IEEE negation) to avoid a third allocation.
+    pub fn bias_with(&self, g: &Tensor, cfg: &KernelConfig) -> Result<(f32, f32, f32)> {
+        let s = self.compress_with(g, cfg)?;
+        let mut est = self.decompress_with(&s, cfg)?;
+        crate::tensor::ops::axpy(&mut est, -1.0, g);
+        let abs = est.frob_norm();
         let gn = g.frob_norm().max(1e-30);
         Ok((abs / gn, abs, gn))
     }
@@ -460,6 +508,30 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// `_into_with` overwrites (not accumulates) a reused buffer, so a
+    /// pooled payload can be recycled across steps without zeroing.
+    #[test]
+    fn into_variants_overwrite_reused_buffers() {
+        let mut rng = Rng::new(21);
+        let pair = ProjectorPair::init(24, 20, 8, 2, &mut rng);
+        let cfg = KernelConfig::with_threads(2);
+        let g = Tensor::randn(&[24, 20], 1.0, &mut rng);
+        let want = pair.compress_with(&g, &cfg).unwrap();
+        let mut buf = vec![7.0f32; 8 * 8]; // poisoned contents
+        pair.compress_into_with(&g, &cfg, &mut buf).unwrap();
+        assert_eq!(buf, want.data());
+        // Wrong-size buffers are rejected, not silently truncated.
+        let mut short = vec![0f32; 10];
+        assert!(pair.compress_into_with(&g, &cfg, &mut short).is_err());
+
+        let ds = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let dwant = pair.decompress_with(&ds, &cfg).unwrap();
+        let mut dbuf = vec![-3.0f32; 24 * 20];
+        pair.decompress_into_with(&ds, &cfg, &mut dbuf).unwrap();
+        assert_eq!(dbuf, dwant.data());
+        assert!(pair.decompress_into_with(&ds, &cfg, &mut short).is_err());
     }
 
     #[test]

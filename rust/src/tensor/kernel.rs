@@ -13,9 +13,13 @@
 //! error across randomized shapes and configs.
 //!
 //! `KernelConfig` is the knob surface: it is parsed by `config/`
-//! (`--kernel-threads`, `kernel_block_*`), negotiated by the coordinator
-//! (`Trainer` reserves its schedule-level threads), and installed
-//! process-wide for the `ops::matmul*` entry points.
+//! (`--kernel-threads`, `kernel_block_*`) and negotiated *per trainer
+//! instance* by the coordinator (`PipelineCtx::new` reserves the
+//! schedule-level threads and threads the result through the `*_with`
+//! entry points — nothing is installed process-wide on the training path,
+//! so trainers with different configs coexist in one process).  The
+//! process-wide `install`/`current` pair remains as the default for
+//! standalone callers (benches, analyses) using the non-`_with` wrappers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;

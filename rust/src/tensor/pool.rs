@@ -22,8 +22,25 @@ pub fn effective_workers(threads: usize, rows: usize, min_rows: usize) -> usize 
     threads.max(1).min(by_work.max(1))
 }
 
+/// The split policy, in one place: `n` items divided into `workers`
+/// contiguous ranges, remainder spread over the first workers.  Consumed by
+/// `par_row_blocks` here and by `optim::AdamState::fused_step_with` (which
+/// carves four parallel slices along the same ranges).
+pub fn split_ranges(workers: usize, n: usize) -> impl Iterator<Item = Range<usize>> {
+    let workers = workers.max(1);
+    let base = n / workers;
+    let extra = n % workers;
+    (0..workers).scan(0usize, move |start, w| {
+        let take = base + usize::from(w < extra);
+        let r = *start..*start + take;
+        *start += take;
+        Some(r)
+    })
+}
+
 /// Run `f` over the `rows * row_len` output buffer `out`, split into
-/// contiguous row blocks across up to `threads` scoped workers.
+/// contiguous row blocks (per `split_ranges`) across up to `threads` scoped
+/// workers.
 ///
 /// `f(range, block)` receives the global row range it owns and the matching
 /// sub-slice of `out` (`block.len() == range.len() * row_len`).  With one
@@ -46,19 +63,14 @@ pub fn par_row_blocks<F>(
         f(0..rows, out);
         return;
     }
-    let base = rows / workers;
-    let extra = rows % workers;
     std::thread::scope(|scope| {
         let f = &f;
         let mut rest = out;
-        let mut row0 = 0usize;
-        for w in 0..workers {
-            let take = base + usize::from(w < extra);
-            let (block, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+        let mut ranges = split_ranges(workers, rows).peekable();
+        while let Some(range) = ranges.next() {
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(range.len() * row_len);
             rest = tail;
-            let range = row0..row0 + take;
-            row0 += take;
-            if w + 1 == workers {
+            if ranges.peek().is_none() {
                 // The caller participates instead of idling in scope join.
                 f(range, block);
             } else {
@@ -79,6 +91,24 @@ mod tests {
         assert_eq!(effective_workers(4, 17, 8), 2);
         assert_eq!(effective_workers(0, 100, 8), 1);
         assert_eq!(effective_workers(1, 0, 8), 1);
+    }
+
+    #[test]
+    fn split_ranges_cover_exactly_once() {
+        for (workers, n) in [(1usize, 7usize), (3, 7), (4, 4), (5, 17), (2, 0)] {
+            let ranges: Vec<_> = split_ranges(workers, n).collect();
+            assert_eq!(ranges.len(), workers.max(1));
+            // Contiguous, in order, covering 0..n with sizes differing <= 1.
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced split {sizes:?}");
+        }
     }
 
     #[test]

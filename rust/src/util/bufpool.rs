@@ -1,0 +1,297 @@
+//! Recycling f32 buffer pool for the offload link payloads.
+//!
+//! Every `OffloadMsg`/`DeltaMsg` crossing the emulated PCIe links carries a
+//! `PooledBuf`: a `Vec<f32>` that returns itself to its pool when dropped.
+//! The CPU updater *takes* its delta buffers from the pool, and both the
+//! driver's apply sites (delta handles) and the updater's consumed gradient
+//! handles drop their storage back — so after one warmup round-trip per
+//! payload size the updater/delta side of the link path performs zero new
+//! allocations (see the steady-state test in `coordinator::worker`).
+//! Driver-side gradient payloads are *adopted*: their storage is allocated
+//! by the PJRT download (`to_vec` at the device boundary — not avoidable
+//! from here) and joins the pool afterwards, feeding the delta supply
+//! instead of churning the allocator; the old second allocation per message
+//! (`vec![0.0; n]` for every delta) is gone entirely.
+//!
+//! Buffers are shelved by exact length (every parameter/subspace payload has
+//! a fixed size, so classes are stable across steps) with a per-class cap;
+//! returns beyond the cap free the buffer instead of growing the pool
+//! without bound.  The pool is `Clone` (shared handle) and all operations
+//! are `&self`, so one pool serves the driver thread and the pipeline
+//! threads concurrently.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default cap on shelved buffers per size class.
+pub const DEFAULT_MAX_PER_CLASS: usize = 64;
+
+struct Inner {
+    shelves: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    max_per_class: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+    discarded: AtomicU64,
+}
+
+impl Inner {
+    fn put(&self, v: Vec<f32>) {
+        if v.is_empty() {
+            return;
+        }
+        let mut shelves = self.shelves.lock().unwrap();
+        let shelf = shelves.entry(v.len()).or_default();
+        if shelf.len() < self.max_per_class {
+            shelf.push(v);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.discarded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Shared recycling pool of fixed-size `Vec<f32>` payload buffers.
+#[derive(Clone)]
+pub struct BufPool {
+    inner: Arc<Inner>,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        Self::with_max_per_class(DEFAULT_MAX_PER_CLASS)
+    }
+
+    pub fn with_max_per_class(max_per_class: usize) -> BufPool {
+        BufPool {
+            inner: Arc::new(Inner {
+                shelves: Mutex::new(HashMap::new()),
+                max_per_class,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                recycled: AtomicU64::new(0),
+                discarded: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A buffer of exactly `len` elements with *unspecified* contents (a
+    /// recycled buffer keeps its previous values).  Use when every element
+    /// is overwritten before being read (fused Adam deltas, downloads).
+    pub fn take_raw(&self, len: usize) -> PooledBuf {
+        let recycled = self
+            .inner
+            .shelves
+            .lock()
+            .unwrap()
+            .get_mut(&len)
+            .and_then(|shelf| shelf.pop());
+        let data = match recycled {
+            Some(v) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        };
+        PooledBuf { data, pool: Some(self.inner.clone()) }
+    }
+
+    /// A zeroed buffer of exactly `len` elements.
+    pub fn take(&self, len: usize) -> PooledBuf {
+        let mut b = self.take_raw(len);
+        b.data.fill(0.0);
+        b
+    }
+
+    /// Wrap an existing allocation (e.g. a PJRT download) so its storage
+    /// joins the pool when the handle drops.
+    pub fn adopt(&self, v: Vec<f32>) -> PooledBuf {
+        PooledBuf { data: v, pool: Some(self.inner.clone()) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let shelved = self.inner.shelves.lock().unwrap().values().map(|s| s.len()).sum();
+        PoolStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            recycled: self.inner.recycled.load(Ordering::Relaxed),
+            discarded: self.inner.discarded.load(Ordering::Relaxed),
+            shelved,
+        }
+    }
+}
+
+/// Counters for the recycling behavior (`hits` = takes served from the
+/// shelf; steady state is misses flat, hits growing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub recycled: u64,
+    pub discarded: u64,
+    pub shelved: usize,
+}
+
+impl PoolStats {
+    /// Fraction of takes served from the shelf.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// An f32 buffer that returns itself to its `BufPool` on drop.  Derefs to
+/// `[f32]`, so it drops into any `&[f32]`/`&mut [f32]` call site.
+pub struct PooledBuf {
+    data: Vec<f32>,
+    pool: Option<Arc<Inner>>,
+}
+
+impl PooledBuf {
+    /// A pool-less buffer (drops like a plain `Vec`); lets tests and
+    /// non-pipeline callers build messages without a pool.
+    pub fn detached(v: Vec<f32>) -> PooledBuf {
+        PooledBuf { data: v, pool: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Extract the underlying `Vec` without returning it to the pool.
+    pub fn into_vec(mut self) -> Vec<f32> {
+        self.pool = None;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl From<Vec<f32>> for PooledBuf {
+    fn from(v: Vec<f32>) -> PooledBuf {
+        PooledBuf::detached(v)
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PooledBuf[{}]", self.data.len())
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_take_misses_then_recycles() {
+        let pool = BufPool::new();
+        let a = pool.take(8);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&x| x == 0.0));
+        drop(a);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.recycled), (0, 1, 1));
+        assert_eq!(s.shelved, 1);
+
+        let b = pool.take_raw(8);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.shelved, 0);
+        drop(b);
+        assert!((pool.stats().hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classes_are_exact_length() {
+        let pool = BufPool::new();
+        drop(pool.take(8));
+        let c = pool.take(9); // different class: must miss
+        assert_eq!(c.len(), 9);
+        assert_eq!(pool.stats().misses, 2);
+    }
+
+    #[test]
+    fn take_zeroes_recycled_contents() {
+        let pool = BufPool::new();
+        let mut a = pool.take(4);
+        a.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        drop(a);
+        let b = pool.take(4);
+        assert_eq!(pool.stats().hits, 1);
+        assert!(b.iter().all(|&x| x == 0.0), "take() must zero: {b:?}");
+    }
+
+    #[test]
+    fn per_class_cap_discards_overflow() {
+        let pool = BufPool::with_max_per_class(2);
+        let bufs: Vec<PooledBuf> = (0..4).map(|_| pool.take(16)).collect();
+        drop(bufs);
+        let s = pool.stats();
+        assert_eq!(s.recycled, 2);
+        assert_eq!(s.discarded, 2);
+        assert_eq!(s.shelved, 2);
+    }
+
+    #[test]
+    fn adopt_and_detached_and_into_vec() {
+        let pool = BufPool::new();
+        drop(pool.adopt(vec![1.0, 2.0]));
+        assert_eq!(pool.stats().shelved, 1, "adopted buffer joins the pool");
+
+        drop(PooledBuf::detached(vec![3.0]));
+        assert_eq!(pool.stats().shelved, 1, "detached buffers never shelve");
+
+        let v = pool.take_raw(2).into_vec();
+        assert_eq!(v.len(), 2);
+        assert_eq!(pool.stats().shelved, 0, "into_vec removes it for good");
+        drop(v);
+        assert_eq!(pool.stats().shelved, 0);
+
+        let msg: PooledBuf = vec![5.0f32].into();
+        assert_eq!(msg.as_slice(), &[5.0]);
+    }
+}

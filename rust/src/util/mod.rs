@@ -2,6 +2,7 @@
 //! JSON, RNG, timing/stats, micro-bench harness, property-test helper.
 
 pub mod bench;
+pub mod bufpool;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,179 @@
+//! Fixed-seed policy parity through the refactored `UpdatePolicy` trait.
+//!
+//! Three layers of protection around the trainer refactor:
+//!
+//! 1. **Fixture parity** — each policy's per-step train-loss trajectory is
+//!    compared (within 1e-6) against a recorded fixture in
+//!    `tests/fixtures/parity_<policy>.json`.  On a machine with artifacts
+//!    but no fixture, the test *records* one and asks for it to be
+//!    committed.  NOTE: the trait refactor was authored in a container
+//!    without a rust toolchain, so no pre-refactor fixture could be
+//!    recorded; the first artifact-bearing run pins the *refactored*
+//!    trajectories (protection against future changes).  Refactor-time
+//!    parity itself is covered by layer 2 below plus the pre-existing
+//!    `runtime_e2e` descend/traffic/determinism tests.  To audit against
+//!    the pre-refactor trainer, record fixtures at the parent commit and
+//!    copy them here before running.
+//! 2. **Native/Zero cross-parity** — Native (synchronous host Adam) and
+//!    Zero-Offload (fused Adam on the updater thread, pooled payloads,
+//!    end-of-step barrier) implement the same optimizer math through
+//!    completely different plumbing; their trajectories must agree
+//!    bit-for-bit, so any pipeline bug (lost delta, double apply, state
+//!    keyed wrong) shows up as divergence.
+//! 3. **Determinism** — same seed, same trajectory, for every policy.
+//!
+//! Like the other runtime tests these need `make artifacts` and skip
+//! gracefully without it.
+
+use std::path::PathBuf;
+
+use lsp_offload::coordinator::policy::PolicyKind;
+use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+use lsp_offload::model::manifest::find_artifacts;
+use lsp_offload::runtime::Engine;
+use lsp_offload::util::json::Json;
+
+const ALL_POLICIES: [PolicyKind; 5] = [
+    PolicyKind::Native,
+    PolicyKind::Zero,
+    PolicyKind::Lsp,
+    PolicyKind::Lora,
+    PolicyKind::Galore,
+];
+
+/// Compile once per thread, share across that thread's tests.
+fn with_engine(f: impl FnOnce(&Engine)) {
+    thread_local! {
+        static ENGINE: std::cell::OnceCell<Option<Engine>> =
+            const { std::cell::OnceCell::new() };
+    }
+    ENGINE.with(|c| {
+        let eng = c.get_or_init(|| {
+            let dir = find_artifacts(None, "tiny").ok()?;
+            Engine::load(&dir).ok()
+        });
+        match eng {
+            Some(e) => f(e),
+            None => eprintln!("SKIP: tiny artifacts not found; run `make artifacts`"),
+        }
+    });
+}
+
+fn parity_config(policy: PolicyKind) -> TrainConfig {
+    TrainConfig {
+        policy,
+        steps: 6,
+        bw_bytes_per_s: 1e9, // fast links: parity is about values, not timing
+        check_freq: 3,       // exercise MAYBEUPDATE inside the window
+        alpha: 0.9,
+        learn_budget: 5,
+        eval_every: 0,
+        log_every: 0,
+        seed: 20_240_101,
+        ..TrainConfig::default()
+    }
+}
+
+fn run_trajectory(eng: &Engine, policy: PolicyKind) -> Vec<f32> {
+    let mut tr = Trainer::new(eng, parity_config(policy)).unwrap();
+    let rep = tr.train().unwrap();
+    rep.loss_curve.iter().map(|&(_, l)| l).collect()
+}
+
+fn fixture_path(policy: PolicyKind) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(format!("parity_{}.json", policy.name()))
+}
+
+fn losses_to_json(policy: PolicyKind, losses: &[f32]) -> String {
+    let arr = Json::Arr(losses.iter().map(|&l| Json::Num(l as f64)).collect());
+    let obj = Json::obj(vec![
+        ("policy", Json::Str(policy.name().to_string())),
+        ("steps", Json::Num(losses.len() as f64)),
+        ("losses", arr),
+    ]);
+    format!("{obj}\n")
+}
+
+fn losses_from_json(text: &str) -> Vec<f32> {
+    let j = Json::parse(text).expect("fixture parses");
+    let obj = j.as_obj().expect("fixture is an object");
+    obj["losses"]
+        .as_arr()
+        .expect("losses array")
+        .iter()
+        .map(|v| v.as_f64().expect("loss number") as f32)
+        .collect()
+}
+
+#[test]
+fn policy_trajectories_match_recorded_fixtures() {
+    with_engine(|eng| {
+        for policy in ALL_POLICIES {
+            let losses = run_trajectory(eng, policy);
+            assert_eq!(losses.len(), 6, "{policy:?} ran short");
+            assert!(losses.iter().all(|l| l.is_finite()), "{policy:?}: {losses:?}");
+            let path = fixture_path(policy);
+            if path.exists() {
+                let want = losses_from_json(&std::fs::read_to_string(&path).unwrap());
+                assert_eq!(want.len(), losses.len(), "{policy:?} fixture length");
+                for (step, (got, want)) in losses.iter().zip(&want).enumerate() {
+                    assert!(
+                        (got - want).abs() <= 1e-6,
+                        "{policy:?} step {step}: {got} vs fixture {want}"
+                    );
+                }
+            } else {
+                std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+                std::fs::write(&path, losses_to_json(policy, &losses)).unwrap();
+                eprintln!(
+                    "RECORDED parity fixture {} — commit it to pin this trajectory",
+                    path.display()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn native_and_zero_trajectories_agree() {
+    with_engine(|eng| {
+        let native = run_trajectory(eng, PolicyKind::Native);
+        let zero = run_trajectory(eng, PolicyKind::Zero);
+        assert_eq!(
+            native, zero,
+            "same optimizer math through different plumbing must match exactly"
+        );
+    });
+}
+
+#[test]
+fn trajectories_are_deterministic_per_policy() {
+    with_engine(|eng| {
+        for policy in ALL_POLICIES {
+            let a = run_trajectory(eng, policy);
+            let b = run_trajectory(eng, policy);
+            assert_eq!(a, b, "{policy:?} must be seed-deterministic");
+        }
+    });
+}
+
+/// Offloading policies must finish with an empty in-flight set and a warm
+/// payload pool (the zero-allocation steady state the bufpool provides).
+#[test]
+fn offload_runs_recycle_link_payloads() {
+    with_engine(|eng| {
+        for policy in [PolicyKind::Zero, PolicyKind::Lsp] {
+            let mut tr = Trainer::new(eng, parity_config(policy)).unwrap();
+            let rep = tr.train().unwrap();
+            assert!(rep.d2h_bytes > 0, "{policy:?} moved no gradients");
+            assert!(
+                rep.pool_hit_rate > 0.0,
+                "{policy:?}: payload pool never recycled (hit rate {})",
+                rep.pool_hit_rate
+            );
+            assert!(tr.ctx().pending.is_empty(), "{policy:?} left deltas in flight");
+        }
+    });
+}

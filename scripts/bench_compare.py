@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Gate the hot-path bench against the committed trajectory.
+
+Usage: bench_compare.py TRAJECTORY.json SMOKE.json [max_regression_pct]
+
+Compares `secs_min` for every (name, shape, impl) row present in BOTH
+files and exits non-zero if any row is slower than the trajectory by more
+than the threshold (default 25%).  Rows unique to either file are ignored
+(smoke runs use a reduced shape set), as are rows whose smoke run managed
+fewer than MIN_ITERS iterations — a min over 1-2 samples is biased high
+and would fail spuriously on a loaded machine.  Faster-than-trajectory
+rows always pass — this is a regression gate, not a reproducibility check.
+"""
+
+import json
+import sys
+
+# Minimum smoke-side sample count for a row to be judged at all.
+MIN_ITERS = 3
+
+
+def rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for r in doc.get("results", []):
+        out[(r.get("name"), r.get("shape"), r.get("impl"))] = r
+    return out
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__.strip())
+        return 2
+    base = rows(argv[1])
+    cur = rows(argv[2])
+    pct = float(argv[3]) if len(argv) > 3 else 25.0
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        print("bench-compare: no matching (name, shape, impl) rows; nothing to gate")
+        return 0
+    bad = []
+    judged = 0
+    unjudgeable = 0
+    for key in shared:
+        b = base[key].get("secs_min", 0.0)
+        c = cur[key].get("secs_min", 0.0)
+        if not b or b <= 0.0 or not c or c <= 0.0:
+            # No silent caps: a malformed row on either side is reported,
+            # not dropped from the listing (a zero smoke-side time would
+            # otherwise pass as a -100% 'improvement').
+            print(
+                "  %-18s %-26s %-14s base %-10r cur %-10r skip (unjudgeable secs_min)"
+                % (key[0], key[1], key[2], b, c)
+            )
+            unjudgeable += 1
+            continue
+        delta = (c - b) / b * 100.0
+        # Rows the smoke budget could not sample enough are reported but
+        # never gated (old trajectory files without "iters" are judged).
+        iters = cur[key].get("iters", MIN_ITERS)
+        noisy = iters < MIN_ITERS
+        if noisy:
+            flag = "skip (only %d iters)" % iters
+        elif delta > pct:
+            flag = "REGRESSION"
+        else:
+            flag = "ok"
+        print(
+            "  %-18s %-26s %-14s base %.3es  cur %.3es  %+7.1f%%  %s"
+            % (key[0], key[1], key[2], b, c, delta, flag)
+        )
+        if noisy:
+            continue
+        judged += 1
+        if delta > pct:
+            bad.append(key)
+    if bad:
+        print(
+            "bench-compare: FAIL — %d row(s) regressed more than %.0f%% "
+            "vs the trajectory" % (len(bad), pct)
+        )
+        return 1
+    print(
+        "bench-compare: OK — %d judged row(s) within %.0f%% "
+        "(%d skipped as noisy, %d unjudgeable)"
+        % (judged, pct, len(shared) - judged - unjudgeable, unjudgeable)
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 entry point: build + tests + a smoke pass of the hot-path bench.
+# Tier-1 entry point: build + tests + smoke bench + perf/lint gates.
 #
 #   scripts/check.sh            # full tier-1 gate
 #   scripts/check.sh --bench    # additionally run the full (non-smoke) bench
@@ -8,9 +8,21 @@
 # BENCH_hotpath.smoke.json; only the full bench (here via --bench, or
 # `cargo bench --bench hotpath` directly) writes the cross-PR trajectory
 # file BENCH_hotpath.json at the repo root.
+#
+# Gates after build/test:
+#   * Perf: scripts/bench_compare.py fails the run when any (name, shape,
+#     impl) row shared between the smoke output and the committed
+#     BENCH_hotpath.json regressed by more than BENCH_GATE_PCT (default
+#     25%).  Dormant until a full bench has recorded the trajectory on this
+#     machine; BENCH_SKIP_GATE=1 skips it explicitly.
+#   * Lint: `cargo fmt --check` and `cargo clippy --all-targets -- -D
+#     warnings`.  Failures are fatal with CHECK_STRICT=1 and loud warnings
+#     otherwise (escape hatch until the tree is verified lint-clean on a
+#     machine that has the rustfmt/clippy components installed).
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+ROOT="$(cd .. && pwd)"
 
 echo "== cargo build --release =="
 cargo build --release
@@ -19,7 +31,49 @@ echo "== cargo test -q =="
 cargo test -q
 
 echo "== cargo bench --bench hotpath -- smoke =="
+# Remove any previous smoke output first: the bench falls back to writing
+# into rust/ when the repo root is unwritable, and the gate must never
+# judge a stale root-level file from an earlier run.
+rm -f "$ROOT/BENCH_hotpath.smoke.json"
 cargo bench --bench hotpath -- smoke
+
+echo "== bench trajectory gate (>${BENCH_GATE_PCT:-25}% = fail) =="
+if [[ "${BENCH_SKIP_GATE:-0}" == "1" ]]; then
+    echo "   skipped (BENCH_SKIP_GATE=1)"
+elif [[ ! -f "$ROOT/BENCH_hotpath.json" ]]; then
+    echo "   skipped: no trajectory file yet (record one with scripts/check.sh --bench)"
+elif [[ ! -f "$ROOT/BENCH_hotpath.smoke.json" ]]; then
+    echo "   skipped: smoke bench wrote no $ROOT/BENCH_hotpath.smoke.json"
+elif ! command -v python3 >/dev/null 2>&1; then
+    echo "   skipped: python3 not available"
+else
+    python3 "$ROOT/scripts/bench_compare.py" \
+        "$ROOT/BENCH_hotpath.json" "$ROOT/BENCH_hotpath.smoke.json" \
+        "${BENCH_GATE_PCT:-25}"
+fi
+
+lint_fail=0
+echo "== cargo fmt --check =="
+if ! cargo fmt --version >/dev/null 2>&1; then
+    # Component absence is an environment gap, not a lint finding — never
+    # fail the gate (even strict) over a missing rustfmt/clippy install.
+    echo "   skipped: rustfmt component not installed"
+elif ! cargo fmt --check; then
+    lint_fail=1
+fi
+echo "== cargo clippy --all-targets -- -D warnings =="
+if ! cargo clippy --version >/dev/null 2>&1; then
+    echo "   skipped: clippy component not installed"
+elif ! cargo clippy --all-targets -- -D warnings; then
+    lint_fail=1
+fi
+if [[ "$lint_fail" == 1 ]]; then
+    if [[ "${CHECK_STRICT:-0}" == "1" ]]; then
+        echo "FAIL: lint gates (fmt/clippy) failed under CHECK_STRICT=1"
+        exit 1
+    fi
+    echo "WARNING: lint gates (fmt/clippy) failed; set CHECK_STRICT=1 to make this fatal"
+fi
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== cargo bench --bench hotpath (full) =="
