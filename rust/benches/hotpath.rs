@@ -1,7 +1,8 @@
 //! Hot-path micro-benchmarks (own harness; criterion unavailable offline).
 //! Targets of the §Perf pass: the blocked matmul substrate vs its naive
 //! reference, host sparse compress/decompress (streamed vs ROW-scalar
-//! reference), the fused CPU Adam, the DES engine, the priority queue, and
+//! reference), the fused CPU Adam, the wire codecs (encode/decode GB/s per
+//! format at link-payload sizes), the DES engine, the priority queue, and
 //! the JSON/manifest parser.
 //!
 //! Run with `cargo bench --bench hotpath [-- <filter>]`.  The special
@@ -10,6 +11,7 @@
 //! to `BENCH_hotpath.json` at the repo root so later PRs can track the perf
 //! trajectory; smoke/filtered runs write `BENCH_hotpath.smoke.json`.
 
+use lsp_offload::codec::{make_codec, ByteBuf, CodecKind};
 use lsp_offload::model::memory::PaperModel;
 use lsp_offload::optim::AdamState;
 use lsp_offload::sim::{build_schedule, HardwareProfile, ScheduleKind, Workload};
@@ -213,6 +215,58 @@ fn main() {
                 Some(dr.min / dsn.min),
             ));
             println!("    -> decompress speedup {:.2}x", dr.min / dsn.min);
+        }
+    }
+
+    if want("codec") {
+        // Wire-format encode/decode throughput at link-payload sizes
+        // (65536 = a d=256 subspace gradient; 262144 = d=512).  `gops`
+        // reports raw-f32 GB/s processed, so rows are comparable across
+        // codecs regardless of their wire size.  The smoke run keeps the
+        // 65536 rows so the perf gate shares (name, shape, impl) keys with
+        // the full trajectory — like matmul's 256 and fused_adam's 2^14.
+        let mut rng = Rng::new(13);
+        let sizes: &[usize] = if smoke { &[1 << 16] } else { &[1 << 16, 1 << 18] };
+        for &n in sizes {
+            let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let raw_gb = (n * 4) as f64 / 1e9;
+            for kind in CodecKind::ALL {
+                let c = make_codec(kind);
+                let name = c.name();
+                let mut buf = ByteBuf::detached(Vec::with_capacity(c.wire_len(&data)));
+                let re = bench(&format!("codec_encode {name} n={n}"), budget, || {
+                    buf.clear();
+                    c.encode(&data, &mut buf);
+                    std::hint::black_box(buf.len());
+                });
+                results.push(result_row(
+                    "codec_encode",
+                    &format!("n={n}"),
+                    &name,
+                    &re,
+                    Some(raw_gb / re.min),
+                    None,
+                ));
+                let mut out = vec![0f32; n];
+                let rd = bench(&format!("codec_decode {name} n={n}"), budget, || {
+                    c.decode(&buf, &mut out).unwrap();
+                    std::hint::black_box(out[0]);
+                });
+                results.push(result_row(
+                    "codec_decode",
+                    &format!("n={n}"),
+                    &name,
+                    &rd,
+                    Some(raw_gb / rd.min),
+                    None,
+                ));
+                println!(
+                    "    -> {name}: {:.0}% of f32 bytes | enc {:.2} GB/s dec {:.2} GB/s",
+                    c.wire_len(&data) as f64 / (n * 4) as f64 * 100.0,
+                    raw_gb / re.min,
+                    raw_gb / rd.min,
+                );
+            }
         }
     }
 

@@ -162,7 +162,7 @@ fn main() {
 /// orders of magnitude fewer bytes and finishes the same steps sooner than
 /// Zero under the same emulated link.
 fn run_fig5_short() {
-    use lsp_offload::coordinator::policy::PolicyKind;
+    use lsp_offload::coordinator::policies::PolicyKind;
     use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
     let Ok(dir) = lsp_offload::model::manifest::find_artifacts(None, "tiny") else {
         println!("(skipped: artifacts unavailable)");
@@ -185,11 +185,12 @@ fn run_fig5_short() {
         let mut tr = Trainer::new(&eng, cfg).unwrap();
         let rep = tr.train().unwrap();
         println!(
-            "  {:5} 20 steps: wall {:>9}, final loss {:.4}, d2h {:>10}",
+            "  {:5} 20 steps: wall {:>9}, final loss {:.4}, wire up {:>10} [{}]",
             rep.policy,
             lsp_offload::util::human_secs(rep.wall_secs),
             rep.final_train_loss,
-            lsp_offload::util::human_bytes(rep.d2h_bytes),
+            lsp_offload::util::human_bytes(rep.bytes_up),
+            rep.link_codec,
         );
     }
 }

@@ -14,7 +14,7 @@
 //! reference numbers.
 
 use anyhow::Result;
-use lsp_offload::coordinator::policy::PolicyKind;
+use lsp_offload::coordinator::policies::PolicyKind;
 use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
 use lsp_offload::model::manifest::find_artifacts;
 use lsp_offload::runtime::Engine;
@@ -65,25 +65,27 @@ fn main() -> Result<()> {
 
     println!("\n== summary (same budget, lower is better) ==");
     println!(
-        "{:8} {:>10} {:>12} {:>12} {:>12} {:>14}",
-        "policy", "wall", "train loss", "eval loss", "tokens/s", "offload(d2h)"
+        "{:8} {:>10} {:>12} {:>12} {:>12} {:>11} {:>14} {:>8}",
+        "policy", "wall", "train loss", "eval loss", "tokens/s", "codec", "wire(up)", "vs f32"
     );
     for r in &rows {
         println!(
-            "{:8} {:>10} {:>12.4} {:>12} {:>12.1} {:>14}",
+            "{:8} {:>10} {:>12.4} {:>12} {:>12.1} {:>11} {:>14} {:>7.2}x",
             r.policy,
             lsp_offload::util::human_secs(r.wall_secs),
             r.final_train_loss,
             r.final_eval_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
             r.tokens_per_s,
-            lsp_offload::util::human_bytes(r.d2h_bytes),
+            r.link_codec,
+            lsp_offload::util::human_bytes(r.bytes_up),
+            r.compression_ratio(),
         );
     }
     let lsp = &rows[0];
     let zero = &rows[1];
     println!(
-        "\nLSP vs Zero: {:.1}x less offload traffic, {:.2}x wall-clock",
-        zero.d2h_bytes as f64 / lsp.d2h_bytes.max(1) as f64,
+        "\nLSP vs Zero: {:.1}x less wire traffic, {:.2}x wall-clock",
+        zero.bytes_up as f64 / lsp.bytes_up.max(1) as f64,
         zero.wall_secs / lsp.wall_secs,
     );
     Ok(())

@@ -6,7 +6,7 @@
 //! ```
 
 use anyhow::Result;
-use lsp_offload::coordinator::policy::PolicyKind;
+use lsp_offload::coordinator::policies::PolicyKind;
 use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
 use lsp_offload::model::manifest::find_artifacts;
 use lsp_offload::runtime::Engine;

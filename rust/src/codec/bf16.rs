@@ -1,0 +1,93 @@
+//! `Bf16` — 2 bytes per element: the upper half of the IEEE-754 f32 bit
+//! pattern, rounded to nearest-even.  bf16 keeps f32's exponent range (no
+//! overflow/underflow on conversion), so the only loss is the mantissa
+//! truncation: relative error <= 2^-9 per element for normal-range inputs,
+//! declared with headroom as 1/256.
+
+use anyhow::{bail, Result};
+
+use super::{ByteBuf, Codec};
+
+/// f32 -> bf16 bits with round-to-nearest-even (the rounding the paper's
+/// mixed-precision training stacks use).
+pub(crate) fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep NaN a NaN: force a mantissa bit so truncation cannot
+        // produce an infinity.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+pub(crate) fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bf16;
+
+impl Codec for Bf16 {
+    fn name(&self) -> String {
+        "bf16".to_string()
+    }
+
+    fn encode(&self, src: &[f32], dst: &mut ByteBuf) {
+        dst.reserve(src.len() * 2);
+        for &x in src {
+            dst.extend_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
+        }
+    }
+
+    fn decode(&self, src: &[u8], dst: &mut [f32]) -> Result<()> {
+        if src.len() != dst.len() * 2 {
+            bail!("bf16 payload is {} bytes, want {} for {} elems", src.len(), dst.len() * 2, dst.len());
+        }
+        for (out, b) in dst.iter_mut().zip(src.chunks_exact(2)) {
+            *out = bf16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    fn wire_len(&self, src: &[f32]) -> usize {
+        src.len() * 2
+    }
+
+    fn rel_l2_bound(&self) -> f32 {
+        // RNE truncation to 8 significand bits: per-element relative error
+        // <= 2^-9/(1 - 2^-9); 2^-8 declared for headroom.
+        1.0 / 256.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversion_basics() {
+        // Values exactly representable in bf16 (<= 8 significand bits)
+        // survive unchanged.
+        for x in [0.0f32, 1.0, -2.0, 0.5, -0.09375, 1.5e1, f32::from_bits(0x7F00_0000)] {
+            let y = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            assert_eq!(x, y, "{x} not preserved");
+        }
+        // Signs survive; NaN stays NaN; infinities stay infinite.
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(-1.5)).is_sign_negative());
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 sits exactly between bf16(1.0) and the next bf16 up
+        // (1 + 2^-7); RNE picks the even mantissa (1.0).  One f32 ulp above
+        // the midpoint must round up.
+        let midpoint = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(midpoint)), 1.0);
+        let above = f32::from_bits(0x3F80_8001);
+        let up = bf16_bits_to_f32(f32_to_bf16_bits(above));
+        assert!(up > 1.0, "{above} must round up, got {up}");
+    }
+}

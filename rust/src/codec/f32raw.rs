@@ -1,0 +1,43 @@
+//! `F32Raw` — the identity wire format: 4 bytes per element, little-endian
+//! IEEE-754 bits.  Bit-exact round-trip (including NaN payloads and signed
+//! zeros), and exactly the `4 * n` bytes the links charged before the codec
+//! subsystem existed — this is the parity path every lossy codec is judged
+//! against.
+
+use anyhow::{bail, Result};
+
+use super::{ByteBuf, Codec};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct F32Raw;
+
+impl Codec for F32Raw {
+    fn name(&self) -> String {
+        "f32".to_string()
+    }
+
+    fn encode(&self, src: &[f32], dst: &mut ByteBuf) {
+        dst.reserve(src.len() * 4);
+        for &x in src {
+            dst.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn decode(&self, src: &[u8], dst: &mut [f32]) -> Result<()> {
+        if src.len() != dst.len() * 4 {
+            bail!("f32 payload is {} bytes, want {} for {} elems", src.len(), dst.len() * 4, dst.len());
+        }
+        for (out, b) in dst.iter_mut().zip(src.chunks_exact(4)) {
+            *out = f32::from_le_bytes(b.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    fn wire_len(&self, src: &[f32]) -> usize {
+        src.len() * 4
+    }
+
+    fn rel_l2_bound(&self) -> f32 {
+        0.0
+    }
+}

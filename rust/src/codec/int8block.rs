@@ -1,0 +1,154 @@
+//! `Int8Block` — Endor-style block absmax quantization: the payload is cut
+//! into blocks of `block` elements; each block ships one f32 scale
+//! (`absmax / 127`) followed by one signed byte per element
+//! (`round(x / scale)`).  Wire cost: `n + 4 * ceil(n / block)` bytes.
+//!
+//! Error: per element `|x - q*scale| <= scale/2 = absmax/254`, so the
+//! relative L2 error of a block is at most `sqrt(block)/254` (the block's
+//! norm is at least its absmax), and blocks partition the payload, so the
+//! same bound holds for the whole vector.  Declared with a little headroom
+//! for the f32 arithmetic in quantize/dequantize.  Non-finite inputs
+//! degrade gracefully: a block whose absmax is not finite is flushed to
+//! zeros rather than poisoning the scale.
+
+use anyhow::{bail, Result};
+
+use super::{ByteBuf, Codec};
+
+/// Stack-buffer limit for block-streaming encoders (`SparseIdx` gathers
+/// non-zeros into a `[f32; MAX_BLOCK]` before flushing).
+pub(crate) const MAX_BLOCK: usize = 256;
+
+/// Append one quantized block: f32 scale, then `vals.len()` signed bytes.
+pub(crate) fn encode_block(vals: &[f32], dst: &mut ByteBuf) {
+    let absmax = vals.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let scale = absmax / 127.0;
+    if scale == 0.0 || !scale.is_finite() {
+        dst.extend_from_slice(&0.0f32.to_le_bytes());
+        for _ in vals {
+            dst.push(0);
+        }
+        return;
+    }
+    dst.extend_from_slice(&scale.to_le_bytes());
+    for &x in vals {
+        let q = (x / scale).round().clamp(-127.0, 127.0);
+        // A NaN element casts to 0 — lossy by design.
+        dst.push(q as i8 as u8);
+    }
+}
+
+/// Decode one block (`src` = 4 scale bytes + `out.len()` value bytes).
+pub(crate) fn decode_block(src: &[u8], out: &mut [f32]) -> Result<()> {
+    if src.len() != 4 + out.len() {
+        bail!("int8 block is {} bytes, want {}", src.len(), 4 + out.len());
+    }
+    let scale = f32::from_le_bytes(src[..4].try_into().unwrap());
+    for (o, &b) in out.iter_mut().zip(&src[4..]) {
+        *o = (b as i8) as f32 * scale;
+    }
+    Ok(())
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Int8Block {
+    pub block: usize,
+}
+
+impl Int8Block {
+    pub fn new(block: usize) -> Int8Block {
+        assert!(
+            (1..=MAX_BLOCK).contains(&block),
+            "int8 block size must be in 1..={MAX_BLOCK}, got {block}"
+        );
+        Int8Block { block }
+    }
+}
+
+impl Codec for Int8Block {
+    fn name(&self) -> String {
+        format!("int8-{}", self.block)
+    }
+
+    fn encode(&self, src: &[f32], dst: &mut ByteBuf) {
+        dst.reserve(self.wire_len(src));
+        for chunk in src.chunks(self.block) {
+            encode_block(chunk, dst);
+        }
+    }
+
+    fn decode(&self, src: &[u8], dst: &mut [f32]) -> Result<()> {
+        if src.len() != self.wire_len_for(dst.len()) {
+            bail!(
+                "int8-{} payload is {} bytes, want {} for {} elems",
+                self.block,
+                src.len(),
+                self.wire_len_for(dst.len()),
+                dst.len()
+            );
+        }
+        let mut pos = 0;
+        for chunk in dst.chunks_mut(self.block) {
+            let take = 4 + chunk.len();
+            decode_block(&src[pos..pos + take], chunk)?;
+            pos += take;
+        }
+        Ok(())
+    }
+
+    fn wire_len(&self, src: &[f32]) -> usize {
+        self.wire_len_for(src.len())
+    }
+
+    fn rel_l2_bound(&self) -> f32 {
+        // Mathematical bound sqrt(block)/254 (see module docs), declared as
+        // sqrt(block)/240 to absorb f32 rounding in the two conversions.
+        (self.block as f32).sqrt() / 240.0
+    }
+}
+
+impl Int8Block {
+    fn wire_len_for(&self, n: usize) -> usize {
+        n + 4 * n.div_ceil(self.block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_for_grid_values() {
+        // Values on the quantization grid round-trip exactly: each block's
+        // absmax is 127 * 2^k (scale = 2^k, exactly representable) and every
+        // value is an integer multiple of the scale.
+        let c = Int8Block::new(4);
+        let data = [127.0f32, -127.0, 64.0, 0.0, 254.0, -2.0, 64.0, 2.0];
+        let mut buf = ByteBuf::detached(Vec::new());
+        c.encode(&data, &mut buf);
+        assert_eq!(buf.len(), c.wire_len(&data));
+        let mut out = [0f32; 8];
+        c.decode(&buf, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn zero_and_nonfinite_blocks_flush_to_zero() {
+        let c = Int8Block::new(4);
+        let data = [0.0f32, 0.0, 0.0, 0.0, f32::INFINITY, 1.0, f32::NAN, -1.0];
+        let mut buf = ByteBuf::detached(Vec::new());
+        c.encode(&data, &mut buf);
+        let mut out = [9f32; 8];
+        c.decode(&buf, &mut out).unwrap();
+        assert_eq!(&out[..4], &[0.0; 4]);
+        assert_eq!(&out[4..], &[0.0; 4], "non-finite absmax flushes its block");
+    }
+
+    #[test]
+    fn block_size_is_validated() {
+        let r = std::panic::catch_unwind(|| Int8Block::new(0));
+        assert!(r.is_err());
+        let r = std::panic::catch_unwind(|| Int8Block::new(MAX_BLOCK + 1));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,398 @@
+//! The wire-format subsystem: how link payloads are encoded on the
+//! emulated PCIe links.
+//!
+//! # Layering
+//!
+//! The paper's thesis is that commodity fine-tuning is communication-bound;
+//! LSP shrinks *what* crosses the link (d x d subspace gradients instead of
+//! m x n full gradients).  This subsystem makes *how* it crosses the link a
+//! first-class, per-policy lever: every `OffloadMsg`/`DeltaMsg` payload is
+//! encoded by a `Codec` before entering a link queue and decoded after
+//! leaving it, the links charge the emulated bandwidth with the *encoded*
+//! byte count, and `TrainReport` carries both wire bytes and the
+//! f32-equivalent so the compression ratio is always visible.
+//!
+//! * **Trait** (`Codec`): `encode` appends the wire form of an f32 slice to
+//!   a `ByteBuf` (a pooled byte buffer — see `util::bufpool::PooledBytes`),
+//!   `decode` reconstructs exactly `dst.len()` elements, `wire_len` predicts
+//!   the encoded size without encoding (links and pools size from it), and
+//!   `rel_l2_bound` declares the worst-case relative L2 round-trip error
+//!   (0.0 = lossless) that the property tests hold every implementation to.
+//! * **Implementations**: `F32Raw` (4 B/elem, bit-exact — the oracle and
+//!   the parity path), `Bf16` (2 B/elem, round-to-nearest-even truncation),
+//!   `Int8Block` (1 B/elem + one f32 absmax scale per block, Endor-style
+//!   block quantization), and `SparseIdx` (bitmap or delta-varint index
+//!   coding of the non-zero positions, values in a configurable
+//!   `ValueFormat` — `sparse-int8` is the LSP default, compact indices over
+//!   block-quantized values).
+//! * **Selection**: `TrainConfig::link_codec` (`--link-codec`, JSON
+//!   `link_codec`) overrides; `None` defers to the policy's
+//!   `UpdatePolicy::preferred_codec` (LSP -> `sparse-int8`, Zero -> `bf16`).
+//!   `PipelineCtx::new` resolves the choice once and shares the `Arc<dyn
+//!   Codec>` with the CPU updater thread, so both link endpoints always
+//!   agree on the format.
+//!
+//! # Adding a codec
+//!
+//! Implement `Codec` in `codec/<name>.rs`, add a `CodecKind` variant with
+//! `by_name`/`name`/`est_bytes_per_elem` arms and a `make_codec` arm.  Keep
+//! `wire_len` exact (`codec_wire_len_matches_encode` pins it), declare an
+//! honest `rel_l2_bound` (the round-trip property tests enforce it on
+//! randomized payloads), and keep `encode`/`decode` allocation-free — all
+//! scratch must be stack-resident or come from the caller's buffers, so the
+//! steady-state pool tests stay true.  See ROADMAP.md §Codec for the
+//! accuracy-vs-bytes guidance.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+pub mod bf16;
+pub mod f32raw;
+pub mod int8block;
+pub mod sparseidx;
+
+pub use bf16::Bf16;
+pub use f32raw::F32Raw;
+pub use int8block::Int8Block;
+pub use sparseidx::{SparseIdx, ValueFormat};
+
+/// The byte buffer codecs encode into: a pooled `Vec<u8>` so the encode /
+/// decode hot path allocates nothing in steady state.
+pub type ByteBuf = crate::util::bufpool::PooledBytes;
+
+/// Default quantization block for the int8 codecs (one f32 absmax scale per
+/// `block` elements; 64 keeps the scale overhead at 6% and the worst-case
+/// per-block error bound at sqrt(64)/254 ~ 3.1%).
+pub const DEFAULT_INT8_BLOCK: usize = 64;
+
+/// One wire format for f32 link payloads.
+///
+/// Contract: `decode(encode(x))` reconstructs `x` within `rel_l2_bound()`
+/// relative L2 error (bit-exact when the bound is 0.0), `encode` appends
+/// exactly `wire_len(x)` bytes, and both directions are deterministic —
+/// the two link endpoints run on different threads and must agree
+/// byte-for-byte.
+pub trait Codec: Send + Sync + std::fmt::Debug {
+    /// Stable identifier (config value, report row, bench row).
+    fn name(&self) -> String;
+
+    /// Append the wire form of `src` to `dst`.
+    fn encode(&self, src: &[f32], dst: &mut ByteBuf);
+
+    /// Reconstruct exactly `dst.len()` elements from `src` (every element
+    /// of `dst` is overwritten).  Fails on length/format mismatch.
+    fn decode(&self, src: &[u8], dst: &mut [f32]) -> Result<()>;
+
+    /// Exact number of bytes `encode(src)` would append (data-dependent for
+    /// the sparse codecs).
+    fn wire_len(&self, src: &[f32]) -> usize;
+
+    /// Declared worst-case relative L2 round-trip error for normal-range
+    /// inputs; 0.0 = lossless.
+    fn rel_l2_bound(&self) -> f32;
+}
+
+/// The codec registry: every wire format the config system can name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    /// 4 B/elem, bit-exact (pre-codec behavior; the parity path).
+    F32Raw,
+    /// 2 B/elem, round-to-nearest-even bf16 truncation.
+    Bf16,
+    /// 1 B/elem + 4 B absmax scale per `DEFAULT_INT8_BLOCK` elements.
+    Int8Block,
+    /// Non-zero index coding (bitmap / delta-varint), f32 values — exact.
+    SparseIdx,
+    /// Non-zero index coding over int8-block-quantized values (LSP default).
+    SparseInt8,
+}
+
+impl CodecKind {
+    pub const ALL: [CodecKind; 5] = [
+        CodecKind::F32Raw,
+        CodecKind::Bf16,
+        CodecKind::Int8Block,
+        CodecKind::SparseIdx,
+        CodecKind::SparseInt8,
+    ];
+
+    pub fn by_name(s: &str) -> Option<CodecKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "f32raw" | "raw" => Some(CodecKind::F32Raw),
+            "bf16" => Some(CodecKind::Bf16),
+            "int8" | "int8block" | "int8-block" => Some(CodecKind::Int8Block),
+            "sparse" | "sparseidx" | "sparse-f32" => Some(CodecKind::SparseIdx),
+            "sparse-int8" | "sparse+int8" | "sparseint8" => Some(CodecKind::SparseInt8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecKind::F32Raw => "f32",
+            CodecKind::Bf16 => "bf16",
+            CodecKind::Int8Block => "int8",
+            CodecKind::SparseIdx => "sparse-f32",
+            CodecKind::SparseInt8 => "sparse-int8",
+        }
+    }
+
+    /// Analytic wire bytes per element for a payload whose fraction of
+    /// non-zero elements is `nonzero_frac` — the cost-model's view of the
+    /// codec (sparse estimates assume bitmap index mode and ignore the
+    /// constant header).
+    pub fn est_bytes_per_elem(&self, nonzero_frac: f64) -> f64 {
+        let scale_overhead = 4.0 / DEFAULT_INT8_BLOCK as f64;
+        match self {
+            CodecKind::F32Raw => 4.0,
+            CodecKind::Bf16 => 2.0,
+            CodecKind::Int8Block => 1.0 + scale_overhead,
+            CodecKind::SparseIdx => 0.125 + 4.0 * nonzero_frac,
+            CodecKind::SparseInt8 => 0.125 + (1.0 + scale_overhead) * nonzero_frac,
+        }
+    }
+}
+
+/// Construct the codec object for `kind` — the only codec dispatch;
+/// everything downstream goes through the trait.
+pub fn make_codec(kind: CodecKind) -> Arc<dyn Codec> {
+    match kind {
+        CodecKind::F32Raw => Arc::new(F32Raw),
+        CodecKind::Bf16 => Arc::new(Bf16),
+        CodecKind::Int8Block => Arc::new(Int8Block::new(DEFAULT_INT8_BLOCK)),
+        CodecKind::SparseIdx => Arc::new(SparseIdx::new(ValueFormat::F32)),
+        CodecKind::SparseInt8 => {
+            Arc::new(SparseIdx::new(ValueFormat::Int8 { block: DEFAULT_INT8_BLOCK }))
+        }
+    }
+}
+
+// ---- LEB128 varint helpers (shared by the sparse index coder) -----------
+
+pub(crate) fn varint_len(mut v: u32) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+pub(crate) fn push_varint(dst: &mut ByteBuf, mut v: u32) {
+    while v >= 0x80 {
+        dst.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    dst.push(v as u8);
+}
+
+pub(crate) fn read_varint(src: &[u8], pos: &mut usize) -> Result<u32> {
+    let mut out = 0u32;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = src.get(*pos) else {
+            bail!("varint runs past the end of the payload");
+        };
+        *pos += 1;
+        out |= ((b & 0x7f) as u32) << shift;
+        if b & 0x80 == 0 {
+            return Ok(out);
+        }
+        shift += 7;
+        if shift >= 35 {
+            bail!("varint longer than 5 bytes");
+        }
+    }
+}
+
+pub(crate) fn read_u32(src: &[u8], pos: &mut usize) -> Result<u32> {
+    let Some(b) = src.get(*pos..*pos + 4) else {
+        bail!("u32 runs past the end of the payload");
+    };
+    *pos += 4;
+    Ok(u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+pub(crate) fn read_f32(src: &[u8], pos: &mut usize) -> Result<f32> {
+    Ok(f32::from_bits(read_u32(src, pos)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_payload(r: &mut Rng) -> Vec<f32> {
+        let n = r.below(400);
+        let zero_frac = r.f32();
+        (0..n)
+            .map(|_| if r.f32() < zero_frac { 0.0 } else { r.normal() })
+            .collect()
+    }
+
+    fn encode_detached(c: &dyn Codec, src: &[f32]) -> Vec<u8> {
+        let mut buf = ByteBuf::detached(Vec::new());
+        c.encode(src, &mut buf);
+        buf.into_vec()
+    }
+
+    #[test]
+    fn registry_round_trips_names() {
+        for kind in CodecKind::ALL {
+            assert_eq!(CodecKind::by_name(kind.name()), Some(kind), "{kind:?}");
+            // The object name may carry parameters ("int8-64"), but always
+            // extends the registry name.
+            let codec = make_codec(kind);
+            assert!(
+                codec.name().starts_with(kind.name()),
+                "codec {:?} vs kind {:?}",
+                codec.name(),
+                kind.name()
+            );
+        }
+        assert_eq!(CodecKind::by_name("bogus"), None);
+        assert_eq!(CodecKind::by_name("BF16"), Some(CodecKind::Bf16));
+    }
+
+    #[test]
+    fn est_bytes_per_elem_orders_sensibly() {
+        // Dense payloads: f32 > bf16 > int8; sparse estimates shrink with
+        // density and beat the dense encodings below ~25% non-zeros.
+        assert_eq!(CodecKind::F32Raw.est_bytes_per_elem(1.0), 4.0);
+        assert_eq!(CodecKind::Bf16.est_bytes_per_elem(1.0), 2.0);
+        let int8 = CodecKind::Int8Block.est_bytes_per_elem(1.0);
+        assert!(int8 > 1.0 && int8 < 1.2, "{int8}");
+        let sp_dense = CodecKind::SparseInt8.est_bytes_per_elem(1.0);
+        assert!(sp_dense < 2.0, "dense sparse-int8 still beats bf16: {sp_dense}");
+        let sp_10 = CodecKind::SparseIdx.est_bytes_per_elem(0.1);
+        assert!(sp_10 < 1.0, "10%-dense sparse-f32: {sp_10}");
+    }
+
+    /// Every codec: `wire_len` predicts the encoded size exactly, and
+    /// `decode` reconstructs within the declared relative-L2 bound.
+    #[test]
+    fn codec_wire_len_matches_encode_and_bound_holds() {
+        check(
+            "codec-wire-roundtrip",
+            24,
+            |r| {
+                let kind = CodecKind::ALL[r.below(CodecKind::ALL.len())];
+                (kind, random_payload(r))
+            },
+            |(kind, data)| {
+                let c = make_codec(*kind);
+                let wire = encode_detached(c.as_ref(), data);
+                if wire.len() != c.wire_len(data) {
+                    return Err(format!(
+                        "{}: wire_len {} != encoded {}",
+                        c.name(),
+                        c.wire_len(data),
+                        wire.len()
+                    ));
+                }
+                let mut out = vec![f32::NAN; data.len()];
+                c.decode(&wire, &mut out).map_err(|e| e.to_string())?;
+                let (mut err2, mut ref2) = (0f64, 0f64);
+                for (&a, &b) in data.iter().zip(&out) {
+                    err2 += ((a - b) as f64).powi(2);
+                    ref2 += (a as f64).powi(2);
+                }
+                let rel = if ref2 == 0.0 { err2.sqrt() } else { (err2 / ref2).sqrt() };
+                if rel > c.rel_l2_bound() as f64 {
+                    return Err(format!(
+                        "{}: rel L2 {rel} > declared bound {}",
+                        c.name(),
+                        c.rel_l2_bound()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Lossless codecs: value-exact round-trip (F32Raw additionally
+    /// bit-exact; SparseIdx canonicalizes -0.0 to +0.0).
+    #[test]
+    fn lossless_codecs_round_trip_exactly() {
+        check(
+            "codec-lossless-roundtrip",
+            16,
+            |r| {
+                let kind = if r.below(2) == 0 { CodecKind::F32Raw } else { CodecKind::SparseIdx };
+                (kind, random_payload(r))
+            },
+            |(kind, data)| {
+                let c = make_codec(*kind);
+                assert_eq!(c.rel_l2_bound(), 0.0, "{} claims lossless", c.name());
+                let wire = encode_detached(c.as_ref(), data);
+                let mut out = vec![f32::NAN; data.len()];
+                c.decode(&wire, &mut out).map_err(|e| e.to_string())?;
+                for (i, (&a, &b)) in data.iter().zip(&out).enumerate() {
+                    if a != b {
+                        return Err(format!("{}: elem {i}: {a} != {b}", c.name()));
+                    }
+                }
+                if *kind == CodecKind::F32Raw {
+                    for (&a, &b) in data.iter().zip(&out) {
+                        if a.to_bits() != b.to_bits() {
+                            return Err("f32raw must be bit-exact".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decode_rejects_wrong_lengths() {
+        for kind in CodecKind::ALL {
+            let c = make_codec(kind);
+            let data = [1.0f32, -2.0, 0.0, 3.5];
+            let wire = encode_detached(c.as_ref(), &data);
+            let mut short = vec![0f32; 3];
+            assert!(c.decode(&wire, &mut short).is_err(), "{}: wrong dst len", c.name());
+            if !wire.is_empty() {
+                let mut out = vec![0f32; 4];
+                assert!(
+                    c.decode(&wire[..wire.len() - 1], &mut out).is_err(),
+                    "{}: truncated wire",
+                    c.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn varint_round_trips() {
+        let mut buf = ByteBuf::detached(Vec::new());
+        let vals = [0u32, 1, 127, 128, 300, 16_383, 16_384, u32::MAX];
+        for &v in &vals {
+            assert_eq!(varint_len(v), {
+                let before = buf.len();
+                push_varint(&mut buf, v);
+                buf.len() - before
+            });
+        }
+        let bytes = buf.into_vec();
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_varint(&bytes, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, bytes.len());
+        assert!(read_varint(&bytes, &mut pos).is_err(), "past the end");
+    }
+
+    #[test]
+    fn empty_payloads_are_fine() {
+        for kind in CodecKind::ALL {
+            let c = make_codec(kind);
+            let wire = encode_detached(c.as_ref(), &[]);
+            assert_eq!(wire.len(), c.wire_len(&[]));
+            let mut out: Vec<f32> = vec![];
+            c.decode(&wire, &mut out).unwrap();
+        }
+    }
+}

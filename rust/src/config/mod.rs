@@ -7,9 +7,22 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::policy::PolicyKind;
+use crate::codec::CodecKind;
+use crate::coordinator::policies::PolicyKind;
 use crate::coordinator::trainer::TrainConfig;
 use crate::util::json::Json;
+
+/// Parse a `--link-codec` / `"link_codec"` value: a codec name, or
+/// `auto`/`policy` for the per-policy default (`None`).  Shared by the
+/// train config and the simulator so the flag means the same everywhere.
+pub fn parse_link_codec(s: &str) -> Result<Option<CodecKind>> {
+    match s.to_ascii_lowercase().as_str() {
+        "auto" | "policy" | "default" => Ok(None),
+        other => CodecKind::by_name(other)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("unknown link codec {other:?}")),
+    }
+}
 
 /// `--key value` / `--flag` parser. Positional args are kept in order.
 #[derive(Debug, Default)]
@@ -100,6 +113,9 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
             "kernel_block_m" => cfg.kernel.block_m = v.as_usize()?,
             "kernel_block_n" => cfg.kernel.block_n = v.as_usize()?,
             "kernel_block_k" => cfg.kernel.block_k = v.as_usize()?,
+            // Link wire format (codec::CodecKind); "auto" defers to the
+            // policy's preferred codec, "f32" pins the bit-exact path.
+            "link_codec" => cfg.link_codec = parse_link_codec(v.as_str()?)?,
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -178,6 +194,9 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     if let Some(v) = args.get_u64("kernel-block-k")? {
         cfg.kernel.block_k = v as usize;
     }
+    if let Some(v) = args.get("link-codec") {
+        cfg.link_codec = parse_link_codec(v)?;
+    }
     Ok(cfg)
 }
 
@@ -227,6 +246,28 @@ mod tests {
         apply_json(&mut cfg, &j).unwrap();
         assert_eq!(cfg.kernel.threads, 3);
         assert_eq!(cfg.kernel.block_n, 64);
+    }
+
+    #[test]
+    fn link_codec_flag_and_json() {
+        // Default: defer to the policy's preferred codec.
+        assert_eq!(train_config_from(&argv("train")).unwrap().link_codec, None);
+
+        let cfg = train_config_from(&argv("train --link-codec bf16")).unwrap();
+        assert_eq!(cfg.link_codec, Some(CodecKind::Bf16));
+        let cfg = train_config_from(&argv("train --link-codec=f32")).unwrap();
+        assert_eq!(cfg.link_codec, Some(CodecKind::F32Raw));
+        let cfg = train_config_from(&argv("train --link-codec auto")).unwrap();
+        assert_eq!(cfg.link_codec, None);
+        assert!(train_config_from(&argv("train --link-codec gzip")).is_err());
+
+        let j = Json::parse(r#"{"link_codec": "sparse-int8"}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.link_codec, Some(CodecKind::SparseInt8));
+        let j = Json::parse(r#"{"link_codec": "policy"}"#).unwrap();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.link_codec, None);
     }
 
     #[test]

@@ -1,12 +1,18 @@
 //! Inter-domain communication: blocking priority queues and
 //! bandwidth-throttled link threads that emulate the two PCIe directions.
+//!
+//! Payloads cross the links *encoded*: a `WirePayload` holds the codec
+//! output (`PooledBytes`) plus the decoded element count, the link charges
+//! its emulated bandwidth with the encoded byte count, and both endpoints
+//! share the pipeline's negotiated `Codec` (see `codec` module docs).
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::util::bufpool::PooledBuf;
+use crate::codec::Codec;
+use crate::util::bufpool::{BufPool, PooledBytes};
 
 /// A parameter (or subspace) identified by its flat index in the
 /// `ParamStore`, plus the LSP kind when the payload is a subspace gradient.
@@ -17,24 +23,69 @@ pub struct ParamKey {
     pub kind: Option<String>,
 }
 
-/// Gradient heading CPU-ward (GPU -> CPU direction).  The payload is a
-/// pooled handle: links forward the message as-is (zero-copy), and the
-/// consumer's drop returns the buffer to the pipeline's `BufPool`.
+/// An encoded f32 payload as it crosses a link: codec output bytes (pooled
+/// — the consumer's drop returns the storage) plus the element count the
+/// decoder must reconstruct.  Links forward it as-is (zero-copy).
+#[derive(Debug)]
+pub struct WirePayload {
+    pub bytes: PooledBytes,
+    /// Decoded f32 element count.
+    pub elems: usize,
+}
+
+impl WirePayload {
+    /// Encode `data` into a pool-backed payload (the pipeline hot path).
+    /// The capacity hint is the raw f32 size — a cheap near-upper bound for
+    /// every codec (only dense `sparse-f32` exceeds it, by n/8 + 9, for one
+    /// warmup realloc) that avoids `wire_len`'s extra payload scan; the
+    /// encoder reserves its exact size anyway, and shelf capacities
+    /// converge after warmup.
+    pub fn from_pool(codec: &dyn Codec, pool: &BufPool, data: &[f32]) -> WirePayload {
+        let mut bytes = pool.take_bytes(data.len() * 4);
+        codec.encode(data, &mut bytes);
+        WirePayload { bytes, elems: data.len() }
+    }
+
+    /// Encode `data` into a pool-less payload (tests, non-pipeline callers).
+    pub fn detached(codec: &dyn Codec, data: &[f32]) -> WirePayload {
+        let mut bytes = PooledBytes::detached(Vec::with_capacity(codec.wire_len(data)));
+        codec.encode(data, &mut bytes);
+        WirePayload { bytes, elems: data.len() }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Encoded size — what the link charges against its bandwidth.
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// What the same payload would cost un-encoded (4 B/elem f32) — the
+    /// baseline for the compression-ratio accounting.
+    pub fn raw_bytes(&self) -> usize {
+        self.elems * 4
+    }
+}
+
+/// Gradient heading CPU-ward (GPU -> CPU direction), already encoded by the
+/// pipeline's codec.
 #[derive(Debug)]
 pub struct OffloadMsg {
     pub key: ParamKey,
-    pub data: PooledBuf,
+    pub data: WirePayload,
     pub prio: i64,
     /// Training step that produced this gradient (for logging).
     pub step: u64,
 }
 
-/// Update delta heading GPU-ward (CPU -> GPU direction); payload pooled
+/// Update delta heading GPU-ward (CPU -> GPU direction); payload encoded
 /// like `OffloadMsg`.
 #[derive(Debug)]
 pub struct DeltaMsg {
     pub key: ParamKey,
-    pub delta: PooledBuf,
+    pub delta: WirePayload,
     pub prio: i64,
     pub step: u64,
 }
@@ -136,13 +187,18 @@ impl<T> PrioQueue<T> {
 }
 
 /// A bandwidth-throttled unidirectional link: a worker thread pops from the
-/// ingress queue, sleeps `bytes / bandwidth * time_scale`, then forwards to
-/// the egress queue.  Counts bytes and busy time for the breakdown report.
+/// ingress queue, sleeps `wire_bytes / bandwidth * time_scale`, then
+/// forwards to the egress queue.  Counts wire bytes, f32-equivalent bytes
+/// and busy time for the breakdown report.
 pub struct Link {
     pub name: &'static str,
     pub bytes_per_s: f64,
     pub time_scale: f64,
+    /// Encoded (wire) bytes moved — what the bandwidth emulation charges.
     pub bytes_moved: Arc<AtomicU64>,
+    /// f32-equivalent bytes moved — what F32Raw would have charged; the
+    /// compression-ratio baseline.
+    pub raw_bytes_moved: Arc<AtomicU64>,
     pub busy_ns: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -150,7 +206,7 @@ pub struct Link {
 
 impl Link {
     /// Spawn a link moving `M` messages from `ingress` to `egress`.
-    /// `size_of` maps a message to its wire size in bytes.
+    /// `size_of` maps a message to `(wire_bytes, raw_f32_bytes)`.
     pub fn spawn<M, F>(
         name: &'static str,
         bytes_per_s: f64,
@@ -162,12 +218,14 @@ impl Link {
     ) -> Link
     where
         M: Send + 'static,
-        F: Fn(&M) -> usize + Send + 'static,
+        F: Fn(&M) -> (usize, usize) + Send + 'static,
     {
         let bytes_moved = Arc::new(AtomicU64::new(0));
+        let raw_bytes_moved = Arc::new(AtomicU64::new(0));
         let busy_ns = Arc::new(AtomicU64::new(0));
         let stop = Arc::new(AtomicBool::new(false));
-        let (bm, bn, st) = (bytes_moved.clone(), busy_ns.clone(), stop.clone());
+        let (bm, rm, bn, st) =
+            (bytes_moved.clone(), raw_bytes_moved.clone(), busy_ns.clone(), stop.clone());
         let handle = std::thread::Builder::new()
             .name(format!("link-{name}"))
             .spawn(move || {
@@ -175,13 +233,14 @@ impl Link {
                     if st.load(Ordering::Relaxed) {
                         break;
                     }
-                    let bytes = size_of(&msg);
+                    let (bytes, raw) = size_of(&msg);
                     let secs = bytes as f64 / bytes_per_s * time_scale;
                     let t0 = std::time::Instant::now();
                     if secs > 0.0 {
                         std::thread::sleep(Duration::from_secs_f64(secs));
                     }
                     bm.fetch_add(bytes as u64, Ordering::Relaxed);
+                    rm.fetch_add(raw as u64, Ordering::Relaxed);
                     bn.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let p = prio_of(&msg);
                     egress.push(p, msg);
@@ -193,6 +252,7 @@ impl Link {
             bytes_per_s,
             time_scale,
             bytes_moved,
+            raw_bytes_moved,
             busy_ns,
             stop,
             handle: Some(handle),
@@ -253,14 +313,15 @@ mod tests {
     fn link_throttles_and_counts() {
         let ingress = Arc::new(PrioQueue::<Vec<u8>>::new());
         let egress = Arc::new(PrioQueue::<Vec<u8>>::new());
-        // 1 MB/s: a 10 KB message should take ~10 ms.
+        // 1 MB/s: a 10 KB message should take ~10 ms.  The link charges the
+        // *wire* size; the raw (f32-equivalent) size feeds the ratio.
         let mut link = Link::spawn(
             "test",
             1e6,
             1.0,
             ingress.clone(),
             egress.clone(),
-            |m: &Vec<u8>| m.len(),
+            |m: &Vec<u8>| (m.len(), m.len() * 4),
             |_| 0,
         );
         let t0 = std::time::Instant::now();
@@ -270,8 +331,33 @@ mod tests {
         assert_eq!(got.len(), 10_000);
         assert!(dt >= 0.009, "transfer too fast: {dt}");
         assert_eq!(link.bytes_moved.load(Ordering::Relaxed), 10_000);
+        assert_eq!(link.raw_bytes_moved.load(Ordering::Relaxed), 40_000);
         assert!(link.busy_secs() >= 0.009);
         ingress.close();
         link.stop();
+    }
+
+    #[test]
+    fn wire_payload_encodes_and_accounts() {
+        use crate::codec::{make_codec, CodecKind};
+
+        let data = [1.0f32, -2.0, 0.0, 3.5];
+        let raw = WirePayload::detached(make_codec(CodecKind::F32Raw).as_ref(), &data);
+        assert_eq!(raw.elems, 4);
+        assert_eq!(raw.wire_bytes(), 16);
+        assert_eq!(raw.raw_bytes(), 16);
+
+        let bf = WirePayload::detached(make_codec(CodecKind::Bf16).as_ref(), &data);
+        assert_eq!(bf.wire_bytes(), 8);
+        assert_eq!(bf.raw_bytes(), 16, "raw baseline is codec-independent");
+
+        // Pool-backed payloads recycle their byte storage on drop.
+        let pool = BufPool::new();
+        let codec = make_codec(CodecKind::Bf16);
+        drop(WirePayload::from_pool(codec.as_ref(), &pool, &data));
+        assert_eq!(pool.stats().byte_misses, 1);
+        drop(WirePayload::from_pool(codec.as_ref(), &pool, &data));
+        let s = pool.stats();
+        assert_eq!((s.byte_hits, s.byte_misses), (1, 1));
     }
 }

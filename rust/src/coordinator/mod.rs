@@ -18,12 +18,16 @@
 //! * **Pipeline substrate** (`pipeline::PipelineCtx`) — everything policies
 //!   share: engine handle, host parameter mirror + device buffers, the
 //!   priority queues and link/updater threads, the payload `BufPool`, the
-//!   pending-delta set, metrics, the *per-instance* negotiated
-//!   `KernelConfig`, and the training RNG.
+//!   negotiated wire `Codec`, the pending-delta set, metrics, the
+//!   *per-instance* negotiated `KernelConfig`, and the training RNG.
 //!
-//! Link payloads are pooled (`util::bufpool`): messages carry `PooledBuf`
-//! handles that return their storage to the shared pool on drop, so the
-//! steady-state link hot path allocates no new payload buffers.
+//! Link payloads are pooled (`util::bufpool`) *and encoded* (`codec`):
+//! every message carries a `WirePayload` — codec output in a `PooledBytes`
+//! handle that returns its storage to the shared pool on drop — so the
+//! steady-state link hot path allocates no new payload buffers, and the
+//! emulated bandwidth is charged with true wire bytes (bf16 / block-int8 /
+//! sparse-index encodings cross the link smaller than f32; the per-policy
+//! defaults and the `--link-codec` override live in `codec`).
 //!
 //! # Thread topology
 //!
@@ -32,40 +36,38 @@
 //!
 //! ```text
 //!   driver thread (GPU domain: PJRT fwd/bwd/compress/apply, data, control)
-//!        | OffloadMsg (grad / subspace grad)        ^ DeltaMsg
-//!        v                                          |
-//!   [D2H link thread] --> [CPU update thread] --> [H2D link thread]
-//!     token-bucket          fused Adam over         token-bucket
-//!     bandwidth             per-key AdamState       bandwidth
+//!        | OffloadMsg (encoded grad / subspace grad)  ^ DeltaMsg (encoded)
+//!        v                                            |
+//!   [D2H link thread] --> [CPU update thread] -->  [H2D link thread]
+//!     token-bucket          decode -> fused Adam     token-bucket
+//!     bandwidth             -> encode delta          bandwidth
 //! ```
 //!
 //! Every queue is a priority queue, so the paper's FCFS -> LCFS transition
 //! (Alg. 3) is a matter of the priorities the scheduler assigns.  The link
-//! threads sleep `bytes / bandwidth * time_scale`, emulating the PCIe
+//! threads sleep `wire_bytes / bandwidth * time_scale`, emulating the PCIe
 //! budget of the simulated testbed on top of real compute.
 //!
 //! # Adding a policy
 //!
 //! Create `policies/<name>.rs` implementing `UpdatePolicy` over
-//! `PipelineCtx`, add a `PolicyKind` variant (`policy.rs`) and a
-//! constructor arm in `policies::make_policy` — the step driver, links,
-//! updater, pooling and per-layer events come for free.  See ROADMAP.md
-//! §Coordinator.
+//! `PipelineCtx`, then add the `PolicyKind` variant and a constructor arm
+//! in `policies::make_policy` (both live in `policies/mod.rs`) — the step
+//! driver, links, updater, codec-encoded pooled payloads and per-layer
+//! events come for free.  See ROADMAP.md §Coordinator.
 
 pub mod comm;
 pub mod metrics;
 pub mod pipeline;
 pub mod policies;
-pub mod policy;
 pub mod projector_mgr;
 pub mod report;
 pub mod trainer;
 pub mod worker;
 
-pub use comm::{DeltaMsg, Link, OffloadMsg, PrioQueue};
+pub use comm::{DeltaMsg, Link, OffloadMsg, PrioQueue, WirePayload};
 pub use metrics::Metrics;
 pub use pipeline::{PipelineCtx, TrainConfig};
-pub use policies::{make_policy, UpdatePolicy};
-pub use policy::{Policy, PolicyKind};
+pub use policies::{make_policy, Policy, PolicyKind, UpdatePolicy};
 pub use report::TrainReport;
 pub use trainer::Trainer;

@@ -21,9 +21,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 use xla::PjRtBuffer;
 
-use crate::coordinator::comm::{DeltaMsg, Link, OffloadMsg, ParamKey, PrioQueue};
+use crate::codec::{make_codec, Codec, CodecKind};
+use crate::coordinator::comm::{DeltaMsg, Link, OffloadMsg, ParamKey, PrioQueue, WirePayload};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::policy::PolicyKind;
+use crate::coordinator::policies::{make_policy, PolicyKind};
 use crate::coordinator::worker::{CpuUpdater, SharedStates};
 use crate::model::ParamStore;
 use crate::runtime::Engine;
@@ -71,6 +72,11 @@ pub struct TrainConfig {
     /// `PipelineCtx::new` subtracts and keeps on the context — nothing is
     /// installed process-wide, so trainers with different configs coexist.
     pub kernel: KernelConfig,
+    /// Wire format for the link payloads (`--link-codec`, JSON
+    /// `link_codec`).  `None` defers to the policy's preferred codec
+    /// (`UpdatePolicy::preferred_codec`: LSP -> sparse-int8, Zero -> bf16);
+    /// `Some(CodecKind::F32Raw)` pins the bit-exact pre-codec path.
+    pub link_codec: Option<CodecKind>,
 }
 
 impl Default for TrainConfig {
@@ -97,6 +103,7 @@ impl Default for TrainConfig {
             glue_task: false,
             max_wall_secs: 0.0,
             kernel: KernelConfig::default(),
+            link_codec: None,
         }
     }
 }
@@ -110,8 +117,11 @@ pub struct PipelineCtx<'e> {
     /// Device-resident parameter buffers, indexed like `params.tensors`.
     pub bufs: Vec<PjRtBuffer>,
     pub metrics: Metrics,
-    /// Recycling pool backing every link payload.
+    /// Recycling pool backing every link payload (f32 and encoded bytes).
     pub pool: BufPool,
+    /// Negotiated wire codec, shared with the CPU updater so both link
+    /// endpoints always agree on the format (identity via `codec.name()`).
+    pub codec: Arc<dyn Codec>,
     pub rng: Rng,
     /// Keys with an offloaded gradient still in flight (its delta has not
     /// been applied yet).
@@ -136,6 +146,15 @@ impl<'e> PipelineCtx<'e> {
         let reserved = if cfg.policy.offloads() { 3 } else { 0 };
         let kernel = cfg.kernel.negotiated(reserved);
 
+        // Codec negotiation: an explicit config choice wins; otherwise the
+        // policy declares its preferred wire format (a throwaway policy
+        // object — construction is trivially cheap).  Resolved once, here,
+        // because the updater thread must share the exact same codec.
+        let codec_kind = cfg
+            .link_codec
+            .unwrap_or_else(|| make_policy(cfg.policy).preferred_codec());
+        let codec: Arc<dyn Codec> = make_codec(codec_kind);
+
         let rng = Rng::new(cfg.seed);
         let params = ParamStore::init(&eng.man, cfg.seed ^ 0xA5A5)?;
         let bufs = params
@@ -156,7 +175,7 @@ impl<'e> PipelineCtx<'e> {
                 cfg.time_scale,
                 d2h_in.clone(),
                 d2h_out.clone(),
-                |m: &OffloadMsg| m.data.len() * 4,
+                |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
                 |m| m.prio,
             );
             let h2d = Link::spawn(
@@ -165,7 +184,7 @@ impl<'e> PipelineCtx<'e> {
                 cfg.time_scale,
                 h2d_in.clone(),
                 delta_out.clone(),
-                |m: &DeltaMsg| m.delta.len() * 4,
+                |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
                 |m| m.prio,
             );
             // The updater owns ONE of the reserved schedule threads.
@@ -184,6 +203,7 @@ impl<'e> PipelineCtx<'e> {
                 cfg.cpu_scale,
                 pool.clone(),
                 upd_kernel,
+                codec.clone(),
             );
             (Some((d2h, h2d)), Some(upd))
         } else {
@@ -198,6 +218,7 @@ impl<'e> PipelineCtx<'e> {
             bufs,
             metrics: Metrics::default(),
             pool,
+            codec,
             rng,
             pending: HashSet::new(),
             d2h_in,
@@ -230,10 +251,22 @@ impl<'e> PipelineCtx<'e> {
         self.upload_param(idx)
     }
 
-    /// Mark `key` in flight and enqueue its gradient on the D2H link.
+    /// Mark `key` in flight and enqueue its gradient on the D2H link.  The
+    /// f32 payload is encoded with the pipeline codec here — the drop of
+    /// `data` returns its storage to the pool, where it typically serves as
+    /// the decode buffer for a returning delta.
     pub fn push_offload(&mut self, key: ParamKey, data: PooledBuf, prio: i64, step: u64) {
+        let payload = WirePayload::from_pool(self.codec.as_ref(), &self.pool, &data);
+        drop(data);
         self.pending.insert(key.clone());
-        self.d2h_in.push(prio, OffloadMsg { key, data, prio, step });
+        self.d2h_in.push(prio, OffloadMsg { key, data: payload, prio, step });
+    }
+
+    /// Decode a link payload into a pooled f32 buffer.
+    pub fn decode_payload(&self, payload: &WirePayload) -> Result<PooledBuf> {
+        let mut out = self.pool.take_raw(payload.elems);
+        self.codec.decode(payload.as_bytes(), &mut out)?;
+        Ok(out)
     }
 
     /// Flat indices of the head/embedding params ("layer -1").

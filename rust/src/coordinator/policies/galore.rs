@@ -8,11 +8,10 @@ use anyhow::Result;
 
 use crate::baselines::GaloreState;
 use crate::coordinator::pipeline::PipelineCtx;
-use crate::coordinator::policy::PolicyKind;
 use crate::optim::AdamState;
 use crate::tensor::Tensor;
 
-use super::{host_adam_step, UpdatePolicy};
+use super::{host_adam_step, PolicyKind, UpdatePolicy};
 
 #[derive(Default)]
 pub struct GalorePolicy {

@@ -8,10 +8,9 @@ use anyhow::Result;
 
 use crate::baselines::LoraState;
 use crate::coordinator::pipeline::PipelineCtx;
-use crate::coordinator::policy::PolicyKind;
 use crate::tensor::Tensor;
 
-use super::UpdatePolicy;
+use super::{PolicyKind, UpdatePolicy};
 
 #[derive(Default)]
 pub struct LoraPolicy {

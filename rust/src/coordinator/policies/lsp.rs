@@ -14,14 +14,14 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 use xla::PjRtBuffer;
 
+use crate::codec::CodecKind;
 use crate::coordinator::comm::{DeltaMsg, ParamKey};
 use crate::coordinator::pipeline::PipelineCtx;
-use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::projector_mgr::ProjState;
 use crate::coordinator::report::TrainReport;
 use crate::tensor::Tensor;
 
-use super::UpdatePolicy;
+use super::{PolicyKind, UpdatePolicy};
 
 #[derive(Default)]
 pub struct LspPolicy {
@@ -89,6 +89,13 @@ impl UpdatePolicy for LspPolicy {
         PolicyKind::Lsp
     }
 
+    /// Subspace gradients are the product of sparse-projection machinery;
+    /// ship them as compact non-zero indices over block-int8 values — on a
+    /// dense d x d payload this is still ~30% of the f32 bytes.
+    fn preferred_codec(&self) -> CodecKind {
+        CodecKind::SparseInt8
+    }
+
     fn init(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
         let eng = ctx.eng;
         let man = &eng.man;
@@ -124,6 +131,8 @@ impl UpdatePolicy for LspPolicy {
 
     fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
         let idx = msg.key.param_index;
+        // Wire form -> pooled f32 buffer (the handle recycles on drop).
+        let delta = ctx.decode_payload(&msg.delta)?;
         if let Some(kind) = &msg.key.kind {
             // Subspace delta: decompress-apply on the GPU (L1 kernel).
             let eng = ctx.eng;
@@ -133,7 +142,7 @@ impl UpdatePolicy for LspPolicy {
                 .with_context(|| format!("no projector for param {idx}"))?;
             let meta = &st.meta;
             let e = eng.exec(&format!("apply_{kind}"))?;
-            let ds = eng.upload_f32(&[meta.d, meta.d], &msg.delta)?;
+            let ds = eng.upload_f32(&[meta.d, meta.d], &delta)?;
             let lr_buf = eng.upload_f32(&[1, 1], &[ctx.cfg.lr])?;
             let args: Vec<&PjRtBuffer> = vec![
                 &ctx.bufs[idx],
@@ -148,7 +157,7 @@ impl UpdatePolicy for LspPolicy {
             ctx.bufs[idx] = new_w;
         } else {
             // Full-parameter delta: host-mirror apply + re-upload.
-            ctx.apply_host_step(idx, &msg.delta)?;
+            ctx.apply_host_step(idx, &delta)?;
         }
         ctx.pending.remove(&msg.key);
         Ok(())

@@ -1,4 +1,5 @@
-//! The update-policy subsystem: one trait, five implementations.
+//! The update-policy subsystem: one registry enum, one trait, five
+//! implementations.
 //!
 //! The step driver (`coordinator::trainer`) is policy-agnostic — it runs
 //! fwd/head/bwd and hands every materialized gradient to
@@ -6,21 +7,22 @@
 //! `UpdatePolicy::apply_delta`.  Each policy module owns its own state
 //! (`ProjState`, `LoraState`, `GaloreState`, host `AdamState` maps) and
 //! operates through the shared `PipelineCtx` (engine, params/buffers,
-//! queues, pool, metrics, per-instance kernel config, RNG).
+//! queues, pool, wire codec, metrics, per-instance kernel config, RNG).
 //!
 //! Adding a schedule or policy is therefore a one-module change: implement
-//! `UpdatePolicy`, register the constructor in `make_policy`, and the
-//! pipeline (links, CPU updater, pooled payloads, per-layer events) comes
-//! for free.  See ROADMAP.md §Coordinator.
+//! `UpdatePolicy`, add the `PolicyKind` variant and a constructor arm in
+//! `make_policy` (both in this file), and the pipeline (links, CPU updater,
+//! pooled + codec-encoded payloads, per-layer events) comes for free.  See
+//! ROADMAP.md §Coordinator.
 
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::codec::CodecKind;
 use crate::coordinator::comm::{DeltaMsg, ParamKey};
 use crate::coordinator::pipeline::PipelineCtx;
-use crate::coordinator::policy::PolicyKind;
 use crate::coordinator::report::TrainReport;
 use crate::optim::AdamState;
 use crate::tensor::Tensor;
@@ -37,6 +39,59 @@ pub use lsp::LspPolicy;
 pub use native::NativePolicy;
 pub use zero::ZeroPolicy;
 
+/// Update policies the trainer can run.  `Lsp` is the paper's system; the
+/// rest are the evaluation baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Everything "on device": host-side Adam applied immediately, no
+    /// throttled links (the no-offload upper bound of Fig. 6).
+    Native,
+    /// Zero-Offload (Alg. 2): full gradients cross the link, fused CPU Adam,
+    /// deltas return, barrier at end of step.
+    Zero,
+    /// LSP-Offload (Alg. 1 + Alg. 3): learned sparse projectors compress
+    /// gradients on the GPU, layer-wise pipelined offload/update/upload with
+    /// per-layer events gating the next iteration's forward.
+    Lsp,
+    /// LoRA adapters (PEFT baseline): rank-r A/B per matrix, trained
+    /// "on device", base weights frozen.
+    Lora,
+    /// GaLore (PEFT baseline): periodic SVD projector, rank-r subspace Adam
+    /// "on device".
+    Galore,
+}
+
+impl PolicyKind {
+    pub fn by_name(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(PolicyKind::Native),
+            "zero" | "zero-offload" => Some(PolicyKind::Zero),
+            "lsp" | "lsp-offload" => Some(PolicyKind::Lsp),
+            "lora" => Some(PolicyKind::Lora),
+            "galore" => Some(PolicyKind::Galore),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Native => "native",
+            PolicyKind::Zero => "zero",
+            PolicyKind::Lsp => "lsp",
+            PolicyKind::Lora => "lora",
+            PolicyKind::Galore => "galore",
+        }
+    }
+
+    /// Does this policy ship work through the throttled links?
+    pub fn offloads(&self) -> bool {
+        matches!(self, PolicyKind::Zero | PolicyKind::Lsp)
+    }
+}
+
+/// Re-export for trainer convenience.
+pub use PolicyKind as Policy;
+
 /// One update policy: how a materialized gradient becomes a weight update.
 ///
 /// Lifecycle per trainer: `init` once after the pipeline is up, then per
@@ -45,6 +100,15 @@ pub use zero::ZeroPolicy;
 /// `end_of_step`.  `report_extras` lets a policy annotate the final report.
 pub trait UpdatePolicy {
     fn kind(&self) -> PolicyKind;
+
+    /// The wire format this policy's link payloads default to when the
+    /// config does not pin one (`TrainConfig::link_codec = None`).  LSP
+    /// prefers sparse index coding over block-int8 values; Zero prefers
+    /// bf16; the non-offloading policies keep the bit-exact f32 path (moot
+    /// — they never touch the links).
+    fn preferred_codec(&self) -> CodecKind {
+        CodecKind::F32Raw
+    }
 
     /// Build per-parameter state (projectors, adapters, ...).
     fn init(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
@@ -145,6 +209,15 @@ mod tests {
     use super::*;
 
     #[test]
+    fn parse_names() {
+        assert_eq!(PolicyKind::by_name("LSP"), Some(PolicyKind::Lsp));
+        assert_eq!(PolicyKind::by_name("zero-offload"), Some(PolicyKind::Zero));
+        assert_eq!(PolicyKind::by_name("bogus"), None);
+        assert!(PolicyKind::Zero.offloads());
+        assert!(!PolicyKind::Lora.offloads());
+    }
+
+    #[test]
     fn registry_covers_every_policy_kind() {
         // Constructor/kind agreement, plus the offload flag each policy's
         // pipeline wiring assumes.  (The default apply_delta bail for
@@ -165,6 +238,18 @@ mod tests {
                 matches!(kind, PolicyKind::Zero | PolicyKind::Lsp),
                 "offload wiring flag for {kind:?}"
             );
+        }
+    }
+
+    #[test]
+    fn preferred_codecs_match_the_issue_contract() {
+        // LSP ships compact indices over block-quantized values; Zero ships
+        // bf16 full gradients; non-offloading policies keep the bit-exact
+        // default (they never use it).
+        assert_eq!(make_policy(PolicyKind::Lsp).preferred_codec(), CodecKind::SparseInt8);
+        assert_eq!(make_policy(PolicyKind::Zero).preferred_codec(), CodecKind::Bf16);
+        for kind in [PolicyKind::Native, PolicyKind::Lora, PolicyKind::Galore] {
+            assert_eq!(make_policy(kind).preferred_codec(), CodecKind::F32Raw, "{kind:?}");
         }
     }
 }

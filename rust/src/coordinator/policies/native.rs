@@ -7,11 +7,10 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::coordinator::pipeline::PipelineCtx;
-use crate::coordinator::policy::PolicyKind;
 use crate::optim::AdamState;
 use crate::tensor::Tensor;
 
-use super::{host_adam_step, UpdatePolicy};
+use super::{host_adam_step, PolicyKind, UpdatePolicy};
 
 #[derive(Default)]
 pub struct NativePolicy {

@@ -1,6 +1,7 @@
-//! End-of-run training report: throughput, comm volume, stall/busy
-//! breakdown, plus policy-specific extras filled in via
-//! `UpdatePolicy::report_extras`.
+//! End-of-run training report: throughput, comm volume (true wire bytes
+//! plus the f32-equivalent baseline, so the link codec's compression ratio
+//! is always visible), stall/busy breakdown, plus policy-specific extras
+//! filled in via `UpdatePolicy::report_extras`.
 
 #[derive(Debug)]
 pub struct TrainReport {
@@ -10,8 +11,16 @@ pub struct TrainReport {
     pub final_train_loss: f32,
     pub final_eval_loss: Option<f32>,
     pub tokens_per_s: f64,
-    pub d2h_bytes: u64,
-    pub h2d_bytes: u64,
+    /// Wire codec the link payloads crossed in (`codec::Codec::name`).
+    pub link_codec: String,
+    /// Encoded bytes GPU -> CPU (the d2h link's `bytes_moved`).
+    pub bytes_up: u64,
+    /// Encoded bytes CPU -> GPU (the h2d link's `bytes_moved`).
+    pub bytes_down: u64,
+    /// f32-equivalent (4 B/elem) bytes for the same payloads — what
+    /// `F32Raw` would have moved; the compression-ratio baseline.
+    pub raw_bytes_up: u64,
+    pub raw_bytes_down: u64,
     pub stall_secs: f64,
     pub cpu_busy_secs: f64,
     pub link_busy_secs: (f64, f64),
@@ -24,6 +33,17 @@ pub struct TrainReport {
 }
 
 impl TrainReport {
+    /// f32-equivalent bytes / wire bytes over both directions (1.0 when
+    /// nothing moved or the codec is `f32`).
+    pub fn compression_ratio(&self) -> f64 {
+        let wire = self.bytes_up + self.bytes_down;
+        if wire == 0 {
+            1.0
+        } else {
+            (self.raw_bytes_up + self.raw_bytes_down) as f64 / wire as f64
+        }
+    }
+
     pub fn print(&self) {
         println!("==== train report: {} ====", self.policy);
         println!(
@@ -38,9 +58,15 @@ impl TrainReport {
             self.final_eval_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into())
         );
         println!(
-            "offload traffic: d2h {} h2d {}  link busy {:.2}s/{:.2}s  cpu busy {:.2}s  stall {:.2}s  pool hits {:.0}%",
-            crate::util::human_bytes(self.d2h_bytes),
-            crate::util::human_bytes(self.h2d_bytes),
+            "offload traffic [codec {}]: up {} down {} (f32-equiv {}, {:.2}x smaller)",
+            self.link_codec,
+            crate::util::human_bytes(self.bytes_up),
+            crate::util::human_bytes(self.bytes_down),
+            crate::util::human_bytes(self.raw_bytes_up + self.raw_bytes_down),
+            self.compression_ratio(),
+        );
+        println!(
+            "link busy {:.2}s/{:.2}s  cpu busy {:.2}s  stall {:.2}s  pool hits {:.0}%",
             self.link_busy_secs.0,
             self.link_busy_secs.1,
             self.cpu_busy_secs,
@@ -50,5 +76,45 @@ impl TrainReport {
         if self.projector_refreshes > 0 {
             println!("projector refreshes (sum tau): {}", self.projector_refreshes);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blank() -> TrainReport {
+        TrainReport {
+            policy: "zero",
+            steps: 1,
+            wall_secs: 1.0,
+            final_train_loss: 0.0,
+            final_eval_loss: None,
+            tokens_per_s: 0.0,
+            link_codec: "bf16".into(),
+            bytes_up: 0,
+            bytes_down: 0,
+            raw_bytes_up: 0,
+            raw_bytes_down: 0,
+            stall_secs: 0.0,
+            cpu_busy_secs: 0.0,
+            link_busy_secs: (0.0, 0.0),
+            projector_refreshes: 0,
+            pool_hit_rate: 0.0,
+            loss_curve: vec![],
+            eval_curve: vec![],
+            wall_curve: vec![],
+        }
+    }
+
+    #[test]
+    fn compression_ratio_is_raw_over_wire() {
+        let mut r = blank();
+        assert_eq!(r.compression_ratio(), 1.0, "no traffic -> neutral ratio");
+        r.bytes_up = 500;
+        r.bytes_down = 500;
+        r.raw_bytes_up = 2000;
+        r.raw_bytes_down = 2000;
+        assert!((r.compression_ratio() - 4.0).abs() < 1e-12);
     }
 }

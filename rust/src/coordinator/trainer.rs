@@ -11,9 +11,9 @@
 //! head:     loss, d_h, head grads = head_loss_bwd     [GPU/PJRT]
 //! bwd l:    d_h, G_l = block_bwd(h_l, W_l, d_h)       [GPU/PJRT]
 //!           S_l = compress_<kind>(G_l, P, Q)          [GPU/PJRT, L1 kernel]
-//!           d2h.push(S_l, prio)                       [link thread]
-//!             -> cpu adam (fused, rust)               [worker thread]
-//!             -> h2d.push(delta, prio)                [link thread]
+//!           d2h.push(encode(S_l), prio)               [link thread, codec]
+//!             -> decode, cpu adam, encode delta       [worker thread]
+//!             -> h2d.push(delta_wire, prio)           [link thread]
 //! ```
 //!
 //! Deltas drain at the *next* iteration's `e_l`, so communication and CPU
@@ -346,13 +346,16 @@ impl<'e> Trainer<'e> {
         let wall = self.t0.elapsed().as_secs_f64();
         let c = &self.ctx.eng.man.config;
         let tokens = steps_done as f64 * (c.batch * c.seq) as f64;
-        let (d2h_bytes, h2d_bytes, link_busy) = match &self.ctx.links {
+        use std::sync::atomic::Ordering::Relaxed;
+        let (bytes_up, bytes_down, raw_up, raw_down, link_busy) = match &self.ctx.links {
             Some((d2h, h2d)) => (
-                d2h.bytes_moved.load(std::sync::atomic::Ordering::Relaxed),
-                h2d.bytes_moved.load(std::sync::atomic::Ordering::Relaxed),
+                d2h.bytes_moved.load(Relaxed),
+                h2d.bytes_moved.load(Relaxed),
+                d2h.raw_bytes_moved.load(Relaxed),
+                h2d.raw_bytes_moved.load(Relaxed),
                 (d2h.busy_secs(), h2d.busy_secs()),
             ),
-            None => (0, 0, (0.0, 0.0)),
+            None => (0, 0, 0, 0, (0.0, 0.0)),
         };
         let metrics = &self.ctx.metrics;
         let mut report = TrainReport {
@@ -362,8 +365,11 @@ impl<'e> Trainer<'e> {
             final_train_loss: metrics.rolling_loss(10).unwrap_or(f32::NAN),
             final_eval_loss: metrics.eval_loss.last().map(|&(_, l)| l),
             tokens_per_s: tokens / wall,
-            d2h_bytes,
-            h2d_bytes,
+            link_codec: self.ctx.codec.name(),
+            bytes_up,
+            bytes_down,
+            raw_bytes_up: raw_up,
+            raw_bytes_down: raw_down,
             stall_secs: metrics.phases.get("stall_e").map(|s| s.total()).unwrap_or(0.0)
                 + metrics.phases.get("barrier").map(|s| s.total()).unwrap_or(0.0),
             cpu_busy_secs: self.ctx.updater.as_ref().map(|u| u.busy_secs()).unwrap_or(0.0),

@@ -1,23 +1,28 @@
 //! CPU-side update server: the offload target.
 //!
 //! One thread owning all CPU-resident Adam state (the 42 GB that does not
-//! fit on the paper's GPUs).  Pops gradients off the D2H egress queue in
-//! priority order, runs the fused Adam (rust-native — the analogue of
-//! Zero-Offload's fused SIMD CPU Adam, fanned across the kernel pool for
-//! large payloads via `fused_step_with`), and pushes the unscaled delta into
-//! the H2D ingress queue.  An optional `compute_scale` sleep emulates a
-//! slower CPU than the host machine (for schedule studies).
+//! fit on the paper's GPUs).  Pops encoded gradients off the D2H egress
+//! queue in priority order, decodes them with the pipeline's shared wire
+//! codec, runs the fused Adam (rust-native — the analogue of Zero-Offload's
+//! fused SIMD CPU Adam, fanned across the kernel pool for large payloads
+//! via `fused_step_with`), encodes the unscaled delta with the same codec
+//! and pushes it into the H2D ingress queue.  An optional `compute_scale`
+//! sleep emulates a slower CPU than the host machine (for schedule
+//! studies).
 //!
-//! Payload buffers are pooled: the delta is taken from the shared `BufPool`,
-//! and the consumed gradient handle drops back into it, so in steady state
-//! (`pooled_payloads_recycle_without_new_allocations`) the updater performs
-//! zero payload allocations per message.
+//! Payload buffers are pooled on both sides: the decode/delta f32 buffers
+//! come from the shared `BufPool`, the consumed gradient's *byte* buffer
+//! drops back before the delta is encoded (so it usually becomes the
+//! delta's wire buffer), and every handle is released before the egress
+//! push — in steady state the updater performs zero payload allocations
+//! per message (`pooled_payloads_recycle_without_new_allocations`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::comm::{DeltaMsg, OffloadMsg, ParamKey, PrioQueue};
+use crate::codec::Codec;
+use crate::coordinator::comm::{DeltaMsg, OffloadMsg, ParamKey, PrioQueue, WirePayload};
 use crate::optim::AdamState;
 use crate::tensor::kernel::KernelConfig;
 use crate::util::bufpool::BufPool;
@@ -40,6 +45,7 @@ impl CpuUpdater {
         compute_scale: f64,
         pool: BufPool,
         kernel: KernelConfig,
+        codec: Arc<dyn Codec>,
     ) -> CpuUpdater {
         let states: SharedStates = Arc::new(Mutex::new(HashMap::new()));
         let busy_ns = Arc::new(AtomicU64::new(0));
@@ -51,18 +57,26 @@ impl CpuUpdater {
                 while let Some(msg) = ingress.pop() {
                     let t0 = std::time::Instant::now();
                     let OffloadMsg { key, data, prio, step } = msg;
-                    let mut delta = pool.take_raw(data.len());
+                    let n = data.elems;
+                    let mut g = pool.take_raw(n);
+                    codec
+                        .decode(data.as_bytes(), &mut g)
+                        .expect("link endpoints share the codec; decode cannot fail");
+                    // Return the gradient's byte buffer to the pool before
+                    // encoding the delta so it can serve as that wire
+                    // buffer.
+                    drop(data);
+                    let mut delta = pool.take_raw(n);
                     {
                         let mut states = st.lock().unwrap();
-                        let state = states
-                            .entry(key.clone())
-                            .or_insert_with(|| AdamState::new(data.len()));
-                        debug_assert_eq!(state.m.len(), data.len());
-                        state.fused_step_with(&data, &mut delta, &kernel);
+                        let state =
+                            states.entry(key.clone()).or_insert_with(|| AdamState::new(n));
+                        debug_assert_eq!(state.m.len(), n);
+                        state.fused_step_with(&g, &mut delta, &kernel);
                     }
-                    // Return the gradient buffer to the pool before the
-                    // next pop so it can serve as that message's delta.
-                    drop(data);
+                    drop(g);
+                    let wire = WirePayload::from_pool(codec.as_ref(), &pool, &delta);
+                    drop(delta);
                     let elapsed = t0.elapsed();
                     if compute_scale > 1.0 {
                         std::thread::sleep(elapsed.mul_f64(compute_scale - 1.0));
@@ -72,7 +86,7 @@ impl CpuUpdater {
                         Ordering::Relaxed,
                     );
                     ud.fetch_add(1, Ordering::Relaxed);
-                    egress.push(prio, DeltaMsg { key, delta, prio, step });
+                    egress.push(prio, DeltaMsg { key, delta: wire, prio, step });
                 }
             })
             .expect("spawn cpu-updater");
@@ -93,12 +107,39 @@ impl CpuUpdater {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::{make_codec, CodecKind};
+
+    fn f32_codec() -> Arc<dyn Codec> {
+        make_codec(CodecKind::F32Raw)
+    }
 
     fn spawn_plain(
         ingress: Arc<PrioQueue<OffloadMsg>>,
         egress: Arc<PrioQueue<DeltaMsg>>,
     ) -> CpuUpdater {
-        CpuUpdater::spawn(ingress, egress, 1.0, BufPool::new(), KernelConfig::single_threaded())
+        CpuUpdater::spawn(
+            ingress,
+            egress,
+            1.0,
+            BufPool::new(),
+            KernelConfig::single_threaded(),
+            f32_codec(),
+        )
+    }
+
+    fn msg(key: &ParamKey, data: &[f32], step: u64) -> OffloadMsg {
+        OffloadMsg {
+            key: key.clone(),
+            data: WirePayload::detached(f32_codec().as_ref(), data),
+            prio: 0,
+            step,
+        }
+    }
+
+    fn decode_delta(d: &DeltaMsg) -> Vec<f32> {
+        let mut out = vec![0f32; d.delta.elems];
+        f32_codec().decode(d.delta.as_bytes(), &mut out).unwrap();
+        out
     }
 
     #[test]
@@ -108,23 +149,18 @@ mod tests {
         let mut upd = spawn_plain(ingress.clone(), egress.clone());
 
         let key = ParamKey { param_index: 3, kind: None };
-        ingress.push(
-            0,
-            OffloadMsg { key: key.clone(), data: vec![0.5, -0.5].into(), prio: 0, step: 1 },
-        );
+        ingress.push(0, msg(&key, &[0.5, -0.5], 1));
         let d1 = egress.pop().unwrap();
         assert_eq!(d1.key, key);
         // First Adam step = sign(g).
-        assert!((d1.delta[0] - 1.0).abs() < 1e-4);
-        assert!((d1.delta[1] + 1.0).abs() < 1e-4);
+        let v1 = decode_delta(&d1);
+        assert!((v1[0] - 1.0).abs() < 1e-4);
+        assert!((v1[1] + 1.0).abs() < 1e-4);
 
         // Second step reuses the same state (step count advances).
-        ingress.push(
-            0,
-            OffloadMsg { key: key.clone(), data: vec![0.5, -0.5].into(), prio: 0, step: 2 },
-        );
+        ingress.push(0, msg(&key, &[0.5, -0.5], 2));
         let d2 = egress.pop().unwrap();
-        assert!(d2.delta[0] > 0.9, "second step keeps direction");
+        assert!(decode_delta(&d2)[0] > 0.9, "second step keeps direction");
         assert_eq!(upd.updates_done.load(Ordering::Relaxed), 2);
         assert_eq!(upd.states.lock().unwrap().get(&key).unwrap().step, 2);
 
@@ -139,11 +175,8 @@ mod tests {
         let mut upd = spawn_plain(ingress.clone(), egress.clone());
         let k1 = ParamKey { param_index: 0, kind: None };
         let k2 = ParamKey { param_index: 0, kind: Some("qkv".into()) };
-        ingress.push(0, OffloadMsg { key: k1.clone(), data: vec![1.0].into(), prio: 0, step: 1 });
-        ingress.push(
-            0,
-            OffloadMsg { key: k2.clone(), data: vec![1.0, 2.0].into(), prio: 0, step: 1 },
-        );
+        ingress.push(0, msg(&k1, &[1.0], 1));
+        ingress.push(0, msg(&k2, &[1.0, 2.0], 1));
         let _ = egress.pop().unwrap();
         let _ = egress.pop().unwrap();
         let states = upd.states.lock().unwrap();
@@ -155,16 +188,67 @@ mod tests {
         upd.join();
     }
 
+    /// The updater must consume the wire format the pipeline negotiated —
+    /// here bf16 — and its Adam must see the *decoded* (lossy) gradient:
+    /// the received delta equals a reference Adam fed the bf16 round-trip
+    /// of the gradient, re-encoded and decoded, bit for bit.
+    #[test]
+    fn updater_honors_a_lossy_codec() {
+        let codec = make_codec(CodecKind::Bf16);
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::new());
+        let mut upd = CpuUpdater::spawn(
+            ingress.clone(),
+            egress.clone(),
+            1.0,
+            BufPool::new(),
+            KernelConfig::single_threaded(),
+            codec.clone(),
+        );
+        let key = ParamKey { param_index: 7, kind: None };
+        let g = [0.333f32, -1.777, 0.0081, 2.5];
+        let mut reference = AdamState::new(g.len());
+        for step in 1..=3u64 {
+            ingress.push(
+                0,
+                OffloadMsg {
+                    key: key.clone(),
+                    data: WirePayload::detached(codec.as_ref(), &g),
+                    prio: 0,
+                    step,
+                },
+            );
+            let d = egress.pop().unwrap();
+            let mut got = vec![0f32; d.delta.elems];
+            codec.decode(d.delta.as_bytes(), &mut got).unwrap();
+
+            // Reference: bf16 round-trip the gradient, plain Adam, then the
+            // delta's own bf16 round-trip.
+            let wire = WirePayload::detached(codec.as_ref(), &g);
+            let mut g_rt = vec![0f32; g.len()];
+            codec.decode(wire.as_bytes(), &mut g_rt).unwrap();
+            let mut want = vec![0f32; g.len()];
+            reference.fused_step(&g_rt, &mut want);
+            let wire = WirePayload::detached(codec.as_ref(), &want);
+            let mut want_rt = vec![0f32; want.len()];
+            codec.decode(wire.as_bytes(), &mut want_rt).unwrap();
+            assert_eq!(got, want_rt, "step {step}");
+        }
+        ingress.close();
+        upd.join();
+    }
+
     /// The steady-state recycling property the bufpool exists for: after
-    /// one warmup round-trip, every pool take (gradient here, delta in the
-    /// updater) is served from the shelf — misses stay flat while hits
-    /// grow, and the shelf never exceeds the working set.  (In the real
-    /// trainer the driver-side gradient is *adopted* from the PJRT download
-    /// rather than taken, so this pins the updater/delta side plus the
-    /// recycling loop itself; see `util::bufpool` docs.)
+    /// one warmup round-trip, every pool take — f32 decode/delta buffers
+    /// *and* encoded byte buffers — is served from a shelf: misses stay
+    /// flat while hits grow, and the shelves never exceed the working set.
+    /// Handoffs are strictly serialized (each push is answered by a
+    /// blocking pop, and the updater releases every handle before its
+    /// egress push), so the counters are deterministic.
     #[test]
     fn pooled_payloads_recycle_without_new_allocations() {
         let pool = BufPool::new();
+        let codec = make_codec(CodecKind::Bf16);
         let ingress = Arc::new(PrioQueue::new());
         let egress = Arc::new(PrioQueue::new());
         let mut upd = CpuUpdater::spawn(
@@ -173,27 +257,40 @@ mod tests {
             1.0,
             pool.clone(),
             KernelConfig::single_threaded(),
+            codec.clone(),
         );
         let key = ParamKey { param_index: 0, kind: None };
         let rounds = 16u64;
         let len = 1024usize;
         for step in 0..rounds {
-            // Driver side: the gradient payload comes from the pool too
-            // (mirrors the trainer adopting/reusing download buffers).
+            // Driver side: gradient from the pool, encoded into a pooled
+            // byte buffer (mirrors PipelineCtx::push_offload).
             let mut g = pool.take_raw(len);
             g.fill(0.25);
-            ingress.push(0, OffloadMsg { key: key.clone(), data: g, prio: 0, step });
+            let wire = WirePayload::from_pool(codec.as_ref(), &pool, &g);
+            drop(g);
+            ingress.push(0, OffloadMsg { key: key.clone(), data: wire, prio: 0, step });
             let d = egress.pop().unwrap();
-            assert_eq!(d.delta.len(), len);
-            drop(d); // delta handle returns to the pool (the "apply" site)
+            assert_eq!(d.delta.elems, len);
+            // Driver-side apply: decode into a pooled buffer, then both
+            // handles drop back.
+            let mut out = pool.take_raw(len);
+            codec.decode(d.delta.as_bytes(), &mut out).unwrap();
+            drop(d);
+            drop(out);
         }
         let s = pool.stats();
-        // Warmup allocates exactly two buffers (one gradient, one delta);
-        // every later take is a hit.
-        assert_eq!(s.misses, 2, "steady state must not allocate: {s:?}");
-        assert_eq!(s.hits, 2 * rounds - 2, "{s:?}");
+        // Warmup allocates exactly two f32 buffers (driver gradient +
+        // updater delta; the decode/apply takes are served by their drops)
+        // and one byte buffer (the gradient's wire buffer returns in time
+        // to carry the delta).
+        assert_eq!(s.misses, 2, "f32 steady state must not allocate: {s:?}");
+        assert_eq!(s.hits, 4 * rounds - 2, "{s:?}");
+        assert_eq!(s.byte_misses, 1, "byte steady state must not allocate: {s:?}");
+        assert_eq!(s.byte_hits, 2 * rounds - 1, "{s:?}");
         assert!(s.hit_rate() > 0.9, "{s:?}");
-        assert!(s.shelved <= 2, "working set must stay bounded: {s:?}");
+        assert!(s.shelved <= 3, "f32 working set must stay bounded: {s:?}");
+        assert!(s.byte_shelved <= 2, "byte working set must stay bounded: {s:?}");
         ingress.close();
         upd.join();
     }

@@ -25,9 +25,13 @@
 //! helper.  The host hot path (matmul family, sparse compress/decompress)
 //! runs on the blocked multi-threaded kernel substrate in `tensor::kernel`
 //! / `tensor::pool`, configured via `KernelConfig` (see ROADMAP.md §Perf).
+//! Link payloads cross the emulated PCIe links in a pluggable wire format
+//! (`codec`: f32 / bf16 / block-int8 / sparse index coding), selected per
+//! policy or via `--link-codec` (see ROADMAP.md §Codec).
 
 pub mod analyze;
 pub mod baselines;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;

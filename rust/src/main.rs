@@ -6,10 +6,14 @@
 //! lsp-offload simulate  [--schedule all|zero|lsp-layerwise|...]
 //!                       [--profile ...] [--model llama7b|gpt2-1.3b]
 //!                       [--tokens N] [--d-sub N] [--iters N]
-//!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a).
+//!                       [--link-codec f32|bf16|int8|sparse-int8]
+//!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a);
+//!     `--link-codec` prices transfers at the encoded payload size.
 //! lsp-offload train     [--preset tiny|small|mid] [--policy lsp|zero|...]
 //!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
-//!     Real training over the PJRT artifacts with throttled links.
+//!                       [--link-codec f32|bf16|int8|sparse|sparse-int8|auto]
+//!     Real training over the PJRT artifacts with throttled links; link
+//!     payloads cross in the chosen wire format (`auto` = policy default).
 //! lsp-offload bias      [--preset tiny|small] [--calib N] [--val N]
 //!     Estimation-bias study: learned sparse vs random vs GaLore SVD
 //!     (Figs 7b/9).
@@ -89,12 +93,21 @@ fn cmd_analyze(args: &CliArgs) -> Result<()> {
 }
 
 fn cmd_simulate(args: &CliArgs) -> Result<()> {
-    let (hw, w) = workload(args)?;
+    let (hw, mut w) = workload(args)?;
+    if let Some(name) = args.get("link-codec") {
+        // Same parser as the train config: `auto` = native pricing.
+        w.link_codec = lsp_offload::config::parse_link_codec(name)?;
+    }
     let iters = args.get_u64("iters")?.unwrap_or(4) as usize;
     let which = args.get("schedule").unwrap_or("all");
     println!(
-        "simulating {} on {} (tokens={}, d={}, {} iters)",
-        w.name, hw.name, w.tokens, w.d_sub, iters
+        "simulating {} on {} (tokens={}, d={}, codec={}, {} iters)",
+        w.name,
+        hw.name,
+        w.tokens,
+        w.d_sub,
+        w.link_codec.map(|c| c.name()).unwrap_or("native"),
+        iters
     );
     let kinds: Vec<ScheduleKind> = if which == "all" {
         ScheduleKind::ALL.to_vec()

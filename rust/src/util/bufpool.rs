@@ -1,15 +1,16 @@
-//! Recycling f32 buffer pool for the offload link payloads.
+//! Recycling buffer pool for the offload link payloads — f32 scratch
+//! (`PooledBuf`) and encoded wire bytes (`PooledBytes`).
 //!
 //! Every `OffloadMsg`/`DeltaMsg` crossing the emulated PCIe links carries a
-//! `PooledBuf`: a `Vec<f32>` that returns itself to its pool when dropped.
-//! The CPU updater *takes* its delta buffers from the pool, and both the
-//! driver's apply sites (delta handles) and the updater's consumed gradient
-//! handles drop their storage back — so after one warmup round-trip per
-//! payload size the updater/delta side of the link path performs zero new
+//! `WirePayload` whose `PooledBytes` returns itself to its pool when
+//! dropped; the f32 side (`PooledBuf`) backs the encode sources and decode
+//! targets around the links.  The CPU updater *takes* its decode/delta
+//! buffers from the pool and drops every consumed handle back — so after
+//! one warmup round-trip per payload size the link path performs zero new
 //! allocations (see the steady-state test in `coordinator::worker`).
-//! Driver-side gradient payloads are *adopted*: their storage is allocated
-//! by the PJRT download (`to_vec` at the device boundary — not avoidable
-//! from here) and joins the pool afterwards, feeding the delta supply
+//! Driver-side gradient downloads are *adopted*: their storage is allocated
+//! by the PJRT `to_vec` at the device boundary (not avoidable from here)
+//! and joins the pool after encoding, feeding the decode-buffer supply
 //! instead of churning the allocator; the old second allocation per message
 //! (`vec![0.0; n]` for every delta) is gone entirely.
 //!
@@ -19,6 +20,14 @@
 //! without bound.  The pool is `Clone` (shared handle) and all operations
 //! are `&self`, so one pool serves the driver thread and the pipeline
 //! threads concurrently.
+//!
+//! The byte side (`PooledBytes`, `take_bytes`) backs the `codec` subsystem:
+//! encoded wire payloads vary in length (sparse/varint codecs are
+//! data-dependent), so byte buffers live on a single capacity-agnostic LIFO
+//! shelf instead of exact-length classes.  `take_bytes(cap)` clears the
+//! recycled buffer and reserves `cap`; capacities converge to the largest
+//! payload after warmup, after which encode/decode allocates nothing (see
+//! the steady-state tests in `coordinator::worker` and `tests/codec_wire`).
 
 use std::collections::HashMap;
 use std::fmt;
@@ -31,11 +40,16 @@ pub const DEFAULT_MAX_PER_CLASS: usize = 64;
 
 struct Inner {
     shelves: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    byte_shelf: Mutex<Vec<Vec<u8>>>,
     max_per_class: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     recycled: AtomicU64,
     discarded: AtomicU64,
+    byte_hits: AtomicU64,
+    byte_misses: AtomicU64,
+    byte_recycled: AtomicU64,
+    byte_discarded: AtomicU64,
 }
 
 impl Inner {
@@ -50,6 +64,19 @@ impl Inner {
             self.recycled.fetch_add(1, Ordering::Relaxed);
         } else {
             self.discarded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn put_bytes(&self, v: Vec<u8>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut shelf = self.byte_shelf.lock().unwrap();
+        if shelf.len() < self.max_per_class {
+            shelf.push(v);
+            self.byte_recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.byte_discarded.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -75,11 +102,16 @@ impl BufPool {
         BufPool {
             inner: Arc::new(Inner {
                 shelves: Mutex::new(HashMap::new()),
+                byte_shelf: Mutex::new(Vec::new()),
                 max_per_class,
                 hits: AtomicU64::new(0),
                 misses: AtomicU64::new(0),
                 recycled: AtomicU64::new(0),
                 discarded: AtomicU64::new(0),
+                byte_hits: AtomicU64::new(0),
+                byte_misses: AtomicU64::new(0),
+                byte_recycled: AtomicU64::new(0),
+                byte_discarded: AtomicU64::new(0),
             }),
         }
     }
@@ -121,20 +153,50 @@ impl BufPool {
         PooledBuf { data: v, pool: Some(self.inner.clone()) }
     }
 
+    /// An empty byte buffer with capacity >= `cap`, recycled from the byte
+    /// shelf when possible.  Byte buffers are shelved capacity-agnostically
+    /// (encoded payload lengths are data-dependent); a recycled buffer that
+    /// is too small grows in place and keeps the larger capacity on its
+    /// next round-trip, so capacities converge after warmup.
+    pub fn take_bytes(&self, cap: usize) -> PooledBytes {
+        let recycled = self.inner.byte_shelf.lock().unwrap().pop();
+        let mut data = match recycled {
+            Some(v) => {
+                self.inner.byte_hits.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                self.inner.byte_misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(cap)
+            }
+        };
+        data.clear();
+        data.reserve(cap);
+        PooledBytes { data, pool: Some(self.inner.clone()) }
+    }
+
     pub fn stats(&self) -> PoolStats {
         let shelved = self.inner.shelves.lock().unwrap().values().map(|s| s.len()).sum();
+        let byte_shelved = self.inner.byte_shelf.lock().unwrap().len();
         PoolStats {
             hits: self.inner.hits.load(Ordering::Relaxed),
             misses: self.inner.misses.load(Ordering::Relaxed),
             recycled: self.inner.recycled.load(Ordering::Relaxed),
             discarded: self.inner.discarded.load(Ordering::Relaxed),
             shelved,
+            byte_hits: self.inner.byte_hits.load(Ordering::Relaxed),
+            byte_misses: self.inner.byte_misses.load(Ordering::Relaxed),
+            byte_recycled: self.inner.byte_recycled.load(Ordering::Relaxed),
+            byte_discarded: self.inner.byte_discarded.load(Ordering::Relaxed),
+            byte_shelved,
         }
     }
 }
 
 /// Counters for the recycling behavior (`hits` = takes served from the
-/// shelf; steady state is misses flat, hits growing).
+/// shelf; steady state is misses flat, hits growing).  The `byte_*` family
+/// tracks the encoded-payload (`PooledBytes`) side separately so the codec
+/// steady-state tests can pin it without f32 traffic in the way.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolStats {
     pub hits: u64,
@@ -142,16 +204,23 @@ pub struct PoolStats {
     pub recycled: u64,
     pub discarded: u64,
     pub shelved: usize,
+    pub byte_hits: u64,
+    pub byte_misses: u64,
+    pub byte_recycled: u64,
+    pub byte_discarded: u64,
+    pub byte_shelved: usize,
 }
 
 impl PoolStats {
-    /// Fraction of takes served from the shelf.
+    /// Fraction of takes (f32 and byte buffers combined) served from a
+    /// shelf.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let hits = self.hits + self.byte_hits;
+        let total = hits + self.misses + self.byte_misses;
         if total == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            hits as f64 / total as f64
         }
     }
 }
@@ -218,6 +287,88 @@ impl Drop for PooledBuf {
     fn drop(&mut self) {
         if let Some(pool) = self.pool.take() {
             pool.put(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+/// A byte buffer that returns itself to its `BufPool` on drop — the
+/// `PooledBuf` sibling carrying *encoded* link payloads (see `codec`).
+/// Derefs to `[u8]` for reading; writers use the append API (`push`,
+/// `extend_from_slice`), which is all a streaming encoder needs.
+pub struct PooledBytes {
+    data: Vec<u8>,
+    pool: Option<Arc<Inner>>,
+}
+
+impl PooledBytes {
+    /// A pool-less buffer (drops like a plain `Vec`); lets tests, benches
+    /// and non-pipeline callers encode without a pool.
+    pub fn detached(v: Vec<u8>) -> PooledBytes {
+        PooledBytes { data: v, pool: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    pub fn push(&mut self, b: u8) {
+        self.data.push(b);
+    }
+
+    pub fn extend_from_slice(&mut self, s: &[u8]) {
+        self.data.extend_from_slice(s);
+    }
+
+    pub fn reserve(&mut self, additional: usize) {
+        self.data.reserve(additional);
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Extract the underlying `Vec` without returning it to the pool.
+    pub fn into_vec(mut self) -> Vec<u8> {
+        self.pool = None;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl From<Vec<u8>> for PooledBytes {
+    fn from(v: Vec<u8>) -> PooledBytes {
+        PooledBytes::detached(v)
+    }
+}
+
+impl Deref for PooledBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+impl fmt::Debug for PooledBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PooledBytes[{}]", self.data.len())
+    }
+}
+
+impl Drop for PooledBytes {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put_bytes(std::mem::take(&mut self.data));
         }
     }
 }
@@ -293,5 +444,59 @@ mod tests {
 
         let msg: PooledBuf = vec![5.0f32].into();
         assert_eq!(msg.as_slice(), &[5.0]);
+    }
+
+    #[test]
+    fn byte_buffers_recycle_capacity_agnostically() {
+        let pool = BufPool::new();
+        let mut a = pool.take_bytes(16);
+        a.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(a.as_slice(), &[1, 2, 3]);
+        assert!(a.capacity() >= 16);
+        drop(a);
+        let s = pool.stats();
+        assert_eq!((s.byte_hits, s.byte_misses, s.byte_recycled), (0, 1, 1));
+        assert_eq!(s.byte_shelved, 1);
+
+        // Recycled take comes back cleared, even for a different size.
+        let b = pool.take_bytes(4);
+        assert!(b.is_empty(), "recycled byte buffer must be cleared");
+        assert!(b.capacity() >= 16, "capacity survives the round-trip");
+        assert_eq!(pool.stats().byte_hits, 1);
+        drop(b);
+
+        // A larger request grows the same recycled buffer in place.
+        let c = pool.take_bytes(64);
+        assert!(c.capacity() >= 64);
+        assert_eq!(pool.stats().byte_misses, 1, "growth is not a miss");
+    }
+
+    #[test]
+    fn byte_shelf_respects_cap_and_detached() {
+        let pool = BufPool::with_max_per_class(1);
+        let a = pool.take_bytes(8);
+        let b = pool.take_bytes(8);
+        drop(a);
+        drop(b);
+        let s = pool.stats();
+        assert_eq!((s.byte_recycled, s.byte_discarded, s.byte_shelved), (1, 1, 1));
+
+        drop(PooledBytes::detached(vec![9u8; 4]));
+        assert_eq!(pool.stats().byte_shelved, 1, "detached buffers never shelve");
+
+        let v = pool.take_bytes(2).into_vec();
+        assert_eq!(pool.stats().byte_shelved, 0, "into_vec removes it for good");
+        drop(v);
+        assert_eq!(pool.stats().byte_shelved, 0);
+    }
+
+    #[test]
+    fn combined_hit_rate_covers_both_sides() {
+        let pool = BufPool::new();
+        drop(pool.take(4)); // f32 miss
+        drop(pool.take_bytes(4)); // byte miss
+        let _a = pool.take(4); // f32 hit
+        let _b = pool.take_bytes(4); // byte hit
+        assert!((pool.stats().hit_rate() - 0.5).abs() < 1e-9);
     }
 }

@@ -23,11 +23,19 @@
 //! 3. **Determinism** — same seed, same trajectory, for every policy.
 //!
 //! Like the other runtime tests these need `make artifacts` and skip
-//! gracefully without it.
+//! gracefully without it (set `LSP_REQUIRE_ARTIFACTS=1` to turn the skip
+//! into a failure — e.g. in a CI lane that has artifacts).
+//!
+//! Codec interaction: the fixture/bit-parity layers pin
+//! `link_codec = F32Raw`, the bit-exact wire format, so they keep guarding
+//! the *plumbing*.  The lossy policy-default codecs (LSP -> sparse-int8,
+//! Zero -> bf16) are bounded separately:
+//! `default_codecs_halve_wire_bytes_within_loss_budget` requires <= 50% of
+//! the f32 wire bytes at <= 5% relative per-step loss deviation.
 
 use std::path::PathBuf;
 
-use lsp_offload::coordinator::policy::PolicyKind;
+use lsp_offload::coordinator::policies::PolicyKind;
 use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
 use lsp_offload::model::manifest::find_artifacts;
 use lsp_offload::runtime::Engine;
@@ -54,6 +62,9 @@ fn with_engine(f: impl FnOnce(&Engine)) {
         });
         match eng {
             Some(e) => f(e),
+            None if std::env::var("LSP_REQUIRE_ARTIFACTS").as_deref() == Ok("1") => {
+                panic!("LSP_REQUIRE_ARTIFACTS=1 but tiny artifacts not found; run `make artifacts`")
+            }
             None => eprintln!("SKIP: tiny artifacts not found; run `make artifacts`"),
         }
     });
@@ -70,6 +81,10 @@ fn parity_config(policy: PolicyKind) -> TrainConfig {
         eval_every: 0,
         log_every: 0,
         seed: 20_240_101,
+        // Bit-exact wire format: fixtures and Native==Zero equality pin the
+        // plumbing; the lossy policy-default codecs are bounded separately
+        // below.
+        link_codec: Some(lsp_offload::codec::CodecKind::F32Raw),
         ..TrainConfig::default()
     }
 }
@@ -167,13 +182,65 @@ fn offload_runs_recycle_link_payloads() {
         for policy in [PolicyKind::Zero, PolicyKind::Lsp] {
             let mut tr = Trainer::new(eng, parity_config(policy)).unwrap();
             let rep = tr.train().unwrap();
-            assert!(rep.d2h_bytes > 0, "{policy:?} moved no gradients");
+            assert!(rep.bytes_up > 0, "{policy:?} moved no gradients");
             assert!(
                 rep.pool_hit_rate > 0.0,
                 "{policy:?}: payload pool never recycled (hit rate {})",
                 rep.pool_hit_rate
             );
             assert!(tr.ctx().pending.is_empty(), "{policy:?} left deltas in flight");
+        }
+    });
+}
+
+/// The codec acceptance criterion: with the policy-default wire formats
+/// (LSP -> sparse-int8, Zero -> bf16), total wire bytes must be at most
+/// 50% of the same config under `F32Raw`, while the fixed-seed loss
+/// trajectory stays within 5% relative of the f32 run — accuracy traded
+/// against simulated wall-clock, bounded.
+#[test]
+fn default_codecs_halve_wire_bytes_within_loss_budget() {
+    with_engine(|eng| {
+        for policy in [PolicyKind::Zero, PolicyKind::Lsp] {
+            let f32_run = {
+                let mut tr = Trainer::new(eng, parity_config(policy)).unwrap();
+                tr.train().unwrap()
+            };
+            let coded_run = {
+                let mut cfg = parity_config(policy);
+                cfg.link_codec = None; // policy default
+                let mut tr = Trainer::new(eng, cfg).unwrap();
+                tr.train().unwrap()
+            };
+            assert_eq!(f32_run.link_codec, "f32");
+            assert_ne!(coded_run.link_codec, "f32", "{policy:?} default must be lossy");
+
+            let f32_wire = f32_run.bytes_up + f32_run.bytes_down;
+            let coded_wire = coded_run.bytes_up + coded_run.bytes_down;
+            assert!(coded_wire > 0 && f32_wire > 0, "{policy:?} moved nothing");
+            assert!(
+                coded_wire * 2 <= f32_wire,
+                "{policy:?} [{}]: wire {coded_wire} > 50% of f32 {f32_wire}",
+                coded_run.link_codec
+            );
+            // The f32-equivalent element volume is identical either way.
+            assert_eq!(
+                coded_run.raw_bytes_up + coded_run.raw_bytes_down,
+                f32_run.raw_bytes_up + f32_run.raw_bytes_down,
+                "{policy:?}: codec changed what was sent, not just how"
+            );
+
+            for (step, ((_, f), (_, c))) in
+                f32_run.loss_curve.iter().zip(&coded_run.loss_curve).enumerate()
+            {
+                let rel = (f - c).abs() / f.abs().max(1e-6);
+                assert!(
+                    rel <= 0.05,
+                    "{policy:?} [{}] step {step}: loss {c} vs f32 {f} ({:.2}% off)",
+                    coded_run.link_codec,
+                    rel * 100.0
+                );
+            }
         }
     });
 }

@@ -162,7 +162,7 @@ fn pipeline_delivers_exactly_once() {
                 1.0,
                 ingress.clone(),
                 egress.clone(),
-                |m: &(u64, Vec<u8>)| m.1.len(),
+                |m: &(u64, Vec<u8>)| (m.1.len(), m.1.len()),
                 |_| 0,
             );
             for i in 0..n_msgs {

@@ -13,8 +13,11 @@
 #   * Perf: scripts/bench_compare.py fails the run when any (name, shape,
 #     impl) row shared between the smoke output and the committed
 #     BENCH_hotpath.json regressed by more than BENCH_GATE_PCT (default
-#     25%).  Dormant until a full bench has recorded the trajectory on this
-#     machine; BENCH_SKIP_GATE=1 skips it explicitly.
+#     25%).  The row set includes the wire-codec encode/decode throughputs
+#     (codec_encode/codec_decode per format — the link hot path), so codec
+#     regressions trip the same gate.  Dormant until a full bench has
+#     recorded the trajectory on this machine; BENCH_SKIP_GATE=1 skips it
+#     explicitly.
 #   * Lint: `cargo fmt --check` and `cargo clippy --all-targets -- -D
 #     warnings`.  Failures are fatal with CHECK_STRICT=1 and loud warnings
 #     otherwise (escape hatch until the tree is verified lint-clean on a
