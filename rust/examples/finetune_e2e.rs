@@ -36,7 +36,16 @@ fn main() -> Result<()> {
     );
 
     let mut rows = Vec::new();
-    for policy in [PolicyKind::Lsp, PolicyKind::Zero, PolicyKind::Lora, PolicyKind::Galore] {
+    // LSP first, Zero second (the summary's headline ratio indexes them);
+    // async-lsp rides along last to show the stall-free schedule's stall
+    // and staleness counters on the same workload.
+    for policy in [
+        PolicyKind::Lsp,
+        PolicyKind::Zero,
+        PolicyKind::Lora,
+        PolicyKind::Galore,
+        PolicyKind::AsyncLsp,
+    ] {
         let cfg = TrainConfig {
             policy,
             steps,

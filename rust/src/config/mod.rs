@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::codec::CodecKind;
+use crate::coordinator::comm::LinkClockMode;
 use crate::coordinator::policies::PolicyKind;
 use crate::coordinator::trainer::TrainConfig;
 use crate::util::json::Json;
@@ -116,6 +117,21 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
             // Link wire format (codec::CodecKind); "auto" defers to the
             // policy's preferred codec, "f32" pins the bit-exact path.
             "link_codec" => cfg.link_codec = parse_link_codec(v.as_str()?)?,
+            // Link clock: real | virtual | auto (auto = LSP_LINK_CLOCK env).
+            "link_clock" => {
+                cfg.link_clock = LinkClockMode::by_name(v.as_str()?)
+                    .ok_or_else(|| anyhow::anyhow!("unknown link clock {v}"))?
+            }
+            // async-lsp knobs: bounded-staleness window S and importance
+            // fraction rho (see coordinator::policies::async_lsp).
+            "async_staleness" => cfg.async_staleness = v.as_usize()? as u64,
+            "async_rho" => {
+                let rho = v.as_f64()?;
+                if !(0.0..=1.0).contains(&rho) {
+                    bail!("async_rho {rho} must be in [0, 1]");
+                }
+                cfg.async_rho = rho as f32;
+            }
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -197,6 +213,19 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     if let Some(v) = args.get("link-codec") {
         cfg.link_codec = parse_link_codec(v)?;
     }
+    if let Some(v) = args.get("link-clock") {
+        cfg.link_clock = LinkClockMode::by_name(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown link clock {v:?}"))?;
+    }
+    if let Some(v) = args.get_u64("async-staleness")? {
+        cfg.async_staleness = v;
+    }
+    if let Some(v) = args.get_f64("async-rho")? {
+        if !(0.0..=1.0).contains(&v) {
+            bail!("--async-rho {v} must be in [0, 1]");
+        }
+        cfg.async_rho = v as f32;
+    }
     Ok(cfg)
 }
 
@@ -268,6 +297,39 @@ mod tests {
         let j = Json::parse(r#"{"link_codec": "policy"}"#).unwrap();
         apply_json(&mut cfg, &j).unwrap();
         assert_eq!(cfg.link_codec, None);
+    }
+
+    #[test]
+    fn async_and_clock_flags_and_json() {
+        // Defaults.
+        let cfg = train_config_from(&argv("train")).unwrap();
+        assert_eq!(cfg.link_clock, LinkClockMode::Auto);
+        assert_eq!(cfg.async_staleness, TrainConfig::default().async_staleness);
+        assert!((cfg.async_rho - TrainConfig::default().async_rho).abs() < 1e-9);
+
+        let a = argv("train --policy async-lsp --async-staleness 4 --async-rho 0.25 --link-clock virtual");
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.policy, PolicyKind::AsyncLsp);
+        assert_eq!(cfg.async_staleness, 4);
+        assert!((cfg.async_rho - 0.25).abs() < 1e-6);
+        assert_eq!(cfg.link_clock, LinkClockMode::Virtual);
+
+        assert!(train_config_from(&argv("train --async-rho 1.5")).is_err());
+        assert!(train_config_from(&argv("train --link-clock sundial")).is_err());
+        // The JSON path enforces the same [0, 1] contract as the CLI.
+        let bad = Json::parse(r#"{"async_rho": 1.5}"#).unwrap();
+        assert!(apply_json(&mut TrainConfig::default(), &bad).is_err());
+
+        let j = Json::parse(
+            r#"{"policy": "async-lsp", "async_staleness": 0, "async_rho": 1.0, "link_clock": "real"}"#,
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.policy, PolicyKind::AsyncLsp);
+        assert_eq!(cfg.async_staleness, 0);
+        assert!((cfg.async_rho - 1.0).abs() < 1e-9);
+        assert_eq!(cfg.link_clock, LinkClockMode::Real);
     }
 
     #[test]

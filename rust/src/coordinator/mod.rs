@@ -11,15 +11,18 @@
 //!   configured policy.  It contains no `PolicyKind` dispatch.
 //! * **Policies** (`policies`) — one module per update policy implementing
 //!   `UpdatePolicy` (`init` / `dispatch_grad` / `apply_delta` /
-//!   `end_of_step` / `report_extras`).  Each owns its own state: LSP the
-//!   `ProjState` projectors, LoRA its adapters, GaLore its SVD projectors,
-//!   Native/GaLore their host Adam moments.  `policies::make_policy` is the
-//!   only remaining policy match in the coordinator.
+//!   `end_of_step` / `gates_layer_fwd` / `finish` / `report_extras`).  Each
+//!   owns its own state: LSP the `ProjState` projectors, async-lsp
+//!   additionally its synchronous Adam half and staleness hold buffer, LoRA
+//!   its adapters, GaLore its SVD projectors, Native/GaLore their host Adam
+//!   moments.  `policies::make_policy` is the only remaining policy match
+//!   in the coordinator.
 //! * **Pipeline substrate** (`pipeline::PipelineCtx`) — everything policies
 //!   share: engine handle, host parameter mirror + device buffers, the
 //!   priority queues and link/updater threads, the payload `BufPool`, the
-//!   negotiated wire `Codec`, the pending-delta set, metrics, the
-//!   *per-instance* negotiated `KernelConfig`, and the training RNG.
+//!   negotiated wire `Codec`, the negotiated `LinkClock`, the in-flight
+//!   staleness ledger (`InFlight`), metrics, the *per-instance* negotiated
+//!   `KernelConfig`, and the training RNG.
 //!
 //! Link payloads are pooled (`util::bufpool`) *and encoded* (`codec`):
 //! every message carries a `WirePayload` — codec output in a `PooledBytes`
@@ -45,8 +48,29 @@
 //!
 //! Every queue is a priority queue, so the paper's FCFS -> LCFS transition
 //! (Alg. 3) is a matter of the priorities the scheduler assigns.  The link
-//! threads sleep `wire_bytes / bandwidth * time_scale`, emulating the PCIe
-//! budget of the simulated testbed on top of real compute.
+//! threads charge `wire_bytes / bandwidth * time_scale` against their
+//! `LinkClock`: under `Real` they sleep it out, emulating the PCIe budget
+//! of the simulated testbed on top of real compute; under `Virtual`
+//! (`--link-clock virtual`, or `LSP_LINK_CLOCK=virtual` in `Auto` mode)
+//! they advance a shared atomic nanosecond counter instead and record a
+//! per-message `(wire_bytes, transfer_ns, done_at_ns)` `LinkLedger`, so
+//! timing-sensitive tests assert exact transfer arithmetic deterministically
+//! (and `TrainReport.stall_secs` reports the modeled gated link exposure —
+//! see `PipelineCtx::note_gated_delta` — instead of measured waits).
+//!
+//! # Update policies and staleness
+//!
+//! Synchronous offloading policies (`zero`, `lsp`) gate the schedule on
+//! their deltas: Zero barriers at end of step, LSP waits at the next
+//! iteration's per-layer events.  The stall-free `async-lsp` policy
+//! (ZenFlow-style) gates on neither: each gradient's top-rho important
+//! slice is applied synchronously on the device mirror, the magnitude-tail
+//! is offloaded, and returning deltas are *held* until their bounded
+//! staleness deadline — a delta produced at step p lands during
+//! `end_of_step(p + S)` (`--async-staleness`), making the apply schedule a
+//! function of step arithmetic only, hence seed-deterministic under both
+//! clocks.  `PipelineCtx.pending` is the step-tagged in-flight ledger the
+//! deadline drain is enforced against.
 //!
 //! # Adding a policy
 //!
@@ -65,9 +89,12 @@ pub mod report;
 pub mod trainer;
 pub mod worker;
 
-pub use comm::{DeltaMsg, Link, OffloadMsg, PrioQueue, WirePayload};
+pub use comm::{
+    DeltaMsg, Link, LinkClock, LinkClockMode, LinkLedger, OffloadMsg, PrioQueue, VirtualClock,
+    WirePayload,
+};
 pub use metrics::Metrics;
-pub use pipeline::{PipelineCtx, TrainConfig};
+pub use pipeline::{InFlight, PipelineCtx, TrainConfig};
 pub use policies::{make_policy, Policy, PolicyKind, UpdatePolicy};
 pub use report::TrainReport;
 pub use trainer::Trainer;

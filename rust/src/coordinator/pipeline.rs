@@ -15,14 +15,16 @@
 //! instead of installing it process-wide, so two trainers with different
 //! policies can coexist in one process (ROADMAP §Perf follow-up).
 
-use std::collections::HashSet;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 use xla::PjRtBuffer;
 
 use crate::codec::{make_codec, Codec, CodecKind};
-use crate::coordinator::comm::{DeltaMsg, Link, OffloadMsg, ParamKey, PrioQueue, WirePayload};
+use crate::coordinator::comm::{
+    DeltaMsg, Link, LinkClock, LinkClockMode, OffloadMsg, ParamKey, PrioQueue, WirePayload,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policies::{make_policy, PolicyKind};
 use crate::coordinator::worker::{CpuUpdater, SharedStates};
@@ -77,6 +79,21 @@ pub struct TrainConfig {
     /// (`UpdatePolicy::preferred_codec`: LSP -> sparse-int8, Zero -> bf16);
     /// `Some(CodecKind::F32Raw)` pins the bit-exact pre-codec path.
     pub link_codec: Option<CodecKind>,
+    /// Link-clock mode (`--link-clock`, JSON `link_clock`): `Real` sleeps
+    /// out the emulated transfer time, `Virtual` advances a shared
+    /// deterministic nanosecond counter instead (timing-sensitive tests),
+    /// `Auto` (default) consults the `LSP_LINK_CLOCK` environment variable.
+    pub link_clock: LinkClockMode,
+    /// `async-lsp` bounded-staleness window S (`--async-staleness`): a tail
+    /// delta must be applied no more than S optimizer steps after the
+    /// gradient that produced it; 0 degenerates to a per-step barrier.
+    pub async_staleness: u64,
+    /// `async-lsp` importance fraction rho (`--async-rho`): the
+    /// ceil(rho * n) largest-magnitude entries of each gradient are applied
+    /// synchronously on the device mirror; the tail is offloaded and
+    /// updated asynchronously.  1.0 = everything synchronous (no link
+    /// traffic), 0.0 = everything asynchronous.
+    pub async_rho: f32,
 }
 
 impl Default for TrainConfig {
@@ -104,8 +121,76 @@ impl Default for TrainConfig {
             max_wall_secs: 0.0,
             kernel: KernelConfig::default(),
             link_codec: None,
+            link_clock: LinkClockMode::Auto,
+            async_staleness: 2,
+            async_rho: 0.5,
         }
     }
+}
+
+/// The in-flight offload ledger: every key with a gradient shipped over the
+/// d2h link whose delta has not been applied yet, tagged with the step that
+/// produced the gradient.  This is the staleness ledger bounded-async
+/// policies enforce their window against — a key may have *several* entries
+/// in flight at once (the per-key link/updater path is FIFO, so entries
+/// land in produced order), which is exactly what a staleness window > 0
+/// permits.
+#[derive(Debug, Default)]
+pub struct InFlight {
+    map: HashMap<ParamKey, Vec<u64>>,
+    total: usize,
+}
+
+impl InFlight {
+    pub fn insert(&mut self, key: ParamKey, step: u64) {
+        self.map.entry(key).or_default().push(step);
+        self.total += 1;
+    }
+
+    /// Remove one in-flight entry for `key` produced at `step` (the delta
+    /// carries both, so the exact entry is always identifiable).
+    pub fn remove(&mut self, key: &ParamKey, step: u64) {
+        if let Some(steps) = self.map.get_mut(key) {
+            if let Some(pos) = steps.iter().position(|&s| s == step) {
+                steps.remove(pos);
+                self.total -= 1;
+            }
+            if steps.is_empty() {
+                self.map.remove(key);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn contains_param(&self, idx: usize) -> bool {
+        self.map.keys().any(|k| k.param_index == idx)
+    }
+
+    pub fn any_of(&self, idxs: &[usize]) -> bool {
+        idxs.iter().any(|i| self.contains_param(*i))
+    }
+
+    /// Step of the oldest gradient still in flight (the staleness frontier).
+    pub fn oldest_step(&self) -> Option<u64> {
+        self.map.values().flat_map(|v| v.iter().copied()).min()
+    }
+}
+
+/// Has the bounded-staleness window been exceeded for a gradient produced
+/// at step `produced` when the optimizer stands at step `now`?  Shared by
+/// the `async-lsp` drain loop and the staleness property tests so the
+/// off-by-one lives in exactly one place: with window S, a delta produced
+/// at step p must land during `end_of_step(p + S)` at the latest, giving
+/// every applied delta an age of at most S steps.
+pub fn stale_bound_exceeded(produced: u64, now: u64, window: u64) -> bool {
+    now.saturating_sub(produced) >= window
 }
 
 pub struct PipelineCtx<'e> {
@@ -123,9 +208,13 @@ pub struct PipelineCtx<'e> {
     /// endpoints always agree on the format (identity via `codec.name()`).
     pub codec: Arc<dyn Codec>,
     pub rng: Rng,
+    /// Link/stall clock negotiated from `cfg.link_clock` (shared by both
+    /// links, so virtual time covers both directions).
+    pub clock: LinkClock,
     /// Keys with an offloaded gradient still in flight (its delta has not
-    /// been applied yet).
-    pub pending: HashSet<ParamKey>,
+    /// been applied yet), tagged with the producing step — the staleness
+    /// ledger.
+    pub pending: InFlight,
     pub d2h_in: Arc<PrioQueue<OffloadMsg>>,
     pub d2h_out: Arc<PrioQueue<OffloadMsg>>,
     pub h2d_in: Arc<PrioQueue<DeltaMsg>>,
@@ -155,6 +244,15 @@ impl<'e> PipelineCtx<'e> {
             .unwrap_or_else(|| make_policy(cfg.policy).preferred_codec());
         let codec: Arc<dyn Codec> = make_codec(codec_kind);
 
+        // Clock negotiation: the config pins Real/Virtual, or (Auto) the
+        // LSP_LINK_CLOCK environment variable selects — both links share
+        // the one clock so virtual time spans both directions.
+        let clock = match cfg.link_clock {
+            LinkClockMode::Real => LinkClock::Real,
+            LinkClockMode::Virtual => LinkClock::new_virtual(),
+            LinkClockMode::Auto => LinkClock::from_env(),
+        };
+
         let rng = Rng::new(cfg.seed);
         let params = ParamStore::init(&eng.man, cfg.seed ^ 0xA5A5)?;
         let bufs = params
@@ -173,19 +271,23 @@ impl<'e> PipelineCtx<'e> {
                 "d2h",
                 cfg.bw_bytes_per_s,
                 cfg.time_scale,
+                clock.clone(),
                 d2h_in.clone(),
                 d2h_out.clone(),
                 |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
                 |m| m.prio,
+                |m, ns| m.link_ns += ns,
             );
             let h2d = Link::spawn(
                 "h2d",
                 cfg.bw_bytes_per_s,
                 cfg.time_scale,
+                clock.clone(),
                 h2d_in.clone(),
                 delta_out.clone(),
                 |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
                 |m| m.prio,
+                |m, ns| m.link_ns += ns,
             );
             // The updater owns ONE of the reserved schedule threads.
             // Handing its parallel fused Adam the full negotiated width
@@ -220,7 +322,8 @@ impl<'e> PipelineCtx<'e> {
             pool,
             codec,
             rng,
-            pending: HashSet::new(),
+            clock,
+            pending: InFlight::default(),
             d2h_in,
             d2h_out,
             h2d_in,
@@ -251,15 +354,35 @@ impl<'e> PipelineCtx<'e> {
         self.upload_param(idx)
     }
 
-    /// Mark `key` in flight and enqueue its gradient on the D2H link.  The
+    /// Mark `key` in flight (tagged with the producing step — the
+    /// staleness ledger) and enqueue its gradient on the D2H link.  The
     /// f32 payload is encoded with the pipeline codec here — the drop of
     /// `data` returns its storage to the pool, where it typically serves as
     /// the decode buffer for a returning delta.
     pub fn push_offload(&mut self, key: ParamKey, data: PooledBuf, prio: i64, step: u64) {
         let payload = WirePayload::from_pool(self.codec.as_ref(), &self.pool, &data);
         drop(data);
-        self.pending.insert(key.clone());
-        self.d2h_in.push(prio, OffloadMsg { key, data: payload, prio, step });
+        self.pending.insert(key.clone(), step);
+        self.d2h_in.push(prio, OffloadMsg { key, data: payload, prio, step, link_ns: 0 });
+    }
+
+    /// Record that applying `msg` gated the optimizer schedule (a per-layer
+    /// event, Zero's end-of-step barrier, or an `async-lsp` staleness-
+    /// deadline drain).  Under the virtual clock this charges the message's
+    /// deterministic round-trip link time — amortized over the staleness
+    /// window it was allowed to lag — into the modeled stall phase
+    /// `stall_v`: a delta permitted to trail by `window` steps exposes only
+    /// `1/(window+1)` of its link latency to the critical path, the same
+    /// arithmetic `sim::cost_model::gated_link_exposure` prices, which is
+    /// what closes the sim-vs-runtime stall gap.  Fully synchronous gates
+    /// pass `window = 0` (full charge).  Under the real clock the measured
+    /// wait phases (`stall_e` / `barrier`) already capture stalls, so this
+    /// is a no-op.
+    pub fn note_gated_delta(&mut self, msg: &DeltaMsg, window: u64) {
+        if self.clock.is_virtual() {
+            let ns = msg.link_ns as f64 / (window as f64 + 1.0);
+            self.metrics.phase("stall_v").push(ns / 1e9);
+        }
     }
 
     /// Decode a link payload into a pooled f32 buffer.
@@ -285,6 +408,62 @@ impl<'e> PipelineCtx<'e> {
     /// projector manager for subspace-switch re-projection).
     pub fn shared_adam_states(&self) -> Option<SharedStates> {
         self.updater.as_ref().map(|u| u.states.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(idx: usize, kind: Option<&str>) -> ParamKey {
+        ParamKey { param_index: idx, kind: kind.map(|s| s.to_string()) }
+    }
+
+    #[test]
+    fn in_flight_tracks_multiple_entries_per_key() {
+        let mut fl = InFlight::default();
+        assert!(fl.is_empty());
+        assert_eq!(fl.oldest_step(), None);
+        // A staleness window > 0 lets the SAME key be in flight for several
+        // consecutive steps; the ledger must keep every entry.
+        fl.insert(key(3, Some("qkv")), 4);
+        fl.insert(key(3, Some("qkv")), 5);
+        fl.insert(key(7, None), 6);
+        assert_eq!(fl.len(), 3);
+        assert!(fl.contains_param(3));
+        assert!(fl.contains_param(7));
+        assert!(!fl.contains_param(4));
+        assert!(fl.any_of(&[0, 7]));
+        assert!(!fl.any_of(&[0, 1]));
+        assert_eq!(fl.oldest_step(), Some(4));
+        // Removing the step-5 entry keeps the older one visible.
+        fl.remove(&key(3, Some("qkv")), 5);
+        assert_eq!(fl.len(), 2);
+        assert_eq!(fl.oldest_step(), Some(4));
+        assert!(fl.contains_param(3));
+        fl.remove(&key(3, Some("qkv")), 4);
+        assert!(!fl.contains_param(3));
+        // Removing something never inserted is a no-op.
+        fl.remove(&key(9, None), 1);
+        assert_eq!(fl.len(), 1);
+        fl.remove(&key(7, None), 6);
+        assert!(fl.is_empty());
+        assert_eq!(fl.oldest_step(), None);
+    }
+
+    #[test]
+    fn stale_bound_semantics() {
+        // Window 0: everything produced this step (or earlier) must land
+        // now — the per-step barrier.
+        assert!(stale_bound_exceeded(0, 0, 0));
+        assert!(stale_bound_exceeded(3, 5, 0));
+        // Window S: a step-p gradient survives until end_of_step(p + S).
+        assert!(!stale_bound_exceeded(4, 5, 2));
+        assert!(stale_bound_exceeded(4, 6, 2));
+        assert!(stale_bound_exceeded(4, 9, 2));
+        // `now` before `produced` (cannot happen in the pipeline) is never
+        // stale for a positive window.
+        assert!(!stale_bound_exceeded(5, 3, 1));
     }
 }
 

@@ -1,0 +1,537 @@
+//! Stall-free LSP-Offload (`async-lsp`): ZenFlow-style importance-
+//! partitioned asynchronous updates on top of the LSP compression pipeline.
+//!
+//! Per gradient (subspace-projected for matrix params, full for the small
+//! non-matrix params) the policy splits by magnitude:
+//!
+//! * the **important slice** — the `ceil(rho * n)` largest-|g| entries —
+//!   runs subspace/host Adam *synchronously* on the driver thread and is
+//!   applied to the device mirror immediately (it never crosses a link);
+//! * the **tail** (the complement, zero-masked, so the sparse wire codecs
+//!   collapse it) is offloaded; the CPU updater's Adam delta returns over
+//!   the h2d link and is applied at its **staleness deadline**: a delta
+//!   whose gradient was produced at step `p` lands during
+//!   `end_of_step(p + S)` (window `S = cfg.async_staleness`), never later.
+//!
+//! Unlike plain LSP there is **no per-layer event gating**
+//! (`gates_layer_fwd` = false) and no end-of-step barrier — the only
+//! synchronization the schedule ever pays is the deadline drain.  Early
+//! arrivals are *received* whenever the drain loop happens to pop them but
+//! *held* (in `held`) until their own deadline, so the apply schedule — and
+//! therefore the loss trajectory — depends only on step arithmetic, never
+//! on link timing: `async-lsp` is seed-deterministic under both link
+//! clocks.
+//!
+//! Degenerate corners pin the semantics: `rho = 1.0` ships nothing and is
+//! bit-identical to `lsp` under the `f32` codec (same fused Adam, same
+//! apply kernels, same projector maintenance — see
+//! `tests/policy_parity.rs`); `S = 0` forces every tail delta to land in
+//! the step that produced it (a per-step barrier, Zero-style).
+//!
+//! Both halves of the partitioned subspace optimizer state are re-projected
+//! on a projector refresh: `maybe_update` receives the CPU updater's shared
+//! map *and* this policy's synchronous map.
+//!
+//! Approximation note: the two Adam halves keep separate moments over the
+//! full vector, and the partition is re-drawn every step, so a coordinate
+//! migrating between slices carries decaying moments in the half it left —
+//! the same class of approximation ZenFlow accepts; the parity tests bound
+//! the loss deviation instead of pinning it.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::codec::CodecKind;
+use crate::coordinator::comm::{DeltaMsg, ParamKey};
+use crate::coordinator::pipeline::{stale_bound_exceeded, PipelineCtx};
+use crate::coordinator::projector_mgr::ProjState;
+use crate::coordinator::report::TrainReport;
+use crate::coordinator::worker::SharedStates;
+use crate::optim::AdamState;
+use crate::tensor::Tensor;
+use crate::util::bufpool::PooledBuf;
+
+use super::{
+    apply_subspace_delta, compress_subspace, init_projectors, PolicyKind, UpdatePolicy,
+};
+
+#[derive(Default)]
+pub struct AsyncLspPolicy {
+    /// Projectors keyed by flat param index (same layout as `LspPolicy`).
+    projectors: HashMap<usize, ProjState>,
+    /// Adam moments of the synchronous important slice, keyed like the CPU
+    /// updater's map so a subspace switch re-projects both halves.
+    sync_adam: SharedStates,
+    /// Deltas received but not yet at their staleness deadline.
+    held: Vec<DeltaMsg>,
+    /// Magnitude scratch for the threshold selection (reused every call).
+    scratch: Vec<f32>,
+    /// Step the optimizer currently stands at (for staleness ages).
+    cur_step: u64,
+    /// Tail deltas landed through the staleness drain.
+    stale_drains: u64,
+    /// Largest observed (apply step - produce step) over all tail deltas.
+    max_staleness: u64,
+}
+
+/// Split `g` by magnitude into elementwise-complementary `sync` + `tail`
+/// (`sync[i] + tail[i] == g[i]`, one of the two always zero): `sync` keeps
+/// exactly `ceil(rho * n)` entries — everything strictly above the k-th
+/// largest |g|, plus ties at the threshold in index order until the quota
+/// is met — so the split is deterministic.  Returns the number of non-zero
+/// entries routed to `tail` (0 means nothing needs to ship).
+pub(crate) fn partition_by_magnitude(
+    g: &[f32],
+    rho: f32,
+    scratch: &mut Vec<f32>,
+    sync: &mut [f32],
+    tail: &mut [f32],
+) -> usize {
+    let n = g.len();
+    debug_assert_eq!(n, sync.len());
+    debug_assert_eq!(n, tail.len());
+    if n == 0 {
+        return 0;
+    }
+    if rho >= 1.0 {
+        sync.copy_from_slice(g);
+        tail.fill(0.0);
+        return 0;
+    }
+    if rho <= 0.0 {
+        sync.fill(0.0);
+        tail.copy_from_slice(g);
+        return g.iter().filter(|x| **x != 0.0).count();
+    }
+    let k = ((rho as f64 * n as f64).ceil() as usize).clamp(1, n);
+    scratch.clear();
+    scratch.extend(g.iter().map(|x| x.abs()));
+    let pos = n - k;
+    scratch.select_nth_unstable_by(pos, f32::total_cmp);
+    let thr = scratch[pos];
+    // At most k-1 entries are strictly above the k-th largest, so the tie
+    // quota is always >= 1.
+    let mut quota = k - g.iter().filter(|x| x.abs() > thr).count();
+    let mut tail_nnz = 0;
+    for i in 0..n {
+        let a = g[i].abs();
+        let take = if a > thr {
+            true
+        } else if a == thr && quota > 0 {
+            quota -= 1;
+            true
+        } else {
+            false
+        };
+        if take {
+            sync[i] = g[i];
+            tail[i] = 0.0;
+        } else {
+            sync[i] = 0.0;
+            tail[i] = g[i];
+            if g[i] != 0.0 {
+                tail_nnz += 1;
+            }
+        }
+    }
+    tail_nnz
+}
+
+/// Canonical apply order for a batch of due deltas: by producing step, then
+/// param index, then subspace kind.  Applies on distinct keys commute
+/// numerically, but a stable order keeps per-key sequencing (and metrics)
+/// canonical.
+fn held_order(a: &DeltaMsg, b: &DeltaMsg) -> std::cmp::Ordering {
+    (a.step, a.key.param_index, a.key.kind.as_deref()).cmp(&(
+        b.step,
+        b.key.param_index,
+        b.key.kind.as_deref(),
+    ))
+}
+
+impl AsyncLspPolicy {
+    /// LSP compression path for a projected matrix param: maybe-update the
+    /// projector (re-projecting BOTH Adam halves on a refresh), compress on
+    /// the GPU, then partition the d x d subspace gradient.
+    fn dispatch_projected(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: &Tensor,
+        step: u64,
+        prio: i64,
+    ) -> Result<()> {
+        let eng = ctx.eng;
+        let check = ctx.cfg.check_freq > 0 && step % ctx.cfg.check_freq == 0;
+        if check {
+            // Deterministic refresh point: land every in-flight tail delta
+            // for THIS param first (early applies only shrink ages, so the
+            // staleness bound is untouched).  Without this, whether the CPU
+            // updater had already folded an in-flight gradient into the
+            // moments being re-projected would depend on link timing — the
+            // one place the async schedule could leak nondeterminism.
+            self.drain_param(ctx, idx)?;
+            let t0 = Instant::now();
+            let key = ParamKey {
+                param_index: idx,
+                kind: Some(self.projectors[&idx].kind.clone()),
+            };
+            let upd_states = ctx
+                .shared_adam_states()
+                .expect("async-lsp policy requires the updater");
+            let sync_states = self.sync_adam.clone();
+            let st = self.projectors.get_mut(&idx).unwrap();
+            st.maybe_update(
+                eng,
+                g,
+                ctx.cfg.alpha,
+                ctx.cfg.learn_budget,
+                ctx.cfg.learn_lr,
+                &[&upd_states, &sync_states],
+                &key,
+                &ctx.kernel,
+            )?;
+            ctx.metrics.phase("proj_check").push(t0.elapsed().as_secs_f64());
+        }
+        let st = &self.projectors[&idx];
+        let s_host = compress_subspace(ctx, st, g)?;
+        let key = ParamKey { param_index: idx, kind: Some(st.kind.clone()) };
+        self.dispatch_partitioned(ctx, key, s_host, step, prio)
+    }
+
+    /// The importance partition itself: synchronous Adam + device apply for
+    /// the important slice, tail offloaded with the producing step tagged
+    /// into the staleness ledger.
+    fn dispatch_partitioned(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        key: ParamKey,
+        data: PooledBuf,
+        step: u64,
+        _prio: i64,
+    ) -> Result<()> {
+        // The trainer's FCFS->LCFS priority exists to unblock gated
+        // forwards — irrelevant here (nothing gates on arrival), and it is
+        // computed from MEASURED phase means, so the same key's messages
+        // could carry different priorities on different steps and invert
+        // their FIFO order through the priority queues.  A stable per-key
+        // priority keeps the per-key pipeline strictly in produced order
+        // (equal prio => seq order), which the updater's per-key Adam
+        // sequencing and the deadline-apply protocol rely on for
+        // determinism.
+        let prio = key.param_index as i64;
+        let n = data.len();
+        let rho = ctx.cfg.async_rho.clamp(0.0, 1.0);
+        let mut sync = ctx.pool.take_raw(n);
+        let mut tail = ctx.pool.take_raw(n);
+        let tail_nnz = partition_by_magnitude(&data, rho, &mut self.scratch, &mut sync, &mut tail);
+        drop(data);
+        if rho > 0.0 {
+            // Synchronous half: fused Adam over the masked gradient (the
+            // same math the CPU updater runs — with rho = 1.0 and the f32
+            // codec this is bit-identical to LSP's round trip), applied on
+            // the device mirror right away.
+            let mut delta = ctx.pool.take_raw(n);
+            {
+                let mut guard = self.sync_adam.lock().unwrap();
+                let st = guard.entry(key.clone()).or_insert_with(|| AdamState::new(n));
+                debug_assert_eq!(st.m.len(), n);
+                st.fused_step_with(&sync, &mut delta, &ctx.kernel);
+            }
+            if key.kind.is_some() {
+                self.apply_subspace(ctx, key.param_index, &delta)?;
+            } else {
+                ctx.apply_host_step(key.param_index, &delta)?;
+            }
+        }
+        drop(sync);
+        if tail_nnz > 0 {
+            ctx.push_offload(key, tail, prio, step);
+        }
+        Ok(())
+    }
+
+    /// Subspace delta -> decompress-apply on the GPU (the same
+    /// `apply_<kind>` path LSP uses, via the shared helper).
+    fn apply_subspace(&self, ctx: &mut PipelineCtx<'_>, idx: usize, delta: &[f32]) -> Result<()> {
+        let st = self
+            .projectors
+            .get(&idx)
+            .with_context(|| format!("no projector for param {idx}"))?;
+        apply_subspace_delta(ctx, st, idx, delta)
+    }
+
+    /// Land every in-flight tail delta for param `idx` NOW (held ones and
+    /// ones still crossing), applying them in produced order (the per-key
+    /// pipeline is FIFO) and holding every other key's delta as usual.
+    /// The set of in-flight entries for a key at any dispatch point is
+    /// pure step arithmetic, so this is a deterministic synchronization —
+    /// used before a projector refresh re-projects the key's moments.
+    fn drain_param(&mut self, ctx: &mut PipelineCtx<'_>, idx: usize) -> Result<()> {
+        let window = ctx.cfg.async_staleness;
+        let mut rest = Vec::new();
+        for msg in std::mem::take(&mut self.held) {
+            if msg.key.param_index == idx {
+                self.note_applied(msg.step);
+                ctx.note_gated_delta(&msg, window);
+                self.apply_tail_delta(ctx, msg)?;
+            } else {
+                rest.push(msg);
+            }
+        }
+        self.held = rest;
+        while ctx.pending.contains_param(idx) {
+            let Some(msg) = ctx.delta_out.pop() else {
+                bail!("delta queue closed during projector-refresh drain");
+            };
+            ctx.pending.remove(&msg.key, msg.step);
+            if msg.key.param_index == idx {
+                self.note_applied(msg.step);
+                ctx.note_gated_delta(&msg, window);
+                self.apply_tail_delta(ctx, msg)?;
+            } else {
+                self.held.push(msg);
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one tail delta (subspace or full-parameter), no bookkeeping.
+    fn apply_tail_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+        let idx = msg.key.param_index;
+        let delta = ctx.decode_payload(&msg.delta)?;
+        if msg.key.kind.is_some() {
+            self.apply_subspace(ctx, idx, &delta)?;
+        } else {
+            ctx.apply_host_step(idx, &delta)?;
+        }
+        Ok(())
+    }
+
+    fn note_applied(&mut self, produced: u64) {
+        self.stale_drains += 1;
+        self.max_staleness = self.max_staleness.max(self.cur_step.saturating_sub(produced));
+    }
+
+    /// Apply every held delta that has reached its staleness deadline at
+    /// step `now` (all of them when `all` is set — the end-of-run flush),
+    /// in canonical order, charging each one's amortized link exposure.
+    fn apply_due_held(&mut self, ctx: &mut PipelineCtx<'_>, now: u64, all: bool) -> Result<()> {
+        if self.held.is_empty() {
+            return Ok(());
+        }
+        let window = ctx.cfg.async_staleness;
+        self.held.sort_by(held_order);
+        let mut rest = Vec::new();
+        for msg in std::mem::take(&mut self.held) {
+            if all || stale_bound_exceeded(msg.step, now, window) {
+                self.note_applied(msg.step);
+                ctx.note_gated_delta(&msg, window);
+                self.apply_tail_delta(ctx, msg)?;
+            } else {
+                rest.push(msg);
+            }
+        }
+        self.held = rest;
+        Ok(())
+    }
+}
+
+impl UpdatePolicy for AsyncLspPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::AsyncLsp
+    }
+
+    /// Tail payloads are magnitude-masked (a (1-rho) fraction of entries
+    /// survive), so compact non-zero index coding over block-int8 values is
+    /// even further below f32 than it is for dense LSP subspace gradients.
+    fn preferred_codec(&self) -> CodecKind {
+        CodecKind::SparseInt8
+    }
+
+    /// The whole point: the step driver never blocks at per-layer events —
+    /// the policy owns all delta application through the deadline drain.
+    fn gates_layer_fwd(&self) -> bool {
+        false
+    }
+
+    fn init(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
+        init_projectors(ctx, &mut self.projectors)
+    }
+
+    fn dispatch_grad(
+        &mut self,
+        ctx: &mut PipelineCtx<'_>,
+        idx: usize,
+        g: Tensor,
+        step: u64,
+        prio: i64,
+    ) -> Result<()> {
+        self.cur_step = step;
+        if self.projectors.contains_key(&idx) {
+            self.dispatch_projected(ctx, idx, &g, step, prio)
+        } else {
+            // Small non-matrix params partition in full-gradient space.
+            let key = ParamKey { param_index: idx, kind: None };
+            let data = ctx.pool.adopt(g.into_data());
+            self.dispatch_partitioned(ctx, key, data, step, prio)
+        }
+    }
+
+    /// Direct delivery path (the trainer's final drain): applies
+    /// immediately with full bookkeeping.  The in-step path never routes
+    /// here — deltas are received and deadline-held by `end_of_step`.
+    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+        let window = ctx.cfg.async_staleness;
+        ctx.pending.remove(&msg.key, msg.step);
+        self.note_applied(msg.step);
+        ctx.note_gated_delta(&msg, window);
+        self.apply_tail_delta(ctx, msg)
+    }
+
+    fn end_of_step(&mut self, ctx: &mut PipelineCtx<'_>, step: u64) -> Result<()> {
+        self.cur_step = step;
+        let window = ctx.cfg.async_staleness;
+        // Receive until no gradient older than the window is still in
+        // flight.  The blocking pops may hand over younger deltas first
+        // (the queues are priority-ordered) — those are held and applied at
+        // their OWN deadline, so the apply schedule depends only on step
+        // arithmetic, never on link timing.
+        let t0 = Instant::now();
+        let mut received = 0u64;
+        while let Some(oldest) = ctx.pending.oldest_step() {
+            if !stale_bound_exceeded(oldest, step, window) {
+                break;
+            }
+            let Some(msg) = ctx.delta_out.pop() else {
+                bail!("delta queue closed during staleness drain");
+            };
+            ctx.pending.remove(&msg.key, msg.step);
+            self.held.push(msg);
+            received += 1;
+        }
+        if received > 0 && !ctx.clock.is_virtual() {
+            // Real-clock stall of the deadline drain.  Under the virtual
+            // clock note_gated_delta carries the (deterministic) modeled
+            // exposure instead — recording measured microseconds there
+            // would make `stall_secs` timing-dependent for no information.
+            ctx.metrics.phase("stall_s").push(t0.elapsed().as_secs_f64());
+        }
+        self.apply_due_held(ctx, step, false)?;
+        self.cur_step = step + 1;
+        Ok(())
+    }
+
+    /// Land everything still in flight and flush the hold buffer so the
+    /// final report and eval see fully-applied weights.
+    fn finish(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
+        while !ctx.pending.is_empty() {
+            let Some(msg) = ctx.delta_out.pop() else {
+                bail!("delta queue closed during final async drain");
+            };
+            ctx.pending.remove(&msg.key, msg.step);
+            self.held.push(msg);
+        }
+        self.apply_due_held(ctx, self.cur_step, true)
+    }
+
+    fn report_extras(&self, report: &mut TrainReport) {
+        report.projector_refreshes = self.projectors.values().map(|p| p.tau).sum();
+        report.stale_drains = self.stale_drains;
+        report.max_delta_staleness = self.max_staleness;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn split(g: &[f32], rho: f32) -> (Vec<f32>, Vec<f32>, usize) {
+        let mut scratch = Vec::new();
+        let mut sync = vec![0f32; g.len()];
+        let mut tail = vec![0f32; g.len()];
+        let nnz = partition_by_magnitude(g, rho, &mut scratch, &mut sync, &mut tail);
+        (sync, tail, nnz)
+    }
+
+    #[test]
+    fn partition_keeps_exactly_k_largest() {
+        let g = [0.1f32, -3.0, 0.5, 2.0, -0.2, 0.0];
+        let (sync, tail, nnz) = split(&g, 0.5); // k = 3
+        assert_eq!(sync, vec![0.0, -3.0, 0.5, 2.0, 0.0, 0.0]);
+        assert_eq!(tail, vec![0.1, 0.0, 0.0, 0.0, -0.2, 0.0]);
+        assert_eq!(nnz, 2, "the masked zero entry does not count");
+        for i in 0..g.len() {
+            assert_eq!(sync[i] + tail[i], g[i], "complementary at {i}");
+            assert!(sync[i] == 0.0 || tail[i] == 0.0, "disjoint at {i}");
+        }
+    }
+
+    #[test]
+    fn partition_edges_are_total() {
+        let g = [1.0f32, -2.0, 3.0];
+        let (sync, tail, nnz) = split(&g, 1.0);
+        assert_eq!(sync, g.to_vec());
+        assert!(tail.iter().all(|&x| x == 0.0));
+        assert_eq!(nnz, 0, "rho = 1.0 ships nothing");
+        let (sync, tail, nnz) = split(&g, 0.0);
+        assert!(sync.iter().all(|&x| x == 0.0));
+        assert_eq!(tail, g.to_vec());
+        assert_eq!(nnz, 3);
+        // Empty payloads are fine.
+        let (_, _, nnz) = split(&[], 0.5);
+        assert_eq!(nnz, 0);
+    }
+
+    #[test]
+    fn partition_ties_resolve_by_index_deterministically() {
+        // Five equal magnitudes, k = ceil(0.4 * 5) = 2: the first two by
+        // index go sync, every run.
+        let g = [1.0f32, -1.0, 1.0, 1.0, -1.0];
+        let (sync, tail, nnz) = split(&g, 0.4);
+        assert_eq!(sync, vec![1.0, -1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(tail, vec![0.0, 0.0, 1.0, 1.0, -1.0]);
+        assert_eq!(nnz, 3);
+    }
+
+    #[test]
+    fn partition_tiny_rho_keeps_at_least_one() {
+        let g = [0.5f32, 4.0, -0.25];
+        let (sync, _, _) = split(&g, 0.01); // ceil clamps k to 1
+        assert_eq!(sync, vec![0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn held_order_is_total_and_step_major() {
+        use crate::codec::{make_codec, CodecKind};
+        use crate::coordinator::comm::WirePayload;
+        let codec = make_codec(CodecKind::F32Raw);
+        let mk = |step: u64, idx: usize, kind: Option<&str>| DeltaMsg {
+            key: ParamKey { param_index: idx, kind: kind.map(|s| s.to_string()) },
+            delta: WirePayload::detached(codec.as_ref(), &[1.0]),
+            prio: 0,
+            step,
+            link_ns: 0,
+        };
+        let mut v = vec![
+            mk(2, 0, None),
+            mk(1, 5, Some("qkv")),
+            mk(1, 5, None),
+            mk(1, 2, None),
+        ];
+        v.sort_by(held_order);
+        let got: Vec<(u64, usize, Option<String>)> =
+            v.iter().map(|m| (m.step, m.key.param_index, m.key.kind.clone())).collect();
+        assert_eq!(
+            got,
+            vec![
+                (1, 2, None),
+                (1, 5, None),
+                (1, 5, Some("qkv".to_string())),
+                (2, 0, None),
+            ]
+        );
+    }
+}

@@ -7,12 +7,16 @@
 //!
 //! Small non-matrix params (layer norms, biases) have no projector and take
 //! the full-gradient Zero path over the same links.
+//!
+//! The projector init / GPU compress / subspace apply plumbing is shared
+//! with the stall-free `async_lsp` policy (`policies::init_projectors`,
+//! `compress_subspace`, `apply_subspace_delta`) — the two must stay in
+//! lockstep for the rho = 1 bitwise-parity invariant.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::PjRtBuffer;
 
 use crate::codec::CodecKind;
 use crate::coordinator::comm::{DeltaMsg, ParamKey};
@@ -21,7 +25,7 @@ use crate::coordinator::projector_mgr::ProjState;
 use crate::coordinator::report::TrainReport;
 use crate::tensor::Tensor;
 
-use super::{PolicyKind, UpdatePolicy};
+use super::{apply_subspace_delta, compress_subspace, init_projectors, PolicyKind, UpdatePolicy};
 
 #[derive(Default)]
 pub struct LspPolicy {
@@ -58,26 +62,14 @@ impl LspPolicy {
                 ctx.cfg.alpha,
                 ctx.cfg.learn_budget,
                 ctx.cfg.learn_lr,
-                &states,
+                &[&states],
                 &key,
                 &ctx.kernel,
             )?;
             ctx.metrics.phase("proj_check").push(t0.elapsed().as_secs_f64());
         }
         let st = &self.projectors[&idx];
-        let t0 = Instant::now();
-        let e = eng.exec(&format!("compress_{}", st.kind))?;
-        let g_buf = eng.upload(g)?;
-        let args: Vec<&PjRtBuffer> = vec![
-            &g_buf,
-            &st.gather_bufs[0],
-            &st.gather_bufs[1],
-            &st.gather_bufs[2],
-            &st.gather_bufs[3],
-        ];
-        let s_buf = e.call_b(&args)?.device()?;
-        let s_host = ctx.pool.adopt(eng.download_vec(&s_buf)?);
-        ctx.metrics.phase("compress").push(t0.elapsed().as_secs_f64());
+        let s_host = compress_subspace(ctx, st, g)?;
         let key = ParamKey { param_index: idx, kind: Some(st.kind.clone()) };
         ctx.push_offload(key, s_host, prio, step);
         Ok(())
@@ -97,17 +89,7 @@ impl UpdatePolicy for LspPolicy {
     }
 
     fn init(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
-        let eng = ctx.eng;
-        let man = &eng.man;
-        for layer in 0..man.config.n_layer {
-            let range = ctx.params.block_range(man, layer);
-            for (kind, meta) in man.kinds.clone() {
-                let pidx = range.start + meta.param_index;
-                let st = ProjState::init(eng, &kind, &meta, &mut ctx.rng)?;
-                self.projectors.insert(pidx, st);
-            }
-        }
-        Ok(())
+        init_projectors(ctx, &mut self.projectors)
     }
 
     fn dispatch_grad(
@@ -130,36 +112,24 @@ impl UpdatePolicy for LspPolicy {
     }
 
     fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+        // Every LSP delta gates its layer's event (window 0): under the
+        // virtual clock its full round-trip link time is modeled stall.
+        ctx.note_gated_delta(&msg, 0);
         let idx = msg.key.param_index;
         // Wire form -> pooled f32 buffer (the handle recycles on drop).
         let delta = ctx.decode_payload(&msg.delta)?;
-        if let Some(kind) = &msg.key.kind {
+        if msg.key.kind.is_some() {
             // Subspace delta: decompress-apply on the GPU (L1 kernel).
-            let eng = ctx.eng;
             let st = self
                 .projectors
                 .get(&idx)
                 .with_context(|| format!("no projector for param {idx}"))?;
-            let meta = &st.meta;
-            let e = eng.exec(&format!("apply_{kind}"))?;
-            let ds = eng.upload_f32(&[meta.d, meta.d], &delta)?;
-            let lr_buf = eng.upload_f32(&[1, 1], &[ctx.cfg.lr])?;
-            let args: Vec<&PjRtBuffer> = vec![
-                &ctx.bufs[idx],
-                &st.row_bufs[0],
-                &st.row_bufs[1],
-                &st.row_bufs[2],
-                &st.row_bufs[3],
-                &ds,
-                &lr_buf,
-            ];
-            let new_w = e.call_b(&args)?.device()?;
-            ctx.bufs[idx] = new_w;
+            apply_subspace_delta(ctx, st, idx, &delta)?;
         } else {
             // Full-parameter delta: host-mirror apply + re-upload.
             ctx.apply_host_step(idx, &delta)?;
         }
-        ctx.pending.remove(&msg.key);
+        ctx.pending.remove(&msg.key, msg.step);
         Ok(())
     }
 

@@ -1,4 +1,4 @@
-//! The update-policy subsystem: one registry enum, one trait, five
+//! The update-policy subsystem: one registry enum, one trait, six
 //! implementations.
 //!
 //! The step driver (`coordinator::trainer`) is policy-agnostic — it runs
@@ -15,24 +15,29 @@
 //! pooled + codec-encoded payloads, per-layer events) comes for free.  See
 //! ROADMAP.md §Coordinator.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
+use xla::PjRtBuffer;
 
 use crate::codec::CodecKind;
-use crate::coordinator::comm::{DeltaMsg, ParamKey};
-use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::comm::DeltaMsg;
+use crate::coordinator::pipeline::{InFlight, PipelineCtx};
+use crate::coordinator::projector_mgr::ProjState;
 use crate::coordinator::report::TrainReport;
 use crate::optim::AdamState;
 use crate::tensor::Tensor;
+use crate::util::bufpool::PooledBuf;
 
+pub mod async_lsp;
 pub mod galore;
 pub mod lora;
 pub mod lsp;
 pub mod native;
 pub mod zero;
 
+pub use async_lsp::AsyncLspPolicy;
 pub use galore::GalorePolicy;
 pub use lora::LoraPolicy;
 pub use lsp::LspPolicy;
@@ -53,6 +58,12 @@ pub enum PolicyKind {
     /// gradients on the GPU, layer-wise pipelined offload/update/upload with
     /// per-layer events gating the next iteration's forward.
     Lsp,
+    /// Stall-free LSP (ZenFlow-style): each projected gradient is
+    /// partitioned by magnitude — the top-rho "important" slice updates
+    /// synchronously on the device mirror, the tail offloads and its CPU
+    /// Adam delta lands asynchronously within a bounded staleness window S
+    /// (no per-layer event gating, no end-of-step barrier).
+    AsyncLsp,
     /// LoRA adapters (PEFT baseline): rank-r A/B per matrix, trained
     /// "on device", base weights frozen.
     Lora,
@@ -67,6 +78,7 @@ impl PolicyKind {
             "native" => Some(PolicyKind::Native),
             "zero" | "zero-offload" => Some(PolicyKind::Zero),
             "lsp" | "lsp-offload" => Some(PolicyKind::Lsp),
+            "async-lsp" | "async_lsp" | "async" => Some(PolicyKind::AsyncLsp),
             "lora" => Some(PolicyKind::Lora),
             "galore" => Some(PolicyKind::Galore),
             _ => None,
@@ -78,6 +90,7 @@ impl PolicyKind {
             PolicyKind::Native => "native",
             PolicyKind::Zero => "zero",
             PolicyKind::Lsp => "lsp",
+            PolicyKind::AsyncLsp => "async-lsp",
             PolicyKind::Lora => "lora",
             PolicyKind::Galore => "galore",
         }
@@ -85,7 +98,7 @@ impl PolicyKind {
 
     /// Does this policy ship work through the throttled links?
     pub fn offloads(&self) -> bool {
-        matches!(self, PolicyKind::Zero | PolicyKind::Lsp)
+        matches!(self, PolicyKind::Zero | PolicyKind::Lsp | PolicyKind::AsyncLsp)
     }
 }
 
@@ -135,9 +148,30 @@ pub trait UpdatePolicy {
     }
 
     /// Step boundary (Zero-Offload barriers here; LSP lets deltas drain
-    /// into the next iteration's per-layer events).
+    /// into the next iteration's per-layer events; async-lsp enforces its
+    /// bounded-staleness deadline drain here).
     fn end_of_step(&mut self, ctx: &mut PipelineCtx<'_>, step: u64) -> Result<()> {
         let _ = (ctx, step);
+        Ok(())
+    }
+
+    /// Does the step driver block at the per-layer events (Alg. 3's `e_l`)
+    /// until this layer's in-flight deltas have been applied?  The fully
+    /// synchronous offloading policies gate (default); stall-free policies
+    /// return `false` — the driver then does nothing at events and the
+    /// policy owns all delta application (its bounded-staleness drain in
+    /// `end_of_step`), which is what keeps its apply schedule deterministic
+    /// instead of arrival-timing-dependent.
+    fn gates_layer_fwd(&self) -> bool {
+        true
+    }
+
+    /// End-of-run hook, called once after the last step and before the
+    /// trainer's final in-flight drain: policies holding deferred work
+    /// (async-lsp's staleness hold buffer) land it here so the report and
+    /// any final eval see fully-applied weights.
+    fn finish(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
+        let _ = ctx;
         Ok(())
     }
 
@@ -154,6 +188,7 @@ pub fn make_policy(kind: PolicyKind) -> Box<dyn UpdatePolicy> {
         PolicyKind::Native => Box::new(NativePolicy::default()),
         PolicyKind::Zero => Box::new(ZeroPolicy),
         PolicyKind::Lsp => Box::new(LspPolicy::default()),
+        PolicyKind::AsyncLsp => Box::new(AsyncLspPolicy::default()),
         PolicyKind::Lora => Box::new(LoraPolicy::default()),
         PolicyKind::Galore => Box::new(GalorePolicy::default()),
     }
@@ -168,8 +203,8 @@ pub fn wait_for_params(
     policy: &mut dyn UpdatePolicy,
     idxs: &[usize],
 ) -> Result<()> {
-    fn needs(pending: &HashSet<ParamKey>, idxs: &[usize]) -> bool {
-        idxs.iter().any(|i| pending.iter().any(|k| k.param_index == *i))
+    fn needs(pending: &InFlight, idxs: &[usize]) -> bool {
+        pending.any_of(idxs)
     }
     if !needs(&ctx.pending, idxs) {
         // Opportunistically drain anything already arrived.
@@ -186,6 +221,81 @@ pub fn wait_for_params(
         policy.apply_delta(ctx, msg)?;
     }
     ctx.metrics.phase("stall_e").push(t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Build the per-(layer, kind) learned sparse projectors — shared by the
+/// LSP-family policies (`lsp`, `async-lsp`), which must consume the
+/// training RNG in exactly the same order for the rho = 1 bitwise-parity
+/// invariant to hold.
+pub(crate) fn init_projectors(
+    ctx: &mut PipelineCtx<'_>,
+    projectors: &mut HashMap<usize, ProjState>,
+) -> Result<()> {
+    let eng = ctx.eng;
+    let man = &eng.man;
+    for layer in 0..man.config.n_layer {
+        let range = ctx.params.block_range(man, layer);
+        for (kind, meta) in man.kinds.clone() {
+            let pidx = range.start + meta.param_index;
+            let st = ProjState::init(eng, &kind, &meta, &mut ctx.rng)?;
+            projectors.insert(pidx, st);
+        }
+    }
+    Ok(())
+}
+
+/// GPU-compress one matrix gradient to its d x d subspace (the
+/// `compress_<kind>` artifact, L1 kernel) and download into a pooled
+/// buffer, timed as the "compress" phase — the shared front half of the
+/// LSP-family dispatch paths.
+pub(crate) fn compress_subspace(
+    ctx: &mut PipelineCtx<'_>,
+    st: &ProjState,
+    g: &Tensor,
+) -> Result<PooledBuf> {
+    let eng = ctx.eng;
+    let t0 = Instant::now();
+    let e = eng.exec(&format!("compress_{}", st.kind))?;
+    let g_buf = eng.upload(g)?;
+    let args: Vec<&PjRtBuffer> = vec![
+        &g_buf,
+        &st.gather_bufs[0],
+        &st.gather_bufs[1],
+        &st.gather_bufs[2],
+        &st.gather_bufs[3],
+    ];
+    let s_buf = e.call_b(&args)?.device()?;
+    let s_host = ctx.pool.adopt(eng.download_vec(&s_buf)?);
+    ctx.metrics.phase("compress").push(t0.elapsed().as_secs_f64());
+    Ok(s_host)
+}
+
+/// Decompress-apply one d x d subspace delta onto the device weights (the
+/// `apply_<kind>` artifact) — the shared back half of the LSP-family
+/// paths.
+pub(crate) fn apply_subspace_delta(
+    ctx: &mut PipelineCtx<'_>,
+    st: &ProjState,
+    idx: usize,
+    delta: &[f32],
+) -> Result<()> {
+    let eng = ctx.eng;
+    let meta = &st.meta;
+    let e = eng.exec(&format!("apply_{}", st.kind))?;
+    let ds = eng.upload_f32(&[meta.d, meta.d], delta)?;
+    let lr_buf = eng.upload_f32(&[1, 1], &[ctx.cfg.lr])?;
+    let args: Vec<&PjRtBuffer> = vec![
+        &ctx.bufs[idx],
+        &st.row_bufs[0],
+        &st.row_bufs[1],
+        &st.row_bufs[2],
+        &st.row_bufs[3],
+        &ds,
+        &lr_buf,
+    ];
+    let new_w = e.call_b(&args)?.device()?;
+    ctx.bufs[idx] = new_w;
     Ok(())
 }
 
@@ -212,8 +322,11 @@ mod tests {
     fn parse_names() {
         assert_eq!(PolicyKind::by_name("LSP"), Some(PolicyKind::Lsp));
         assert_eq!(PolicyKind::by_name("zero-offload"), Some(PolicyKind::Zero));
+        assert_eq!(PolicyKind::by_name("async-lsp"), Some(PolicyKind::AsyncLsp));
+        assert_eq!(PolicyKind::by_name("ASYNC"), Some(PolicyKind::AsyncLsp));
         assert_eq!(PolicyKind::by_name("bogus"), None);
         assert!(PolicyKind::Zero.offloads());
+        assert!(PolicyKind::AsyncLsp.offloads());
         assert!(!PolicyKind::Lora.offloads());
     }
 
@@ -228,6 +341,7 @@ mod tests {
             PolicyKind::Native,
             PolicyKind::Zero,
             PolicyKind::Lsp,
+            PolicyKind::AsyncLsp,
             PolicyKind::Lora,
             PolicyKind::Galore,
         ] {
@@ -235,8 +349,14 @@ mod tests {
             assert_eq!(p.kind(), kind, "constructor/kind mismatch");
             assert_eq!(
                 p.kind().offloads(),
-                matches!(kind, PolicyKind::Zero | PolicyKind::Lsp),
+                matches!(kind, PolicyKind::Zero | PolicyKind::Lsp | PolicyKind::AsyncLsp),
                 "offload wiring flag for {kind:?}"
+            );
+            // Only the stall-free policy opts out of per-layer event gating.
+            assert_eq!(
+                p.gates_layer_fwd(),
+                kind != PolicyKind::AsyncLsp,
+                "event gating flag for {kind:?}"
             );
         }
     }
@@ -247,6 +367,8 @@ mod tests {
         // bf16 full gradients; non-offloading policies keep the bit-exact
         // default (they never use it).
         assert_eq!(make_policy(PolicyKind::Lsp).preferred_codec(), CodecKind::SparseInt8);
+        // async-lsp ships magnitude-masked tails — sparse by construction.
+        assert_eq!(make_policy(PolicyKind::AsyncLsp).preferred_codec(), CodecKind::SparseInt8);
         assert_eq!(make_policy(PolicyKind::Zero).preferred_codec(), CodecKind::Bf16);
         for kind in [PolicyKind::Native, PolicyKind::Lora, PolicyKind::Galore] {
             assert_eq!(make_policy(kind).preferred_codec(), CodecKind::F32Raw, "{kind:?}");

@@ -42,9 +42,11 @@ impl UpdatePolicy for ZeroPolicy {
     }
 
     fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+        // Every Zero delta gates the end-of-step barrier (window 0).
+        ctx.note_gated_delta(&msg, 0);
         let delta = ctx.decode_payload(&msg.delta)?;
         ctx.apply_host_step(msg.key.param_index, &delta)?;
-        ctx.pending.remove(&msg.key);
+        ctx.pending.remove(&msg.key, msg.step);
         Ok(())
     }
 

@@ -62,6 +62,11 @@ impl ProjState {
     /// values on `g` (up to `budget` Adam steps or until below `alpha`) and
     /// project the subspace optimizer state.  Returns the (possibly new)
     /// relative bias.
+    ///
+    /// `state_maps` lists every Adam-moment map holding subspace state for
+    /// `state_key`: LSP passes the CPU updater's shared map; async-lsp also
+    /// passes its synchronous important-slice map, so a subspace switch
+    /// re-projects both halves of the partitioned optimizer state.
     #[allow(clippy::too_many_arguments)]
     pub fn maybe_update(
         &mut self,
@@ -70,7 +75,7 @@ impl ProjState {
         alpha: f32,
         budget: u32,
         learn_lr: f32,
-        states: &SharedStates,
+        state_maps: &[&SharedStates],
         state_key: &ParamKey,
         kcfg: &KernelConfig,
     ) -> Result<f32> {
@@ -88,7 +93,9 @@ impl ProjState {
         self.gather_bufs = gb;
         self.row_bufs = rb;
         // Project CPU-resident subspace Adam state onto the new subspace.
-        self.project_state(eng, &old_pair, states, state_key)?;
+        for states in state_maps {
+            self.project_state(eng, &old_pair, states, state_key)?;
+        }
         Ok(rel)
     }
 

@@ -13,6 +13,9 @@ pub struct TrainReport {
     pub tokens_per_s: f64,
     /// Wire codec the link payloads crossed in (`codec::Codec::name`).
     pub link_codec: String,
+    /// Clock the links ran against: "real" (sleeping bandwidth emulation)
+    /// or "virtual" (deterministic shared nanosecond counter).
+    pub link_clock: &'static str,
     /// Encoded bytes GPU -> CPU (the d2h link's `bytes_moved`).
     pub bytes_up: u64,
     /// Encoded bytes CPU -> GPU (the h2d link's `bytes_moved`).
@@ -21,10 +24,19 @@ pub struct TrainReport {
     /// `F32Raw` would have moved; the compression-ratio baseline.
     pub raw_bytes_up: u64,
     pub raw_bytes_down: u64,
+    /// Time the optimizer schedule was exposed to the offload pipeline:
+    /// measured waits under the real clock; under the virtual clock the
+    /// modeled gated link exposure (every gating delta's round-trip link
+    /// time, amortized over its allowed staleness window).
     pub stall_secs: f64,
     pub cpu_busy_secs: f64,
     pub link_busy_secs: (f64, f64),
     pub projector_refreshes: u64,
+    /// `async-lsp`: tail deltas landed through the bounded-staleness drain.
+    pub stale_drains: u64,
+    /// `async-lsp`: largest observed (apply step - produce step); the
+    /// staleness bound guarantees this never exceeds `--async-staleness`.
+    pub max_delta_staleness: u64,
     /// Fraction of payload-buffer takes served from the recycling pool.
     pub pool_hit_rate: f64,
     pub loss_curve: Vec<(u64, f32)>,
@@ -66,15 +78,22 @@ impl TrainReport {
             self.compression_ratio(),
         );
         println!(
-            "link busy {:.2}s/{:.2}s  cpu busy {:.2}s  stall {:.2}s  pool hits {:.0}%",
+            "link busy {:.2}s/{:.2}s  cpu busy {:.2}s  stall {:.2}s [{} clock]  pool hits {:.0}%",
             self.link_busy_secs.0,
             self.link_busy_secs.1,
             self.cpu_busy_secs,
             self.stall_secs,
+            self.link_clock,
             self.pool_hit_rate * 100.0,
         );
         if self.projector_refreshes > 0 {
             println!("projector refreshes (sum tau): {}", self.projector_refreshes);
+        }
+        if self.stale_drains > 0 {
+            println!(
+                "async tail deltas {} (max staleness {} steps)",
+                self.stale_drains, self.max_delta_staleness
+            );
         }
     }
 }
@@ -92,6 +111,7 @@ mod tests {
             final_eval_loss: None,
             tokens_per_s: 0.0,
             link_codec: "bf16".into(),
+            link_clock: "real",
             bytes_up: 0,
             bytes_down: 0,
             raw_bytes_up: 0,
@@ -100,6 +120,8 @@ mod tests {
             cpu_busy_secs: 0.0,
             link_busy_secs: (0.0, 0.0),
             projector_refreshes: 0,
+            stale_drains: 0,
+            max_delta_staleness: 0,
             pool_hit_rate: 0.0,
             loss_curve: vec![],
             eval_curve: vec![],

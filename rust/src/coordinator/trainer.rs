@@ -121,6 +121,17 @@ impl<'e> Trainer<'e> {
         policies::wait_for_params(&mut self.ctx, self.policy.as_mut(), idxs)
     }
 
+    /// Per-layer event `e_l`: block until the layer's deltas landed — for
+    /// policies that gate (Alg. 3).  Stall-free policies own all delta
+    /// application themselves (their bounded-staleness drain), so the
+    /// driver does nothing here.
+    fn sync_layer(&mut self, idxs: &[usize]) -> Result<()> {
+        if self.policy.gates_layer_fwd() {
+            self.wait_for_params(idxs)?;
+        }
+        Ok(())
+    }
+
     /// Forward through all layers; returns (per-layer input buffers, final h).
     fn forward(
         &mut self,
@@ -133,7 +144,7 @@ impl<'e> Trainer<'e> {
         // Event for the embedding/head params ("layer -1").
         if wait_events {
             let head_params = self.ctx.head_param_indices();
-            self.wait_for_params(&head_params)?;
+            self.sync_layer(&head_params)?;
         }
         let ef = eng.exec("embed_fwd")?;
         let wte = self.ctx.params.index("wte").unwrap();
@@ -145,7 +156,7 @@ impl<'e> Trainer<'e> {
         for layer in 0..c.n_layer {
             if wait_events {
                 let idxs: Vec<usize> = self.ctx.params.block_range(&man, layer).collect();
-                self.wait_for_params(&idxs)?;
+                self.sync_layer(&idxs)?;
             }
             let bf = eng.exec("block_fwd")?;
             let range = self.ctx.params.block_range(&man, layer);
@@ -308,8 +319,11 @@ impl<'e> Trainer<'e> {
             }
         }
 
-        // Final drain so reported state is consistent.
+        // Final drain so reported state is consistent: policies holding
+        // deferred work (async hold buffers) flush first, then the generic
+        // in-flight wait covers the gating policies.
         if self.ctx.cfg.policy.offloads() {
+            self.policy.finish(&mut self.ctx)?;
             let all = self.ctx.all_param_indices();
             self.wait_for_params(&all)?;
         }
@@ -366,15 +380,29 @@ impl<'e> Trainer<'e> {
             final_eval_loss: metrics.eval_loss.last().map(|&(_, l)| l),
             tokens_per_s: tokens / wall,
             link_codec: self.ctx.codec.name(),
+            link_clock: self.ctx.clock.name(),
             bytes_up,
             bytes_down,
             raw_bytes_up: raw_up,
             raw_bytes_down: raw_down,
-            stall_secs: metrics.phases.get("stall_e").map(|s| s.total()).unwrap_or(0.0)
-                + metrics.phases.get("barrier").map(|s| s.total()).unwrap_or(0.0),
+            // Real clock: the measured blocking waits — per-layer events /
+            // barrier pops (`stall_e`; Zero's `barrier` phase wraps the
+            // same span, so it stays out of the sum) and the async deadline
+            // drain (`stall_s`).  Virtual clock: ONLY the deterministic
+            // modeled gated link exposure (`stall_v`) — the measured phases
+            // are scheduler noise there (links never sleep) and mixing them
+            // in would drown the model and break determinism.
+            stall_secs: if self.ctx.clock.is_virtual() {
+                metrics.phases.get("stall_v").map(|s| s.total()).unwrap_or(0.0)
+            } else {
+                metrics.phases.get("stall_e").map(|s| s.total()).unwrap_or(0.0)
+                    + metrics.phases.get("stall_s").map(|s| s.total()).unwrap_or(0.0)
+            },
             cpu_busy_secs: self.ctx.updater.as_ref().map(|u| u.busy_secs()).unwrap_or(0.0),
             link_busy_secs: link_busy,
             projector_refreshes: 0,
+            stale_drains: 0,
+            max_delta_staleness: 0,
             pool_hit_rate: self.ctx.pool.stats().hit_rate(),
             loss_curve: metrics.loss.clone(),
             eval_curve: metrics.eval_loss.clone(),

@@ -56,7 +56,7 @@ impl CpuUpdater {
             .spawn(move || {
                 while let Some(msg) = ingress.pop() {
                     let t0 = std::time::Instant::now();
-                    let OffloadMsg { key, data, prio, step } = msg;
+                    let OffloadMsg { key, data, prio, step, link_ns } = msg;
                     let n = data.elems;
                     let mut g = pool.take_raw(n);
                     codec
@@ -86,7 +86,11 @@ impl CpuUpdater {
                         Ordering::Relaxed,
                     );
                     ud.fetch_add(1, Ordering::Relaxed);
-                    egress.push(prio, DeltaMsg { key, delta: wire, prio, step });
+                    // The delta inherits the gradient's accumulated d2h
+                    // charge; the h2d link adds its own on the way back, so
+                    // the applied delta carries its full round-trip link
+                    // time.
+                    egress.push(prio, DeltaMsg { key, delta: wire, prio, step, link_ns });
                 }
             })
             .expect("spawn cpu-updater");
@@ -133,6 +137,7 @@ mod tests {
             data: WirePayload::detached(f32_codec().as_ref(), data),
             prio: 0,
             step,
+            link_ns: 0,
         }
     }
 
@@ -164,6 +169,25 @@ mod tests {
         assert_eq!(upd.updates_done.load(Ordering::Relaxed), 2);
         assert_eq!(upd.states.lock().unwrap().get(&key).unwrap().step, 2);
 
+        ingress.close();
+        upd.join();
+    }
+
+    /// The updater must hand the producing step and the accumulated d2h
+    /// link charge through to the delta — the staleness bound and the
+    /// modeled stall accounting both key off them.
+    #[test]
+    fn updater_carries_step_and_link_charge() {
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::new());
+        let mut upd = spawn_plain(ingress.clone(), egress.clone());
+        let key = ParamKey { param_index: 1, kind: None };
+        let mut m = msg(&key, &[1.0], 9);
+        m.link_ns = 123_456;
+        ingress.push(0, m);
+        let d = egress.pop().unwrap();
+        assert_eq!(d.step, 9);
+        assert_eq!(d.link_ns, 123_456, "delta inherits the gradient's d2h charge");
         ingress.close();
         upd.join();
     }
@@ -216,6 +240,7 @@ mod tests {
                     data: WirePayload::detached(codec.as_ref(), &g),
                     prio: 0,
                     step,
+                    link_ns: 0,
                 },
             );
             let d = egress.pop().unwrap();
@@ -269,7 +294,7 @@ mod tests {
             g.fill(0.25);
             let wire = WirePayload::from_pool(codec.as_ref(), &pool, &g);
             drop(g);
-            ingress.push(0, OffloadMsg { key: key.clone(), data: wire, prio: 0, step });
+            ingress.push(0, OffloadMsg { key: key.clone(), data: wire, prio: 0, step, link_ns: 0 });
             let d = egress.pop().unwrap();
             assert_eq!(d.delta.elems, len);
             // Driver-side apply: decode into a pooled buffer, then both

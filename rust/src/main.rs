@@ -3,17 +3,26 @@
 //! ```text
 //! lsp-offload analyze   [--profile workstation|laptop]
 //!     Tables 1/5, Table 2, the Observation bound, Eq.1 vs Eq.4.
-//! lsp-offload simulate  [--schedule all|zero|lsp-layerwise|...]
+//! lsp-offload simulate  [--schedule all|zero|lsp-layerwise|async-lsp|...]
 //!                       [--profile ...] [--model llama7b|gpt2-1.3b]
 //!                       [--tokens N] [--d-sub N] [--iters N]
 //!                       [--link-codec f32|bf16|int8|sparse-int8]
+//!                       [--async-rho X] [--async-staleness S]
 //!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a);
-//!     `--link-codec` prices transfers at the encoded payload size.
-//! lsp-offload train     [--preset tiny|small|mid] [--policy lsp|zero|...]
+//!     `--link-codec` prices transfers at the encoded payload size, the
+//!     async knobs shape the stall-free schedule (and its predicted gated
+//!     link exposure, printed alongside the rows).
+//! lsp-offload train     [--preset tiny|small|mid]
+//!                       [--policy lsp|async-lsp|zero|...]
 //!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
 //!                       [--link-codec f32|bf16|int8|sparse|sparse-int8|auto]
+//!                       [--link-clock real|virtual|auto]
+//!                       [--async-rho X] [--async-staleness S]
 //!     Real training over the PJRT artifacts with throttled links; link
 //!     payloads cross in the chosen wire format (`auto` = policy default).
+//!     `async-lsp` applies the top-rho important slice synchronously on the
+//!     device and bounds tail-delta staleness by S steps; the virtual link
+//!     clock replaces bandwidth sleeps with a deterministic counter.
 //! lsp-offload bias      [--preset tiny|small] [--calib N] [--val N]
 //!     Estimation-bias study: learned sparse vs random vs GaLore SVD
 //!     (Figs 7b/9).
@@ -98,15 +107,26 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
         // Same parser as the train config: `auto` = native pricing.
         w.link_codec = lsp_offload::config::parse_link_codec(name)?;
     }
+    if let Some(v) = args.get_f64("async-rho")? {
+        if !(0.0..=1.0).contains(&v) {
+            bail!("--async-rho {v} must be in [0, 1]");
+        }
+        w.async_rho = v;
+    }
+    if let Some(v) = args.get_u64("async-staleness")? {
+        w.async_staleness = v;
+    }
     let iters = args.get_u64("iters")?.unwrap_or(4) as usize;
     let which = args.get("schedule").unwrap_or("all");
     println!(
-        "simulating {} on {} (tokens={}, d={}, codec={}, {} iters)",
+        "simulating {} on {} (tokens={}, d={}, codec={}, rho={}, S={}, {} iters)",
         w.name,
         hw.name,
         w.tokens,
         w.d_sub,
         w.link_codec.map(|c| c.name()).unwrap_or("native"),
+        w.async_rho,
+        w.async_staleness,
         iters
     );
     let kinds: Vec<ScheduleKind> = if which == "all" {
@@ -115,9 +135,24 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
         vec![ScheduleKind::by_name(which)
             .ok_or_else(|| anyhow::anyhow!("unknown schedule {which:?}"))?]
     };
+    let run_async = kinds.contains(&ScheduleKind::AsyncLsp);
     for kind in kinds {
         let rep = build_schedule(kind, &hw, &w, iters)?;
         rep.print_row();
+    }
+    if run_async {
+        // Predicted stall: the same gated-link-exposure arithmetic the
+        // runtime's virtual-clock stall counter reports.
+        use lsp_offload::sim::cost_model::{gated_link_exposure, lsp_gated_link_exposure, Costs};
+        let c = Costs::derive(&hw, &w);
+        let lsp_stall = lsp_gated_link_exposure(&c, w.n_layers);
+        let async_stall = gated_link_exposure(&c, w.n_layers, w.async_rho, w.async_staleness);
+        println!(
+            "predicted gated link exposure per iter: lsp {:.4}s -> async-lsp {:.4}s ({:.0}% reduction)",
+            lsp_stall,
+            async_stall,
+            (1.0 - async_stall / lsp_stall.max(1e-12)) * 100.0
+        );
     }
     Ok(())
 }

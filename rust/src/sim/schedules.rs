@@ -30,6 +30,11 @@ pub enum ScheduleKind {
     /// Full LSP-Offload (Alg. 3 / Fig. 3d): compress + layer-wise overlap
     /// with the FCFS->LCFS transition heuristic.
     LspLayerwise,
+    /// Stall-free LSP (`async-lsp`): the top-rho important slice applies
+    /// on-GPU right after each layer's backward; only the (1-rho) tail
+    /// crosses the links, and a fwd gates on the tail apply from S+1
+    /// iterations back (bounded staleness) instead of the previous one.
+    AsyncLsp,
 }
 
 impl ScheduleKind {
@@ -41,6 +46,7 @@ impl ScheduleKind {
             "zero-delayed" | "delayed" => Some(ScheduleKind::ZeroDelayed),
             "zero-layerwise" | "layerwise" => Some(ScheduleKind::ZeroLayerwise),
             "lsp" | "lsp-layerwise" => Some(ScheduleKind::LspLayerwise),
+            "async-lsp" | "async" => Some(ScheduleKind::AsyncLsp),
             _ => None,
         }
     }
@@ -53,16 +59,18 @@ impl ScheduleKind {
             ScheduleKind::ZeroDelayed => "zero-delayed",
             ScheduleKind::ZeroLayerwise => "zero-layerwise",
             ScheduleKind::LspLayerwise => "lsp-layerwise",
+            ScheduleKind::AsyncLsp => "async-lsp",
         }
     }
 
-    pub const ALL: [ScheduleKind; 6] = [
+    pub const ALL: [ScheduleKind; 7] = [
         ScheduleKind::Native,
         ScheduleKind::SwapOnly,
         ScheduleKind::Zero,
         ScheduleKind::ZeroDelayed,
         ScheduleKind::ZeroLayerwise,
         ScheduleKind::LspLayerwise,
+        ScheduleKind::AsyncLsp,
     ];
 }
 
@@ -77,6 +85,7 @@ pub fn build_sim(kind: ScheduleKind, hw: &HardwareProfile, w: &Workload, iters: 
         ScheduleKind::ZeroDelayed => zero_delayed(&mut sim, &c, w, iters),
         ScheduleKind::ZeroLayerwise => layerwise(&mut sim, &c, w, iters, false),
         ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
+        ScheduleKind::AsyncLsp => layerwise_async(&mut sim, &c, w, iters),
     }
     sim
 }
@@ -97,6 +106,7 @@ pub fn build_schedule(
         ScheduleKind::ZeroDelayed => zero_delayed(&mut sim, &c, w, iters),
         ScheduleKind::ZeroLayerwise => layerwise(&mut sim, &c, w, iters, false),
         ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
+        ScheduleKind::AsyncLsp => layerwise_async(&mut sim, &c, w, iters),
     }
     let sched = sim.run()?;
     Ok(IterReport::from_schedule(
@@ -396,6 +406,69 @@ fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: boo
     }
 }
 
+/// Stall-free LSP schedule (`async-lsp`): per layer, the backward +
+/// compress is followed by an immediate on-GPU apply of the important
+/// slice; only the (1-rho)-scaled tail runs the offload -> CPU update ->
+/// upload pipeline, and a forward gates on the tail apply from S+1
+/// iterations back (bounded staleness) instead of the previous one.  Pure
+/// FCFS priorities suffice — the LCFS transition exists to unblock the next
+/// iteration's first fwd, which no longer waits on this iteration's tail.
+fn layerwise_async(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
+    let n = w.n_layers;
+    let q = (1.0 - w.async_rho.clamp(0.0, 1.0)).max(0.0);
+    let s = w.async_staleness as usize;
+    let (off_t, up_t, upd_t) =
+        (q * c.offload_layer_sub, q * c.upload_layer_sub, q * c.upd_layer_cpu_sub);
+    // gates[it][l] = the apply task fwd l of iteration it + s + 1 waits on.
+    let mut gates: Vec<Vec<TaskId>> = Vec::with_capacity(iters);
+    for it in 0..iters {
+        let mut prev: Option<TaskId> = None;
+        for l in 0..n {
+            let mut deps: Vec<TaskId> = prev.into_iter().collect();
+            if it > s {
+                deps.push(gates[it - 1 - s][l]);
+            }
+            prev = Some(sim.add(format!("i{it}.fwd{l}"), Resource::Gpu, c.fwd_layer_gpu, &deps));
+        }
+        let mut bwd_prev = prev.unwrap();
+        let mut iter_gates: Vec<Option<TaskId>> = vec![None; n];
+        for l in (0..n).rev() {
+            let bwd =
+                sim.add(format!("i{it}.bwd{l}"), Resource::Gpu, c.bwd_layer_gpu, &[bwd_prev]);
+            bwd_prev = bwd;
+            let cmp =
+                sim.add(format!("i{it}.cmp{l}"), Resource::Gpu, c.compress_layer_gpu, &[bwd]);
+            // Important slice: synchronous on-GPU apply right away (absent
+            // when rho = 0 — nothing to apply).
+            let sync = if q < 1.0 {
+                sim.add(format!("i{it}.sync{l}"), Resource::Gpu, c.apply_layer_gpu, &[cmp])
+            } else {
+                cmp
+            };
+            if q > 0.0 {
+                let depth = (n - 1 - l) as i64;
+                let off =
+                    sim.add_prio(format!("i{it}.off{l}"), Resource::D2H, off_t, &[cmp], depth);
+                let upd =
+                    sim.add_prio(format!("i{it}.upd{l}"), Resource::Cpu, upd_t, &[off], depth);
+                let up = sim.add_prio(format!("i{it}.up{l}"), Resource::H2D, up_t, &[upd], depth);
+                let apply = sim.add_prio(
+                    format!("i{it}.apply{l}"),
+                    Resource::Gpu,
+                    c.apply_layer_gpu,
+                    &[up],
+                    1000 + l as i64,
+                );
+                iter_gates[l] = Some(apply);
+            } else {
+                // rho = 1: nothing ships; the sync apply is the gate.
+                iter_gates[l] = Some(sync);
+            }
+        }
+        gates.push(iter_gates.into_iter().map(|t| t.expect("every layer gated")).collect());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,6 +540,33 @@ mod tests {
         // DES must not beat the analytic lower bound, and should be close.
         assert!(des >= eq4 * 0.95, "DES {des} below Eq.4 {eq4}");
         assert!(des <= eq4 * 1.35, "DES {des} far above Eq.4 {eq4}");
+    }
+
+    #[test]
+    fn async_lsp_never_slower_than_lsp_and_staleness_helps() {
+        let (hw, w) = setup();
+        let lsp = build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 4).unwrap().iter_time;
+        let asn = build_schedule(ScheduleKind::AsyncLsp, &hw, &w, 4).unwrap().iter_time;
+        assert!(asn <= lsp * 1.05, "async {asn} vs lsp {lsp}");
+
+        let mut w0 = w.clone();
+        w0.async_staleness = 0;
+        let t0 = build_schedule(ScheduleKind::AsyncLsp, &hw, &w0, 4).unwrap().iter_time;
+        let mut w4 = w.clone();
+        w4.async_staleness = 4;
+        let t4 = build_schedule(ScheduleKind::AsyncLsp, &hw, &w4, 4).unwrap().iter_time;
+        assert!(t4 <= t0 * 1.02, "staleness 4 {t4} vs staleness 0 {t0}");
+
+        // The rho corners validate, and all-sync (ships nothing) never
+        // loses to the default split (same sync work, no tail pipeline).
+        let mut w_sync = w.clone();
+        w_sync.async_rho = 1.0;
+        let ts = build_schedule(ScheduleKind::AsyncLsp, &hw, &w_sync, 4).unwrap().iter_time;
+        assert!(ts <= asn * 1.02, "all-sync {ts} vs default async {asn}");
+        let mut w_async = w.clone();
+        w_async.async_rho = 0.0;
+        let ta = build_schedule(ScheduleKind::AsyncLsp, &hw, &w_async, 4).unwrap().iter_time;
+        assert!(ta.is_finite() && ta > 0.0);
     }
 
     #[test]

@@ -5,44 +5,60 @@
 use std::sync::Arc;
 
 use lsp_offload::codec::{make_codec, ByteBuf, CodecKind};
-use lsp_offload::coordinator::comm::{Link, OffloadMsg, ParamKey, PrioQueue, WirePayload};
+use lsp_offload::coordinator::comm::{
+    transfer_ns, Link, LinkClock, OffloadMsg, ParamKey, PrioQueue, WirePayload,
+};
 use lsp_offload::coordinator::worker::CpuUpdater;
 use lsp_offload::tensor::kernel::KernelConfig;
 use lsp_offload::util::bufpool::BufPool;
 use lsp_offload::util::rng::Rng;
 
 /// A throttled link must charge its bandwidth with the *encoded* bytes:
-/// the same payload in bf16 crosses a thin link ~2x faster than in f32,
-/// and the wire/raw counters record both sizes.
+/// the same payload in bf16 costs exactly half the f32 virtual transfer
+/// time, and the wire/raw counters record both sizes.  The virtual clock
+/// makes this an exact-arithmetic assertion instead of the old
+/// wall-clock-ratio one (which burned 150 ms of real sleeping and a
+/// scheduler-noise tolerance).
 #[test]
 fn link_time_scales_with_encoded_bytes() {
     let mut rng = Rng::new(1);
     let data: Vec<f32> = (0..250_000).map(|_| rng.normal()).collect();
-    let mut elapsed = Vec::new();
+    let mut charged = Vec::new();
     for kind in [CodecKind::F32Raw, CodecKind::Bf16] {
         let codec = make_codec(kind);
         let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
         let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
-        // 10 MB/s: f32 payload (1 MB) ~100 ms, bf16 (500 KB) ~50 ms —
-        // large enough that scheduler noise cannot blur the 2x gap.
+        // 10 MB/s: f32 payload (1 MB) = 100 ms virtual, bf16 = 50 ms.
         let mut link = Link::spawn(
             "codec-test",
             10e6,
             1.0,
+            LinkClock::new_virtual(),
             ingress.clone(),
             egress.clone(),
             |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
             |m| m.prio,
+            |m, ns| m.link_ns += ns,
         );
         let key = ParamKey { param_index: 0, kind: None };
-        let t0 = std::time::Instant::now();
         ingress.push(
             0,
-            OffloadMsg { key, data: WirePayload::detached(codec.as_ref(), &data), prio: 0, step: 0 },
+            OffloadMsg {
+                key,
+                data: WirePayload::detached(codec.as_ref(), &data),
+                prio: 0,
+                step: 0,
+                link_ns: 0,
+            },
         );
         let got = egress.pop().unwrap();
-        elapsed.push(t0.elapsed().as_secs_f64());
         assert_eq!(got.data.elems, data.len());
+        let want_ns = transfer_ns(codec.wire_len(&data), 10e6, 1.0);
+        assert_eq!(got.link_ns, want_ns, "{}: message carries its charge", codec.name());
+        let entries = link.ledger.snapshot();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].transfer_ns, want_ns);
+        charged.push(want_ns);
         assert_eq!(
             link.bytes_moved.load(std::sync::atomic::Ordering::Relaxed),
             codec.wire_len(&data) as u64
@@ -54,11 +70,9 @@ fn link_time_scales_with_encoded_bytes() {
         ingress.close();
         link.stop();
     }
-    let (f32_t, bf16_t) = (elapsed[0], elapsed[1]);
-    assert!(
-        bf16_t < f32_t * 0.75,
-        "bf16 transfer ({bf16_t:.3}s) must be well under f32 ({f32_t:.3}s)"
-    );
+    let (f32_ns, bf16_ns) = (charged[0], charged[1]);
+    assert_eq!(f32_ns, 100_000_000);
+    assert_eq!(bf16_ns * 2, f32_ns, "bf16 wire is exactly half of f32");
 }
 
 /// Wire sizes at a subspace-gradient-shaped payload: every lossy codec
@@ -101,19 +115,23 @@ fn updater_round_trips_encoded_payloads() {
         "d2h",
         1e9,
         1.0,
+        LinkClock::Real,
         d2h_in.clone(),
         d2h_out.clone(),
         |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
         |m| m.prio,
+        |m, ns| m.link_ns += ns,
     );
     let mut h2d = Link::spawn(
         "h2d",
         1e9,
         1.0,
+        LinkClock::Real,
         h2d_in.clone(),
         h2d_out.clone(),
         |m: &lsp_offload::coordinator::comm::DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
         |m| m.prio,
+        |m, ns| m.link_ns += ns,
     );
     let mut upd = CpuUpdater::spawn(
         d2h_out.clone(),
@@ -130,7 +148,7 @@ fn updater_round_trips_encoded_payloads() {
     for step in 0..4u64 {
         let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let wire = WirePayload::from_pool(codec.as_ref(), &pool, &g);
-        d2h_in.push(0, OffloadMsg { key: key.clone(), data: wire, prio: 0, step });
+        d2h_in.push(0, OffloadMsg { key: key.clone(), data: wire, prio: 0, step, link_ns: 0 });
         let d = h2d_out.pop().unwrap();
         assert_eq!(d.key, key);
         assert_eq!(d.delta.elems, n);

@@ -27,11 +27,32 @@ set -euo pipefail
 cd "$(dirname "$0")/../rust"
 ROOT="$(cd .. && pwd)"
 
+# Tier-1 tests must never sleep-and-assert around the link path: the
+# timing-sensitive suite runs on the virtual link clock (LinkClock::Virtual
+# + LinkLedger condvar sync), which is deterministic and takes milliseconds.
+# The gate greps the integration tests and the comm.rs unit-test module for
+# real sleeps; the Link's own Real-clock sleep (the bandwidth emulation
+# itself, outside #[cfg(test)]) is exempt by construction.
+echo "== link-path real-sleep gate =="
+sleep_hits="$(grep -n "thread::sleep" tests/*.rs 2>/dev/null || true)"
+comm_test_hits="$(awk '/#\[cfg\(test\)\]/{t=1} t && /thread::sleep/ {print FILENAME ":" FNR ": " $0}' \
+    src/coordinator/comm.rs || true)"
+if [[ -n "$sleep_hits$comm_test_hits" ]]; then
+    echo "FAIL: real sleep on the link-path test set — use LinkClock::Virtual + LinkLedger::wait_len"
+    [[ -n "$sleep_hits" ]] && echo "$sleep_hits"
+    [[ -n "$comm_test_hits" ]] && echo "$comm_test_hits"
+    exit 1
+fi
+echo "   clean"
+
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+# Timing-sensitive tests default to the deterministic virtual clock (the
+# trainer's Auto mode consults LSP_LINK_CLOCK); export LSP_LINK_CLOCK=real
+# to exercise the sleeping bandwidth emulation instead.
+echo "== cargo test -q (LSP_LINK_CLOCK=${LSP_LINK_CLOCK:-virtual}) =="
+LSP_LINK_CLOCK="${LSP_LINK_CLOCK:-virtual}" cargo test -q
 
 echo "== cargo bench --bench hotpath -- smoke =="
 # Remove any previous smoke output first: the bench falls back to writing
