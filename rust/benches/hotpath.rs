@@ -270,6 +270,136 @@ fn main() {
         }
     }
 
+    if want("chunked_link") {
+        // The sub-layer chunked schedule path end-to-end (encode per chunk
+        // -> virtual-clock links -> per-chunk CPU Adam -> reassembly), at
+        // the paper-relevant subspace payload shapes: 2^18 elems = a d=512
+        // subspace gradient (2^16 = d=256 in smoke).  `secs_min` is the
+        // wall cost of the full round trip (the trajectory gate covers the
+        // new hot path); `stall_v_secs` is the deterministic modeled gated
+        // link exposure of one round — chunked rows must sit below the
+        // chunk=0 row by the (C+1)/(2C) pipelining factor.
+        use lsp_offload::coordinator::comm::{
+            chunk_pipeline_factor, encode_chunked, n_chunks_for, DeltaMsg, Link, LinkClock,
+            OffloadMsg, ParamKey, PrioQueue, VirtualClock,
+        };
+        use lsp_offload::coordinator::pipeline::{InFlight, Reassembler};
+        use lsp_offload::coordinator::worker::CpuUpdater;
+        use lsp_offload::util::bufpool::BufPool;
+        use std::sync::Arc;
+
+        // The smoke run keeps the 2^16 rows so the perf gate shares
+        // (name, shape, impl) keys with the full trajectory, like codec's.
+        let sizes: &[usize] = if smoke { &[1 << 16] } else { &[1 << 16, 1 << 18] };
+        let mut rng = Rng::new(17);
+        let codec = make_codec(CodecKind::F32Raw);
+        let cases: Vec<(usize, usize)> = sizes
+            .iter()
+            .flat_map(|&n| [0usize, 4096, 65536].into_iter().map(move |c| (n, c)))
+            .collect();
+        for (n_elems, chunk) in cases {
+            let payload: Vec<f32> = (0..n_elems).map(|_| rng.normal()).collect();
+            let pool = BufPool::new();
+            let clock = Arc::new(VirtualClock::default());
+            let d2h_in = Arc::new(PrioQueue::new());
+            let d2h_out = Arc::new(PrioQueue::new());
+            let h2d_in = Arc::new(PrioQueue::new());
+            let delta_out = Arc::new(PrioQueue::<DeltaMsg>::new());
+            let mut d2h = Link::spawn(
+                "d2h",
+                1e12, // negligible modeled bandwidth cost; we bench compute
+                1.0,
+                LinkClock::Virtual(clock.clone()),
+                d2h_in.clone(),
+                d2h_out.clone(),
+                |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
+                |m| m.prio,
+                |m, ns| m.link_ns += ns,
+            );
+            let mut h2d = Link::spawn(
+                "h2d",
+                1e12,
+                1.0,
+                LinkClock::Virtual(clock.clone()),
+                h2d_in.clone(),
+                delta_out.clone(),
+                |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
+                |m| m.prio,
+                |m, ns| m.link_ns += ns,
+            );
+            let mut upd = CpuUpdater::spawn(
+                d2h_out.clone(),
+                h2d_in.clone(),
+                1.0,
+                pool.clone(),
+                KernelConfig::single_threaded(),
+                codec.clone(),
+            );
+            let key = ParamKey { param_index: 0, kind: None };
+            let mut step = 0u64;
+            let r = bench(&format!("chunked_link n={n_elems} chunk={chunk}"), budget, || {
+                let mut pending = InFlight::default();
+                let mut reasm = Reassembler::default();
+                pending.insert_chunked(
+                    key.clone(),
+                    step,
+                    n_chunks_for(n_elems, chunk) as u32,
+                );
+                encode_chunked(codec.as_ref(), &pool, &payload, chunk, |data, hdr| {
+                    d2h_in.push(
+                        0,
+                        OffloadMsg {
+                            key: key.clone(),
+                            data,
+                            prio: 0,
+                            step,
+                            link_ns: 0,
+                            chunk: hdr,
+                        },
+                    );
+                });
+                loop {
+                    let msg = delta_out.pop().expect("pipeline alive");
+                    if let Some(ld) = reasm
+                        .ingest(codec.as_ref(), &pool, &mut pending, msg)
+                        .expect("chunk ingestion")
+                    {
+                        std::hint::black_box(ld.data.len());
+                        break;
+                    }
+                }
+                step += 1;
+            });
+            // The deterministic stall model of one gated round trip: total
+            // link charge scaled by the pipelining factor.  Bandwidth here
+            // is arbitrary (1 GB/s) — only the RATIO between rows matters.
+            let n_chunks = n_chunks_for(n_elems, chunk) as u64;
+            let round_trip_ns = 2.0 * (n_elems * 4) as f64; // 1 GB/s, both directions
+            let stall_v = round_trip_ns * chunk_pipeline_factor(n_chunks) / 1e9;
+            println!(
+                "    -> {n_chunks} chunks, modeled gated stall {:.6}s/round (factor {:.3})",
+                stall_v,
+                chunk_pipeline_factor(n_chunks)
+            );
+            results.push(Json::obj(vec![
+                ("name", Json::Str("chunked_link".into())),
+                ("shape", Json::Str(format!("n={n_elems} chunk={chunk}"))),
+                ("impl", Json::Str("pipeline".into())),
+                ("secs_min", Json::Num(r.min)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("gops", Json::Num((n_elems * 4) as f64 / r.min / 1e9)),
+                ("stall_v_secs", Json::Num(stall_v)),
+            ]));
+            d2h_in.close();
+            d2h_out.close();
+            h2d_in.close();
+            delta_out.close();
+            d2h.stop();
+            h2d.stop();
+            upd.join();
+        }
+    }
+
     if want("queue") {
         use lsp_offload::coordinator::comm::PrioQueue;
         let q: PrioQueue<u64> = PrioQueue::new();

@@ -25,6 +25,27 @@ pub fn parse_link_codec(s: &str) -> Result<Option<CodecKind>> {
     }
 }
 
+/// Smallest non-zero `link_chunk_elems` accepted: below this the per-chunk
+/// message/codec-header overhead dominates any pipelining win.
+pub const MIN_LINK_CHUNK_ELEMS: u64 = 64;
+/// Largest `link_chunk_elems` accepted (16 Mi elements = a 64 MiB f32
+/// payload — larger than any per-parameter payload this repo ships).
+pub const MAX_LINK_CHUNK_ELEMS: u64 = 16_777_216;
+
+/// Validate a `--link-chunk-elems` / `"link_chunk_elems"` value: `0`
+/// disables chunking (whole-payload transfers); anything else must be in
+/// `[MIN_LINK_CHUNK_ELEMS, MAX_LINK_CHUNK_ELEMS]`.  Shared by the train
+/// config and the simulator so the flag means the same everywhere.
+pub fn parse_link_chunk_elems(v: u64) -> Result<usize> {
+    if v != 0 && !(MIN_LINK_CHUNK_ELEMS..=MAX_LINK_CHUNK_ELEMS).contains(&v) {
+        bail!(
+            "link_chunk_elems {v} must be 0 (whole-payload) or in \
+             [{MIN_LINK_CHUNK_ELEMS}, {MAX_LINK_CHUNK_ELEMS}]"
+        );
+    }
+    Ok(v as usize)
+}
+
 /// `--key value` / `--flag` parser. Positional args are kept in order.
 #[derive(Debug, Default)]
 pub struct CliArgs {
@@ -122,6 +143,12 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
                 cfg.link_clock = LinkClockMode::by_name(v.as_str()?)
                     .ok_or_else(|| anyhow::anyhow!("unknown link clock {v}"))?
             }
+            // Sub-layer link chunking (PIPO-style pipelining): payloads
+            // split into ceil(n / link_chunk_elems) wire chunks; 0 =
+            // whole-payload transfers.
+            "link_chunk_elems" => {
+                cfg.link_chunk_elems = parse_link_chunk_elems(v.as_usize()? as u64)?
+            }
             // async-lsp knobs: bounded-staleness window S and importance
             // fraction rho (see coordinator::policies::async_lsp).
             "async_staleness" => cfg.async_staleness = v.as_usize()? as u64,
@@ -216,6 +243,9 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     if let Some(v) = args.get("link-clock") {
         cfg.link_clock = LinkClockMode::by_name(v)
             .ok_or_else(|| anyhow::anyhow!("unknown link clock {v:?}"))?;
+    }
+    if let Some(v) = args.get_u64("link-chunk-elems")? {
+        cfg.link_chunk_elems = parse_link_chunk_elems(v)?;
     }
     if let Some(v) = args.get_u64("async-staleness")? {
         cfg.async_staleness = v;
@@ -330,6 +360,32 @@ mod tests {
         assert_eq!(cfg.async_staleness, 0);
         assert!((cfg.async_rho - 1.0).abs() < 1e-9);
         assert_eq!(cfg.link_clock, LinkClockMode::Real);
+    }
+
+    #[test]
+    fn link_chunk_elems_flag_and_json_are_range_validated() {
+        // Default: whole-payload transfers.
+        assert_eq!(train_config_from(&argv("train")).unwrap().link_chunk_elems, 0);
+
+        let cfg = train_config_from(&argv("train --link-chunk-elems 4096")).unwrap();
+        assert_eq!(cfg.link_chunk_elems, 4096);
+        let cfg = train_config_from(&argv("train --link-chunk-elems 0")).unwrap();
+        assert_eq!(cfg.link_chunk_elems, 0, "0 disables chunking");
+        // Range boundaries.
+        assert_eq!(
+            train_config_from(&argv("train --link-chunk-elems 64")).unwrap().link_chunk_elems,
+            64
+        );
+        assert!(train_config_from(&argv("train --link-chunk-elems 63")).is_err());
+        assert!(train_config_from(&argv("train --link-chunk-elems 16777217")).is_err());
+        assert!(train_config_from(&argv("train --link-chunk-elems banana")).is_err());
+
+        let j = Json::parse(r#"{"link_chunk_elems": 65536}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.link_chunk_elems, 65536);
+        let bad = Json::parse(r#"{"link_chunk_elems": 8}"#).unwrap();
+        assert!(apply_json(&mut TrainConfig::default(), &bad).is_err());
     }
 
     #[test]

@@ -89,6 +89,100 @@ impl WirePayload {
     }
 }
 
+/// Sub-layer chunk header (PIPO-style, arXiv:2504.03664): one logical
+/// gradient/delta of `total_elems` elements is split into `of` wire
+/// messages, each carrying the element span starting at `elem_offset`.
+/// `of = 1` is the whole-payload (pre-chunking) shape; see
+/// `PipelineCtx::push_offload` for the split and `pipeline::Reassembler`
+/// for the other end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkHeader {
+    /// 0-based chunk index within the logical payload.
+    pub idx: u32,
+    /// Total number of wire chunks the logical payload was split into
+    /// (always >= 1).
+    pub of: u32,
+    /// First logical element this chunk covers.
+    pub elem_offset: usize,
+    /// Element count of the *whole* logical payload (the chunk's own
+    /// element count travels in its `WirePayload::elems`).
+    pub total_elems: usize,
+}
+
+impl ChunkHeader {
+    /// The single-chunk header covering a whole payload of `total_elems`.
+    pub fn whole(total_elems: usize) -> ChunkHeader {
+        ChunkHeader { idx: 0, of: 1, elem_offset: 0, total_elems }
+    }
+
+    /// Is this the entire logical payload in one message?
+    pub fn is_whole(&self) -> bool {
+        self.of == 1
+    }
+}
+
+/// Number of wire chunks a payload of `elems` elements splits into under a
+/// `chunk_elems` budget (`0` = whole-payload, the pre-chunking behavior).
+/// Shared by the runtime split (`PipelineCtx::push_offload`) and the
+/// simulator's chunked task builders so both count chunks identically.
+pub fn n_chunks_for(elems: usize, chunk_elems: usize) -> usize {
+    if chunk_elems == 0 || elems == 0 {
+        1
+    } else {
+        elems.div_ceil(chunk_elems)
+    }
+}
+
+/// Modeled pipelining factor of a chunked round trip: with `C` chunks the
+/// two link directions overlap chunk-wise (chunk i+1 crosses d2h while
+/// chunk i returns over h2d), so the schedule-exposed fraction of the total
+/// round-trip link time `L` is `L * (C + 1) / (2 C)` — exactly `L` at
+/// `C = 1` (no overlap possible), approaching `L / 2` (one direction's
+/// time) as `C` grows.  This is THE arithmetic both the runtime stall
+/// counter (`PipelineCtx::note_gated_delta`) and the analytic model
+/// (`sim::cost_model::chunked_gated_link_exposure`) apply, so the
+/// sim-vs-runtime stall agreement survives chunking.
+pub fn chunk_pipeline_factor(n_chunks: u64) -> f64 {
+    let c = n_chunks.max(1) as f64;
+    (c + 1.0) / (2.0 * c)
+}
+
+/// Split `data` into chunks of at most `chunk_elems` elements
+/// (`0` = a single whole-payload chunk), encode each with `codec` into a
+/// pool-backed payload, and hand `(payload, header)` pairs to `emit` in
+/// chunk order.  The codec is applied *per chunk*, so the link can start
+/// draining chunk 0 while later chunks are still being encoded — the
+/// PIPO-style sub-layer overlap.  With one chunk the encoded bytes are
+/// identical to the unchunked path by construction.
+pub fn encode_chunked<F: FnMut(WirePayload, ChunkHeader)>(
+    codec: &dyn Codec,
+    pool: &BufPool,
+    data: &[f32],
+    chunk_elems: usize,
+    mut emit: F,
+) {
+    let total = data.len();
+    let n_chunks = n_chunks_for(total, chunk_elems);
+    if n_chunks == 1 {
+        emit(WirePayload::from_pool(codec, pool, data), ChunkHeader::whole(total));
+        return;
+    }
+    for idx in 0..n_chunks {
+        let off = idx * chunk_elems;
+        let end = (off + chunk_elems).min(total);
+        let payload = WirePayload::from_pool(codec, pool, &data[off..end]);
+        emit(
+            payload,
+            ChunkHeader {
+                idx: idx as u32,
+                of: n_chunks as u32,
+                elem_offset: off,
+                total_elems: total,
+            },
+        );
+    }
+}
+
 /// Gradient heading CPU-ward (GPU -> CPU direction), already encoded by the
 /// pipeline's codec.
 #[derive(Debug)]
@@ -103,6 +197,17 @@ pub struct OffloadMsg {
     /// far — pure `wire_bytes / bandwidth` arithmetic charged by every link
     /// it crosses, identical under the real and virtual clocks.
     pub link_ns: u64,
+    /// Which slice of the logical gradient this message carries.
+    pub chunk: ChunkHeader,
+}
+
+impl OffloadMsg {
+    /// A single-chunk (whole-payload) message — the pre-chunking wire
+    /// shape, used by every call site that does not split.
+    pub fn whole(key: ParamKey, data: WirePayload, prio: i64, step: u64) -> OffloadMsg {
+        let chunk = ChunkHeader::whole(data.elems);
+        OffloadMsg { key, data, prio, step, link_ns: 0, chunk }
+    }
 }
 
 /// Update delta heading GPU-ward (CPU -> GPU direction); payload encoded
@@ -118,6 +223,18 @@ pub struct DeltaMsg {
     /// Round-trip emulated link time (ns): the gradient's d2h charge plus
     /// this delta's h2d charge.
     pub link_ns: u64,
+    /// Which slice of the logical delta this message carries (mirrors the
+    /// gradient chunk that produced it).
+    pub chunk: ChunkHeader,
+}
+
+impl DeltaMsg {
+    /// A single-chunk (whole-payload) message — the pre-chunking wire
+    /// shape.
+    pub fn whole(key: ParamKey, delta: WirePayload, prio: i64, step: u64) -> DeltaMsg {
+        let chunk = ChunkHeader::whole(delta.elems);
+        DeltaMsg { key, delta, prio, step, link_ns: 0, chunk }
+    }
 }
 
 /// Blocking min-heap priority queue (lowest prio value served first; FIFO
@@ -783,16 +900,14 @@ mod tests {
             |m, ns| m.link_ns += ns,
         );
         let data = vec![1.0f32; 250]; // 1000 wire bytes => 1 ms
-        ingress.push(
+        let mut msg = OffloadMsg::whole(
+            ParamKey { param_index: 0, kind: None },
+            WirePayload::detached(codec.as_ref(), &data),
             0,
-            OffloadMsg {
-                key: ParamKey { param_index: 0, kind: None },
-                data: WirePayload::detached(codec.as_ref(), &data),
-                prio: 0,
-                step: 3,
-                link_ns: 7, // pre-existing charge accumulates
-            },
+            3,
         );
+        msg.link_ns = 7; // pre-existing charge accumulates
+        ingress.push(0, msg);
         let got = egress.pop().unwrap();
         assert_eq!(got.link_ns, 1_000_007);
         assert_eq!(got.step, 3);
@@ -812,6 +927,69 @@ mod tests {
         assert!(!LinkClock::Real.is_virtual());
         assert!(LinkClock::new_virtual().is_virtual());
         assert_eq!(LinkClock::Real.now_ns(), 0);
+    }
+
+    #[test]
+    fn chunk_count_and_pipeline_factor_arithmetic() {
+        // chunk_elems = 0 is the whole-payload (pre-chunking) mode.
+        assert_eq!(n_chunks_for(4096, 0), 1);
+        assert_eq!(n_chunks_for(0, 64), 1);
+        assert_eq!(n_chunks_for(4096, 4096), 1);
+        assert_eq!(n_chunks_for(4097, 4096), 2);
+        assert_eq!(n_chunks_for(256, 64), 4);
+        assert_eq!(n_chunks_for(257, 64), 5);
+        // C = 1 exposes the full round trip; the factor falls toward 1/2.
+        assert_eq!(chunk_pipeline_factor(0), 1.0);
+        assert_eq!(chunk_pipeline_factor(1), 1.0);
+        assert_eq!(chunk_pipeline_factor(2), 0.75);
+        assert_eq!(chunk_pipeline_factor(4), 0.625);
+        let f = chunk_pipeline_factor(1_000_000);
+        assert!(f > 0.5 && f < 0.5001, "{f}");
+        // Monotone non-increasing in C.
+        for c in 1..64u64 {
+            assert!(chunk_pipeline_factor(c + 1) <= chunk_pipeline_factor(c));
+        }
+    }
+
+    /// The per-chunk encoder: chunk headers tile the payload exactly, the
+    /// encoded bytes concatenate to the unchunked encoding for elementwise
+    /// codecs, and a single chunk is byte-identical to the whole payload.
+    #[test]
+    fn encode_chunked_tiles_the_payload() {
+        use crate::codec::{make_codec, CodecKind};
+        let codec = make_codec(CodecKind::F32Raw);
+        let pool = BufPool::new();
+        let data: Vec<f32> = (0..300).map(|i| i as f32 - 150.0).collect();
+
+        // Whole-payload mode: one chunk, bytes identical to a plain encode.
+        let mut whole = Vec::new();
+        encode_chunked(codec.as_ref(), &pool, &data, 0, |p, h| whole.push((p, h)));
+        assert_eq!(whole.len(), 1);
+        assert_eq!(whole[0].1, ChunkHeader::whole(300));
+        assert!(whole[0].1.is_whole());
+        let plain = WirePayload::detached(codec.as_ref(), &data);
+        assert_eq!(whole[0].0.as_bytes(), plain.as_bytes());
+
+        // 128-element chunks: 3 chunks (128 + 128 + 44) tiling [0, 300).
+        let mut chunks = Vec::new();
+        encode_chunked(codec.as_ref(), &pool, &data, 128, |p, h| chunks.push((p, h)));
+        assert_eq!(chunks.len(), 3);
+        let mut covered = 0usize;
+        for (i, (p, h)) in chunks.iter().enumerate() {
+            assert_eq!(h.idx as usize, i);
+            assert_eq!(h.of, 3);
+            assert_eq!(h.total_elems, 300);
+            assert_eq!(h.elem_offset, covered);
+            covered += p.elems;
+            // f32 is elementwise: chunk bytes == the slice of the unchunked
+            // encoding.
+            assert_eq!(
+                p.as_bytes(),
+                &plain.as_bytes()[h.elem_offset * 4..(h.elem_offset + p.elems) * 4]
+            );
+        }
+        assert_eq!(covered, 300, "chunks must partition the payload");
+        assert_eq!(chunks[2].0.elems, 44);
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! The LSP-Offload coordinator — the paper's system contribution, running
 //! for real over the PJRT artifacts.
 //!
+//! A narrative companion to these module docs — the layer diagram, the
+//! life of one gradient through the (optionally chunked) pipeline, and
+//! the paper-to-code mapping table (Alg. 1-3 / Eq. 4 -> `file:symbol`) —
+//! lives in `rust/src/coordinator/ARCHITECTURE.md`.
+//!
 //! # Layering
 //!
 //! The coordinator is a policy-trait pipeline engine in three layers:
@@ -31,6 +36,17 @@
 //! emulated bandwidth is charged with true wire bytes (bf16 / block-int8 /
 //! sparse-index encodings cross the link smaller than f32; the per-policy
 //! defaults and the `--link-codec` override live in `codec`).
+//!
+//! Payloads may additionally be split into **sub-layer chunks**
+//! (`--link-chunk-elems`, PIPO-style pipelining): `PipelineCtx::push_offload`
+//! encodes and enqueues `ceil(n / chunk_elems)` wire messages per logical
+//! gradient (each tagged with a `comm::ChunkHeader`), the CPU updater runs
+//! fused Adam per chunk against `elem_offset` slices of one logical moment
+//! map, and returning delta chunks reassemble in `pipeline::Reassembler`
+//! (receipt bitmaps live in the `InFlight` ledger) before any policy sees
+//! the completed `LogicalDelta`.  Chunking is bit-identical to whole-layer
+//! transfers under the `f32` codec and shrinks the modeled gated link
+//! exposure by `(C+1)/(2C)` (`comm::chunk_pipeline_factor`).
 //!
 //! # Thread topology
 //!
@@ -90,11 +106,11 @@ pub mod trainer;
 pub mod worker;
 
 pub use comm::{
-    DeltaMsg, Link, LinkClock, LinkClockMode, LinkLedger, OffloadMsg, PrioQueue, VirtualClock,
-    WirePayload,
+    ChunkHeader, DeltaMsg, Link, LinkClock, LinkClockMode, LinkLedger, OffloadMsg, PrioQueue,
+    VirtualClock, WirePayload,
 };
 pub use metrics::Metrics;
-pub use pipeline::{InFlight, PipelineCtx, TrainConfig};
+pub use pipeline::{ChunkSet, InFlight, LogicalDelta, PipelineCtx, Reassembler, TrainConfig};
 pub use policies::{make_policy, Policy, PolicyKind, UpdatePolicy};
 pub use report::TrainReport;
 pub use trainer::Trainer;

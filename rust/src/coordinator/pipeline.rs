@@ -18,12 +18,13 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 use xla::PjRtBuffer;
 
 use crate::codec::{make_codec, Codec, CodecKind};
 use crate::coordinator::comm::{
-    DeltaMsg, Link, LinkClock, LinkClockMode, OffloadMsg, ParamKey, PrioQueue, WirePayload,
+    chunk_pipeline_factor, encode_chunked, n_chunks_for, ChunkHeader, DeltaMsg, Link, LinkClock,
+    LinkClockMode, OffloadMsg, ParamKey, PrioQueue,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policies::{make_policy, PolicyKind};
@@ -94,6 +95,15 @@ pub struct TrainConfig {
     /// updated asynchronously.  1.0 = everything synchronous (no link
     /// traffic), 0.0 = everything asynchronous.
     pub async_rho: f32,
+    /// Sub-layer chunking budget (`--link-chunk-elems`, JSON
+    /// `link_chunk_elems`): each logical link payload is split into
+    /// `ceil(n / link_chunk_elems)` wire chunks (PIPO-style pipelining —
+    /// the CPU updater starts before a gradient is fully received and the
+    /// h2d link starts draining before its delta is fully produced).
+    /// `0` = whole-payload transfers, the pre-chunking behavior, which is
+    /// bit-identical under `link_codec = f32`.  Range-validated by
+    /// `config/` (0, or 64..=16_777_216 elements).
+    pub link_chunk_elems: usize,
 }
 
 impl Default for TrainConfig {
@@ -124,43 +134,137 @@ impl Default for TrainConfig {
             link_clock: LinkClockMode::Auto,
             async_staleness: 2,
             async_rho: 0.5,
+            link_chunk_elems: 0,
         }
     }
 }
 
+/// Receipt bitmap of one logical payload's wire chunks.  The first 64
+/// chunks live in an inline word — `ChunkSet::new` allocates nothing for
+/// the common case (including every single-chunk whole-payload entry, so
+/// the un-chunked dispatch hot path stays allocation-free) — and only
+/// wider sets (a vocab x d_model embedding gradient under a small chunk
+/// budget) spill into an overflow block.
+#[derive(Debug, Clone)]
+pub struct ChunkSet {
+    word0: u64,
+    overflow: Vec<u64>,
+    received: u32,
+    n_chunks: u32,
+}
+
+impl ChunkSet {
+    pub fn new(n_chunks: u32) -> ChunkSet {
+        let n_chunks = n_chunks.max(1);
+        let overflow_words = (n_chunks as usize).div_ceil(64).saturating_sub(1);
+        // Vec::new() does not allocate; the overflow block exists only for
+        // n_chunks > 64.
+        let overflow = if overflow_words == 0 { Vec::new() } else { vec![0u64; overflow_words] };
+        ChunkSet { word0: 0, overflow, received: 0, n_chunks }
+    }
+
+    /// Mark chunk `idx` received; `Ok(true)` when the set just became
+    /// complete.  Out-of-range and duplicate chunks are pipeline bugs and
+    /// fail loudly.
+    pub fn mark(&mut self, idx: u32) -> Result<bool> {
+        ensure!(idx < self.n_chunks, "chunk index {idx} out of range (n_chunks {})", self.n_chunks);
+        let (w, b) = ((idx / 64) as usize, idx % 64);
+        let word = if w == 0 { &mut self.word0 } else { &mut self.overflow[w - 1] };
+        ensure!(*word & (1u64 << b) == 0, "duplicate chunk {idx}");
+        *word |= 1u64 << b;
+        self.received += 1;
+        Ok(self.received == self.n_chunks)
+    }
+
+    pub fn n_chunks(&self) -> u32 {
+        self.n_chunks
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.received == self.n_chunks
+    }
+}
+
+/// One in-flight logical gradient: the step that produced it plus the
+/// receipt bitmap of its delta chunks.
+#[derive(Debug)]
+struct FlightEntry {
+    step: u64,
+    chunks: ChunkSet,
+}
+
 /// The in-flight offload ledger: every key with a gradient shipped over the
-/// d2h link whose delta has not been applied yet, tagged with the step that
-/// produced the gradient.  This is the staleness ledger bounded-async
-/// policies enforce their window against — a key may have *several* entries
-/// in flight at once (the per-key link/updater path is FIFO, so entries
-/// land in produced order), which is exactly what a staleness window > 0
-/// permits.
+/// d2h link whose delta has not been fully received yet, tagged with the
+/// step that produced the gradient.  This is the staleness ledger
+/// bounded-async policies enforce their window against — a key may have
+/// *several* entries in flight at once (the per-key link/updater path is
+/// FIFO, so entries land in produced order), which is exactly what a
+/// staleness window > 0 permits.  Entries are counted at *logical*
+/// granularity: a gradient split into sub-layer chunks
+/// (`TrainConfig::link_chunk_elems`) is ONE entry carrying a per-chunk
+/// receipt bitmap (`ChunkSet`), so the staleness arithmetic
+/// (`stale_bound_exceeded`, `oldest_step`) is untouched by chunking.
 #[derive(Debug, Default)]
 pub struct InFlight {
-    map: HashMap<ParamKey, Vec<u64>>,
+    map: HashMap<ParamKey, Vec<FlightEntry>>,
     total: usize,
 }
 
 impl InFlight {
+    /// Insert a whole-payload (single-chunk) entry.
     pub fn insert(&mut self, key: ParamKey, step: u64) {
-        self.map.entry(key).or_default().push(step);
+        self.insert_chunked(key, step, 1);
+    }
+
+    /// Insert one logical gradient whose delta will return as `n_chunks`
+    /// wire chunks.
+    pub fn insert_chunked(&mut self, key: ParamKey, step: u64, n_chunks: u32) {
+        self.map
+            .entry(key)
+            .or_default()
+            .push(FlightEntry { step, chunks: ChunkSet::new(n_chunks) });
         self.total += 1;
+    }
+
+    /// Mark one delta chunk received for the `(key, step)` logical
+    /// gradient; `Ok(true)` when every chunk has now landed (the caller
+    /// then `remove`s the entry and releases the reassembled delta).
+    pub fn note_chunk(&mut self, key: &ParamKey, step: u64, chunk: &ChunkHeader) -> Result<bool> {
+        let entries = self
+            .map
+            .get_mut(key)
+            .ok_or_else(|| anyhow::anyhow!("delta chunk for unknown key {key:?}"))?;
+        let entry = entries
+            .iter_mut()
+            .find(|e| e.step == step && !e.chunks.is_complete())
+            .ok_or_else(|| {
+                anyhow::anyhow!("delta chunk for key {key:?} step {step} with no open entry")
+            })?;
+        ensure!(
+            entry.chunks.n_chunks() == chunk.of,
+            "chunk count mismatch for {key:?} step {step}: ledger {} vs header {}",
+            entry.chunks.n_chunks(),
+            chunk.of
+        );
+        entry.chunks.mark(chunk.idx)
     }
 
     /// Remove one in-flight entry for `key` produced at `step` (the delta
     /// carries both, so the exact entry is always identifiable).
     pub fn remove(&mut self, key: &ParamKey, step: u64) {
-        if let Some(steps) = self.map.get_mut(key) {
-            if let Some(pos) = steps.iter().position(|&s| s == step) {
-                steps.remove(pos);
+        if let Some(entries) = self.map.get_mut(key) {
+            if let Some(pos) = entries.iter().position(|e| e.step == step) {
+                entries.remove(pos);
                 self.total -= 1;
             }
-            if steps.is_empty() {
+            if entries.is_empty() {
                 self.map.remove(key);
             }
         }
     }
 
+    /// Number of *logical* gradients in flight (chunking does not inflate
+    /// this).
     pub fn len(&self) -> usize {
         self.total
     }
@@ -179,7 +283,7 @@ impl InFlight {
 
     /// Step of the oldest gradient still in flight (the staleness frontier).
     pub fn oldest_step(&self) -> Option<u64> {
-        self.map.values().flat_map(|v| v.iter().copied()).min()
+        self.map.values().flat_map(|v| v.iter().map(|e| e.step)).min()
     }
 }
 
@@ -191,6 +295,121 @@ impl InFlight {
 /// every applied delta an age of at most S steps.
 pub fn stale_bound_exceeded(produced: u64, now: u64, window: u64) -> bool {
     now.saturating_sub(produced) >= window
+}
+
+/// One fully reassembled, *decoded* update delta — the unit policies apply.
+/// Under sub-layer chunking (`TrainConfig::link_chunk_elems`) the
+/// [`Reassembler`] folds `n_chunks` wire messages into one of these; with
+/// whole-payload transfers it is a 1:1 decode of the single `DeltaMsg`.
+#[derive(Debug)]
+pub struct LogicalDelta {
+    pub key: ParamKey,
+    /// Decoded f32 payload (pooled — the handle recycles on drop).
+    pub data: PooledBuf,
+    /// Step of the gradient this delta answers.
+    pub step: u64,
+    /// Total round-trip emulated link time (ns), summed over every chunk's
+    /// d2h + h2d charges.
+    pub link_ns: u64,
+    /// How many wire chunks carried it (1 = whole-payload transfer).
+    pub n_chunks: u32,
+}
+
+/// Reassembles returning delta chunks into [`LogicalDelta`]s: each chunk is
+/// decoded straight into its `elem_offset` slice of a pooled buffer sized
+/// to the logical payload, the receipt bitmap lives in the [`InFlight`]
+/// ledger (`InFlight::note_chunk`), and the completed delta is released —
+/// and the gradient removed from the ledger — exactly when its last chunk
+/// lands.  Chunks may arrive in any order (the per-key pipeline is FIFO,
+/// but chunks of *different* keys interleave freely under the FCFS->LCFS
+/// priorities).
+#[derive(Default)]
+pub struct Reassembler {
+    /// Nested per-key, per-step slots: probing with a borrowed `&ParamKey`
+    /// keeps the per-chunk hot path free of key clones (only the FIRST
+    /// chunk of a logical delta clones the key, to create its slot).
+    slots: HashMap<ParamKey, HashMap<u64, ReasmSlot>>,
+}
+
+struct ReasmSlot {
+    data: PooledBuf,
+    link_ns: u64,
+}
+
+impl Reassembler {
+    /// Fold one wire chunk in; `Ok(Some(..))` exactly when this chunk
+    /// completes its logical delta.
+    pub fn ingest(
+        &mut self,
+        codec: &dyn Codec,
+        pool: &BufPool,
+        pending: &mut InFlight,
+        msg: DeltaMsg,
+    ) -> Result<Option<LogicalDelta>> {
+        let DeltaMsg { key, delta, prio: _, step, link_ns, chunk } = msg;
+        let complete = pending.note_chunk(&key, step, &chunk)?;
+        if chunk.is_whole() {
+            // Fast path: no slot, one decode — the pre-chunking behavior.
+            ensure!(delta.elems == chunk.total_elems, "whole-payload chunk length mismatch");
+            let mut data = pool.take_raw(chunk.total_elems);
+            codec.decode(delta.as_bytes(), &mut data)?;
+            pending.remove(&key, step);
+            return Ok(Some(LogicalDelta { key, data, step, link_ns, n_chunks: 1 }));
+        }
+        let has_slot = self.slots.get(&key).is_some_and(|m| m.contains_key(&step));
+        if !has_slot {
+            self.slots.entry(key.clone()).or_default().insert(
+                step,
+                ReasmSlot {
+                    // take_raw: contents unspecified, but the chunks
+                    // partition [0, total_elems) so every element is
+                    // overwritten exactly once before the delta is
+                    // released.
+                    data: pool.take_raw(chunk.total_elems),
+                    link_ns: 0,
+                },
+            );
+        }
+        let slot = self
+            .slots
+            .get_mut(&key)
+            .and_then(|m| m.get_mut(&step))
+            .expect("slot just ensured");
+        let end = chunk.elem_offset + delta.elems;
+        ensure!(
+            end <= slot.data.len(),
+            "delta chunk [{}, {end}) exceeds logical payload of {} elems",
+            chunk.elem_offset,
+            slot.data.len()
+        );
+        codec.decode(delta.as_bytes(), &mut slot.data[chunk.elem_offset..end])?;
+        slot.link_ns += link_ns;
+        if complete {
+            let by_step = self.slots.get_mut(&key).expect("slot map exists");
+            let slot = by_step.remove(&step).expect("slot exists");
+            if by_step.is_empty() {
+                self.slots.remove(&key);
+            }
+            pending.remove(&key, step);
+            return Ok(Some(LogicalDelta {
+                key,
+                data: slot.data,
+                step,
+                link_ns: slot.link_ns,
+                n_chunks: chunk.of,
+            }));
+        }
+        Ok(None)
+    }
+
+    /// Logical deltas currently mid-reassembly.
+    pub fn len(&self) -> usize {
+        self.slots.values().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
 }
 
 pub struct PipelineCtx<'e> {
@@ -212,9 +431,12 @@ pub struct PipelineCtx<'e> {
     /// links, so virtual time covers both directions).
     pub clock: LinkClock,
     /// Keys with an offloaded gradient still in flight (its delta has not
-    /// been applied yet), tagged with the producing step — the staleness
-    /// ledger.
+    /// been fully received yet), tagged with the producing step and a
+    /// per-chunk receipt bitmap — the staleness ledger.
     pub pending: InFlight,
+    /// Chunk -> logical-delta reassembly buffers (trivial when
+    /// `cfg.link_chunk_elems == 0`: every delta is a single chunk).
+    pub reasm: Reassembler,
     pub d2h_in: Arc<PrioQueue<OffloadMsg>>,
     pub d2h_out: Arc<PrioQueue<OffloadMsg>>,
     pub h2d_in: Arc<PrioQueue<DeltaMsg>>,
@@ -324,6 +546,7 @@ impl<'e> PipelineCtx<'e> {
             rng,
             clock,
             pending: InFlight::default(),
+            reasm: Reassembler::default(),
             d2h_in,
             d2h_out,
             h2d_in,
@@ -355,41 +578,87 @@ impl<'e> PipelineCtx<'e> {
     }
 
     /// Mark `key` in flight (tagged with the producing step — the
-    /// staleness ledger) and enqueue its gradient on the D2H link.  The
-    /// f32 payload is encoded with the pipeline codec here — the drop of
-    /// `data` returns its storage to the pool, where it typically serves as
-    /// the decode buffer for a returning delta.
+    /// staleness ledger) and enqueue its gradient on the D2H link as
+    /// `ceil(n / cfg.link_chunk_elems)` wire chunks (one whole-payload
+    /// message when the budget is 0).  Each chunk is encoded with the
+    /// pipeline codec and pushed *as it is produced*, so the link starts
+    /// draining chunk 0 while later chunks are still being encoded — the
+    /// PIPO-style sub-layer overlap.  All chunks of one dispatch share one
+    /// priority, so the per-key chunk order through the priority queues is
+    /// FIFO while chunks of *different* layers interleave by priority.
+    /// The drop of `data` returns its storage to the pool, where it
+    /// typically serves as the decode buffer for a returning delta.
     pub fn push_offload(&mut self, key: ParamKey, data: PooledBuf, prio: i64, step: u64) {
-        let payload = WirePayload::from_pool(self.codec.as_ref(), &self.pool, &data);
+        let chunk_elems = self.cfg.link_chunk_elems;
+        let n_chunks = n_chunks_for(data.len(), chunk_elems);
+        self.pending.insert_chunked(key.clone(), step, n_chunks as u32);
+        let codec = self.codec.clone();
+        encode_chunked(codec.as_ref(), &self.pool, &data, chunk_elems, |payload, chunk| {
+            self.d2h_in.push(
+                prio,
+                OffloadMsg { key: key.clone(), data: payload, prio, step, link_ns: 0, chunk },
+            );
+        });
         drop(data);
-        self.pending.insert(key.clone(), step);
-        self.d2h_in.push(prio, OffloadMsg { key, data: payload, prio, step, link_ns: 0 });
+    }
+
+    /// Feed one arriving delta chunk into the reassembler; returns the
+    /// completed [`LogicalDelta`] exactly when its last chunk lands (at
+    /// which point the gradient is also removed from the in-flight
+    /// ledger).  Whole-payload messages complete immediately.
+    pub fn ingest_delta_chunk(&mut self, msg: DeltaMsg) -> Result<Option<LogicalDelta>> {
+        self.reasm.ingest(self.codec.as_ref(), &self.pool, &mut self.pending, msg)
+    }
+
+    /// Blocking receive of the next fully reassembled delta; `Ok(None)`
+    /// once the delta queue is closed and drained.
+    pub fn recv_logical_delta(&mut self) -> Result<Option<LogicalDelta>> {
+        loop {
+            let Some(msg) = self.delta_out.pop() else {
+                return Ok(None);
+            };
+            if let Some(ld) = self.ingest_delta_chunk(msg)? {
+                return Ok(Some(ld));
+            }
+        }
+    }
+
+    /// Non-blocking variant of [`recv_logical_delta`]: drains whatever
+    /// chunks have already arrived and returns the first delta they
+    /// complete, if any.
+    ///
+    /// [`recv_logical_delta`]: PipelineCtx::recv_logical_delta
+    pub fn try_recv_logical_delta(&mut self) -> Result<Option<LogicalDelta>> {
+        while let Some(msg) = self.delta_out.try_pop() {
+            if let Some(ld) = self.ingest_delta_chunk(msg)? {
+                return Ok(Some(ld));
+            }
+        }
+        Ok(None)
     }
 
     /// Record that applying `msg` gated the optimizer schedule (a per-layer
     /// event, Zero's end-of-step barrier, or an `async-lsp` staleness-
-    /// deadline drain).  Under the virtual clock this charges the message's
+    /// deadline drain).  Under the virtual clock this charges the delta's
     /// deterministic round-trip link time — amortized over the staleness
-    /// window it was allowed to lag — into the modeled stall phase
-    /// `stall_v`: a delta permitted to trail by `window` steps exposes only
-    /// `1/(window+1)` of its link latency to the critical path, the same
-    /// arithmetic `sim::cost_model::gated_link_exposure` prices, which is
-    /// what closes the sim-vs-runtime stall gap.  Fully synchronous gates
-    /// pass `window = 0` (full charge).  Under the real clock the measured
-    /// wait phases (`stall_e` / `barrier`) already capture stalls, so this
-    /// is a no-op.
-    pub fn note_gated_delta(&mut self, msg: &DeltaMsg, window: u64) {
+    /// window it was allowed to lag, and scaled by the chunk pipelining
+    /// factor — into the modeled stall phase `stall_v`: a delta permitted
+    /// to trail by `window` steps exposes only `1/(window+1)` of its link
+    /// latency to the critical path, and a delta that crossed as C chunks
+    /// exposes only `(C+1)/(2C)` of its round trip (the two link
+    /// directions overlap chunk-wise; see `comm::chunk_pipeline_factor`).
+    /// This is the same arithmetic `sim::cost_model::gated_link_exposure`
+    /// and `chunked_gated_link_exposure` price, which is what closes the
+    /// sim-vs-runtime stall gap.  Fully synchronous gates pass
+    /// `window = 0` (full charge).  Under the real clock the measured wait
+    /// phases (`stall_e` / `barrier`) already capture stalls, so this is a
+    /// no-op.
+    pub fn note_gated_delta(&mut self, msg: &LogicalDelta, window: u64) {
         if self.clock.is_virtual() {
-            let ns = msg.link_ns as f64 / (window as f64 + 1.0);
+            let factor = chunk_pipeline_factor(msg.n_chunks as u64);
+            let ns = msg.link_ns as f64 * factor / (window as f64 + 1.0);
             self.metrics.phase("stall_v").push(ns / 1e9);
         }
-    }
-
-    /// Decode a link payload into a pooled f32 buffer.
-    pub fn decode_payload(&self, payload: &WirePayload) -> Result<PooledBuf> {
-        let mut out = self.pool.take_raw(payload.elems);
-        self.codec.decode(payload.as_bytes(), &mut out)?;
-        Ok(out)
     }
 
     /// Flat indices of the head/embedding params ("layer -1").
@@ -449,6 +718,109 @@ mod tests {
         fl.remove(&key(7, None), 6);
         assert!(fl.is_empty());
         assert_eq!(fl.oldest_step(), None);
+    }
+
+    #[test]
+    fn chunk_bitmap_tracks_completion() {
+        let mut cs = ChunkSet::new(3);
+        assert_eq!(cs.n_chunks(), 3);
+        assert!(!cs.is_complete());
+        assert!(!cs.mark(1).unwrap());
+        assert!(!cs.mark(0).unwrap());
+        assert!(cs.mark(2).unwrap(), "last chunk completes the set");
+        assert!(cs.is_complete());
+        assert!(cs.mark(1).is_err(), "duplicate chunk is a pipeline bug");
+        assert!(ChunkSet::new(2).mark(5).is_err(), "out-of-range chunk");
+        // Wide sets span bitmap words.
+        let mut wide = ChunkSet::new(130);
+        for i in 0..130 {
+            let done = wide.mark(i).unwrap();
+            assert_eq!(done, i == 129, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn in_flight_chunk_ledger_is_logical_granularity() {
+        let mut fl = InFlight::default();
+        let k = key(1, Some("qkv"));
+        fl.insert_chunked(k.clone(), 7, 3);
+        // One logical gradient regardless of chunk count.
+        assert_eq!(fl.len(), 1);
+        assert_eq!(fl.oldest_step(), Some(7));
+        let hdr = |idx: u32| ChunkHeader { idx, of: 3, elem_offset: 0, total_elems: 12 };
+        assert!(!fl.note_chunk(&k, 7, &hdr(0)).unwrap());
+        assert!(!fl.note_chunk(&k, 7, &hdr(2)).unwrap());
+        // Unknown key / step / mismatched chunk count fail loudly.
+        assert!(fl.note_chunk(&key(9, None), 7, &hdr(1)).is_err());
+        assert!(fl.note_chunk(&k, 8, &hdr(1)).is_err());
+        let bad = ChunkHeader { idx: 1, of: 4, elem_offset: 0, total_elems: 12 };
+        assert!(fl.note_chunk(&k, 7, &bad).is_err());
+        // Completion does not remove — the caller owns that.
+        assert!(fl.note_chunk(&k, 7, &hdr(1)).unwrap());
+        assert_eq!(fl.len(), 1);
+        fl.remove(&k, 7);
+        assert!(fl.is_empty());
+    }
+
+    #[test]
+    fn reassembler_folds_chunks_in_any_order() {
+        use crate::codec::{make_codec, CodecKind};
+        use crate::coordinator::comm::WirePayload;
+        use crate::util::bufpool::BufPool;
+
+        let codec = make_codec(CodecKind::F32Raw);
+        let pool = BufPool::new();
+        let mut pending = InFlight::default();
+        let mut reasm = Reassembler::default();
+        let k = key(4, None);
+        let logical: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        pending.insert_chunked(k.clone(), 2, 3);
+        // Chunks of 4 + 4 + 2 elements, ingested out of order.
+        let mk = |idx: u32, off: usize, end: usize, link_ns: u64| DeltaMsg {
+            key: k.clone(),
+            delta: WirePayload::detached(codec.as_ref(), &logical[off..end]),
+            prio: 0,
+            step: 2,
+            link_ns,
+            chunk: ChunkHeader { idx, of: 3, elem_offset: off, total_elems: 10 },
+        };
+        let r1 = reasm
+            .ingest(codec.as_ref(), &pool, &mut pending, mk(2, 8, 10, 5))
+            .unwrap();
+        assert!(r1.is_none());
+        assert_eq!(reasm.len(), 1);
+        let r2 = reasm
+            .ingest(codec.as_ref(), &pool, &mut pending, mk(0, 0, 4, 10))
+            .unwrap();
+        assert!(r2.is_none());
+        assert!(!pending.is_empty(), "ledger holds until the last chunk");
+        let ld = reasm
+            .ingest(codec.as_ref(), &pool, &mut pending, mk(1, 4, 8, 20))
+            .unwrap()
+            .expect("last chunk completes the delta");
+        assert_eq!(ld.key, k);
+        assert_eq!(ld.step, 2);
+        assert_eq!(ld.n_chunks, 3);
+        assert_eq!(ld.link_ns, 35, "round-trip charge sums over chunks");
+        assert_eq!(ld.data.as_slice(), logical.as_slice());
+        assert!(reasm.is_empty());
+        assert!(pending.is_empty(), "completion removes the in-flight entry");
+
+        // Whole-payload fast path: 1:1 decode, immediate completion.
+        pending.insert(k.clone(), 3);
+        let whole = DeltaMsg::whole(
+            k.clone(),
+            WirePayload::detached(codec.as_ref(), &logical),
+            0,
+            3,
+        );
+        let ld = reasm
+            .ingest(codec.as_ref(), &pool, &mut pending, whole)
+            .unwrap()
+            .expect("whole payload completes immediately");
+        assert_eq!(ld.n_chunks, 1);
+        assert_eq!(ld.data.as_slice(), logical.as_slice());
+        assert!(pending.is_empty());
     }
 
     #[test]

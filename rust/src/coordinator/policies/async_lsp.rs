@@ -44,8 +44,8 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::codec::CodecKind;
-use crate::coordinator::comm::{DeltaMsg, ParamKey};
-use crate::coordinator::pipeline::{stale_bound_exceeded, PipelineCtx};
+use crate::coordinator::comm::ParamKey;
+use crate::coordinator::pipeline::{stale_bound_exceeded, LogicalDelta, PipelineCtx};
 use crate::coordinator::projector_mgr::ProjState;
 use crate::coordinator::report::TrainReport;
 use crate::coordinator::worker::SharedStates;
@@ -64,8 +64,9 @@ pub struct AsyncLspPolicy {
     /// Adam moments of the synchronous important slice, keyed like the CPU
     /// updater's map so a subspace switch re-projects both halves.
     sync_adam: SharedStates,
-    /// Deltas received but not yet at their staleness deadline.
-    held: Vec<DeltaMsg>,
+    /// Deltas received (fully reassembled) but not yet at their staleness
+    /// deadline.
+    held: Vec<LogicalDelta>,
     /// Magnitude scratch for the threshold selection (reused every call).
     scratch: Vec<f32>,
     /// Step the optimizer currently stands at (for staleness ages).
@@ -143,7 +144,7 @@ pub(crate) fn partition_by_magnitude(
 /// param index, then subspace kind.  Applies on distinct keys commute
 /// numerically, but a stable order keeps per-key sequencing (and metrics)
 /// canonical.
-fn held_order(a: &DeltaMsg, b: &DeltaMsg) -> std::cmp::Ordering {
+fn held_order(a: &LogicalDelta, b: &LogicalDelta) -> std::cmp::Ordering {
     (a.step, a.key.param_index, a.key.kind.as_deref()).cmp(&(
         b.step,
         b.key.param_index,
@@ -269,6 +270,9 @@ impl AsyncLspPolicy {
     /// The set of in-flight entries for a key at any dispatch point is
     /// pure step arithmetic, so this is a deterministic synchronization —
     /// used before a projector refresh re-projects the key's moments.
+    /// Chunked transfers change nothing here: the loop keeps receiving
+    /// wire chunks until the ledger says the param's last *logical* delta
+    /// has fully reassembled.
     fn drain_param(&mut self, ctx: &mut PipelineCtx<'_>, idx: usize) -> Result<()> {
         let window = ctx.cfg.async_staleness;
         let mut rest = Vec::new();
@@ -283,10 +287,9 @@ impl AsyncLspPolicy {
         }
         self.held = rest;
         while ctx.pending.contains_param(idx) {
-            let Some(msg) = ctx.delta_out.pop() else {
+            let Some(msg) = ctx.recv_logical_delta()? else {
                 bail!("delta queue closed during projector-refresh drain");
             };
-            ctx.pending.remove(&msg.key, msg.step);
             if msg.key.param_index == idx {
                 self.note_applied(msg.step);
                 ctx.note_gated_delta(&msg, window);
@@ -299,13 +302,13 @@ impl AsyncLspPolicy {
     }
 
     /// Apply one tail delta (subspace or full-parameter), no bookkeeping.
-    fn apply_tail_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+    /// The payload is already reassembled and decoded.
+    fn apply_tail_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: LogicalDelta) -> Result<()> {
         let idx = msg.key.param_index;
-        let delta = ctx.decode_payload(&msg.delta)?;
         if msg.key.kind.is_some() {
-            self.apply_subspace(ctx, idx, &delta)?;
+            self.apply_subspace(ctx, idx, &msg.data)?;
         } else {
-            ctx.apply_host_step(idx, &delta)?;
+            ctx.apply_host_step(idx, &msg.data)?;
         }
         Ok(())
     }
@@ -383,9 +386,8 @@ impl UpdatePolicy for AsyncLspPolicy {
     /// Direct delivery path (the trainer's final drain): applies
     /// immediately with full bookkeeping.  The in-step path never routes
     /// here — deltas are received and deadline-held by `end_of_step`.
-    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: LogicalDelta) -> Result<()> {
         let window = ctx.cfg.async_staleness;
-        ctx.pending.remove(&msg.key, msg.step);
         self.note_applied(msg.step);
         ctx.note_gated_delta(&msg, window);
         self.apply_tail_delta(ctx, msg)
@@ -398,17 +400,19 @@ impl UpdatePolicy for AsyncLspPolicy {
         // flight.  The blocking pops may hand over younger deltas first
         // (the queues are priority-ordered) — those are held and applied at
         // their OWN deadline, so the apply schedule depends only on step
-        // arithmetic, never on link timing.
+        // arithmetic, never on link timing.  Under chunking a logical
+        // delta straddling the deadline keeps the loop receiving until its
+        // last chunk lands (partial receipt never counts as arrival — the
+        // ledger is logical-granularity).
         let t0 = Instant::now();
         let mut received = 0u64;
         while let Some(oldest) = ctx.pending.oldest_step() {
             if !stale_bound_exceeded(oldest, step, window) {
                 break;
             }
-            let Some(msg) = ctx.delta_out.pop() else {
+            let Some(msg) = ctx.recv_logical_delta()? else {
                 bail!("delta queue closed during staleness drain");
             };
-            ctx.pending.remove(&msg.key, msg.step);
             self.held.push(msg);
             received += 1;
         }
@@ -428,10 +432,9 @@ impl UpdatePolicy for AsyncLspPolicy {
     /// final report and eval see fully-applied weights.
     fn finish(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
         while !ctx.pending.is_empty() {
-            let Some(msg) = ctx.delta_out.pop() else {
+            let Some(msg) = ctx.recv_logical_delta()? else {
                 bail!("delta queue closed during final async drain");
             };
-            ctx.pending.remove(&msg.key, msg.step);
             self.held.push(msg);
         }
         self.apply_due_held(ctx, self.cur_step, true)
@@ -505,15 +508,12 @@ mod tests {
 
     #[test]
     fn held_order_is_total_and_step_major() {
-        use crate::codec::{make_codec, CodecKind};
-        use crate::coordinator::comm::WirePayload;
-        let codec = make_codec(CodecKind::F32Raw);
-        let mk = |step: u64, idx: usize, kind: Option<&str>| DeltaMsg {
+        let mk = |step: u64, idx: usize, kind: Option<&str>| LogicalDelta {
             key: ParamKey { param_index: idx, kind: kind.map(|s| s.to_string()) },
-            delta: WirePayload::detached(codec.as_ref(), &[1.0]),
-            prio: 0,
+            data: PooledBuf::detached(vec![1.0]),
             step,
             link_ns: 0,
+            n_chunks: 1,
         };
         let mut v = vec![
             mk(2, 0, None),

@@ -19,8 +19,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::codec::CodecKind;
-use crate::coordinator::comm::{DeltaMsg, ParamKey};
-use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::comm::ParamKey;
+use crate::coordinator::pipeline::{LogicalDelta, PipelineCtx};
 use crate::coordinator::projector_mgr::ProjState;
 use crate::coordinator::report::TrainReport;
 use crate::tensor::Tensor;
@@ -111,25 +111,24 @@ impl UpdatePolicy for LspPolicy {
         }
     }
 
-    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: LogicalDelta) -> Result<()> {
         // Every LSP delta gates its layer's event (window 0): under the
-        // virtual clock its full round-trip link time is modeled stall.
+        // virtual clock its round-trip link time — chunk-pipelining-scaled
+        // — is modeled stall.  The payload arrives already reassembled and
+        // decoded (the pooled handle recycles on drop).
         ctx.note_gated_delta(&msg, 0);
         let idx = msg.key.param_index;
-        // Wire form -> pooled f32 buffer (the handle recycles on drop).
-        let delta = ctx.decode_payload(&msg.delta)?;
         if msg.key.kind.is_some() {
             // Subspace delta: decompress-apply on the GPU (L1 kernel).
             let st = self
                 .projectors
                 .get(&idx)
                 .with_context(|| format!("no projector for param {idx}"))?;
-            apply_subspace_delta(ctx, st, idx, &delta)?;
+            apply_subspace_delta(ctx, st, idx, &msg.data)?;
         } else {
             // Full-parameter delta: host-mirror apply + re-upload.
-            ctx.apply_host_step(idx, &delta)?;
+            ctx.apply_host_step(idx, &msg.data)?;
         }
-        ctx.pending.remove(&msg.key, msg.step);
         Ok(())
     }
 

@@ -22,8 +22,7 @@ use anyhow::{bail, Result};
 use xla::PjRtBuffer;
 
 use crate::codec::CodecKind;
-use crate::coordinator::comm::DeltaMsg;
-use crate::coordinator::pipeline::{InFlight, PipelineCtx};
+use crate::coordinator::pipeline::{LogicalDelta, PipelineCtx};
 use crate::coordinator::projector_mgr::ProjState;
 use crate::coordinator::report::TrainReport;
 use crate::optim::AdamState;
@@ -140,9 +139,11 @@ pub trait UpdatePolicy {
         prio: i64,
     ) -> Result<()>;
 
-    /// Apply one delta that returned over the h2d link.  Only offloading
+    /// Apply one fully reassembled, decoded delta that returned over the
+    /// h2d link (the pipeline folds wire chunks back together before any
+    /// policy sees them — see `pipeline::Reassembler`).  Only offloading
     /// policies receive these; the default flags a pipeline bug.
-    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
+    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: LogicalDelta) -> Result<()> {
         let _ = ctx;
         bail!("policy {:?} does not receive deltas (got {:?})", self.kind(), msg.key)
     }
@@ -194,31 +195,30 @@ pub fn make_policy(kind: PolicyKind) -> Box<dyn UpdatePolicy> {
     }
 }
 
-/// Block until no pending deltas remain for `idxs`, applying every delta
-/// that arrives meanwhile (also for other params — cheap and keeps the
-/// queue drained).  Free function so policies can invoke it on themselves
-/// (`wait_for_params(ctx, self, ..)`) without a borrow cycle.
+/// Block until no pending deltas remain for `idxs`, applying every logical
+/// delta that completes meanwhile (also for other params — cheap and keeps
+/// the queue drained; partially reassembled chunks of other keys simply
+/// stay buffered in the reassembler).  Free function so policies can
+/// invoke it on themselves (`wait_for_params(ctx, self, ..)`) without a
+/// borrow cycle.
 pub fn wait_for_params(
     ctx: &mut PipelineCtx<'_>,
     policy: &mut dyn UpdatePolicy,
     idxs: &[usize],
 ) -> Result<()> {
-    fn needs(pending: &InFlight, idxs: &[usize]) -> bool {
-        pending.any_of(idxs)
-    }
-    if !needs(&ctx.pending, idxs) {
+    if !ctx.pending.any_of(idxs) {
         // Opportunistically drain anything already arrived.
-        while let Some(msg) = ctx.delta_out.try_pop() {
-            policy.apply_delta(ctx, msg)?;
+        while let Some(ld) = ctx.try_recv_logical_delta()? {
+            policy.apply_delta(ctx, ld)?;
         }
         return Ok(());
     }
     let t0 = Instant::now();
-    while needs(&ctx.pending, idxs) {
-        let Some(msg) = ctx.delta_out.pop() else {
+    while ctx.pending.any_of(idxs) {
+        let Some(ld) = ctx.recv_logical_delta()? else {
             bail!("delta queue closed while waiting");
         };
-        policy.apply_delta(ctx, msg)?;
+        policy.apply_delta(ctx, ld)?;
     }
     ctx.metrics.phase("stall_e").push(t0.elapsed().as_secs_f64());
     Ok(())

@@ -7,8 +7,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::codec::CodecKind;
-use crate::coordinator::comm::{DeltaMsg, ParamKey};
-use crate::coordinator::pipeline::PipelineCtx;
+use crate::coordinator::comm::ParamKey;
+use crate::coordinator::pipeline::{LogicalDelta, PipelineCtx};
 use crate::tensor::Tensor;
 
 use super::{wait_for_params, PolicyKind, UpdatePolicy};
@@ -41,12 +41,11 @@ impl UpdatePolicy for ZeroPolicy {
         Ok(())
     }
 
-    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: DeltaMsg) -> Result<()> {
-        // Every Zero delta gates the end-of-step barrier (window 0).
+    fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: LogicalDelta) -> Result<()> {
+        // Every Zero delta gates the end-of-step barrier (window 0); the
+        // payload arrives already reassembled and decoded.
         ctx.note_gated_delta(&msg, 0);
-        let delta = ctx.decode_payload(&msg.delta)?;
-        ctx.apply_host_step(msg.key.param_index, &delta)?;
-        ctx.pending.remove(&msg.key, msg.step);
+        ctx.apply_host_step(msg.key.param_index, &msg.data)?;
         Ok(())
     }
 

@@ -13,6 +13,9 @@ pub struct TrainReport {
     pub tokens_per_s: f64,
     /// Wire codec the link payloads crossed in (`codec::Codec::name`).
     pub link_codec: String,
+    /// Sub-layer chunking budget the link payloads were split under
+    /// (`TrainConfig::link_chunk_elems`; 0 = whole-payload transfers).
+    pub link_chunk_elems: usize,
     /// Clock the links ran against: "real" (sleeping bandwidth emulation)
     /// or "virtual" (deterministic shared nanosecond counter).
     pub link_clock: &'static str,
@@ -69,6 +72,9 @@ impl TrainReport {
             self.final_train_loss,
             self.final_eval_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into())
         );
+        if self.link_chunk_elems > 0 {
+            println!("link chunking: {} elems per wire chunk", self.link_chunk_elems);
+        }
         println!(
             "offload traffic [codec {}]: up {} down {} (f32-equiv {}, {:.2}x smaller)",
             self.link_codec,
@@ -111,6 +117,7 @@ mod tests {
             final_eval_loss: None,
             tokens_per_s: 0.0,
             link_codec: "bf16".into(),
+            link_chunk_elems: 0,
             link_clock: "real",
             bytes_up: 0,
             bytes_down: 0,

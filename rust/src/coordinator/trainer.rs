@@ -380,6 +380,7 @@ impl<'e> Trainer<'e> {
             final_eval_loss: metrics.eval_loss.last().map(|&(_, l)| l),
             tokens_per_s: tokens / wall,
             link_codec: self.ctx.codec.name(),
+            link_chunk_elems: self.ctx.cfg.link_chunk_elems,
             link_clock: self.ctx.clock.name(),
             bytes_up,
             bytes_down,

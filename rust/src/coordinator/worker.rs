@@ -10,6 +10,13 @@
 //! sleep emulates a slower CPU than the host machine (for schedule
 //! studies).
 //!
+//! Payloads may arrive as sub-layer chunks (PIPO-style pipelining; see
+//! `comm::ChunkHeader`): the per-key moment map stays at *logical* payload
+//! granularity and each chunk updates its `elem_offset` slice via
+//! `AdamState::fused_step_chunk_with`, so the updater starts producing
+//! delta chunks before the full gradient has been received — and the
+//! chunked result is bit-identical to the whole-payload one.
+//!
 //! Payload buffers are pooled on both sides: the decode/delta f32 buffers
 //! come from the shared `BufPool`, the consumed gradient's *byte* buffer
 //! drops back before the delta is encoded (so it usually becomes the
@@ -54,9 +61,52 @@ impl CpuUpdater {
         let handle = std::thread::Builder::new()
             .name("cpu-updater".into())
             .spawn(move || {
+                // The chunk protocol this thread relies on: for any one
+                // key, chunks arrive strictly in (gradient, chunk index)
+                // order — chunk 0 advances the shared Adam step counter,
+                // later chunks reuse its bias correction.  Every current
+                // policy guarantees this (async-lsp pins a stable per-key
+                // priority; lsp/zero gate so at most one logical gradient
+                // per key is in flight), but the assumption would corrupt
+                // moments SILENTLY if a future policy re-prioritized a
+                // key mid-flight — so violations fail loudly here.
+                // `in_progress` holds (step, next chunk idx, n_chunks)
+                // only while a multi-chunk gradient is mid-stream.
+                let mut in_progress: HashMap<ParamKey, (u64, u32, u32)> = HashMap::new();
                 while let Some(msg) = ingress.pop() {
                     let t0 = std::time::Instant::now();
-                    let OffloadMsg { key, data, prio, step, link_ns } = msg;
+                    let OffloadMsg { key, data, prio, step, link_ns, chunk } = msg;
+                    let mut stream_done = false;
+                    match in_progress.get_mut(&key) {
+                        Some(entry) => {
+                            let (s, next, of) = *entry;
+                            assert!(
+                                step == s && chunk.idx == next && chunk.of == of,
+                                "chunk protocol violated for {key:?}: got step {step} \
+                                 chunk {}/{}, expected step {s} chunk {next}/{of} — \
+                                 per-key FIFO broken (did a policy re-prioritize a \
+                                 key with chunks in flight?)",
+                                chunk.idx,
+                                chunk.of,
+                            );
+                            entry.1 += 1;
+                            stream_done = entry.1 == of;
+                        }
+                        None => {
+                            assert_eq!(
+                                chunk.idx, 0,
+                                "chunk protocol violated for {key:?}: stream starts at \
+                                 chunk {}/{} (step {step})",
+                                chunk.idx, chunk.of,
+                            );
+                            if chunk.of > 1 {
+                                in_progress.insert(key.clone(), (step, 1, chunk.of));
+                            }
+                        }
+                    }
+                    if stream_done {
+                        in_progress.remove(&key);
+                    }
                     let n = data.elems;
                     let mut g = pool.take_raw(n);
                     codec
@@ -68,11 +118,34 @@ impl CpuUpdater {
                     drop(data);
                     let mut delta = pool.take_raw(n);
                     {
+                        // The moment map is keyed by the LOGICAL payload
+                        // and sized to its full element count; a chunk
+                        // updates the `[elem_offset, elem_offset + n)`
+                        // slice.  The per-key pipeline is FIFO (equal
+                        // priority => queue seq order), so chunk 0 — which
+                        // advances the shared Adam step counter — is always
+                        // processed first and every chunk of one gradient
+                        // shares one bias correction, making the chunked
+                        // update bit-identical to the whole-payload one.
                         let mut states = st.lock().unwrap();
-                        let state =
-                            states.entry(key.clone()).or_insert_with(|| AdamState::new(n));
-                        debug_assert_eq!(state.m.len(), n);
-                        state.fused_step_with(&g, &mut delta, &kernel);
+                        let state = states
+                            .entry(key.clone())
+                            .or_insert_with(|| AdamState::new(chunk.total_elems));
+                        // Hard (release-mode) guard: a mis-sized payload
+                        // would otherwise silently update a prefix of
+                        // stale moments.
+                        assert_eq!(
+                            state.m.len(),
+                            chunk.total_elems,
+                            "payload for {key:?} disagrees with its moment length"
+                        );
+                        state.fused_step_chunk_with(
+                            &g,
+                            &mut delta,
+                            chunk.elem_offset,
+                            chunk.idx == 0,
+                            &kernel,
+                        );
                     }
                     drop(g);
                     let wire = WirePayload::from_pool(codec.as_ref(), &pool, &delta);
@@ -87,10 +160,10 @@ impl CpuUpdater {
                     );
                     ud.fetch_add(1, Ordering::Relaxed);
                     // The delta inherits the gradient's accumulated d2h
-                    // charge; the h2d link adds its own on the way back, so
-                    // the applied delta carries its full round-trip link
-                    // time.
-                    egress.push(prio, DeltaMsg { key, delta: wire, prio, step, link_ns });
+                    // charge and chunk header; the h2d link adds its own
+                    // charge on the way back, so the reassembled logical
+                    // delta carries its full round-trip link time.
+                    egress.push(prio, DeltaMsg { key, delta: wire, prio, step, link_ns, chunk });
                 }
             })
             .expect("spawn cpu-updater");
@@ -132,13 +205,7 @@ mod tests {
     }
 
     fn msg(key: &ParamKey, data: &[f32], step: u64) -> OffloadMsg {
-        OffloadMsg {
-            key: key.clone(),
-            data: WirePayload::detached(f32_codec().as_ref(), data),
-            prio: 0,
-            step,
-            link_ns: 0,
-        }
+        OffloadMsg::whole(key.clone(), WirePayload::detached(f32_codec().as_ref(), data), 0, step)
     }
 
     fn decode_delta(d: &DeltaMsg) -> Vec<f32> {
@@ -171,6 +238,79 @@ mod tests {
 
         ingress.close();
         upd.join();
+    }
+
+    /// Sub-layer chunking through the updater: one logical gradient sent as
+    /// three wire chunks must produce delta chunks whose concatenation — and
+    /// the Adam state left behind — are bit-identical to the whole-payload
+    /// path (moment map sliced by `elem_offset`, one step advance on chunk
+    /// 0, shared bias correction).
+    #[test]
+    fn chunked_gradient_matches_whole_payload_bitwise() {
+        use crate::coordinator::comm::ChunkHeader;
+        let g: Vec<f32> = vec![0.5, -0.25, 1.5, -2.0, 0.125, 3.0];
+        let key = ParamKey { param_index: 2, kind: None };
+
+        let run = |chunk_elems: usize| -> (Vec<f32>, AdamState) {
+            let ingress = Arc::new(PrioQueue::new());
+            let egress = Arc::new(PrioQueue::<DeltaMsg>::new());
+            let mut upd = spawn_plain(ingress.clone(), egress.clone());
+            let codec = f32_codec();
+            for step in 1..=2u64 {
+                let n_chunks = crate::coordinator::comm::n_chunks_for(g.len(), chunk_elems);
+                if n_chunks == 1 {
+                    ingress.push(0, msg(&key, &g, step));
+                } else {
+                    for idx in 0..n_chunks {
+                        let off = idx * chunk_elems;
+                        let end = (off + chunk_elems).min(g.len());
+                        ingress.push(
+                            0,
+                            OffloadMsg {
+                                key: key.clone(),
+                                data: WirePayload::detached(codec.as_ref(), &g[off..end]),
+                                prio: 0,
+                                step,
+                                link_ns: 0,
+                                chunk: ChunkHeader {
+                                    idx: idx as u32,
+                                    of: n_chunks as u32,
+                                    elem_offset: off,
+                                    total_elems: g.len(),
+                                },
+                            },
+                        );
+                    }
+                }
+            }
+            // Reassemble the second step's delta chunks by offset.
+            let expected_msgs = 2 * crate::coordinator::comm::n_chunks_for(g.len(), chunk_elems);
+            let mut out = vec![f32::NAN; g.len()];
+            let mut seen = 0;
+            while seen < expected_msgs {
+                let d = egress.pop().unwrap();
+                seen += 1;
+                if d.step == 2 {
+                    let mut v = vec![0f32; d.delta.elems];
+                    codec.decode(d.delta.as_bytes(), &mut v).unwrap();
+                    out[d.chunk.elem_offset..d.chunk.elem_offset + v.len()]
+                        .copy_from_slice(&v);
+                }
+            }
+            let state = upd.states.lock().unwrap().get(&key).unwrap().clone();
+            ingress.close();
+            upd.join();
+            (out, state)
+        };
+
+        let (whole_delta, whole_state) = run(0);
+        for chunk_elems in [2usize, 4, 5, 64] {
+            let (d, s) = run(chunk_elems);
+            assert_eq!(d, whole_delta, "chunk_elems={chunk_elems}");
+            assert_eq!(s.step, whole_state.step, "chunk_elems={chunk_elems}");
+            assert_eq!(s.m, whole_state.m, "chunk_elems={chunk_elems}");
+            assert_eq!(s.v, whole_state.v, "chunk_elems={chunk_elems}");
+        }
     }
 
     /// The updater must hand the producing step and the accumulated d2h
@@ -235,13 +375,12 @@ mod tests {
         for step in 1..=3u64 {
             ingress.push(
                 0,
-                OffloadMsg {
-                    key: key.clone(),
-                    data: WirePayload::detached(codec.as_ref(), &g),
-                    prio: 0,
+                OffloadMsg::whole(
+                    key.clone(),
+                    WirePayload::detached(codec.as_ref(), &g),
+                    0,
                     step,
-                    link_ns: 0,
-                },
+                ),
             );
             let d = egress.pop().unwrap();
             let mut got = vec![0f32; d.delta.elems];
@@ -294,7 +433,7 @@ mod tests {
             g.fill(0.25);
             let wire = WirePayload::from_pool(codec.as_ref(), &pool, &g);
             drop(g);
-            ingress.push(0, OffloadMsg { key: key.clone(), data: wire, prio: 0, step, link_ns: 0 });
+            ingress.push(0, OffloadMsg::whole(key.clone(), wire, 0, step));
             let d = egress.pop().unwrap();
             assert_eq!(d.delta.elems, len);
             // Driver-side apply: decode into a pooled buffer, then both

@@ -27,7 +27,9 @@
 //! / `tensor::pool`, configured via `KernelConfig` (see ROADMAP.md §Perf).
 //! Link payloads cross the emulated PCIe links in a pluggable wire format
 //! (`codec`: f32 / bf16 / block-int8 / sparse index coding), selected per
-//! policy or via `--link-codec` (see ROADMAP.md §Codec).
+//! policy or via `--link-codec` (see ROADMAP.md §Codec), optionally split
+//! into sub-layer chunks for PIPO-style pipelining (`--link-chunk-elems`,
+//! see ROADMAP.md §Chunked and `rust/src/coordinator/ARCHITECTURE.md`).
 
 pub mod analyze;
 pub mod baselines;

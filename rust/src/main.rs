@@ -8,21 +8,28 @@
 //!                       [--tokens N] [--d-sub N] [--iters N]
 //!                       [--link-codec f32|bf16|int8|sparse-int8]
 //!                       [--async-rho X] [--async-staleness S]
+//!                       [--link-chunk-elems N]
 //!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a);
 //!     `--link-codec` prices transfers at the encoded payload size, the
 //!     async knobs shape the stall-free schedule (and its predicted gated
-//!     link exposure, printed alongside the rows).
+//!     link exposure, printed alongside the rows), and
+//!     `--link-chunk-elems` splits each transfer into sub-layer chunks
+//!     (PIPO-style pipelining; 0 = whole-layer).
 //! lsp-offload train     [--preset tiny|small|mid]
 //!                       [--policy lsp|async-lsp|zero|...]
 //!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
 //!                       [--link-codec f32|bf16|int8|sparse|sparse-int8|auto]
 //!                       [--link-clock real|virtual|auto]
 //!                       [--async-rho X] [--async-staleness S]
+//!                       [--link-chunk-elems N]
 //!     Real training over the PJRT artifacts with throttled links; link
 //!     payloads cross in the chosen wire format (`auto` = policy default).
 //!     `async-lsp` applies the top-rho important slice synchronously on the
 //!     device and bounds tail-delta staleness by S steps; the virtual link
-//!     clock replaces bandwidth sleeps with a deterministic counter.
+//!     clock replaces bandwidth sleeps with a deterministic counter;
+//!     `--link-chunk-elems` ships every gradient/delta as sub-layer chunks
+//!     so the CPU Adam and the return link start before a layer's payload
+//!     has fully crossed (0 = whole-layer, the default).
 //! lsp-offload bias      [--preset tiny|small] [--calib N] [--val N]
 //!     Estimation-bias study: learned sparse vs random vs GaLore SVD
 //!     (Figs 7b/9).
@@ -116,10 +123,14 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
     if let Some(v) = args.get_u64("async-staleness")? {
         w.async_staleness = v;
     }
+    if let Some(v) = args.get_u64("link-chunk-elems")? {
+        // Same validation as the train config: 0 = whole-layer transfers.
+        w.link_chunk_elems = lsp_offload::config::parse_link_chunk_elems(v)?;
+    }
     let iters = args.get_u64("iters")?.unwrap_or(4) as usize;
     let which = args.get("schedule").unwrap_or("all");
     println!(
-        "simulating {} on {} (tokens={}, d={}, codec={}, rho={}, S={}, {} iters)",
+        "simulating {} on {} (tokens={}, d={}, codec={}, rho={}, S={}, chunk={}, {} iters)",
         w.name,
         hw.name,
         w.tokens,
@@ -127,6 +138,7 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
         w.link_codec.map(|c| c.name()).unwrap_or("native"),
         w.async_rho,
         w.async_staleness,
+        w.link_chunk_elems,
         iters
     );
     let kinds: Vec<ScheduleKind> = if which == "all" {
@@ -152,6 +164,30 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
             lsp_stall,
             async_stall,
             (1.0 - async_stall / lsp_stall.max(1e-12)) * 100.0
+        );
+    }
+    if w.link_chunk_elems > 0 {
+        // Predicted chunking win: the whole-layer exposure scaled by the
+        // shared pipelining factor (C+1)/(2C) — the same formula
+        // `PipelineCtx::note_gated_delta` charges per gating delta, so
+        // `simulate --link-chunk-elems` predicts what the virtual clock
+        // then measures.
+        use lsp_offload::sim::cost_model::{
+            chunked_gated_link_exposure, eq_chunked_iter, lsp_gated_link_exposure, Costs,
+        };
+        let c = Costs::derive(&hw, &w);
+        let chunks = w.sub_payload_chunks();
+        let whole = lsp_gated_link_exposure(&c, w.n_layers);
+        let chunked = chunked_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks);
+        println!(
+            "predicted chunking effect (lsp, {} chunks/payload): gated link exposure \
+             {:.4}s -> {:.4}s ({:.0}% reduction); eq_chunked_iter {:.4}s vs whole-layer {:.4}s",
+            chunks,
+            whole,
+            chunked,
+            (1.0 - chunked / whole.max(1e-12)) * 100.0,
+            eq_chunked_iter(&c, w.n_layers, 0.0, 0, chunks),
+            eq_chunked_iter(&c, w.n_layers, 0.0, 0, 1),
         );
     }
     Ok(())

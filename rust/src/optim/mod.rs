@@ -45,6 +45,56 @@ fn adam_span(m: &mut [f32], v: &mut [f32], g: &[f32], delta: &mut [f32], bc1: f3
     }
 }
 
+/// `adam_span` fanned across the kernel pool width for spans of at least
+/// `PAR_ADAM_MIN_LEN` elements; below the threshold (or single-threaded)
+/// it is literally `adam_span`.  Ranges come from the pool's single split
+/// policy (`pool::split_ranges`); this site only carves the FOUR parallel
+/// slices (m, v, g, delta) along them, where the pool carves one output
+/// buffer.  Shared by the whole-payload and chunked fused-step entry
+/// points, so both are bit-identical to the single-threaded oracle at
+/// every width.
+fn adam_span_with(
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    delta: &mut [f32],
+    bc1: f32,
+    bc2_sqrt: f32,
+    cfg: &KernelConfig,
+) {
+    let n = g.len();
+    let threads = cfg.resolved_threads();
+    if threads <= 1 || n < PAR_ADAM_MIN_LEN {
+        adam_span(m, v, g, delta, bc1, bc2_sqrt);
+        return;
+    }
+    let workers = threads.min(n);
+    std::thread::scope(|scope| {
+        let mut ms: &mut [f32] = m;
+        let mut vs: &mut [f32] = v;
+        let mut gs: &[f32] = g;
+        let mut ds: &mut [f32] = delta;
+        let mut ranges = pool::split_ranges(workers, n).peekable();
+        while let Some(range) = ranges.next() {
+            let take = range.len();
+            let (m0, m1) = std::mem::take(&mut ms).split_at_mut(take);
+            ms = m1;
+            let (v0, v1) = std::mem::take(&mut vs).split_at_mut(take);
+            vs = v1;
+            let (g0, g1) = gs.split_at(take);
+            gs = g1;
+            let (d0, d1) = std::mem::take(&mut ds).split_at_mut(take);
+            ds = d1;
+            if ranges.peek().is_none() {
+                // The caller participates instead of idling in the join.
+                adam_span(m0, v0, g0, d0, bc1, bc2_sqrt);
+            } else {
+                scope.spawn(move || adam_span(m0, v0, g0, d0, bc1, bc2_sqrt));
+            }
+        }
+    });
+}
+
 /// Adam moment state for one parameter tensor.
 #[derive(Debug, Clone)]
 pub struct AdamState {
@@ -84,47 +134,62 @@ impl AdamState {
     /// with `fused_step` (no reductions, no order dependence), so results
     /// are bit-identical to the single-threaded oracle at every width.
     pub fn fused_step_with(&mut self, g: &[f32], delta: &mut [f32], cfg: &KernelConfig) {
-        let threads = cfg.resolved_threads();
-        if threads <= 1 || g.len() < PAR_ADAM_MIN_LEN {
-            self.fused_step(g, delta);
-            return;
-        }
         assert_eq!(g.len(), self.m.len());
+        self.fused_step_chunk_with(g, delta, 0, true, cfg);
+    }
+
+    /// Chunked fused step (the sub-layer pipelining path): run the fused
+    /// Adam over the moment span `[offset, offset + g.len())` only, so one
+    /// logical gradient arriving as several wire chunks updates ONE moment
+    /// map slice by slice (`comm::ChunkHeader::elem_offset`) instead of
+    /// fragmenting its state per chunk.  `advance` bumps the shared step
+    /// counter and must be passed exactly once per logical gradient — on
+    /// its first chunk; later chunks reuse the same bias correction, which
+    /// is what makes the chunked result bit-identical to the unchunked
+    /// `fused_step` (the body is element-wise, so slicing cannot reorder
+    /// anything).  `offset = 0` with a full-length `g` *is* the unchunked
+    /// step (`fused_step_with` delegates here).
+    pub fn fused_step_chunk_with(
+        &mut self,
+        g: &[f32],
+        delta: &mut [f32],
+        offset: usize,
+        advance: bool,
+        cfg: &KernelConfig,
+    ) {
         assert_eq!(g.len(), delta.len());
-        self.step += 1;
+        assert!(
+            offset + g.len() <= self.m.len(),
+            "chunk [{offset}, {}) exceeds moment length {}",
+            offset + g.len(),
+            self.m.len()
+        );
+        // A mis-sequenced chunk protocol (later chunk before any first
+        // chunk) would hit t = 0 and make the bias corrections infinite —
+        // corrupting moments silently.  Fail loudly instead.
+        assert!(
+            advance || self.step > 0,
+            "chunked fused step with advance = false but no prior step: \
+             chunk 0 of a logical gradient must advance the counter first"
+        );
+        if advance {
+            self.step += 1;
+        }
         let t = self.step as f32;
+        // Bias corrections hoisted out of the loop; sqrt(v * bc2) =
+        // sqrt(v) * sqrt(bc2) so the loop body is 6 mul/add + sqrt + div.
         let bc1 = 1.0 / (1.0 - ADAM_BETA1.powf(t));
         let bc2_sqrt = (1.0 / (1.0 - ADAM_BETA2.powf(t))).sqrt();
-        let n = g.len();
-        let workers = threads.min(n);
-        // Ranges come from the pool's single split policy
-        // (`pool::split_ranges`); this site only carves the FOUR parallel
-        // slices (m, v, g, delta) along them, where the pool carves one
-        // output buffer.
-        std::thread::scope(|scope| {
-            let mut ms: &mut [f32] = &mut self.m;
-            let mut vs: &mut [f32] = &mut self.v;
-            let mut gs: &[f32] = g;
-            let mut ds: &mut [f32] = delta;
-            let mut ranges = pool::split_ranges(workers, n).peekable();
-            while let Some(range) = ranges.next() {
-                let take = range.len();
-                let (m0, m1) = std::mem::take(&mut ms).split_at_mut(take);
-                ms = m1;
-                let (v0, v1) = std::mem::take(&mut vs).split_at_mut(take);
-                vs = v1;
-                let (g0, g1) = gs.split_at(take);
-                gs = g1;
-                let (d0, d1) = std::mem::take(&mut ds).split_at_mut(take);
-                ds = d1;
-                if ranges.peek().is_none() {
-                    // The caller participates instead of idling in the join.
-                    adam_span(m0, v0, g0, d0, bc1, bc2_sqrt);
-                } else {
-                    scope.spawn(move || adam_span(m0, v0, g0, d0, bc1, bc2_sqrt));
-                }
-            }
-        });
+        let end = offset + g.len();
+        adam_span_with(
+            &mut self.m[offset..end],
+            &mut self.v[offset..end],
+            g,
+            delta,
+            bc1,
+            bc2_sqrt,
+            cfg,
+        );
     }
 
     /// Convenience: allocate the delta.
@@ -256,6 +321,50 @@ mod tests {
             assert_eq!(st.step, oracle.step);
             assert_eq!(st.m, oracle.m, "threads={threads}");
             assert_eq!(st.v, oracle.v, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunked_fused_step_bit_identical_to_whole() {
+        // One logical gradient applied as chunk slices of a shared moment
+        // map must reproduce the whole-payload step exactly: deltas,
+        // moments and step counter — the `n_chunks = 1` parity invariant
+        // at the optimizer level, for every chunk size and thread count.
+        use crate::util::rng::Rng;
+        let n = 1031;
+        let mut rng = Rng::new(7);
+        let grads: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(n, 1.0)).collect();
+        let mut oracle = AdamState::new(n);
+        let mut oracle_deltas = Vec::new();
+        for g in &grads {
+            oracle_deltas.push(oracle.step_vec(g));
+        }
+        for chunk in [1usize, 7, 64, 500, n, 2 * n] {
+            for threads in [1usize, 3] {
+                let cfg = KernelConfig::with_threads(threads);
+                let mut st = AdamState::new(n);
+                for (g, want) in grads.iter().zip(&oracle_deltas) {
+                    let mut d = vec![0f32; n];
+                    let mut off = 0;
+                    let mut first = true;
+                    while off < n {
+                        let end = (off + chunk).min(n);
+                        st.fused_step_chunk_with(
+                            &g[off..end],
+                            &mut d[off..end],
+                            off,
+                            first,
+                            &cfg,
+                        );
+                        first = false;
+                        off = end;
+                    }
+                    assert_eq!(&d, want, "chunk={chunk} threads={threads}");
+                }
+                assert_eq!(st.step, oracle.step, "chunk={chunk}");
+                assert_eq!(st.m, oracle.m, "chunk={chunk}");
+                assert_eq!(st.v, oracle.v, "chunk={chunk}");
+            }
         }
     }
 

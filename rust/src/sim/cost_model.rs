@@ -76,6 +76,12 @@ impl HardwareProfile {
     }
 }
 
+/// Cap on per-layer chunk *tasks* in the DES builders (see
+/// `Workload::layer_chunks`): the pipelining effect saturates by C = 64
+/// while task counts would explode for paper-scale payloads under small
+/// chunk budgets.
+pub const MAX_DES_CHUNK_TASKS_PER_LAYER: u64 = 64;
+
 /// One training workload: model scale + batch + LSP configuration.
 #[derive(Debug, Clone)]
 pub struct Workload {
@@ -108,6 +114,12 @@ pub struct Workload {
     /// iterations, so their link exposure amortizes over a window of S+1
     /// steps (`--async-staleness`).
     pub async_staleness: u64,
+    /// Sub-layer chunking budget (`--link-chunk-elems` in the simulator,
+    /// mirroring `TrainConfig::link_chunk_elems`): each link payload splits
+    /// into `ceil(n / link_chunk_elems)` wire chunks so the offload ->
+    /// CPU-update -> upload tail pipelines chunk-wise (PIPO-style).  `0` =
+    /// whole-payload transfers, the pre-chunking schedule.
+    pub link_chunk_elems: usize,
 }
 
 impl Workload {
@@ -125,6 +137,7 @@ impl Workload {
             link_codec: None,
             async_rho: 0.5,
             async_staleness: 2,
+            link_chunk_elems: 0,
         }
     }
 
@@ -144,6 +157,7 @@ impl Workload {
             link_codec: None,
             async_rho: 0.5,
             async_staleness: 2,
+            link_chunk_elems: 0,
         }
     }
 
@@ -177,6 +191,52 @@ impl Workload {
     /// Encoded bytes of one layer's subspace payloads.
     pub fn wire_sub_bytes(&self) -> f64 {
         self.sub_elems_per_layer() as f64 * self.wire_bytes_per_elem()
+    }
+
+    /// Wire chunks per subspace payload (one d x d matrix gradient) under
+    /// `link_chunk_elems` — the same counting rule the runtime split uses
+    /// (`comm::n_chunks_for`).
+    pub fn sub_payload_chunks(&self) -> u64 {
+        crate::coordinator::comm::n_chunks_for(self.d_sub * self.d_sub, self.link_chunk_elems)
+            as u64
+    }
+
+    /// Wire chunks per full-layer gradient payload under
+    /// `link_chunk_elems`.
+    pub fn full_layer_chunks(&self) -> u64 {
+        crate::coordinator::comm::n_chunks_for(
+            self.params_per_layer() as usize,
+            self.link_chunk_elems,
+        ) as u64
+    }
+
+    /// Chunk tasks one *layer's* transfer splits into in the DES builders:
+    /// 1 when chunking is off; otherwise per-payload chunks summed over the
+    /// layer's payloads (each compressed matrix chunks independently on the
+    /// subspace path), CAPPED at [`MAX_DES_CHUNK_TASKS_PER_LAYER`].  The
+    /// cap is a modeling resolution, not a silent behavior change: the
+    /// chunk-pipelining effect saturates quickly (the `(C+1)/(2C)` factor
+    /// is within 1% of its limit by C = 64) while the DES task count —
+    /// and its runtime — would grow into the millions for paper-scale
+    /// payloads under a 4096-element budget.  The closed forms
+    /// ([`eq_chunked_iter`], [`chunked_gated_link_exposure`]) use the
+    /// uncapped chunk counts.
+    pub fn layer_chunks(&self, compressed: bool) -> u64 {
+        let raw = if self.link_chunk_elems == 0 {
+            1
+        } else if compressed {
+            // A layer task aggregates `matrices_per_layer` payloads; when
+            // each payload stays whole (one chunk) the aggregate is the
+            // unchunked layer task — returning `matrices` here would
+            // change the DES at the n_chunks = 1 degeneracy point.
+            match self.sub_payload_chunks() {
+                0 | 1 => 1,
+                per_payload => self.matrices_per_layer as u64 * per_payload,
+            }
+        } else {
+            self.full_layer_chunks()
+        };
+        raw.min(MAX_DES_CHUNK_TASKS_PER_LAYER)
     }
 }
 
@@ -312,6 +372,67 @@ pub fn lsp_gated_link_exposure(c: &Costs, n: usize) -> f64 {
     gated_link_exposure(c, n, 0.0, 0)
 }
 
+/// Makespan of one layer's offload -> CPU-update -> upload tail when it is
+/// split into `n_chunks` sub-layer chunks (PIPO-style): the three stages
+/// run on three different resources, so chunk i's upload overlaps chunk
+/// i+1's update and chunk i+2's offload — the latency collapses from the
+/// serial sum toward the slowest single stage:
+///
+/// ```text
+/// tail(C) = (off + upd + up) / C  +  (C - 1) / C * max(off, upd, up)
+/// ```
+///
+/// `C = 1` is exactly the serial sum (the unchunked behavior).
+pub fn chunked_tail(offload: f64, upd: f64, upload: f64, n_chunks: u64) -> f64 {
+    let c = n_chunks.max(1) as f64;
+    (offload + upd + upload) / c + (c - 1.0) / c * offload.max(upd).max(upload)
+}
+
+/// Closed-form chunked schedule estimate: [`eq_async_lsp_iter`]'s critical
+/// path with the per-layer pipeline tail shortened by sub-layer chunking
+/// ([`chunked_tail`]).  The steady-state resource bounds (either link, the
+/// CPU updater) are untouched — chunking *overlaps* work across stages, it
+/// does not remove any.  Degenerates EXACTLY to the unchunked forms:
+/// `n_chunks = 1` returns `eq_async_lsp_iter(c, n, rho, staleness)`
+/// verbatim (and therefore Eq. 4 at `rho = 0, S = 0`).
+pub fn eq_chunked_iter(c: &Costs, n: usize, rho: f64, staleness: u64, n_chunks: u64) -> f64 {
+    if n_chunks <= 1 {
+        return eq_async_lsp_iter(c, n, rho, staleness);
+    }
+    let nf = n as f64;
+    let q = 1.0 - rho.clamp(0.0, 1.0);
+    let tail = chunked_tail(
+        q * c.offload_layer_sub,
+        q * c.upd_layer_cpu_sub,
+        q * c.upload_layer_sub,
+        n_chunks,
+    );
+    let gpu_path =
+        nf * (c.fwd_layer_gpu + c.bwd_layer_gpu + c.compress_layer_gpu + c.apply_layer_gpu);
+    let exposed = tail / (staleness as f64 + 1.0);
+    (gpu_path + exposed)
+        .max(nf * q * c.offload_layer_sub)
+        .max(nf * q * c.upload_layer_sub)
+        .max(nf * q * c.upd_layer_cpu_sub)
+}
+
+/// Chunked gated link exposure — EXACTLY the formula the runtime's
+/// virtual-clock stall counter applies per gating delta
+/// (`PipelineCtx::note_gated_delta`): the unchunked exposure scaled by the
+/// shared chunk-pipelining factor `(C + 1) / (2 C)`
+/// (`comm::chunk_pipeline_factor` — both callers use the same function, so
+/// the sim-vs-runtime stall agreement survives chunking).
+pub fn chunked_gated_link_exposure(
+    c: &Costs,
+    n: usize,
+    rho: f64,
+    staleness: u64,
+    n_chunks: u64,
+) -> f64 {
+    gated_link_exposure(c, n, rho, staleness)
+        * crate::coordinator::comm::chunk_pipeline_factor(n_chunks)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,6 +540,73 @@ mod tests {
         assert!((gated_link_exposure(&c, n, 0.0, 2) / lsp - 1.0 / 3.0).abs() < 1e-12);
         assert!((gated_link_exposure(&c, n, 0.5, 0) / lsp - 0.5).abs() < 1e-12);
         assert_eq!(gated_link_exposure(&c, n, 1.0, 0), 0.0);
+    }
+
+    #[test]
+    fn chunked_forms_degenerate_and_improve_monotonically() {
+        let (_, w, c) = llama_ws();
+        let n = w.n_layers;
+        // n_chunks = 1 IS the unchunked form, bit for bit.
+        for (rho, s) in [(0.0, 0u64), (0.5, 2), (1.0, 0)] {
+            let un = eq_async_lsp_iter(&c, n, rho, s);
+            let ch = eq_chunked_iter(&c, n, rho, s, 1);
+            assert_eq!(ch.to_bits(), un.to_bits(), "rho {rho} S {s}");
+        }
+        assert_eq!(
+            chunked_gated_link_exposure(&c, n, 0.0, 0, 1).to_bits(),
+            lsp_gated_link_exposure(&c, n).to_bits()
+        );
+        // chunked_tail: serial sum at C = 1, slowest stage as C -> inf,
+        // monotone non-increasing in between.
+        let (a, u, b) = (3.0, 2.0, 1.0);
+        assert_eq!(chunked_tail(a, u, b, 1), a + u + b);
+        let mut prev = f64::INFINITY;
+        for ch in 1..=64u64 {
+            let t = chunked_tail(a, u, b, ch);
+            assert!(t <= prev + 1e-12, "C {ch}: {t} > {prev}");
+            assert!(t >= a, "never below the slowest stage");
+            prev = t;
+        }
+        assert!((chunked_tail(a, u, b, 1 << 20) - a) < 1e-4);
+        // The full estimate never gets worse with more chunks either.
+        let mut prev = eq_chunked_iter(&c, n, 0.0, 0, 1);
+        for ch in [2u64, 4, 16, 256] {
+            let t = eq_chunked_iter(&c, n, 0.0, 0, ch);
+            assert!(t <= prev + 1e-12, "C {ch}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn chunked_exposure_predicts_the_acceptance_margin() {
+        // The acceptance shape: lsp at --link-chunk-elems 4096 on a paper
+        // workload.  d = 2048 => 4 Mi elements per subspace payload =>
+        // 1024 chunks => the pipelining factor is within a hair of 1/2,
+        // comfortably past the >= 20% stall-reduction bar.
+        let (_, mut w, c) = llama_ws();
+        w.link_chunk_elems = 4096;
+        let chunks = w.sub_payload_chunks();
+        assert_eq!(chunks, 1024);
+        let whole = lsp_gated_link_exposure(&c, w.n_layers);
+        let chunked = chunked_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks);
+        assert!(whole > 0.0);
+        let reduction = 1.0 - chunked / whole;
+        assert!(reduction >= 0.2, "predicted stall reduction {reduction} below 20%");
+        // And the factor matches the runtime formula exactly.
+        let factor = crate::coordinator::comm::chunk_pipeline_factor(chunks);
+        assert!((chunked / whole - factor).abs() < 1e-12);
+        // Chunk counting follows the runtime rule; the DES task-splitting
+        // view additionally caps at MAX_DES_CHUNK_TASKS_PER_LAYER (the
+        // pipelining factor is saturated well before 4 * 1024 chunks).
+        assert_eq!(w.layer_chunks(true), MAX_DES_CHUNK_TASKS_PER_LAYER);
+        w.link_chunk_elems = 1 << 22; // one 4 Mi-elem chunk per payload
+        assert_eq!(w.sub_payload_chunks(), 1);
+        // No payload splits => the layer task must stay the unchunked one
+        // (the DES-side n_chunks = 1 degeneracy).
+        assert_eq!(w.layer_chunks(true), 1, "whole payloads keep the unchunked layer task");
+        w.link_chunk_elems = 0;
+        assert_eq!(w.layer_chunks(true), 1);
+        assert_eq!(w.sub_payload_chunks(), 1);
     }
 
     #[test]

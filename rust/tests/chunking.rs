@@ -1,0 +1,458 @@
+//! Sub-layer chunked link transfers (PIPO-style), artifact-free: codec
+//! round-trips at chunk granularity, chunked-vs-unchunked parity through
+//! the real queues + virtual-clock links + CPU updater + reassembler, and
+//! the bounded-staleness protocol with partial-chunk arrivals straddling
+//! step boundaries.  The artifact-gated trainer-level versions live in
+//! `tests/policy_parity.rs`.
+
+use std::sync::Arc;
+
+use lsp_offload::codec::{make_codec, Codec, CodecKind};
+use lsp_offload::coordinator::comm::{
+    chunk_pipeline_factor, encode_chunked, n_chunks_for, DeltaMsg, Link, LinkClock, OffloadMsg,
+    ParamKey, PrioQueue, VirtualClock,
+};
+use lsp_offload::coordinator::pipeline::{
+    stale_bound_exceeded, InFlight, LogicalDelta, Reassembler,
+};
+use lsp_offload::coordinator::worker::CpuUpdater;
+use lsp_offload::tensor::kernel::KernelConfig;
+use lsp_offload::util::bufpool::BufPool;
+use lsp_offload::util::prop::check;
+use lsp_offload::util::rng::Rng;
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let (mut err2, mut ref2) = (0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        err2 += ((x - y) as f64).powi(2);
+        ref2 += (x as f64).powi(2);
+    }
+    if ref2 == 0.0 {
+        err2.sqrt()
+    } else {
+        (err2 / ref2).sqrt()
+    }
+}
+
+/// A gradient bounded away from zero (|g| >= floor): keeps the Adam
+/// direction smooth in the perturbation analysis the lossy-codec envelope
+/// below relies on, and keeps every element non-zero for the sparse
+/// codecs' gathered-value alignment.
+fn bounded_gradient(r: &mut Rng, n: usize, floor: f32) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let mag = floor + r.normal().abs();
+            if r.below(2) == 0 {
+                mag
+            } else {
+                -mag
+            }
+        })
+        .collect()
+}
+
+/// Every codec, randomized chunk sizes: decoding the chunks back into a
+/// reassembly buffer reconstructs the payload within the codec's declared
+/// `rel_l2_bound` — the per-chunk bound composes to the whole payload
+/// (chunks partition it, so the squared errors just add).
+#[test]
+fn reassembled_payloads_respect_codec_bound_across_chunkings() {
+    check(
+        "chunked-codec-roundtrip",
+        24,
+        |r: &mut Rng| {
+            let kind = CodecKind::ALL[r.below(CodecKind::ALL.len())];
+            let n = 1 + r.below(600);
+            let chunk = [0usize, 1, 7, 64, 100, 256][r.below(6)];
+            let zero_frac = r.f32() * 0.8;
+            let data: Vec<f32> = (0..n)
+                .map(|_| if r.f32() < zero_frac { 0.0 } else { r.normal() })
+                .collect();
+            (kind, chunk, data)
+        },
+        |(kind, chunk, data)| {
+            let codec = make_codec(*kind);
+            let pool = BufPool::new();
+            let mut out = vec![f32::NAN; data.len()];
+            let mut n_emitted = 0usize;
+            let mut failed = None;
+            encode_chunked(codec.as_ref(), &pool, data, *chunk, |payload, hdr| {
+                n_emitted += 1;
+                let end = hdr.elem_offset + payload.elems;
+                if let Err(e) = codec.decode(payload.as_bytes(), &mut out[hdr.elem_offset..end])
+                {
+                    failed = Some(e.to_string());
+                }
+            });
+            if let Some(e) = failed {
+                return Err(e);
+            }
+            if n_emitted != n_chunks_for(data.len(), *chunk) {
+                return Err(format!(
+                    "{}: emitted {n_emitted} chunks, expected {}",
+                    codec.name(),
+                    n_chunks_for(data.len(), *chunk)
+                ));
+            }
+            if out.iter().any(|x| x.is_nan()) {
+                return Err("chunks did not cover the payload".into());
+            }
+            let rel = rel_l2(data, &out);
+            if rel > codec.rel_l2_bound() as f64 + 1e-9 {
+                return Err(format!(
+                    "{} chunk {}: rel L2 {rel} > bound {}",
+                    codec.name(),
+                    chunk,
+                    codec.rel_l2_bound()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One key's gradient sequence through the real pipeline (virtual-clock
+/// links, CPU updater, reassembler): returns the reassembled logical
+/// deltas in step order plus the summed round-trip charge of the last one.
+fn pipeline_deltas(
+    codec: &Arc<dyn Codec>,
+    grads: &[Vec<f32>],
+    chunk_elems: usize,
+) -> Vec<LogicalDelta> {
+    let pool = BufPool::new();
+    let clock = Arc::new(VirtualClock::default());
+    let d2h_in = Arc::new(PrioQueue::new());
+    let d2h_out = Arc::new(PrioQueue::new());
+    let h2d_in = Arc::new(PrioQueue::new());
+    let delta_out = Arc::new(PrioQueue::<DeltaMsg>::new());
+    let mut d2h = Link::spawn(
+        "d2h",
+        1e9,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        d2h_in.clone(),
+        d2h_out.clone(),
+        |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
+        |m| m.prio,
+        |m, ns| m.link_ns += ns,
+    );
+    let mut h2d = Link::spawn(
+        "h2d",
+        1e9,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        h2d_in.clone(),
+        delta_out.clone(),
+        |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
+        |m| m.prio,
+        |m, ns| m.link_ns += ns,
+    );
+    let mut upd = CpuUpdater::spawn(
+        d2h_out.clone(),
+        h2d_in.clone(),
+        1.0,
+        pool.clone(),
+        KernelConfig::single_threaded(),
+        codec.clone(),
+    );
+
+    let key = ParamKey { param_index: 0, kind: None };
+    let mut pending = InFlight::default();
+    let mut reasm = Reassembler::default();
+    let mut out = Vec::new();
+    for (step, g) in grads.iter().enumerate() {
+        let step = step as u64;
+        pending.insert_chunked(key.clone(), step, n_chunks_for(g.len(), chunk_elems) as u32);
+        encode_chunked(codec.as_ref(), &pool, g, chunk_elems, |payload, chunk| {
+            d2h_in.push(
+                0,
+                OffloadMsg { key: key.clone(), data: payload, prio: 0, step, link_ns: 0, chunk },
+            );
+        });
+        loop {
+            let msg = delta_out.pop().expect("pipeline alive");
+            if let Some(ld) = reasm
+                .ingest(codec.as_ref(), &pool, &mut pending, msg)
+                .expect("chunk ingestion")
+            {
+                out.push(ld);
+                break;
+            }
+        }
+    }
+    assert!(pending.is_empty() && reasm.is_empty());
+    d2h_in.close();
+    d2h_out.close();
+    h2d_in.close();
+    delta_out.close();
+    d2h.stop();
+    h2d.stop();
+    upd.join();
+    out
+}
+
+/// Chunked == unchunked, pinned hard where it is exact and bounded where
+/// quantization block grouping shifts with the chunk boundaries:
+///
+/// * Lossless codecs (`f32`, `sparse-f32`) and element-independent lossy
+///   ones (`bf16`): the reassembled deltas are BIT-IDENTICAL to the
+///   unchunked pipeline for every chunk size — the chunked fused Adam is
+///   element-wise over moment slices and the wire values cannot depend on
+///   the chunking.
+/// * Block-quantized codecs (`int8`, `sparse-int8`) at block-aligned chunk
+///   sizes over fully dense payloads: also bit-identical (the 64-blocks
+///   land on the same elements).
+/// * Block-quantized codecs at unaligned chunk sizes: bounded — each
+///   pipeline's gradient/delta round trips are within `rel_l2_bound` of
+///   the exact values, and with gradients bounded away from zero the Adam
+///   direction is smooth, so the two deltas sit within a small multiple of
+///   the codec bound of each other (triangle inequality envelope).
+#[test]
+fn chunked_pipeline_matches_unchunked_deltas() {
+    let mut rng = Rng::new(2024);
+    let n = 640; // 10 int8 blocks
+    let grads: Vec<Vec<f32>> = (0..3).map(|_| bounded_gradient(&mut rng, n, 0.2)).collect();
+
+    for kind in CodecKind::ALL {
+        let codec = make_codec(kind);
+        let whole: Vec<Vec<f32>> = pipeline_deltas(&codec, &grads, 0)
+            .into_iter()
+            .map(|ld| ld.data.as_slice().to_vec())
+            .collect();
+        let exact_cases: &[usize] = match kind {
+            // Element-independent: any chunking is exact.
+            CodecKind::F32Raw | CodecKind::Bf16 | CodecKind::SparseIdx => &[64, 100, 131],
+            // Block codecs: exact at block-aligned chunk sizes (the dense,
+            // all-non-zero payload keeps sparse-int8's gathered values
+            // aligned with the element blocks too).
+            CodecKind::Int8Block | CodecKind::SparseInt8 => &[64, 128, 320],
+        };
+        for &chunk in exact_cases {
+            let chunked = pipeline_deltas(&codec, &grads, chunk);
+            for (step, (ld, want)) in chunked.iter().zip(&whole).enumerate() {
+                assert_eq!(ld.n_chunks as usize, n_chunks_for(n, chunk), "chunk {chunk}");
+                assert_eq!(
+                    ld.data.as_slice(),
+                    want.as_slice(),
+                    "{}: chunk {chunk} step {step} must be bit-identical",
+                    codec.name()
+                );
+            }
+        }
+        // Unaligned chunk sizes on the block codecs: bounded envelope.
+        if matches!(kind, CodecKind::Int8Block | CodecKind::SparseInt8) {
+            for chunk in [100usize, 200] {
+                let chunked = pipeline_deltas(&codec, &grads, chunk);
+                for (step, (ld, want)) in chunked.iter().zip(&whole).enumerate() {
+                    let rel = rel_l2(want, &ld.data);
+                    // Each pipeline quantizes the gradient AND the delta
+                    // (2 x bound each by the round-trip guarantee), plus
+                    // the smooth Adam amplification over |g| >= 0.2 — a
+                    // 6 x envelope holds with ample margin while still
+                    // scaling with the codec's declared bound.
+                    let envelope = 6.0 * codec.rel_l2_bound() as f64;
+                    assert!(
+                        rel <= envelope,
+                        "{}: chunk {chunk} step {step}: delta rel L2 {rel} > {envelope}",
+                        codec.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The modeled stall accounting at chunk granularity: under the virtual
+/// clock a chunked round trip carries the same total link charge as the
+/// whole-payload one (same bytes, same bandwidth — f32 keeps this exact),
+/// while the gating charge scales by the shared pipelining factor
+/// `(C+1)/(2C)` — so chunked gated stall is structurally below whole-layer
+/// stall for C >= 2.
+#[test]
+fn chunked_round_trip_charge_and_exposure_factor() {
+    let mut rng = Rng::new(9);
+    let g = bounded_gradient(&mut rng, 1024, 0.1);
+    let codec = make_codec(CodecKind::F32Raw);
+    let whole = pipeline_deltas(&codec, std::slice::from_ref(&g), 0);
+    let chunked = pipeline_deltas(&codec, std::slice::from_ref(&g), 256);
+    assert_eq!(whole[0].n_chunks, 1);
+    assert_eq!(chunked[0].n_chunks, 4);
+    // Same payload, same bandwidth: the summed chunk charges equal the
+    // whole-payload round trip exactly (f32 wire bytes divide evenly and
+    // the 1 GB/s bandwidth makes transfer_ns integral per chunk).
+    assert_eq!(whole[0].link_ns, chunked[0].link_ns, "total round-trip charge");
+    // The gating charge the stall counter would record:
+    let whole_charge = whole[0].link_ns as f64 * chunk_pipeline_factor(1);
+    let chunk_charge = chunked[0].link_ns as f64 * chunk_pipeline_factor(4);
+    assert_eq!(whole_charge, whole[0].link_ns as f64, "C = 1 is the full charge");
+    assert!((chunk_charge / whole_charge - 0.625).abs() < 1e-12, "(4+1)/(2*4) = 0.625");
+}
+
+/// The bounded-staleness protocol with CHUNKED transfers, end-to-end
+/// through the real queues, virtual-clock links and CPU updater: the
+/// ledger stays at logical granularity, so a delta whose chunks straddle
+/// step boundaries (some chunks received in one drain, the rest in a
+/// later one) still lands within S steps of its gradient — partial
+/// receipt never counts as arrival, and every logical delta reassembles
+/// completely exactly once.  The chunked sibling of
+/// `schedule_props::staleness_bound_holds_through_the_real_pipeline`.
+#[test]
+fn chunked_staleness_bound_holds_with_partial_arrivals() {
+    check(
+        "chunked-staleness-bound",
+        8,
+        |r: &mut Rng| {
+            let n_keys = 1 + r.below(5);
+            let window = r.below(4) as u64;
+            let steps = 4 + r.below(6) as u64;
+            let sizes: Vec<usize> = (0..n_keys).map(|_| 32 + r.below(160)).collect();
+            // Chunk budget small enough that most payloads split.
+            let chunk = [0usize, 64, 96][r.below(3)];
+            let kind = [CodecKind::F32Raw, CodecKind::Bf16, CodecKind::SparseInt8]
+                [r.below(3)];
+            (window, steps, sizes, chunk, kind, r.next_u64())
+        },
+        |(window, steps, sizes, chunk, kind, seed)| {
+            let (window, steps, chunk) = (*window, *steps, *chunk);
+            let codec = make_codec(*kind);
+            let pool = BufPool::new();
+            let clock = Arc::new(VirtualClock::default());
+            let d2h_in = Arc::new(PrioQueue::new());
+            let d2h_out = Arc::new(PrioQueue::new());
+            let h2d_in = Arc::new(PrioQueue::new());
+            let delta_out = Arc::new(PrioQueue::<DeltaMsg>::new());
+            let mut d2h = Link::spawn(
+                "d2h",
+                1e6,
+                1.0,
+                LinkClock::Virtual(clock.clone()),
+                d2h_in.clone(),
+                d2h_out.clone(),
+                |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
+                |m| m.prio,
+                |m, ns| m.link_ns += ns,
+            );
+            let mut h2d = Link::spawn(
+                "h2d",
+                1e6,
+                1.0,
+                LinkClock::Virtual(clock.clone()),
+                h2d_in.clone(),
+                delta_out.clone(),
+                |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
+                |m| m.prio,
+                |m, ns| m.link_ns += ns,
+            );
+            let mut upd = CpuUpdater::spawn(
+                d2h_out.clone(),
+                h2d_in.clone(),
+                1.0,
+                pool.clone(),
+                KernelConfig::single_threaded(),
+                codec.clone(),
+            );
+
+            let mut r = Rng::new(*seed);
+            let mut pending = InFlight::default();
+            let mut reasm = Reassembler::default();
+            let mut held: Vec<LogicalDelta> = Vec::new();
+            let mut shipped = 0u64;
+            let mut applied = 0u64;
+            let recv =
+                |pending: &mut InFlight, reasm: &mut Reassembler| -> Result<LogicalDelta, String> {
+                    loop {
+                        let Some(msg) = delta_out.pop() else {
+                            return Err("delta queue closed early".into());
+                        };
+                        match reasm.ingest(codec.as_ref(), &pool, pending, msg) {
+                            Err(e) => return Err(e.to_string()),
+                            Ok(Some(ld)) => return Ok(ld),
+                            Ok(None) => continue,
+                        }
+                    }
+                };
+            for step in 0..steps {
+                for (k, &n) in sizes.iter().enumerate() {
+                    if r.below(4) == 0 {
+                        continue;
+                    }
+                    let g: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                    let key = ParamKey { param_index: k, kind: None };
+                    pending.insert_chunked(key.clone(), step, n_chunks_for(n, chunk) as u32);
+                    shipped += 1;
+                    encode_chunked(codec.as_ref(), &pool, &g, chunk, |payload, hdr| {
+                        d2h_in.push(
+                            k as i64,
+                            OffloadMsg {
+                                key: key.clone(),
+                                data: payload,
+                                prio: k as i64,
+                                step,
+                                link_ns: 0,
+                                chunk: hdr,
+                            },
+                        );
+                    });
+                }
+                // Deadline drain at LOGICAL granularity: receive until no
+                // gradient older than the window is still in flight.  The
+                // pops hand over raw chunks; only completed logical deltas
+                // count as received (ingest removes them from the ledger).
+                while let Some(oldest) = pending.oldest_step() {
+                    if !stale_bound_exceeded(oldest, step, window) {
+                        break;
+                    }
+                    held.push(recv(&mut pending, &mut reasm)?);
+                }
+                let mut rest = Vec::new();
+                for ld in held.drain(..) {
+                    if stale_bound_exceeded(ld.step, step, window) {
+                        let age = step - ld.step;
+                        if age > window {
+                            return Err(format!(
+                                "logical delta for param {} applied {age} steps after \
+                                 production (window {window})",
+                                ld.key.param_index
+                            ));
+                        }
+                        if ld.n_chunks as usize != n_chunks_for(ld.data.len(), chunk) {
+                            return Err(format!(
+                                "delta reassembled from {} chunks, expected {}",
+                                ld.n_chunks,
+                                n_chunks_for(ld.data.len(), chunk)
+                            ));
+                        }
+                        if ld.data.iter().any(|x| !x.is_finite()) {
+                            return Err("non-finite reassembled delta".into());
+                        }
+                        applied += 1;
+                    } else {
+                        rest.push(ld);
+                    }
+                }
+                held = rest;
+            }
+            // Finish protocol: land the in-flight remainder (early applies
+            // trivially satisfy the bound).
+            while !pending.is_empty() {
+                held.push(recv(&mut pending, &mut reasm)?);
+            }
+            applied += held.len() as u64;
+            held.clear();
+            if applied != shipped {
+                return Err(format!("shipped {shipped} != applied {applied}"));
+            }
+            if !reasm.is_empty() {
+                return Err("reassembler left partial deltas behind".into());
+            }
+            d2h_in.close();
+            d2h_out.close();
+            h2d_in.close();
+            delta_out.close();
+            d2h.stop();
+            h2d.stop();
+            upd.join();
+            Ok(())
+        },
+    );
+}

@@ -43,13 +43,7 @@ fn link_time_scales_with_encoded_bytes() {
         let key = ParamKey { param_index: 0, kind: None };
         ingress.push(
             0,
-            OffloadMsg {
-                key,
-                data: WirePayload::detached(codec.as_ref(), &data),
-                prio: 0,
-                step: 0,
-                link_ns: 0,
-            },
+            OffloadMsg::whole(key, WirePayload::detached(codec.as_ref(), &data), 0, 0),
         );
         let got = egress.pop().unwrap();
         assert_eq!(got.data.elems, data.len());
@@ -148,7 +142,7 @@ fn updater_round_trips_encoded_payloads() {
     for step in 0..4u64 {
         let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let wire = WirePayload::from_pool(codec.as_ref(), &pool, &g);
-        d2h_in.push(0, OffloadMsg { key: key.clone(), data: wire, prio: 0, step, link_ns: 0 });
+        d2h_in.push(0, OffloadMsg::whole(key.clone(), wire, 0, step));
         let d = h2d_out.pop().unwrap();
         assert_eq!(d.key, key);
         assert_eq!(d.delta.elems, n);

@@ -312,6 +312,128 @@ fn async_lsp_cuts_virtual_stall_vs_lsp() {
     });
 }
 
+/// Sub-layer chunking parity (PIPO-style transfers): under the bit-exact
+/// `f32` wire format, chunked training is BIT-IDENTICAL to whole-layer
+/// training for every offloading policy — the chunked fused Adam is
+/// element-wise over moment slices, chunk reassembly is an exact
+/// partition, and deltas still apply at the same schedule points.  The
+/// large chunk budget (every payload fits in one chunk, `n_chunks = 1`)
+/// additionally pins that the chunking machinery itself reproduces the
+/// pre-chunk behavior exactly.
+#[test]
+fn chunked_f32_trajectories_match_unchunked_bitwise() {
+    with_engine(|eng| {
+        for policy in [PolicyKind::Lsp, PolicyKind::Zero, PolicyKind::AsyncLsp] {
+            let whole = run_trajectory(eng, policy);
+            // 64: the tiny fixture's subspace (d=16 -> 256 elems) and
+            // embedding (2048 elems) payloads genuinely split (4-32
+            // chunks).  1 Mi: nothing splits — the n_chunks = 1 identity.
+            for chunk in [64usize, 1 << 20] {
+                let mut cfg = parity_config(policy);
+                cfg.link_chunk_elems = chunk;
+                let mut tr = Trainer::new(eng, cfg).unwrap();
+                let rep = tr.train().unwrap();
+                let got: Vec<f32> = rep.loss_curve.iter().map(|&(_, l)| l).collect();
+                assert_eq!(
+                    got, whole,
+                    "{policy:?} chunk {chunk}: chunked f32 run must be bit-identical"
+                );
+                assert_eq!(rep.link_chunk_elems, chunk);
+                assert!(tr.ctx().pending.is_empty(), "{policy:?} chunk {chunk}");
+                assert!(tr.ctx().reasm.is_empty(), "{policy:?} chunk {chunk}");
+            }
+        }
+    });
+}
+
+/// The chunking acceptance criterion at the runtime level: at matched
+/// settings (same seed, bit-exact f32 codec, virtual link clock), chunked
+/// lsp must report >= 20% lower `stall_secs` than whole-layer lsp while
+/// the loss trajectory stays bit-identical.  The tiny fixture's payloads
+/// are 32-2048 elements, so the split that exercises real chunking here is
+/// `--link-chunk-elems 64` (4-32 chunks per payload — pipelining factor
+/// 0.52-0.63); the issue's 4096-element operating point only splits
+/// paper-scale payloads and is covered by the cost-model test
+/// (`chunked_exposure_predicts_the_acceptance_margin`, d = 2048 -> 1024
+/// chunks), the DES direction test in `sim::schedules`, and the
+/// `chunked_link` bench rows.
+///
+/// Honest scope note: under the virtual clock `stall_secs` is the MODELED
+/// gated link exposure (`note_gated_delta` applies the shared
+/// `(C+1)/(2C)` factor per gating delta — the virtual clock serializes
+/// transfers on one counter and cannot observe overlap), so what this
+/// test pins is that the runtime actually ships/reassembles real chunk
+/// counts end-to-end and charges the agreed model from them, plus the
+/// bit-identical trajectory.  The *behavioral* chunk pipelining —
+/// per-chunk CPU Adam against moment slices, links draining chunk 0
+/// before later chunks are encoded, reassembly exactness — is pinned by
+/// `worker::chunked_gradient_matches_whole_payload_bitwise` and
+/// `tests/chunking.rs`.
+#[test]
+fn chunked_lsp_cuts_virtual_stall_vs_whole_layer() {
+    use lsp_offload::coordinator::comm::LinkClockMode;
+    with_engine(|eng| {
+        let run = |chunk: usize| {
+            let mut cfg = parity_config(PolicyKind::Lsp);
+            cfg.link_clock = LinkClockMode::Virtual;
+            cfg.link_chunk_elems = chunk;
+            cfg.steps = 8;
+            let mut tr = Trainer::new(eng, cfg).unwrap();
+            tr.train().unwrap()
+        };
+        let whole = run(0);
+        let chunked = run(64);
+        assert_eq!(whole.link_clock, "virtual");
+        assert!(whole.stall_secs > 0.0, "lsp must report gated link exposure");
+        assert_eq!(
+            whole.bytes_up, chunked.bytes_up,
+            "f32 chunking moves the same wire bytes"
+        );
+        assert!(
+            chunked.stall_secs <= 0.8 * whole.stall_secs,
+            "chunked stall {} must be >= 20% below whole-layer {}",
+            chunked.stall_secs,
+            whole.stall_secs
+        );
+        let a: Vec<f32> = whole.loss_curve.iter().map(|&(_, l)| l).collect();
+        let b: Vec<f32> = chunked.loss_curve.iter().map(|&(_, l)| l).collect();
+        assert_eq!(a, b, "f32 chunking must not change the trajectory");
+    });
+}
+
+/// Staleness through chunked transfers at the trainer level: across
+/// (rho, S, chunk) configurations, partial-chunk receipt never counts as
+/// arrival, and no logical delta lands more than S steps after its
+/// gradient (the artifact-free randomized version lives in
+/// tests/chunking.rs).
+#[test]
+fn chunked_async_staleness_never_exceeded_in_training() {
+    use lsp_offload::coordinator::comm::LinkClockMode;
+    with_engine(|eng| {
+        for (rho, window, chunk) in
+            [(0.0f32, 0u64, 64usize), (0.25, 1, 64), (0.5, 2, 128), (0.5, 2, 1 << 20)]
+        {
+            let mut cfg = parity_config(PolicyKind::AsyncLsp);
+            cfg.link_clock = LinkClockMode::Virtual;
+            cfg.async_rho = rho;
+            cfg.async_staleness = window;
+            cfg.link_chunk_elems = chunk;
+            let mut tr = Trainer::new(eng, cfg).unwrap();
+            let rep = tr.train().unwrap();
+            assert!(
+                rep.max_delta_staleness <= window,
+                "rho {rho} S {window} chunk {chunk}: observed staleness {}",
+                rep.max_delta_staleness
+            );
+            assert!(tr.ctx().pending.is_empty(), "chunk {chunk}: deltas left in flight");
+            assert!(tr.ctx().reasm.is_empty(), "chunk {chunk}: partial deltas left behind");
+            if rho < 1.0 {
+                assert!(rep.stale_drains > 0, "rho {rho}: tails must have shipped");
+            }
+        }
+    });
+}
+
 /// Staleness property at the trainer level: across randomized (rho, S)
 /// configurations, no delta is ever applied more than S steps after its
 /// gradient was produced (the artifact-free pipeline-level version with

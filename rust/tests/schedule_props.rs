@@ -344,13 +344,12 @@ fn staleness_bound_holds_through_the_real_pipeline() {
                     shipped += 1;
                     d2h_in.push(
                         k as i64,
-                        OffloadMsg {
+                        OffloadMsg::whole(
                             key,
-                            data: WirePayload::detached(codec.as_ref(), &g),
-                            prio: k as i64,
+                            WirePayload::detached(codec.as_ref(), &g),
+                            k as i64,
                             step,
-                            link_ns: 0,
-                        },
+                        ),
                     );
                 }
                 // Deadline drain: receive until nothing older than the

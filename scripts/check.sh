@@ -9,6 +9,11 @@
 # `cargo bench --bench hotpath` directly) writes the cross-PR trajectory
 # file BENCH_hotpath.json at the repo root.
 #
+# Gates before build: the link-path real-sleep grep and the config-flag
+# documentation gate (every flag parsed in src/config/mod.rs must appear
+# as --<flag> in EXPERIMENTS.md).  After build: `cargo doc --no-deps`
+# under RUSTDOCFLAGS="-D warnings" (broken intra-doc links fail).
+#
 # Gates after build/test:
 #   * Perf: scripts/bench_compare.py fails the run when any (name, shape,
 #     impl) row shared between the smoke output and the committed
@@ -45,8 +50,30 @@ if [[ -n "$sleep_hits$comm_test_hits" ]]; then
 fi
 echo "   clean"
 
+# Every CLI flag parsed by the config system must be documented in the
+# EXPERIMENTS.md reference (defaults/ranges/guidance) — docs rot is a
+# gate failure, not a review nit.
+echo "== config-flag documentation gate =="
+missing_flags=""
+for flag in $(grep -oE 'args\.get[a-z0-9_]*\("[a-z0-9-]+"\)' src/config/mod.rs \
+    | sed -E 's/.*\("([^"]+)"\).*/\1/' | sort -u); do
+    if ! grep -q -- "--$flag" "$ROOT/EXPERIMENTS.md"; then
+        missing_flags="$missing_flags --$flag"
+    fi
+done
+if [[ -n "$missing_flags" ]]; then
+    echo "FAIL: flags parsed in src/config/mod.rs but undocumented in EXPERIMENTS.md:$missing_flags"
+    exit 1
+fi
+echo "   clean"
+
 echo "== cargo build --release =="
 cargo build --release
+
+# Broken intra-doc links (or any rustdoc warning) fail the gate: the
+# module docs are the architecture documentation's source of truth.
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 # Timing-sensitive tests default to the deterministic virtual clock (the
 # trainer's Auto mode consults LSP_LINK_CLOCK); export LSP_LINK_CLOCK=real
