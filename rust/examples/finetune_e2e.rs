@@ -13,7 +13,10 @@
 //! `target/e2e_<policy>.csv` and summarized on stdout; ROADMAP.md records
 //! reference numbers.
 
+use std::sync::Arc;
+
 use anyhow::Result;
+use lsp_offload::coordinator::fault::FaultPlan;
 use lsp_offload::coordinator::policies::PolicyKind;
 use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
 use lsp_offload::model::manifest::find_artifacts;
@@ -60,6 +63,9 @@ fn main() -> Result<()> {
             eval_every: (steps / 4).max(1),
             eval_batches: 4,
             log_every: (steps / 6).max(1),
+            // Honor LSP_FAULT_PLAN so the driver doubles as a recovery
+            // demo: inject faults, watch the robustness summary below.
+            fault_plan: FaultPlan::from_env()?.map(Arc::new),
             ..TrainConfig::default()
         };
         println!("\n---- policy: {} ----", policy.name());
@@ -89,6 +95,25 @@ fn main() -> Result<()> {
             lsp_offload::util::human_bytes(r.bytes_up),
             r.compression_ratio(),
         );
+    }
+    let recovered: u64 = rows
+        .iter()
+        .map(|r| r.retransmits + r.corrupt_chunks + r.worker_restarts + r.codec_fallbacks)
+        .sum();
+    if recovered > 0 {
+        println!("\n== robustness (faults recovered without losing the run) ==");
+        for r in &rows {
+            println!(
+                "{:8} retransmits {:>4} corrupt {:>4} restarts {:>3} fallbacks {:>3} \
+                 retransmitted {}",
+                r.policy,
+                r.retransmits,
+                r.corrupt_chunks,
+                r.worker_restarts,
+                r.codec_fallbacks,
+                lsp_offload::util::human_bytes(r.retrans_bytes),
+            );
+        }
     }
     let lsp = &rows[0];
     let zero = &rows[1];

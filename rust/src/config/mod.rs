@@ -4,11 +4,13 @@
 //! Precedence: defaults < JSON config file (`--config path`) < CLI flags.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::codec::CodecKind;
 use crate::coordinator::comm::LinkClockMode;
+use crate::coordinator::fault::FaultPlan;
 use crate::coordinator::policies::PolicyKind;
 use crate::coordinator::trainer::TrainConfig;
 use crate::util::json::Json;
@@ -159,6 +161,21 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
                 }
                 cfg.async_rho = rho as f32;
             }
+            // Deterministic fault injection: a string (inline JSON or a
+            // path, same resolution as --fault-plan) or an inline
+            // array/object of fault specs.
+            "fault_plan" => {
+                let plan = if let Ok(s) = v.as_str() {
+                    FaultPlan::from_arg(s)?
+                } else {
+                    FaultPlan::from_json_value(v)?
+                };
+                cfg.fault_plan = Some(Arc::new(plan));
+            }
+            // Retransmit / degradation knobs (coordinator::fault::RetryCfg).
+            "retry_budget" => cfg.retry_budget = v.as_usize()? as u32,
+            "retry_backoff_ns" => cfg.retry_backoff_ns = v.as_usize()? as u64,
+            "codec_fallback_after" => cfg.codec_fallback_after = v.as_usize()? as u32,
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -255,6 +272,26 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
             bail!("--async-rho {v} must be in [0, 1]");
         }
         cfg.async_rho = v as f32;
+    }
+    // Fault injection: --fault-plan (inline JSON or a file path) wins;
+    // otherwise the LSP_FAULT_PLAN environment plan applies when neither
+    // the CLI nor the JSON config set one.
+    match args.get("fault-plan") {
+        Some(v) => cfg.fault_plan = Some(Arc::new(FaultPlan::from_arg(v)?)),
+        None => {
+            if cfg.fault_plan.is_none() {
+                cfg.fault_plan = FaultPlan::from_env()?.map(Arc::new);
+            }
+        }
+    }
+    if let Some(v) = args.get_u64("retry-budget")? {
+        cfg.retry_budget = v as u32;
+    }
+    if let Some(v) = args.get_u64("retry-backoff-ns")? {
+        cfg.retry_backoff_ns = v;
+    }
+    if let Some(v) = args.get_u64("codec-fallback-after")? {
+        cfg.codec_fallback_after = v as u32;
     }
     Ok(cfg)
 }
@@ -386,6 +423,47 @@ mod tests {
         assert_eq!(cfg.link_chunk_elems, 65536);
         let bad = Json::parse(r#"{"link_chunk_elems": 8}"#).unwrap();
         assert!(apply_json(&mut TrainConfig::default(), &bad).is_err());
+    }
+
+    #[test]
+    fn fault_and_retry_flags_and_json() {
+        // Defaults: no plan, RetryCfg-equivalent knobs.
+        let cfg = train_config_from(&argv("train")).unwrap();
+        assert!(cfg.fault_plan.is_none());
+        assert_eq!(cfg.retry_budget, 3);
+        assert_eq!(cfg.retry_backoff_ns, 200_000);
+        assert_eq!(cfg.codec_fallback_after, 2);
+
+        // Inline JSON plan via the CLI (no whitespace: argv splits on it),
+        // plus the retry knobs.
+        let a = argv(
+            r#"train --retry-budget 5 --retry-backoff-ns 1000 --codec-fallback-after 4 --fault-plan [{"action":"drop","step":3}]"#,
+        );
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.retry_budget, 5);
+        assert_eq!(cfg.retry_backoff_ns, 1_000);
+        assert_eq!(cfg.codec_fallback_after, 4);
+        assert_eq!(cfg.fault_plan.as_ref().unwrap().specs.len(), 1);
+
+        // Bad plans are config errors, not silent no-ops.
+        assert!(train_config_from(&argv(r#"train --fault-plan [{"action":"meteor"}]"#)).is_err());
+
+        // JSON config: an inline array value...
+        let j = Json::parse(
+            r#"{"fault_plan": [{"action": "corrupt", "bit": 7}, {"action": "panic", "step": 2}],
+                "retry_budget": 0, "retry_backoff_ns": 500, "codec_fallback_after": 1}"#,
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.retry_budget, 0);
+        assert_eq!(cfg.retry_backoff_ns, 500);
+        assert_eq!(cfg.codec_fallback_after, 1);
+        assert_eq!(cfg.fault_plan.as_ref().unwrap().specs.len(), 2);
+        // ...or a string holding inline JSON (the --fault-plan syntax).
+        let j = Json::parse(r#"{"fault_plan": "[{\"action\": \"stall\"}]"}"#).unwrap();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.fault_plan.as_ref().unwrap().specs.len(), 1);
     }
 
     #[test]

@@ -25,6 +25,22 @@
 //! itself (`link_ns`), so a returning delta always knows the deterministic
 //! round-trip link time its payload consumed — the basis of the modeled
 //! stall accounting in `PipelineCtx::note_gated_delta`.
+//!
+//! # Wire integrity and retransmission
+//!
+//! Every chunk produced by [`encode_chunked`] carries a CRC-32 checksum
+//! over its encoded bytes in its [`ChunkHeader`] (`checksum = 0` means
+//! unchecked — the legacy `whole()` shape).  The link verifies the
+//! checksum after each transfer: a corrupted or dropped chunk is NACKed
+//! and retransmitted with bounded exponential backoff
+//! (`FaultFabric::retry`), every attempt charging real wire time and
+//! bytes.  A chunk that exhausts its retry budget fails the pipeline with
+//! a clean [`PipelineError::RetryBudgetExhausted`] recorded in the shared
+//! [`PipelineHealth`] — and the link *closes its egress queue* so the
+//! shutdown cascades deterministically instead of hanging a consumer.
+//! Fault injection (drops, bit-flips, mangles, stalls) comes from the
+//! deterministic `FaultPlan` carried by the [`FaultFabric`]; see the
+//! `coordinator::fault` module docs.
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -32,6 +48,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::codec::Codec;
+use crate::coordinator::fault::{
+    crc32, flip_bit, lock_recover, FaultDir, FaultFabric, FaultKind, PipelineError,
+    PipelineHealth,
+};
 use crate::util::bufpool::{BufPool, PooledBytes};
 
 /// A parameter (or subspace) identified by its flat index in the
@@ -77,6 +97,12 @@ impl WirePayload {
         &self.bytes
     }
 
+    /// Mutable view of the encoded bytes (fault injection flips wire bits
+    /// in place; nothing on the fault-free path mutates a payload).
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        self.bytes.as_mut_slice()
+    }
+
     /// Encoded size — what the link charges against its bandwidth.
     pub fn wire_bytes(&self) -> usize {
         self.bytes.len()
@@ -107,12 +133,34 @@ pub struct ChunkHeader {
     /// Element count of the *whole* logical payload (the chunk's own
     /// element count travels in its `WirePayload::elems`).
     pub total_elems: usize,
+    /// CRC-32 (`fault::crc32`) over the chunk's *encoded* payload bytes;
+    /// `0` means unchecked (the legacy whole-payload constructors).  Links
+    /// verify it after every transfer and the decode seams re-verify.
+    pub checksum: u32,
+    /// Which codec encoded the payload: `CODEC_TAG_NEGOTIATED` (0) for the
+    /// pipeline's negotiated codec, `CODEC_TAG_F32_FALLBACK` (1) once the
+    /// key degraded to the bit-exact f32 wire format (see
+    /// `fault::FallbackMap`).
+    pub codec_tag: u8,
 }
 
 impl ChunkHeader {
-    /// The single-chunk header covering a whole payload of `total_elems`.
+    /// The single-chunk header covering a whole payload of `total_elems`
+    /// (unchecked: `checksum = 0`).
     pub fn whole(total_elems: usize) -> ChunkHeader {
-        ChunkHeader { idx: 0, of: 1, elem_offset: 0, total_elems }
+        ChunkHeader { idx: 0, of: 1, elem_offset: 0, total_elems, checksum: 0, codec_tag: 0 }
+    }
+
+    /// A multi-chunk header (unchecked until [`ChunkHeader::with_checksum`]
+    /// stamps it).
+    pub fn part(idx: u32, of: u32, elem_offset: usize, total_elems: usize) -> ChunkHeader {
+        ChunkHeader { idx, of, elem_offset, total_elems, checksum: 0, codec_tag: 0 }
+    }
+
+    /// The same header carrying `checksum` over the encoded payload bytes.
+    pub fn with_checksum(mut self, checksum: u32) -> ChunkHeader {
+        self.checksum = checksum;
+        self
     }
 
     /// Is this the entire logical payload in one message?
@@ -164,22 +212,18 @@ pub fn encode_chunked<F: FnMut(WirePayload, ChunkHeader)>(
     let total = data.len();
     let n_chunks = n_chunks_for(total, chunk_elems);
     if n_chunks == 1 {
-        emit(WirePayload::from_pool(codec, pool, data), ChunkHeader::whole(total));
+        let payload = WirePayload::from_pool(codec, pool, data);
+        let hdr = ChunkHeader::whole(total).with_checksum(crc32(payload.as_bytes()));
+        emit(payload, hdr);
         return;
     }
     for idx in 0..n_chunks {
         let off = idx * chunk_elems;
         let end = (off + chunk_elems).min(total);
         let payload = WirePayload::from_pool(codec, pool, &data[off..end]);
-        emit(
-            payload,
-            ChunkHeader {
-                idx: idx as u32,
-                of: n_chunks as u32,
-                elem_offset: off,
-                total_elems: total,
-            },
-        );
+        let hdr = ChunkHeader::part(idx as u32, n_chunks as u32, off, total)
+            .with_checksum(crc32(payload.as_bytes()));
+        emit(payload, hdr);
     }
 }
 
@@ -237,8 +281,100 @@ impl DeltaMsg {
     }
 }
 
+/// What a [`Link`] needs from the messages it forwards: identity for the
+/// fault plan's `(step, key, chunk)` matching, payload access for the
+/// bandwidth charge / checksum verification / fault injection, and the
+/// `link_ns` charge hook.  Both wire directions ([`OffloadMsg`],
+/// [`DeltaMsg`]) implement it, replacing the old per-call-site closures.
+pub trait WireMsg {
+    fn key(&self) -> &ParamKey;
+    fn step(&self) -> u64;
+    fn chunk(&self) -> &ChunkHeader;
+    fn chunk_mut(&mut self) -> &mut ChunkHeader;
+    fn payload(&self) -> &WirePayload;
+    fn payload_mut(&mut self) -> &mut WirePayload;
+    fn prio(&self) -> i64;
+    /// Accumulate `ns` of emulated link time into the message.
+    fn charge(&mut self, ns: u64);
+}
+
+impl WireMsg for OffloadMsg {
+    fn key(&self) -> &ParamKey {
+        &self.key
+    }
+    fn step(&self) -> u64 {
+        self.step
+    }
+    fn chunk(&self) -> &ChunkHeader {
+        &self.chunk
+    }
+    fn chunk_mut(&mut self) -> &mut ChunkHeader {
+        &mut self.chunk
+    }
+    fn payload(&self) -> &WirePayload {
+        &self.data
+    }
+    fn payload_mut(&mut self) -> &mut WirePayload {
+        &mut self.data
+    }
+    fn prio(&self) -> i64 {
+        self.prio
+    }
+    fn charge(&mut self, ns: u64) {
+        self.link_ns += ns;
+    }
+}
+
+impl WireMsg for DeltaMsg {
+    fn key(&self) -> &ParamKey {
+        &self.key
+    }
+    fn step(&self) -> u64 {
+        self.step
+    }
+    fn chunk(&self) -> &ChunkHeader {
+        &self.chunk
+    }
+    fn chunk_mut(&mut self) -> &mut ChunkHeader {
+        &mut self.chunk
+    }
+    fn payload(&self) -> &WirePayload {
+        &self.delta
+    }
+    fn payload_mut(&mut self) -> &mut WirePayload {
+        &mut self.delta
+    }
+    fn prio(&self) -> i64 {
+        self.prio
+    }
+    fn charge(&mut self, ns: u64) {
+        self.link_ns += ns;
+    }
+}
+
 /// Blocking min-heap priority queue (lowest prio value served first; FIFO
-/// among equal priorities). `close()` unblocks all poppers with `None`.
+/// among equal priorities).
+///
+/// # Close semantics
+///
+/// `close()` is a *drain marker*, not a destructor — the contract a
+/// supervisor restarting a consumer mid-`pop` relies on:
+///
+/// * **Pop-after-close drains first.**  A closed queue keeps serving its
+///   buffered items in full priority order; `pop()`/`try_pop()` return
+///   `None` only once the heap is empty.  Nothing in flight is lost on
+///   shutdown.
+/// * **Close-while-waiting wakes everyone.**  `close()` notifies *all*
+///   blocked poppers; each re-checks the heap under the lock, so a popper
+///   racing the close either wins an item or observes the drained `None` —
+///   never a lost wakeup.
+/// * **Push-after-close still delivers.**  A producer that loses the race
+///   with `close()` does not panic or drop its item; the item joins the
+///   drain.  (The links rely on this: a link may forward its last message
+///   after the driver closed the downstream queue.)
+/// * `close()` is idempotent; all internal locking recovers poisoning via
+///   `fault::lock_recover`, so a consumer that panicked while holding the
+///   queue lock cannot deadlock or crash the other endpoints.
 pub struct PrioQueue<T> {
     inner: Mutex<QueueInner<T>>,
     cond: Condvar,
@@ -292,7 +428,7 @@ impl<T> PrioQueue<T> {
     }
 
     pub fn push(&self, prio: i64, item: T) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         let seq = g.seq;
         g.seq += 1;
         g.heap.push(Entry { prio, seq, item });
@@ -300,9 +436,10 @@ impl<T> PrioQueue<T> {
         self.cond.notify_one();
     }
 
-    /// Blocking pop; `None` once closed and drained.
+    /// Blocking pop; `None` once closed *and* drained (see the close
+    /// semantics in the type docs).
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         loop {
             if let Some(e) = g.heap.pop() {
                 return Some(e.item);
@@ -310,25 +447,27 @@ impl<T> PrioQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.cond.wait(g).unwrap();
+            g = self.cond.wait(g).unwrap_or_else(|poisoned| poisoned.into_inner());
         }
     }
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().heap.pop().map(|e| e.item)
+        lock_recover(&self.inner).heap.pop().map(|e| e.item)
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().heap.len()
+        lock_recover(&self.inner).heap.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Mark the queue closed and wake all blocked poppers; buffered items
+    /// still drain in order (idempotent).
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.cond.notify_all();
     }
 }
@@ -463,12 +602,12 @@ struct LedgerInner {
 
 impl LinkLedger {
     fn record(&self, e: LedgerEntry) {
-        self.inner.entries.lock().unwrap().push(e);
+        lock_recover(&self.inner.entries).push(e);
         self.inner.cond.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.entries.lock().unwrap().len()
+        lock_recover(&self.inner.entries).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -476,28 +615,34 @@ impl LinkLedger {
     }
 
     pub fn snapshot(&self) -> Vec<LedgerEntry> {
-        self.inner.entries.lock().unwrap().clone()
+        lock_recover(&self.inner.entries).clone()
     }
 
     /// Sum of every recorded transfer's emulated nanoseconds.
     pub fn total_transfer_ns(&self) -> u64 {
-        self.inner.entries.lock().unwrap().iter().map(|e| e.transfer_ns).sum()
+        lock_recover(&self.inner.entries).iter().map(|e| e.transfer_ns).sum()
     }
 
     /// Block until at least `n` messages have been recorded, then return
     /// the ledger.  Panics after 60 s — a test waiting that long on an
     /// in-process link thread is deadlocked, and a loud failure beats a
-    /// hung suite.
+    /// hung suite (a test-synchronization helper, not a pipeline path).
     pub fn wait_len(&self, n: usize) -> Vec<LedgerEntry> {
         let deadline = std::time::Instant::now() + Duration::from_secs(60);
-        let mut g = self.inner.entries.lock().unwrap();
+        let mut g = lock_recover(&self.inner.entries);
         while g.len() < n {
             let timeout = deadline
                 .checked_duration_since(std::time::Instant::now())
+                // gate: allow-panic — deadlock detector for the test suite
                 .unwrap_or_else(|| panic!("LinkLedger::wait_len({n}): stuck at {}", g.len()));
-            let (guard, res) = self.inner.cond.wait_timeout(g, timeout).unwrap();
+            let (guard, res) = self
+                .inner
+                .cond
+                .wait_timeout(g, timeout)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
             g = guard;
             if res.timed_out() && g.len() < n {
+                // gate: allow-panic — deadlock detector for the test suite
                 panic!("LinkLedger::wait_len({n}): timed out at {}", g.len());
             }
         }
@@ -511,6 +656,14 @@ impl LinkLedger {
 /// egress queue.  Counts wire bytes, f32-equivalent bytes and busy time for
 /// the breakdown report, stamps the per-message `link_ns` charge, and
 /// records every transfer in its ledger.
+///
+/// The link is also the wire-integrity enforcement point: each transfer
+/// attempt consults the `FaultFabric`'s injection plan, verifies the
+/// chunk checksum against injected corruption, and retransmits dropped or
+/// corrupt chunks with bounded exponential backoff — see the module docs'
+/// "Wire integrity and retransmission" section.  On exit (clean close,
+/// `stop()`, or a fatal retry-budget exhaustion) the link closes its
+/// egress queue so downstream consumers always unblock.
 pub struct Link {
     pub name: &'static str,
     pub bytes_per_s: f64,
@@ -531,25 +684,25 @@ pub struct Link {
 }
 
 impl Link {
-    /// Spawn a link moving `M` messages from `ingress` to `egress`.
-    /// `size_of` maps a message to `(wire_bytes, raw_f32_bytes)`;
-    /// `charge_ns` lets the link stamp its transfer cost into the message
-    /// (no-op for payload types without a `link_ns` field).
+    /// Spawn a link moving [`WireMsg`]s from `ingress` to `egress`.  `dir`
+    /// names the link direction for the fault plan's matching; `fabric`
+    /// carries the plan, the retry knobs, and the shared health counters.
+    /// Fault-free operation (a `FaultFabric::none()` fabric, or no spec
+    /// matching a given chunk) is byte- and timing-identical to a plain
+    /// forward.
     #[allow(clippy::too_many_arguments)]
-    pub fn spawn<M, F>(
+    pub fn spawn<M>(
         name: &'static str,
         bytes_per_s: f64,
         time_scale: f64,
         clock: LinkClock,
         ingress: Arc<PrioQueue<M>>,
         egress: Arc<PrioQueue<M>>,
-        size_of: F,
-        prio_of: fn(&M) -> i64,
-        charge_ns: fn(&mut M, u64),
+        dir: FaultDir,
+        fabric: FaultFabric,
     ) -> Link
     where
-        M: Send + 'static,
-        F: Fn(&M) -> (usize, usize) + Send + 'static,
+        M: WireMsg + Send + 'static,
     {
         let bytes_moved = Arc::new(AtomicU64::new(0));
         let raw_bytes_moved = Arc::new(AtomicU64::new(0));
@@ -562,34 +715,137 @@ impl Link {
         let handle = std::thread::Builder::new()
             .name(format!("link-{name}"))
             .spawn(move || {
-                while let Some(mut msg) = ingress.pop() {
+                'msgs: while let Some(mut msg) = ingress.pop() {
                     if st.load(Ordering::Relaxed) {
                         break;
                     }
-                    let (bytes, raw) = size_of(&msg);
-                    let ns = transfer_ns(bytes, bytes_per_s, time_scale);
-                    let done_at_ns = match &clk {
-                        LinkClock::Real => {
-                            let t0 = std::time::Instant::now();
-                            if ns > 0 {
-                                std::thread::sleep(Duration::from_nanos(ns));
+                    let step = msg.step();
+                    let chunk_idx = msg.chunk().idx;
+                    // Per-message retransmit loop: every attempt charges
+                    // wire time and bytes; only a delivered attempt breaks
+                    // out.  `attempt` counts *retransmissions* (0 = the
+                    // first send), bounded by `fabric.retry.budget`.
+                    let mut attempt: u32 = 0;
+                    let mut total_ns: u64 = 0;
+                    loop {
+                        let bytes = msg.payload().wire_bytes();
+                        let raw = msg.payload().raw_bytes();
+                        let fault = fabric.wire_fault(dir, step, msg.key(), chunk_idx);
+                        let extra = match fault {
+                            Some(FaultKind::Stall { extra_ns }) => {
+                                PipelineHealth::bump(&fabric.health.stalled_chunks);
+                                extra_ns
                             }
-                            bn.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                            0
+                            _ => 0,
+                        };
+                        let ns = transfer_ns(bytes, bytes_per_s, time_scale) + extra;
+                        let done_at_ns = match &clk {
+                            LinkClock::Real => {
+                                let t0 = std::time::Instant::now();
+                                if ns > 0 {
+                                    std::thread::sleep(Duration::from_nanos(ns));
+                                }
+                                bn.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                0
+                            }
+                            LinkClock::Virtual(vc) => {
+                                bn.fetch_add(ns, Ordering::Relaxed);
+                                vc.advance(ns)
+                            }
+                        };
+                        total_ns += ns;
+                        bm.fetch_add(bytes as u64, Ordering::Relaxed);
+                        rm.fetch_add(raw as u64, Ordering::Relaxed);
+                        if attempt > 0 {
+                            PipelineHealth::bump(&fabric.health.retransmits);
+                            fabric.health.retrans_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
                         }
-                        LinkClock::Virtual(vc) => {
-                            bn.fetch_add(ns, Ordering::Relaxed);
-                            vc.advance(ns)
+                        led.record(LedgerEntry { wire_bytes: bytes, transfer_ns: ns, done_at_ns });
+                        let needs_retry = match fault {
+                            None | Some(FaultKind::Stall { .. }) => false,
+                            // The chunk vanished; the receiver's per-chunk
+                            // deadline NACKs it.
+                            Some(FaultKind::Drop) => {
+                                PipelineHealth::bump(&fabric.health.dropped_chunks);
+                                true
+                            }
+                            Some(FaultKind::Corrupt { bit }) => {
+                                flip_bit(msg.payload_mut().bytes_mut(), bit);
+                                let want = msg.chunk().checksum;
+                                let detected =
+                                    want != 0 && crc32(msg.payload().as_bytes()) != want;
+                                if detected {
+                                    PipelineHealth::bump(&fabric.health.corrupt_chunks);
+                                    // Retransmission re-sends the original
+                                    // payload (the flip is self-inverse).
+                                    flip_bit(msg.payload_mut().bytes_mut(), bit);
+                                    true
+                                } else {
+                                    // No checksum to catch it: the corrupted
+                                    // payload is delivered as-is — exactly
+                                    // the failure mode the checksum exists
+                                    // to close.
+                                    false
+                                }
+                            }
+                            Some(FaultKind::Mangle) => {
+                                // Truncate one byte and restamp: the wire
+                                // check passes but the downstream decode
+                                // fails — exercises graceful degradation.
+                                let payload = msg.payload_mut();
+                                let len = payload.bytes.len();
+                                if len > 0 {
+                                    payload.bytes.truncate(len - 1);
+                                }
+                                let sum = crc32(msg.payload().as_bytes());
+                                msg.chunk_mut().checksum = sum;
+                                false
+                            }
+                            // Updater-only specs never reach wire_fault.
+                            Some(FaultKind::PanicUpdater) => false,
+                        };
+                        if !needs_retry {
+                            msg.charge(total_ns);
+                            let p = msg.prio();
+                            egress.push(p, msg);
+                            break;
                         }
-                    };
-                    bm.fetch_add(bytes as u64, Ordering::Relaxed);
-                    rm.fetch_add(raw as u64, Ordering::Relaxed);
-                    charge_ns(&mut msg, ns);
-                    led.record(LedgerEntry { wire_bytes: bytes, transfer_ns: ns, done_at_ns });
-                    let p = prio_of(&msg);
-                    egress.push(p, msg);
+                        attempt += 1;
+                        if attempt > fabric.retry.budget {
+                            fabric.health.fail(PipelineError::RetryBudgetExhausted {
+                                link: name,
+                                key: format!("{:?}", msg.key()),
+                                step,
+                                chunk: chunk_idx,
+                                attempts: attempt,
+                            });
+                            break 'msgs;
+                        }
+                        // Bounded exponential backoff before the retransmit
+                        // (charged to the clock as dead time, not to the
+                        // link's busy/ledger accounting).
+                        let backoff =
+                            fabric.retry.backoff_ns.saturating_mul(1u64 << (attempt - 1).min(20));
+                        total_ns += backoff;
+                        match &clk {
+                            LinkClock::Real => {
+                                if backoff > 0 {
+                                    std::thread::sleep(Duration::from_nanos(backoff));
+                                }
+                            }
+                            LinkClock::Virtual(vc) => {
+                                vc.advance(backoff);
+                            }
+                        }
+                    }
                 }
+                // Cascade the shutdown (or the fatal error) downstream:
+                // whoever pops the egress next sees the drain end instead
+                // of blocking forever.  Idempotent with the driver's own
+                // queue close.
+                egress.close();
             })
+            // gate: allow-panic — thread spawn fails only on OS resource exhaustion
             .expect("spawn link thread");
         Link {
             name,
@@ -620,8 +876,30 @@ impl Link {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::{make_codec, CodecKind};
+    use crate::coordinator::fault::{FaultPlan, FaultSpec, RetryCfg};
     use crate::util::prop::check;
     use crate::util::rng::Rng;
+
+    /// A whole-payload f32 offload message with a stamped checksum — the
+    /// wire shape the checksummed pipeline produces.
+    fn f32_msg_from(data: &[f32], prio: i64, step: u64) -> OffloadMsg {
+        let codec = make_codec(CodecKind::F32Raw);
+        let payload = WirePayload::detached(codec.as_ref(), data);
+        let sum = crc32(payload.as_bytes());
+        let mut msg =
+            OffloadMsg::whole(ParamKey { param_index: 0, kind: None }, payload, prio, step);
+        msg.chunk.checksum = sum;
+        msg
+    }
+
+    fn f32_msg(elems: usize, prio: i64, step: u64) -> OffloadMsg {
+        f32_msg_from(&vec![1.0f32; elems], prio, step)
+    }
+
+    fn fabric_with(plan: FaultPlan, retry: RetryCfg) -> FaultFabric {
+        FaultFabric::new(Some(Arc::new(plan)), retry)
+    }
 
     #[test]
     fn prio_queue_orders_and_fifo_ties() {
@@ -765,9 +1043,10 @@ mod tests {
     #[test]
     fn virtual_link_charges_exact_transfer_time() {
         let clock = Arc::new(VirtualClock::default());
-        let ingress = Arc::new(PrioQueue::<Vec<u8>>::new());
-        let egress = Arc::new(PrioQueue::<Vec<u8>>::new());
-        // 1 MB/s: a 10 KB message costs exactly 10 ms of virtual time.
+        let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        // 1 MB/s: a 10 KB (2500-elem f32) message costs exactly 10 ms of
+        // virtual time.
         let mut link = Link::spawn(
             "test",
             1e6,
@@ -775,13 +1054,12 @@ mod tests {
             LinkClock::Virtual(clock.clone()),
             ingress.clone(),
             egress.clone(),
-            |m: &Vec<u8>| (m.len(), m.len() * 4),
-            |_| 0,
-            |_, _| {},
+            FaultDir::D2H,
+            FaultFabric::none(),
         );
-        ingress.push(0, vec![0u8; 10_000]);
+        ingress.push(0, f32_msg(2_500, 0, 0));
         let got = egress.pop().unwrap();
-        assert_eq!(got.len(), 10_000);
+        assert_eq!(got.data.wire_bytes(), 10_000);
         // Ledger is recorded before the egress push, so it is visible now.
         let entries = link.ledger.snapshot();
         assert_eq!(
@@ -790,7 +1068,7 @@ mod tests {
         );
         assert_eq!(clock.now_ns(), 10_000_000);
         assert_eq!(link.bytes_moved.load(Ordering::Relaxed), 10_000);
-        assert_eq!(link.raw_bytes_moved.load(Ordering::Relaxed), 40_000);
+        assert_eq!(link.raw_bytes_moved.load(Ordering::Relaxed), 10_000, "f32: wire == raw");
         assert_eq!(link.busy_ns.load(Ordering::Relaxed), 10_000_000);
         ingress.close();
         link.stop();
@@ -802,9 +1080,9 @@ mod tests {
     #[test]
     fn virtual_clock_is_shared_between_links() {
         let clock = Arc::new(VirtualClock::default());
-        let a_in = Arc::new(PrioQueue::<Vec<u8>>::new());
-        let a_out = Arc::new(PrioQueue::<Vec<u8>>::new());
-        let b_out = Arc::new(PrioQueue::<Vec<u8>>::new());
+        let a_in = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let a_out = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let b_out = Arc::new(PrioQueue::<OffloadMsg>::new());
         let mut a = Link::spawn(
             "a",
             1e6,
@@ -812,9 +1090,8 @@ mod tests {
             LinkClock::Virtual(clock.clone()),
             a_in.clone(),
             a_out.clone(),
-            |m: &Vec<u8>| (m.len(), m.len()),
-            |_| 0,
-            |_, _| {},
+            FaultDir::D2H,
+            FaultFabric::none(),
         );
         // Chain: a's egress feeds b, like d2h -> h2d around the updater.
         let mut b = Link::spawn(
@@ -824,12 +1101,11 @@ mod tests {
             LinkClock::Virtual(clock.clone()),
             a_out.clone(),
             b_out.clone(),
-            |m: &Vec<u8>| (m.len(), m.len()),
-            |_| 0,
-            |_, _| {},
+            FaultDir::H2D,
+            FaultFabric::none(),
         );
-        a_in.push(0, vec![0u8; 2_000]); // 2 ms on a, 1 ms on b
-        a_in.push(0, vec![0u8; 4_000]); // 4 ms on a, 2 ms on b
+        a_in.push(0, f32_msg(500, 0, 0)); // 2000 B: 2 ms on a, 1 ms on b
+        a_in.push(0, f32_msg(1_000, 0, 1)); // 4000 B: 4 ms on a, 2 ms on b
         let _ = b_out.pop().unwrap();
         let _ = b_out.pop().unwrap();
         let ea = a.ledger.wait_len(2);
@@ -855,8 +1131,8 @@ mod tests {
     /// and the virtual-clock ledger).
     #[test]
     fn real_clock_link_forwards_and_counts() {
-        let ingress = Arc::new(PrioQueue::<Vec<u8>>::new());
-        let egress = Arc::new(PrioQueue::<Vec<u8>>::new());
+        let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
         let mut link = Link::spawn(
             "real",
             1e12,
@@ -864,14 +1140,13 @@ mod tests {
             LinkClock::Real,
             ingress.clone(),
             egress.clone(),
-            |m: &Vec<u8>| (m.len(), m.len() * 4),
-            |_| 0,
-            |_, _| {},
+            FaultDir::D2H,
+            FaultFabric::none(),
         );
-        ingress.push(0, vec![0u8; 64]);
-        assert_eq!(egress.pop().unwrap().len(), 64);
+        ingress.push(0, f32_msg(16, 0, 0)); // 64 wire bytes
+        assert_eq!(egress.pop().unwrap().data.wire_bytes(), 64);
         assert_eq!(link.bytes_moved.load(Ordering::Relaxed), 64);
-        assert_eq!(link.raw_bytes_moved.load(Ordering::Relaxed), 256);
+        assert_eq!(link.raw_bytes_moved.load(Ordering::Relaxed), 64);
         let e = link.ledger.snapshot();
         assert_eq!(e.len(), 1);
         assert_eq!(e[0].done_at_ns, 0, "real clock has no virtual timestamps");
@@ -884,8 +1159,6 @@ mod tests {
     /// accounting uses.
     #[test]
     fn link_charges_ns_into_offload_messages() {
-        use crate::codec::{make_codec, CodecKind};
-        let codec = make_codec(CodecKind::F32Raw);
         let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
         let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
         let mut link = Link::spawn(
@@ -895,17 +1168,10 @@ mod tests {
             LinkClock::new_virtual(),
             ingress.clone(),
             egress.clone(),
-            |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
-            |m| m.prio,
-            |m, ns| m.link_ns += ns,
+            FaultDir::D2H,
+            FaultFabric::none(),
         );
-        let data = vec![1.0f32; 250]; // 1000 wire bytes => 1 ms
-        let mut msg = OffloadMsg::whole(
-            ParamKey { param_index: 0, kind: None },
-            WirePayload::detached(codec.as_ref(), &data),
-            0,
-            3,
-        );
+        let mut msg = f32_msg(250, 0, 3); // 1000 wire bytes => 1 ms
         msg.link_ns = 7; // pre-existing charge accumulates
         ingress.push(0, msg);
         let got = egress.pop().unwrap();
@@ -956,18 +1222,19 @@ mod tests {
     /// codecs, and a single chunk is byte-identical to the whole payload.
     #[test]
     fn encode_chunked_tiles_the_payload() {
-        use crate::codec::{make_codec, CodecKind};
         let codec = make_codec(CodecKind::F32Raw);
         let pool = BufPool::new();
         let data: Vec<f32> = (0..300).map(|i| i as f32 - 150.0).collect();
+        let plain = WirePayload::detached(codec.as_ref(), &data);
 
-        // Whole-payload mode: one chunk, bytes identical to a plain encode.
+        // Whole-payload mode: one chunk, bytes identical to a plain encode,
+        // header stamped with the payload checksum.
         let mut whole = Vec::new();
         encode_chunked(codec.as_ref(), &pool, &data, 0, |p, h| whole.push((p, h)));
         assert_eq!(whole.len(), 1);
-        assert_eq!(whole[0].1, ChunkHeader::whole(300));
+        assert_eq!(whole[0].1, ChunkHeader::whole(300).with_checksum(crc32(plain.as_bytes())));
         assert!(whole[0].1.is_whole());
-        let plain = WirePayload::detached(codec.as_ref(), &data);
+        assert_eq!(whole[0].1.codec_tag, 0);
         assert_eq!(whole[0].0.as_bytes(), plain.as_bytes());
 
         // 128-element chunks: 3 chunks (128 + 128 + 44) tiling [0, 300).
@@ -980,6 +1247,7 @@ mod tests {
             assert_eq!(h.of, 3);
             assert_eq!(h.total_elems, 300);
             assert_eq!(h.elem_offset, covered);
+            assert_eq!(h.checksum, crc32(p.as_bytes()), "per-chunk checksum");
             covered += p.elems;
             // f32 is elementwise: chunk bytes == the slice of the unchunked
             // encoding.
@@ -994,8 +1262,6 @@ mod tests {
 
     #[test]
     fn wire_payload_encodes_and_accounts() {
-        use crate::codec::{make_codec, CodecKind};
-
         let data = [1.0f32, -2.0, 0.0, 3.5];
         let raw = WirePayload::detached(make_codec(CodecKind::F32Raw).as_ref(), &data);
         assert_eq!(raw.elems, 4);
@@ -1014,5 +1280,209 @@ mod tests {
         drop(WirePayload::from_pool(codec.as_ref(), &pool, &data));
         let s = pool.stats();
         assert_eq!((s.byte_hits, s.byte_misses), (1, 1));
+    }
+
+    /// The drain-on-shutdown contract: a closed queue serves its buffered
+    /// items in full priority order before reporting `None`, a push that
+    /// lost the race with `close()` still joins the drain, and `close()`
+    /// is idempotent.
+    #[test]
+    fn prio_queue_drains_in_order_after_close() {
+        let q: PrioQueue<u32> = PrioQueue::new();
+        q.push(2, 20);
+        q.push(1, 10);
+        q.close();
+        q.push(3, 30); // push-after-close still delivers
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.try_pop(), Some(20));
+        assert_eq!(q.pop(), Some(30));
+        assert_eq!(q.pop(), None, "drained + closed");
+        assert_eq!(q.try_pop(), None);
+        q.close(); // idempotent
+        assert_eq!(q.pop(), None);
+    }
+
+    /// Close-while-waiting: every blocked popper wakes; exactly one wins
+    /// the single buffered item, the rest observe the drained `None` — no
+    /// lost wakeups, no popper left blocked (the 60 s suite timeout would
+    /// catch that).
+    #[test]
+    fn prio_queue_close_wakes_all_waiting_poppers() {
+        let q = Arc::new(PrioQueue::<u32>::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let q2 = q.clone();
+                std::thread::spawn(move || q2.pop())
+            })
+            .collect();
+        q.push(0, 7);
+        q.close();
+        let got: Vec<Option<u32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got.iter().filter(|x| **x == Some(7)).count(), 1);
+        assert_eq!(got.iter().filter(|x| x.is_none()).count(), 3);
+    }
+
+    /// A dropped chunk is retransmitted: both attempts charge wire time
+    /// and bytes, the backoff is charged to the clock, and the message
+    /// arrives carrying the full (deterministic) accumulated cost.
+    #[test]
+    fn link_retransmits_dropped_chunk() {
+        let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop).with_step(3)]);
+        let fabric =
+            fabric_with(plan, RetryCfg { budget: 3, backoff_ns: 500, fallback_after: 2 });
+        let clock = Arc::new(VirtualClock::default());
+        let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let mut link = Link::spawn(
+            "drop",
+            1e6,
+            1.0,
+            LinkClock::Virtual(clock.clone()),
+            ingress.clone(),
+            egress.clone(),
+            FaultDir::D2H,
+            fabric.clone(),
+        );
+        ingress.push(0, f32_msg(250, 0, 3)); // 1000 wire bytes = 1 ms/attempt
+        let got = egress.pop().unwrap();
+        assert_eq!(got.data.elems, 250);
+        // Two 1 ms attempts plus the 500 ns first-retry backoff.
+        assert_eq!(got.link_ns, 2_000_500);
+        assert_eq!(clock.now_ns(), 2_000_500);
+        assert_eq!(fabric.health.retransmits.load(Ordering::Relaxed), 1);
+        assert_eq!(fabric.health.dropped_chunks.load(Ordering::Relaxed), 1);
+        assert_eq!(fabric.health.retrans_bytes.load(Ordering::Relaxed), 1_000);
+        assert_eq!(link.bytes_moved.load(Ordering::Relaxed), 2_000, "both attempts hit the wire");
+        assert_eq!(link.ledger.len(), 2);
+        assert!(fabric.health.fatal().is_none());
+        ingress.close();
+        link.stop();
+    }
+
+    /// A bit-flip is caught by the checksum and the chunk retransmitted;
+    /// the delivered payload is the restored original, bit-identical.
+    #[test]
+    fn link_detects_and_retransmits_corrupt_chunk() {
+        let codec = make_codec(CodecKind::F32Raw);
+        let data: Vec<f32> = (0..64).map(|i| i as f32 - 32.0).collect();
+        let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Corrupt { bit: 129 })]);
+        let fabric = fabric_with(plan, RetryCfg::default());
+        let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let mut link = Link::spawn(
+            "corrupt",
+            1e9,
+            1.0,
+            LinkClock::new_virtual(),
+            ingress.clone(),
+            egress.clone(),
+            FaultDir::H2D,
+            fabric.clone(),
+        );
+        ingress.push(0, f32_msg_from(&data, 0, 0));
+        let got = egress.pop().unwrap();
+        assert_eq!(fabric.health.corrupt_chunks.load(Ordering::Relaxed), 1);
+        assert_eq!(fabric.health.retransmits.load(Ordering::Relaxed), 1);
+        assert_eq!(crc32(got.data.as_bytes()), got.chunk.checksum);
+        let mut out = vec![0.0f32; 64];
+        codec.decode(got.data.as_bytes(), &mut out).unwrap();
+        assert_eq!(out, data, "restored payload decodes bit-identically");
+        ingress.close();
+        link.stop();
+    }
+
+    /// Retry budget 0 makes the first drop fatal: the link records the
+    /// typed error and closes its egress, so the consumer unblocks with
+    /// `None` instead of hanging.
+    #[test]
+    fn link_retry_budget_exhaustion_fails_clean() {
+        let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop)]);
+        let fabric =
+            fabric_with(plan, RetryCfg { budget: 0, backoff_ns: 100, fallback_after: 2 });
+        let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let mut link = Link::spawn(
+            "fatal",
+            1e9,
+            1.0,
+            LinkClock::new_virtual(),
+            ingress.clone(),
+            egress.clone(),
+            FaultDir::D2H,
+            fabric.clone(),
+        );
+        ingress.push(0, f32_msg(8, 0, 5));
+        assert!(egress.pop().is_none(), "egress closes instead of hanging");
+        match fabric.health.fatal() {
+            Some(PipelineError::RetryBudgetExhausted { link: l, step, chunk, attempts, .. }) => {
+                assert_eq!(l, "fatal");
+                assert_eq!(step, 5);
+                assert_eq!(chunk, 0);
+                assert_eq!(attempts, 1);
+            }
+            other => panic!("want RetryBudgetExhausted, got {other:?}"),
+        }
+        assert_eq!(fabric.health.retransmits.load(Ordering::Relaxed), 0);
+        ingress.close();
+        link.stop();
+    }
+
+    /// A stalled chunk arrives intact but late; the extra time is charged
+    /// deterministically into the message and the clock.
+    #[test]
+    fn link_stall_charges_extra_time_but_delivers() {
+        let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Stall { extra_ns: 2_500 })]);
+        let fabric = fabric_with(plan, RetryCfg::default());
+        let clock = Arc::new(VirtualClock::default());
+        let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let mut link = Link::spawn(
+            "stall",
+            1e6,
+            1.0,
+            LinkClock::Virtual(clock.clone()),
+            ingress.clone(),
+            egress.clone(),
+            FaultDir::D2H,
+            fabric.clone(),
+        );
+        ingress.push(0, f32_msg(250, 0, 0)); // 1000 wire bytes = 1 ms
+        let got = egress.pop().unwrap();
+        assert_eq!(got.link_ns, 1_002_500);
+        assert_eq!(clock.now_ns(), 1_002_500);
+        assert_eq!(fabric.health.stalled_chunks.load(Ordering::Relaxed), 1);
+        assert_eq!(fabric.health.retransmits.load(Ordering::Relaxed), 0);
+        ingress.close();
+        link.stop();
+    }
+
+    /// A mangled chunk passes the wire checksum (it was restamped) but
+    /// fails the downstream decode — the trigger for codec fallback.
+    #[test]
+    fn link_mangle_passes_wire_check_but_breaks_decode() {
+        let codec = make_codec(CodecKind::F32Raw);
+        let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Mangle)]);
+        let fabric = fabric_with(plan, RetryCfg::default());
+        let ingress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let egress = Arc::new(PrioQueue::<OffloadMsg>::new());
+        let mut link = Link::spawn(
+            "mangle",
+            1e9,
+            1.0,
+            LinkClock::new_virtual(),
+            ingress.clone(),
+            egress.clone(),
+            FaultDir::D2H,
+            fabric.clone(),
+        );
+        ingress.push(0, f32_msg(16, 0, 0)); // 64 wire bytes
+        let got = egress.pop().unwrap();
+        assert_eq!(got.data.wire_bytes(), 63, "one byte truncated");
+        assert_eq!(crc32(got.data.as_bytes()), got.chunk.checksum, "wire check passes");
+        let mut out = vec![0.0f32; 16];
+        assert!(codec.decode(got.data.as_bytes(), &mut out).is_err(), "decode catches it");
+        assert_eq!(fabric.health.retransmits.load(Ordering::Relaxed), 0);
+        ingress.close();
+        link.stop();
     }
 }

@@ -1,0 +1,888 @@
+//! Fault tolerance for the offload pipeline: deterministic fault
+//! injection, wire integrity, typed pipeline errors, and the shared
+//! recovery helpers the supervised workers use.
+//!
+//! The paper's premise is *commodity* hardware — flaky consumer PCIe
+//! links, laptops that suspend mid-step — so the pipeline must survive a
+//! corrupted wire chunk or a panicking worker thread without deadlocking
+//! the trainer or silently corrupting the trajectory.  This module is the
+//! substrate:
+//!
+//! * **[`FaultPlan`]** — a deterministic, seeded fault-injection plan
+//!   (`--fault-plan` CLI/JSON, `LSP_FAULT_PLAN` env) that drops, corrupts
+//!   (bit-flips), mangles, or stalls specific wire chunks and panics
+//!   specific CPU-updater iterations at exact `(step, key, chunk)` points.
+//!   Firing counters are atomic and bounded (`repeat`), so a retransmitted
+//!   chunk is NOT re-faulted forever and every run of the same plan under
+//!   the virtual clock is reproducible.
+//! * **[`crc32`]** — the in-repo CRC-32 (IEEE, reflected) every
+//!   `ChunkHeader.checksum` is computed with; `comm::Link` verifies it
+//!   after each transfer (detect → NACK → retransmit) and the decode seams
+//!   re-verify as defense in depth.
+//! * **[`PipelineError`]** / **[`PipelineHealth`]** — the typed error a
+//!   failed pipeline surfaces (`Trainer::train` returns
+//!   `Result<TrainReport, PipelineError>`) plus the shared atomic counters
+//!   (`retransmits`, `corrupt_chunks`, `worker_restarts`, ...) the
+//!   `TrainReport` publishes.  `fail()` is first-error-wins; workers that
+//!   hit a fatal condition record it and *close their egress queues*, so
+//!   the shutdown cascades to the driver instead of hanging it.
+//! * **[`lock_recover`]** — mutex-poisoning recovery: a supervised worker
+//!   that panicked while holding a shared lock must not take the rest of
+//!   the pipeline down with a poisoned-mutex panic; every coordinator
+//!   hot-path lock goes through this helper (enforced by the
+//!   `scripts/check.sh` no-panic gate).
+//! * **[`FallbackMap`]** — graceful degradation: after K consecutive
+//!   decode failures on a lossy codec, the pipeline pins the affected key
+//!   to the bit-exact `f32` wire format (`ChunkHeader.codec_tag`) and
+//!   records the fallback.
+//!
+//! [`FaultFabric`] bundles the plan, health, retry configuration, and
+//! fallback state into the one cloneable handle `PipelineCtx::new` threads
+//! through the links and the CPU updater.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{bail, Result};
+
+use crate::codec::{make_codec, Codec, CodecKind};
+use crate::coordinator::comm::ParamKey;
+use crate::util::json::Json;
+
+/// `ChunkHeader.codec_tag` value for a payload encoded with the pipeline's
+/// negotiated codec (the default).
+pub const CODEC_TAG_NEGOTIATED: u8 = 0;
+/// `ChunkHeader.codec_tag` value for a payload pinned to the bit-exact
+/// `f32` fallback codec after repeated decode failures (see
+/// [`FallbackMap`]).
+pub const CODEC_TAG_F32_FALLBACK: u8 = 1;
+
+// ---- CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) --------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE, reflected) of `bytes` — the checksum stamped into every
+/// `ChunkHeader` over the *encoded* payload bytes.  Standard test vector:
+/// `crc32(b"123456789") == 0xCBF43926`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Flip one bit of `bytes` (the wire-corruption primitive): bit `bit` of
+/// the payload, wrapping at the payload length so any plan value hits a
+/// real byte.  Applying it twice restores the original bytes, which is how
+/// the link un-corrupts a payload before retransmitting it.
+pub fn flip_bit(bytes: &mut [u8], bit: u32) {
+    if bytes.is_empty() {
+        return;
+    }
+    let i = (bit as usize / 8) % bytes.len();
+    bytes[i] ^= 1 << (bit % 8);
+}
+
+// ---- Lock recovery ------------------------------------------------------
+
+/// Lock `m`, recovering (not propagating) mutex poisoning: a supervised
+/// worker that panicked while holding the lock marks it poisoned, but the
+/// shared state it protects is still structurally valid (the panic points
+/// the supervisor handles fire *before* state mutation), so the next
+/// holder proceeds with the data as-is instead of cascading the panic
+/// through every other pipeline thread.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+// ---- Typed pipeline errors ----------------------------------------------
+
+/// The error a failed pipeline surfaces end-to-end: `Trainer::train`
+/// returns `Result<TrainReport, PipelineError>`, and every worker that
+/// hits a fatal condition records one of these in [`PipelineHealth`]
+/// before closing its queues (no hangs, no poisoned-mutex panics).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PipelineError {
+    /// A wire chunk exhausted its retransmit budget (dropped/corrupted on
+    /// every attempt).
+    RetryBudgetExhausted { link: &'static str, key: String, step: u64, chunk: u32, attempts: u32 },
+    /// A pipeline worker died unrecoverably (panic without a replayable
+    /// in-flight message, or past the restart limit).
+    WorkerFailed { worker: &'static str, detail: String },
+    /// The per-key chunk FIFO protocol was violated (a policy
+    /// re-prioritized a key with chunks in flight).
+    ChunkProtocol { detail: String },
+    /// A pipeline queue closed while the driver still expected messages.
+    QueueClosed { what: &'static str },
+    /// A payload failed to decode fatally (outside the graceful-degradation
+    /// path).
+    Decode { detail: String },
+    /// Anything else (adapter for `anyhow` errors crossing the typed
+    /// boundary).
+    Other(String),
+}
+
+impl fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PipelineError::RetryBudgetExhausted { link, key, step, chunk, attempts } => write!(
+                f,
+                "{link} link: retry budget exhausted for {key} step {step} chunk {chunk} \
+                 after {attempts} attempts"
+            ),
+            PipelineError::WorkerFailed { worker, detail } => {
+                write!(f, "pipeline worker {worker} failed: {detail}")
+            }
+            PipelineError::ChunkProtocol { detail } => {
+                write!(f, "chunk protocol violated: {detail}")
+            }
+            PipelineError::QueueClosed { what } => {
+                write!(f, "pipeline queue {what} closed unexpectedly")
+            }
+            PipelineError::Decode { detail } => write!(f, "wire decode failed: {detail}"),
+            PipelineError::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+// ---- Pipeline health ----------------------------------------------------
+
+/// Shared fault/recovery counters plus the first fatal error, published by
+/// links, the CPU updater, and the reassembler; read by `TrainReport` and
+/// the driver's health checks.  All counters are monotone atomics; the
+/// fatal slot is first-error-wins (the *root* cause survives the shutdown
+/// cascade it triggers).
+#[derive(Debug, Default)]
+pub struct PipelineHealth {
+    /// Wire chunks re-sent after a drop/corruption NACK.
+    pub retransmits: AtomicU64,
+    /// Wire chunks whose checksum verification failed at a link.
+    pub corrupt_chunks: AtomicU64,
+    /// Wire chunks dropped in transit (receiver deadline expired).
+    pub dropped_chunks: AtomicU64,
+    /// Wire chunks delayed by an injected stall.
+    pub stalled_chunks: AtomicU64,
+    /// Wire bytes consumed by retransmissions (charged to the links on top
+    /// of the first-attempt traffic).
+    pub retrans_bytes: AtomicU64,
+    /// Supervised worker restarts (panic caught, state replayed).
+    pub worker_restarts: AtomicU64,
+    /// Keys pinned to the f32 fallback codec after repeated decode
+    /// failures on a lossy codec.
+    pub codec_fallbacks: AtomicU64,
+    /// Payload decode failures absorbed by the graceful-degradation path.
+    pub decode_failures: AtomicU64,
+    fatal: Mutex<Option<PipelineError>>,
+}
+
+impl PipelineHealth {
+    /// Record a fatal error; the FIRST error wins (later cascade errors —
+    /// queues closing behind the root cause — must not mask it).
+    pub fn fail(&self, e: PipelineError) {
+        let mut g = lock_recover(&self.fatal);
+        if g.is_none() {
+            *g = Some(e);
+        }
+    }
+
+    /// The first fatal error, if any.
+    pub fn fatal(&self) -> Option<PipelineError> {
+        lock_recover(&self.fatal).clone()
+    }
+
+    /// `Err` with the first fatal error, `Ok(())` while healthy.
+    pub fn ok(&self) -> std::result::Result<(), PipelineError> {
+        match self.fatal() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---- Graceful codec degradation -----------------------------------------
+
+#[derive(Debug, Default)]
+struct FallbackInner {
+    consecutive: HashMap<ParamKey, u32>,
+    fallen: HashSet<ParamKey>,
+}
+
+/// Per-key decode-failure tracking: after `threshold` *consecutive*
+/// failures a key falls back to the bit-exact f32 wire format
+/// (`CODEC_TAG_F32_FALLBACK`) for every subsequent dispatch; a successful
+/// decode resets the streak but never un-falls a fallen key (flapping
+/// between formats would make the wire traffic unpredictable).
+#[derive(Debug, Default)]
+pub struct FallbackMap {
+    inner: Mutex<FallbackInner>,
+}
+
+impl FallbackMap {
+    /// Is this key pinned to the f32 fallback codec?
+    pub fn is_fallback(&self, key: &ParamKey) -> bool {
+        lock_recover(&self.inner).fallen.contains(key)
+    }
+
+    /// Record a decode failure; `true` exactly when this failure is the
+    /// `threshold`-th consecutive one and the key NEWLY falls back.
+    pub fn note_failure(&self, key: &ParamKey, threshold: u32) -> bool {
+        let mut g = lock_recover(&self.inner);
+        let streak = g.consecutive.entry(key.clone()).or_insert(0);
+        *streak += 1;
+        if *streak >= threshold.max(1) && !g.fallen.contains(key) {
+            g.fallen.insert(key.clone());
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record a successful decode (resets the consecutive-failure streak).
+    pub fn note_success(&self, key: &ParamKey) {
+        let mut g = lock_recover(&self.inner);
+        if let Some(streak) = g.consecutive.get_mut(key) {
+            *streak = 0;
+        }
+    }
+
+    /// Number of keys pinned to the fallback codec.
+    pub fn fallen_len(&self) -> usize {
+        lock_recover(&self.inner).fallen.len()
+    }
+}
+
+// ---- Deterministic fault-injection plan ---------------------------------
+
+/// Which link direction a wire fault applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDir {
+    /// GPU -> CPU (gradients).
+    D2H,
+    /// CPU -> GPU (deltas).
+    H2D,
+}
+
+impl FaultDir {
+    pub fn by_name(s: &str) -> Option<FaultDir> {
+        match s.to_ascii_lowercase().as_str() {
+            "d2h" | "down" | "offload" => Some(FaultDir::D2H),
+            "h2d" | "up" | "delta" => Some(FaultDir::H2D),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultDir::D2H => "d2h",
+            FaultDir::H2D => "h2d",
+        }
+    }
+}
+
+/// What an injected fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The chunk vanishes in transit; the receiver's per-chunk deadline
+    /// expires and NACKs it (the link retransmits after a backoff).
+    Drop,
+    /// One payload bit flips in transit; checksum verification detects it
+    /// and NACKs (undetectable when the header carries no checksum).
+    Corrupt { bit: u32 },
+    /// The payload is truncated by one byte and the checksum re-stamped:
+    /// the wire check passes but the decode fails — the trigger for the
+    /// graceful-degradation (codec fallback) path.
+    Mangle,
+    /// The transfer takes `extra_ns` longer than the bandwidth charge
+    /// (a transient link hiccup); the chunk still arrives intact.
+    Stall { extra_ns: u64 },
+    /// The CPU updater panics when it pops the matching message (before
+    /// touching any shared state); the supervisor catches, restarts, and
+    /// replays.
+    PanicUpdater,
+}
+
+/// One plan entry: a [`FaultKind`] plus the `(dir, step, key, chunk)`
+/// filter that selects which wire chunks / updater iterations it fires on.
+/// Unset filter fields match anything; `repeat` bounds how many matching
+/// events actually fault (the atomic `fired` counter makes a retransmitted
+/// chunk sail through once the budget is consumed — and makes plans
+/// deterministic under the virtual clock).
+#[derive(Debug)]
+pub struct FaultSpec {
+    pub action: FaultKind,
+    pub dir: Option<FaultDir>,
+    pub step: Option<u64>,
+    pub param_index: Option<usize>,
+    pub param_kind: Option<String>,
+    pub chunk: Option<u32>,
+    pub repeat: u32,
+    fired: AtomicU32,
+}
+
+impl FaultSpec {
+    /// A spec firing `repeat` times on every matching event (all filters
+    /// open) — builder for tests and programmatic plans; narrow it with
+    /// the `with_*` helpers.
+    pub fn new(action: FaultKind) -> FaultSpec {
+        FaultSpec {
+            action,
+            dir: None,
+            step: None,
+            param_index: None,
+            param_kind: None,
+            chunk: None,
+            repeat: 1,
+            fired: AtomicU32::new(0),
+        }
+    }
+
+    pub fn with_dir(mut self, dir: FaultDir) -> FaultSpec {
+        self.dir = Some(dir);
+        self
+    }
+
+    pub fn with_step(mut self, step: u64) -> FaultSpec {
+        self.step = Some(step);
+        self
+    }
+
+    pub fn with_param(mut self, param_index: usize) -> FaultSpec {
+        self.param_index = Some(param_index);
+        self
+    }
+
+    pub fn with_chunk(mut self, chunk: u32) -> FaultSpec {
+        self.chunk = Some(chunk);
+        self
+    }
+
+    pub fn with_repeat(mut self, repeat: u32) -> FaultSpec {
+        self.repeat = repeat;
+        self
+    }
+
+    fn matches(&self, dir: Option<FaultDir>, step: u64, key: &ParamKey, chunk: u32) -> bool {
+        if let (Some(want), Some(got)) = (self.dir, dir) {
+            if want != got {
+                return false;
+            }
+        }
+        if self.step.is_some_and(|s| s != step) {
+            return false;
+        }
+        if self.param_index.is_some_and(|p| p != key.param_index) {
+            return false;
+        }
+        if let Some(want) = &self.param_kind {
+            if key.kind.as_deref() != Some(want.as_str()) {
+                return false;
+            }
+        }
+        if self.chunk.is_some_and(|c| c != chunk) {
+            return false;
+        }
+        true
+    }
+
+    /// Consume one firing if the budget allows (atomic, so concurrent link
+    /// threads never overshoot `repeat`).
+    fn try_fire(&self) -> bool {
+        self.fired
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |f| {
+                if f < self.repeat {
+                    Some(f + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// How many times this spec has fired so far.
+    pub fn fired(&self) -> u32 {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    fn from_json(v: &Json) -> Result<FaultSpec> {
+        let obj = v.as_obj()?;
+        let action_name = v
+            .get("action")
+            .ok_or_else(|| anyhow::anyhow!("fault spec missing \"action\""))?
+            .as_str()?;
+        let action = match action_name.to_ascii_lowercase().as_str() {
+            "drop" => FaultKind::Drop,
+            "corrupt" => FaultKind::Corrupt {
+                bit: v.get("bit").map(|b| b.as_usize()).transpose()?.unwrap_or(0) as u32,
+            },
+            "mangle" => FaultKind::Mangle,
+            "stall" => FaultKind::Stall {
+                extra_ns: v
+                    .get("extra_ns")
+                    .map(|b| b.as_usize())
+                    .transpose()?
+                    .unwrap_or(1_000_000) as u64,
+            },
+            "panic" => FaultKind::PanicUpdater,
+            other => bail!("unknown fault action {other:?}"),
+        };
+        for k in obj.keys() {
+            if !matches!(
+                k.as_str(),
+                "action" | "bit" | "extra_ns" | "dir" | "step" | "param" | "kind" | "chunk"
+                    | "repeat"
+            ) {
+                bail!("unknown fault spec key {k:?}");
+            }
+        }
+        let dir = match v.get("dir") {
+            Some(d) => Some(
+                FaultDir::by_name(d.as_str()?)
+                    .ok_or_else(|| anyhow::anyhow!("unknown fault dir {:?}", d.as_str()?))?,
+            ),
+            None => None,
+        };
+        Ok(FaultSpec {
+            action,
+            dir,
+            step: v.get("step").map(|s| s.as_usize()).transpose()?.map(|s| s as u64),
+            param_index: v.get("param").map(|p| p.as_usize()).transpose()?,
+            param_kind: v.get("kind").map(|k| Ok::<_, anyhow::Error>(k.as_str()?.to_string())).transpose()?,
+            chunk: v.get("chunk").map(|c| c.as_usize()).transpose()?.map(|c| c as u32),
+            repeat: v.get("repeat").map(|r| r.as_usize()).transpose()?.unwrap_or(1) as u32,
+            fired: AtomicU32::new(0),
+        })
+    }
+}
+
+/// A deterministic fault-injection plan: an ordered list of [`FaultSpec`]s
+/// consulted by the links (`wire_fault`) and the CPU updater
+/// (`updater_panic`) at exact `(step, key, chunk)` points.  The first
+/// matching spec with remaining budget fires.  Under the virtual link
+/// clock the whole schedule is a pure function of the plan and the seed —
+/// replays are bit-identical.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new(specs: Vec<FaultSpec>) -> FaultPlan {
+        FaultPlan { specs }
+    }
+
+    /// Parse a plan from JSON text: either a bare array of spec objects or
+    /// `{"faults": [...]}`.  Spec fields: `action` (required: `drop` /
+    /// `corrupt` / `mangle` / `stall` / `panic`), filters `dir` / `step` /
+    /// `param` / `kind` / `chunk`, budget `repeat` (default 1), and the
+    /// action parameters `bit` (corrupt) / `extra_ns` (stall).
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        FaultPlan::from_json_value(&Json::parse(text)?)
+    }
+
+    /// Build a plan from an already-parsed JSON value (the same shapes
+    /// `parse` accepts) — used by the `"fault_plan"` run-config key, whose
+    /// value may be an inline array rather than a string.
+    pub fn from_json_value(v: &Json) -> Result<FaultPlan> {
+        let arr = match v.get("faults") {
+            Some(f) => f.as_arr()?,
+            None => v.as_arr()?,
+        };
+        let specs = arr.iter().map(FaultSpec::from_json).collect::<Result<Vec<_>>>()?;
+        Ok(FaultPlan { specs })
+    }
+
+    /// Resolve a `--fault-plan` argument: inline JSON when it starts with
+    /// `[` or `{`, otherwise a path to a JSON file.
+    pub fn from_arg(arg: &str) -> Result<FaultPlan> {
+        let trimmed = arg.trim_start();
+        if trimmed.starts_with('[') || trimmed.starts_with('{') {
+            FaultPlan::parse(arg)
+        } else {
+            let text = std::fs::read_to_string(arg)
+                .map_err(|e| anyhow::anyhow!("reading fault plan {arg:?}: {e}"))?;
+            FaultPlan::parse(&text)
+        }
+    }
+
+    /// The `LSP_FAULT_PLAN` environment plan, if set (same inline-or-path
+    /// resolution as `--fault-plan`).
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("LSP_FAULT_PLAN") {
+            Ok(v) if !v.trim().is_empty() => Ok(Some(FaultPlan::from_arg(&v)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// The wire fault (if any) to inject for this chunk transfer.  Called
+    /// once per transmission *attempt*, so a spec with `repeat = 1`
+    /// faults the first attempt and lets the retransmit through.  Updater
+    /// panics never fire here.
+    pub fn wire_fault(
+        &self,
+        dir: FaultDir,
+        step: u64,
+        key: &ParamKey,
+        chunk: u32,
+    ) -> Option<FaultKind> {
+        self.specs
+            .iter()
+            .filter(|s| !matches!(s.action, FaultKind::PanicUpdater))
+            .find(|s| s.matches(Some(dir), step, key, chunk) && s.try_fire())
+            .map(|s| s.action)
+    }
+
+    /// Should the CPU updater panic on this message?  (Consumes one firing
+    /// of the matching `panic` spec, so the supervised replay of the same
+    /// message does NOT re-panic — exactly-once processing.)
+    pub fn updater_panic(&self, step: u64, key: &ParamKey, chunk: u32) -> bool {
+        self.specs
+            .iter()
+            .filter(|s| matches!(s.action, FaultKind::PanicUpdater))
+            .any(|s| s.matches(None, step, key, chunk) && s.try_fire())
+    }
+
+    /// Planned extra wire transfers this plan will cause under `budget`
+    /// retries per chunk — the cost-model's view (each drop/detected
+    /// corruption costs one retransmission while the budget lasts).  See
+    /// `sim::cost_model::expected_retransmit_factor`.
+    pub fn planned_extra_transfers(&self, budget: u32) -> u64 {
+        self.specs
+            .iter()
+            .map(|s| match s.action {
+                FaultKind::Drop | FaultKind::Corrupt { .. } => {
+                    s.repeat.min(budget) as u64
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+// ---- Retry configuration and the shared fabric --------------------------
+
+/// Retransmit / degradation knobs (`--retry-budget`, `--retry-backoff-ns`,
+/// `--codec-fallback-after`).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryCfg {
+    /// Max retransmissions per wire chunk before the pipeline fails with
+    /// [`PipelineError::RetryBudgetExhausted`] (0 = any fault is fatal).
+    pub budget: u32,
+    /// Base NACK backoff in emulated nanoseconds; attempt `k` waits
+    /// `backoff_ns << (k - 1)` (bounded exponential backoff).
+    pub backoff_ns: u64,
+    /// Consecutive decode failures before a key falls back to the f32
+    /// wire format.
+    pub fallback_after: u32,
+}
+
+impl Default for RetryCfg {
+    fn default() -> Self {
+        RetryCfg { budget: 3, backoff_ns: 200_000, fallback_after: 2 }
+    }
+}
+
+/// The one cloneable handle bundling everything the pipeline's fault layer
+/// shares across threads: the (optional) injection plan, the health
+/// counters + fatal slot, the retry knobs, the codec-fallback state, and
+/// the f32 fallback codec object.  `PipelineCtx::new` builds one and
+/// threads clones through both links and the CPU updater.
+#[derive(Debug, Clone)]
+pub struct FaultFabric {
+    pub plan: Option<Arc<FaultPlan>>,
+    pub health: Arc<PipelineHealth>,
+    pub retry: RetryCfg,
+    pub fallback: Arc<FallbackMap>,
+    /// The bit-exact codec every `CODEC_TAG_F32_FALLBACK` payload uses.
+    pub f32_codec: Arc<dyn Codec>,
+}
+
+impl FaultFabric {
+    pub fn new(plan: Option<Arc<FaultPlan>>, retry: RetryCfg) -> FaultFabric {
+        FaultFabric {
+            plan,
+            health: Arc::new(PipelineHealth::default()),
+            retry,
+            fallback: Arc::new(FallbackMap::default()),
+            f32_codec: make_codec(CodecKind::F32Raw),
+        }
+    }
+
+    /// A fault-free fabric with default retry knobs (tests, non-pipeline
+    /// callers).
+    pub fn none() -> FaultFabric {
+        FaultFabric::new(None, RetryCfg::default())
+    }
+
+    /// The wire fault to inject for this transfer attempt, if a plan is
+    /// loaded and a spec matches with remaining budget.
+    pub fn wire_fault(
+        &self,
+        dir: FaultDir,
+        step: u64,
+        key: &ParamKey,
+        chunk: u32,
+    ) -> Option<FaultKind> {
+        self.plan.as_ref()?.wire_fault(dir, step, key, chunk)
+    }
+
+    /// Should the updater panic on this message?
+    pub fn updater_panic(&self, step: u64, key: &ParamKey, chunk: u32) -> bool {
+        self.plan.as_ref().is_some_and(|p| p.updater_panic(step, key, chunk))
+    }
+
+    /// Record one absorbed decode failure for `key`; `lossy` says whether
+    /// the negotiated codec is lossy (falling back to f32 only *counts* as
+    /// a codec fallback when it actually changes the wire format).
+    pub fn note_decode_failure(&self, key: &ParamKey, lossy: bool) {
+        PipelineHealth::bump(&self.health.decode_failures);
+        if self.fallback.note_failure(key, self.retry.fallback_after) && lossy {
+            PipelineHealth::bump(&self.health.codec_fallbacks);
+        }
+    }
+
+    /// Record a successful decode (resets the key's failure streak).
+    pub fn note_decode_success(&self, key: &ParamKey) {
+        self.fallback.note_success(key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(idx: usize, kind: Option<&str>) -> ParamKey {
+        ParamKey { param_index: idx, kind: kind.map(|s| s.to_string()) }
+    }
+
+    #[test]
+    fn crc32_matches_the_standard_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        // Sensitive to any single-bit flip.
+        let mut payload = b"hello, wire".to_vec();
+        let sum = crc32(&payload);
+        flip_bit(&mut payload, 13);
+        assert_ne!(crc32(&payload), sum);
+        flip_bit(&mut payload, 13);
+        assert_eq!(crc32(&payload), sum, "flip twice restores the payload");
+    }
+
+    #[test]
+    fn flip_bit_wraps_and_handles_empty() {
+        flip_bit(&mut [], 5); // no panic
+        let mut b = vec![0u8; 2];
+        flip_bit(&mut b, 0);
+        assert_eq!(b, [1, 0]);
+        flip_bit(&mut b, 9);
+        assert_eq!(b, [1, 2]);
+        // Bit 16 wraps back to byte 0.
+        flip_bit(&mut b, 16);
+        assert_eq!(b, [0, 2]);
+    }
+
+    #[test]
+    fn lock_recover_survives_poisoning() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 7, "state survives the poisoning");
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn plan_parses_and_matches_exact_points() {
+        let plan = FaultPlan::parse(
+            r#"[
+                {"action": "drop", "dir": "d2h", "step": 3, "param": 0, "chunk": 1},
+                {"action": "corrupt", "bit": 12, "dir": "h2d", "step": 4, "param": 2,
+                 "kind": "qkv", "repeat": 2},
+                {"action": "stall", "extra_ns": 5000, "step": 6},
+                {"action": "panic", "step": 2, "param": 1}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(plan.specs.len(), 4);
+
+        // Exact-point matching: wrong step / param / chunk / dir never fire.
+        assert_eq!(plan.wire_fault(FaultDir::D2H, 2, &key(0, None), 1), None);
+        assert_eq!(plan.wire_fault(FaultDir::H2D, 3, &key(0, None), 1), None);
+        assert_eq!(plan.wire_fault(FaultDir::D2H, 3, &key(0, None), 0), None);
+        assert_eq!(
+            plan.wire_fault(FaultDir::D2H, 3, &key(0, None), 1),
+            Some(FaultKind::Drop)
+        );
+        // repeat = 1 (default): the retransmit attempt sails through.
+        assert_eq!(plan.wire_fault(FaultDir::D2H, 3, &key(0, None), 1), None);
+
+        // The kind filter distinguishes subspace keys.
+        assert_eq!(plan.wire_fault(FaultDir::H2D, 4, &key(2, None), 0), None);
+        assert_eq!(
+            plan.wire_fault(FaultDir::H2D, 4, &key(2, Some("qkv")), 0),
+            Some(FaultKind::Corrupt { bit: 12 })
+        );
+        assert_eq!(
+            plan.wire_fault(FaultDir::H2D, 4, &key(2, Some("qkv")), 0),
+            Some(FaultKind::Corrupt { bit: 12 }),
+            "repeat = 2 fires twice"
+        );
+        assert_eq!(plan.wire_fault(FaultDir::H2D, 4, &key(2, Some("qkv")), 0), None);
+
+        // Open filters match any key/dir/chunk.
+        assert_eq!(
+            plan.wire_fault(FaultDir::D2H, 6, &key(9, Some("mlp")), 7),
+            Some(FaultKind::Stall { extra_ns: 5000 })
+        );
+
+        // Panic specs fire only via updater_panic, exactly once.
+        assert_eq!(plan.wire_fault(FaultDir::D2H, 2, &key(1, None), 0), None);
+        assert!(plan.updater_panic(2, &key(1, None), 0));
+        assert!(!plan.updater_panic(2, &key(1, None), 0), "replay must not re-panic");
+    }
+
+    #[test]
+    fn plan_accepts_wrapped_object_and_rejects_garbage() {
+        let plan = FaultPlan::parse(r#"{"faults": [{"action": "mangle", "step": 1}]}"#).unwrap();
+        assert_eq!(plan.specs.len(), 1);
+        assert_eq!(plan.specs[0].action, FaultKind::Mangle);
+        assert!(FaultPlan::parse("[{}]").is_err(), "action is required");
+        assert!(FaultPlan::parse(r#"[{"action": "explode"}]"#).is_err());
+        assert!(FaultPlan::parse(r#"[{"action": "drop", "bogus": 1}]"#).is_err());
+        assert!(FaultPlan::parse(r#"[{"action": "drop", "dir": "sideways"}]"#).is_err());
+        assert!(FaultPlan::parse("not json").is_err());
+    }
+
+    #[test]
+    fn from_arg_distinguishes_inline_and_path() {
+        let plan = FaultPlan::from_arg(r#" [{"action": "drop"}]"#).unwrap();
+        assert_eq!(plan.specs.len(), 1);
+        assert!(FaultPlan::from_arg("/nonexistent/fault/plan.json").is_err());
+    }
+
+    #[test]
+    fn planned_extra_transfers_counts_retransmitting_faults() {
+        let plan = FaultPlan::parse(
+            r#"[
+                {"action": "drop", "repeat": 2},
+                {"action": "corrupt", "repeat": 5},
+                {"action": "stall"},
+                {"action": "mangle"},
+                {"action": "panic"}
+            ]"#,
+        )
+        .unwrap();
+        // Drops and corruptions retransmit (capped by the budget); stalls,
+        // mangles and panics do not add wire transfers.
+        assert_eq!(plan.planned_extra_transfers(3), 2 + 3);
+        assert_eq!(plan.planned_extra_transfers(0), 0);
+        assert_eq!(plan.planned_extra_transfers(10), 2 + 5);
+    }
+
+    #[test]
+    fn health_fatal_is_first_error_wins() {
+        let h = PipelineHealth::default();
+        assert!(h.ok().is_ok());
+        assert_eq!(h.fatal(), None);
+        let root = PipelineError::RetryBudgetExhausted {
+            link: "d2h",
+            key: "k".into(),
+            step: 1,
+            chunk: 0,
+            attempts: 4,
+        };
+        h.fail(root.clone());
+        h.fail(PipelineError::QueueClosed { what: "delta_out" });
+        assert_eq!(h.fatal(), Some(root.clone()));
+        assert_eq!(h.ok().unwrap_err(), root);
+        // Display is human-readable and names the exact point.
+        let msg = h.fatal().unwrap().to_string();
+        assert!(msg.contains("d2h") && msg.contains("step 1"), "{msg}");
+    }
+
+    #[test]
+    fn fallback_map_requires_consecutive_failures() {
+        let fb = FallbackMap::default();
+        let k = key(3, Some("qkv"));
+        assert!(!fb.is_fallback(&k));
+        assert!(!fb.note_failure(&k, 3), "1st failure");
+        assert!(!fb.note_failure(&k, 3), "2nd failure");
+        fb.note_success(&k); // resets the streak
+        assert!(!fb.note_failure(&k, 3));
+        assert!(!fb.note_failure(&k, 3));
+        assert!(fb.note_failure(&k, 3), "3rd consecutive failure falls back");
+        assert!(fb.is_fallback(&k));
+        assert!(!fb.note_failure(&k, 3), "already fallen: not a NEW fallback");
+        assert_eq!(fb.fallen_len(), 1);
+        // Success after falling never un-falls.
+        fb.note_success(&k);
+        assert!(fb.is_fallback(&k));
+        // Other keys are independent.
+        assert!(!fb.is_fallback(&key(4, None)));
+    }
+
+    #[test]
+    fn fabric_counts_decode_failures_and_fallbacks() {
+        let fabric = FaultFabric::new(None, RetryCfg { fallback_after: 2, ..RetryCfg::default() });
+        let k = key(0, None);
+        fabric.note_decode_failure(&k, true);
+        assert_eq!(fabric.health.decode_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(fabric.health.codec_fallbacks.load(Ordering::Relaxed), 0);
+        fabric.note_decode_failure(&k, true);
+        assert_eq!(fabric.health.codec_fallbacks.load(Ordering::Relaxed), 1);
+        assert!(fabric.fallback.is_fallback(&k));
+        // A lossless (f32) pipeline's fallback changes nothing — counted as
+        // a decode failure but not as a codec fallback.
+        let k2 = key(1, None);
+        fabric.note_decode_failure(&k2, false);
+        fabric.note_decode_failure(&k2, false);
+        assert_eq!(fabric.health.codec_fallbacks.load(Ordering::Relaxed), 1);
+        assert!(fabric.fallback.is_fallback(&k2), "still pinned to f32 wire format");
+    }
+
+    #[test]
+    fn retry_cfg_defaults_are_sane() {
+        let r = RetryCfg::default();
+        assert_eq!(r.budget, 3);
+        assert!(r.backoff_ns > 0);
+        assert!(r.fallback_after >= 1);
+        assert_eq!(FaultDir::by_name("d2h"), Some(FaultDir::D2H));
+        assert_eq!(FaultDir::by_name("H2D"), Some(FaultDir::H2D));
+        assert_eq!(FaultDir::by_name("bogus"), None);
+        for d in [FaultDir::D2H, FaultDir::H2D] {
+            assert_eq!(FaultDir::by_name(d.name()), Some(d));
+        }
+    }
+}

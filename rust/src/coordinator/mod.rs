@@ -88,6 +88,22 @@
 //! clocks.  `PipelineCtx.pending` is the step-tagged in-flight ledger the
 //! deadline drain is enforced against.
 //!
+//! # Failure model and recovery
+//!
+//! The pipeline is fault-tolerant end to end (`fault`): every wire chunk
+//! carries a CRC32 over its encoded bytes, both link endpoints verify it,
+//! and a detected drop/corruption triggers a NACK→retransmit with bounded
+//! exponential backoff — budget exhausted means a clean typed
+//! `fault::PipelineError` through `Trainer::train`, never a hang.  The CPU
+//! updater runs under a supervisor that catches panics, recovers mutex
+//! poisoning (`fault::lock_recover`), and replays the in-flight message
+//! against the surviving shared state, so an f32 run with injected faults
+//! stays bit-identical to the fault-free trajectory.  Deterministic fault
+//! injection (`--fault-plan`, `LSP_FAULT_PLAN`) drives all of this in
+//! tests; `TrainReport` surfaces the counters (`retransmits`,
+//! `corrupt_chunks`, `retrans_bytes`, `worker_restarts`,
+//! `codec_fallbacks`).  See "Failure model & recovery" in ARCHITECTURE.md.
+//!
 //! # Adding a policy
 //!
 //! Create `policies/<name>.rs` implementing `UpdatePolicy` over
@@ -97,6 +113,7 @@
 //! events come for free.  See ROADMAP.md §Coordinator.
 
 pub mod comm;
+pub mod fault;
 pub mod metrics;
 pub mod pipeline;
 pub mod policies;
@@ -108,6 +125,10 @@ pub mod worker;
 pub use comm::{
     ChunkHeader, DeltaMsg, Link, LinkClock, LinkClockMode, LinkLedger, OffloadMsg, PrioQueue,
     VirtualClock, WirePayload,
+};
+pub use fault::{
+    crc32, lock_recover, FaultDir, FaultFabric, FaultKind, FaultPlan, FaultSpec, PipelineError,
+    PipelineHealth, RetryCfg,
 };
 pub use metrics::Metrics;
 pub use pipeline::{ChunkSet, InFlight, LogicalDelta, PipelineCtx, Reassembler, TrainConfig};

@@ -26,6 +26,10 @@ use crate::coordinator::comm::{
     chunk_pipeline_factor, encode_chunked, n_chunks_for, ChunkHeader, DeltaMsg, Link, LinkClock,
     LinkClockMode, OffloadMsg, ParamKey, PrioQueue,
 };
+use crate::coordinator::fault::{
+    crc32, FaultDir, FaultFabric, FaultPlan, RetryCfg, CODEC_TAG_F32_FALLBACK,
+    CODEC_TAG_NEGOTIATED,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policies::{make_policy, PolicyKind};
 use crate::coordinator::worker::{CpuUpdater, SharedStates};
@@ -104,6 +108,26 @@ pub struct TrainConfig {
     /// bit-identical under `link_codec = f32`.  Range-validated by
     /// `config/` (0, or 64..=16_777_216 elements).
     pub link_chunk_elems: usize,
+    /// Deterministic fault-injection plan (`--fault-plan`, JSON
+    /// `fault_plan`, `LSP_FAULT_PLAN` env): drops/corrupts/stalls specific
+    /// wire chunks and panics specific updater iterations at exact
+    /// `(step, key, chunk)` points.  `None` = fault-free.  Shared by
+    /// reference — the per-spec fired budgets live inside the plan, so one
+    /// plan drives one run.
+    pub fault_plan: Option<Arc<FaultPlan>>,
+    /// Retransmit budget per wire chunk (`--retry-budget`): how many times
+    /// a dropped/corrupt chunk is re-sent before the pipeline fails with a
+    /// clean typed error
+    /// ([`RetryBudgetExhausted`](crate::coordinator::fault::PipelineError)).
+    /// 0 = any detected wire fault is immediately fatal.
+    pub retry_budget: u32,
+    /// Base backoff charged per retransmit attempt, nanoseconds
+    /// (`--retry-backoff-ns`); doubles each attempt (bounded exponential).
+    pub retry_backoff_ns: u64,
+    /// Consecutive decode failures on a lossy codec before the pipeline
+    /// pins that key to the bit-exact f32 wire format
+    /// (`--codec-fallback-after`).
+    pub codec_fallback_after: u32,
 }
 
 impl Default for TrainConfig {
@@ -135,6 +159,10 @@ impl Default for TrainConfig {
             async_staleness: 2,
             async_rho: 0.5,
             link_chunk_elems: 0,
+            fault_plan: None,
+            retry_budget: 3,
+            retry_backoff_ns: 200_000,
+            codec_fallback_after: 2,
         }
     }
 }
@@ -339,20 +367,43 @@ struct ReasmSlot {
 impl Reassembler {
     /// Fold one wire chunk in; `Ok(Some(..))` exactly when this chunk
     /// completes its logical delta.
+    ///
+    /// Wire integrity is re-verified here (checksum, then the codec's own
+    /// format check), with the codec selected by the chunk's tag — a key
+    /// that degraded to the f32 fallback decodes with
+    /// `FaultFabric::f32_codec` regardless of the negotiated codec.  A
+    /// failed chunk is *not* an error: its slice is zero-filled (the apply
+    /// becomes a no-op for those elements), the failure feeds the per-key
+    /// fallback counter, and the logical delta still completes — a corrupt
+    /// chunk must never wedge the receipt bitmap and deadlock the drain.
     pub fn ingest(
         &mut self,
         codec: &dyn Codec,
         pool: &BufPool,
         pending: &mut InFlight,
+        fabric: &FaultFabric,
         msg: DeltaMsg,
     ) -> Result<Option<LogicalDelta>> {
         let DeltaMsg { key, delta, prio: _, step, link_ns, chunk } = msg;
         let complete = pending.note_chunk(&key, step, &chunk)?;
+        let codec_eff: &dyn Codec = if chunk.codec_tag == CODEC_TAG_F32_FALLBACK {
+            fabric.f32_codec.as_ref()
+        } else {
+            codec
+        };
+        let sum_ok = chunk.checksum == 0 || crc32(delta.as_bytes()) == chunk.checksum;
+        let lossy = codec.rel_l2_bound() > 0.0;
         if chunk.is_whole() {
             // Fast path: no slot, one decode — the pre-chunking behavior.
             ensure!(delta.elems == chunk.total_elems, "whole-payload chunk length mismatch");
             let mut data = pool.take_raw(chunk.total_elems);
-            codec.decode(delta.as_bytes(), &mut data)?;
+            let decoded = sum_ok && codec_eff.decode(delta.as_bytes(), &mut data).is_ok();
+            if decoded {
+                fabric.note_decode_success(&key);
+            } else {
+                data.fill(0.0);
+                fabric.note_decode_failure(&key, lossy);
+            }
             pending.remove(&key, step);
             return Ok(Some(LogicalDelta { key, data, step, link_ns, n_chunks: 1 }));
         }
@@ -370,11 +421,11 @@ impl Reassembler {
                 },
             );
         }
-        let slot = self
-            .slots
-            .get_mut(&key)
-            .and_then(|m| m.get_mut(&step))
-            .expect("slot just ensured");
+        let Some(slot) = self.slots.get_mut(&key).and_then(|m| m.get_mut(&step)) else {
+            // Just ensured above; structured as an error (not a panic) for
+            // the coordinator no-panic gate.
+            bail!("reassembly slot vanished for {key:?} step {step}");
+        };
         let end = chunk.elem_offset + delta.elems;
         ensure!(
             end <= slot.data.len(),
@@ -382,14 +433,23 @@ impl Reassembler {
             chunk.elem_offset,
             slot.data.len()
         );
-        codec.decode(delta.as_bytes(), &mut slot.data[chunk.elem_offset..end])?;
+        let dst = &mut slot.data[chunk.elem_offset..end];
+        let decoded = sum_ok && codec_eff.decode(delta.as_bytes(), dst).is_ok();
+        if decoded {
+            fabric.note_decode_success(&key);
+        } else {
+            dst.fill(0.0);
+            fabric.note_decode_failure(&key, lossy);
+        }
         slot.link_ns += link_ns;
         if complete {
-            let by_step = self.slots.get_mut(&key).expect("slot map exists");
-            let slot = by_step.remove(&step).expect("slot exists");
-            if by_step.is_empty() {
+            let done = self.slots.get_mut(&key).and_then(|m| m.remove(&step));
+            if self.slots.get(&key).is_some_and(|m| m.is_empty()) {
                 self.slots.remove(&key);
             }
+            let Some(slot) = done else {
+                bail!("completed reassembly slot missing for {key:?} step {step}");
+            };
             pending.remove(&key, step);
             return Ok(Some(LogicalDelta {
                 key,
@@ -437,6 +497,10 @@ pub struct PipelineCtx<'e> {
     /// Chunk -> logical-delta reassembly buffers (trivial when
     /// `cfg.link_chunk_elems == 0`: every delta is a single chunk).
     pub reasm: Reassembler,
+    /// Fault-tolerance fabric shared by the links, the CPU updater and the
+    /// driver: the (optional) injection plan, the retry policy, the shared
+    /// health counters/fatal slot, and the per-key f32 codec fallback map.
+    pub fabric: FaultFabric,
     pub d2h_in: Arc<PrioQueue<OffloadMsg>>,
     pub d2h_out: Arc<PrioQueue<OffloadMsg>>,
     pub h2d_in: Arc<PrioQueue<DeltaMsg>>,
@@ -483,6 +547,18 @@ impl<'e> PipelineCtx<'e> {
             .map(|t| eng.upload(t))
             .collect::<Result<Vec<_>>>()?;
 
+        // The fault fabric is shared (by clone — everything inside is
+        // Arc-backed) with both links and the updater, so counters, the
+        // fatal slot and the fallback map are one source of truth.
+        let fabric = FaultFabric::new(
+            cfg.fault_plan.clone(),
+            RetryCfg {
+                budget: cfg.retry_budget,
+                backoff_ns: cfg.retry_backoff_ns,
+                fallback_after: cfg.codec_fallback_after,
+            },
+        );
+
         let pool = BufPool::new();
         let d2h_in = Arc::new(PrioQueue::new());
         let d2h_out = Arc::new(PrioQueue::new());
@@ -496,9 +572,8 @@ impl<'e> PipelineCtx<'e> {
                 clock.clone(),
                 d2h_in.clone(),
                 d2h_out.clone(),
-                |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
-                |m| m.prio,
-                |m, ns| m.link_ns += ns,
+                FaultDir::D2H,
+                fabric.clone(),
             );
             let h2d = Link::spawn(
                 "h2d",
@@ -507,9 +582,8 @@ impl<'e> PipelineCtx<'e> {
                 clock.clone(),
                 h2d_in.clone(),
                 delta_out.clone(),
-                |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
-                |m| m.prio,
-                |m, ns| m.link_ns += ns,
+                FaultDir::H2D,
+                fabric.clone(),
             );
             // The updater owns ONE of the reserved schedule threads.
             // Handing its parallel fused Adam the full negotiated width
@@ -528,6 +602,7 @@ impl<'e> PipelineCtx<'e> {
                 pool.clone(),
                 upd_kernel,
                 codec.clone(),
+                fabric.clone(),
             );
             (Some((d2h, h2d)), Some(upd))
         } else {
@@ -547,6 +622,7 @@ impl<'e> PipelineCtx<'e> {
             clock,
             pending: InFlight::default(),
             reasm: Reassembler::default(),
+            fabric,
             d2h_in,
             d2h_out,
             h2d_in,
@@ -592,8 +668,17 @@ impl<'e> PipelineCtx<'e> {
         let chunk_elems = self.cfg.link_chunk_elems;
         let n_chunks = n_chunks_for(data.len(), chunk_elems);
         self.pending.insert_chunked(key.clone(), step, n_chunks as u32);
-        let codec = self.codec.clone();
-        encode_chunked(codec.as_ref(), &self.pool, &data, chunk_elems, |payload, chunk| {
+        // Graceful degradation: a key that accumulated too many decode
+        // failures under a lossy codec is pinned to the bit-exact f32 wire
+        // format; the chunk tag tells every downstream decoder which codec
+        // actually produced the bytes.
+        let (codec, tag) = if self.fabric.fallback.is_fallback(&key) {
+            (self.fabric.f32_codec.clone(), CODEC_TAG_F32_FALLBACK)
+        } else {
+            (self.codec.clone(), CODEC_TAG_NEGOTIATED)
+        };
+        encode_chunked(codec.as_ref(), &self.pool, &data, chunk_elems, |payload, mut chunk| {
+            chunk.codec_tag = tag;
             self.d2h_in.push(
                 prio,
                 OffloadMsg { key: key.clone(), data: payload, prio, step, link_ns: 0, chunk },
@@ -607,14 +692,20 @@ impl<'e> PipelineCtx<'e> {
     /// which point the gradient is also removed from the in-flight
     /// ledger).  Whole-payload messages complete immediately.
     pub fn ingest_delta_chunk(&mut self, msg: DeltaMsg) -> Result<Option<LogicalDelta>> {
-        self.reasm.ingest(self.codec.as_ref(), &self.pool, &mut self.pending, msg)
+        self.reasm.ingest(self.codec.as_ref(), &self.pool, &mut self.pending, &self.fabric, msg)
     }
 
     /// Blocking receive of the next fully reassembled delta; `Ok(None)`
-    /// once the delta queue is closed and drained.
+    /// once the delta queue is closed and drained.  A closed queue with a
+    /// recorded fatal pipeline error (retry budget exhausted, unrecoverable
+    /// worker failure) surfaces that typed error instead — the shutdown
+    /// cascade closes the queues precisely so this pop unblocks.
     pub fn recv_logical_delta(&mut self) -> Result<Option<LogicalDelta>> {
         loop {
             let Some(msg) = self.delta_out.pop() else {
+                if let Some(e) = self.fabric.health.fatal() {
+                    return Err(e.into());
+                }
                 return Ok(None);
             };
             if let Some(ld) = self.ingest_delta_chunk(msg)? {
@@ -625,7 +716,8 @@ impl<'e> PipelineCtx<'e> {
 
     /// Non-blocking variant of [`recv_logical_delta`]: drains whatever
     /// chunks have already arrived and returns the first delta they
-    /// complete, if any.
+    /// complete, if any.  Like the blocking variant, a recorded fatal
+    /// pipeline error surfaces as `Err` once the arrived chunks are drained.
     ///
     /// [`recv_logical_delta`]: PipelineCtx::recv_logical_delta
     pub fn try_recv_logical_delta(&mut self) -> Result<Option<LogicalDelta>> {
@@ -633,6 +725,9 @@ impl<'e> PipelineCtx<'e> {
             if let Some(ld) = self.ingest_delta_chunk(msg)? {
                 return Ok(Some(ld));
             }
+        }
+        if let Some(e) = self.fabric.health.fatal() {
+            return Err(e.into());
         }
         Ok(None)
     }
@@ -677,6 +772,24 @@ impl<'e> PipelineCtx<'e> {
     /// projector manager for subspace-switch re-projection).
     pub fn shared_adam_states(&self) -> Option<SharedStates> {
         self.updater.as_ref().map(|u| u.states.clone())
+    }
+}
+
+impl Drop for PipelineCtx<'_> {
+    fn drop(&mut self) {
+        // Close every queue first so each pipeline thread's blocking pop
+        // returns None and the thread exits; only then join.
+        self.d2h_in.close();
+        self.d2h_out.close();
+        self.h2d_in.close();
+        self.delta_out.close();
+        if let Some((mut a, mut b)) = self.links.take() {
+            a.stop();
+            b.stop();
+        }
+        if let Some(mut u) = self.updater.take() {
+            u.join();
+        }
     }
 }
 
@@ -747,13 +860,13 @@ mod tests {
         // One logical gradient regardless of chunk count.
         assert_eq!(fl.len(), 1);
         assert_eq!(fl.oldest_step(), Some(7));
-        let hdr = |idx: u32| ChunkHeader { idx, of: 3, elem_offset: 0, total_elems: 12 };
+        let hdr = |idx: u32| ChunkHeader::part(idx, 3, 0, 12);
         assert!(!fl.note_chunk(&k, 7, &hdr(0)).unwrap());
         assert!(!fl.note_chunk(&k, 7, &hdr(2)).unwrap());
         // Unknown key / step / mismatched chunk count fail loudly.
         assert!(fl.note_chunk(&key(9, None), 7, &hdr(1)).is_err());
         assert!(fl.note_chunk(&k, 8, &hdr(1)).is_err());
-        let bad = ChunkHeader { idx: 1, of: 4, elem_offset: 0, total_elems: 12 };
+        let bad = ChunkHeader::part(1, 4, 0, 12);
         assert!(fl.note_chunk(&k, 7, &bad).is_err());
         // Completion does not remove — the caller owns that.
         assert!(fl.note_chunk(&k, 7, &hdr(1)).unwrap());
@@ -770,6 +883,7 @@ mod tests {
 
         let codec = make_codec(CodecKind::F32Raw);
         let pool = BufPool::new();
+        let fab = FaultFabric::none();
         let mut pending = InFlight::default();
         let mut reasm = Reassembler::default();
         let k = key(4, None);
@@ -782,20 +896,20 @@ mod tests {
             prio: 0,
             step: 2,
             link_ns,
-            chunk: ChunkHeader { idx, of: 3, elem_offset: off, total_elems: 10 },
+            chunk: ChunkHeader::part(idx, 3, off, 10),
         };
         let r1 = reasm
-            .ingest(codec.as_ref(), &pool, &mut pending, mk(2, 8, 10, 5))
+            .ingest(codec.as_ref(), &pool, &mut pending, &fab, mk(2, 8, 10, 5))
             .unwrap();
         assert!(r1.is_none());
         assert_eq!(reasm.len(), 1);
         let r2 = reasm
-            .ingest(codec.as_ref(), &pool, &mut pending, mk(0, 0, 4, 10))
+            .ingest(codec.as_ref(), &pool, &mut pending, &fab, mk(0, 0, 4, 10))
             .unwrap();
         assert!(r2.is_none());
         assert!(!pending.is_empty(), "ledger holds until the last chunk");
         let ld = reasm
-            .ingest(codec.as_ref(), &pool, &mut pending, mk(1, 4, 8, 20))
+            .ingest(codec.as_ref(), &pool, &mut pending, &fab, mk(1, 4, 8, 20))
             .unwrap()
             .expect("last chunk completes the delta");
         assert_eq!(ld.key, k);
@@ -815,12 +929,54 @@ mod tests {
             3,
         );
         let ld = reasm
-            .ingest(codec.as_ref(), &pool, &mut pending, whole)
+            .ingest(codec.as_ref(), &pool, &mut pending, &fab, whole)
             .unwrap()
             .expect("whole payload completes immediately");
         assert_eq!(ld.n_chunks, 1);
         assert_eq!(ld.data.as_slice(), logical.as_slice());
         assert!(pending.is_empty());
+    }
+
+    /// A chunk whose checksum does not match its bytes (corruption the
+    /// link failed to catch, e.g. an exhausted retry path or a legacy
+    /// sender) must not wedge the receipt bitmap: its slice is zero-filled,
+    /// the failure is counted, and the logical delta still completes.
+    #[test]
+    fn reassembler_zero_fills_a_corrupt_chunk_instead_of_wedging() {
+        use crate::codec::{make_codec, CodecKind};
+        use crate::coordinator::comm::WirePayload;
+        use crate::util::bufpool::BufPool;
+        use std::sync::atomic::Ordering;
+
+        let codec = make_codec(CodecKind::F32Raw);
+        let pool = BufPool::new();
+        let fab = FaultFabric::none();
+        let mut pending = InFlight::default();
+        let mut reasm = Reassembler::default();
+        let k = key(2, None);
+        let payload = [1.0f32, 2.0, 3.0, 4.0];
+        pending.insert(k.clone(), 5);
+        let mut msg =
+            DeltaMsg::whole(k.clone(), WirePayload::detached(codec.as_ref(), &payload), 0, 5);
+        msg.chunk.checksum = crc32(msg.delta.as_bytes()) ^ 0xDEAD_BEEF; // wrong on purpose
+        let ld = reasm
+            .ingest(codec.as_ref(), &pool, &mut pending, &fab, msg)
+            .unwrap()
+            .expect("corrupt chunk still completes the delta");
+        assert_eq!(ld.data.as_slice(), &[0.0; 4], "corrupt payload is zeroed, not applied");
+        assert_eq!(fab.health.decode_failures.load(Ordering::Relaxed), 1);
+        assert!(pending.is_empty(), "no wedged in-flight entry");
+
+        // A matching checksum decodes normally.
+        pending.insert(k.clone(), 6);
+        let mut msg =
+            DeltaMsg::whole(k.clone(), WirePayload::detached(codec.as_ref(), &payload), 0, 6);
+        msg.chunk.checksum = crc32(msg.delta.as_bytes());
+        let ld = reasm
+            .ingest(codec.as_ref(), &pool, &mut pending, &fab, msg)
+            .unwrap()
+            .unwrap();
+        assert_eq!(ld.data.as_slice(), payload.as_slice());
     }
 
     #[test]
@@ -836,23 +992,5 @@ mod tests {
         // `now` before `produced` (cannot happen in the pipeline) is never
         // stale for a positive window.
         assert!(!stale_bound_exceeded(5, 3, 1));
-    }
-}
-
-impl Drop for PipelineCtx<'_> {
-    fn drop(&mut self) {
-        // Close every queue first so each pipeline thread's blocking pop
-        // returns None and the thread exits; only then join.
-        self.d2h_in.close();
-        self.d2h_out.close();
-        self.h2d_in.close();
-        self.delta_out.close();
-        if let Some((mut a, mut b)) = self.links.take() {
-            a.stop();
-            b.stop();
-        }
-        if let Some(mut u) = self.updater.take() {
-            u.join();
-        }
     }
 }

@@ -45,6 +45,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::codec::CodecKind;
 use crate::coordinator::comm::ParamKey;
+use crate::coordinator::fault::lock_recover;
 use crate::coordinator::pipeline::{stale_bound_exceeded, LogicalDelta, PipelineCtx};
 use crate::coordinator::projector_mgr::ProjState;
 use crate::coordinator::report::TrainReport;
@@ -236,7 +237,9 @@ impl AsyncLspPolicy {
             // the device mirror right away.
             let mut delta = ctx.pool.take_raw(n);
             {
-                let mut guard = self.sync_adam.lock().unwrap();
+                // Poison-recovering: a supervised worker panic elsewhere
+                // must not cascade into the synchronous apply path.
+                let mut guard = lock_recover(&self.sync_adam);
                 let st = guard.entry(key.clone()).or_insert_with(|| AdamState::new(n));
                 debug_assert_eq!(st.m.len(), n);
                 st.fused_step_with(&sync, &mut delta, &ctx.kernel);
@@ -288,6 +291,9 @@ impl AsyncLspPolicy {
         self.held = rest;
         while ctx.pending.contains_param(idx) {
             let Some(msg) = ctx.recv_logical_delta()? else {
+                if let Some(e) = ctx.fabric.health.fatal() {
+                    return Err(e.into());
+                }
                 bail!("delta queue closed during projector-refresh drain");
             };
             if msg.key.param_index == idx {
@@ -411,6 +417,9 @@ impl UpdatePolicy for AsyncLspPolicy {
                 break;
             }
             let Some(msg) = ctx.recv_logical_delta()? else {
+                if let Some(e) = ctx.fabric.health.fatal() {
+                    return Err(e.into());
+                }
                 bail!("delta queue closed during staleness drain");
             };
             self.held.push(msg);
@@ -433,6 +442,9 @@ impl UpdatePolicy for AsyncLspPolicy {
     fn finish(&mut self, ctx: &mut PipelineCtx<'_>) -> Result<()> {
         while !ctx.pending.is_empty() {
             let Some(msg) = ctx.recv_logical_delta()? else {
+                if let Some(e) = ctx.fabric.health.fatal() {
+                    return Err(e.into());
+                }
                 bail!("delta queue closed during final async drain");
             };
             self.held.push(msg);

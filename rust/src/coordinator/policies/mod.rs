@@ -216,6 +216,13 @@ pub fn wait_for_params(
     let t0 = Instant::now();
     while ctx.pending.any_of(idxs) {
         let Some(ld) = ctx.recv_logical_delta()? else {
+            // A closed queue with entries still pending means the pipeline
+            // shut down underneath us; surface the recorded typed error
+            // when there is one (recv_logical_delta already checks, but a
+            // fatal recorded *after* its check lands here).
+            if let Some(e) = ctx.fabric.health.fatal() {
+                return Err(e.into());
+            }
             bail!("delta queue closed while waiting");
         };
         policy.apply_delta(ctx, ld)?;

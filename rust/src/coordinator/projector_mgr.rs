@@ -161,7 +161,7 @@ impl ProjState {
         states: &SharedStates,
         key: &ParamKey,
     ) -> Result<()> {
-        let mut guard = states.lock().unwrap();
+        let mut guard = crate::coordinator::fault::lock_recover(states);
         let Some(state) = guard.get_mut(key) else {
             return Ok(()); // no moments accumulated yet
         };

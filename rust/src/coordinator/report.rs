@@ -40,6 +40,20 @@ pub struct TrainReport {
     /// `async-lsp`: largest observed (apply step - produce step); the
     /// staleness bound guarantees this never exceeds `--async-staleness`.
     pub max_delta_staleness: u64,
+    /// Wire chunks re-sent after a detected drop/corruption (NACK ->
+    /// retransmit path; each re-send also re-charges the link).
+    pub retransmits: u64,
+    /// Chunks whose CRC32 failed verification at a link endpoint.
+    pub corrupt_chunks: u64,
+    /// Encoded bytes moved by retransmissions only (already included in
+    /// `bytes_up`/`bytes_down` — this is the overhead share).
+    pub retrans_bytes: u64,
+    /// Supervised worker restarts (panics caught, state survived, in-flight
+    /// message replayed).
+    pub worker_restarts: u64,
+    /// Keys pinned to the bit-exact f32 wire format after consecutive
+    /// decode failures on a lossy codec (graceful degradation).
+    pub codec_fallbacks: u64,
     /// Fraction of payload-buffer takes served from the recycling pool.
     pub pool_hit_rate: f64,
     pub loss_curve: Vec<(u64, f32)>,
@@ -101,6 +115,21 @@ impl TrainReport {
                 self.stale_drains, self.max_delta_staleness
             );
         }
+        if self.retransmits > 0
+            || self.corrupt_chunks > 0
+            || self.worker_restarts > 0
+            || self.codec_fallbacks > 0
+        {
+            println!(
+                "robustness: retransmits {} ({})  corrupt chunks {}  worker restarts {}  \
+                 codec fallbacks {}",
+                self.retransmits,
+                crate::util::human_bytes(self.retrans_bytes),
+                self.corrupt_chunks,
+                self.worker_restarts,
+                self.codec_fallbacks,
+            );
+        }
     }
 }
 
@@ -129,6 +158,11 @@ mod tests {
             projector_refreshes: 0,
             stale_drains: 0,
             max_delta_staleness: 0,
+            retransmits: 0,
+            corrupt_chunks: 0,
+            retrans_bytes: 0,
+            worker_restarts: 0,
+            codec_fallbacks: 0,
             pool_hit_rate: 0.0,
             loss_curve: vec![],
             eval_curve: vec![],

@@ -30,6 +30,7 @@ use std::time::Instant;
 use anyhow::Result;
 use xla::PjRtBuffer;
 
+use crate::coordinator::fault::PipelineError;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::PipelineCtx;
 use crate::coordinator::policies::{self, make_policy, UpdatePolicy};
@@ -203,7 +204,22 @@ impl<'e> Trainer<'e> {
 
     // ---- main loop ------------------------------------------------------
 
-    pub fn train(&mut self) -> Result<TrainReport> {
+    /// Run the configured training schedule.
+    ///
+    /// Fault-tolerant end to end: a fatal pipeline condition — retransmit
+    /// budget exhausted on a wire chunk, an unrecoverable worker failure, a
+    /// chunk-protocol violation — surfaces as the typed [`PipelineError`]
+    /// the pipeline recorded (never a hang on a closed queue or a
+    /// poisoned-mutex panic).  Any other failure (PJRT, IO, config) is
+    /// folded into [`PipelineError::Other`] with its full context chain.
+    pub fn train(&mut self) -> std::result::Result<TrainReport, PipelineError> {
+        self.train_inner().map_err(|e| match e.downcast::<PipelineError>() {
+            Ok(pe) => pe,
+            Err(e) => PipelineError::Other(format!("{e:#}")),
+        })
+    }
+
+    fn train_inner(&mut self) -> Result<TrainReport> {
         self.t0 = Instant::now();
         let eng = self.ctx.eng;
         let man = eng.man.clone();
@@ -216,6 +232,11 @@ impl<'e> Trainer<'e> {
             {
                 break;
             }
+            // A fatal condition recorded by a link or the updater
+            // supervisor aborts the schedule at the next step boundary
+            // with the typed error (the shutdown cascade has already
+            // closed the queues, so nothing below could block anyway).
+            self.ctx.fabric.health.ok()?;
             steps_done = step + 1;
             let batch = self.batcher.next_batch();
             let (tok_buf, tgt_buf) = self.upload_batch(&batch)?;
@@ -372,6 +393,7 @@ impl<'e> Trainer<'e> {
             None => (0, 0, 0, 0, (0.0, 0.0)),
         };
         let metrics = &self.ctx.metrics;
+        let health = &self.ctx.fabric.health;
         let mut report = TrainReport {
             policy: self.ctx.cfg.policy.name(),
             steps: steps_done,
@@ -404,6 +426,11 @@ impl<'e> Trainer<'e> {
             projector_refreshes: 0,
             stale_drains: 0,
             max_delta_staleness: 0,
+            retransmits: health.retransmits.load(Relaxed),
+            corrupt_chunks: health.corrupt_chunks.load(Relaxed),
+            retrans_bytes: health.retrans_bytes.load(Relaxed),
+            worker_restarts: health.worker_restarts.load(Relaxed),
+            codec_fallbacks: health.codec_fallbacks.load(Relaxed),
             pool_hit_rate: self.ctx.pool.stats().hit_rate(),
             loss_curve: metrics.loss.clone(),
             eval_curve: metrics.eval_loss.clone(),

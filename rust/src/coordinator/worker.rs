@@ -17,6 +17,24 @@
 //! delta chunks before the full gradient has been received — and the
 //! chunked result is bit-identical to the whole-payload one.
 //!
+//! # Supervision and recovery
+//!
+//! The update loop runs under a supervisor: a panic inside the loop is
+//! `catch_unwind`-caught, counted (`PipelineHealth::worker_restarts`), and
+//! the loop restarted against the *surviving* shared state — the Adam
+//! moment map (poisoning recovered via `fault::lock_recover`) and the
+//! chunk-stream bookkeeping both outlive the panic.  The message that was
+//! in flight is parked in a replay slot *before* any state mutation, so the
+//! restarted worker processes it exactly once and an f32 trajectory stays
+//! bit-identical through the fault.  A panic with nothing to replay (state
+//! may be half-mutated) or past the restart limit is fatal: the typed
+//! `PipelineError` lands in the shared health and the egress closes, so the
+//! driver unblocks instead of hanging.
+//!
+//! Wire integrity is re-verified at this decode seam (checksum + codec
+//! decode); a failure feeds Adam a zero gradient for the chunk and counts
+//! toward the per-key f32 codec fallback (`fault::FallbackMap`).
+//!
 //! Payload buffers are pooled on both sides: the decode/delta f32 buffers
 //! come from the shared `BufPool`, the consumed gradient's *byte* buffer
 //! drops back before the delta is encoded (so it usually becomes the
@@ -30,6 +48,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::codec::Codec;
 use crate::coordinator::comm::{DeltaMsg, OffloadMsg, ParamKey, PrioQueue, WirePayload};
+use crate::coordinator::fault::{
+    crc32, lock_recover, FaultFabric, PipelineError, PipelineHealth, CODEC_TAG_F32_FALLBACK,
+};
 use crate::optim::AdamState;
 use crate::tensor::kernel::KernelConfig;
 use crate::util::bufpool::BufPool;
@@ -37,6 +58,11 @@ use crate::util::bufpool::BufPool;
 /// Adam states shared with the projector manager (which must re-project the
 /// subspace moments on a subspace switch — Alg. 1 lines 8-9).
 pub type SharedStates = Arc<Mutex<HashMap<ParamKey, AdamState>>>;
+
+/// Supervisor restart ceiling: a worker panicking more often than this per
+/// run is not transient-fault recovery but a systematic bug, and failing
+/// the pipeline beats looping forever.
+const MAX_WORKER_RESTARTS: u32 = 64;
 
 pub struct CpuUpdater {
     pub states: SharedStates,
@@ -53,6 +79,7 @@ impl CpuUpdater {
         pool: BufPool,
         kernel: KernelConfig,
         codec: Arc<dyn Codec>,
+        fabric: FaultFabric,
     ) -> CpuUpdater {
         let states: SharedStates = Arc::new(Mutex::new(HashMap::new()));
         let busy_ns = Arc::new(AtomicU64::new(0));
@@ -61,111 +88,59 @@ impl CpuUpdater {
         let handle = std::thread::Builder::new()
             .name("cpu-updater".into())
             .spawn(move || {
-                // The chunk protocol this thread relies on: for any one
-                // key, chunks arrive strictly in (gradient, chunk index)
-                // order — chunk 0 advances the shared Adam step counter,
-                // later chunks reuse its bias correction.  Every current
-                // policy guarantees this (async-lsp pins a stable per-key
-                // priority; lsp/zero gate so at most one logical gradient
-                // per key is in flight), but the assumption would corrupt
-                // moments SILENTLY if a future policy re-prioritized a
-                // key mid-flight — so violations fail loudly here.
-                // `in_progress` holds (step, next chunk idx, n_chunks)
-                // only while a multi-chunk gradient is mid-stream.
+                // Stream bookkeeping and the replay slot live OUTSIDE the
+                // supervised loop so they survive a restart: a mid-stream
+                // chunk position must not be forgotten, and the panicked
+                // message must be replayed exactly once.
                 let mut in_progress: HashMap<ParamKey, (u64, u32, u32)> = HashMap::new();
-                while let Some(msg) = ingress.pop() {
-                    let t0 = std::time::Instant::now();
-                    let OffloadMsg { key, data, prio, step, link_ns, chunk } = msg;
-                    let mut stream_done = false;
-                    match in_progress.get_mut(&key) {
-                        Some(entry) => {
-                            let (s, next, of) = *entry;
-                            assert!(
-                                step == s && chunk.idx == next && chunk.of == of,
-                                "chunk protocol violated for {key:?}: got step {step} \
-                                 chunk {}/{}, expected step {s} chunk {next}/{of} — \
-                                 per-key FIFO broken (did a policy re-prioritize a \
-                                 key with chunks in flight?)",
-                                chunk.idx,
-                                chunk.of,
-                            );
-                            entry.1 += 1;
-                            stream_done = entry.1 == of;
-                        }
-                        None => {
-                            assert_eq!(
-                                chunk.idx, 0,
-                                "chunk protocol violated for {key:?}: stream starts at \
-                                 chunk {}/{} (step {step})",
-                                chunk.idx, chunk.of,
-                            );
-                            if chunk.of > 1 {
-                                in_progress.insert(key.clone(), (step, 1, chunk.of));
-                            }
-                        }
-                    }
-                    if stream_done {
-                        in_progress.remove(&key);
-                    }
-                    let n = data.elems;
-                    let mut g = pool.take_raw(n);
-                    codec
-                        .decode(data.as_bytes(), &mut g)
-                        .expect("link endpoints share the codec; decode cannot fail");
-                    // Return the gradient's byte buffer to the pool before
-                    // encoding the delta so it can serve as that wire
-                    // buffer.
-                    drop(data);
-                    let mut delta = pool.take_raw(n);
-                    {
-                        // The moment map is keyed by the LOGICAL payload
-                        // and sized to its full element count; a chunk
-                        // updates the `[elem_offset, elem_offset + n)`
-                        // slice.  The per-key pipeline is FIFO (equal
-                        // priority => queue seq order), so chunk 0 — which
-                        // advances the shared Adam step counter — is always
-                        // processed first and every chunk of one gradient
-                        // shares one bias correction, making the chunked
-                        // update bit-identical to the whole-payload one.
-                        let mut states = st.lock().unwrap();
-                        let state = states
-                            .entry(key.clone())
-                            .or_insert_with(|| AdamState::new(chunk.total_elems));
-                        // Hard (release-mode) guard: a mis-sized payload
-                        // would otherwise silently update a prefix of
-                        // stale moments.
-                        assert_eq!(
-                            state.m.len(),
-                            chunk.total_elems,
-                            "payload for {key:?} disagrees with its moment length"
-                        );
-                        state.fused_step_chunk_with(
-                            &g,
-                            &mut delta,
-                            chunk.elem_offset,
-                            chunk.idx == 0,
+                let slot: Mutex<Option<OffloadMsg>> = Mutex::new(None);
+                let mut restarts: u32 = 0;
+                loop {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        update_loop(
+                            &ingress,
+                            &egress,
+                            compute_scale,
+                            &pool,
                             &kernel,
-                        );
+                            &codec,
+                            &fabric,
+                            &st,
+                            &bn,
+                            &ud,
+                            &mut in_progress,
+                            &slot,
+                        )
+                    }));
+                    match result {
+                        // Clean exit: ingress drained + closed, or a typed
+                        // error already recorded in the health.
+                        Ok(()) => break,
+                        Err(_) => {
+                            restarts += 1;
+                            PipelineHealth::bump(&fabric.health.worker_restarts);
+                            let replayable = lock_recover(&slot).is_some();
+                            if !replayable || restarts > MAX_WORKER_RESTARTS {
+                                fabric.health.fail(PipelineError::WorkerFailed {
+                                    worker: "cpu-updater",
+                                    detail: if replayable {
+                                        format!("restart limit ({MAX_WORKER_RESTARTS}) exceeded")
+                                    } else {
+                                        "panicked without a replayable in-flight message".into()
+                                    },
+                                });
+                                break;
+                            }
+                            // Restart: loop back into update_loop, which
+                            // replays the slot against the surviving state.
+                        }
                     }
-                    drop(g);
-                    let wire = WirePayload::from_pool(codec.as_ref(), &pool, &delta);
-                    drop(delta);
-                    let elapsed = t0.elapsed();
-                    if compute_scale > 1.0 {
-                        std::thread::sleep(elapsed.mul_f64(compute_scale - 1.0));
-                    }
-                    bn.fetch_add(
-                        (elapsed.as_nanos() as f64 * compute_scale) as u64,
-                        Ordering::Relaxed,
-                    );
-                    ud.fetch_add(1, Ordering::Relaxed);
-                    // The delta inherits the gradient's accumulated d2h
-                    // charge and chunk header; the h2d link adds its own
-                    // charge on the way back, so the reassembled logical
-                    // delta carries its full round-trip link time.
-                    egress.push(prio, DeltaMsg { key, delta: wire, prio, step, link_ns, chunk });
                 }
+                // Cascade the shutdown downstream: the h2d link (and then
+                // the driver) unblock instead of waiting forever.
+                egress.close();
             })
+            // gate: allow-panic — thread spawn fails only on OS resource exhaustion
             .expect("spawn cpu-updater");
         CpuUpdater { states, busy_ns, updates_done, handle: Some(handle) }
     }
@@ -181,18 +156,180 @@ impl CpuUpdater {
     }
 }
 
+/// The supervised update loop.  Returns on a drained+closed ingress or a
+/// fatal (already recorded) protocol error; panics — injected or organic —
+/// unwind into the supervisor in [`CpuUpdater::spawn`].
+#[allow(clippy::too_many_arguments)]
+fn update_loop(
+    ingress: &PrioQueue<OffloadMsg>,
+    egress: &PrioQueue<DeltaMsg>,
+    compute_scale: f64,
+    pool: &BufPool,
+    kernel: &KernelConfig,
+    codec: &Arc<dyn Codec>,
+    fabric: &FaultFabric,
+    shared: &SharedStates,
+    busy_ns: &AtomicU64,
+    updates_done: &AtomicU64,
+    in_progress: &mut HashMap<ParamKey, (u64, u32, u32)>,
+    slot: &Mutex<Option<OffloadMsg>>,
+) {
+    loop {
+        // Replay the parked message first (restart path), else pop fresh
+        // work.
+        let msg = match lock_recover(slot).take() {
+            Some(m) => m,
+            None => match ingress.pop() {
+                Some(m) => m,
+                None => return,
+            },
+        };
+        // Injected updater panic: park the message for replay BEFORE any
+        // state mutation — the plan's fired-counter guarantees the replay
+        // does not re-panic, so the message is processed exactly once and
+        // the trajectory stays bit-identical through the fault.
+        if fabric.updater_panic(msg.step, &msg.key, msg.chunk.idx) {
+            *lock_recover(slot) = Some(msg);
+            // gate: allow-panic — injected fault, caught by the supervisor
+            panic!("injected updater panic");
+        }
+        let t0 = std::time::Instant::now();
+        let OffloadMsg { key, data, prio, step, link_ns, chunk } = msg;
+        // The chunk protocol this thread relies on: for any one key,
+        // chunks arrive strictly in (gradient, chunk index) order — chunk
+        // 0 advances the shared Adam step counter, later chunks reuse its
+        // bias correction.  Every current policy guarantees this
+        // (async-lsp pins a stable per-key priority; lsp/zero gate so at
+        // most one logical gradient per key is in flight), but the
+        // assumption would corrupt moments SILENTLY if a future policy
+        // re-prioritized a key mid-flight — so violations fail the
+        // pipeline loudly (typed error + shutdown cascade, not a panic).
+        // `in_progress` holds (step, next chunk idx, n_chunks) only while
+        // a multi-chunk gradient is mid-stream.
+        let mut stream_done = false;
+        match in_progress.get_mut(&key) {
+            Some(entry) => {
+                let (s, next, of) = *entry;
+                if step != s || chunk.idx != next || chunk.of != of {
+                    fabric.health.fail(PipelineError::ChunkProtocol {
+                        detail: format!(
+                            "{key:?}: got step {step} chunk {}/{}, expected step {s} chunk \
+                             {next}/{of} — per-key FIFO broken (did a policy re-prioritize \
+                             a key with chunks in flight?)",
+                            chunk.idx, chunk.of,
+                        ),
+                    });
+                    return;
+                }
+                entry.1 += 1;
+                stream_done = entry.1 == of;
+            }
+            None => {
+                if chunk.idx != 0 {
+                    fabric.health.fail(PipelineError::ChunkProtocol {
+                        detail: format!(
+                            "{key:?}: stream starts at chunk {}/{} (step {step})",
+                            chunk.idx, chunk.of,
+                        ),
+                    });
+                    return;
+                }
+                if chunk.of > 1 {
+                    in_progress.insert(key.clone(), (step, 1, chunk.of));
+                }
+            }
+        }
+        if stream_done {
+            in_progress.remove(&key);
+        }
+        let n = data.elems;
+        // Which codec encoded this payload: the negotiated one, or the
+        // bit-exact f32 fallback once the key degraded.
+        let codec_eff: &dyn Codec = if chunk.codec_tag == CODEC_TAG_F32_FALLBACK {
+            fabric.f32_codec.as_ref()
+        } else {
+            codec.as_ref()
+        };
+        let mut g = pool.take_raw(n);
+        // Wire integrity at the decode seam (defense in depth behind the
+        // link's own verification): checksum first (0 = unchecked legacy
+        // header), then the codec's format check.  A failure feeds Adam a
+        // zero gradient for this chunk — moments decay, nothing corrupt
+        // enters the state — and counts toward the key's f32 fallback.
+        let sum_ok = chunk.checksum == 0 || crc32(data.as_bytes()) == chunk.checksum;
+        let decoded = sum_ok && codec_eff.decode(data.as_bytes(), &mut g).is_ok();
+        if decoded {
+            fabric.note_decode_success(&key);
+        } else {
+            g.fill(0.0);
+            fabric.note_decode_failure(&key, codec.rel_l2_bound() > 0.0);
+        }
+        // Return the gradient's byte buffer to the pool before encoding
+        // the delta so it can serve as that wire buffer.
+        drop(data);
+        let mut delta = pool.take_raw(n);
+        {
+            // The moment map is keyed by the LOGICAL payload and sized to
+            // its full element count; a chunk updates the
+            // `[elem_offset, elem_offset + n)` slice.  The per-key
+            // pipeline is FIFO (equal priority => queue seq order), so
+            // chunk 0 — which advances the shared Adam step counter — is
+            // always processed first and every chunk of one gradient
+            // shares one bias correction, making the chunked update
+            // bit-identical to the whole-payload one.
+            let mut states = lock_recover(shared);
+            let state =
+                states.entry(key.clone()).or_insert_with(|| AdamState::new(chunk.total_elems));
+            // Hard (release-mode) guard: a mis-sized payload would
+            // otherwise silently update a prefix of stale moments.
+            if state.m.len() != chunk.total_elems {
+                fabric.health.fail(PipelineError::ChunkProtocol {
+                    detail: format!(
+                        "payload for {key:?} disagrees with its moment length ({} vs {})",
+                        state.m.len(),
+                        chunk.total_elems,
+                    ),
+                });
+                return;
+            }
+            state.fused_step_chunk_with(&g, &mut delta, chunk.elem_offset, chunk.idx == 0, kernel);
+        }
+        drop(g);
+        let wire = WirePayload::from_pool(codec_eff, pool, &delta);
+        drop(delta);
+        let elapsed = t0.elapsed();
+        if compute_scale > 1.0 {
+            std::thread::sleep(elapsed.mul_f64(compute_scale - 1.0));
+        }
+        busy_ns.fetch_add((elapsed.as_nanos() as f64 * compute_scale) as u64, Ordering::Relaxed);
+        updates_done.fetch_add(1, Ordering::Relaxed);
+        // The delta inherits the gradient's accumulated d2h charge and
+        // chunk geometry; its checksum is restamped over the delta's own
+        // encoded bytes (same codec tag), so the h2d link verifies exactly
+        // what the updater sent.  The h2d link adds its own charge on the
+        // way back, so the reassembled logical delta carries its full
+        // round-trip link time.
+        let mut out_chunk = chunk;
+        out_chunk.checksum = crc32(wire.as_bytes());
+        egress.push(prio, DeltaMsg { key, delta: wire, prio, step, link_ns, chunk: out_chunk });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::codec::{make_codec, CodecKind};
+    use crate::coordinator::comm::ChunkHeader;
+    use crate::coordinator::fault::{FaultKind, FaultPlan, FaultSpec, RetryCfg};
 
     fn f32_codec() -> Arc<dyn Codec> {
         make_codec(CodecKind::F32Raw)
     }
 
-    fn spawn_plain(
+    fn spawn_with(
         ingress: Arc<PrioQueue<OffloadMsg>>,
         egress: Arc<PrioQueue<DeltaMsg>>,
+        fabric: FaultFabric,
     ) -> CpuUpdater {
         CpuUpdater::spawn(
             ingress,
@@ -201,7 +338,15 @@ mod tests {
             BufPool::new(),
             KernelConfig::single_threaded(),
             f32_codec(),
+            fabric,
         )
+    }
+
+    fn spawn_plain(
+        ingress: Arc<PrioQueue<OffloadMsg>>,
+        egress: Arc<PrioQueue<DeltaMsg>>,
+    ) -> CpuUpdater {
+        spawn_with(ingress, egress, FaultFabric::none())
     }
 
     fn msg(key: &ParamKey, data: &[f32], step: u64) -> OffloadMsg {
@@ -247,7 +392,6 @@ mod tests {
     /// 0, shared bias correction).
     #[test]
     fn chunked_gradient_matches_whole_payload_bitwise() {
-        use crate::coordinator::comm::ChunkHeader;
         let g: Vec<f32> = vec![0.5, -0.25, 1.5, -2.0, 0.125, 3.0];
         let key = ParamKey { param_index: 2, kind: None };
 
@@ -272,12 +416,12 @@ mod tests {
                                 prio: 0,
                                 step,
                                 link_ns: 0,
-                                chunk: ChunkHeader {
-                                    idx: idx as u32,
-                                    of: n_chunks as u32,
-                                    elem_offset: off,
-                                    total_elems: g.len(),
-                                },
+                                chunk: ChunkHeader::part(
+                                    idx as u32,
+                                    n_chunks as u32,
+                                    off,
+                                    g.len(),
+                                ),
                             },
                         );
                     }
@@ -368,6 +512,7 @@ mod tests {
             BufPool::new(),
             KernelConfig::single_threaded(),
             codec.clone(),
+            FaultFabric::none(),
         );
         let key = ParamKey { param_index: 7, kind: None };
         let g = [0.333f32, -1.777, 0.0081, 2.5];
@@ -422,6 +567,7 @@ mod tests {
             pool.clone(),
             KernelConfig::single_threaded(),
             codec.clone(),
+            FaultFabric::none(),
         );
         let key = ParamKey { param_index: 0, kind: None };
         let rounds = 16u64;
@@ -455,6 +601,157 @@ mod tests {
         assert!(s.hit_rate() > 0.9, "{s:?}");
         assert!(s.shelved <= 3, "f32 working set must stay bounded: {s:?}");
         assert!(s.byte_shelved <= 2, "byte working set must stay bounded: {s:?}");
+        ingress.close();
+        upd.join();
+    }
+
+    /// The supervisor contract: an injected panic is caught, the worker
+    /// restarts against the surviving shared state, the parked message
+    /// replays exactly once, and the f32 trajectory — deltas AND the Adam
+    /// moments left behind — is bit-identical to the fault-free run.
+    #[test]
+    fn updater_survives_injected_panic_bit_identically() {
+        let key = ParamKey { param_index: 5, kind: None };
+        let g = [0.75f32, -0.125, 2.0];
+        let run = |plan: Option<Arc<FaultPlan>>| -> (Vec<Vec<f32>>, AdamState, u64) {
+            let fabric = FaultFabric::new(plan, RetryCfg::default());
+            let ingress = Arc::new(PrioQueue::new());
+            let egress = Arc::new(PrioQueue::<DeltaMsg>::new());
+            let mut upd = spawn_with(ingress.clone(), egress.clone(), fabric.clone());
+            let mut deltas = Vec::new();
+            for step in 1..=3u64 {
+                ingress.push(0, msg(&key, &g, step));
+                deltas.push(decode_delta(&egress.pop().unwrap()));
+            }
+            let state = upd.states.lock().unwrap().get(&key).unwrap().clone();
+            ingress.close();
+            upd.join();
+            (deltas, state, fabric.health.worker_restarts.load(Ordering::Relaxed))
+        };
+        let (clean, clean_state, r0) = run(None);
+        assert_eq!(r0, 0);
+        let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::PanicUpdater).with_step(2)]);
+        let (faulty, faulty_state, r1) = run(Some(Arc::new(plan)));
+        assert_eq!(r1, 1, "exactly one supervised restart");
+        assert_eq!(faulty, clean, "trajectory bit-identical through the panic");
+        assert_eq!(faulty_state.step, clean_state.step);
+        assert_eq!(faulty_state.m, clean_state.m);
+        assert_eq!(faulty_state.v, clean_state.v);
+    }
+
+    /// Graceful degradation: consecutive decode failures on a lossy codec
+    /// zero-fill the gradient (no corrupt data reaches Adam) and pin the
+    /// key to the f32 wire format, counted once in `codec_fallbacks`.
+    #[test]
+    fn updater_decode_failures_degrade_to_f32_fallback() {
+        let codec = make_codec(CodecKind::Bf16);
+        let fabric = FaultFabric::new(None, RetryCfg { fallback_after: 2, ..RetryCfg::default() });
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::<DeltaMsg>::new());
+        let mut upd = CpuUpdater::spawn(
+            ingress.clone(),
+            egress.clone(),
+            1.0,
+            BufPool::new(),
+            KernelConfig::single_threaded(),
+            codec.clone(),
+            fabric.clone(),
+        );
+        let key = ParamKey { param_index: 4, kind: None };
+        let g = [1.0f32, -2.0, 0.5];
+        for step in 1..=2u64 {
+            // A mangled wire payload: truncated by one byte with the
+            // checksum restamped — passes the wire check, fails the bf16
+            // decode (the exact shape FaultKind::Mangle produces).
+            let mut wire = WirePayload::detached(codec.as_ref(), &g);
+            let keep = wire.bytes.len() - 1;
+            wire.bytes.truncate(keep);
+            let mut m = OffloadMsg::whole(key.clone(), wire, 0, step);
+            m.chunk.checksum = crc32(m.data.as_bytes());
+            ingress.push(0, m);
+            let d = egress.pop().unwrap();
+            // Zero gradient: Adam still steps (moments decay), delta stays
+            // finite.
+            let mut out = vec![0f32; d.delta.elems];
+            codec.decode(d.delta.as_bytes(), &mut out).unwrap();
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(fabric.health.decode_failures.load(Ordering::Relaxed), 2);
+        assert_eq!(fabric.health.codec_fallbacks.load(Ordering::Relaxed), 1);
+        assert!(fabric.fallback.is_fallback(&key));
+        assert!(fabric.health.fatal().is_none(), "degradation is not fatal");
+        ingress.close();
+        upd.join();
+    }
+
+    /// A payload tagged `CODEC_TAG_F32_FALLBACK` decodes with the f32
+    /// codec even though the pipeline negotiated bf16 — and the delta goes
+    /// back in the same format, so the round trip is bit-exact.
+    #[test]
+    fn updater_honors_the_f32_fallback_tag() {
+        let codec = make_codec(CodecKind::Bf16);
+        let f32c = f32_codec();
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::<DeltaMsg>::new());
+        let mut upd = CpuUpdater::spawn(
+            ingress.clone(),
+            egress.clone(),
+            1.0,
+            BufPool::new(),
+            KernelConfig::single_threaded(),
+            codec.clone(),
+            FaultFabric::none(),
+        );
+        let key = ParamKey { param_index: 9, kind: None };
+        let g = [0.333f32, -1.777]; // not bf16-representable
+        let mut m =
+            OffloadMsg::whole(key.clone(), WirePayload::detached(f32c.as_ref(), &g), 0, 1);
+        m.chunk.codec_tag = CODEC_TAG_F32_FALLBACK;
+        m.chunk.checksum = crc32(m.data.as_bytes());
+        ingress.push(0, m);
+        let d = egress.pop().unwrap();
+        assert_eq!(d.chunk.codec_tag, CODEC_TAG_F32_FALLBACK, "tag carried through");
+        assert_eq!(crc32(d.delta.as_bytes()), d.chunk.checksum, "delta restamped");
+        // f32 round trip: the delta is exactly a first Adam step of the
+        // *unquantized* gradient.
+        let mut got = vec![0f32; d.delta.elems];
+        f32c.decode(d.delta.as_bytes(), &mut got).unwrap();
+        let mut reference = AdamState::new(g.len());
+        let mut want = vec![0f32; g.len()];
+        reference.fused_step(&g, &mut want);
+        assert_eq!(got, want);
+        ingress.close();
+        upd.join();
+    }
+
+    /// A chunk-protocol violation is a typed pipeline failure now, not a
+    /// panic: the updater records it, exits, and closes its egress so the
+    /// consumer unblocks.
+    #[test]
+    fn chunk_protocol_violation_fails_health_not_panic() {
+        let fabric = FaultFabric::none();
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::<DeltaMsg>::new());
+        let mut upd = spawn_with(ingress.clone(), egress.clone(), fabric.clone());
+        let key = ParamKey { param_index: 6, kind: None };
+        // A stream starting at chunk 1/2 violates per-key FIFO.
+        ingress.push(
+            0,
+            OffloadMsg {
+                key: key.clone(),
+                data: WirePayload::detached(f32_codec().as_ref(), &[1.0]),
+                prio: 0,
+                step: 1,
+                link_ns: 0,
+                chunk: ChunkHeader::part(1, 2, 1, 2),
+            },
+        );
+        assert!(egress.pop().is_none(), "updater exits cleanly, closing egress");
+        match fabric.health.fatal() {
+            Some(PipelineError::ChunkProtocol { .. }) => {}
+            other => panic!("want ChunkProtocol, got {other:?}"),
+        }
+        assert_eq!(fabric.health.worker_restarts.load(Ordering::Relaxed), 0);
         ingress.close();
         upd.join();
     }

@@ -9,12 +9,17 @@
 //!                       [--link-codec f32|bf16|int8|sparse-int8]
 //!                       [--async-rho X] [--async-staleness S]
 //!                       [--link-chunk-elems N]
+//!                       [--fault-plan JSON|path] [--retry-budget N]
 //!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a);
 //!     `--link-codec` prices transfers at the encoded payload size, the
 //!     async knobs shape the stall-free schedule (and its predicted gated
 //!     link exposure, printed alongside the rows), and
 //!     `--link-chunk-elems` splits each transfer into sub-layer chunks
-//!     (PIPO-style pipelining; 0 = whole-layer).
+//!     (PIPO-style pipelining; 0 = whole-layer).  With `--fault-plan`
+//!     (same syntax as `train`) the expected-retransmit factor — how much
+//!     the planned drops/corruptions inflate link time under the retry
+//!     protocol — is printed, pricing what the runtime then measures as
+//!     `retrans_bytes`.
 //! lsp-offload train     [--preset tiny|small|mid]
 //!                       [--policy lsp|async-lsp|zero|...]
 //!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
@@ -22,6 +27,8 @@
 //!                       [--link-clock real|virtual|auto]
 //!                       [--async-rho X] [--async-staleness S]
 //!                       [--link-chunk-elems N]
+//!                       [--fault-plan JSON|path] [--retry-budget N]
+//!                       [--retry-backoff-ns N] [--codec-fallback-after K]
 //!     Real training over the PJRT artifacts with throttled links; link
 //!     payloads cross in the chosen wire format (`auto` = policy default).
 //!     `async-lsp` applies the top-rho important slice synchronously on the
@@ -30,6 +37,13 @@
 //!     `--link-chunk-elems` ships every gradient/delta as sub-layer chunks
 //!     so the CPU Adam and the return link start before a layer's payload
 //!     has fully crossed (0 = whole-layer, the default).
+//!     `--fault-plan` (inline JSON or a path; `LSP_FAULT_PLAN` env as a
+//!     fallback) injects deterministic wire/updater faults; every chunk is
+//!     CRC32-verified and retransmitted up to `--retry-budget` times with
+//!     `--retry-backoff-ns` exponential backoff, and a key whose lossy
+//!     payloads fail to decode `--codec-fallback-after` consecutive times
+//!     degrades to the bit-exact f32 wire codec.  The recovery counters
+//!     land in the train report.
 //! lsp-offload bias      [--preset tiny|small] [--calib N] [--val N]
 //!     Estimation-bias study: learned sparse vs random vs GaLore SVD
 //!     (Figs 7b/9).
@@ -164,6 +178,29 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
             lsp_stall,
             async_stall,
             (1.0 - async_stall / lsp_stall.max(1e-12)) * 100.0
+        );
+    }
+    // Fault pricing: mirror the runtime's retransmit accounting so
+    // `simulate --fault-plan` predicts the link inflation `train
+    // --fault-plan` then measures as `retrans_bytes`.
+    let fault_plan = match args.get("fault-plan") {
+        Some(v) => Some(lsp_offload::coordinator::fault::FaultPlan::from_arg(v)?),
+        None => lsp_offload::coordinator::fault::FaultPlan::from_env()?,
+    };
+    if let Some(plan) = fault_plan {
+        use lsp_offload::sim::cost_model::expected_retransmit_factor;
+        let budget = args.get_u64("retry-budget")?.unwrap_or(3) as u32;
+        // Chunk crossings per run: every layer's payload in C chunks, out
+        // and back, each iteration.
+        let base = w.n_layers as u64 * w.sub_payload_chunks() * 2 * iters as u64;
+        let extra = plan.planned_extra_transfers(budget);
+        println!(
+            "expected retransmit factor: {:.4} ({} planned extra transfers over {} chunk \
+             crossings, retry budget {})",
+            expected_retransmit_factor(extra, base),
+            extra,
+            base,
+            budget
         );
     }
     if w.link_chunk_elems > 0 {

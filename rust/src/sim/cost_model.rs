@@ -433,6 +433,21 @@ pub fn chunked_gated_link_exposure(
         * crate::coordinator::comm::chunk_pipeline_factor(n_chunks)
 }
 
+/// Expected link-time inflation from planned retransmits: each planned
+/// drop/corrupt costs one extra wire crossing per firing (up to the retry
+/// budget), so a schedule moving `base_transfers` chunks prices its links at
+/// `base * factor`.  This is the sim-side mirror of the runtime's
+/// `retrans_bytes` accounting (`FaultPlan::planned_extra_transfers` counts
+/// the same firings the link threads charge), so
+/// `simulate --fault-plan` prices what `train --fault-plan` then measures.
+pub fn expected_retransmit_factor(planned_extra: u64, base_transfers: u64) -> f64 {
+    if base_transfers == 0 {
+        1.0
+    } else {
+        1.0 + planned_extra as f64 / base_transfers as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -607,6 +622,25 @@ mod tests {
         w.link_chunk_elems = 0;
         assert_eq!(w.layer_chunks(true), 1);
         assert_eq!(w.sub_payload_chunks(), 1);
+    }
+
+    #[test]
+    fn retransmit_factor_prices_planned_faults() {
+        use crate::coordinator::fault::{FaultKind, FaultPlan, FaultSpec};
+        // No faults / no transfers => neutral factor.
+        assert_eq!(expected_retransmit_factor(0, 100), 1.0);
+        assert_eq!(expected_retransmit_factor(5, 0), 1.0);
+        // A plan with one drop and one corrupt over 100 transfers inflates
+        // link time by exactly 2 extra crossings.
+        let plan = FaultPlan::new(vec![
+            FaultSpec::new(FaultKind::Drop).with_step(1),
+            FaultSpec::new(FaultKind::Corrupt { bit: 3 }).with_step(2),
+        ]);
+        let extra = plan.planned_extra_transfers(3);
+        assert_eq!(extra, 2);
+        assert!((expected_retransmit_factor(extra, 100) - 1.02).abs() < 1e-12);
+        // Budget 0 => nothing ever retransmits => neutral.
+        assert_eq!(plan.planned_extra_transfers(0), 0);
     }
 
     #[test]

@@ -339,6 +339,18 @@ impl PooledBytes {
         &self.data
     }
 
+    /// Mutable view of the bytes (wire-fault injection flips payload bits
+    /// in place).
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    /// Shorten the buffer to `len` bytes (no-op when already shorter).
+    /// Capacity is kept, so the pool still recycles the full allocation.
+    pub fn truncate(&mut self, len: usize) {
+        self.data.truncate(len);
+    }
+
     /// Extract the underlying `Vec` without returning it to the pool.
     pub fn into_vec(mut self) -> Vec<u8> {
         self.pool = None;

@@ -12,6 +12,7 @@ use lsp_offload::coordinator::comm::{
     chunk_pipeline_factor, encode_chunked, n_chunks_for, DeltaMsg, Link, LinkClock, OffloadMsg,
     ParamKey, PrioQueue, VirtualClock,
 };
+use lsp_offload::coordinator::fault::{FaultDir, FaultFabric};
 use lsp_offload::coordinator::pipeline::{
     stale_bound_exceeded, InFlight, LogicalDelta, Reassembler,
 };
@@ -132,9 +133,8 @@ fn pipeline_deltas(
         LinkClock::Virtual(clock.clone()),
         d2h_in.clone(),
         d2h_out.clone(),
-        |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
-        |m| m.prio,
-        |m, ns| m.link_ns += ns,
+        FaultDir::D2H,
+        FaultFabric::none(),
     );
     let mut h2d = Link::spawn(
         "h2d",
@@ -143,9 +143,8 @@ fn pipeline_deltas(
         LinkClock::Virtual(clock.clone()),
         h2d_in.clone(),
         delta_out.clone(),
-        |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
-        |m| m.prio,
-        |m, ns| m.link_ns += ns,
+        FaultDir::H2D,
+        FaultFabric::none(),
     );
     let mut upd = CpuUpdater::spawn(
         d2h_out.clone(),
@@ -154,9 +153,11 @@ fn pipeline_deltas(
         pool.clone(),
         KernelConfig::single_threaded(),
         codec.clone(),
+        FaultFabric::none(),
     );
 
     let key = ParamKey { param_index: 0, kind: None };
+    let fab = FaultFabric::none();
     let mut pending = InFlight::default();
     let mut reasm = Reassembler::default();
     let mut out = Vec::new();
@@ -172,7 +173,7 @@ fn pipeline_deltas(
         loop {
             let msg = delta_out.pop().expect("pipeline alive");
             if let Some(ld) = reasm
-                .ingest(codec.as_ref(), &pool, &mut pending, msg)
+                .ingest(codec.as_ref(), &pool, &mut pending, &fab, msg)
                 .expect("chunk ingestion")
             {
                 out.push(ld);
@@ -328,9 +329,8 @@ fn chunked_staleness_bound_holds_with_partial_arrivals() {
                 LinkClock::Virtual(clock.clone()),
                 d2h_in.clone(),
                 d2h_out.clone(),
-                |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
-                |m| m.prio,
-                |m, ns| m.link_ns += ns,
+                FaultDir::D2H,
+                FaultFabric::none(),
             );
             let mut h2d = Link::spawn(
                 "h2d",
@@ -339,9 +339,8 @@ fn chunked_staleness_bound_holds_with_partial_arrivals() {
                 LinkClock::Virtual(clock.clone()),
                 h2d_in.clone(),
                 delta_out.clone(),
-                |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
-                |m| m.prio,
-                |m, ns| m.link_ns += ns,
+                FaultDir::H2D,
+                FaultFabric::none(),
             );
             let mut upd = CpuUpdater::spawn(
                 d2h_out.clone(),
@@ -350,9 +349,11 @@ fn chunked_staleness_bound_holds_with_partial_arrivals() {
                 pool.clone(),
                 KernelConfig::single_threaded(),
                 codec.clone(),
+                FaultFabric::none(),
             );
 
             let mut r = Rng::new(*seed);
+            let fab = FaultFabric::none();
             let mut pending = InFlight::default();
             let mut reasm = Reassembler::default();
             let mut held: Vec<LogicalDelta> = Vec::new();
@@ -364,7 +365,7 @@ fn chunked_staleness_bound_holds_with_partial_arrivals() {
                         let Some(msg) = delta_out.pop() else {
                             return Err("delta queue closed early".into());
                         };
-                        match reasm.ingest(codec.as_ref(), &pool, pending, msg) {
+                        match reasm.ingest(codec.as_ref(), &pool, pending, &fab, msg) {
                             Err(e) => return Err(e.to_string()),
                             Ok(Some(ld)) => return Ok(ld),
                             Ok(None) => continue,

@@ -1,0 +1,505 @@
+//! Fault-tolerant pipeline, end-to-end: deterministic fault injection
+//! (drops, bit-flips, stalls, updater panics) through the real queues,
+//! virtual-clock links, supervised CPU updater and reassembler.
+//!
+//! Three layers:
+//!
+//! 1. **Pinned recovery** — a plan with one drop, one corruption, one
+//!    stall and one updater panic must leave the f32 delta stream
+//!    BIT-IDENTICAL to the fault-free run, with the recovery visible in
+//!    the health counters.  Retry budget 0 must fail with a clean typed
+//!    `PipelineError` — the shutdown cascade unblocks every pop, no hang,
+//!    no poisoned-mutex panic.
+//! 2. **Chaos property** — randomized seeded plans (actions, filters,
+//!    repeats, chunk sizes) with ample retry budget: every run completes,
+//!    never deadlocks under the virtual clock, and stays bit-identical
+//!    under the f32 codec; the bounded-staleness protocol holds with
+//!    retransmitted chunks straddling deadline drains.
+//! 3. **Trainer level** (artifact-gated like `tests/policy_parity.rs`) —
+//!    `--fault-plan` runs of lsp/zero/async-lsp reproduce the fault-free
+//!    loss trajectory exactly and surface nonzero recovery counters in the
+//!    `TrainReport`; the same plan with `--retry-budget 0` returns a clean
+//!    `Err(PipelineError::RetryBudgetExhausted)` from `Trainer::train`.
+//!
+//! No real sleeps anywhere: backoff and stall time are charged to the
+//! virtual clock, so the whole file is deterministic and fast.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use lsp_offload::codec::{make_codec, Codec, CodecKind};
+use lsp_offload::coordinator::comm::{
+    encode_chunked, n_chunks_for, DeltaMsg, Link, LinkClock, OffloadMsg, ParamKey, PrioQueue,
+    VirtualClock,
+};
+use lsp_offload::coordinator::fault::{
+    FaultDir, FaultFabric, FaultKind, FaultPlan, FaultSpec, PipelineError, RetryCfg,
+};
+use lsp_offload::coordinator::pipeline::{
+    stale_bound_exceeded, InFlight, LogicalDelta, Reassembler,
+};
+use lsp_offload::coordinator::worker::CpuUpdater;
+use lsp_offload::tensor::kernel::KernelConfig;
+use lsp_offload::util::bufpool::BufPool;
+use lsp_offload::util::prop::check;
+use lsp_offload::util::rng::Rng;
+
+fn fabric_with(plan: Option<FaultPlan>, retry: RetryCfg) -> FaultFabric {
+    FaultFabric::new(plan.map(Arc::new), retry)
+}
+
+/// The full pipeline (d2h link -> supervised CPU updater -> h2d link, all
+/// under one virtual clock) fed one key's gradient sequence; returns the
+/// reassembled logical deltas in step order, or the fatal pipeline error
+/// if the run failed.  Blocking pops only — if recovery ever wedged, this
+/// would hang the test rather than mask the bug.
+fn pipeline_deltas(
+    fabric: &FaultFabric,
+    codec: &Arc<dyn Codec>,
+    grads: &[Vec<f32>],
+    chunk_elems: usize,
+) -> Result<Vec<LogicalDelta>, PipelineError> {
+    let pool = BufPool::new();
+    let clock = Arc::new(VirtualClock::default());
+    let d2h_in = Arc::new(PrioQueue::new());
+    let d2h_out = Arc::new(PrioQueue::new());
+    let h2d_in = Arc::new(PrioQueue::new());
+    let delta_out = Arc::new(PrioQueue::<DeltaMsg>::new());
+    let mut d2h = Link::spawn(
+        "d2h",
+        1e9,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        d2h_in.clone(),
+        d2h_out.clone(),
+        FaultDir::D2H,
+        fabric.clone(),
+    );
+    let mut h2d = Link::spawn(
+        "h2d",
+        1e9,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        h2d_in.clone(),
+        delta_out.clone(),
+        FaultDir::H2D,
+        fabric.clone(),
+    );
+    let mut upd = CpuUpdater::spawn(
+        d2h_out.clone(),
+        h2d_in.clone(),
+        1.0,
+        pool.clone(),
+        KernelConfig::single_threaded(),
+        codec.clone(),
+        fabric.clone(),
+    );
+
+    let key = ParamKey { param_index: 0, kind: None };
+    let mut pending = InFlight::default();
+    let mut reasm = Reassembler::default();
+    let mut out = Vec::new();
+    'steps: for (step, g) in grads.iter().enumerate() {
+        let step = step as u64;
+        pending.insert_chunked(key.clone(), step, n_chunks_for(g.len(), chunk_elems) as u32);
+        encode_chunked(codec.as_ref(), &pool, g, chunk_elems, |payload, chunk| {
+            d2h_in.push(
+                0,
+                OffloadMsg { key: key.clone(), data: payload, prio: 0, step, link_ns: 0, chunk },
+            );
+        });
+        loop {
+            let Some(msg) = delta_out.pop() else {
+                // Shutdown cascade: the fatal error must already be
+                // recorded — a silently closed queue would be a hang bug's
+                // sibling.
+                break 'steps;
+            };
+            if let Some(ld) = reasm
+                .ingest(codec.as_ref(), &pool, &mut pending, fabric, msg)
+                .expect("chunk ingestion")
+            {
+                out.push(ld);
+                break;
+            }
+        }
+    }
+    d2h_in.close();
+    d2h.stop();
+    h2d.stop();
+    upd.join();
+    match fabric.health.fatal() {
+        Some(e) => Err(e),
+        None => {
+            assert!(pending.is_empty() && reasm.is_empty());
+            Ok(out)
+        }
+    }
+}
+
+fn gradients(seed: u64, steps: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut r = Rng::new(seed);
+    (0..steps).map(|_| (0..n).map(|_| r.normal()).collect()).collect()
+}
+
+/// The acceptance shape at queue level: a plan with >= 1 drop, >= 1
+/// corruption, >= 1 stall and >= 1 updater panic, f32 codec, virtual
+/// clock — the delta stream completes BIT-IDENTICALLY to the fault-free
+/// run and every recovery is visible in the health counters.
+#[test]
+fn injected_faults_recover_bit_identically_under_f32() {
+    let codec: Arc<dyn Codec> = make_codec(CodecKind::F32Raw);
+    let grads = gradients(41, 3, 1024);
+    let clean = pipeline_deltas(&fabric_with(None, RetryCfg::default()), &codec, &grads, 256)
+        .expect("fault-free run");
+
+    let plan = FaultPlan::new(vec![
+        FaultSpec::new(FaultKind::Drop).with_dir(FaultDir::D2H).with_step(0),
+        FaultSpec::new(FaultKind::Corrupt { bit: 9 }).with_dir(FaultDir::H2D).with_step(1),
+        FaultSpec::new(FaultKind::Stall { extra_ns: 50_000 }).with_step(1),
+        FaultSpec::new(FaultKind::PanicUpdater).with_step(2),
+    ]);
+    let fab = fabric_with(Some(plan), RetryCfg::default());
+    let faulted = pipeline_deltas(&fab, &codec, &grads, 256).expect("recovery succeeds");
+
+    assert_eq!(clean.len(), faulted.len());
+    for (step, (a, b)) in clean.iter().zip(&faulted).enumerate() {
+        assert_eq!(
+            a.data.as_slice(),
+            b.data.as_slice(),
+            "step {step}: faulted f32 deltas must be bit-identical"
+        );
+    }
+    let h = &fab.health;
+    assert_eq!(h.dropped_chunks.load(Ordering::Relaxed), 1);
+    assert_eq!(h.corrupt_chunks.load(Ordering::Relaxed), 1);
+    assert_eq!(h.stalled_chunks.load(Ordering::Relaxed), 1);
+    assert_eq!(h.retransmits.load(Ordering::Relaxed), 2, "one per drop, one per corruption");
+    assert!(h.retrans_bytes.load(Ordering::Relaxed) > 0);
+    assert_eq!(h.worker_restarts.load(Ordering::Relaxed), 1);
+    assert!(fab.health.fatal().is_none());
+}
+
+/// Retry budget 0: the first injected drop is fatal — but CLEANLY fatal.
+/// The link records `RetryBudgetExhausted`, the shutdown cascade closes
+/// every queue (so the consumer's pop unblocks with `None` instead of
+/// hanging), and no thread panics on a poisoned mutex.
+#[test]
+fn retry_budget_zero_fails_clean_not_hung() {
+    let codec: Arc<dyn Codec> = make_codec(CodecKind::F32Raw);
+    let grads = gradients(42, 2, 512);
+    let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop).with_dir(FaultDir::D2H)]);
+    let fab = fabric_with(
+        Some(plan),
+        RetryCfg { budget: 0, backoff_ns: 1_000, fallback_after: 2 },
+    );
+    let err = pipeline_deltas(&fab, &codec, &grads, 128).expect_err("budget 0 must fail");
+    match err {
+        PipelineError::RetryBudgetExhausted { link, attempts, .. } => {
+            assert_eq!(link, "d2h");
+            assert_eq!(attempts, 1);
+        }
+        other => panic!("expected RetryBudgetExhausted, got {other:?}"),
+    }
+    assert_eq!(fab.health.retransmits.load(Ordering::Relaxed), 0);
+}
+
+/// Chaos property: randomized seeded plans — any mix of drops,
+/// corruptions, mangles, stalls and updater panics with random filters and
+/// repeats — against random payload/chunk shapes, always with ample retry
+/// budget.  Every run must complete without deadlock and, because mangles
+/// cannot fire on the bit-exact f32 codec's fallback path (f32 IS the
+/// fallback; a mangled chunk zero-fills deterministically), we exclude
+/// mangle here and require BIT-IDENTITY to the fault-free run.
+#[test]
+fn chaos_plans_complete_bit_identically_with_ample_budget() {
+    check(
+        "fault-chaos",
+        12,
+        |r: &mut Rng| {
+            let steps = 2 + r.below(3);
+            let n = 64 + r.below(512);
+            let chunk = [0usize, 64, 100][r.below(3)];
+            let n_specs = 1 + r.below(5);
+            let specs: Vec<(usize, u64, u64, bool, u32)> = (0..n_specs)
+                .map(|_| {
+                    (
+                        r.below(4),                 // action selector
+                        r.below(steps) as u64,      // step filter
+                        1_000 + r.below(100_000) as u64, // stall ns
+                        r.below(2) == 0,            // d2h or h2d
+                        1 + r.below(2) as u32,      // repeat
+                    )
+                })
+                .collect();
+            (steps, n, chunk, specs, r.next_u64())
+        },
+        |(steps, n, chunk, specs, seed)| {
+            let codec: Arc<dyn Codec> = make_codec(CodecKind::F32Raw);
+            let grads = gradients(*seed, *steps, *n);
+            let clean =
+                pipeline_deltas(&fabric_with(None, RetryCfg::default()), &codec, &grads, *chunk)
+                    .map_err(|e| format!("fault-free run failed: {e}"))?;
+            let plan = FaultPlan::new(
+                specs
+                    .iter()
+                    .map(|&(action, step, stall_ns, d2h, repeat)| {
+                        let kind = match action {
+                            0 => FaultKind::Drop,
+                            1 => FaultKind::Corrupt { bit: (stall_ns % 24) as u32 },
+                            2 => FaultKind::Stall { extra_ns: stall_ns },
+                            _ => FaultKind::PanicUpdater,
+                        };
+                        let dir = if d2h { FaultDir::D2H } else { FaultDir::H2D };
+                        FaultSpec::new(kind).with_step(step).with_dir(dir).with_repeat(repeat)
+                    })
+                    .collect(),
+            );
+            // Ample budget: repeat <= 2 per spec, so <= 2 faults can ever
+            // hit one chunk per crossing; budget 8 always suffices.
+            let fab = fabric_with(
+                Some(plan),
+                RetryCfg { budget: 8, backoff_ns: 1_000, fallback_after: 2 },
+            );
+            let faulted = pipeline_deltas(&fab, &codec, &grads, *chunk)
+                .map_err(|e| format!("recovery failed: {e}"))?;
+            if clean.len() != faulted.len() {
+                return Err(format!("{} deltas vs {}", faulted.len(), clean.len()));
+            }
+            for (step, (a, b)) in clean.iter().zip(&faulted).enumerate() {
+                if a.data.as_slice() != b.data.as_slice() {
+                    return Err(format!("step {step}: faulted deltas diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The bounded-staleness protocol under faults: retransmitted chunks
+/// straddle deadline drains, yet partial receipt never counts as arrival
+/// and every logical delta still lands within the window — the deadline
+/// drain blocks until the retransmission crosses (virtual clock: no real
+/// waiting), so faults cost emulated time, never protocol violations.
+#[test]
+fn staleness_bound_holds_under_faults() {
+    let codec: Arc<dyn Codec> = make_codec(CodecKind::F32Raw);
+    let plan = FaultPlan::new(vec![
+        FaultSpec::new(FaultKind::Drop).with_repeat(3),
+        FaultSpec::new(FaultKind::Corrupt { bit: 3 }).with_repeat(3),
+    ]);
+    let fab = fabric_with(
+        Some(plan),
+        RetryCfg { budget: 8, backoff_ns: 1_000, fallback_after: 2 },
+    );
+    let pool = BufPool::new();
+    let clock = Arc::new(VirtualClock::default());
+    let d2h_in = Arc::new(PrioQueue::new());
+    let d2h_out = Arc::new(PrioQueue::new());
+    let h2d_in = Arc::new(PrioQueue::new());
+    let delta_out = Arc::new(PrioQueue::<DeltaMsg>::new());
+    let mut d2h = Link::spawn(
+        "d2h",
+        1e6,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        d2h_in.clone(),
+        d2h_out.clone(),
+        FaultDir::D2H,
+        fab.clone(),
+    );
+    let mut h2d = Link::spawn(
+        "h2d",
+        1e6,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        h2d_in.clone(),
+        delta_out.clone(),
+        FaultDir::H2D,
+        fab.clone(),
+    );
+    let mut upd = CpuUpdater::spawn(
+        d2h_out.clone(),
+        h2d_in.clone(),
+        1.0,
+        pool.clone(),
+        KernelConfig::single_threaded(),
+        codec.clone(),
+        fab.clone(),
+    );
+
+    let window = 1u64;
+    let steps = 6u64;
+    let sizes = [96usize, 160, 64];
+    let chunk = 64usize;
+    let mut r = Rng::new(7);
+    let mut pending = InFlight::default();
+    let mut reasm = Reassembler::default();
+    let mut held: Vec<LogicalDelta> = Vec::new();
+    let (mut shipped, mut applied) = (0u64, 0u64);
+    let mut recv = |pending: &mut InFlight, reasm: &mut Reassembler| -> LogicalDelta {
+        loop {
+            let msg = delta_out.pop().expect("pipeline must survive the plan");
+            if let Some(ld) =
+                reasm.ingest(codec.as_ref(), &pool, pending, &fab, msg).expect("ingest")
+            {
+                return ld;
+            }
+        }
+    };
+    for step in 0..steps {
+        for (k, &n) in sizes.iter().enumerate() {
+            let g: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let key = ParamKey { param_index: k, kind: None };
+            pending.insert_chunked(key.clone(), step, n_chunks_for(n, chunk) as u32);
+            shipped += 1;
+            encode_chunked(codec.as_ref(), &pool, &g, chunk, |payload, hdr| {
+                d2h_in.push(
+                    k as i64,
+                    OffloadMsg {
+                        key: key.clone(),
+                        data: payload,
+                        prio: k as i64,
+                        step,
+                        link_ns: 0,
+                        chunk: hdr,
+                    },
+                );
+            });
+        }
+        while let Some(oldest) = pending.oldest_step() {
+            if !stale_bound_exceeded(oldest, step, window) {
+                break;
+            }
+            held.push(recv(&mut pending, &mut reasm));
+        }
+        let mut rest = Vec::new();
+        for ld in held.drain(..) {
+            if stale_bound_exceeded(ld.step, step, window) {
+                assert!(
+                    step - ld.step <= window,
+                    "delta for param {} applied {} steps late (window {window})",
+                    ld.key.param_index,
+                    step - ld.step
+                );
+                applied += 1;
+            } else {
+                rest.push(ld);
+            }
+        }
+        held = rest;
+    }
+    while !pending.is_empty() {
+        held.push(recv(&mut pending, &mut reasm));
+    }
+    applied += held.len() as u64;
+    held.clear();
+    assert_eq!(shipped, applied, "every logical delta must complete despite the faults");
+    assert!(reasm.is_empty());
+    assert!(fab.health.fatal().is_none());
+    assert!(fab.health.retransmits.load(Ordering::Relaxed) >= 6, "both specs fire repeatedly");
+    d2h_in.close();
+    d2h.stop();
+    h2d.stop();
+    upd.join();
+}
+
+// ---- Trainer-level acceptance (artifact-gated) ---------------------------
+
+use lsp_offload::coordinator::policies::PolicyKind;
+use lsp_offload::coordinator::trainer::{TrainConfig, Trainer};
+use lsp_offload::model::manifest::find_artifacts;
+use lsp_offload::runtime::Engine;
+
+/// Compile once per thread, share across that thread's tests (the same
+/// artifact-gating idiom as `tests/policy_parity.rs`).
+fn with_engine(f: impl FnOnce(&Engine)) {
+    thread_local! {
+        static ENGINE: std::cell::OnceCell<Option<Engine>> =
+            const { std::cell::OnceCell::new() };
+    }
+    ENGINE.with(|c| {
+        let eng = c.get_or_init(|| {
+            let dir = find_artifacts(None, "tiny").ok()?;
+            Engine::load(&dir).ok()
+        });
+        match eng {
+            Some(e) => f(e),
+            None if std::env::var("LSP_REQUIRE_ARTIFACTS").as_deref() == Ok("1") => {
+                panic!("LSP_REQUIRE_ARTIFACTS=1 but tiny artifacts not found; run `make artifacts`")
+            }
+            None => eprintln!("SKIP: tiny artifacts not found; run `make artifacts`"),
+        }
+    });
+}
+
+fn fault_config(policy: PolicyKind) -> TrainConfig {
+    TrainConfig {
+        policy,
+        steps: 6,
+        bw_bytes_per_s: 1e9,
+        check_freq: 3,
+        alpha: 0.9,
+        learn_budget: 5,
+        eval_every: 0,
+        log_every: 0,
+        seed: 20_240_101,
+        link_codec: Some(CodecKind::F32Raw),
+        link_clock: lsp_offload::coordinator::comm::LinkClockMode::Virtual,
+        ..TrainConfig::default()
+    }
+}
+
+/// The PR's trainer-level acceptance: a plan with >= 1 drop, >= 1
+/// corruption and >= 1 updater panic, f32 codec, virtual clock — every
+/// offloading policy completes with the loss trajectory BIT-IDENTICAL to
+/// the fault-free run and nonzero recovery counters in the report.
+#[test]
+fn faulty_training_is_bit_identical_with_nonzero_recovery_counters() {
+    with_engine(|eng| {
+        for policy in [PolicyKind::Lsp, PolicyKind::Zero, PolicyKind::AsyncLsp] {
+            let clean = {
+                let mut tr = Trainer::new(eng, fault_config(policy)).unwrap();
+                tr.train().unwrap()
+            };
+            let mut cfg = fault_config(policy);
+            cfg.fault_plan = Some(Arc::new(FaultPlan::new(vec![
+                FaultSpec::new(FaultKind::Drop).with_dir(FaultDir::D2H).with_step(1),
+                FaultSpec::new(FaultKind::Corrupt { bit: 5 }).with_step(2).with_repeat(2),
+                FaultSpec::new(FaultKind::PanicUpdater).with_step(3),
+            ])));
+            let mut tr = Trainer::new(eng, cfg).unwrap();
+            let rep = tr.train().unwrap_or_else(|e| panic!("{policy:?}: {e}"));
+            let a: Vec<f32> = clean.loss_curve.iter().map(|&(_, l)| l).collect();
+            let b: Vec<f32> = rep.loss_curve.iter().map(|&(_, l)| l).collect();
+            assert_eq!(b, a, "{policy:?}: faulted f32 run must be bit-identical");
+            assert!(rep.retransmits >= 2, "{policy:?}: retransmits {}", rep.retransmits);
+            assert!(rep.corrupt_chunks >= 1, "{policy:?}");
+            assert!(rep.retrans_bytes > 0, "{policy:?}");
+            assert_eq!(rep.worker_restarts, 1, "{policy:?}");
+            assert!(tr.ctx().pending.is_empty(), "{policy:?} left deltas in flight");
+        }
+    });
+}
+
+/// The failure half of the acceptance: the same kind of plan with retry
+/// budget 0 must surface a clean typed error from `Trainer::train` — no
+/// hang, no poisoned-mutex panic, queues all unblocked by the cascade.
+#[test]
+fn faulty_training_with_zero_budget_errors_cleanly() {
+    with_engine(|eng| {
+        let mut cfg = fault_config(PolicyKind::Lsp);
+        cfg.fault_plan =
+            Some(Arc::new(FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop).with_step(1)])));
+        cfg.retry_budget = 0;
+        let mut tr = Trainer::new(eng, cfg).unwrap();
+        match tr.train() {
+            Err(PipelineError::RetryBudgetExhausted { step, attempts, .. }) => {
+                assert_eq!(step, 1);
+                assert_eq!(attempts, 1);
+            }
+            Err(other) => panic!("expected RetryBudgetExhausted, got {other:?}"),
+            Ok(_) => panic!("budget 0 with an injected drop must fail"),
+        }
+    });
+}

@@ -67,6 +67,33 @@ if [[ -n "$missing_flags" ]]; then
 fi
 echo "   clean"
 
+# The coordinator hot path must not be able to panic: every lock uses
+# fault::lock_recover, every failure routes through PipelineError /
+# PipelineHealth.  The gate scans the non-test portion (everything before
+# the first #[cfg(test)]) of the hot-path modules for unwrap/expect/panic!;
+# the few intentional sites (thread spawn, injected test panics) carry a
+# `gate: allow-panic` marker on the same or the preceding line.
+echo "== coordinator no-panic gate =="
+panic_hits=""
+for f in src/coordinator/comm.rs src/coordinator/pipeline.rs \
+         src/coordinator/worker.rs src/coordinator/projector_mgr.rs; do
+    hits="$(awk '
+        /#\[cfg\(test\)\]/ { exit }
+        /\.unwrap\(\)|\.expect\(|panic!/ {
+            if (index($0, "gate: allow-panic") == 0 && index(prev, "gate: allow-panic") == 0)
+                print FILENAME ":" FNR ": " $0
+        }
+        { prev = $0 }' "$f" || true)"
+    [[ -n "$hits" ]] && panic_hits="$panic_hits$hits"$'\n'
+done
+if [[ -n "${panic_hits//[$'\n']/}" ]]; then
+    echo "FAIL: panic-capable call on the coordinator hot path — use fault::lock_recover /"
+    echo "      PipelineError (or mark an intentional site with 'gate: allow-panic'):"
+    echo "$panic_hits"
+    exit 1
+fi
+echo "   clean"
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -80,6 +107,12 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 # to exercise the sleeping bandwidth emulation instead.
 echo "== cargo test -q (LSP_LINK_CLOCK=${LSP_LINK_CLOCK:-virtual}) =="
 LSP_LINK_CLOCK="${LSP_LINK_CLOCK:-virtual}" cargo test -q
+
+# The fault-injection chaos suite always runs on the virtual clock, even
+# when LSP_LINK_CLOCK=real above: injected stalls and retransmit backoff
+# are charged to the clock, so under `real` the plans would sleep them out.
+echo "== fault-injection chaos suite (LSP_LINK_CLOCK=virtual) =="
+LSP_LINK_CLOCK=virtual cargo test -q --test faults
 
 echo "== cargo bench --bench hotpath -- smoke =="
 # Remove any previous smoke output first: the bench falls back to writing
