@@ -167,6 +167,91 @@ fn main() {
         }
     }
 
+    if want("simd") {
+        use lsp_offload::tensor::simd;
+        // Explicit-SIMD micro-kernel vs the forced-scalar path at the SAME
+        // threads and blocking — the tentpole acceptance rows (>= 2x at
+        // 1024^3 where AVX2+FMA is available).  `set_force_scalar` is
+        // bench-only: this binary is its own process, so no parallel unit
+        // test can observe the toggle.
+        let mut rng = Rng::new(23);
+        let s = if smoke { 256 } else { 1024 };
+        let a = Tensor::randn(&[s, s], 1.0, &mut rng);
+        let b = Tensor::randn(&[s, s], 1.0, &mut rng);
+        let flops = 2.0 * (s as f64).powi(3);
+        let shape = format!("{s}x{s}x{s}");
+        let cfgn = KernelConfig::with_threads(threads);
+        simd::set_force_scalar(true);
+        let r_sc = bench(&format!("matmul_simd scalar(t={threads}) {s}x{s}"), budget, || {
+            std::hint::black_box(matmul_with(&a, &b, &cfgn).unwrap());
+        });
+        simd::set_force_scalar(false);
+        results.push(result_row(
+            "matmul_simd",
+            &shape,
+            "scalar_forced",
+            &r_sc,
+            Some(flops / r_sc.min / 1e9),
+            None,
+        ));
+        let impl_name = simd::active_impl_name();
+        let r_v = bench(&format!("matmul_simd {impl_name}(t={threads}) {s}x{s}"), budget, || {
+            std::hint::black_box(matmul_with(&a, &b, &cfgn).unwrap());
+        });
+        results.push(result_row(
+            "matmul_simd",
+            &shape,
+            impl_name,
+            &r_v,
+            Some(flops / r_v.min / 1e9),
+            Some(r_sc.min / r_v.min),
+        ));
+        println!(
+            "    -> {impl_name} {:.2} GFLOP/s vs forced-scalar {:.2} GFLOP/s ({:.2}x)",
+            flops / r_v.min / 1e9,
+            flops / r_sc.min / 1e9,
+            r_sc.min / r_v.min
+        );
+
+        // Packed panels vs the strided kernel at deep K (the pack_min_k
+        // regime).  Acceptance: packed never slower at k >= 2048.
+        let (m, k, n) = if smoke { (64, 2048, 64) } else { (512, 4096, 512) };
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let shape = format!("{m}x{k}x{n}");
+        let un_cfg = KernelConfig { pack_min_k: 0, ..cfgn };
+        let r_un = bench(&format!("matmul_unpacked(t={threads}) {shape}"), budget, || {
+            std::hint::black_box(matmul_with(&a, &b, &un_cfg).unwrap());
+        });
+        results.push(result_row(
+            "matmul_packed",
+            &shape,
+            "unpacked",
+            &r_un,
+            Some(flops / r_un.min / 1e9),
+            None,
+        ));
+        let pk_cfg = KernelConfig { pack_min_k: 2048, ..cfgn };
+        let r_pk = bench(&format!("matmul_packed(t={threads}) {shape}"), budget, || {
+            std::hint::black_box(matmul_with(&a, &b, &pk_cfg).unwrap());
+        });
+        results.push(result_row(
+            "matmul_packed",
+            &shape,
+            "packed",
+            &r_pk,
+            Some(flops / r_pk.min / 1e9),
+            Some(r_un.min / r_pk.min),
+        ));
+        println!(
+            "    -> packed {:.2} GFLOP/s vs unpacked {:.2} GFLOP/s ({:.2}x)",
+            flops / r_pk.min / 1e9,
+            flops / r_un.min / 1e9,
+            r_un.min / r_pk.min
+        );
+    }
+
     if want("compress") {
         // Streamed GATHER-layout compress/decompress vs the ROW-scalar
         // reference, at the paper-relevant (m, n, d, r) shapes.

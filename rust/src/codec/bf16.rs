@@ -35,7 +35,10 @@ impl Codec for Bf16 {
 
     fn encode(&self, src: &[f32], dst: &mut ByteBuf) {
         dst.reserve(src.len() * 2);
-        for &x in src {
+        // AVX2 prefix (bit-exact integer replica of f32_to_bf16_bits — see
+        // tensor::simd), scalar loop on the tail / fallback machines.
+        let done = crate::tensor::simd::bf16_encode_prefix(src, dst);
+        for &x in &src[done..] {
             dst.extend_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
         }
     }
@@ -44,7 +47,8 @@ impl Codec for Bf16 {
         if src.len() != dst.len() * 2 {
             bail!("bf16 payload is {} bytes, want {} for {} elems", src.len(), dst.len() * 2, dst.len());
         }
-        for (out, b) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        let done = crate::tensor::simd::bf16_decode_prefix(src, dst);
+        for (out, b) in dst[done..].iter_mut().zip(src[done * 2..].chunks_exact(2)) {
             *out = bf16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
         }
         Ok(())
@@ -89,5 +93,42 @@ mod tests {
         let above = f32::from_bits(0x3F80_8001);
         let up = bf16_bits_to_f32(f32_to_bf16_bits(above));
         assert!(up > 1.0, "{above} must round up, got {up}");
+    }
+
+    #[test]
+    fn simd_wire_bit_identical_to_scalar() {
+        // The SIMD encode/decode prefixes must produce byte-identical
+        // wires and bit-identical decodes vs. the pure scalar loops, over
+        // random bit patterns and every special class.  On non-AVX2
+        // machines (or LSP_FORCE_SCALAR=1) both sides run the scalar loop.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for n in [1usize, 7, 8, 9, 40, 129] {
+            let mut src: Vec<f32> =
+                (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+            src[0] = f32::NAN;
+            if n > 4 {
+                src[1] = -0.0;
+                src[2] = f32::INFINITY;
+                src[3] = f32::NEG_INFINITY;
+                src[4] = f32::from_bits(1); // subnormal
+            }
+            // Scalar-only wire.
+            let mut scalar_wire = Vec::with_capacity(n * 2);
+            for &x in &src {
+                scalar_wire.extend_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
+            }
+            // Codec wire (SIMD prefix + scalar tail).
+            let mut wire = ByteBuf::detached(Vec::new());
+            Bf16.encode(&src, &mut wire);
+            assert_eq!(wire.as_slice(), &scalar_wire[..], "n={n} wire");
+            // Decode: codec vs scalar-only loop, compared as bits.
+            let mut out = vec![0f32; n];
+            Bf16.decode(&wire, &mut out).unwrap();
+            for (i, (o, b)) in out.iter().zip(scalar_wire.chunks_exact(2)).enumerate() {
+                let want = bf16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
+                assert_eq!(o.to_bits(), want.to_bits(), "n={n} elem {i}");
+            }
+        }
     }
 }

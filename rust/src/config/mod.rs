@@ -1,7 +1,9 @@
 //! Config system: CLI flag parsing (no clap offline) + JSON run-config
 //! files that map onto `TrainConfig` and the simulator knobs.
 //!
-//! Precedence: defaults < JSON config file (`--config path`) < CLI flags.
+//! Precedence: defaults < JSON config file (`--config path`) < kernel
+//! profile (`--kernel-profile` / `"kernel_profile"`, written by the `tune`
+//! subcommand) < CLI flags.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -102,6 +104,42 @@ impl CliArgs {
     }
 }
 
+/// Apply an autotuner kernel profile (the JSON the `tune` subcommand
+/// writes; schema documented in EXPERIMENTS.md) onto a TrainConfig.  Flat
+/// optional keys `kernel_threads` / `kernel_block_m` / `kernel_block_n` /
+/// `kernel_block_k` / `kernel_pack_min_k` / `link_chunk_elems`; a `meta`
+/// object (machine fingerprint, tuning date, probe numbers) is accepted
+/// and ignored.  Unknown keys are errors — a typo'd profile must not
+/// silently run untuned.
+pub fn apply_kernel_profile(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
+    for (k, v) in j.as_obj()? {
+        match k.as_str() {
+            "kernel_threads" => cfg.kernel.threads = v.as_usize()?,
+            "kernel_block_m" => cfg.kernel.block_m = v.as_usize()?,
+            "kernel_block_n" => cfg.kernel.block_n = v.as_usize()?,
+            "kernel_block_k" => cfg.kernel.block_k = v.as_usize()?,
+            "kernel_pack_min_k" => cfg.kernel.pack_min_k = v.as_usize()?,
+            "link_chunk_elems" => {
+                cfg.link_chunk_elems = parse_link_chunk_elems(v.as_usize()? as u64)?
+            }
+            "meta" => {
+                v.as_obj().context("kernel-profile meta must be an object")?;
+            }
+            other => bail!("unknown kernel-profile key {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// `apply_kernel_profile` from a file path (`--kernel-profile`,
+/// `"kernel_profile"`).
+pub fn apply_kernel_profile_path(cfg: &mut TrainConfig, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading kernel profile {path}"))?;
+    apply_kernel_profile(cfg, &Json::parse(&text)?)
+        .with_context(|| format!("applying kernel profile {path}"))
+}
+
 /// Apply a JSON object onto a TrainConfig.
 pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
     let obj = j.as_obj()?;
@@ -137,6 +175,10 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
             "kernel_block_m" => cfg.kernel.block_m = v.as_usize()?,
             "kernel_block_n" => cfg.kernel.block_n = v.as_usize()?,
             "kernel_block_k" => cfg.kernel.block_k = v.as_usize()?,
+            "kernel_pack_min_k" => cfg.kernel.pack_min_k = v.as_usize()?,
+            // An autotuner profile file (written by the `tune` subcommand);
+            // applied inline, so later keys in the same config still win.
+            "kernel_profile" => apply_kernel_profile_path(cfg, v.as_str()?)?,
             // Link wire format (codec::CodecKind); "auto" defers to the
             // policy's preferred codec, "f32" pins the bit-exact path.
             "link_codec" => cfg.link_codec = parse_link_codec(v.as_str()?)?,
@@ -242,6 +284,11 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     if let Some(v) = args.get_f64("budget-secs")? {
         cfg.max_wall_secs = v;
     }
+    // Autotuner profile before the explicit kernel flags, so a hand-set
+    // flag always beats the profile.
+    if let Some(p) = args.get("kernel-profile") {
+        apply_kernel_profile_path(&mut cfg, p)?;
+    }
     if let Some(v) = args.get_u64("kernel-threads")? {
         cfg.kernel.threads = v as usize;
     }
@@ -253,6 +300,9 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     }
     if let Some(v) = args.get_u64("kernel-block-k")? {
         cfg.kernel.block_k = v as usize;
+    }
+    if let Some(v) = args.get_u64("kernel-pack-min-k")? {
+        cfg.kernel.pack_min_k = v as usize;
     }
     if let Some(v) = args.get("link-codec") {
         cfg.link_codec = parse_link_codec(v)?;
@@ -342,6 +392,49 @@ mod tests {
         apply_json(&mut cfg, &j).unwrap();
         assert_eq!(cfg.kernel.threads, 3);
         assert_eq!(cfg.kernel.block_n, 64);
+    }
+
+    #[test]
+    fn kernel_pack_min_k_flag_and_json() {
+        let cfg = train_config_from(&argv("train --kernel-pack-min-k 0")).unwrap();
+        assert_eq!(cfg.kernel.pack_min_k, 0, "0 disables packing");
+        let j = Json::parse(r#"{"kernel_pack_min_k": 4096}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.kernel.pack_min_k, 4096);
+    }
+
+    #[test]
+    fn kernel_profile_roundtrip_and_precedence() {
+        // Profile JSON -> TrainConfig knobs, meta ignored.
+        let j = Json::parse(
+            r#"{"kernel_threads": 2, "kernel_block_k": 128, "kernel_pack_min_k": 0,
+                "link_chunk_elems": 65536, "meta": {"impl": "avx2"}}"#,
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_kernel_profile(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.kernel.threads, 2);
+        assert_eq!(cfg.kernel.block_k, 128);
+        assert_eq!(cfg.kernel.pack_min_k, 0);
+        assert_eq!(cfg.link_chunk_elems, 65536);
+        // Unknown keys and out-of-range chunk sizes are errors, not no-ops.
+        let bad = Json::parse(r#"{"block_k": 1}"#).unwrap();
+        assert!(apply_kernel_profile(&mut cfg, &bad).is_err());
+        let bad = Json::parse(r#"{"link_chunk_elems": 8}"#).unwrap();
+        assert!(apply_kernel_profile(&mut cfg, &bad).is_err());
+
+        // File path + precedence: profile applies, explicit CLI flag wins.
+        let path = std::env::temp_dir().join("lsp_kernel_profile_test.json");
+        std::fs::write(&path, r#"{"kernel_block_k": 96, "kernel_threads": 3}"#).unwrap();
+        let a = argv(&format!("train --kernel-profile {} --kernel-threads 5", path.display()));
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.kernel.block_k, 96, "profile applies");
+        assert_eq!(cfg.kernel.threads, 5, "explicit CLI flag beats the profile");
+        std::fs::remove_file(&path).ok();
+
+        // Missing file is a loud config error.
+        assert!(train_config_from(&argv("train --kernel-profile /nonexistent.json")).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! textbook cross-check lives in `rust/tests/integration.rs`.
 
 use crate::tensor::kernel::KernelConfig;
-use crate::tensor::{pool, Tensor};
+use crate::tensor::{pool, simd, Tensor};
 
 pub const ADAM_BETA1: f32 = 0.9;
 pub const ADAM_BETA2: f32 = 0.999;
@@ -27,8 +27,48 @@ pub const PAR_ADAM_MIN_LEN: usize = 1 << 16;
 /// (`fused_step_with`) run exactly this function, and the math is purely
 /// element-wise, so splitting the span across workers is bit-identical to
 /// the oracle by construction (pinned by `parallel_fused_step_bit_identical`).
+///
+/// Since the §Perf SIMD pass this is a dispatcher: an AVX2 prefix
+/// (`simd::adam_span_prefix`) followed by the scalar body on the remainder.
+/// The SIMD body is deliberately FMA-free — every lane runs the exact
+/// scalar op sequence through correctly-rounded IEEE elementwise ops — so
+/// the prefix boundary is unobservable and the bit-identity invariants
+/// hold across threads, chunk splits AND the SIMD/scalar dispatch (pinned
+/// by `simd_prefix_bit_identical_to_scalar` below and the parity test in
+/// `tensor::simd`).
 #[inline]
 fn adam_span(m: &mut [f32], v: &mut [f32], g: &[f32], delta: &mut [f32], bc1: f32, bc2_sqrt: f32) {
+    let coefs = simd::AdamCoefs {
+        beta1: ADAM_BETA1,
+        om_b1: 1.0 - ADAM_BETA1,
+        beta2: ADAM_BETA2,
+        om_b2: 1.0 - ADAM_BETA2,
+        eps: ADAM_EPS,
+        bc1,
+        bc2_sqrt,
+    };
+    let done = simd::adam_span_prefix(g, m, v, delta, coefs);
+    adam_span_scalar(
+        &mut m[done..],
+        &mut v[done..],
+        &g[done..],
+        &mut delta[done..],
+        bc1,
+        bc2_sqrt,
+    );
+}
+
+/// The original scalar loop — the oracle the SIMD prefix must match
+/// bit-for-bit (and the only body on non-AVX2 machines).
+#[inline]
+fn adam_span_scalar(
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    delta: &mut [f32],
+    bc1: f32,
+    bc2_sqrt: f32,
+) {
     let om_b1 = 1.0 - ADAM_BETA1;
     let om_b2 = 1.0 - ADAM_BETA2;
     for ((mi, vi), (gi, di)) in m
@@ -364,6 +404,41 @@ mod tests {
                 assert_eq!(st.step, oracle.step, "chunk={chunk}");
                 assert_eq!(st.m, oracle.m, "chunk={chunk}");
                 assert_eq!(st.v, oracle.v, "chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_prefix_bit_identical_to_scalar() {
+        // adam_span (SIMD prefix + scalar tail) must match the pure scalar
+        // loop bit-for-bit on every length, including specials.  On
+        // machines without AVX2 (or under LSP_FORCE_SCALAR=1) both sides
+        // run the same scalar body and the test is trivially green.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(23);
+        for n in [1usize, 7, 8, 9, 64, 131] {
+            let mut g = rng.normal_vec(n, 1.0);
+            g[0] = 0.0;
+            if n > 2 {
+                g[1] = -0.0;
+                g[2] = f32::from_bits(1); // subnormal
+            }
+            if n > 3 {
+                g[3] = f32::NAN;
+            }
+            let m0 = rng.normal_vec(n, 0.1);
+            let v0: Vec<f32> = rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
+            let (bc1, bc2_sqrt) = (1.25f32, 31.64f32);
+            let (mut m_a, mut v_a) = (m0.clone(), v0.clone());
+            let (mut m_b, mut v_b) = (m0, v0);
+            let mut d_a = vec![0f32; n];
+            let mut d_b = vec![0f32; n];
+            adam_span(&mut m_a, &mut v_a, &g, &mut d_a, bc1, bc2_sqrt);
+            adam_span_scalar(&mut m_b, &mut v_b, &g, &mut d_b, bc1, bc2_sqrt);
+            for i in 0..n {
+                assert_eq!(m_a[i].to_bits(), m_b[i].to_bits(), "n={n} m[{i}]");
+                assert_eq!(v_a[i].to_bits(), v_b[i].to_bits(), "n={n} v[{i}]");
+                assert_eq!(d_a[i].to_bits(), d_b[i].to_bits(), "n={n} d[{i}]");
             }
         }
     }

@@ -17,6 +17,13 @@ pub struct HardwareProfile {
     pub cpu_flops: f64,
     /// Fused CPU Adam throughput (parameters / second).
     pub cpu_adam_params_per_s: f64,
+    /// Speedup the multi-threaded fused Adam achieves over one worker —
+    /// i.e. the factor *lost* when a span runs single-threaded.  The
+    /// runtime's `optim::adam_span` drops to one thread below
+    /// `optim::PAR_ADAM_MIN_LEN` elements, so chunked updates with
+    /// sub-threshold chunks pay `cpu_adam_params_per_s / cpu_adam_parallelism`
+    /// (see [`chunk_updater_penalty`]).
+    pub cpu_adam_parallelism: f64,
     /// PCIe effective bandwidth per direction (bytes/s), pinned buffers.
     pub h2d_bytes_per_s: f64,
     pub d2h_bytes_per_s: f64,
@@ -42,6 +49,10 @@ impl HardwareProfile {
             cpu_flops: 0.5e12,
             // 7 B params in 1.92 s.
             cpu_adam_params_per_s: 7e9 / 1.92,
+            // The 1.92 s figure is the fully-threaded fused kernel; a
+            // single worker on the Threadripper runs ~4x slower (memory
+            // bandwidth stops scaling past a few cores).
+            cpu_adam_parallelism: 4.0,
             h2d_bytes_per_s: 15e9,
             d2h_bytes_per_s: 15e9,
             swap_bytes_per_s: 7.5e9,
@@ -58,6 +69,7 @@ impl HardwareProfile {
             gpu_flops: 4e12,
             cpu_flops: 0.15e12,
             cpu_adam_params_per_s: 1.2e9,
+            cpu_adam_parallelism: 2.0,
             h2d_bytes_per_s: 12e9,
             d2h_bytes_per_s: 12e9,
             swap_bytes_per_s: 6e9,
@@ -81,6 +93,23 @@ impl HardwareProfile {
 /// while task counts would explode for paper-scale payloads under small
 /// chunk budgets.
 pub const MAX_DES_CHUNK_TASKS_PER_LAYER: u64 = 64;
+
+/// CPU-updater slowdown factor for sub-layer chunked schedules: the
+/// runtime's `optim::adam_span` runs single-threaded below
+/// [`crate::optim::PAR_ADAM_MIN_LEN`] elements, so a chunk budget under
+/// that threshold forfeits the fused kernel's thread-level speedup and
+/// each chunk's update costs `parallelism`x its share of the whole-span
+/// time.  `chunk_elems = 0` (chunking off) or a budget at/above the
+/// threshold keeps the parallel rate (factor 1).  Keyed off the *same
+/// constant* the runtime dispatch uses, so the sim cannot drift from the
+/// kernel (pinned by `penalty_threshold_matches_runtime_dispatch`).
+pub fn chunk_updater_penalty(chunk_elems: usize, parallelism: f64) -> f64 {
+    if chunk_elems == 0 || chunk_elems >= crate::optim::PAR_ADAM_MIN_LEN {
+        1.0
+    } else {
+        parallelism.max(1.0)
+    }
+}
 
 /// One training workload: model scale + batch + LSP configuration.
 #[derive(Debug, Clone)]
@@ -261,6 +290,11 @@ pub struct Costs {
     pub upd_layer_gpu_native: f64,
     pub fwd_layer_cpu: f64,
     pub bwd_layer_cpu: f64,
+    /// [`chunk_updater_penalty`] for this workload's `link_chunk_elems`:
+    /// multiplies CPU-update durations wherever a schedule actually splits
+    /// the updater into sub-layer chunks (`cch > 1`); 1.0 when chunking is
+    /// off or chunks stay at/above the parallel-dispatch threshold.
+    pub upd_chunk_penalty: f64,
 }
 
 impl Costs {
@@ -301,6 +335,10 @@ impl Costs {
                 / hw.gpu_mem_bytes_per_s,
             fwd_layer_cpu: fwd_flops / hw.cpu_flops,
             bwd_layer_cpu: w.bwd_mult * fwd_flops / hw.cpu_flops,
+            upd_chunk_penalty: chunk_updater_penalty(
+                w.link_chunk_elems,
+                hw.cpu_adam_parallelism,
+            ),
         }
     }
 
@@ -390,10 +428,13 @@ pub fn chunked_tail(offload: f64, upd: f64, upload: f64, n_chunks: u64) -> f64 {
 
 /// Closed-form chunked schedule estimate: [`eq_async_lsp_iter`]'s critical
 /// path with the per-layer pipeline tail shortened by sub-layer chunking
-/// ([`chunked_tail`]).  The steady-state resource bounds (either link, the
-/// CPU updater) are untouched — chunking *overlaps* work across stages, it
-/// does not remove any.  Degenerates EXACTLY to the unchunked forms:
-/// `n_chunks = 1` returns `eq_async_lsp_iter(c, n, rho, staleness)`
+/// ([`chunked_tail`]).  The steady-state link bounds are untouched —
+/// chunking *overlaps* transfers, it does not remove any — but the CPU
+/// updater is priced with [`Costs::upd_chunk_penalty`]: sub-threshold
+/// chunks drop the fused Adam to a single thread
+/// (`optim::PAR_ADAM_MIN_LEN`), inflating both the per-layer tail and the
+/// steady-state updater bound.  Degenerates EXACTLY to the unchunked
+/// forms: `n_chunks = 1` returns `eq_async_lsp_iter(c, n, rho, staleness)`
 /// verbatim (and therefore Eq. 4 at `rho = 0, S = 0`).
 pub fn eq_chunked_iter(c: &Costs, n: usize, rho: f64, staleness: u64, n_chunks: u64) -> f64 {
     if n_chunks <= 1 {
@@ -401,19 +442,15 @@ pub fn eq_chunked_iter(c: &Costs, n: usize, rho: f64, staleness: u64, n_chunks: 
     }
     let nf = n as f64;
     let q = 1.0 - rho.clamp(0.0, 1.0);
-    let tail = chunked_tail(
-        q * c.offload_layer_sub,
-        q * c.upd_layer_cpu_sub,
-        q * c.upload_layer_sub,
-        n_chunks,
-    );
+    let upd = q * c.upd_layer_cpu_sub * c.upd_chunk_penalty;
+    let tail = chunked_tail(q * c.offload_layer_sub, upd, q * c.upload_layer_sub, n_chunks);
     let gpu_path =
         nf * (c.fwd_layer_gpu + c.bwd_layer_gpu + c.compress_layer_gpu + c.apply_layer_gpu);
     let exposed = tail / (staleness as f64 + 1.0);
     (gpu_path + exposed)
         .max(nf * q * c.offload_layer_sub)
         .max(nf * q * c.upload_layer_sub)
-        .max(nf * q * c.upd_layer_cpu_sub)
+        .max(nf * upd)
 }
 
 /// Chunked gated link exposure — EXACTLY the formula the runtime's
@@ -622,6 +659,44 @@ mod tests {
         w.link_chunk_elems = 0;
         assert_eq!(w.layer_chunks(true), 1);
         assert_eq!(w.sub_payload_chunks(), 1);
+    }
+
+    #[test]
+    fn penalty_threshold_matches_runtime_dispatch() {
+        // Sim-vs-runtime agreement: the cost model's single-thread cliff
+        // must sit exactly where `optim::adam_span` drops to one worker.
+        let t = crate::optim::PAR_ADAM_MIN_LEN;
+        assert_eq!(chunk_updater_penalty(t, 4.0), 1.0, "at-threshold chunks stay parallel");
+        assert_eq!(chunk_updater_penalty(t - 1, 4.0), 4.0, "below threshold pays full factor");
+        assert_eq!(chunk_updater_penalty(0, 4.0), 1.0, "chunking off is penalty-free");
+        assert_eq!(chunk_updater_penalty(4096, 0.5), 1.0, "parallelism < 1 clamps to 1");
+        // Both shipped profiles model a real (> 1x) threaded speedup.
+        assert!(HardwareProfile::workstation().cpu_adam_parallelism > 1.0);
+        assert!(HardwareProfile::laptop().cpu_adam_parallelism > 1.0);
+    }
+
+    #[test]
+    fn sub_threshold_chunks_inflate_the_updater_estimate() {
+        let hw = HardwareProfile::workstation();
+        let mut w = Workload::paper(PaperModel::Llama7B, 2048, 2048);
+        w.link_chunk_elems = crate::optim::PAR_ADAM_MIN_LEN; // at threshold
+        let c_ok = Costs::derive(&hw, &w);
+        assert_eq!(c_ok.upd_chunk_penalty, 1.0);
+        w.link_chunk_elems = 4096; // well below threshold
+        let c_pen = Costs::derive(&hw, &w);
+        assert_eq!(c_pen.upd_chunk_penalty, hw.cpu_adam_parallelism);
+        // Same chunk count, different budget regime: the penalized
+        // estimate is never better, and strictly worse once the
+        // single-threaded updater dominates a stage.
+        let n = w.n_layers;
+        let ok = eq_chunked_iter(&c_ok, n, 0.0, 0, 64);
+        let pen = eq_chunked_iter(&c_pen, n, 0.0, 0, 64);
+        assert!(pen > ok, "penalized {pen} vs parallel {ok}");
+        // The n_chunks = 1 degeneracy is untouched by the penalty field.
+        assert_eq!(
+            eq_chunked_iter(&c_pen, n, 0.0, 0, 1).to_bits(),
+            eq_async_lsp_iter(&c_pen, n, 0.0, 0).to_bits()
+        );
     }
 
     #[test]

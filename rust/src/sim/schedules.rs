@@ -272,13 +272,16 @@ fn zero(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, _delayed: bool) {
         } else {
             // Sub-layer chunking: fused Adam per arriving chunk, delta
             // upload pipelining behind it — the chunked runtime semantics.
+            // Sub-threshold chunks run the runtime's Adam single-threaded
+            // (`optim::PAR_ADAM_MIN_LEN`), so each chunk's share carries
+            // the updater penalty.
             for (k, &off) in offloads.iter().enumerate() {
                 let mut deps = vec![off];
                 deps.extend(upd_prev);
                 let upd = sim.add(
                     format!("i{it}.upd.c{k}"),
                     Resource::Cpu,
-                    c.upd_layer_cpu_full / cch as f64,
+                    c.upd_layer_cpu_full * c.upd_chunk_penalty / cch as f64,
                     &deps,
                 );
                 upd_prev = Some(upd);
@@ -487,7 +490,11 @@ fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: boo
             // so the FCFS->LCFS transition interleaves chunks of different
             // layers on the links.
             let cch = w.layer_chunks(compress) as usize;
-            let ups = chunked_layer_tail(sim, it, l, compress_dep, off_t, upd_t, up_t, cch, prio);
+            // A real split (cch > 1) drops the runtime's fused Adam below
+            // its parallel-dispatch threshold: price the updater with the
+            // chunk penalty.  cch == 1 must stay bit-exact unchunked.
+            let upd_eff = if cch > 1 { upd_t * c.upd_chunk_penalty } else { upd_t };
+            let ups = chunked_layer_tail(sim, it, l, compress_dep, off_t, upd_eff, up_t, cch, prio);
             let apply_cost = if compress { c.apply_layer_gpu } else { c.apply_layer_full_gpu };
             // Apply on GPU; low priority so it never preempts fwd/bwd order
             // but must finish before next iteration's fwd of this layer.
@@ -551,7 +558,10 @@ fn layerwise_async(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
                 // staleness gate still waits on the whole layer's last
                 // chunk.
                 let cch = w.layer_chunks(true) as usize;
-                let ups = chunked_layer_tail(sim, it, l, cmp, off_t, upd_t, up_t, cch, depth);
+                // Same updater penalty as the synchronous builder: a real
+                // split runs each chunk's Adam single-threaded.
+                let upd_eff = if cch > 1 { upd_t * c.upd_chunk_penalty } else { upd_t };
+                let ups = chunked_layer_tail(sim, it, l, cmp, off_t, upd_eff, up_t, cch, depth);
                 let apply = sim.add_prio(
                     format!("i{it}.apply{l}"),
                     Resource::Gpu,
@@ -677,7 +687,13 @@ mod tests {
     /// the same direction the virtual-clock runtime measures.
     #[test]
     fn chunked_schedules_never_slower_and_zero_strictly_improves() {
-        let (hw, w) = setup();
+        let (mut hw, w) = setup();
+        // Pin the pure pipelining effect: with no thread-level Adam speedup
+        // to forfeit (`cpu_adam_parallelism = 1`), sub-threshold chunks pay
+        // no updater penalty and chunking can only overlap work.  The
+        // penalty direction under real hardware is pinned separately by
+        // `sub_threshold_chunks_slow_zero_on_real_hw`.
+        hw.cpu_adam_parallelism = 1.0;
         let run = |k: ScheduleKind, chunk: usize| {
             let mut wc = w.clone();
             wc.link_chunk_elems = chunk;
@@ -710,6 +726,37 @@ mod tests {
         let l_whole = run(ScheduleKind::LspLayerwise, 0);
         let l_one = run(ScheduleKind::LspLayerwise, 16_777_216);
         assert_eq!(l_one.to_bits(), l_whole.to_bits(), "cch == 1 must be the unchunked DES");
+    }
+
+    /// DES side of the chunked-updater cost fix: under the *real*
+    /// workstation profile (threaded Adam ~4x a single core), a 4096-elem
+    /// chunk budget drops every chunk below `optim::PAR_ADAM_MIN_LEN`, so
+    /// the updater runs single-threaded and Zero's chunked schedule gets
+    /// slower than the same schedule at an at-threshold budget — the
+    /// direction the virtual-clock runtime measures.  At-threshold chunks
+    /// (65536) keep the parallel rate and still beat the whole-layer
+    /// schedule.
+    #[test]
+    fn sub_threshold_chunks_slow_zero_on_real_hw() {
+        let (hw, w) = setup();
+        assert!(hw.cpu_adam_parallelism > 1.0, "test needs a real threaded speedup");
+        let run = |chunk: usize| {
+            let mut wc = w.clone();
+            wc.link_chunk_elems = chunk;
+            build_schedule(ScheduleKind::Zero, &hw, &wc, 4).unwrap().iter_time
+        };
+        let whole = run(0);
+        let at_threshold = run(crate::optim::PAR_ADAM_MIN_LEN);
+        let sub_threshold = run(4096);
+        assert!(
+            at_threshold <= whole * 1.01,
+            "at-threshold chunking must not regress: {at_threshold} vs {whole}"
+        );
+        assert!(
+            sub_threshold > at_threshold * 1.05,
+            "sub-threshold chunks must pay the single-thread Adam penalty: \
+             {sub_threshold} vs {at_threshold}"
+        );
     }
 
     #[test]

@@ -12,6 +12,39 @@
 //! tests assert blocked == reference to within 1e-4 relative Frobenius
 //! error across randomized shapes and configs.
 //!
+//! ## SIMD dispatch and the tolerance contract
+//!
+//! Since the §Perf tentpole, every full-width (`w == NR`) register tile
+//! first offers itself to the AVX2+FMA micro-kernels in `tensor::simd`;
+//! the scalar micro-kernels below remain the always-compiled fallback
+//! (non-x86-64, CPUs without AVX2/FMA, or `LSP_FORCE_SCALAR=1`).  For
+//! `k >= pack_min_k` the NN kernel additionally routes through
+//! `tensor::pack`, which streams contiguous `kb x MR` / `kb x NR` panels.
+//!
+//! The resulting **tolerance contract**, pinned by the property tests:
+//!
+//! * Blocked (scalar or SIMD, packed or not) vs. the naive `_ref` oracles:
+//!   equal to within **1e-4 relative Frobenius** error.  Three rounding
+//!   regimes coexist — the oracles' single running sum, the scalar micros'
+//!   blocked mul+add chains (`dot_lanes`' 8 independent accumulators in the
+//!   NT kernel), and the SIMD micros' FMA chains, which contract mul+add
+//!   into one rounding per depth step.  FMA also rounds *differently on
+//!   denormal/NaN-adjacent inputs* (no intermediate flush of the product),
+//!   which is why the oracles compare with a relative tolerance rather
+//!   than bit equality — see `ops::nt_ref_zero_skip_keeps_exact_semantics`
+//!   for the one place (`matmul_nt_ref`'s zero-skip) where exactness *is*
+//!   asserted, and `ops::nt_ref_zero_skip_nan_denormal_audit` for the
+//!   NaN/denormal corners of that skip.
+//! * Across worker splits (`threads`): **bit-for-bit identical**, in every
+//!   regime.  The M split only regroups rows; per-row arithmetic is
+//!   h-agnostic in both the scalar and SIMD micros, SIMD is gated on the
+//!   thread-independent `w == NR` j-grid, and the pack decision depends
+//!   only on `(k, cfg)`.
+//! * Packed vs. un-packed, same process configuration: **bit-for-bit
+//!   identical** — the packed sweep preserves each output element's
+//!   accumulation order exactly (panel edges use the scalar edge micro in
+//!   both paths).
+//!
 //! `KernelConfig` is the knob surface: it is parsed by `config/`
 //! (`--kernel-threads`, `kernel_block_*`) and negotiated *per trainer
 //! instance* by the coordinator (`PipelineCtx::new` reserves the
@@ -24,7 +57,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-use super::pool;
+use super::{pack, pool, simd};
 
 /// Rows of C per register tile.
 pub const MR: usize = 4;
@@ -43,11 +76,14 @@ pub struct KernelConfig {
     pub block_n: usize,
     /// Depth (K) per cache block.
     pub block_k: usize,
+    /// Minimum K at which `gemm_nn` routes through the panel-packing path
+    /// (`tensor::pack`). `0` disables packing entirely.
+    pub pack_min_k: usize,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        KernelConfig { threads: 0, block_m: 32, block_n: 256, block_k: 256 }
+        KernelConfig { threads: 0, block_m: 32, block_n: 256, block_k: 256, pack_min_k: 2048 }
     }
 }
 
@@ -86,6 +122,9 @@ static G_THREADS: AtomicUsize = AtomicUsize::new(0);
 static G_BLOCK_M: AtomicUsize = AtomicUsize::new(0);
 static G_BLOCK_N: AtomicUsize = AtomicUsize::new(0);
 static G_BLOCK_K: AtomicUsize = AtomicUsize::new(0);
+// pack_min_k legitimately takes the value 0 ("disabled"), so the slot
+// stores `pack_min_k + 1` and keeps raw 0 as the "unset" sentinel.
+static G_PACK_MIN_K: AtomicUsize = AtomicUsize::new(0);
 
 /// Install `cfg` as the process-wide kernel configuration.
 pub fn install(cfg: KernelConfig) {
@@ -93,6 +132,7 @@ pub fn install(cfg: KernelConfig) {
     G_BLOCK_M.store(cfg.block_m, Ordering::Relaxed);
     G_BLOCK_N.store(cfg.block_n, Ordering::Relaxed);
     G_BLOCK_K.store(cfg.block_k, Ordering::Relaxed);
+    G_PACK_MIN_K.store(cfg.pack_min_k + 1, Ordering::Relaxed);
 }
 
 /// The process-wide kernel configuration (defaults where unset).
@@ -104,6 +144,10 @@ pub fn current() -> KernelConfig {
         block_m: or(G_BLOCK_M.load(Ordering::Relaxed), d.block_m),
         block_n: or(G_BLOCK_N.load(Ordering::Relaxed), d.block_n),
         block_k: or(G_BLOCK_K.load(Ordering::Relaxed), d.block_k),
+        pack_min_k: match G_PACK_MIN_K.load(Ordering::Relaxed) {
+            0 => d.pack_min_k,
+            v => v - 1,
+        },
     }
 }
 
@@ -115,6 +159,13 @@ pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    // Deep-K shapes stream packed panels instead of strided rows. The
+    // decision depends only on (k, cfg), never on the worker split, so the
+    // threads-bit-identity invariant is preserved.
+    if cfg.pack_min_k > 0 && k >= cfg.pack_min_k {
+        pack::gemm_nn_packed(a, b, c, m, k, n, cfg);
         return;
     }
     let min_rows = cfg.block_m.max(MR);
@@ -150,7 +201,12 @@ fn gemm_nn_rows(
                     let a_sub = &a[i * k + l0..];
                     let b_sub = &b[l0 * n + j..];
                     let c_sub = &mut c[(i - r0) * n + j..];
-                    if h == MR && w == NR {
+                    // SIMD only on full-width tiles: the w grid is derived
+                    // from (n, cfg) and thus identical for every worker, so
+                    // the dispatch cannot vary with the thread split.
+                    if w == NR && simd::micro_nn(a_sub, k, b_sub, n, c_sub, n, kb, h) {
+                        // handled by the AVX2 tile
+                    } else if h == MR && w == NR {
                         micro_nn_full(a_sub, k, b_sub, n, c_sub, n, kb);
                     } else {
                         micro_nn_edge(a_sub, k, b_sub, n, c_sub, n, kb, h, w);
@@ -265,7 +321,11 @@ fn gemm_tn_rows(
                     let a_sub = &a[l0 * m + i..];
                     let b_sub = &b[l0 * n + j..];
                     let c_sub = &mut c[(i - r0) * n + j..];
-                    micro_tn(a_sub, m, b_sub, n, c_sub, n, kb, h, w);
+                    if w == NR && simd::micro_tn(a_sub, m, b_sub, n, c_sub, n, kb, h) {
+                        // handled by the AVX2 tile
+                    } else {
+                        micro_tn(a_sub, m, b_sub, n, c_sub, n, kb, h, w);
+                    }
                     j += w;
                 }
                 i += h;
@@ -343,7 +403,7 @@ pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
                 let crow = &mut cblock[(i - r0) * n..(i - r0 + 1) * n];
                 for j in j0..j0 + nb {
                     let brow = &b[j * k..(j + 1) * k];
-                    crow[j] += dot_lanes(arow, brow);
+                    crow[j] += simd::dot(arow, brow);
                 }
             }
             j0 += nb;
@@ -388,6 +448,7 @@ mod tests {
         assert!(d.block_m >= MR);
         assert_eq!(d.block_n % NR, 0, "block_n aligned to the register tile");
         assert!(d.block_k >= 8);
+        assert_eq!(d.pack_min_k, 2048, "packing defaults to the deep-K regime");
         assert_eq!(KernelConfig::single_threaded().threads, 1);
         assert_eq!(KernelConfig::single_threaded().resolved_threads(), 1);
         // Negotiation never starves the kernels.
@@ -422,6 +483,15 @@ mod tests {
             gemm_nn(&a, &b, &mut c_one, m, k, n, &c1);
             gemm_nn(&a, &b, &mut c_many, m, k, n, &cn);
             assert_eq!(c_one, c_many, "nn threads={threads}");
+            // The packed path must uphold the same invariant (pack_min_k=1
+            // forces it at this small k).
+            let p1 = KernelConfig { pack_min_k: 1, ..c1 };
+            let pn = KernelConfig { pack_min_k: 1, ..cn };
+            let mut p_one = vec![0f32; m * n];
+            let mut p_many = vec![0f32; m * n];
+            gemm_nn(&a, &b, &mut p_one, m, k, n, &p1);
+            gemm_nn(&a, &b, &mut p_many, m, k, n, &pn);
+            assert_eq!(p_one, p_many, "nn packed threads={threads}");
             let mut t_one = vec![0f32; m * n];
             let mut t_many = vec![0f32; m * n];
             gemm_tn(&at, &b, &mut t_one, k, m, n, &c1);

@@ -16,7 +16,9 @@ use crate::util::rng::Rng;
 
 pub mod kernel;
 pub mod ops;
+pub mod pack;
 pub mod pool;
+pub mod simd;
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, PartialEq)]

@@ -284,6 +284,9 @@ mod tests {
                     block_m: 1 + r.below(24),
                     block_n: 1 + r.below(48),
                     block_k: 1 + r.below(48),
+                    // 1 forces the packed path even at these small k, so
+                    // the property pins packed, un-packed and disabled.
+                    pack_min_k: [0, 1, 64][r.below(3)],
                 };
                 (
                     rand_mat(r, m, k), // A
@@ -332,6 +335,45 @@ mod tests {
         assert!(close_rel_frob(&fast, &slow, 1e-4).is_ok());
         for j in 0..13 {
             assert_eq!(slow.at2(2, j), 0.0, "zero-skipped row stays zero");
+        }
+    }
+
+    #[test]
+    fn nt_ref_zero_skip_nan_denormal_audit() {
+        // Satellite audit for the SIMD refactor: the oracle's zero-skip
+        // divergence on non-finite inputs and its exact-zero test must hold
+        // under both the scalar and the FMA dot path (see the tolerance
+        // contract in `tensor/kernel.rs` module docs).
+        let mut r = Rng::new(51);
+        let (k, n) = (21, 9);
+        let mut a = rand_mat(&mut r, 4, k);
+        for v in a.data_mut()[0..k].iter_mut() {
+            *v = 0.0; // row 0: exact zeros -> skipped by the oracle
+        }
+        let denormal = f32::from_bits(1000); // ~1.4e-42, subnormal
+        for v in a.data_mut()[k..2 * k].iter_mut() {
+            *v = denormal; // row 1: subnormal, must NOT be skipped
+        }
+        let mut b = rand_mat(&mut r, n, k);
+        b.data_mut()[0] = f32::NAN; // B row 0, element 0
+        let fast = matmul_nt(&a, &b).unwrap();
+        let slow = matmul_nt_ref(&a, &b).unwrap();
+        // Zero-skip: the oracle never reads B for an all-zero A row, so the
+        // NaN cannot propagate there — the documented divergence.
+        for j in 0..n {
+            assert_eq!(slow.at2(0, j), 0.0, "oracle zero-skip row");
+        }
+        // The kernel computes 0.0 * NaN = NaN (mul+add and FMA agree).
+        assert!(fast.at2(0, 0).is_nan(), "kernel propagates NaN");
+        // Subnormal rows are computed by both paths (the skip tests exact
+        // zero, not "tiny").  NaN still propagates through both dot forms;
+        // finite products ~1e-42 are representable subnormals, where FMA's
+        // fused rounding and scalar mul+add agree to well under 1e-38.
+        assert!(slow.at2(1, 0).is_nan() && fast.at2(1, 0).is_nan());
+        for j in 1..n {
+            let (f, s) = (fast.at2(1, j), slow.at2(1, j));
+            assert!(f.is_finite() && s.is_finite(), "j={j}");
+            assert!((f - s).abs() < 1e-38, "j={j}: {f} vs {s}");
         }
     }
 

@@ -1,0 +1,245 @@
+//! Panel packing for the deep-K GEMM-NN path (§Perf tentpole, part b).
+//!
+//! At `k >= KernelConfig::pack_min_k` the strided row reads of the plain
+//! blocked kernel stop fitting the TLB/cache nicely: each depth step of the
+//! register tile touches `MR` cache lines `4k` bytes apart in A, and the
+//! B K-block spans `block_k` full rows of the matrix.  This module
+//! repacks each K-block once into contiguous panels — A as `kb x MR`
+//! column-fragments (`ap[l * MR + r]`), B as `kb x NR` row-fragments
+//! (`bp[l * NR + jj]`) — so the micro-kernel streams both operands
+//! sequentially.  Pack buffers come from a process-wide `BufPool`, so
+//! steady state packs into recycled storage and allocates nothing.
+//!
+//! **Bit-identity contract** (pinned by `packed_matches_unpacked_bitwise`
+//! and the kernel thread-identity test): for every output element the
+//! packed sweep performs *exactly* the ops of the un-packed kernel in the
+//! same order — same `block_k` depth grid, same ascending-`l` accumulation,
+//! one C-add per K-block, SIMD on full-width (`w == NR`) tiles only and
+//! the scalar edge micro (same op order as `kernel::micro_nn_edge`)
+//! elsewhere.  The un-packed kernel's `block_n` loop only regroups disjoint
+//! columns, so dropping it here (each A panel sweeps all N panels) changes
+//! nothing per element.  Hence packed vs. un-packed — and any worker split
+//! of either — agree bit-for-bit, and `gemm_nn` can flip between the paths
+//! on a pure `(k, cfg)` predicate without observable effect beyond speed.
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+use crate::util::bufpool::BufPool;
+
+use super::kernel::{KernelConfig, MR, NR};
+use super::{pool, simd};
+
+/// Process-wide pool for pack scratch. Panel sizes are a pure function of
+/// the GEMM shape and `block_k`, so the exact-length shelves converge after
+/// one pass per shape.
+fn pack_pool() -> &'static BufPool {
+    static POOL: OnceLock<BufPool> = OnceLock::new();
+    POOL.get_or_init(BufPool::new)
+}
+
+/// `C += A @ B` via packed panels. Entered from `kernel::gemm_nn` when
+/// `k >= cfg.pack_min_k`; same contract as the un-packed kernel (and
+/// bit-identical results — see module docs).
+pub fn gemm_nn_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: &KernelConfig,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let bk = cfg.block_k.max(8);
+    let n_panels = n.div_ceil(NR);
+    let min_rows = cfg.block_m.max(MR);
+    let pool_handle = pack_pool();
+    let mut l0 = 0;
+    while l0 < k {
+        let kb = bk.min(k - l0);
+        // Pack this B K-block once, before the fan-out; workers share it
+        // read-only.
+        let mut bp = pool_handle.take_raw(n_panels * kb * NR);
+        pack_b(&b[l0 * n..], n, kb, n_panels, &mut bp);
+        pool::par_row_blocks(cfg.resolved_threads(), m, n, min_rows, c, |rows, cblock| {
+            let row_panels = (rows.end - rows.start).div_ceil(MR);
+            let mut ap = pack_pool().take_raw(row_panels * MR * kb);
+            pack_a(a, k, rows.clone(), l0, kb, &mut ap);
+            for rp in 0..row_panels {
+                let i = rows.start + rp * MR;
+                let h = MR.min(rows.end - i);
+                let a_panel = &ap[rp * MR * kb..(rp + 1) * MR * kb];
+                for p in 0..n_panels {
+                    let j = p * NR;
+                    let w = NR.min(n - j);
+                    let b_panel = &bp[p * kb * NR..(p + 1) * kb * NR];
+                    let c_sub = &mut cblock[(i - rows.start) * n + j..];
+                    // SIMD on full-width tiles only, mirroring the
+                    // un-packed dispatch (bit-identity contract).
+                    if w == NR && simd::micro_packed(a_panel, b_panel, c_sub, n, kb, h, w) {
+                        // handled by the AVX2 tile
+                    } else {
+                        micro_packed_scalar(a_panel, b_panel, c_sub, n, kb, h, w);
+                    }
+                }
+            }
+        });
+        l0 += kb;
+    }
+}
+
+/// Pack B rows `l0..l0+kb` (caller passes `&b[l0*n..]`) into `n_panels`
+/// contiguous `kb x NR` panels, zero-padding columns past `n`.  Every slot
+/// is written — recycled pool buffers hold arbitrary previous contents.
+fn pack_b(b: &[f32], n: usize, kb: usize, n_panels: usize, dst: &mut [f32]) {
+    debug_assert!(dst.len() == n_panels * kb * NR);
+    for p in 0..n_panels {
+        let j = p * NR;
+        let w = NR.min(n - j);
+        let panel = &mut dst[p * kb * NR..(p + 1) * kb * NR];
+        for l in 0..kb {
+            let row = &mut panel[l * NR..(l + 1) * NR];
+            row[..w].copy_from_slice(&b[l * n + j..l * n + j + w]);
+            row[w..].fill(0.0);
+        }
+    }
+}
+
+/// Pack A rows `rows` over depth `l0..l0+kb` into `kb x MR` panels
+/// (`panel[l * MR + r]`), zero-padding rows past `rows.end`.  Every slot is
+/// written — recycled pool buffers hold arbitrary previous contents.
+fn pack_a(a: &[f32], k: usize, rows: Range<usize>, l0: usize, kb: usize, dst: &mut [f32]) {
+    let row_panels = (rows.end - rows.start).div_ceil(MR);
+    debug_assert!(dst.len() == row_panels * MR * kb);
+    for rp in 0..row_panels {
+        let i0 = rows.start + rp * MR;
+        let h = MR.min(rows.end - i0);
+        let panel = &mut dst[rp * MR * kb..(rp + 1) * MR * kb];
+        for r in 0..h {
+            let arow = &a[(i0 + r) * k + l0..(i0 + r) * k + l0 + kb];
+            for (l, &av) in arow.iter().enumerate() {
+                panel[l * MR + r] = av;
+            }
+        }
+        for r in h..MR {
+            for l in 0..kb {
+                panel[l * MR + r] = 0.0;
+            }
+        }
+    }
+}
+
+/// Scalar packed tile — op-for-op the same accumulation as
+/// `kernel::micro_nn_edge` (ascending `l`, then rows, then columns), just
+/// reading from panels. Keep it that way: the bit-identity contract in the
+/// module docs depends on it.
+fn micro_packed_scalar(
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    kb: usize,
+    h: usize,
+    w: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..kb {
+        let brow = &bp[l * NR..l * NR + w];
+        let afrag = &ap[l * MR..l * MR + h];
+        for (i, &av) in afrag.iter().enumerate() {
+            for (x, &bv) in acc[i][..w].iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for i in 0..h {
+        for (cv, &x) in c[i * ldc..i * ldc + w].iter_mut().zip(&acc[i][..w]) {
+            *cv += x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernel::{gemm_nn, KernelConfig};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn run(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, cfg: &KernelConfig) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        gemm_nn(a, b, &mut c, m, k, n, cfg);
+        c
+    }
+
+    #[test]
+    fn packed_matches_unpacked_bitwise() {
+        let mut rng = Rng::new(41);
+        // Shapes exercising every edge: m % MR, n % NR, k % block_k, tiny
+        // dims smaller than one tile, and multi-K-block depths.
+        for &(m, k, n) in
+            &[(1, 9, 1), (3, 17, 15), (4, 40, 16), (37, 65, 41), (8, 96, 33), (13, 130, 16)]
+        {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            for threads in [1usize, 3] {
+                let base = KernelConfig {
+                    threads,
+                    block_m: 8,
+                    block_n: 32,
+                    block_k: 32,
+                    pack_min_k: 0,
+                };
+                let packed = KernelConfig { pack_min_k: 1, ..base };
+                assert_eq!(
+                    run(&a, &b, m, k, n, &base),
+                    run(&a, &b, m, k, n, &packed),
+                    "m={m} k={k} n={n} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recycled_pack_buffers_are_fully_overwritten() {
+        // Two different shapes that map to the same panel-buffer length:
+        // a stale recycled buffer must not leak into the result (padding is
+        // rewritten every pack).
+        let mut rng = Rng::new(43);
+        let cfg = KernelConfig { threads: 1, pack_min_k: 1, ..KernelConfig::default() };
+        let (m, k) = (5, 24);
+        for &n in &[15usize, 16, 15, 9, 15] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let unpacked = run(&a, &b, m, k, n, &KernelConfig { pack_min_k: 0, ..cfg });
+            let packed = run(&a, &b, m, k, n, &cfg);
+            assert_eq!(unpacked, packed, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pack_b_pads_and_pack_a_pads() {
+        let n = 5; // one panel, 11 padded columns
+        let kb = 3;
+        let b: Vec<f32> = (0..kb * n).map(|x| x as f32 + 1.0).collect();
+        let mut bp = vec![f32::NAN; kb * NR];
+        pack_b(&b, n, kb, 1, &mut bp);
+        for l in 0..kb {
+            assert_eq!(&bp[l * NR..l * NR + n], &b[l * n..(l + 1) * n]);
+            assert!(bp[l * NR + n..(l + 1) * NR].iter().all(|&x| x == 0.0));
+        }
+
+        let (m, k) = (3, 4); // one panel, one padded row
+        let a: Vec<f32> = (0..m * k).map(|x| x as f32 + 1.0).collect();
+        let mut ap = vec![f32::NAN; MR * k];
+        pack_a(&a, k, 0..m, 0, k, &mut ap);
+        for l in 0..k {
+            for r in 0..m {
+                assert_eq!(ap[l * MR + r], a[r * k + l]);
+            }
+            assert_eq!(ap[l * MR + m], 0.0, "padded row must be zeroed");
+        }
+    }
+}

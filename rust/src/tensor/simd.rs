@@ -1,0 +1,628 @@
+//! Explicit-SIMD micro-kernels behind runtime feature detection — the
+//! §Perf tentpole.
+//!
+//! Everything `std::arch` lives in this one module: the x86-64 AVX2+FMA
+//! register tiles used under [`super::kernel`]'s blocked GEMMs (and the
+//! packed variants in [`super::pack`]), the FMA-free fused-Adam span used
+//! by `optim::adam_span`, and the bf16 wire-codec conversion loops used by
+//! `codec::bf16`.  Every entry point is a safe wrapper that re-checks
+//! [`avx2_active`] and reports whether it ran, so callers keep their scalar
+//! bodies as the always-available fallback — on non-x86-64 targets the
+//! wrappers compile to "did nothing" and the scalar paths are the only
+//! paths.
+//!
+//! Dispatch policy (also documented in `tensor/kernel.rs` module docs):
+//!
+//! * **GEMM tiles** (`micro_nn` / `micro_tn` / `micro_packed` / `dot`) use
+//!   FMA, which contracts the scalar `mul` + `add` rounding steps into one.
+//!   Results therefore differ from the scalar micro-kernels in low-order
+//!   bits; the property tests compare both against the naive oracles with
+//!   the repo-wide 1e-4 relative Frobenius tolerance.  Within ONE process
+//!   configuration the dispatch is deterministic and per-output-row
+//!   arithmetic never depends on the worker split, so thread counts still
+//!   never change results bit-for-bit.
+//! * **Fused Adam** (`adam_span_prefix`) is deliberately FMA-free: the
+//!   vector body uses only correctly-rounded IEEE elementwise ops
+//!   (mul/add/sqrt/div), so every lane is bit-identical to the scalar loop
+//!   and the parallel/chunked bit-identity invariants of `optim` survive
+//!   the SIMD dispatch unchanged.
+//! * **bf16 encode/decode** uses integer lane ops that replicate the scalar
+//!   round-to-nearest-even bit arithmetic exactly — byte-identical wires.
+//!
+//! `LSP_FORCE_SCALAR=1` (env, read once) or [`set_force_scalar`] (bench
+//! hook) disable the SIMD paths at runtime so the scalar fallback stays
+//! exercised on every machine (`scripts/check.sh` runs a forced-scalar test
+//! lane).  Unit tests never toggle the flag — the flag is process-global
+//! and the parity tests instead compare the SIMD wrappers directly against
+//! the scalar bodies, which is race-free.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::bufpool::PooledBytes;
+
+use super::kernel::{dot_lanes, MR, NR};
+
+/// Bench/tune hook: force the scalar fallbacks even when AVX2+FMA is
+/// available.  The `LSP_FORCE_SCALAR=1` environment variable (read once)
+/// has the same effect and cannot be un-forced by this call.
+pub fn set_force_scalar(force: bool) {
+    FORCE_SCALAR.store(force, Ordering::Relaxed);
+}
+
+/// True when the AVX2+FMA paths are compiled in, the CPU reports both
+/// features, and neither `LSP_FORCE_SCALAR=1` nor [`set_force_scalar`]
+/// disabled them.
+pub fn avx2_active() -> bool {
+    detected() && !env_force_scalar() && !FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// The dispatch label benches and the tuner record next to their numbers.
+pub fn active_impl_name() -> &'static str {
+    if avx2_active() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+fn env_force_scalar() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("LSP_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false))
+}
+
+fn detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static DET: OnceLock<bool> = OnceLock::new();
+        *DET.get_or_init(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    false
+}
+
+/// Coefficients for one fused-Adam span, passed by value so the SIMD body
+/// and the scalar loop are guaranteed to splat identical constants.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamCoefs {
+    pub beta1: f32,
+    pub om_b1: f32,
+    pub beta2: f32,
+    pub om_b2: f32,
+    pub eps: f32,
+    pub bc1: f32,
+    pub bc2_sqrt: f32,
+}
+
+// ---- safe wrappers ------------------------------------------------------
+
+/// AVX2 `h x NR` GEMM-NN tile (`w == NR` only — column edges stay scalar so
+/// the j-grid arithmetic is identical for every worker split).  Returns
+/// `false` when the SIMD path is unavailable; the caller must then run the
+/// scalar micro-kernel.
+#[allow(clippy::too_many_arguments)]
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn micro_nn(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    kb: usize,
+    h: usize,
+) -> bool {
+    debug_assert!(h >= 1 && h <= MR && kb >= 1);
+    debug_assert!((h - 1) * lda + kb <= a.len());
+    debug_assert!((kb - 1) * ldb + NR <= b.len());
+    debug_assert!((h - 1) * ldc + NR <= c.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() {
+        // SAFETY: extents checked above; feature presence checked by
+        // avx2_active().
+        unsafe { x86::micro_nn_avx2(a, lda, b, ldb, c, ldc, kb, h) };
+        return true;
+    }
+    false
+}
+
+/// AVX2 `h x NR` GEMM-TN tile (`a` starts at A[l0][i], row stride `lda`, so
+/// the `h` A-values per depth step are contiguous).  `w == NR` only, as in
+/// [`micro_nn`].
+#[allow(clippy::too_many_arguments)]
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn micro_tn(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    kb: usize,
+    h: usize,
+) -> bool {
+    debug_assert!(h >= 1 && h <= MR && kb >= 1);
+    debug_assert!((kb - 1) * lda + h <= a.len());
+    debug_assert!((kb - 1) * ldb + NR <= b.len());
+    debug_assert!((h - 1) * ldc + NR <= c.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() {
+        // SAFETY: extents checked above; feature presence checked by
+        // avx2_active().
+        unsafe { x86::micro_tn_avx2(a, lda, b, ldb, c, ldc, kb, h) };
+        return true;
+    }
+    false
+}
+
+/// AVX2 tile over *packed* panels (`ap`: `kb x MR` A panel, `bp`: `kb x NR`
+/// B panel, both zero-padded — see `tensor::pack`).  Handles `w < NR`
+/// column edges itself: the padded lanes are computed and discarded, which
+/// is safe because the pack step zeroed them.
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn micro_packed(
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    kb: usize,
+    h: usize,
+    w: usize,
+) -> bool {
+    debug_assert!(h >= 1 && h <= MR && w >= 1 && w <= NR && kb >= 1);
+    debug_assert!(kb * MR <= ap.len());
+    debug_assert!(kb * NR <= bp.len());
+    debug_assert!((h - 1) * ldc + w <= c.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() {
+        // SAFETY: extents checked above; feature presence checked by
+        // avx2_active().
+        unsafe { x86::micro_packed_avx2(ap, bp, c, ldc, kb, h, w) };
+        return true;
+    }
+    false
+}
+
+/// Dot product: AVX2+FMA two-accumulator body when active, otherwise the
+/// scalar [`dot_lanes`].  Per-(i,j) arithmetic, so worker splits never see
+/// a mixed path within one call site's configuration.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() {
+        // SAFETY: equal lengths checked; feature presence checked.
+        return unsafe { x86::dot_avx2(x, y) };
+    }
+    dot_lanes(x, y)
+}
+
+/// Run the fused-Adam body over the largest 8-aligned prefix of the span,
+/// returning how many elements were processed (0 when SIMD is inactive —
+/// the caller's scalar loop then covers everything).  FMA-free: bitwise
+/// identical to the scalar body, so the prefix boundary is unobservable.
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn adam_span_prefix(
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    d: &mut [f32],
+    coefs: AdamCoefs,
+) -> usize {
+    debug_assert!(g.len() == m.len() && g.len() == v.len() && g.len() == d.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() && g.len() >= 8 {
+        // SAFETY: equal lengths checked; feature presence checked.
+        return unsafe { x86::adam_span_avx2(g, m, v, d, coefs) };
+    }
+    0
+}
+
+/// Encode the largest 8-aligned prefix of `src` as little-endian bf16 pairs
+/// appended to `dst`, returning elements consumed (0 when inactive).  The
+/// integer lane ops replicate `codec::bf16::f32_to_bf16_bits` exactly
+/// (round-to-nearest-even, NaN quieting included) — byte-identical wires.
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn bf16_encode_prefix(src: &[f32], dst: &mut PooledBytes) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() && src.len() >= 8 {
+        // SAFETY: feature presence checked; writes go through the safe
+        // append API.
+        return unsafe { x86::bf16_encode_avx2(src, dst) };
+    }
+    0
+}
+
+/// Decode the largest 8-aligned prefix of a bf16 wire payload into `dst`,
+/// returning elements produced (0 when inactive).  Bit-exact (a bf16
+/// decode is a 16-bit shift).  `src.len()` must equal `dst.len() * 2`.
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn bf16_decode_prefix(src: &[u8], dst: &mut [f32]) -> usize {
+    debug_assert_eq!(src.len(), dst.len() * 2);
+    #[cfg(target_arch = "x86_64")]
+    if avx2_active() && dst.len() >= 8 {
+        // SAFETY: length relation checked; feature presence checked.
+        return unsafe { x86::bf16_decode_avx2(src, dst) };
+    }
+    0
+}
+
+// ---- x86-64 bodies ------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use crate::util::bufpool::PooledBytes;
+
+    use super::super::kernel::{MR, NR};
+    use super::AdamCoefs;
+
+    /// SAFETY: caller checked AVX2+FMA and the slice extents (see the
+    /// wrapper's debug asserts — `a[(h-1)*lda + kb - 1]`,
+    /// `b[(kb-1)*ldb + NR - 1]` and `c[(h-1)*ldc + NR - 1]` must exist).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn micro_nn_avx2(
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        c: &mut [f32],
+        ldc: usize,
+        kb: usize,
+        h: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for l in 0..kb {
+            let brow = bp.add(l * ldb);
+            let b0 = _mm256_loadu_ps(brow);
+            let b1 = _mm256_loadu_ps(brow.add(8));
+            // The i-loop body depends only on i, so per-row results are
+            // identical for every h — h-edge tiles (worker-split dependent)
+            // cannot diverge from full tiles.
+            for (i, lane) in acc.iter_mut().take(h).enumerate() {
+                let av = _mm256_set1_ps(*ap.add(i * lda + l));
+                lane[0] = _mm256_fmadd_ps(av, b0, lane[0]);
+                lane[1] = _mm256_fmadd_ps(av, b1, lane[1]);
+            }
+        }
+        store_tiles(&acc, c, ldc, h);
+    }
+
+    /// SAFETY: as `micro_nn_avx2`, with `a[(kb-1)*lda + h - 1]` the A
+    /// extent (contiguous row fragments of A = column fragments of A^T).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn micro_tn_avx2(
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        c: &mut [f32],
+        ldc: usize,
+        kb: usize,
+        h: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for l in 0..kb {
+            let brow = bp.add(l * ldb);
+            let b0 = _mm256_loadu_ps(brow);
+            let b1 = _mm256_loadu_ps(brow.add(8));
+            let afrag = ap.add(l * lda);
+            for (i, lane) in acc.iter_mut().take(h).enumerate() {
+                let av = _mm256_set1_ps(*afrag.add(i));
+                lane[0] = _mm256_fmadd_ps(av, b0, lane[0]);
+                lane[1] = _mm256_fmadd_ps(av, b1, lane[1]);
+            }
+        }
+        store_tiles(&acc, c, ldc, h);
+    }
+
+    /// SAFETY: caller checked AVX2+FMA, `ap.len() >= kb * MR`,
+    /// `bp.len() >= kb * NR` and the C extent.  Padded lanes (`w < NR`) are
+    /// computed against the pack step's zeros and never stored.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn micro_packed_avx2(
+        ap: &[f32],
+        bp: &[f32],
+        c: &mut [f32],
+        ldc: usize,
+        kb: usize,
+        h: usize,
+        w: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        let app = ap.as_ptr();
+        let bpp = bp.as_ptr();
+        for l in 0..kb {
+            let brow = bpp.add(l * NR);
+            let b0 = _mm256_loadu_ps(brow);
+            let b1 = _mm256_loadu_ps(brow.add(8));
+            let afrag = app.add(l * MR);
+            for (i, lane) in acc.iter_mut().take(h).enumerate() {
+                let av = _mm256_set1_ps(*afrag.add(i));
+                lane[0] = _mm256_fmadd_ps(av, b0, lane[0]);
+                lane[1] = _mm256_fmadd_ps(av, b1, lane[1]);
+            }
+        }
+        if w == NR {
+            store_tiles(&acc, c, ldc, h);
+        } else {
+            let mut tmp = [0f32; NR];
+            for (i, lane) in acc.iter().take(h).enumerate() {
+                _mm256_storeu_ps(tmp.as_mut_ptr(), lane[0]);
+                _mm256_storeu_ps(tmp.as_mut_ptr().add(8), lane[1]);
+                let crow = c.as_mut_ptr().add(i * ldc);
+                for (jj, &x) in tmp.iter().take(w).enumerate() {
+                    *crow.add(jj) += x;
+                }
+            }
+        }
+    }
+
+    /// `C_tile += acc` for `h` rows of `NR` columns.
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_tiles(acc: &[[__m256; 2]; MR], c: &mut [f32], ldc: usize, h: usize) {
+        for (i, lane) in acc.iter().take(h).enumerate() {
+            let crow = c.as_mut_ptr().add(i * ldc);
+            _mm256_storeu_ps(crow, _mm256_add_ps(_mm256_loadu_ps(crow), lane[0]));
+            _mm256_storeu_ps(crow.add(8), _mm256_add_ps(_mm256_loadu_ps(crow.add(8)), lane[1]));
+        }
+    }
+
+    /// SAFETY: caller checked AVX2+FMA and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let main = n - n % 16;
+        let mut i = 0;
+        while i < main {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + 8)),
+                _mm256_loadu_ps(yp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if n - i >= 8 {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            i += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let q = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+        let q = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let q = _mm_add_ss(q, _mm_shuffle_ps::<1>(q, q));
+        let mut sum = _mm_cvtss_f32(q);
+        while i < n {
+            sum += *xp.add(i) * *yp.add(i);
+            i += 1;
+        }
+        sum
+    }
+
+    /// SAFETY: caller checked AVX2 and equal span lengths.  FMA-FREE by
+    /// design: mul/add/sqrt/div are correctly-rounded IEEE elementwise ops,
+    /// so each lane is bitwise equal to the scalar `optim::adam_span` body
+    /// — do not "optimize" this into `_mm256_fmadd_ps`, it would break the
+    /// parallel/chunked bit-identity invariants.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn adam_span_avx2(
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        d: &mut [f32],
+        k: AdamCoefs,
+    ) -> usize {
+        let n = g.len();
+        let main = n - n % 8;
+        let b1 = _mm256_set1_ps(k.beta1);
+        let o1 = _mm256_set1_ps(k.om_b1);
+        let b2 = _mm256_set1_ps(k.beta2);
+        let o2 = _mm256_set1_ps(k.om_b2);
+        let eps = _mm256_set1_ps(k.eps);
+        let bc1 = _mm256_set1_ps(k.bc1);
+        let bc2s = _mm256_set1_ps(k.bc2_sqrt);
+        let gp = g.as_ptr();
+        let mp = m.as_mut_ptr();
+        let vp = v.as_mut_ptr();
+        let dp = d.as_mut_ptr();
+        let mut i = 0;
+        while i < main {
+            let gv = _mm256_loadu_ps(gp.add(i));
+            // mval = b1*m + om1*g          (same op order as the scalar body)
+            let mval =
+                _mm256_add_ps(_mm256_mul_ps(b1, _mm256_loadu_ps(mp.add(i))), _mm256_mul_ps(o1, gv));
+            // vval = b2*v + (om2*g)*g
+            let vval = _mm256_add_ps(
+                _mm256_mul_ps(b2, _mm256_loadu_ps(vp.add(i))),
+                _mm256_mul_ps(_mm256_mul_ps(o2, gv), gv),
+            );
+            _mm256_storeu_ps(mp.add(i), mval);
+            _mm256_storeu_ps(vp.add(i), vval);
+            // d = (mval*bc1) / (sqrt(vval)*bc2_sqrt + eps)
+            let den = _mm256_add_ps(_mm256_mul_ps(_mm256_sqrt_ps(vval), bc2s), eps);
+            _mm256_storeu_ps(dp.add(i), _mm256_div_ps(_mm256_mul_ps(mval, bc1), den));
+            i += 8;
+        }
+        main
+    }
+
+    /// SAFETY: caller checked AVX2.  Integer replica of
+    /// `codec::bf16::f32_to_bf16_bits`: RNE via `bits + 0x7FFF + lsb`
+    /// (wrapping add, exactly like the scalar `wrapping_add`), NaN lanes
+    /// take `(bits >> 16) | 0x0040` instead.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_encode_avx2(src: &[f32], dst: &mut PooledBytes) -> usize {
+        let n = src.len();
+        let main = n - n % 8;
+        let bias = _mm256_set1_epi32(0x7FFF);
+        let one = _mm256_set1_epi32(1);
+        let quiet = _mm256_set1_epi32(0x0040);
+        let mut tmp = [0u8; 16];
+        let mut i = 0;
+        while i < main {
+            let x = _mm256_loadu_ps(src.as_ptr().add(i));
+            let bits = _mm256_castps_si256(x);
+            // NaN mask: x unordered with itself (any NaN encoding).
+            let nan = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+            let hi = _mm256_srli_epi32::<16>(bits);
+            let lsb = _mm256_and_si256(hi, one);
+            let rounded =
+                _mm256_srli_epi32::<16>(_mm256_add_epi32(bits, _mm256_add_epi32(bias, lsb)));
+            let nan_h = _mm256_or_si256(hi, quiet);
+            let h = _mm256_blendv_epi8(rounded, nan_h, nan);
+            // u32 lanes (all <= 0xFFFF, so packus never saturates) -> the
+            // low 128 bits as 8 u16s; x86 is little-endian, so the stored
+            // bytes equal the scalar `to_le_bytes` stream.
+            let packed = _mm256_permute4x64_epi64::<0b00_00_10_00>(_mm256_packus_epi32(h, h));
+            _mm_storeu_si128(tmp.as_mut_ptr().cast(), _mm256_castsi256_si128(packed));
+            dst.extend_from_slice(&tmp);
+            i += 8;
+        }
+        main
+    }
+
+    /// SAFETY: caller checked AVX2 and `src.len() == dst.len() * 2`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_decode_avx2(src: &[u8], dst: &mut [f32]) -> usize {
+        let n = dst.len();
+        let main = n - n % 8;
+        let mut i = 0;
+        while i < main {
+            let h = _mm_loadu_si128(src.as_ptr().add(i * 2).cast());
+            let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_castsi256_ps(w));
+            i += 8;
+        }
+        main
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // NOTE: none of these tests calls set_force_scalar — the flag is
+    // process-global and flipping it mid-suite would race the kernel
+    // bit-identity tests.  Parity is checked by comparing the SIMD wrapper
+    // output against an inline scalar replica instead; on machines without
+    // AVX2 (or under LSP_FORCE_SCALAR=1) the wrappers report "not run" and
+    // the assertions reduce to checking that contract.
+
+    #[test]
+    fn impl_name_matches_activity() {
+        assert_eq!(active_impl_name(), if avx2_active() { "avx2" } else { "scalar" });
+    }
+
+    #[test]
+    fn micro_nn_matches_scalar_tile() {
+        let mut rng = Rng::new(11);
+        let (lda, ldb, ldc, kb) = (23usize, 37usize, 19usize, 17usize);
+        let a = rng.normal_vec((MR - 1) * lda + kb, 1.0);
+        let b = rng.normal_vec((kb - 1) * ldb + NR, 1.0);
+        for h in 1..=MR {
+            let mut c_simd = rng.normal_vec((h - 1) * ldc + NR, 1.0);
+            let mut c_ref = c_simd.clone();
+            if !micro_nn(&a, lda, &b, ldb, &mut c_simd, ldc, kb, h) {
+                assert!(!avx2_active(), "wrapper must run whenever SIMD is active");
+                continue;
+            }
+            // Scalar replica of kernel::micro_nn_full restricted to h rows.
+            let mut acc = [[0f32; NR]; MR];
+            for l in 0..kb {
+                for (i, lane) in acc.iter_mut().take(h).enumerate() {
+                    let av = a[i * lda + l];
+                    for (x, &bv) in lane.iter_mut().zip(&b[l * ldb..l * ldb + NR]) {
+                        *x += av * bv;
+                    }
+                }
+            }
+            for i in 0..h {
+                for (cv, &x) in c_ref[i * ldc..i * ldc + NR].iter_mut().zip(&acc[i]) {
+                    *cv += x;
+                }
+            }
+            for (i, (&s, &r)) in c_simd.iter().zip(&c_ref).enumerate() {
+                let rel = (s - r).abs() / r.abs().max(1.0);
+                assert!(rel < 1e-4, "h={h} elem {i}: simd {s} vs scalar {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_dot_lanes() {
+        let mut rng = Rng::new(13);
+        for n in [1usize, 7, 8, 16, 31, 64, 257] {
+            let x = rng.normal_vec(n, 1.0);
+            let y = rng.normal_vec(n, 1.0);
+            let scalar = dot_lanes(&x, &y);
+            let simd = dot(&x, &y);
+            let tol = 1e-4 * scalar.abs().max(1.0);
+            assert!((simd - scalar).abs() < tol, "n={n}: {simd} vs {scalar}");
+        }
+    }
+
+    #[test]
+    fn adam_prefix_bitwise_matches_scalar() {
+        let mut rng = Rng::new(29);
+        let n = 67; // 8 full lanes + tail
+        let mut g = rng.normal_vec(n, 1.0);
+        // Specials: zeros, signed zero, huge, tiny (denormal), NaN.
+        g[0] = 0.0;
+        g[1] = -0.0;
+        g[2] = 3.0e37;
+        g[3] = f32::from_bits(1); // smallest positive denormal
+        g[4] = f32::NAN;
+        let coefs = AdamCoefs {
+            beta1: 0.9,
+            om_b1: 1.0 - 0.9,
+            beta2: 0.999,
+            om_b2: 1.0 - 0.999,
+            eps: 1e-8,
+            bc1: 1.0 / (1.0 - 0.9f32),
+            bc2_sqrt: (1.0 / (1.0 - 0.999f32)).sqrt(),
+        };
+        let m0 = rng.normal_vec(n, 0.1);
+        let v0: Vec<f32> = rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
+        let (mut m_s, mut v_s) = (m0.clone(), v0.clone());
+        let (mut m_x, mut v_x) = (m0, v0);
+        let mut d_s = vec![0f32; n];
+        let mut d_x = vec![0f32; n];
+        let done = adam_span_prefix(&g, &mut m_x, &mut v_x, &mut d_x, coefs);
+        assert!(done % 8 == 0 && done <= n);
+        if avx2_active() {
+            assert_eq!(done, n - n % 8, "active SIMD must cover the full prefix");
+        } else {
+            assert_eq!(done, 0);
+        }
+        // Scalar replica of the optim::adam_span body over the prefix.
+        for i in 0..done {
+            let gval = g[i];
+            let mval = coefs.beta1 * m_s[i] + coefs.om_b1 * gval;
+            let vval = coefs.beta2 * v_s[i] + coefs.om_b2 * gval * gval;
+            m_s[i] = mval;
+            v_s[i] = vval;
+            d_s[i] = (mval * coefs.bc1) / (vval.sqrt() * coefs.bc2_sqrt + coefs.eps);
+        }
+        for i in 0..done {
+            assert_eq!(m_s[i].to_bits(), m_x[i].to_bits(), "m[{i}]");
+            assert_eq!(v_s[i].to_bits(), v_x[i].to_bits(), "v[{i}]");
+            assert_eq!(d_s[i].to_bits(), d_x[i].to_bits(), "d[{i}]");
+        }
+    }
+}

@@ -9,7 +9,10 @@ than the threshold (default 25%).  Rows unique to either file are ignored
 (smoke runs use a reduced shape set), as are rows whose smoke run managed
 fewer than MIN_ITERS iterations — a min over 1-2 samples is biased high
 and would fail spuriously on a loaded machine.  Faster-than-trajectory
-rows always pass — this is a regression gate, not a reproducibility check.
+rows always pass — this is a regression gate, not a reproducibility check —
+and are listed in an improvements table (with per-row GFLOP/s deltas where
+both sides report `gops`) so perf wins are visible in the gate output, not
+just regressions.
 """
 
 import json
@@ -40,6 +43,7 @@ def main(argv):
         print("bench-compare: no matching (name, shape, impl) rows; nothing to gate")
         return 0
     bad = []
+    improved = []
     judged = 0
     unjudgeable = 0
     for key in shared:
@@ -66,15 +70,34 @@ def main(argv):
             flag = "REGRESSION"
         else:
             flag = "ok"
+        # Per-row throughput delta where both sides report gops
+        # (GFLOP/s for the kernels, GB/s for the codecs).
+        gb, gc = base[key].get("gops"), cur[key].get("gops")
+        gtxt = ""
+        if gb and gc:
+            gtxt = "  %7.2f -> %7.2f Gop/s (%+.1f%%)" % (gb, gc, (gc - gb) / gb * 100.0)
         print(
-            "  %-18s %-26s %-14s base %.3es  cur %.3es  %+7.1f%%  %s"
-            % (key[0], key[1], key[2], b, c, delta, flag)
+            "  %-18s %-26s %-14s base %.3es  cur %.3es  %+7.1f%%  %s%s"
+            % (key[0], key[1], key[2], b, c, delta, flag, gtxt)
         )
         if noisy:
             continue
         judged += 1
         if delta > pct:
             bad.append(key)
+        elif delta < 0.0:
+            improved.append((delta, key, gb, gc))
+    if improved:
+        improved.sort()
+        print("bench-compare: %d row(s) improved vs the trajectory:" % len(improved))
+        for delta, key, gb, gc in improved:
+            gtxt = ""
+            if gb and gc:
+                gtxt = "  %7.2f -> %7.2f Gop/s" % (gb, gc)
+            print(
+                "  %-18s %-26s %-14s %+7.1f%%%s"
+                % (key[0], key[1], key[2], delta, gtxt)
+            )
     if bad:
         print(
             "bench-compare: FAIL — %d row(s) regressed more than %.0f%% "
@@ -83,8 +106,8 @@ def main(argv):
         return 1
     print(
         "bench-compare: OK — %d judged row(s) within %.0f%% "
-        "(%d skipped as noisy, %d unjudgeable)"
-        % (judged, pct, len(shared) - judged - unjudgeable, unjudgeable)
+        "(%d improved, %d skipped as noisy, %d unjudgeable)"
+        % (judged, pct, len(improved), len(shared) - judged - unjudgeable, unjudgeable)
     )
     return 0
 
