@@ -498,6 +498,67 @@ fn main() {
         });
     }
 
+    if want("tracing") {
+        // The disabled-path overhead contract of `lsp_offload::trace`: a
+        // disabled tracer consulted around every fused-Adam call (the same
+        // shape as the updater's per-chunk instrumentation) must cost <= 2%
+        // over no tracer at all.  Runs under smoke too, so the row is part
+        // of the cross-PR trajectory gate.
+        use lsp_offload::coordinator::comm::LinkClock;
+        use lsp_offload::trace::{Tracer, Track};
+        let n = 4096usize;
+        let mut st = AdamState::new(n);
+        let mut rng = Rng::new(11);
+        let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut delta = vec![0f32; n];
+        let r_base = bench("tracing_overhead baseline n=4096", budget, || {
+            st.fused_step(&g, &mut delta);
+        });
+        results.push(result_row("tracing_overhead", "n=4096", "baseline", &r_base, None, None));
+        let t = Tracer::disabled();
+        let r_dis = bench("tracing_overhead disabled n=4096", budget, || {
+            t.begin(
+                Track::Updater,
+                "cpu_adam",
+                &[("param", 0usize.into()), ("step", 0u64.into()), ("chunk", 0u32.into())],
+            );
+            st.fused_step(&g, &mut delta);
+            t.end(Track::Updater, "cpu_adam", &[]);
+        });
+        println!(
+            "    -> disabled-tracer overhead {:+.2}% (accept <= 2%)",
+            (r_dis.min / r_base.min - 1.0) * 100.0
+        );
+        results.push(result_row(
+            "tracing_overhead",
+            "n=4096",
+            "disabled",
+            &r_dis,
+            None,
+            Some(r_base.min / r_dis.min),
+        ));
+        // Enabled-path cost, for scale (not gated): real record calls into
+        // a bounded buffer under the virtual clock.
+        let te = Tracer::with_capacity(LinkClock::new_virtual(), 1 << 16);
+        let r_en = bench("tracing_overhead enabled n=4096", budget, || {
+            te.begin(
+                Track::Updater,
+                "cpu_adam",
+                &[("param", 0usize.into()), ("step", 0u64.into()), ("chunk", 0u32.into())],
+            );
+            st.fused_step(&g, &mut delta);
+            te.end(Track::Updater, "cpu_adam", &[]);
+        });
+        results.push(result_row(
+            "tracing_overhead",
+            "n=4096",
+            "enabled",
+            &r_en,
+            None,
+            Some(r_base.min / r_en.min),
+        ));
+    }
+
     if !smoke && want("sim") {
         let hw = HardwareProfile::workstation();
         let w = Workload::paper(PaperModel::Llama7B, 2048, 2048);

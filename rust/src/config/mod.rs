@@ -218,6 +218,10 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
             "retry_budget" => cfg.retry_budget = v.as_usize()? as u32,
             "retry_backoff_ns" => cfg.retry_backoff_ns = v.as_usize()? as u64,
             "codec_fallback_after" => cfg.codec_fallback_after = v.as_usize()? as u32,
+            // Observability: Chrome-trace timeline and machine-readable
+            // report destinations (crate::trace, coordinator::report).
+            "trace_out" => cfg.trace_out = Some(v.as_str()?.to_string()),
+            "report_json" => cfg.report_json = Some(v.as_str()?.to_string()),
             other => bail!("unknown config key {other:?}"),
         }
     }
@@ -342,6 +346,24 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     }
     if let Some(v) = args.get_u64("codec-fallback-after")? {
         cfg.codec_fallback_after = v as u32;
+    }
+    // Trace destination: --trace-out wins over the JSON `trace_out` key,
+    // which wins over the LSP_TRACE_OUT environment variable (the same
+    // precedence ladder as the fault plan).
+    match args.get("trace-out") {
+        Some(v) => cfg.trace_out = Some(v.to_string()),
+        None => {
+            if cfg.trace_out.is_none() {
+                if let Ok(p) = std::env::var("LSP_TRACE_OUT") {
+                    if !p.is_empty() {
+                        cfg.trace_out = Some(p);
+                    }
+                }
+            }
+        }
+    }
+    if let Some(v) = args.get("report-json") {
+        cfg.report_json = Some(v.to_string());
     }
     Ok(cfg)
 }
@@ -557,6 +579,28 @@ mod tests {
         let j = Json::parse(r#"{"fault_plan": "[{\"action\": \"stall\"}]"}"#).unwrap();
         apply_json(&mut cfg, &j).unwrap();
         assert_eq!(cfg.fault_plan.as_ref().unwrap().specs.len(), 1);
+    }
+
+    #[test]
+    fn trace_and_report_flags_and_json() {
+        // Defaults: tracing and the JSON report are both off.  (The
+        // LSP_TRACE_OUT env fallback is deliberately not exercised here —
+        // tests run in parallel and setting process env would race.)
+        let cfg = train_config_from(&argv("train")).unwrap();
+        assert!(cfg.trace_out.is_none());
+        assert!(cfg.report_json.is_none());
+
+        let a = argv("train --trace-out /tmp/t.json --report-json /tmp/r.json");
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("/tmp/t.json"));
+        assert_eq!(cfg.report_json.as_deref(), Some("/tmp/r.json"));
+
+        // JSON config keys, and CLI-over-JSON precedence for the trace.
+        let j = Json::parse(r#"{"trace_out": "a.json", "report_json": "b.json"}"#).unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("a.json"));
+        assert_eq!(cfg.report_json.as_deref(), Some("b.json"));
     }
 
     #[test]

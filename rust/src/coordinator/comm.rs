@@ -378,6 +378,9 @@ impl WireMsg for DeltaMsg {
 pub struct PrioQueue<T> {
     inner: Mutex<QueueInner<T>>,
     cond: Condvar,
+    /// High-water mark of the heap depth, sampled at every push
+    /// (`TrainReport` surfaces the per-direction maxima).
+    max_len: AtomicU64,
 }
 
 struct QueueInner<T> {
@@ -424,6 +427,7 @@ impl<T> PrioQueue<T> {
         PrioQueue {
             inner: Mutex::new(QueueInner { heap: BinaryHeap::new(), seq: 0, closed: false }),
             cond: Condvar::new(),
+            max_len: AtomicU64::new(0),
         }
     }
 
@@ -432,7 +436,9 @@ impl<T> PrioQueue<T> {
         let seq = g.seq;
         g.seq += 1;
         g.heap.push(Entry { prio, seq, item });
+        let depth = g.heap.len() as u64;
         drop(g);
+        self.max_len.fetch_max(depth, Ordering::Relaxed);
         self.cond.notify_one();
     }
 
@@ -458,6 +464,12 @@ impl<T> PrioQueue<T> {
 
     pub fn len(&self) -> usize {
         lock_recover(&self.inner).heap.len()
+    }
+
+    /// Highest depth the queue ever reached at a push — the backlog
+    /// high-water mark (monotone over the queue's lifetime).
+    pub fn max_len(&self) -> usize {
+        self.max_len.load(Ordering::Relaxed) as usize
     }
 
     pub fn is_empty(&self) -> bool {
@@ -712,15 +724,22 @@ impl Link {
         let (bm, rm, bn, st) =
             (bytes_moved.clone(), raw_bytes_moved.clone(), busy_ns.clone(), stop.clone());
         let (clk, led) = (clock.clone(), ledger.clone());
+        // Trace track of this direction (one writer — this thread).
+        let track = match dir {
+            FaultDir::D2H => crate::trace::Track::LinkUp,
+            FaultDir::H2D => crate::trace::Track::LinkDown,
+        };
         let handle = std::thread::Builder::new()
             .name(format!("link-{name}"))
             .spawn(move || {
+                let tracer = fabric.tracer.clone();
                 'msgs: while let Some(mut msg) = ingress.pop() {
                     if st.load(Ordering::Relaxed) {
                         break;
                     }
                     let step = msg.step();
                     let chunk_idx = msg.chunk().idx;
+                    let param = msg.key().param_index;
                     // Per-message retransmit loop: every attempt charges
                     // wire time and bytes; only a delivered attempt breaks
                     // out.  `attempt` counts *retransmissions* (0 = the
@@ -731,6 +750,38 @@ impl Link {
                         let bytes = msg.payload().wire_bytes();
                         let raw = msg.payload().raw_bytes();
                         let fault = fabric.wire_fault(dir, step, msg.key(), chunk_idx);
+                        tracer.begin(
+                            track,
+                            "xfer",
+                            &[
+                                ("param", param.into()),
+                                ("step", step.into()),
+                                ("chunk", chunk_idx.into()),
+                                ("of", msg.chunk().of.into()),
+                                ("bytes", bytes.into()),
+                                ("codec_tag", (msg.chunk().codec_tag as u32).into()),
+                                ("attempt", attempt.into()),
+                            ],
+                        );
+                        if let Some(k) = &fault {
+                            let (fname, detail): (&'static str, u64) = match k {
+                                FaultKind::Drop => ("fault_drop", 0),
+                                FaultKind::Corrupt { bit } => ("fault_corrupt", *bit as u64),
+                                FaultKind::Mangle => ("fault_mangle", 0),
+                                FaultKind::Stall { extra_ns } => ("fault_stall", *extra_ns),
+                                FaultKind::PanicUpdater => ("fault_panic", 0),
+                            };
+                            tracer.instant(
+                                track,
+                                fname,
+                                &[
+                                    ("param", param.into()),
+                                    ("step", step.into()),
+                                    ("chunk", chunk_idx.into()),
+                                    ("detail", detail.into()),
+                                ],
+                            );
+                        }
                         let extra = match fault {
                             Some(FaultKind::Stall { extra_ns }) => {
                                 PipelineHealth::bump(&fabric.health.stalled_chunks);
@@ -756,9 +807,20 @@ impl Link {
                         total_ns += ns;
                         bm.fetch_add(bytes as u64, Ordering::Relaxed);
                         rm.fetch_add(raw as u64, Ordering::Relaxed);
+                        tracer.end(track, "xfer", &[]);
                         if attempt > 0 {
                             PipelineHealth::bump(&fabric.health.retransmits);
                             fabric.health.retrans_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                            tracer.instant(
+                                track,
+                                "retransmit",
+                                &[
+                                    ("param", param.into()),
+                                    ("step", step.into()),
+                                    ("chunk", chunk_idx.into()),
+                                    ("attempt", attempt.into()),
+                                ],
+                            );
                         }
                         led.record(LedgerEntry { wire_bytes: bytes, transfer_ns: ns, done_at_ns });
                         let needs_retry = match fault {
@@ -812,6 +874,16 @@ impl Link {
                         }
                         attempt += 1;
                         if attempt > fabric.retry.budget {
+                            tracer.instant(
+                                track,
+                                "retry_exhausted",
+                                &[
+                                    ("param", param.into()),
+                                    ("step", step.into()),
+                                    ("chunk", chunk_idx.into()),
+                                    ("attempts", attempt.into()),
+                                ],
+                            );
                             fabric.health.fail(PipelineError::RetryBudgetExhausted {
                                 link: name,
                                 key: format!("{:?}", msg.key()),
@@ -826,6 +898,16 @@ impl Link {
                         // link's busy/ledger accounting).
                         let backoff =
                             fabric.retry.backoff_ns.saturating_mul(1u64 << (attempt - 1).min(20));
+                        tracer.instant(
+                            track,
+                            "backoff",
+                            &[
+                                ("param", param.into()),
+                                ("step", step.into()),
+                                ("chunk", chunk_idx.into()),
+                                ("ns", backoff.into()),
+                            ],
+                        );
                         total_ns += backoff;
                         match &clk {
                             LinkClock::Real => {

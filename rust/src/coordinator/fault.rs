@@ -619,6 +619,11 @@ pub struct FaultFabric {
     pub fallback: Arc<FallbackMap>,
     /// The bit-exact codec every `CODEC_TAG_F32_FALLBACK` payload uses.
     pub f32_codec: Arc<dyn Codec>,
+    /// Structured event recorder shared by every pipeline thread
+    /// (disabled shell by default — the fabric is merely the carrier that
+    /// already reaches the links and the updater without signature
+    /// churn).  See `crate::trace`.
+    pub tracer: crate::trace::Tracer,
 }
 
 impl FaultFabric {
@@ -629,7 +634,15 @@ impl FaultFabric {
             retry,
             fallback: Arc::new(FallbackMap::default()),
             f32_codec: make_codec(CodecKind::F32Raw),
+            tracer: crate::trace::Tracer::disabled(),
         }
+    }
+
+    /// The same fabric with `tracer` recording its threads' events
+    /// (`PipelineCtx::new` installs the run's tracer this way).
+    pub fn with_tracer(mut self, tracer: crate::trace::Tracer) -> FaultFabric {
+        self.tracer = tracer;
+        self
     }
 
     /// A fault-free fabric with default retry knobs (tests, non-pipeline

@@ -45,17 +45,37 @@ impl Metrics {
         Some(tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32)
     }
 
+    /// Per-phase timing summary.  The phases OVERLAP — the links, the CPU
+    /// updater and the stall accounting run concurrently with fwd/bwd on
+    /// other threads — so a percent-of-phase-sum column would be
+    /// misleading and is deliberately not printed; wall-clock coverage is
+    /// reported separately (a ratio above 1.0x means overlap, not error).
     pub fn print_phase_breakdown(&self) {
-        println!("per-step phase breakdown (mean over {} steps):", self.steps);
-        let total: f64 = self.phases.values().map(|s| s.mean()).sum();
+        println!(
+            "per-phase timings over {} steps (phases overlap across threads; \
+             they do not partition the wall clock):",
+            self.steps
+        );
         for (name, s) in &self.phases {
             println!(
-                "  {:10} {:>10}  ({:>5.1}%)  n={}",
+                "  {:10} mean {:>10}  total {:>10}  n={}",
                 name,
                 crate::util::human_secs(s.mean()),
-                if total > 0.0 { s.mean() / total * 100.0 } else { 0.0 },
+                crate::util::human_secs(s.total()),
                 s.n()
             );
+        }
+        if let Some(&(_, wall)) = self.wall.last() {
+            if wall > 0.0 {
+                let covered: f64 = self.phases.values().map(|s| s.total()).sum();
+                println!(
+                    "  wall-clock coverage: {} summed phase time over {} wall \
+                     = {:.2}x (concurrent phases can exceed 1.0x)",
+                    crate::util::human_secs(covered),
+                    crate::util::human_secs(wall),
+                    covered / wall
+                );
+            }
         }
     }
 

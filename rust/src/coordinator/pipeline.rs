@@ -128,6 +128,15 @@ pub struct TrainConfig {
     /// pins that key to the bit-exact f32 wire format
     /// (`--codec-fallback-after`).
     pub codec_fallback_after: u32,
+    /// Chrome trace-event export path (`--trace-out`, JSON `trace_out`,
+    /// `LSP_TRACE_OUT` env).  `Some` enables the structured event
+    /// recorder (`crate::trace`); `None` (default) leaves tracing fully
+    /// disabled — the hot paths then pay one branch per would-be event.
+    pub trace_out: Option<String>,
+    /// Machine-readable run-report path (`--report-json`, JSON
+    /// `report_json`): the full `TrainReport` — every counter and curve —
+    /// serialized via `util::json`.
+    pub report_json: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -163,6 +172,8 @@ impl Default for TrainConfig {
             retry_budget: 3,
             retry_backoff_ns: 200_000,
             codec_fallback_after: 2,
+            trace_out: None,
+            report_json: None,
         }
     }
 }
@@ -219,6 +230,10 @@ impl ChunkSet {
 struct FlightEntry {
     step: u64,
     chunks: ChunkSet,
+    /// Encoded wire bytes this gradient put on the d2h link (stamped by
+    /// `note_wire_bytes` once the chunks are encoded; feeds the in-flight
+    /// wire-byte counter track).
+    wire_bytes: usize,
 }
 
 /// The in-flight offload ledger: every key with a gradient shipped over the
@@ -236,6 +251,10 @@ struct FlightEntry {
 pub struct InFlight {
     map: HashMap<ParamKey, Vec<FlightEntry>>,
     total: usize,
+    /// High-water mark of `total` over the ledger's lifetime.
+    max_total: usize,
+    /// Encoded wire bytes currently in flight (sum over open entries).
+    wire_bytes: usize,
 }
 
 impl InFlight {
@@ -250,8 +269,23 @@ impl InFlight {
         self.map
             .entry(key)
             .or_default()
-            .push(FlightEntry { step, chunks: ChunkSet::new(n_chunks) });
+            .push(FlightEntry { step, chunks: ChunkSet::new(n_chunks), wire_bytes: 0 });
         self.total += 1;
+        self.max_total = self.max_total.max(self.total);
+    }
+
+    /// Stamp the encoded wire size of the `(key, step)` entry's gradient
+    /// (called after `encode_chunked` ran — the entry is created before
+    /// the bytes exist).  Unknown entries are ignored.
+    pub fn note_wire_bytes(&mut self, key: &ParamKey, step: u64, bytes: usize) {
+        if let Some(entry) = self
+            .map
+            .get_mut(key)
+            .and_then(|v| v.iter_mut().find(|e| e.step == step && e.wire_bytes == 0))
+        {
+            entry.wire_bytes = bytes;
+            self.wire_bytes += bytes;
+        }
     }
 
     /// Mark one delta chunk received for the `(key, step)` logical
@@ -282,8 +316,9 @@ impl InFlight {
     pub fn remove(&mut self, key: &ParamKey, step: u64) {
         if let Some(entries) = self.map.get_mut(key) {
             if let Some(pos) = entries.iter().position(|e| e.step == step) {
-                entries.remove(pos);
+                let entry = entries.remove(pos);
                 self.total -= 1;
+                self.wire_bytes = self.wire_bytes.saturating_sub(entry.wire_bytes);
             }
             if entries.is_empty() {
                 self.map.remove(key);
@@ -295,6 +330,17 @@ impl InFlight {
     /// this).
     pub fn len(&self) -> usize {
         self.total
+    }
+
+    /// Highest number of simultaneously open entries the ledger ever held.
+    pub fn max_len(&self) -> usize {
+        self.max_total
+    }
+
+    /// Encoded wire bytes currently in flight (gradients shipped, deltas
+    /// not yet fully received).
+    pub fn wire_bytes_in_flight(&self) -> usize {
+        self.wire_bytes
     }
 
     pub fn is_empty(&self) -> bool {
@@ -547,6 +593,17 @@ impl<'e> PipelineCtx<'e> {
             .map(|t| eng.upload(t))
             .collect::<Result<Vec<_>>>()?;
 
+        // The event recorder timestamps from the negotiated clock (the
+        // clock-source invariant: virtual-clock traces are deterministic
+        // emulated time).  It rides the fault fabric into the link and
+        // updater threads; `cfg.trace_out = None` keeps the disabled
+        // shell, whose record calls cost one branch and allocate nothing.
+        let tracer = if cfg.trace_out.is_some() {
+            crate::trace::Tracer::enabled(clock.clone())
+        } else {
+            crate::trace::Tracer::disabled()
+        };
+
         // The fault fabric is shared (by clone — everything inside is
         // Arc-backed) with both links and the updater, so counters, the
         // fatal slot and the fallback map are one source of truth.
@@ -557,7 +614,8 @@ impl<'e> PipelineCtx<'e> {
                 backoff_ns: cfg.retry_backoff_ns,
                 fallback_after: cfg.codec_fallback_after,
             },
-        );
+        )
+        .with_tracer(tracer);
 
         let pool = BufPool::new();
         let d2h_in = Arc::new(PrioQueue::new());
@@ -677,14 +735,49 @@ impl<'e> PipelineCtx<'e> {
         } else {
             (self.codec.clone(), CODEC_TAG_NEGOTIATED)
         };
+        let mut wire_bytes = 0usize;
         encode_chunked(codec.as_ref(), &self.pool, &data, chunk_elems, |payload, mut chunk| {
             chunk.codec_tag = tag;
+            wire_bytes += payload.wire_bytes();
             self.d2h_in.push(
                 prio,
                 OffloadMsg { key: key.clone(), data: payload, prio, step, link_ns: 0, chunk },
             );
         });
         drop(data);
+        self.pending.note_wire_bytes(&key, step, wire_bytes);
+        self.trace_counters();
+    }
+
+    /// Sample the driver-owned counter tracks (queue depths, the in-flight
+    /// ledger, pool hit/miss) into the trace.  No-op (one branch) when
+    /// tracing is disabled; called at every dispatch and every completed
+    /// delta so the counter curves bracket each queue transition the
+    /// driver performs.
+    pub fn trace_counters(&self) {
+        let tracer = &self.fabric.tracer;
+        if !tracer.is_enabled() {
+            return;
+        }
+        tracer.counter(
+            "queues",
+            &[("up", self.d2h_in.len().into()), ("down", self.h2d_in.len().into())],
+        );
+        tracer.counter(
+            "inflight",
+            &[
+                ("entries", self.pending.len().into()),
+                ("wire_bytes", self.pending.wire_bytes_in_flight().into()),
+            ],
+        );
+        let s = self.pool.stats();
+        tracer.counter(
+            "pool",
+            &[
+                ("hits", (s.hits + s.byte_hits).into()),
+                ("misses", (s.misses + s.byte_misses).into()),
+            ],
+        );
     }
 
     /// Feed one arriving delta chunk into the reassembler; returns the
@@ -692,7 +785,13 @@ impl<'e> PipelineCtx<'e> {
     /// which point the gradient is also removed from the in-flight
     /// ledger).  Whole-payload messages complete immediately.
     pub fn ingest_delta_chunk(&mut self, msg: DeltaMsg) -> Result<Option<LogicalDelta>> {
-        self.reasm.ingest(self.codec.as_ref(), &self.pool, &mut self.pending, &self.fabric, msg)
+        let done = self
+            .reasm
+            .ingest(self.codec.as_ref(), &self.pool, &mut self.pending, &self.fabric, msg)?;
+        if done.is_some() {
+            self.trace_counters();
+        }
+        Ok(done)
     }
 
     /// Blocking receive of the next fully reassembled delta; `Ok(None)`
@@ -753,6 +852,16 @@ impl<'e> PipelineCtx<'e> {
             let factor = chunk_pipeline_factor(msg.n_chunks as u64);
             let ns = msg.link_ns as f64 * factor / (window as f64 + 1.0);
             self.metrics.phase("stall_v").push(ns / 1e9);
+            self.fabric.tracer.instant(
+                crate::trace::Track::Driver,
+                "stall_v_charge",
+                &[
+                    ("param", msg.key.param_index.into()),
+                    ("step", msg.step.into()),
+                    ("window", window.into()),
+                    ("charged_ns", ns.into()),
+                ],
+            );
         }
     }
 
@@ -772,6 +881,12 @@ impl<'e> PipelineCtx<'e> {
     /// projector manager for subspace-switch re-projection).
     pub fn shared_adam_states(&self) -> Option<SharedStates> {
         self.updater.as_ref().map(|u| u.states.clone())
+    }
+
+    /// The run's structured event recorder — a disabled shell unless
+    /// `cfg.trace_out` asked for tracing (see `crate::trace`).
+    pub fn tracer(&self) -> &crate::trace::Tracer {
+        &self.fabric.tracer
     }
 }
 

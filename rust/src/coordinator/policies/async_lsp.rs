@@ -282,6 +282,7 @@ impl AsyncLspPolicy {
         for msg in std::mem::take(&mut self.held) {
             if msg.key.param_index == idx {
                 self.note_applied(msg.step);
+                self.trace_drain(ctx, &msg, "stale_drain");
                 ctx.note_gated_delta(&msg, window);
                 self.apply_tail_delta(ctx, msg)?;
             } else {
@@ -298,6 +299,7 @@ impl AsyncLspPolicy {
             };
             if msg.key.param_index == idx {
                 self.note_applied(msg.step);
+                self.trace_drain(ctx, &msg, "stale_drain");
                 ctx.note_gated_delta(&msg, window);
                 self.apply_tail_delta(ctx, msg)?;
             } else {
@@ -324,6 +326,22 @@ impl AsyncLspPolicy {
         self.max_staleness = self.max_staleness.max(self.cur_step.saturating_sub(produced));
     }
 
+    /// Instant marker for a tail delta landing through the bounded-staleness
+    /// machinery ("stale_drain") or the per-step deadline sweep
+    /// ("held_apply").  Emitted on the driver track — these applies happen
+    /// on the driver thread, which keeps the one-writer-per-track invariant.
+    fn trace_drain(&self, ctx: &PipelineCtx<'_>, msg: &LogicalDelta, name: &'static str) {
+        ctx.tracer().instant(
+            crate::trace::Track::Driver,
+            name,
+            &[
+                ("param", msg.key.param_index.into()),
+                ("produced_step", msg.step.into()),
+                ("apply_step", self.cur_step.into()),
+            ],
+        );
+    }
+
     /// Apply every held delta that has reached its staleness deadline at
     /// step `now` (all of them when `all` is set — the end-of-run flush),
     /// in canonical order, charging each one's amortized link exposure.
@@ -337,6 +355,7 @@ impl AsyncLspPolicy {
         for msg in std::mem::take(&mut self.held) {
             if all || stale_bound_exceeded(msg.step, now, window) {
                 self.note_applied(msg.step);
+                self.trace_drain(ctx, &msg, "held_apply");
                 ctx.note_gated_delta(&msg, window);
                 self.apply_tail_delta(ctx, msg)?;
             } else {
@@ -395,6 +414,7 @@ impl UpdatePolicy for AsyncLspPolicy {
     fn apply_delta(&mut self, ctx: &mut PipelineCtx<'_>, msg: LogicalDelta) -> Result<()> {
         let window = ctx.cfg.async_staleness;
         self.note_applied(msg.step);
+        self.trace_drain(ctx, &msg, "stale_drain");
         ctx.note_gated_delta(&msg, window);
         self.apply_tail_delta(ctx, msg)
     }

@@ -214,6 +214,22 @@ pub fn wait_for_params(
         return Ok(());
     }
     let t0 = Instant::now();
+    let tracer = ctx.tracer().clone();
+    tracer.begin(crate::trace::Track::Driver, "wait_params", &[]);
+    let res = wait_loop(ctx, policy, idxs);
+    // Close the span on every exit path so traces stay balanced even when
+    // the pipeline shuts down underneath the wait.
+    tracer.end(crate::trace::Track::Driver, "wait_params", &[]);
+    res?;
+    ctx.metrics.phase("stall_e").push(t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn wait_loop(
+    ctx: &mut PipelineCtx<'_>,
+    policy: &mut dyn UpdatePolicy,
+    idxs: &[usize],
+) -> Result<()> {
     while ctx.pending.any_of(idxs) {
         let Some(ld) = ctx.recv_logical_delta()? else {
             // A closed queue with entries still pending means the pipeline
@@ -227,7 +243,6 @@ pub fn wait_for_params(
         };
         policy.apply_delta(ctx, ld)?;
     }
-    ctx.metrics.phase("stall_e").push(t0.elapsed().as_secs_f64());
     Ok(())
 }
 
@@ -263,6 +278,8 @@ pub(crate) fn compress_subspace(
 ) -> Result<PooledBuf> {
     let eng = ctx.eng;
     let t0 = Instant::now();
+    let tracer = ctx.tracer().clone();
+    tracer.begin(crate::trace::Track::Driver, "compress", &[("elems", g.len().into())]);
     let e = eng.exec(&format!("compress_{}", st.kind))?;
     let g_buf = eng.upload(g)?;
     let args: Vec<&PjRtBuffer> = vec![
@@ -274,6 +291,7 @@ pub(crate) fn compress_subspace(
     ];
     let s_buf = e.call_b(&args)?.device()?;
     let s_host = ctx.pool.adopt(eng.download_vec(&s_buf)?);
+    tracer.end(crate::trace::Track::Driver, "compress", &[]);
     ctx.metrics.phase("compress").push(t0.elapsed().as_secs_f64());
     Ok(s_host)
 }

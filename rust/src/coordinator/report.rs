@@ -2,6 +2,16 @@
 //! plus the f32-equivalent baseline, so the link codec's compression ratio
 //! is always visible), stall/busy breakdown, plus policy-specific extras
 //! filled in via `UpdatePolicy::report_extras`.
+//!
+//! `--report-json FILE` serializes the whole report — every counter plus
+//! the loss/eval/wall curves — through [`TrainReport::write_json`] so runs
+//! are machine-comparable without scraping stdout.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
 
 #[derive(Debug)]
 pub struct TrainReport {
@@ -56,6 +66,16 @@ pub struct TrainReport {
     pub codec_fallbacks: u64,
     /// Fraction of payload-buffer takes served from the recycling pool.
     pub pool_hit_rate: f64,
+    /// High-water mark of the d2h (upload) priority queue depth.
+    pub max_queue_up: u64,
+    /// High-water mark of the h2d (download) priority queue depth.
+    pub max_queue_down: u64,
+    /// High-water mark of concurrently in-flight offload entries (the
+    /// staleness ledger's `InFlight` table).
+    pub max_inflight: u64,
+    /// Where the JSON form of this report was written (`--report-json`);
+    /// filled in by the CLI so `print()` can surface the path.
+    pub report_json_path: Option<String>,
     pub loss_curve: Vec<(u64, f32)>,
     pub eval_curve: Vec<(u64, f32)>,
     pub wall_curve: Vec<(u64, f64)>,
@@ -71,6 +91,80 @@ impl TrainReport {
         } else {
             (self.raw_bytes_up + self.raw_bytes_down) as f64 / wire as f64
         }
+    }
+
+    /// The full report as JSON: every scalar counter plus the three curves
+    /// (each as `[step, value]` pairs).  Non-finite floats (e.g. a NaN
+    /// final loss on a 0-step run) serialize as `null` so the output is
+    /// always strictly valid JSON.
+    pub fn to_json(&self) -> Json {
+        fn num(v: f64) -> Json {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        }
+        fn curve_f32(c: &[(u64, f32)]) -> Json {
+            Json::Arr(
+                c.iter()
+                    .map(|&(s, v)| Json::Arr(vec![Json::Num(s as f64), num(v as f64)]))
+                    .collect(),
+            )
+        }
+        fn curve_f64(c: &[(u64, f64)]) -> Json {
+            Json::Arr(
+                c.iter()
+                    .map(|&(s, v)| Json::Arr(vec![Json::Num(s as f64), num(v)]))
+                    .collect(),
+            )
+        }
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.to_string())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("wall_secs", num(self.wall_secs)),
+            ("final_train_loss", num(self.final_train_loss as f64)),
+            (
+                "final_eval_loss",
+                self.final_eval_loss.map(|l| num(l as f64)).unwrap_or(Json::Null),
+            ),
+            ("tokens_per_s", num(self.tokens_per_s)),
+            ("link_codec", Json::Str(self.link_codec.clone())),
+            ("link_chunk_elems", Json::Num(self.link_chunk_elems as f64)),
+            ("link_clock", Json::Str(self.link_clock.to_string())),
+            ("bytes_up", Json::Num(self.bytes_up as f64)),
+            ("bytes_down", Json::Num(self.bytes_down as f64)),
+            ("raw_bytes_up", Json::Num(self.raw_bytes_up as f64)),
+            ("raw_bytes_down", Json::Num(self.raw_bytes_down as f64)),
+            ("compression_ratio", num(self.compression_ratio())),
+            ("stall_secs", num(self.stall_secs)),
+            ("cpu_busy_secs", num(self.cpu_busy_secs)),
+            (
+                "link_busy_secs",
+                Json::Arr(vec![num(self.link_busy_secs.0), num(self.link_busy_secs.1)]),
+            ),
+            ("projector_refreshes", Json::Num(self.projector_refreshes as f64)),
+            ("stale_drains", Json::Num(self.stale_drains as f64)),
+            ("max_delta_staleness", Json::Num(self.max_delta_staleness as f64)),
+            ("retransmits", Json::Num(self.retransmits as f64)),
+            ("corrupt_chunks", Json::Num(self.corrupt_chunks as f64)),
+            ("retrans_bytes", Json::Num(self.retrans_bytes as f64)),
+            ("worker_restarts", Json::Num(self.worker_restarts as f64)),
+            ("codec_fallbacks", Json::Num(self.codec_fallbacks as f64)),
+            ("pool_hit_rate", num(self.pool_hit_rate)),
+            ("max_queue_up", Json::Num(self.max_queue_up as f64)),
+            ("max_queue_down", Json::Num(self.max_queue_down as f64)),
+            ("max_inflight", Json::Num(self.max_inflight as f64)),
+            ("loss_curve", curve_f32(&self.loss_curve)),
+            ("eval_curve", curve_f32(&self.eval_curve)),
+            ("wall_curve", curve_f64(&self.wall_curve)),
+        ])
+    }
+
+    /// Serialize the report (`to_json`) to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing report json {}", path.display()))
     }
 
     pub fn print(&self) {
@@ -106,6 +200,10 @@ impl TrainReport {
             self.link_clock,
             self.pool_hit_rate * 100.0,
         );
+        println!(
+            "high-water: d2h queue {}  h2d queue {}  in-flight entries {}",
+            self.max_queue_up, self.max_queue_down, self.max_inflight
+        );
         if self.projector_refreshes > 0 {
             println!("projector refreshes (sum tau): {}", self.projector_refreshes);
         }
@@ -129,6 +227,9 @@ impl TrainReport {
                 self.worker_restarts,
                 self.codec_fallbacks,
             );
+        }
+        if let Some(p) = &self.report_json_path {
+            println!("report json: {p}");
         }
     }
 }
@@ -164,6 +265,10 @@ mod tests {
             worker_restarts: 0,
             codec_fallbacks: 0,
             pool_hit_rate: 0.0,
+            max_queue_up: 0,
+            max_queue_down: 0,
+            max_inflight: 0,
+            report_json_path: None,
             loss_curve: vec![],
             eval_curve: vec![],
             wall_curve: vec![],
@@ -179,5 +284,31 @@ mod tests {
         r.raw_bytes_up = 2000;
         r.raw_bytes_down = 2000;
         assert!((r.compression_ratio() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_json_round_trips_and_nan_is_null() {
+        let mut r = blank();
+        r.final_train_loss = f32::NAN; // 0-step run -> must still be valid JSON
+        r.max_queue_up = 7;
+        r.max_inflight = 3;
+        r.loss_curve = vec![(0, 2.5), (1, 2.0)];
+        r.wall_curve = vec![(0, 0.1)];
+        let text = r.to_json().to_string();
+        let j = Json::parse(&text).expect("report json must parse");
+        assert!(matches!(j.get("final_train_loss"), Some(Json::Null)));
+        assert_eq!(j.get("max_queue_up").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(j.get("max_inflight").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("policy").unwrap().as_str().unwrap(), "zero");
+        let curve = j.get("loss_curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 2);
+        assert_eq!(curve[1].as_arr().unwrap()[0].as_usize().unwrap(), 1);
+
+        let dir = std::env::temp_dir().join("lsp_report_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("report.json");
+        r.write_json(&p).unwrap();
+        let back = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(back.trim_end(), text);
     }
 }

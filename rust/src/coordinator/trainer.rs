@@ -39,6 +39,7 @@ use crate::model::manifest::Manifest;
 use crate::model::ParamStore;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
+use crate::trace::Track;
 
 // Re-exported so the established `coordinator::trainer::{TrainConfig,
 // TrainReport}` import paths keep working after the split.
@@ -142,23 +143,27 @@ impl<'e> Trainer<'e> {
         let eng = self.ctx.eng;
         let man = eng.man.clone();
         let c = &man.config;
+        let tracer = self.ctx.tracer().clone();
         // Event for the embedding/head params ("layer -1").
         if wait_events {
             let head_params = self.ctx.head_param_indices();
             self.sync_layer(&head_params)?;
         }
+        tracer.begin(Track::Driver, "embed_fwd", &[]);
         let ef = eng.exec("embed_fwd")?;
         let wte = self.ctx.params.index("wte").unwrap();
         let wpe = self.ctx.params.index("wpe").unwrap();
         let mut h = ef
             .call_b(&[tokens, &self.ctx.bufs[wte], &self.ctx.bufs[wpe]])?
             .device()?;
+        tracer.end(Track::Driver, "embed_fwd", &[]);
         let mut h_inputs = Vec::with_capacity(c.n_layer);
         for layer in 0..c.n_layer {
             if wait_events {
                 let idxs: Vec<usize> = self.ctx.params.block_range(&man, layer).collect();
                 self.sync_layer(&idxs)?;
             }
+            tracer.begin(Track::Driver, "layer_fwd", &[("layer", layer.into())]);
             let bf = eng.exec("block_fwd")?;
             let range = self.ctx.params.block_range(&man, layer);
             let mut args: Vec<&PjRtBuffer> = vec![&h];
@@ -166,6 +171,7 @@ impl<'e> Trainer<'e> {
                 args.push(&self.ctx.bufs[i]);
             }
             let h_next = bf.call_b(&args)?.device()?;
+            tracer.end(Track::Driver, "layer_fwd", &[]);
             h_inputs.push(h);
             h = h_next;
         }
@@ -226,6 +232,7 @@ impl<'e> Trainer<'e> {
         let c = man.config.clone();
         let n_layer = c.n_layer;
         let mut steps_done = 0u64;
+        let tracer = self.ctx.tracer().clone();
         for step in 0..self.ctx.cfg.steps {
             if self.ctx.cfg.max_wall_secs > 0.0
                 && self.t0.elapsed().as_secs_f64() >= self.ctx.cfg.max_wall_secs
@@ -238,17 +245,21 @@ impl<'e> Trainer<'e> {
             // closed the queues, so nothing below could block anyway).
             self.ctx.fabric.health.ok()?;
             steps_done = step + 1;
+            tracer.begin(Track::Driver, "step", &[("step", step.into())]);
             let batch = self.batcher.next_batch();
             let (tok_buf, tgt_buf) = self.upload_batch(&batch)?;
 
             // FWD (with per-layer events under offloading policies).
             let t_f = Instant::now();
             let wait = self.ctx.cfg.policy.offloads();
+            tracer.begin(Track::Driver, "fwd", &[("step", step.into())]);
             let (h_inputs, h) = self.forward(&tok_buf, wait)?;
+            tracer.end(Track::Driver, "fwd", &[]);
             self.ctx.metrics.phase("fwd").push(t_f.elapsed().as_secs_f64());
 
             // HEAD: loss + d_h + head grads.
             let t_h = Instant::now();
+            tracer.begin(Track::Driver, "head", &[("step", step.into())]);
             let hb = eng.exec("head_loss_bwd")?;
             let wte = self.ctx.params.index("wte").unwrap();
             let lnf_g = self.ctx.params.index("lnf_g").unwrap();
@@ -268,12 +279,14 @@ impl<'e> Trainer<'e> {
             let d_lnf_g: Vec<f32> = outs[2].to_vec()?;
             let d_lnf_b: Vec<f32> = outs[3].to_vec()?;
             let d_wte_head: Vec<f32> = outs[4].to_vec()?;
+            tracer.end(Track::Driver, "head", &[]);
             self.ctx.metrics.phase("head").push(t_h.elapsed().as_secs_f64());
 
             // BWD layer by layer (reverse), dispatching grads as they appear.
             let bb = eng.exec("block_bwd")?;
             for layer in (0..n_layer).rev() {
                 let t_b = Instant::now();
+                tracer.begin(Track::Driver, "layer_bwd", &[("layer", layer.into())]);
                 let range = self.ctx.params.block_range(&man, layer);
                 let d_h_buf = eng.upload_f32(&hshape, &d_h)?;
                 let mut args: Vec<&PjRtBuffer> = vec![&h_inputs[layer]];
@@ -291,10 +304,12 @@ impl<'e> Trainer<'e> {
                     let g = Tensor::new(&spec.1, outs[1 + pi].to_vec()?)?;
                     self.policy.dispatch_grad(&mut self.ctx, i, g, step, prio)?;
                 }
+                tracer.end(Track::Driver, "layer_bwd", &[]);
             }
 
             // EMBED BWD.
             let t_e = Instant::now();
+            tracer.begin(Track::Driver, "embed_bwd", &[("step", step.into())]);
             let eb = eng.exec("embed_bwd")?;
             let d_h_buf = eng.upload_f32(&hshape, &d_h)?;
             let outs = eb.call_b(&[&tok_buf, &d_h_buf])?.host()?;
@@ -303,6 +318,7 @@ impl<'e> Trainer<'e> {
             for (a, b) in d_wte.iter_mut().zip(&d_wte_head) {
                 *a += b;
             }
+            tracer.end(Track::Driver, "embed_bwd", &[]);
             self.ctx.metrics.phase("embed_bwd").push(t_e.elapsed().as_secs_f64());
 
             // Head/embedding params ship with the shallowest priority.
@@ -338,6 +354,8 @@ impl<'e> Trainer<'e> {
                 let el = self.eval_loss()?;
                 self.ctx.metrics.eval_loss.push((step, el));
             }
+            self.ctx.trace_counters();
+            tracer.end(Track::Driver, "step", &[]);
         }
 
         // Final drain so reported state is consistent: policies holding
@@ -432,6 +450,10 @@ impl<'e> Trainer<'e> {
             worker_restarts: health.worker_restarts.load(Relaxed),
             codec_fallbacks: health.codec_fallbacks.load(Relaxed),
             pool_hit_rate: self.ctx.pool.stats().hit_rate(),
+            max_queue_up: self.ctx.d2h_in.max_len() as u64,
+            max_queue_down: self.ctx.h2d_in.max_len() as u64,
+            max_inflight: self.ctx.pending.max_len() as u64,
+            report_json_path: None,
             loss_curve: metrics.loss.clone(),
             eval_curve: metrics.eval_loss.clone(),
             wall_curve: metrics.wall.clone(),

@@ -120,6 +120,14 @@ impl CpuUpdater {
                             restarts += 1;
                             PipelineHealth::bump(&fabric.health.worker_restarts);
                             let replayable = lock_recover(&slot).is_some();
+                            fabric.tracer.instant(
+                                crate::trace::Track::Updater,
+                                "worker_restart",
+                                &[
+                                    ("restarts", restarts.into()),
+                                    ("replayable", (replayable as u32).into()),
+                                ],
+                            );
                             if !replayable || restarts > MAX_WORKER_RESTARTS {
                                 fabric.health.fail(PipelineError::WorkerFailed {
                                     worker: "cpu-updater",
@@ -189,10 +197,31 @@ fn update_loop(
         // does not re-panic, so the message is processed exactly once and
         // the trajectory stays bit-identical through the fault.
         if fabric.updater_panic(msg.step, &msg.key, msg.chunk.idx) {
+            fabric.tracer.instant(
+                crate::trace::Track::Updater,
+                "fault_panic",
+                &[
+                    ("param", msg.key.param_index.into()),
+                    ("step", msg.step.into()),
+                    ("chunk", msg.chunk.idx.into()),
+                ],
+            );
             *lock_recover(slot) = Some(msg);
             // gate: allow-panic — injected fault, caught by the supervisor
             panic!("injected updater panic");
         }
+        fabric.tracer.begin(
+            crate::trace::Track::Updater,
+            "cpu_adam",
+            &[
+                ("param", msg.key.param_index.into()),
+                ("step", msg.step.into()),
+                ("chunk", msg.chunk.idx.into()),
+                ("of", msg.chunk.of.into()),
+                ("elems", msg.data.elems.into()),
+                ("codec_tag", (msg.chunk.codec_tag as u32).into()),
+            ],
+        );
         let t0 = std::time::Instant::now();
         let OffloadMsg { key, data, prio, step, link_ns, chunk } = msg;
         // The chunk protocol this thread relies on: for any one key,
@@ -219,6 +248,7 @@ fn update_loop(
                             chunk.idx, chunk.of,
                         ),
                     });
+                    fabric.tracer.end(crate::trace::Track::Updater, "cpu_adam", &[]);
                     return;
                 }
                 entry.1 += 1;
@@ -232,6 +262,7 @@ fn update_loop(
                             chunk.idx, chunk.of,
                         ),
                     });
+                    fabric.tracer.end(crate::trace::Track::Updater, "cpu_adam", &[]);
                     return;
                 }
                 if chunk.of > 1 {
@@ -290,6 +321,7 @@ fn update_loop(
                         chunk.total_elems,
                     ),
                 });
+                fabric.tracer.end(crate::trace::Track::Updater, "cpu_adam", &[]);
                 return;
             }
             state.fused_step_chunk_with(&g, &mut delta, chunk.elem_offset, chunk.idx == 0, kernel);
@@ -311,6 +343,15 @@ fn update_loop(
         // round-trip link time.
         let mut out_chunk = chunk;
         out_chunk.checksum = crc32(wire.as_bytes());
+        // Span end is recorded BEFORE the egress push: once the delta is
+        // handed downstream the h2d link may advance the shared virtual
+        // clock, and a post-push timestamp read would race it — breaking
+        // the serialized-run determinism `tests/tracing.rs` pins.
+        fabric.tracer.end(
+            crate::trace::Track::Updater,
+            "cpu_adam",
+            &[("decoded", (decoded as u32).into())],
+        );
         egress.push(prio, DeltaMsg { key, delta: wire, prio, step, link_ns, chunk: out_chunk });
     }
 }
@@ -601,6 +642,56 @@ mod tests {
         assert!(s.hit_rate() > 0.9, "{s:?}");
         assert!(s.shelved <= 3, "f32 working set must stay bounded: {s:?}");
         assert!(s.byte_shelved <= 2, "byte working set must stay bounded: {s:?}");
+        ingress.close();
+        upd.join();
+    }
+
+    /// The disabled-tracer overhead contract (`crate::trace` module docs):
+    /// threading an explicitly disabled tracer through the fabric — so the
+    /// worker consults it on every message — must leave the steady-state
+    /// allocation profile of
+    /// `pooled_payloads_recycle_without_new_allocations` intact, and the
+    /// shell itself must hold no event buffers at all.
+    #[test]
+    fn disabled_tracer_adds_no_allocations_to_the_update_path() {
+        let pool = BufPool::new();
+        let codec = make_codec(CodecKind::Bf16);
+        let tracer = crate::trace::Tracer::disabled();
+        let fabric = FaultFabric::none().with_tracer(tracer.clone());
+        let ingress = Arc::new(PrioQueue::new());
+        let egress = Arc::new(PrioQueue::new());
+        let mut upd = CpuUpdater::spawn(
+            ingress.clone(),
+            egress.clone(),
+            1.0,
+            pool.clone(),
+            KernelConfig::single_threaded(),
+            codec.clone(),
+            fabric,
+        );
+        let key = ParamKey { param_index: 0, kind: None };
+        let rounds = 8u64;
+        let len = 512usize;
+        for step in 0..rounds {
+            let mut g = pool.take_raw(len);
+            g.fill(0.25);
+            let wire = WirePayload::from_pool(codec.as_ref(), &pool, &g);
+            drop(g);
+            ingress.push(0, OffloadMsg::whole(key.clone(), wire, 0, step));
+            let d = egress.pop().unwrap();
+            let mut out = pool.take_raw(len);
+            codec.decode(d.delta.as_bytes(), &mut out).unwrap();
+            drop(d);
+            drop(out);
+        }
+        let s = pool.stats();
+        // Same warmup floor as the tracer-free pooled test above: the
+        // disabled record calls on the hot path allocate nothing.
+        assert_eq!(s.misses, 2, "f32 steady state must not allocate: {s:?}");
+        assert_eq!(s.byte_misses, 1, "byte steady state must not allocate: {s:?}");
+        assert_eq!(tracer.total_events(), 0, "disabled shell records nothing");
+        assert_eq!(tracer.buffer_bytes(), 0, "disabled shell holds no buffers");
+        assert_eq!(tracer.dropped(), 0);
         ingress.close();
         upd.join();
     }

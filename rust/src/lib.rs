@@ -30,6 +30,9 @@
 //! policy or via `--link-codec` (see ROADMAP.md §Codec), optionally split
 //! into sub-layer chunks for PIPO-style pipelining (`--link-chunk-elems`,
 //! see ROADMAP.md §Chunked and `rust/src/coordinator/ARCHITECTURE.md`).
+//! Every run can export a deterministic per-event timeline in Chrome
+//! trace format with the DES's predicted schedule overlaid (`trace`,
+//! `--trace-out`, `lsp-offload analyze-trace`).
 
 pub mod analyze;
 pub mod baselines;
@@ -44,6 +47,7 @@ pub mod runtime;
 pub mod sim;
 pub mod sparse;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 pub use anyhow::{anyhow, bail, Context, Result};

@@ -10,6 +10,7 @@
 //!                       [--async-rho X] [--async-staleness S]
 //!                       [--link-chunk-elems N]
 //!                       [--fault-plan JSON|path] [--retry-budget N]
+//!                       [--trace-out FILE]
 //!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a);
 //!     `--link-codec` prices transfers at the encoded payload size, the
 //!     async knobs shape the stall-free schedule (and its predicted gated
@@ -19,7 +20,8 @@
 //!     (same syntax as `train`) the expected-retransmit factor — how much
 //!     the planned drops/corruptions inflate link time under the retry
 //!     protocol — is printed, pricing what the runtime then measures as
-//!     `retrans_bytes`.
+//!     `retrans_bytes`.  `--trace-out` writes the first selected
+//!     schedule's predicted task timeline as Chrome trace-event JSON.
 //! lsp-offload train     [--preset tiny|small|mid]
 //!                       [--policy lsp|async-lsp|zero|...]
 //!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
@@ -29,6 +31,7 @@
 //!                       [--link-chunk-elems N]
 //!                       [--fault-plan JSON|path] [--retry-budget N]
 //!                       [--retry-backoff-ns N] [--codec-fallback-after K]
+//!                       [--trace-out FILE] [--report-json FILE]
 //!     Real training over the PJRT artifacts with throttled links; link
 //!     payloads cross in the chosen wire format (`auto` = policy default).
 //!     `async-lsp` applies the top-rho important slice synchronously on the
@@ -44,6 +47,17 @@
 //!     payloads fail to decode `--codec-fallback-after` consecutive times
 //!     degrades to the bit-exact f32 wire codec.  The recovery counters
 //!     land in the train report.
+//!     `--trace-out` (JSON `trace_out`, `LSP_TRACE_OUT` env as fallback)
+//!     records a structured per-event timeline — per-layer driver spans,
+//!     per-chunk link transfers, CPU-Adam spans, fault/retransmit
+//!     instants, queue-depth counters — timestamped from the negotiated
+//!     link clock and exported as Chrome trace-event JSON with the DES's
+//!     predicted schedule overlaid as parallel tracks.  `--report-json`
+//!     serializes the full train report (every counter + curves).
+//! lsp-offload analyze-trace FILE [--top K]
+//!     Digest a `--trace-out` file: critical-path stall attribution,
+//!     top-K spans by total time, the fault/retransmit timeline, and
+//!     counter high-water marks.
 //! lsp-offload bias      [--preset tiny|small] [--calib N] [--val N]
 //!     Estimation-bias study: learned sparse vs random vs GaLore SVD
 //!     (Figs 7b/9).
@@ -81,6 +95,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "bias" => cmd_bias(&args),
         "tune" => cmd_tune(&args),
+        "analyze-trace" => cmd_analyze_trace(&args),
         "help" | _ => {
             println!("{}", HELP);
             Ok(())
@@ -89,7 +104,7 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "lsp-offload: LSP-Offload (AAAI'25) reproduction.
-subcommands: analyze | simulate | train | bias | tune   (see module docs)";
+subcommands: analyze | simulate | train | bias | tune | analyze-trace   (see module docs)";
 
 fn profile(args: &CliArgs) -> Result<HardwareProfile> {
     let name = args.get("profile").unwrap_or("workstation");
@@ -177,9 +192,18 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown schedule {which:?}"))?]
     };
     let run_async = kinds.contains(&ScheduleKind::AsyncLsp);
-    for kind in kinds {
+    for &kind in &kinds {
         let rep = build_schedule(kind, &hw, &w, iters)?;
         rep.print_row();
+    }
+    // Sim-only Chrome trace of the first selected schedule's predicted
+    // task timeline (no runtime tracks; artifact-free).
+    if let Some(path) = args.get("trace-out") {
+        let kind = kinds[0];
+        let sched = lsp_offload::sim::schedules::build_sim(kind, &hw, &w, iters).run()?;
+        lsp_offload::trace::Tracer::disabled()
+            .export_chrome(std::path::Path::new(path), Some((kind.name(), &sched)))?;
+        println!("wrote sim trace ({}, {} tasks) to {path}", kind.name(), sched.len());
     }
     if run_async {
         // Predicted stall: the same gated-link-exposure arithmetic the
@@ -260,13 +284,62 @@ fn cmd_train(args: &CliArgs) -> Result<()> {
         cfg.lcfs
     );
     let mut tr = Trainer::new(&eng, cfg)?;
-    let report = tr.train()?;
+    let mut report = tr.train()?;
+    if let Some(path) = tr.ctx().cfg.report_json.clone() {
+        report.write_json(std::path::Path::new(&path))?;
+        report.report_json_path = Some(path);
+    }
     report.print();
     tr.metrics().print_phase_breakdown();
     if let Some(csv) = args.get("csv") {
         tr.metrics().write_csv(std::path::Path::new(csv))?;
         println!("wrote loss curve to {csv}");
     }
+    // Trace export: snapshot what is needed, then drop the trainer FIRST —
+    // that joins the link/updater threads, so the track buffers are
+    // quiescent when the exporter walks them.
+    if let Some(path) = tr.ctx().cfg.trace_out.clone() {
+        let tracer = tr.ctx().tracer().clone();
+        let policy = tr.ctx().cfg.policy.name();
+        let overlay = ScheduleKind::for_policy(policy).map(|kind| {
+            let d_sub = eng.man.config.d_model / 2;
+            let mut w = Workload::from_manifest(&eng.man, d_sub.max(1));
+            w.link_chunk_elems = tr.ctx().cfg.link_chunk_elems;
+            let mut hw = HardwareProfile::workstation();
+            // Match the DES's links to the run's emulated bandwidth.
+            let bw = tr.ctx().cfg.bw_bytes_per_s / tr.ctx().cfg.time_scale.max(1e-9);
+            hw.h2d_bytes_per_s = bw;
+            hw.d2h_bytes_per_s = bw;
+            let iters = (tr.ctx().cfg.steps as usize).clamp(1, 4);
+            (kind, lsp_offload::sim::schedules::build_sim(kind, &hw, &w, iters).run())
+        });
+        drop(tr);
+        let overlay = match overlay {
+            Some((kind, sched)) => Some((kind.name(), sched?)),
+            None => None,
+        };
+        let sim_ref = overlay.as_ref().map(|(n, s)| (*n, s.as_slice()));
+        tracer.export_chrome(std::path::Path::new(&path), sim_ref)?;
+        println!(
+            "wrote trace ({} events, {} dropped{}) to {path}",
+            tracer.total_events(),
+            tracer.dropped(),
+            if sim_ref.is_some() { ", sim overlay" } else { "" },
+        );
+    }
+    Ok(())
+}
+
+/// `analyze-trace FILE [--top K]`: digest a `--trace-out` file into a
+/// critical-path walk, top-K stall attributions, the fault/retransmit
+/// timeline, and counter maxima.
+fn cmd_analyze_trace(args: &CliArgs) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: lsp-offload analyze-trace FILE [--top K]");
+    };
+    let top_k = args.get_u64("top")?.unwrap_or(8) as usize;
+    let report = lsp_offload::trace::analyze_file(std::path::Path::new(path), top_k)?;
+    println!("{report}");
     Ok(())
 }
 

@@ -39,6 +39,12 @@ pub struct Scheduled {
     pub end: f64,
 }
 
+impl Scheduled {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct Sim {
     tasks: Vec<TaskSpec>,

@@ -63,6 +63,20 @@ impl ScheduleKind {
         }
     }
 
+    /// The DES schedule that models a given runtime training policy — the
+    /// sim-overlay tracks of `train --trace-out` predict this kind's task
+    /// timeline next to the measured one.  `None` for policies the DES has
+    /// no model of (LoRA / GaLore train entirely on-GPU).
+    pub fn for_policy(policy: &str) -> Option<ScheduleKind> {
+        match policy {
+            "native" => Some(ScheduleKind::Native),
+            "zero" => Some(ScheduleKind::Zero),
+            "lsp" => Some(ScheduleKind::LspLayerwise),
+            "async-lsp" => Some(ScheduleKind::AsyncLsp),
+            _ => None,
+        }
+    }
+
     pub const ALL: [ScheduleKind; 7] = [
         ScheduleKind::Native,
         ScheduleKind::SwapOnly,

@@ -1,0 +1,342 @@
+//! Browser-less digest of an exported Chrome trace
+//! (`lsp-offload analyze-trace FILE`): a critical-path coverage walk, a
+//! top-k stall attribution by span, and the fault/retransmit timeline.
+//!
+//! The walk reconstructs top-level spans per `(pid, tid)` track, then
+//! sweeps the run's wall extent attributing every segment to the
+//! *most-upstream busy domain* (driver before links before updater —
+//! when the driver computes, it is the critical path; when it is idle,
+//! whichever pipeline stage is busy explains the stall).  Sim-prediction
+//! tracks (pid [`SIM_PID`]) are summarized separately so predicted and
+//! measured makespans sit side by side.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::chrome::SIM_PID;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+struct SpanRow {
+    pid: u64,
+    name: String,
+    start_us: f64,
+    end_us: f64,
+    /// Nesting depth at open time (0 = top level).
+    depth: usize,
+}
+
+#[derive(Debug, Clone)]
+struct InstantRow {
+    pid: u64,
+    name: String,
+    ts_us: f64,
+    args: String,
+}
+
+fn domain_label(pid: u64) -> String {
+    match pid {
+        1 => "driver".into(),
+        2 => "link-up".into(),
+        3 => "link-down".into(),
+        4 => "updater".into(),
+        5 => "counters".into(),
+        SIM_PID => "sim".into(),
+        other => format!("pid{other}"),
+    }
+}
+
+/// Names that belong on the fault/retransmit timeline.
+fn is_fault_instant(name: &str) -> bool {
+    name.starts_with("fault_")
+        || matches!(
+            name,
+            "retransmit" | "backoff" | "retry_exhausted" | "worker_restart" | "stale_drain"
+                | "held_apply"
+        )
+}
+
+fn compact_args(j: Option<&Json>) -> String {
+    match j {
+        Some(Json::Obj(m)) => {
+            let parts: Vec<String> = m.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            parts.join(" ")
+        }
+        _ => String::new(),
+    }
+}
+
+/// Parse and summarize a trace file; returns the human-readable report.
+pub fn analyze_file(path: &Path, top_k: usize) -> Result<String> {
+    let txt = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace file {}", path.display()))?;
+    let doc = Json::parse(&txt).context("trace file is not valid JSON")?;
+    let events = doc
+        .get("traceEvents")
+        .ok_or_else(|| anyhow::anyhow!("no traceEvents key — not a Chrome trace"))?
+        .as_arr()?;
+
+    let mut spans: Vec<SpanRow> = Vec::new();
+    let mut instants: Vec<InstantRow> = Vec::new();
+    let mut stacks: BTreeMap<(u64, u64), Vec<(String, f64)>> = BTreeMap::new();
+    let mut names: BTreeMap<u64, String> = BTreeMap::new();
+    let mut counter_series: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str().ok()).unwrap_or("");
+        let pid = ev.get("pid").and_then(|p| p.as_f64().ok()).unwrap_or(0.0) as u64;
+        let tid = ev.get("tid").and_then(|p| p.as_f64().ok()).unwrap_or(0.0) as u64;
+        let name = ev.get("name").and_then(|n| n.as_str().ok()).unwrap_or("").to_string();
+        let ts = ev.get("ts").and_then(|t| t.as_f64().ok()).unwrap_or(0.0);
+        match ph {
+            "M" => {
+                if name == "process_name" {
+                    if let Some(label) =
+                        ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str().ok())
+                    {
+                        names.insert(pid, label.to_string());
+                    }
+                }
+            }
+            "B" => {
+                stacks.entry((pid, tid)).or_default().push((name, ts));
+            }
+            "E" => {
+                let stack = stacks.entry((pid, tid)).or_default();
+                let Some((open_name, start)) = stack.pop() else {
+                    bail!("unbalanced E for {name:?} on pid {pid} tid {tid}");
+                };
+                spans.push(SpanRow {
+                    pid,
+                    name: open_name,
+                    start_us: start,
+                    end_us: ts,
+                    depth: stack.len(),
+                });
+            }
+            "i" => instants.push(InstantRow {
+                pid,
+                name,
+                ts_us: ts,
+                args: compact_args(ev.get("args")),
+            }),
+            "C" => {
+                if let Some(Json::Obj(m)) = ev.get("args") {
+                    for (k, v) in m {
+                        if let Ok(x) = v.as_f64() {
+                            let e = counter_series
+                                .entry(format!("{name}.{k}"))
+                                .or_insert((0, f64::MIN));
+                            e.0 += 1;
+                            e.1 = e.1.max(x);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    for ((pid, tid), stack) in &stacks {
+        if !stack.is_empty() {
+            bail!("{} unclosed span(s) on pid {pid} tid {tid}", stack.len());
+        }
+    }
+
+    let runtime: Vec<&SpanRow> = spans.iter().filter(|s| s.pid != SIM_PID).collect();
+    let sim: Vec<&SpanRow> = spans.iter().filter(|s| s.pid == SIM_PID).collect();
+    let extent = |rows: &[&SpanRow]| -> (f64, f64) {
+        let lo = rows.iter().map(|s| s.start_us).fold(f64::INFINITY, f64::min);
+        let hi = rows.iter().map(|s| s.end_us).fold(0.0, f64::max);
+        (if lo.is_finite() { lo } else { 0.0 }, hi)
+    };
+
+    let mut out = String::new();
+    let _ = writeln!(out, "trace: {}", path.display());
+    if let Some(other) = doc.get("otherData") {
+        let clock = other.get("clock").and_then(|c| c.as_str().ok()).unwrap_or("?");
+        let _ = writeln!(out, "clock source: {clock}");
+    }
+    let (rt_lo, rt_hi) = extent(&runtime);
+    let _ = writeln!(
+        out,
+        "runtime: {} spans, {} instants over [{:.1}; {:.1}] us (extent {:.1} us)",
+        runtime.len(),
+        instants.len(),
+        rt_lo,
+        rt_hi,
+        rt_hi - rt_lo
+    );
+    if !sim.is_empty() {
+        let (s_lo, s_hi) = extent(&sim);
+        let _ = writeln!(
+            out,
+            "sim prediction ({}): {} tasks, makespan {:.1} us",
+            names.get(&SIM_PID).cloned().unwrap_or_default(),
+            sim.len(),
+            s_hi - s_lo
+        );
+    }
+
+    // ---- top-k span attribution (total busy time by (domain, name)) ----
+    let mut by_name: BTreeMap<(u64, String), (usize, f64, f64)> = BTreeMap::new();
+    for s in &runtime {
+        let dur = (s.end_us - s.start_us).max(0.0);
+        let e = by_name.entry((s.pid, s.name.clone())).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += dur;
+        e.2 = e.2.max(dur);
+    }
+    let mut rows: Vec<_> = by_name.into_iter().collect();
+    rows.sort_by(|a, b| b.1 .1.total_cmp(&a.1 .1));
+    let _ = writeln!(out, "\ntop spans by total time:");
+    let _ = writeln!(out, "  {:<10} {:<16} {:>6} {:>12} {:>12}", "domain", "span", "n", "total_us",
+        "max_us");
+    for ((pid, name), (n, total, max)) in rows.iter().take(top_k) {
+        let _ = writeln!(
+            out,
+            "  {:<10} {:<16} {:>6} {:>12.1} {:>12.1}",
+            domain_label(*pid),
+            name,
+            n,
+            total,
+            max
+        );
+    }
+
+    // ---- critical-path coverage walk -----------------------------------
+    // Top-level spans per domain, swept over the wall extent; each segment
+    // is attributed to the most-upstream busy domain (driver > link-up >
+    // link-down > updater).
+    let mut per_domain: BTreeMap<u64, Vec<&SpanRow>> = BTreeMap::new();
+    for s in &runtime {
+        if s.depth == 0 && s.pid != 5 {
+            per_domain.entry(s.pid).or_default().push(s);
+        }
+    }
+    for v in per_domain.values_mut() {
+        v.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+    }
+    let mut bounds: Vec<f64> = Vec::new();
+    for v in per_domain.values() {
+        for s in v {
+            bounds.push(s.start_us);
+            bounds.push(s.end_us);
+        }
+    }
+    bounds.sort_by(f64::total_cmp);
+    bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+    let mut attribution: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut idle = 0.0;
+    for w in bounds.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let mid = (lo + hi) / 2.0;
+        let mut hit = None;
+        for pid in [1u64, 2, 3, 4] {
+            if let Some(v) = per_domain.get(&pid) {
+                if let Some(s) =
+                    v.iter().find(|s| s.start_us <= mid && mid < s.end_us)
+                {
+                    hit = Some((domain_label(pid), s.name.clone()));
+                    break;
+                }
+            }
+        }
+        match hit {
+            Some(k) => *attribution.entry(k).or_default() += hi - lo,
+            None => idle += hi - lo,
+        }
+    }
+    let mut attr: Vec<_> = attribution.into_iter().collect();
+    attr.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let _ = writeln!(out, "\ncritical-path walk (wall attributed to most-upstream busy domain):");
+    for ((dom, name), us) in attr.iter().take(top_k) {
+        let pct = if rt_hi > rt_lo { us / (rt_hi - rt_lo) * 100.0 } else { 0.0 };
+        let _ = writeln!(out, "  {:<10} {:<16} {:>12.1} us  ({:>5.1}%)", dom, name, us, pct);
+    }
+    if idle > 0.0 {
+        let pct = if rt_hi > rt_lo { idle / (rt_hi - rt_lo) * 100.0 } else { 0.0 };
+        let _ = writeln!(out, "  {:<10} {:<16} {:>12.1} us  ({:>5.1}%)", "(idle)", "-", idle, pct);
+    }
+
+    // ---- fault / retransmit timeline -----------------------------------
+    let mut faults: Vec<&InstantRow> =
+        instants.iter().filter(|i| is_fault_instant(&i.name)).collect();
+    faults.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    let _ = writeln!(out, "\nfault/retransmit timeline ({} events):", faults.len());
+    for i in faults.iter().take(top_k.max(20)) {
+        let _ = writeln!(
+            out,
+            "  {:>12.1} us  {:<10} {:<20} {}",
+            i.ts_us,
+            domain_label(i.pid),
+            i.name,
+            i.args
+        );
+    }
+    if faults.len() > top_k.max(20) {
+        let _ = writeln!(out, "  ... {} more", faults.len() - top_k.max(20));
+    }
+
+    if !counter_series.is_empty() {
+        let _ = writeln!(out, "\ncounter maxima:");
+        for (name, (n, max)) in &counter_series {
+            let _ = writeln!(out, "  {:<24} max {:>12.1}  (n={})", name, max, n);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::comm::LinkClock;
+    use crate::trace::{Arg, Track, Tracer};
+
+    #[test]
+    fn analyze_digests_an_exported_trace() {
+        let clock = LinkClock::new_virtual();
+        let t = Tracer::enabled(clock.clone());
+        let vc = match &clock {
+            LinkClock::Virtual(vc) => vc.clone(),
+            LinkClock::Real => unreachable!(),
+        };
+        t.begin(Track::Driver, "step", &[]);
+        t.begin(Track::Driver, "fwd", &[]);
+        vc.advance(4000);
+        t.end(Track::Driver, "fwd", &[]);
+        t.end(Track::Driver, "step", &[]);
+        t.begin(Track::LinkUp, "xfer", &[("bytes", Arg::U64(128))]);
+        vc.advance(2000);
+        t.end(Track::LinkUp, "xfer", &[]);
+        t.instant(Track::LinkUp, "fault_drop", &[("step", Arg::U64(1)), ("chunk", Arg::U64(0))]);
+        t.instant(Track::Updater, "worker_restart", &[("restarts", Arg::U64(1))]);
+        t.counter("queues", &[("up", Arg::U64(7))]);
+
+        let mut path = std::env::temp_dir();
+        path.push(format!("lsp_trace_analyze_{}.json", std::process::id()));
+        t.export_chrome(&path, None).unwrap();
+        let report = analyze_file(&path, 10).unwrap();
+        assert!(report.contains("clock source: virtual"), "{report}");
+        assert!(report.contains("fault_drop"), "{report}");
+        assert!(report.contains("worker_restart"), "{report}");
+        assert!(report.contains("queues.up"), "{report}");
+        assert!(report.contains("critical-path walk"), "{report}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn analyze_rejects_unbalanced_spans() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("lsp_trace_analyze_bad_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"traceEvents":[{"ph":"B","pid":1,"tid":0,"ts":0,"name":"fwd"}]}"#,
+        )
+        .unwrap();
+        assert!(analyze_file(&path, 5).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

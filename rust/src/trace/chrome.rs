@@ -1,0 +1,270 @@
+//! Chrome trace-event JSON export ([Trace Event Format]), loadable in
+//! Perfetto / `chrome://tracing`.
+//!
+//! The file carries two families of tracks:
+//!
+//! * **Runtime tracks** — one process per pipeline domain
+//!   ([`Track::pid`]): the driver's per-layer spans, the two links'
+//!   per-chunk transfer spans and fault/retransmit instants, the CPU
+//!   updater's per-chunk Adam spans, and the driver-sampled counters.
+//! * **Sim tracks** (`pid` [`SIM_PID`]) — the DES's *predicted* task
+//!   timeline for the same `ScheduleKind`, one thread per
+//!   [`Resource`], so predicted-vs-measured overlap is a visual diff in
+//!   the same viewer.
+//!
+//! Timestamps are microseconds (Chrome's unit) derived from the tracer's
+//! clock-source nanoseconds; under the virtual clock the whole file is a
+//! deterministic function of the run (pinned by `tests/tracing.rs`).
+//! Events are written per track in record order, so timestamps are
+//! non-decreasing within every `(pid, tid)` — the invariant
+//! `scripts/check_trace.py` checks.
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Arg, Event, Ph, Track, Tracer};
+use crate::sim::engine::{Resource, Scheduled, ALL_RESOURCES};
+use crate::util::json::Json;
+
+/// Chrome `pid` of the simulator-prediction process-track.
+pub const SIM_PID: u64 = 10;
+
+fn arg_json(a: &Arg) -> Json {
+    match a {
+        Arg::U64(v) => Json::Num(*v as f64),
+        Arg::I64(v) => Json::Num(*v as f64),
+        Arg::F64(v) => Json::Num(*v),
+        Arg::Str(s) => Json::Str(s.to_string()),
+    }
+}
+
+fn meta_event(pid: u64, tid: u64, what: &str, label: &str, sort: u64) -> Vec<Json> {
+    let mut out = vec![Json::obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("name", Json::Str(what.into())),
+        ("args", Json::obj(vec![("name", Json::Str(label.into()))])),
+    ])];
+    if what == "process_name" {
+        out.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("name", Json::Str("process_sort_index".into())),
+            ("args", Json::obj(vec![("sort_index", Json::Num(sort as f64))])),
+        ]));
+    }
+    out
+}
+
+fn runtime_event_json(ev: &Event, pid: u64) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(ev.name.into())),
+        ("ph", Json::Str(ev.ph.chrome().into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("ts", Json::Num(ev.ts_ns as f64 / 1000.0)),
+    ];
+    if ev.ph == Ph::Instant {
+        pairs.push(("s", Json::Str("t".into())));
+    }
+    if !ev.args.is_empty() {
+        pairs.push((
+            "args",
+            Json::Obj(ev.args.iter().map(|(k, v)| (k.to_string(), arg_json(v))).collect()),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+fn resource_tid(r: Resource) -> u64 {
+    match r {
+        Resource::Gpu => 1,
+        Resource::Cpu => 2,
+        Resource::H2D => 3,
+        Resource::D2H => 4,
+    }
+}
+
+fn resource_label(r: Resource) -> &'static str {
+    match r {
+        Resource::Gpu => "sim:gpu",
+        Resource::Cpu => "sim:cpu",
+        Resource::H2D => "sim:h2d",
+        Resource::D2H => "sim:d2h",
+    }
+}
+
+/// B/E span pairs for the DES's predicted timeline, one thread per
+/// resource.  Tasks on one resource never overlap (single-server DES), so
+/// emitting them sorted by start keeps per-tid timestamps monotone.
+fn sim_events_json(sim: &[Scheduled]) -> Vec<Json> {
+    let mut out = Vec::with_capacity(sim.len() * 2);
+    for &res in &ALL_RESOURCES {
+        let mut rows: Vec<&Scheduled> = sim.iter().filter(|s| s.spec.resource == res).collect();
+        rows.sort_by(|a, b| {
+            a.start.total_cmp(&b.start).then_with(|| a.spec.name.cmp(&b.spec.name))
+        });
+        let tid = resource_tid(res);
+        for s in rows {
+            let base = |ph: &str, ts_us: f64| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.spec.name.clone())),
+                    ("ph", Json::Str(ph.into())),
+                    ("pid", Json::Num(SIM_PID as f64)),
+                    ("tid", Json::Num(tid as f64)),
+                    ("ts", Json::Num(ts_us)),
+                    ("args", Json::obj(vec![("priority", Json::Num(s.spec.priority as f64))])),
+                ])
+            };
+            out.push(base("B", s.start * 1e6));
+            out.push(base("E", s.end * 1e6));
+        }
+    }
+    out
+}
+
+impl Tracer {
+    /// Write the recorded events (plus an optional `(schedule_name,
+    /// predicted_timeline)` sim overlay) as Chrome trace-event JSON.
+    /// Callable on a disabled tracer to export a sim-only timeline
+    /// (`lsp-offload simulate --trace-out`).
+    ///
+    /// Call only after the pipeline threads have quiesced (the driver
+    /// drops `PipelineCtx` first) — export snapshots the track buffers.
+    pub fn export_chrome(&self, path: &Path, sim: Option<(&str, &[Scheduled])>) -> Result<()> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("create trace file {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        writeln!(w, "{{\"traceEvents\":[")?;
+        let mut first = true;
+        let mut emit = |w: &mut std::io::BufWriter<std::fs::File>, j: &Json| -> Result<()> {
+            if !first {
+                writeln!(w, ",")?;
+            }
+            first = false;
+            write!(w, "{j}")?;
+            Ok(())
+        };
+
+        for t in Track::ALL {
+            for j in meta_event(t.pid(), 0, "process_name", t.name(), t.pid()) {
+                emit(&mut w, &j)?;
+            }
+        }
+        if let Some((label, _)) = sim {
+            for j in
+                meta_event(SIM_PID, 0, "process_name", &format!("sim:{label}"), SIM_PID)
+            {
+                emit(&mut w, &j)?;
+            }
+            for &res in &ALL_RESOURCES {
+                for j in meta_event(SIM_PID, resource_tid(res), "thread_name",
+                    resource_label(res), 0)
+                {
+                    emit(&mut w, &j)?;
+                }
+            }
+        }
+
+        for t in Track::ALL {
+            for ev in self.events(t) {
+                emit(&mut w, &runtime_event_json(&ev, t.pid()))?;
+            }
+        }
+        if let Some((_, sched)) = sim {
+            for j in sim_events_json(sched) {
+                emit(&mut w, &j)?;
+            }
+        }
+
+        let other = Json::obj(vec![
+            ("clock", Json::Str(self.clock_name().into())),
+            ("dropped_events", Json::Num(self.dropped() as f64)),
+            ("tool", Json::Str("lsp-offload".into())),
+        ]);
+        writeln!(w, "\n],\"displayTimeUnit\":\"ms\",\"otherData\":{other}}}")?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::comm::LinkClock;
+    use crate::sim::engine::Sim;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsp_trace_chrome_{}_{name}.json", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn export_round_trips_through_json_parse() {
+        let clock = LinkClock::new_virtual();
+        let t = Tracer::enabled(clock.clone());
+        t.begin(Track::Driver, "step", &[("step", Arg::U64(0))]);
+        if let LinkClock::Virtual(vc) = &clock {
+            vc.advance(2500);
+        }
+        t.instant(Track::LinkUp, "fault_drop", &[("chunk", Arg::U64(1))]);
+        t.counter("queues", &[("up", Arg::U64(3)), ("down", Arg::U64(0))]);
+        t.end(Track::Driver, "step", &[]);
+
+        let mut sim = Sim::new();
+        let a = sim.add("i0.fwd0", Resource::Gpu, 1e-3, &[]);
+        sim.add("i0.off0", Resource::D2H, 2e-3, &[a]);
+        let sched = sim.run().unwrap();
+
+        let path = tmp("roundtrip");
+        t.export_chrome(&path, Some(("lsp-layerwise", &sched))).unwrap();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&txt).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 5 runtime process_name + 5 sort_index + sim process_name +
+        // sort_index + 4 thread_name + 4 runtime events + 4 sim B/E.
+        assert_eq!(events.len(), 24);
+        let span_b = events
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(|p| p.as_str().ok()) == Some("B")
+                    && e.get("name").and_then(|n| n.as_str().ok()) == Some("step")
+            })
+            .expect("driver B event present");
+        assert_eq!(span_b.get("ts").unwrap().as_f64().unwrap(), 0.0);
+        let span_e = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str().ok()) == Some("E")
+                && e.get("pid").unwrap().as_f64().unwrap() == 1.0)
+            .unwrap();
+        assert_eq!(span_e.get("ts").unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(
+            doc.get("otherData").unwrap().get("clock").unwrap().as_str().unwrap(),
+            "virtual"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sim_only_export_from_disabled_tracer() {
+        let mut sim = Sim::new();
+        sim.add("i0.upd0", Resource::Cpu, 5e-3, &[]);
+        let sched = sim.run().unwrap();
+        let path = tmp("simonly");
+        Tracer::disabled().export_chrome(&path, Some(("zero", &sched))).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.iter().any(|e| {
+            e.get("pid").and_then(|p| p.as_f64().ok()) == Some(SIM_PID as f64)
+                && e.get("ph").and_then(|p| p.as_str().ok()) == Some("B")
+        }));
+        std::fs::remove_file(&path).ok();
+    }
+}

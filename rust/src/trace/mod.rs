@@ -1,0 +1,440 @@
+//! Deterministic structured event tracing for the offload pipeline.
+//!
+//! Every pipeline thread (driver, d2h link, h2d link, CPU updater) records
+//! spans, instant events and counter samples into a per-track bounded
+//! buffer owned by the shared [`Tracer`] handle.  The design constraints,
+//! in order:
+//!
+//! 1. **The disabled path costs ~one branch and allocates nothing.**  A
+//!    `Tracer::disabled()` handle carries no buffers at all (`inner` is
+//!    `None`), so every record call is a single `Option` check; an enabled
+//!    tracer that was runtime-switched off stops at one relaxed atomic
+//!    load.  The `tracing_overhead` bench row in `benches/hotpath.rs` pins
+//!    this (acceptance: <= 2% slowdown on a small fused kernel with a
+//!    disabled tracer consulted every iteration), and
+//!    `coordinator::worker`'s pool-recycling test pins the
+//!    zero-allocation property.
+//! 2. **Timestamps come from the negotiated [`LinkClock`].**  Under the
+//!    virtual clock every timestamp is deterministic emulated time, so a
+//!    virtual-clock trace of a serialized pipeline is bit-for-bit
+//!    reproducible (pinned by `tests/tracing.rs`); under the real clock
+//!    timestamps fall back to a monotonic wall offset from the tracer's
+//!    construction instant — those are the *real-clock fields* the golden
+//!    test ignores by running virtual.
+//! 3. **One writer per track.**  Each [`Track`] is written by exactly one
+//!    pipeline thread, so the per-track mutex is uncontended and events
+//!    within a track are totally ordered with non-decreasing timestamps
+//!    (both clocks are monotone) — the invariant
+//!    `scripts/check_trace.py` verifies on every exported file.
+//!
+//! Export is Chrome trace-event JSON ([`Tracer::export_chrome`],
+//! `trace/chrome.rs`), loadable in Perfetto / `chrome://tracing`, with one
+//! process-track per pipeline domain plus an optional set of parallel
+//! tracks carrying the DES's *predicted* task timeline for the same
+//! schedule — predicted-vs-measured overlap as a visual diff.  The
+//! `lsp-offload analyze-trace` summary (`trace/analyze.rs`) digests the
+//! same file without a browser.
+
+pub mod analyze;
+pub mod chrome;
+
+pub use analyze::analyze_file;
+pub use chrome::SIM_PID;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::comm::LinkClock;
+use crate::coordinator::fault::lock_recover;
+
+/// Default per-track event capacity; overflowing events are counted in
+/// [`Tracer::dropped`] (and reported in the export metadata) rather than
+/// reallocating without bound.
+pub const DEFAULT_TRACK_CAP: usize = 1 << 20;
+
+/// One pipeline domain = one process-track in the exported trace.  Each
+/// track has exactly one writer thread (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    /// The training driver: per-layer fwd/bwd, head, compress, step spans.
+    Driver,
+    /// The GPU->CPU (d2h) link thread: per-chunk transfer spans, fault and
+    /// retransmit instants.
+    LinkUp,
+    /// The CPU->GPU (h2d) link thread.
+    LinkDown,
+    /// The supervised CPU-Adam updater: per-chunk update spans, restart
+    /// markers.
+    Updater,
+    /// Driver-sampled counter tracks (queue depth, in-flight ledger, pool
+    /// hit/miss).
+    Counters,
+}
+
+impl Track {
+    pub const ALL: [Track; 5] =
+        [Track::Driver, Track::LinkUp, Track::LinkDown, Track::Updater, Track::Counters];
+
+    /// Chrome trace `pid` — one process-track per domain.
+    pub fn pid(self) -> u64 {
+        match self {
+            Track::Driver => 1,
+            Track::LinkUp => 2,
+            Track::LinkDown => 3,
+            Track::Updater => 4,
+            Track::Counters => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Track::Driver => "driver",
+            Track::LinkUp => "link-up (d2h)",
+            Track::LinkDown => "link-down (h2d)",
+            Track::Updater => "cpu-updater",
+            Track::Counters => "counters",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Track::Driver => 0,
+            Track::LinkUp => 1,
+            Track::LinkDown => 2,
+            Track::Updater => 3,
+            Track::Counters => 4,
+        }
+    }
+}
+
+/// Chrome trace-event phase of a recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    /// Span open (`"B"`); must be balanced by a same-name [`Ph::End`] on
+    /// the same track.
+    Begin,
+    /// Span close (`"E"`).
+    End,
+    /// Instant event (`"i"`, thread scope).
+    Instant,
+    /// Counter sample (`"C"`); args carry the series values.
+    Counter,
+}
+
+impl Ph {
+    pub fn chrome(self) -> &'static str {
+        match self {
+            Ph::Begin => "B",
+            Ph::End => "E",
+            Ph::Instant => "i",
+            Ph::Counter => "C",
+        }
+    }
+}
+
+/// A scalar event argument.  Scalars build on the stack, so passing an
+/// `&[("k", Arg::U64(v))]` slice to a disabled tracer allocates nothing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arg {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    /// A static label (codec names, fault kinds); dynamic strings are
+    /// deliberately unsupported so no record call site is tempted to
+    /// allocate before the enabled check.
+    Str(&'static str),
+}
+
+impl From<u64> for Arg {
+    fn from(v: u64) -> Arg {
+        Arg::U64(v)
+    }
+}
+impl From<usize> for Arg {
+    fn from(v: usize) -> Arg {
+        Arg::U64(v as u64)
+    }
+}
+impl From<u32> for Arg {
+    fn from(v: u32) -> Arg {
+        Arg::U64(v as u64)
+    }
+}
+impl From<f64> for Arg {
+    fn from(v: f64) -> Arg {
+        Arg::F64(v)
+    }
+}
+impl From<&'static str> for Arg {
+    fn from(v: &'static str) -> Arg {
+        Arg::Str(v)
+    }
+}
+
+/// One recorded event.  `name` is static (the span/instant vocabulary is
+/// fixed at compile time); per-event identity (step, param, chunk...)
+/// travels in `args`.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub ph: Ph,
+    pub name: &'static str,
+    /// Timestamp in nanoseconds from the negotiated clock source (virtual
+    /// link time, or wall offset from tracer construction under the real
+    /// clock).
+    pub ts_ns: u64,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+impl Event {
+    /// Look up an integer argument by name (test helper).
+    pub fn arg_u64(&self, name: &str) -> Option<u64> {
+        self.args.iter().find(|(k, _)| *k == name).and_then(|(_, v)| match v {
+            Arg::U64(n) => Some(*n),
+            Arg::I64(n) => u64::try_from(*n).ok(),
+            _ => None,
+        })
+    }
+
+    /// Look up a static-string argument by name (test helper).
+    pub fn arg_str(&self, name: &str) -> Option<&'static str> {
+        self.args.iter().find(|(k, _)| *k == name).and_then(|(_, v)| match v {
+            Arg::Str(s) => Some(*s),
+            _ => None,
+        })
+    }
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    enabled: AtomicBool,
+    clock: LinkClock,
+    /// Wall-clock origin for real-clock timestamp fallback.
+    start: std::time::Instant,
+    tracks: [Mutex<Vec<Event>>; 5],
+    cap: usize,
+    dropped: AtomicU64,
+}
+
+impl TraceInner {
+    fn now_ns(&self) -> u64 {
+        if self.clock.is_virtual() {
+            self.clock.now_ns()
+        } else {
+            self.start.elapsed().as_nanos() as u64
+        }
+    }
+}
+
+/// The cloneable recorder handle threaded through the pipeline (driver via
+/// `PipelineCtx`, links and updater via `FaultFabric`).  A disabled handle
+/// is an empty shell — see the module docs for the overhead contract.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tracer(enabled={})", self.is_enabled())
+    }
+}
+
+impl Tracer {
+    /// A tracer that records nothing and holds no buffers — the default
+    /// everywhere tracing was not requested.
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// An enabled tracer timestamping from `clock` (the pipeline's
+    /// negotiated link clock) with the default per-track capacity.
+    pub fn enabled(clock: LinkClock) -> Tracer {
+        Tracer::with_capacity(clock, DEFAULT_TRACK_CAP)
+    }
+
+    /// An enabled tracer with an explicit per-track event capacity.
+    pub fn with_capacity(clock: LinkClock, cap: usize) -> Tracer {
+        Tracer {
+            inner: Some(Arc::new(TraceInner {
+                enabled: AtomicBool::new(true),
+                clock,
+                start: std::time::Instant::now(),
+                tracks: Default::default(),
+                cap,
+                dropped: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    /// The one gate every record call passes: `None` when the handle is a
+    /// disabled shell or the recorder was switched off.
+    #[inline]
+    fn on(&self) -> Option<&TraceInner> {
+        let inner = self.inner.as_deref()?;
+        if inner.enabled.load(Ordering::Relaxed) {
+            Some(inner)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.on().is_some()
+    }
+
+    /// Runtime off-switch (keeps buffers; `export_chrome` still works).
+    pub fn set_enabled(&self, on: bool) {
+        if let Some(inner) = self.inner.as_deref() {
+            inner.enabled.store(on, Ordering::Relaxed);
+        }
+    }
+
+    /// The clock source name recorded in the export metadata.
+    pub fn clock_name(&self) -> &'static str {
+        match self.inner.as_deref() {
+            Some(i) => i.clock.name(),
+            None => "disabled",
+        }
+    }
+
+    fn record(&self, track: Track, ph: Ph, name: &'static str, args: &[(&'static str, Arg)]) {
+        let Some(inner) = self.on() else { return };
+        let ts_ns = inner.now_ns();
+        let mut buf = lock_recover(&inner.tracks[track.index()]);
+        if buf.len() >= inner.cap {
+            inner.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        buf.push(Event { ph, name, ts_ns, args: args.to_vec() });
+    }
+
+    /// Open a span on `track`; balance with [`Tracer::end`] (same name,
+    /// same track, properly nested).
+    #[inline]
+    pub fn begin(&self, track: Track, name: &'static str, args: &[(&'static str, Arg)]) {
+        self.record(track, Ph::Begin, name, args);
+    }
+
+    /// Close the innermost open span named `name` on `track`.
+    #[inline]
+    pub fn end(&self, track: Track, name: &'static str, args: &[(&'static str, Arg)]) {
+        self.record(track, Ph::End, name, args);
+    }
+
+    /// Record a point event (fault injections, retransmits, restarts...).
+    #[inline]
+    pub fn instant(&self, track: Track, name: &'static str, args: &[(&'static str, Arg)]) {
+        self.record(track, Ph::Instant, name, args);
+    }
+
+    /// Record a counter sample; each arg becomes one series of the named
+    /// counter track.
+    #[inline]
+    pub fn counter(&self, name: &'static str, args: &[(&'static str, Arg)]) {
+        self.record(Track::Counters, Ph::Counter, name, args);
+    }
+
+    /// Snapshot of one track's events (tests, `analyze-trace` internals).
+    pub fn events(&self, track: Track) -> Vec<Event> {
+        match self.inner.as_deref() {
+            Some(inner) => lock_recover(&inner.tracks[track.index()]).clone(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Total recorded events across all tracks (0 for a disabled shell).
+    pub fn total_events(&self) -> usize {
+        match self.inner.as_deref() {
+            Some(inner) => {
+                Track::ALL.iter().map(|t| lock_recover(&inner.tracks[t.index()]).len()).sum()
+            }
+            None => 0,
+        }
+    }
+
+    /// Events rejected by the per-track capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_deref().map_or(0, |i| i.dropped.load(Ordering::Relaxed))
+    }
+
+    /// Bytes of event-buffer storage currently allocated — exactly 0 for a
+    /// disabled shell, which is what the zero-allocation property test
+    /// pins.
+    pub fn buffer_bytes(&self) -> usize {
+        match self.inner.as_deref() {
+            Some(inner) => Track::ALL
+                .iter()
+                .map(|t| {
+                    lock_recover(&inner.tracks[t.index()]).capacity() * std::mem::size_of::<Event>()
+                })
+                .sum(),
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_an_empty_shell() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        for _ in 0..1000 {
+            t.begin(Track::Driver, "fwd", &[("layer", Arg::U64(1))]);
+            t.end(Track::Driver, "fwd", &[]);
+            t.instant(Track::LinkUp, "fault_drop", &[("step", Arg::U64(3))]);
+            t.counter("queues", &[("up", Arg::U64(2))]);
+        }
+        assert_eq!(t.total_events(), 0);
+        assert_eq!(t.buffer_bytes(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn virtual_clock_timestamps_are_deterministic() {
+        let clock = LinkClock::new_virtual();
+        let t = Tracer::enabled(clock.clone());
+        t.begin(Track::Driver, "step", &[]);
+        if let LinkClock::Virtual(vc) = &clock {
+            vc.advance(1500);
+        }
+        t.end(Track::Driver, "step", &[]);
+        let ev = t.events(Track::Driver);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].ts_ns, 0);
+        assert_eq!(ev[1].ts_ns, 1500);
+    }
+
+    #[test]
+    fn capacity_bound_counts_dropped_events() {
+        let t = Tracer::with_capacity(LinkClock::new_virtual(), 4);
+        for i in 0..10u64 {
+            t.instant(Track::Driver, "tick", &[("i", Arg::U64(i))]);
+        }
+        assert_eq!(t.events(Track::Driver).len(), 4);
+        assert_eq!(t.dropped(), 6);
+    }
+
+    #[test]
+    fn runtime_off_switch_stops_recording() {
+        let t = Tracer::enabled(LinkClock::new_virtual());
+        t.instant(Track::Driver, "a", &[]);
+        t.set_enabled(false);
+        assert!(!t.is_enabled());
+        t.instant(Track::Driver, "b", &[]);
+        assert_eq!(t.total_events(), 1);
+    }
+
+    #[test]
+    fn event_arg_lookup() {
+        let t = Tracer::enabled(LinkClock::new_virtual());
+        t.instant(Track::Updater, "fault_panic", &[("step", 2u64.into()), ("kind", "drop".into())]);
+        let ev = &t.events(Track::Updater)[0];
+        assert_eq!(ev.arg_u64("step"), Some(2));
+        assert_eq!(ev.arg_str("kind"), Some("drop"));
+        assert_eq!(ev.arg_u64("missing"), None);
+    }
+}

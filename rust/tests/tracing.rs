@@ -1,0 +1,242 @@
+//! Deterministic pipeline tracing, artifact-free.
+//!
+//! A strictly serialized virtual-clock pipeline — the driver pushes one
+//! gradient and blocks on its delta before dispatching the next — makes
+//! every trace event's (track, order, timestamp) a pure function of the
+//! inputs: two identical runs must export byte-identical Chrome-trace
+//! files (the golden determinism contract of `crate::trace`).  Each stage
+//! records all of its events *before* handing the message downstream (the
+//! links end their `xfer` span before the egress push; the updater ends
+//! `cpu_adam` before its push), so by the time the driver's blocking pop
+//! returns, every upstream buffer is quiescent and no later clock advance
+//! can perturb a pending timestamp read.
+//!
+//! A second run under a fault plan pins that injected drop/corrupt/panic
+//! events land in the trace at their exact `(step, param, chunk)`
+//! coordinates, with the retransmit/backoff/restart markers around them.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lsp_offload::codec::{make_codec, Codec, CodecKind};
+use lsp_offload::coordinator::comm::{
+    DeltaMsg, Link, LinkClock, OffloadMsg, ParamKey, PrioQueue, WirePayload,
+};
+use lsp_offload::coordinator::fault::{
+    crc32, FaultDir, FaultFabric, FaultKind, FaultPlan, FaultSpec, RetryCfg,
+};
+use lsp_offload::coordinator::worker::CpuUpdater;
+use lsp_offload::model::memory::PaperModel;
+use lsp_offload::sim::schedules::build_sim;
+use lsp_offload::sim::{HardwareProfile, ScheduleKind, Workload};
+use lsp_offload::tensor::kernel::KernelConfig;
+use lsp_offload::trace::{analyze_file, Event, Track, Tracer, SIM_PID};
+use lsp_offload::util::bufpool::BufPool;
+use lsp_offload::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsp_tracing_it_{}_{name}.json", std::process::id()));
+    p
+}
+
+fn f32_codec() -> Arc<dyn Codec> {
+    make_codec(CodecKind::F32Raw)
+}
+
+/// A whole-payload f32 gradient with a stamped checksum — the wire shape
+/// the checksummed pipeline produces.
+fn gradient(param: usize, data: &[f32], step: u64) -> OffloadMsg {
+    let payload = WirePayload::detached(f32_codec().as_ref(), data);
+    let sum = crc32(payload.as_bytes());
+    let mut msg = OffloadMsg::whole(ParamKey { param_index: param, kind: None }, payload, 0, step);
+    msg.chunk.checksum = sum;
+    msg
+}
+
+/// Run a strictly serialized d2h -> CPU-Adam -> h2d round trip for
+/// `steps` gradients under `plan`, recording into a fresh virtual-clock
+/// tracer whose buffers are then a deterministic function of
+/// `(steps, plan)` — see the module docs for why the serialization makes
+/// this race-free.
+fn serialized_run(steps: u64, plan: Option<FaultPlan>) -> Tracer {
+    let clock = LinkClock::new_virtual();
+    let tracer = Tracer::enabled(clock.clone());
+    let fabric = FaultFabric::new(
+        plan.map(Arc::new),
+        RetryCfg { budget: 3, backoff_ns: 250_000, fallback_after: 2 },
+    )
+    .with_tracer(tracer.clone());
+    let d2h_in = Arc::new(PrioQueue::<OffloadMsg>::new());
+    let d2h_out = Arc::new(PrioQueue::<OffloadMsg>::new());
+    let h2d_in = Arc::new(PrioQueue::<DeltaMsg>::new());
+    let h2d_out = Arc::new(PrioQueue::<DeltaMsg>::new());
+    let mut up = Link::spawn(
+        "d2h",
+        1e6,
+        1.0,
+        clock.clone(),
+        d2h_in.clone(),
+        d2h_out.clone(),
+        FaultDir::D2H,
+        fabric.clone(),
+    );
+    let mut upd = CpuUpdater::spawn(
+        d2h_out.clone(),
+        h2d_in.clone(),
+        1.0,
+        BufPool::new(),
+        KernelConfig::single_threaded(),
+        f32_codec(),
+        fabric.clone(),
+    );
+    let mut down = Link::spawn(
+        "h2d",
+        2e6,
+        1.0,
+        clock.clone(),
+        h2d_in.clone(),
+        h2d_out.clone(),
+        FaultDir::H2D,
+        fabric,
+    );
+    let data: Vec<f32> = (0..256).map(|i| (i as f32) * 0.01 - 1.0).collect();
+    for step in 0..steps {
+        tracer.begin(Track::Driver, "dispatch", &[("step", step.into())]);
+        d2h_in.push(0, gradient(0, &data, step));
+        let delta = h2d_out.pop().expect("a delta comes back for every gradient");
+        assert_eq!(delta.step, step, "serialized round trip preserves step order");
+        tracer.end(Track::Driver, "dispatch", &[]);
+        tracer.counter("queues", &[("up", d2h_in.len().into()), ("down", h2d_in.len().into())]);
+    }
+    d2h_in.close();
+    up.stop();
+    upd.join();
+    down.stop();
+    tracer
+}
+
+/// The golden structure test: two identical virtual-clock runs (same
+/// messages, same fault plan, same sim overlay) must export byte-identical
+/// files, the file must be structurally sound Chrome-trace JSON (balanced
+/// B/E per `(pid, tid)`), and `analyze-trace` must digest it.
+#[test]
+fn virtual_clock_trace_export_is_byte_identical_across_runs() {
+    let hw = HardwareProfile::workstation();
+    let w = Workload::paper(PaperModel::Gpt2_774M, 2048, 64);
+    let kind = ScheduleKind::LspLayerwise;
+    let mut paths = Vec::new();
+    let mut bytes = Vec::new();
+    for run in 0..2 {
+        // A drop fault makes the golden file cover the retransmit path
+        // too; it fires identically in both runs.
+        let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop)
+            .with_dir(FaultDir::D2H)
+            .with_step(1)
+            .with_param(0)
+            .with_chunk(0)]);
+        let tracer = serialized_run(4, Some(plan));
+        assert_eq!(tracer.dropped(), 0);
+        let sched = build_sim(kind, &hw, &w, 2).run().unwrap();
+        let path = tmp(&format!("golden{run}"));
+        tracer.export_chrome(&path, Some((kind.name(), &sched))).unwrap();
+        bytes.push(std::fs::read(&path).unwrap());
+        paths.push(path);
+    }
+    assert!(!bytes[0].is_empty());
+    assert_eq!(bytes[0], bytes[1], "same inputs + virtual clock => byte-identical trace");
+
+    let doc = Json::parse(std::str::from_utf8(&bytes[0]).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut depth: HashMap<(u64, u64), i64> = HashMap::new();
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        let pid = e.get("pid").unwrap().as_f64().unwrap() as u64;
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        match ph {
+            "B" => *depth.entry((pid, tid)).or_default() += 1,
+            "E" => *depth.entry((pid, tid)).or_default() -= 1,
+            _ => {}
+        }
+    }
+    assert!(depth.values().all(|&d| d == 0), "balanced spans per (pid, tid): {depth:?}");
+    let has = |name: &str| {
+        events.iter().any(|e| e.get("name").and_then(|n| n.as_str().ok()) == Some(name))
+    };
+    assert!(has("dispatch"), "driver spans exported");
+    assert!(has("xfer"), "link transfer spans exported");
+    assert!(has("cpu_adam"), "updater spans exported");
+    assert!(has("retransmit"), "retransmit instant exported");
+    assert!(
+        events.iter().any(|e| e.get("pid").unwrap().as_f64().unwrap() as u64 == SIM_PID),
+        "sim-prediction overlay tracks present"
+    );
+    assert_eq!(
+        doc.get("otherData").unwrap().get("clock").unwrap().as_str().unwrap(),
+        "virtual"
+    );
+
+    let digest = analyze_file(&paths[0], 8).unwrap();
+    assert!(digest.contains("fault_drop"), "fault timeline in analyze output:\n{digest}");
+    assert!(digest.contains("retransmit"), "retransmit in analyze output:\n{digest}");
+    for p in paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Injected drop/corrupt/panic faults appear in the trace as instant
+/// events at their exact `(step, param, chunk)` coordinates, bracketed by
+/// the recovery machinery's own markers (backoff, retransmit,
+/// worker_restart) — the trace is a faithful fault log.
+#[test]
+fn injected_faults_land_in_the_trace_at_exact_coordinates() {
+    let plan = FaultPlan::new(vec![
+        FaultSpec::new(FaultKind::PanicUpdater).with_step(1).with_param(0).with_chunk(0),
+        FaultSpec::new(FaultKind::Drop)
+            .with_dir(FaultDir::D2H)
+            .with_step(2)
+            .with_param(0)
+            .with_chunk(0),
+        FaultSpec::new(FaultKind::Corrupt { bit: 9 })
+            .with_dir(FaultDir::D2H)
+            .with_step(3)
+            .with_param(0)
+            .with_chunk(0),
+    ]);
+    let tracer = serialized_run(5, Some(plan));
+
+    let coord = |evs: &[Event], name: &str| -> Option<(u64, u64, u64)> {
+        evs.iter().find(|e| e.name == name).map(|e| {
+            (
+                e.arg_u64("step").expect("step arg"),
+                e.arg_u64("param").expect("param arg"),
+                e.arg_u64("chunk").expect("chunk arg"),
+            )
+        })
+    };
+
+    let up = tracer.events(Track::LinkUp);
+    assert_eq!(coord(&up, "fault_drop"), Some((2, 0, 0)));
+    assert_eq!(coord(&up, "fault_corrupt"), Some((3, 0, 0)));
+    let retrans: Vec<u64> =
+        up.iter().filter(|e| e.name == "retransmit").map(|e| e.arg_u64("step").unwrap()).collect();
+    assert_eq!(retrans, vec![2, 3], "each wire fault retransmits exactly once");
+    assert!(up.iter().any(|e| e.name == "backoff"), "backoff precedes each retransmit");
+
+    let updater = tracer.events(Track::Updater);
+    assert_eq!(coord(&updater, "fault_panic"), Some((1, 0, 0)));
+    let restart =
+        updater.iter().find(|e| e.name == "worker_restart").expect("worker_restart instant");
+    assert_eq!(restart.arg_u64("restarts"), Some(1));
+    assert_eq!(restart.arg_u64("replayable"), Some(1), "panicked message parked for replay");
+    // The panicked attempt parks its message before the span opens, so
+    // the replay contributes exactly one balanced span per gradient.
+    let span_events = updater.iter().filter(|e| e.name == "cpu_adam").count();
+    assert_eq!(span_events, 10, "5 gradients x balanced begin/end");
+
+    // The clean h2d direction saw no faults, only balanced transfers.
+    let down = tracer.events(Track::LinkDown);
+    assert!(down.iter().all(|e| e.name == "xfer"));
+    assert_eq!(down.len(), 10, "5 deltas x begin/end");
+}

@@ -138,6 +138,22 @@ if ! grep -q "profile-ok" <<<"$profile_out"; then
     exit 1
 fi
 
+echo "== trace schema gate (simulate --trace-out + scripts/check_trace.py) =="
+# Artifact-free: export the DES's predicted lsp timeline as a Chrome trace
+# and validate the structural invariants (valid JSON, balanced B/E spans
+# per (pid, tid), monotone per-track timestamps).  A traced virtual-clock
+# training run exercises the runtime tracks too, but needs artifacts —
+# the byte-determinism and fault-coordinate contracts are pinned
+# artifact-free by tests/tracing.rs above.
+trace_tmp="$(mktemp "${TMPDIR:-/tmp}/lsp_trace_gate.XXXXXX.json")"
+./target/release/lsp_offload simulate --schedule lsp --trace-out "$trace_tmp" >/dev/null
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "   schema check skipped: python3 not available"
+else
+    python3 "$ROOT/scripts/check_trace.py" "$trace_tmp" --require-sim
+fi
+rm -f "$trace_tmp"
+
 echo "== bench trajectory gate (>${BENCH_GATE_PCT:-25}% = fail) =="
 # Live gate: an absent trajectory — or the committed empty sentinel (no
 # measured rows yet) — triggers ONE full bench recording on this machine,

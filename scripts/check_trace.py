@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Validate an exported Chrome trace-event file's structural invariants.
+
+Usage: check_trace.py TRACE.json [--require-runtime] [--require-sim]
+
+Checks (all stdlib, no Perfetto needed):
+  * the file is valid JSON with a `traceEvents` array and an `otherData`
+    footer naming the clock source;
+  * every `B` span open has a matching same-name `E` close on the same
+    `(pid, tid)` track, properly nested (the one-writer-per-track
+    invariant of `rust/src/trace/`);
+  * timestamps are non-decreasing within every `(pid, tid)` track (both
+    clock sources are monotone, so a violation means interleaved writers
+    or a reordered export);
+  * instant events carry a scope (`s`), counter events carry args;
+  * `dropped_events` in the footer is reported (non-zero is a warning,
+    not a failure — the recorder's capacity bound is a documented cap).
+
+--require-runtime additionally fails unless at least one runtime track
+(pid 1-5) recorded an event; --require-sim does the same for the
+sim-prediction overlay (pid 10).  `simulate --trace-out` files are
+sim-only; `train --trace-out` files have runtime tracks and, for policies
+the DES models, the overlay too.
+"""
+
+import json
+import sys
+
+RUNTIME_PIDS = {1, 2, 3, 4, 5}
+SIM_PID = 10
+
+
+def fail(msg):
+    print("check-trace: FAIL — %s" % msg)
+    return 1
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip())
+        return 2
+    path = argv[1]
+    require_runtime = "--require-runtime" in argv[2:]
+    require_sim = "--require-sim" in argv[2:]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return fail("cannot parse %s: %s" % (path, e))
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return fail("missing or empty traceEvents array")
+    other = doc.get("otherData", {})
+    clock = other.get("clock")
+    if clock not in ("virtual", "real", "disabled"):
+        return fail("otherData.clock is %r, want virtual/real/disabled" % clock)
+
+    stacks = {}  # (pid, tid) -> list of open span names
+    last_ts = {}  # (pid, tid) -> last timestamp seen
+    counts = {"B": 0, "E": 0, "i": 0, "C": 0, "M": 0}
+    pids = set()
+    for n, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in counts:
+            return fail("event %d: unknown phase %r" % (n, ph))
+        counts[ph] += 1
+        pid, tid = ev.get("pid"), ev.get("tid")
+        if not isinstance(pid, (int, float)) or not isinstance(tid, (int, float)):
+            return fail("event %d: missing pid/tid" % n)
+        key = (int(pid), int(tid))
+        pids.add(key[0])
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            return fail("event %d: missing ts" % n)
+        if ts < last_ts.get(key, float("-inf")):
+            return fail(
+                "event %d (%s %r): ts %.3f < previous %.3f on track %s"
+                % (n, ph, ev.get("name"), ts, last_ts[key], key)
+            )
+        last_ts[key] = ts
+        if ph == "B":
+            stacks.setdefault(key, []).append(ev.get("name"))
+        elif ph == "E":
+            stack = stacks.get(key, [])
+            if not stack:
+                return fail("event %d: E %r with no open span on track %s" % (n, ev.get("name"), key))
+            # Chrome E events may omit the name; when present it must
+            # match the innermost open span (proper nesting).
+            name = ev.get("name")
+            opened = stack.pop()
+            if name is not None and name != opened:
+                return fail(
+                    "event %d: E %r closes span %r on track %s (improper nesting)"
+                    % (n, name, opened, key)
+                )
+        elif ph == "i":
+            if ev.get("s") not in ("t", "p", "g"):
+                return fail("event %d: instant %r lacks a scope" % (n, ev.get("name")))
+        elif ph == "C":
+            if not isinstance(ev.get("args"), dict) or not ev["args"]:
+                return fail("event %d: counter %r has no args" % (n, ev.get("name")))
+    unclosed = {k: v for k, v in stacks.items() if v}
+    if unclosed:
+        return fail("unclosed span(s) at end of trace: %s" % unclosed)
+    if require_runtime and not (pids & RUNTIME_PIDS):
+        return fail("no runtime-track (pid 1-5) events, --require-runtime set")
+    if require_sim and SIM_PID not in pids:
+        return fail("no sim-overlay (pid 10) events, --require-sim set")
+    dropped = other.get("dropped_events", 0)
+    if dropped:
+        print("check-trace: WARNING — %s events dropped at the capacity bound" % dropped)
+    print(
+        "check-trace: OK — %d events (%d B/%d E spans, %d instants, %d counters, "
+        "%d meta) on %d process track(s), clock=%s"
+        % (
+            len(events),
+            counts["B"],
+            counts["E"],
+            counts["i"],
+            counts["C"],
+            counts["M"],
+            len(pids),
+            clock,
+        )
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
