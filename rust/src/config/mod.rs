@@ -40,6 +40,14 @@ pub const MAX_LINK_CHUNK_ELEMS: u64 = 16_777_216;
 /// disables chunking (whole-payload transfers); anything else must be in
 /// `[MIN_LINK_CHUNK_ELEMS, MAX_LINK_CHUNK_ELEMS]`.  Shared by the train
 /// config and the simulator so the flag means the same everywhere.
+///
+/// The floor doubles as the wire protocol's part-count guard: a chunk
+/// budget of at least [`MIN_LINK_CHUNK_ELEMS`] keeps any in-range payload
+/// at far fewer than `u32::MAX` chunks, so `ChunkHeader::{part, parts}`
+/// (u32 on the wire) cannot truncate.  `PipelineCtx::push_offload` still
+/// re-checks the computed count and returns a typed
+/// `PipelineError::ChunkProtocol` — defense in depth for payloads built
+/// outside this parser.
 pub fn parse_link_chunk_elems(v: u64) -> Result<usize> {
     if v != 0 && !(MIN_LINK_CHUNK_ELEMS..=MAX_LINK_CHUNK_ELEMS).contains(&v) {
         bail!(
@@ -48,6 +56,53 @@ pub fn parse_link_chunk_elems(v: u64) -> Result<usize> {
         );
     }
     Ok(v as usize)
+}
+
+/// Largest tenant count accepted by `--tenants` / `"tenants"`: each tenant
+/// is a full model replica with its own driver slice, so the cap is a
+/// sanity bound, not a scheduling limit.
+pub const MAX_TENANTS: u64 = 64;
+
+/// Validate a `--tenants` / `"tenants"` value: at least 1 (solo), at most
+/// [`MAX_TENANTS`].  Shared by the train config and the simulator.
+pub fn parse_tenants(v: u64) -> Result<usize> {
+    if !(1..=MAX_TENANTS).contains(&v) {
+        bail!("tenants {v} must be in [1, {MAX_TENANTS}]");
+    }
+    Ok(v as usize)
+}
+
+/// Parse `--tenant-weights` (comma-separated, e.g. `2,1,1`): every entry
+/// must be a finite positive number.  Missing trailing entries default to
+/// 1.0 at arbitration time, so the list may be shorter than `--tenants`.
+pub fn parse_tenant_weights(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let w: f64 = p
+                .trim()
+                .parse()
+                .with_context(|| format!("tenant weight {p:?} is not a number"))?;
+            if !(w.is_finite() && w > 0.0) {
+                bail!("tenant weight {w} must be a finite positive number");
+            }
+            Ok(w)
+        })
+        .collect()
+}
+
+/// Parse `--tenant-retry-budgets` (comma-separated, e.g. `0,3,3`): each
+/// entry is that tenant's retransmit budget.  Missing trailing entries
+/// default to `retry_budget` at arbitration time.
+pub fn parse_tenant_retry_budgets(s: &str) -> Result<Vec<u32>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            p.trim()
+                .parse::<u32>()
+                .with_context(|| format!("tenant retry budget {p:?} is not an integer"))
+        })
+        .collect()
 }
 
 /// `--key value` / `--flag` parser. Positional args are kept in order.
@@ -218,6 +273,37 @@ pub fn apply_json(cfg: &mut TrainConfig, j: &Json) -> Result<()> {
             "retry_budget" => cfg.retry_budget = v.as_usize()? as u32,
             "retry_backoff_ns" => cfg.retry_backoff_ns = v.as_usize()? as u64,
             "codec_fallback_after" => cfg.codec_fallback_after = v.as_usize()? as u32,
+            // Multi-tenant arbitration (coordinator::arbiter): tenant count,
+            // per-tenant DRR weights and retransmit budgets.  Weights/budgets
+            // accept either a JSON array or the comma-separated string form
+            // used by the CLI flags; short lists pad with defaults.
+            "tenants" => cfg.tenants = parse_tenants(v.as_usize()? as u64)?,
+            "tenant_weights" => {
+                cfg.tenant_weights = if let Ok(s) = v.as_str() {
+                    parse_tenant_weights(s)?
+                } else {
+                    v.as_arr()?
+                        .iter()
+                        .map(|w| {
+                            let w = w.as_f64()?;
+                            if !(w.is_finite() && w > 0.0) {
+                                bail!("tenant weight {w} must be a finite positive number");
+                            }
+                            Ok(w)
+                        })
+                        .collect::<Result<Vec<f64>>>()?
+                };
+            }
+            "tenant_retry_budgets" => {
+                cfg.tenant_retry_budgets = if let Ok(s) = v.as_str() {
+                    parse_tenant_retry_budgets(s)?
+                } else {
+                    v.as_arr()?
+                        .iter()
+                        .map(|b| Ok(b.as_usize()? as u32))
+                        .collect::<Result<Vec<u32>>>()?
+                };
+            }
             // Observability: Chrome-trace timeline and machine-readable
             // report destinations (crate::trace, coordinator::report).
             "trace_out" => cfg.trace_out = Some(v.as_str()?.to_string()),
@@ -346,6 +432,18 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     }
     if let Some(v) = args.get_u64("codec-fallback-after")? {
         cfg.codec_fallback_after = v as u32;
+    }
+    // Multi-tenant arbitration: --tenants K shares the two links and the
+    // CPU updater pool across K pipeline replicas (coordinator::arbiter);
+    // weights/budgets are comma-separated, short lists pad with defaults.
+    if let Some(v) = args.get_u64("tenants")? {
+        cfg.tenants = parse_tenants(v)?;
+    }
+    if let Some(v) = args.get("tenant-weights") {
+        cfg.tenant_weights = parse_tenant_weights(v)?;
+    }
+    if let Some(v) = args.get("tenant-retry-budgets") {
+        cfg.tenant_retry_budgets = parse_tenant_retry_budgets(v)?;
     }
     // Trace destination: --trace-out wins over the JSON `trace_out` key,
     // which wins over the LSP_TRACE_OUT environment variable (the same
@@ -601,6 +699,48 @@ mod tests {
         apply_json(&mut cfg, &j).unwrap();
         assert_eq!(cfg.trace_out.as_deref(), Some("a.json"));
         assert_eq!(cfg.report_json.as_deref(), Some("b.json"));
+    }
+
+    #[test]
+    fn tenant_flags_and_json() {
+        // Defaults: solo tenancy, empty weight/budget overrides.
+        let cfg = train_config_from(&argv("train")).unwrap();
+        assert_eq!(cfg.tenants, 1);
+        assert!(cfg.tenant_weights.is_empty());
+        assert!(cfg.tenant_retry_budgets.is_empty());
+
+        let a = argv("train --tenants 4 --tenant-weights 2,1,1 --tenant-retry-budgets 0,3");
+        let cfg = train_config_from(&a).unwrap();
+        assert_eq!(cfg.tenants, 4);
+        assert_eq!(cfg.tenant_weights, vec![2.0, 1.0, 1.0]);
+        assert_eq!(cfg.tenant_retry_budgets, vec![0, 3]);
+
+        // Out-of-range / malformed values are config errors.
+        assert!(train_config_from(&argv("train --tenants 0")).is_err());
+        assert!(train_config_from(&argv("train --tenants 65")).is_err());
+        assert!(train_config_from(&argv("train --tenant-weights 1,abc")).is_err());
+        assert!(train_config_from(&argv("train --tenant-weights 1,-2")).is_err());
+        assert!(train_config_from(&argv("train --tenant-weights 1,inf")).is_err());
+        assert!(train_config_from(&argv("train --tenant-retry-budgets 1,x")).is_err());
+
+        // JSON config: numbers-and-arrays form...
+        let j = Json::parse(
+            r#"{"tenants": 3, "tenant_weights": [1, 2, 3], "tenant_retry_budgets": [5, 0]}"#,
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.tenants, 3);
+        assert_eq!(cfg.tenant_weights, vec![1.0, 2.0, 3.0]);
+        assert_eq!(cfg.tenant_retry_budgets, vec![5, 0]);
+        // ...or the comma-separated string form shared with the CLI.
+        let j = Json::parse(r#"{"tenant_weights": "4,4", "tenant_retry_budgets": "7"}"#).unwrap();
+        apply_json(&mut cfg, &j).unwrap();
+        assert_eq!(cfg.tenant_weights, vec![4.0, 4.0]);
+        assert_eq!(cfg.tenant_retry_budgets, vec![7]);
+        // Non-positive weights rejected in the array form too.
+        let j = Json::parse(r#"{"tenant_weights": [0]}"#).unwrap();
+        assert!(apply_json(&mut cfg, &j).is_err());
     }
 
     #[test]

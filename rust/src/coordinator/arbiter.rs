@@ -1,0 +1,505 @@
+//! Multi-tenant resource arbiter: N training jobs over ONE link pair.
+//!
+//! The ROADMAP's serving arc ("millions of users" — §Serve) needs several
+//! concurrent fine-tuning jobs multiplexed over the same emulated PCIe
+//! links and one shared CPU-updater pool.  The [`Arbiter`] owns everything
+//! a solo [`PipelineCtx`](crate::coordinator::pipeline::PipelineCtx) would
+//! have spawned for itself — the d2h/h2d [`Link`]s, the (virtual)
+//! [`LinkClock`], the [`CpuUpdater`] worker, the wire codec, the payload
+//! pool, and the ONCE-negotiated kernel shape — and tenants register
+//! against it with
+//! [`PipelineCtx::for_tenant`](crate::coordinator::pipeline::PipelineCtx::for_tenant).
+//! N tenants therefore reserve 3 schedule threads total (two links + the
+//! updater), not 3 each.
+//!
+//! # Weighted-fair chunk interleaving (deficit round robin)
+//!
+//! Each tenant stages offload messages on its own `PrioQueue` (where the
+//! policy's FCFS→LCFS priorities apply among the tenant's *own* chunks).
+//! A mux thread drains the staging queues with byte-based deficit round
+//! robin: every sweep a busy tenant earns `QUANTUM_BYTES * weight` of
+//! credit, forwards staged chunks while its head chunk fits the credit,
+//! and carries the remainder to the next sweep; an idle tenant's credit
+//! resets (the classic DRR rule — credit must not accumulate into bursts).
+//! Forwarded messages enter the shared d2h ingress with a monotone
+//! sequence number as priority, so the link serves them exactly in mux
+//! order and tenants interleave at chunk granularity — a tenant never
+//! holds the wire longer than one chunk (the PIPO-style preemption grain
+//! chunking bought us).  The fairness invariant: over any busy interval,
+//! the wire bytes tenant `i` forwards approach
+//! `weight_i / Σ weight_j` of the total, within one chunk per tenant.
+//!
+//! A demux thread routes returning deltas to the owning tenant's delta
+//! queue by `ChunkHeader::tenant` and counts delivered wire bytes — the
+//! input to the aggregate report's Jain fairness index.
+//!
+//! # Per-tenant isolation
+//!
+//! Every tenant gets its own [`FaultFabric`] (plan, health, retry budget,
+//! codec-fallback map) hung off the root fabric's `tenants` table; the
+//! shared links and updater route each message through
+//! `FaultFabric::for_tenant`.  A tenant exhausting its retry budget fails
+//! only its own health — the link skips to the next message — and its
+//! registered on-fatal hook closes that tenant's delta queue so its
+//! driver unblocks with the typed error while the other tenants keep
+//! training.  Adam moments are per-tenant maps inside the shared updater
+//! (`CpuUpdater::spawn_shared`), so `ParamKey`s of different model
+//! replicas never collide and each tenant's f32 trajectory is
+//! bit-identical to its solo run (`tests/tenancy.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::codec::{make_codec, Codec};
+use crate::coordinator::comm::{
+    DeltaMsg, Link, LinkClock, LinkClockMode, OffloadMsg, PrioQueue, TenantId,
+};
+use crate::coordinator::fault::{FaultDir, FaultFabric, FaultPlan, RetryCfg};
+use crate::coordinator::pipeline::TrainConfig;
+use crate::coordinator::policies::make_policy;
+use crate::coordinator::worker::{CpuUpdater, SharedStates};
+use crate::tensor::kernel::KernelConfig;
+use crate::util::bufpool::BufPool;
+
+/// DRR credit earned per sweep at weight 1.0, in wire bytes.  Any positive
+/// value is fair over busy periods (credit accumulates until the head
+/// chunk passes); 64 KiB keeps the sweep count per large chunk small.
+const QUANTUM_BYTES: f64 = 65536.0;
+
+/// Per-tenant registration knobs.
+#[derive(Debug, Clone)]
+pub struct TenantCfg {
+    /// Relative link share under contention (normalized to 1.0 when not
+    /// positive/finite).  Equal weights = equal byte shares.
+    pub weight: f64,
+    /// This tenant's retransmit budget/backoff/fallback knobs.
+    pub retry: RetryCfg,
+    /// This tenant's private fault-injection plan (plans hold per-spec
+    /// fired budgets, so tenants never share one instance).
+    pub plan: Option<Arc<FaultPlan>>,
+}
+
+impl Default for TenantCfg {
+    fn default() -> Self {
+        TenantCfg { weight: 1.0, retry: RetryCfg::default(), plan: None }
+    }
+}
+
+/// The arbiter-side per-tenant wiring: staging/delta queues, the tenant's
+/// fault fabric and Adam moment map, and the byte counters the mux/demux
+/// maintain.  `PipelineCtx::for_tenant` clones what it needs from here.
+pub struct TenantHandle {
+    pub id: TenantId,
+    pub weight: f64,
+    /// The tenant's offload staging queue (its context's `d2h_in`): the
+    /// policy's priorities order the tenant's own chunks here; the DRR mux
+    /// decides when they reach the shared link.
+    pub staging: Arc<PrioQueue<OffloadMsg>>,
+    /// The tenant's reassembly feed (its context's `delta_out`), filled by
+    /// the demux and closed on shutdown or on this tenant's fatal error.
+    pub delta_q: Arc<PrioQueue<DeltaMsg>>,
+    /// The tenant's plan/health/retry/fallback bundle — the same instance
+    /// the shared links and updater route this tenant's messages through.
+    pub fabric: FaultFabric,
+    /// The tenant's Adam moment map inside the shared updater pool.
+    pub states: SharedStates,
+    mux_wake: Arc<PrioQueue<()>>,
+    /// Wire / f32-equivalent bytes the mux forwarded onto the d2h link.
+    pub up_bytes: Arc<AtomicU64>,
+    pub up_raw_bytes: Arc<AtomicU64>,
+    /// Wire / f32-equivalent bytes the demux delivered back (the Jain
+    /// fairness input).
+    pub down_bytes: Arc<AtomicU64>,
+    pub down_raw_bytes: Arc<AtomicU64>,
+}
+
+impl TenantHandle {
+    /// The slice of this handle a tenant `PipelineCtx` carries around.
+    pub fn runtime(&self) -> TenantRuntime {
+        TenantRuntime {
+            id: self.id,
+            mux_wake: self.mux_wake.clone(),
+            states: self.states.clone(),
+            up_bytes: self.up_bytes.clone(),
+            up_raw_bytes: self.up_raw_bytes.clone(),
+            down_bytes: self.down_bytes.clone(),
+            down_raw_bytes: self.down_raw_bytes.clone(),
+        }
+    }
+
+    /// Stage one offload message (stamped with this tenant's id) and wake
+    /// the mux.  `PipelineCtx::push_offload` does the same through its
+    /// queues; this direct form serves queue-level tests.
+    pub fn enqueue(&self, prio: i64, mut msg: OffloadMsg) {
+        msg.chunk.tenant = self.id;
+        self.staging.push(prio, msg);
+        self.mux_wake.push(0, ());
+    }
+}
+
+/// What a tenant's `PipelineCtx` keeps from its [`TenantHandle`]: identity,
+/// the mux wake signal, the tenant's Adam map, and the byte counters its
+/// `TrainReport` reads (a tenant context has no `Link`s of its own).
+pub struct TenantRuntime {
+    pub id: TenantId,
+    pub mux_wake: Arc<PrioQueue<()>>,
+    pub states: SharedStates,
+    pub up_bytes: Arc<AtomicU64>,
+    pub up_raw_bytes: Arc<AtomicU64>,
+    pub down_bytes: Arc<AtomicU64>,
+    pub down_raw_bytes: Arc<AtomicU64>,
+}
+
+/// One lane of the mux/demux threads (the subset of a `TenantHandle` each
+/// thread owns a clone of).
+struct Lane {
+    staging: Arc<PrioQueue<OffloadMsg>>,
+    delta_q: Arc<PrioQueue<DeltaMsg>>,
+    weight: f64,
+    up_bytes: Arc<AtomicU64>,
+    up_raw_bytes: Arc<AtomicU64>,
+    down_bytes: Arc<AtomicU64>,
+    down_raw_bytes: Arc<AtomicU64>,
+}
+
+/// The shared-resource owner N tenant pipelines register against.  See the
+/// module docs for the scheduling and isolation contracts; `Drop` performs
+/// the ordered shutdown (mux → d2h link → updater → h2d link → demux), so
+/// simply dropping the arbiter after the tenants' contexts drains cleanly.
+pub struct Arbiter {
+    /// Negotiated ONCE against the 3 shared schedule threads; every tenant
+    /// context copies this instead of re-reserving.
+    pub kernel: KernelConfig,
+    /// The wire codec every tenant and the shared updater agree on.
+    pub codec: Arc<dyn Codec>,
+    /// The one clock both links charge (virtual time spans all tenants).
+    pub clock: LinkClock,
+    /// Payload pool shared across tenants (recycling works cross-tenant —
+    /// buffers carry no identity).
+    pub pool: BufPool,
+    /// Root fabric carried by the shared links/updater; its `tenants`
+    /// table holds each tenant's own fabric.
+    pub fabric: FaultFabric,
+    /// The run's tracer (enabled iff `cfg.trace_out`); every tenant fabric
+    /// carries a clone, so events from all tenants land in one timeline.
+    /// `train_multi` exports it after the arbiter's threads join.
+    pub tracer: crate::trace::Tracer,
+    pub links: Option<(Link, Link)>,
+    pub updater: Option<CpuUpdater>,
+    tenants: Vec<TenantHandle>,
+    mux_wake: Arc<PrioQueue<()>>,
+    mux: Option<std::thread::JoinHandle<()>>,
+    demux: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Arbiter {
+    /// Build the shared fabric for `tenant_cfgs.len()` tenants from the
+    /// run-level `cfg` (policy → codec/kernel negotiation, bandwidth,
+    /// clock mode, chunking — everything except the per-tenant knobs in
+    /// `tenant_cfgs`).  At least one tenant is enforced.
+    pub fn new(cfg: &TrainConfig, mut tenant_cfgs: Vec<TenantCfg>) -> Arbiter {
+        if tenant_cfgs.is_empty() {
+            tenant_cfgs.push(TenantCfg::default());
+        }
+        // The once-only negotiations a solo PipelineCtx::new would redo per
+        // instance: kernel width (3 shared schedule threads), wire codec,
+        // link clock.
+        let reserved = if cfg.policy.offloads() { 3 } else { 0 };
+        let kernel = cfg.kernel.negotiated(reserved);
+        let codec_kind =
+            cfg.link_codec.unwrap_or_else(|| make_policy(cfg.policy).preferred_codec());
+        let codec: Arc<dyn Codec> = make_codec(codec_kind);
+        let clock = match cfg.link_clock {
+            LinkClockMode::Real => LinkClock::Real,
+            LinkClockMode::Virtual => LinkClock::new_virtual(),
+            LinkClockMode::Auto => LinkClock::from_env(),
+        };
+        let tracer = if cfg.trace_out.is_some() {
+            crate::trace::Tracer::enabled(clock.clone())
+        } else {
+            crate::trace::Tracer::disabled()
+        };
+
+        let tenant_fabrics: Vec<FaultFabric> = tenant_cfgs
+            .iter()
+            .map(|tc| FaultFabric::new(tc.plan.clone(), tc.retry).with_tracer(tracer.clone()))
+            .collect();
+        let fabric = FaultFabric::new(
+            None,
+            RetryCfg {
+                budget: cfg.retry_budget,
+                backoff_ns: cfg.retry_backoff_ns,
+                fallback_after: cfg.codec_fallback_after,
+            },
+        )
+        .with_tracer(tracer.clone())
+        .with_tenants(tenant_fabrics.clone());
+
+        let pool = BufPool::new();
+        let mux_wake: Arc<PrioQueue<()>> = Arc::new(PrioQueue::new());
+        let tenants: Vec<TenantHandle> = tenant_cfgs
+            .iter()
+            .enumerate()
+            .map(|(t, tc)| {
+                let weight =
+                    if tc.weight.is_finite() && tc.weight > 0.0 { tc.weight } else { 1.0 };
+                TenantHandle {
+                    id: t as TenantId,
+                    weight,
+                    staging: Arc::new(PrioQueue::new()),
+                    delta_q: Arc::new(PrioQueue::new()),
+                    fabric: tenant_fabrics[t].clone(),
+                    states: SharedStates::default(),
+                    mux_wake: mux_wake.clone(),
+                    up_bytes: Arc::new(AtomicU64::new(0)),
+                    up_raw_bytes: Arc::new(AtomicU64::new(0)),
+                    down_bytes: Arc::new(AtomicU64::new(0)),
+                    down_raw_bytes: Arc::new(AtomicU64::new(0)),
+                }
+            })
+            .collect();
+        // Fault isolation half 2: when a tenant's health turns fatal its
+        // delta queue closes, so ITS driver unblocks into the typed error
+        // while every other tenant keeps flowing.
+        for h in &tenants {
+            let q = h.delta_q.clone();
+            h.fabric.health.on_fatal(Box::new(move || q.close()));
+        }
+
+        let shared_d2h_in: Arc<PrioQueue<OffloadMsg>> = Arc::new(PrioQueue::new());
+        let shared_d2h_out: Arc<PrioQueue<OffloadMsg>> = Arc::new(PrioQueue::new());
+        let shared_h2d_in: Arc<PrioQueue<DeltaMsg>> = Arc::new(PrioQueue::new());
+        let shared_delta_out: Arc<PrioQueue<DeltaMsg>> = Arc::new(PrioQueue::new());
+
+        let (links, updater) = if cfg.policy.offloads() {
+            let d2h = Link::spawn(
+                "d2h",
+                cfg.bw_bytes_per_s,
+                cfg.time_scale,
+                clock.clone(),
+                shared_d2h_in.clone(),
+                shared_d2h_out.clone(),
+                FaultDir::D2H,
+                fabric.clone(),
+            );
+            let h2d = Link::spawn(
+                "h2d",
+                cfg.bw_bytes_per_s,
+                cfg.time_scale,
+                clock.clone(),
+                shared_h2d_in.clone(),
+                shared_delta_out.clone(),
+                FaultDir::H2D,
+                fabric.clone(),
+            );
+            // Same half-width rationale as the solo pipeline: the updater
+            // owns one reserved thread; full width would double-book the
+            // drivers' negotiated cores.
+            let upd_kernel = KernelConfig { threads: (kernel.threads / 2).max(1), ..kernel };
+            let upd = CpuUpdater::spawn_shared(
+                shared_d2h_out.clone(),
+                shared_h2d_in.clone(),
+                cfg.cpu_scale,
+                pool.clone(),
+                upd_kernel,
+                codec.clone(),
+                fabric.clone(),
+                tenants.iter().map(|h| h.states.clone()).collect(),
+            );
+            (Some((d2h, h2d)), Some(upd))
+        } else {
+            // No offload traffic under this policy: nothing will ever feed
+            // the shared delta stream, so close it now — the demux exits
+            // (closing every tenant's delta queue) instead of blocking the
+            // arbiter's Drop on a join that would never return.
+            shared_delta_out.close();
+            (None, None)
+        };
+
+        let mux_lanes: Vec<Lane> = tenants.iter().map(Lane::of).collect();
+        let demux_lanes: Vec<Lane> = tenants.iter().map(Lane::of).collect();
+
+        let wake = mux_wake.clone();
+        let ingress = shared_d2h_in.clone();
+        let mux = std::thread::Builder::new()
+            .name("arbiter-mux".into())
+            .spawn(move || {
+                let mut held: Vec<Option<OffloadMsg>> =
+                    mux_lanes.iter().map(|_| None).collect();
+                let mut deficit = vec![0f64; mux_lanes.len()];
+                let mut seq: i64 = 0;
+                // One token per staged dispatch (pushed AFTER its messages,
+                // so a popped token always finds visible work); each token
+                // triggers a full drain of everything currently stageable.
+                while wake.pop().is_some() {
+                    while wake.try_pop().is_some() {}
+                    drr_drain(&mux_lanes, &ingress, &mut held, &mut deficit, &mut seq);
+                }
+                // Wake queue closed: shutdown.  Forward any stragglers in
+                // plain round robin (fair shares are moot mid-teardown).
+                loop {
+                    let mut any = false;
+                    for (t, lane) in mux_lanes.iter().enumerate() {
+                        if held[t].is_none() {
+                            held[t] = lane.staging.try_pop();
+                        }
+                        if let Some(msg) = held[t].take() {
+                            lane.note_up(&msg);
+                            ingress.push(seq, msg);
+                            seq += 1;
+                            any = true;
+                        }
+                    }
+                    if !any {
+                        break;
+                    }
+                }
+                ingress.close();
+            })
+            // gate: allow-panic — thread spawn fails only on OS resource exhaustion
+            .expect("spawn arbiter-mux");
+
+        let egress = shared_delta_out.clone();
+        let demux = std::thread::Builder::new()
+            .name("arbiter-demux".into())
+            .spawn(move || {
+                while let Some(msg) = egress.pop() {
+                    // The updater already rejected unknown tenants as a
+                    // protocol violation; anything unroutable here is a
+                    // stale straggler and dropping it is the safe choice.
+                    if let Some(lane) = demux_lanes.get(msg.chunk.tenant as usize) {
+                        lane.down_bytes
+                            .fetch_add(msg.delta.wire_bytes() as u64, Ordering::Relaxed);
+                        lane.down_raw_bytes
+                            .fetch_add(msg.delta.raw_bytes() as u64, Ordering::Relaxed);
+                        lane.delta_q.push(msg.prio, msg);
+                    }
+                }
+                for lane in &demux_lanes {
+                    lane.delta_q.close();
+                }
+            })
+            // gate: allow-panic — thread spawn fails only on OS resource exhaustion
+            .expect("spawn arbiter-demux");
+
+        Arbiter {
+            kernel,
+            codec,
+            clock,
+            pool,
+            fabric,
+            tracer,
+            links,
+            updater,
+            tenants,
+            mux_wake,
+            mux: Some(mux),
+            demux: Some(demux),
+        }
+    }
+
+    pub fn tenant(&self, id: TenantId) -> Option<&TenantHandle> {
+        self.tenants.get(id as usize)
+    }
+
+    pub fn tenants(&self) -> &[TenantHandle] {
+        &self.tenants
+    }
+
+    /// Wire bytes delivered back to each tenant so far — the Jain-index
+    /// input of the aggregate report.
+    pub fn delivered_bytes(&self) -> Vec<u64> {
+        self.tenants.iter().map(|h| h.down_bytes.load(Ordering::Relaxed)).collect()
+    }
+}
+
+impl Lane {
+    fn of(h: &TenantHandle) -> Lane {
+        Lane {
+            staging: h.staging.clone(),
+            delta_q: h.delta_q.clone(),
+            weight: h.weight,
+            up_bytes: h.up_bytes.clone(),
+            up_raw_bytes: h.up_raw_bytes.clone(),
+            down_bytes: h.down_bytes.clone(),
+            down_raw_bytes: h.down_raw_bytes.clone(),
+        }
+    }
+
+    fn note_up(&self, msg: &OffloadMsg) {
+        self.up_bytes.fetch_add(msg.data.wire_bytes() as u64, Ordering::Relaxed);
+        self.up_raw_bytes.fetch_add(msg.data.raw_bytes() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Drain everything currently staged across all lanes with byte-based
+/// deficit round robin.  `held` is the per-lane holdback slot (`PrioQueue`
+/// has no peek: a popped head that exceeds the lane's credit waits there,
+/// never re-enters the queue — re-pushing would re-sort it).  Returns when
+/// every staging queue is empty and every holdback slot is clear.
+fn drr_drain(
+    lanes: &[Lane],
+    ingress: &PrioQueue<OffloadMsg>,
+    held: &mut [Option<OffloadMsg>],
+    deficit: &mut [f64],
+    seq: &mut i64,
+) {
+    loop {
+        let mut any_pending = false;
+        for (t, lane) in lanes.iter().enumerate() {
+            if held[t].is_none() {
+                held[t] = lane.staging.try_pop();
+            }
+            if held[t].is_none() {
+                // Idle lane: reset its credit (DRR's anti-burst rule — an
+                // idle tenant must not bank wire share for later).
+                deficit[t] = 0.0;
+                continue;
+            }
+            any_pending = true;
+            deficit[t] += QUANTUM_BYTES * lane.weight;
+            while let Some(msg) = held[t].take() {
+                let wire = msg.data.wire_bytes() as f64;
+                if wire <= deficit[t] {
+                    deficit[t] -= wire;
+                    lane.note_up(&msg);
+                    ingress.push(*seq, msg);
+                    *seq += 1;
+                    held[t] = lane.staging.try_pop();
+                } else {
+                    held[t] = Some(msg);
+                    break;
+                }
+            }
+        }
+        if !any_pending {
+            break;
+        }
+    }
+}
+
+impl Drop for Arbiter {
+    fn drop(&mut self) {
+        // Ordered teardown along the dataflow: close the wake signal, let
+        // the mux forward its stragglers and close the shared d2h ingress,
+        // then let each stage's exit cascade-close the next stage's
+        // ingress (links and the updater close their egress on exit), and
+        // join in order so nothing pops a queue that is still being fed.
+        self.mux_wake.close();
+        if let Some(h) = self.mux.take() {
+            let _ = h.join();
+        }
+        if let Some((mut d2h, mut h2d)) = self.links.take() {
+            d2h.stop();
+            if let Some(mut u) = self.updater.take() {
+                u.join();
+            }
+            h2d.stop();
+        } else if let Some(mut u) = self.updater.take() {
+            u.join();
+        }
+        if let Some(h) = self.demux.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -63,6 +63,12 @@ pub struct ParamKey {
     pub kind: Option<String>,
 }
 
+/// Identity of a pipeline tenant when several training jobs share one link
+/// pair through the `coordinator::arbiter`.  Tenant ids are dense
+/// (`0..n_tenants`); a solo pipeline is tenant 0 everywhere, so every
+/// pre-arbiter wire shape is the `tenant = 0` special case.
+pub type TenantId = u32;
+
 /// An encoded f32 payload as it crosses a link: codec output bytes (pooled
 /// — the consumer's drop returns the storage) plus the element count the
 /// decoder must reconstruct.  Links forward it as-is (zero-copy).
@@ -142,24 +148,43 @@ pub struct ChunkHeader {
     /// key degraded to the bit-exact f32 wire format (see
     /// `fault::FallbackMap`).
     pub codec_tag: u8,
+    /// Which tenant this chunk belongs to when several pipelines share a
+    /// link pair through the `coordinator::arbiter`.  Reassembly, retry
+    /// budgets, Adam-state routing, and fault isolation all key off this
+    /// tag; a solo pipeline is tenant 0 throughout.
+    pub tenant: TenantId,
 }
 
 impl ChunkHeader {
     /// The single-chunk header covering a whole payload of `total_elems`
     /// (unchecked: `checksum = 0`).
     pub fn whole(total_elems: usize) -> ChunkHeader {
-        ChunkHeader { idx: 0, of: 1, elem_offset: 0, total_elems, checksum: 0, codec_tag: 0 }
+        ChunkHeader {
+            idx: 0,
+            of: 1,
+            elem_offset: 0,
+            total_elems,
+            checksum: 0,
+            codec_tag: 0,
+            tenant: 0,
+        }
     }
 
     /// A multi-chunk header (unchecked until [`ChunkHeader::with_checksum`]
     /// stamps it).
     pub fn part(idx: u32, of: u32, elem_offset: usize, total_elems: usize) -> ChunkHeader {
-        ChunkHeader { idx, of, elem_offset, total_elems, checksum: 0, codec_tag: 0 }
+        ChunkHeader { idx, of, elem_offset, total_elems, checksum: 0, codec_tag: 0, tenant: 0 }
     }
 
     /// The same header carrying `checksum` over the encoded payload bytes.
     pub fn with_checksum(mut self, checksum: u32) -> ChunkHeader {
         self.checksum = checksum;
+        self
+    }
+
+    /// The same header tagged with its owning tenant (arbiter mode).
+    pub fn with_tenant(mut self, tenant: TenantId) -> ChunkHeader {
+        self.tenant = tenant;
         self
     }
 
@@ -683,10 +708,13 @@ pub struct Link {
     pub clock: LinkClock,
     /// Per-message `(wire_bytes, transfer_ns, done_at_ns)` rows.
     pub ledger: LinkLedger,
-    /// Encoded (wire) bytes moved — what the bandwidth emulation charges.
+    /// Encoded (wire) bytes of every *first* transmission — the codec's
+    /// wire footprint.  Retransmitted attempts still charge bandwidth/time
+    /// but accumulate in `PipelineHealth::retrans_bytes` instead, so the
+    /// compression-ratio accounting is fault-plan independent.
     pub bytes_moved: Arc<AtomicU64>,
-    /// f32-equivalent bytes moved — what F32Raw would have charged; the
-    /// compression-ratio baseline.
+    /// f32-equivalent bytes of the same first transmissions — what F32Raw
+    /// would have charged; the compression-ratio baseline.
     pub raw_bytes_moved: Arc<AtomicU64>,
     /// Busy time: measured wall ns under the real clock, the deterministic
     /// transfer charge under the virtual clock.
@@ -740,16 +768,22 @@ impl Link {
                     let step = msg.step();
                     let chunk_idx = msg.chunk().idx;
                     let param = msg.key().param_index;
+                    let tenant = msg.chunk().tenant;
+                    // Fault matching, retry budgeting, and health accounting
+                    // all route through the message's tenant fabric —
+                    // `for_tenant` is the identity on a solo pipeline, so
+                    // the un-arbitrated path is untouched.
+                    let tf = fabric.for_tenant(tenant);
                     // Per-message retransmit loop: every attempt charges
                     // wire time and bytes; only a delivered attempt breaks
                     // out.  `attempt` counts *retransmissions* (0 = the
-                    // first send), bounded by `fabric.retry.budget`.
+                    // first send), bounded by `tf.retry.budget`.
                     let mut attempt: u32 = 0;
                     let mut total_ns: u64 = 0;
                     loop {
                         let bytes = msg.payload().wire_bytes();
                         let raw = msg.payload().raw_bytes();
-                        let fault = fabric.wire_fault(dir, step, msg.key(), chunk_idx);
+                        let fault = tf.wire_fault(dir, step, msg.key(), chunk_idx);
                         tracer.begin(
                             track,
                             "xfer",
@@ -761,6 +795,7 @@ impl Link {
                                 ("bytes", bytes.into()),
                                 ("codec_tag", (msg.chunk().codec_tag as u32).into()),
                                 ("attempt", attempt.into()),
+                                ("tenant", tenant.into()),
                             ],
                         );
                         if let Some(k) = &fault {
@@ -779,12 +814,13 @@ impl Link {
                                     ("step", step.into()),
                                     ("chunk", chunk_idx.into()),
                                     ("detail", detail.into()),
+                                    ("tenant", tenant.into()),
                                 ],
                             );
                         }
                         let extra = match fault {
                             Some(FaultKind::Stall { extra_ns }) => {
-                                PipelineHealth::bump(&fabric.health.stalled_chunks);
+                                PipelineHealth::bump(&tf.health.stalled_chunks);
                                 extra_ns
                             }
                             _ => 0,
@@ -805,12 +841,20 @@ impl Link {
                             }
                         };
                         total_ns += ns;
-                        bm.fetch_add(bytes as u64, Ordering::Relaxed);
-                        rm.fetch_add(raw as u64, Ordering::Relaxed);
-                        tracer.end(track, "xfer", &[]);
+                        if attempt == 0 {
+                            // Only the first transmission counts toward the
+                            // link's wire/raw byte totals: `bytes_moved` is
+                            // the codec's wire footprint (the numerator and
+                            // denominator of `compression_ratio()` both key
+                            // off it), while every retransmitted attempt is
+                            // accounted separately in `retrans_bytes` below.
+                            bm.fetch_add(bytes as u64, Ordering::Relaxed);
+                            rm.fetch_add(raw as u64, Ordering::Relaxed);
+                        }
+                        tracer.end(track, "xfer", &[("tenant", tenant.into())]);
                         if attempt > 0 {
-                            PipelineHealth::bump(&fabric.health.retransmits);
-                            fabric.health.retrans_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+                            PipelineHealth::bump(&tf.health.retransmits);
+                            tf.health.retrans_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
                             tracer.instant(
                                 track,
                                 "retransmit",
@@ -819,6 +863,7 @@ impl Link {
                                     ("step", step.into()),
                                     ("chunk", chunk_idx.into()),
                                     ("attempt", attempt.into()),
+                                    ("tenant", tenant.into()),
                                 ],
                             );
                         }
@@ -828,7 +873,7 @@ impl Link {
                             // The chunk vanished; the receiver's per-chunk
                             // deadline NACKs it.
                             Some(FaultKind::Drop) => {
-                                PipelineHealth::bump(&fabric.health.dropped_chunks);
+                                PipelineHealth::bump(&tf.health.dropped_chunks);
                                 true
                             }
                             Some(FaultKind::Corrupt { bit }) => {
@@ -837,7 +882,7 @@ impl Link {
                                 let detected =
                                     want != 0 && crc32(msg.payload().as_bytes()) != want;
                                 if detected {
-                                    PipelineHealth::bump(&fabric.health.corrupt_chunks);
+                                    PipelineHealth::bump(&tf.health.corrupt_chunks);
                                     // Retransmission re-sends the original
                                     // payload (the flip is self-inverse).
                                     flip_bit(msg.payload_mut().bytes_mut(), bit);
@@ -873,7 +918,7 @@ impl Link {
                             break;
                         }
                         attempt += 1;
-                        if attempt > fabric.retry.budget {
+                        if attempt > tf.retry.budget {
                             tracer.instant(
                                 track,
                                 "retry_exhausted",
@@ -882,22 +927,31 @@ impl Link {
                                     ("step", step.into()),
                                     ("chunk", chunk_idx.into()),
                                     ("attempts", attempt.into()),
+                                    ("tenant", tenant.into()),
                                 ],
                             );
-                            fabric.health.fail(PipelineError::RetryBudgetExhausted {
+                            tf.health.fail(PipelineError::RetryBudgetExhausted {
                                 link: name,
                                 key: format!("{:?}", msg.key()),
                                 step,
                                 chunk: chunk_idx,
                                 attempts: attempt,
                             });
+                            if fabric.is_multi_tenant() {
+                                // Fault isolation: drop this tenant's message
+                                // and keep serving the others.  The failed
+                                // tenant's health (and its on-fatal delta-
+                                // queue close) surfaces the error to that
+                                // tenant alone; the shared link stays up.
+                                continue 'msgs;
+                            }
                             break 'msgs;
                         }
                         // Bounded exponential backoff before the retransmit
                         // (charged to the clock as dead time, not to the
                         // link's busy/ledger accounting).
                         let backoff =
-                            fabric.retry.backoff_ns.saturating_mul(1u64 << (attempt - 1).min(20));
+                            tf.retry.backoff_ns.saturating_mul(1u64 << (attempt - 1).min(20));
                         tracer.instant(
                             track,
                             "backoff",
@@ -906,6 +960,7 @@ impl Link {
                                 ("step", step.into()),
                                 ("chunk", chunk_idx.into()),
                                 ("ns", backoff.into()),
+                                ("tenant", tenant.into()),
                             ],
                         );
                         total_ns += backoff;
@@ -1404,9 +1459,12 @@ mod tests {
         assert_eq!(got.iter().filter(|x| x.is_none()).count(), 3);
     }
 
-    /// A dropped chunk is retransmitted: both attempts charge wire time
-    /// and bytes, the backoff is charged to the clock, and the message
-    /// arrives carrying the full (deterministic) accumulated cost.
+    /// A dropped chunk is retransmitted: both attempts charge wire *time*,
+    /// the backoff is charged to the clock, and the message arrives
+    /// carrying the full (deterministic) accumulated cost — but only the
+    /// first transmission counts toward `bytes_moved`/`raw_bytes_moved`
+    /// (the retry overhead lives in `health.retrans_bytes`), so the
+    /// compression ratio stays a pure wire-format property under faults.
     #[test]
     fn link_retransmits_dropped_chunk() {
         let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop).with_step(3)]);
@@ -1434,8 +1492,13 @@ mod tests {
         assert_eq!(fabric.health.retransmits.load(Ordering::Relaxed), 1);
         assert_eq!(fabric.health.dropped_chunks.load(Ordering::Relaxed), 1);
         assert_eq!(fabric.health.retrans_bytes.load(Ordering::Relaxed), 1_000);
-        assert_eq!(link.bytes_moved.load(Ordering::Relaxed), 2_000, "both attempts hit the wire");
-        assert_eq!(link.ledger.len(), 2);
+        assert_eq!(
+            link.bytes_moved.load(Ordering::Relaxed),
+            1_000,
+            "first transmission only; the retry lives in retrans_bytes"
+        );
+        assert_eq!(link.raw_bytes_moved.load(Ordering::Relaxed), 1_000);
+        assert_eq!(link.ledger.len(), 2, "both attempts hit the wire and the ledger");
         assert!(fabric.health.fatal().is_none());
         ingress.close();
         link.stop();

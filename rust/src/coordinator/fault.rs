@@ -173,7 +173,7 @@ impl std::error::Error for PipelineError {}
 /// the driver's health checks.  All counters are monotone atomics; the
 /// fatal slot is first-error-wins (the *root* cause survives the shutdown
 /// cascade it triggers).
-#[derive(Debug, Default)]
+#[derive(Default)]
 pub struct PipelineHealth {
     /// Wire chunks re-sent after a drop/corruption NACK.
     pub retransmits: AtomicU64,
@@ -183,8 +183,10 @@ pub struct PipelineHealth {
     pub dropped_chunks: AtomicU64,
     /// Wire chunks delayed by an injected stall.
     pub stalled_chunks: AtomicU64,
-    /// Wire bytes consumed by retransmissions (charged to the links on top
-    /// of the first-attempt traffic).
+    /// Wire bytes consumed by retransmissions — bandwidth charged to the
+    /// links on top of the first-transmission traffic, kept OUT of the
+    /// links' `bytes_moved`/`raw_bytes_moved` so the compression-ratio
+    /// accounting is fault-plan independent.
     pub retrans_bytes: AtomicU64,
     /// Supervised worker restarts (panic caught, state replayed).
     pub worker_restarts: AtomicU64,
@@ -194,15 +196,63 @@ pub struct PipelineHealth {
     /// Payload decode failures absorbed by the graceful-degradation path.
     pub decode_failures: AtomicU64,
     fatal: Mutex<Option<PipelineError>>,
+    /// Callbacks invoked exactly once, when the first fatal error lands.
+    /// The arbiter hooks a tenant's delta-queue close here so a tenant
+    /// whose wire traffic died (e.g. retry budget exhausted on a shared
+    /// link) unblocks its own driver without stalling the other tenants.
+    on_fatal: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
+}
+
+impl std::fmt::Debug for PipelineHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PipelineHealth")
+            .field("retransmits", &self.retransmits)
+            .field("corrupt_chunks", &self.corrupt_chunks)
+            .field("dropped_chunks", &self.dropped_chunks)
+            .field("stalled_chunks", &self.stalled_chunks)
+            .field("retrans_bytes", &self.retrans_bytes)
+            .field("worker_restarts", &self.worker_restarts)
+            .field("codec_fallbacks", &self.codec_fallbacks)
+            .field("decode_failures", &self.decode_failures)
+            .field("fatal", &self.fatal)
+            .finish_non_exhaustive()
+    }
 }
 
 impl PipelineHealth {
     /// Record a fatal error; the FIRST error wins (later cascade errors —
-    /// queues closing behind the root cause — must not mask it).
+    /// queues closing behind the root cause — must not mask it).  The
+    /// registered on-fatal callbacks run exactly once, after the winning
+    /// error is published (and outside the fatal lock, so a callback may
+    /// itself consult `fatal()`).
     pub fn fail(&self, e: PipelineError) {
-        let mut g = lock_recover(&self.fatal);
-        if g.is_none() {
-            *g = Some(e);
+        let first = {
+            let mut g = lock_recover(&self.fatal);
+            if g.is_none() {
+                *g = Some(e);
+                true
+            } else {
+                false
+            }
+        };
+        if first {
+            for hook in lock_recover(&self.on_fatal).iter() {
+                hook();
+            }
+        }
+    }
+
+    /// Register a callback to run when the first fatal error lands.
+    /// Callbacks must be idempotent (queue closes are): if the failure
+    /// races the registration — or already happened — the whole hook list
+    /// is (re-)run here, so a late registration still fires and an early
+    /// one may fire twice.
+    pub fn on_fatal(&self, hook: Box<dyn Fn() + Send + Sync>) {
+        lock_recover(&self.on_fatal).push(hook);
+        if self.fatal().is_some() {
+            for h in lock_recover(&self.on_fatal).iter() {
+                h();
+            }
         }
     }
 
@@ -624,6 +674,14 @@ pub struct FaultFabric {
     /// already reaches the links and the updater without signature
     /// churn).  See `crate::trace`.
     pub tracer: crate::trace::Tracer,
+    /// Per-tenant fabrics when this is the *root* fabric of a multi-tenant
+    /// arbiter (index = `TenantId`).  Shared infrastructure (links, the
+    /// updater pool) holds the root fabric and routes each message to its
+    /// tenant's plan/health/retry via [`FaultFabric::for_tenant`]; each
+    /// tenant's `PipelineCtx` holds a clone of its own entry, so driver-
+    /// side and wire-side observations share one health instance.  `None`
+    /// on solo pipelines and on the per-tenant fabrics themselves.
+    pub tenants: Option<Arc<Vec<FaultFabric>>>,
 }
 
 impl FaultFabric {
@@ -635,6 +693,7 @@ impl FaultFabric {
             fallback: Arc::new(FallbackMap::default()),
             f32_codec: make_codec(CodecKind::F32Raw),
             tracer: crate::trace::Tracer::disabled(),
+            tenants: None,
         }
     }
 
@@ -643,6 +702,42 @@ impl FaultFabric {
     pub fn with_tracer(mut self, tracer: crate::trace::Tracer) -> FaultFabric {
         self.tracer = tracer;
         self
+    }
+
+    /// The same fabric promoted to a multi-tenant root carrying one
+    /// per-tenant fabric per registered tenant (the arbiter builds this).
+    pub fn with_tenants(mut self, tenants: Vec<FaultFabric>) -> FaultFabric {
+        self.tenants = Some(Arc::new(tenants));
+        self
+    }
+
+    /// Is this the root fabric of a multi-tenant arbiter?  Shared links
+    /// and the updater pool use this to choose fault *isolation* (fail the
+    /// one tenant, keep serving) over fail-stop.
+    pub fn is_multi_tenant(&self) -> bool {
+        self.tenants.is_some()
+    }
+
+    /// The fabric owning `tenant`'s plan, health, retry knobs, and codec
+    /// fallback state.  Identity on solo pipelines (and for out-of-range
+    /// ids, which the updater separately rejects as a protocol violation).
+    pub fn for_tenant(&self, tenant: crate::coordinator::comm::TenantId) -> &FaultFabric {
+        match &self.tenants {
+            Some(v) => v.get(tenant as usize).unwrap_or(self),
+            None => self,
+        }
+    }
+
+    /// Record `e` on the root health AND every tenant health: used for
+    /// unrecoverable shared-infrastructure failures (e.g. the updater pool
+    /// dying) that necessarily take every tenant down with them.
+    pub fn fail_all(&self, e: PipelineError) {
+        if let Some(v) = &self.tenants {
+            for f in v.iter() {
+                f.health.fail(e.clone());
+            }
+        }
+        self.health.fail(e);
     }
 
     /// A fault-free fabric with default retry knobs (tests, non-pipeline

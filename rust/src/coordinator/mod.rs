@@ -112,6 +112,7 @@
 //! driver, links, updater, codec-encoded pooled payloads and per-layer
 //! events come for free.  See ROADMAP.md §Coordinator.
 
+pub mod arbiter;
 pub mod comm;
 pub mod fault;
 pub mod metrics;

@@ -18,7 +18,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use xla::PjRtBuffer;
 
 use crate::codec::{make_codec, Codec, CodecKind};
@@ -27,7 +27,7 @@ use crate::coordinator::comm::{
     LinkClockMode, OffloadMsg, ParamKey, PrioQueue,
 };
 use crate::coordinator::fault::{
-    crc32, FaultDir, FaultFabric, FaultPlan, RetryCfg, CODEC_TAG_F32_FALLBACK,
+    crc32, FaultDir, FaultFabric, FaultPlan, PipelineError, RetryCfg, CODEC_TAG_F32_FALLBACK,
     CODEC_TAG_NEGOTIATED,
 };
 use crate::coordinator::metrics::Metrics;
@@ -137,6 +137,20 @@ pub struct TrainConfig {
     /// `report_json`): the full `TrainReport` — every counter and curve —
     /// serialized via `util::json`.
     pub report_json: Option<String>,
+    /// Number of concurrent training jobs multiplexed over ONE shared link
+    /// pair and CPU-updater pool (`--tenants`, JSON `tenants`).  `1`
+    /// (default) is the solo pipeline; `> 1` routes every tenant through a
+    /// `coordinator::arbiter` with deficit-round-robin chunk interleaving.
+    pub tenants: usize,
+    /// Per-tenant weights for the arbiter's weighted-fair link scheduling
+    /// (`--tenant-weights`, comma-separated).  Missing entries (or an
+    /// empty vec) default to 1.0 — equal shares.
+    pub tenant_weights: Vec<f64>,
+    /// Per-tenant retransmit budgets (`--tenant-retry-budgets`,
+    /// comma-separated).  Missing entries default to `retry_budget`; a
+    /// tenant exhausting its own budget fails alone while the shared links
+    /// keep serving the others.
+    pub tenant_retry_budgets: Vec<u32>,
 }
 
 impl Default for TrainConfig {
@@ -174,6 +188,9 @@ impl Default for TrainConfig {
             codec_fallback_after: 2,
             trace_out: None,
             report_json: None,
+            tenants: 1,
+            tenant_weights: Vec::new(),
+            tenant_retry_budgets: Vec::new(),
         }
     }
 }
@@ -553,6 +570,13 @@ pub struct PipelineCtx<'e> {
     pub delta_out: Arc<PrioQueue<DeltaMsg>>,
     pub links: Option<(Link, Link)>,
     pub updater: Option<CpuUpdater>,
+    /// `Some` when this context is one tenant of a multi-tenant
+    /// [`Arbiter`](crate::coordinator::arbiter::Arbiter): `d2h_in` is then
+    /// the tenant's staging queue (drained by the arbiter's weighted-fair
+    /// mux, not a link), `delta_out` is the tenant's demuxed delta queue,
+    /// and `links`/`updater` are `None` — the arbiter owns the shared
+    /// infrastructure.  Solo pipelines leave this `None`.
+    pub tenancy: Option<crate::coordinator::arbiter::TenantRuntime>,
 }
 
 impl<'e> PipelineCtx<'e> {
@@ -687,6 +711,58 @@ impl<'e> PipelineCtx<'e> {
             delta_out,
             links,
             updater,
+            tenancy: None,
+        })
+    }
+
+    /// A tenant's context against a running multi-tenant
+    /// [`Arbiter`](crate::coordinator::arbiter::Arbiter): the model replica,
+    /// RNG, staleness ledger, and reassembler are private to the tenant,
+    /// while the links, the virtual clock, the CPU-updater pool, the wire
+    /// codec, the payload pool, and the negotiated kernel shape are the
+    /// arbiter's — negotiated ONCE, so N tenants reserve 3 schedule
+    /// threads total instead of 3 each.  `cfg` should carry the same
+    /// policy/codec knobs the arbiter was built from (per-tenant fields
+    /// like `seed` may differ freely).
+    pub fn for_tenant(
+        eng: &'e Engine,
+        cfg: TrainConfig,
+        arb: &crate::coordinator::arbiter::Arbiter,
+        id: crate::coordinator::comm::TenantId,
+    ) -> Result<PipelineCtx<'e>> {
+        let handle =
+            arb.tenant(id).ok_or_else(|| anyhow!("tenant {id} not registered with the arbiter"))?;
+        let rng = Rng::new(cfg.seed);
+        let params = ParamStore::init(&eng.man, cfg.seed ^ 0xA5A5)?;
+        let bufs = params
+            .tensors
+            .iter()
+            .map(|t| eng.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PipelineCtx {
+            eng,
+            cfg,
+            kernel: arb.kernel,
+            params,
+            bufs,
+            metrics: Metrics::default(),
+            pool: arb.pool.clone(),
+            codec: arb.codec.clone(),
+            rng,
+            clock: arb.clock.clone(),
+            pending: InFlight::default(),
+            reasm: Reassembler::default(),
+            fabric: handle.fabric.clone(),
+            d2h_in: handle.staging.clone(),
+            // Unused legs on a tenant context (the arbiter's shared queues
+            // sit between the mux and the demux instead); fresh queues so
+            // the generic Drop close is harmless.
+            d2h_out: Arc::new(PrioQueue::new()),
+            h2d_in: Arc::new(PrioQueue::new()),
+            delta_out: handle.delta_q.clone(),
+            links: None,
+            updater: None,
+            tenancy: Some(handle.runtime()),
         })
     }
 
@@ -722,9 +798,35 @@ impl<'e> PipelineCtx<'e> {
     /// FIFO while chunks of *different* layers interleave by priority.
     /// The drop of `data` returns its storage to the pool, where it
     /// typically serves as the decode buffer for a returning delta.
-    pub fn push_offload(&mut self, key: ParamKey, data: PooledBuf, prio: i64, step: u64) {
+    ///
+    /// Zero-length payloads are skipped outright (`Ok`, nothing enqueued,
+    /// nothing in the ledger): `n_chunks_for(0, c)` rounds up to one
+    /// *empty* wire chunk, which would pay codec + link + updater overhead
+    /// to move no elements and then park an empty delta in the staleness
+    /// ledger.  A chunk count that does not fit the wire header's `u32`
+    /// is a typed [`PipelineError::ChunkProtocol`] — `ChunkHeader::part`
+    /// would silently truncate `idx`/`of` and corrupt reassembly.
+    pub fn push_offload(
+        &mut self,
+        key: ParamKey,
+        data: PooledBuf,
+        prio: i64,
+        step: u64,
+    ) -> std::result::Result<(), PipelineError> {
+        if data.is_empty() {
+            return Ok(());
+        }
         let chunk_elems = self.cfg.link_chunk_elems;
         let n_chunks = n_chunks_for(data.len(), chunk_elems);
+        if n_chunks > u32::MAX as usize {
+            return Err(PipelineError::ChunkProtocol {
+                detail: format!(
+                    "{key:?}: {} elems under a {chunk_elems}-elem chunk budget split into \
+                     {n_chunks} chunks, which overflows the wire header's u32 chunk count",
+                    data.len(),
+                ),
+            });
+        }
         self.pending.insert_chunked(key.clone(), step, n_chunks as u32);
         // Graceful degradation: a key that accumulated too many decode
         // failures under a lossy codec is pinned to the bit-exact f32 wire
@@ -735,9 +837,11 @@ impl<'e> PipelineCtx<'e> {
         } else {
             (self.codec.clone(), CODEC_TAG_NEGOTIATED)
         };
+        let tenant = self.tenancy.as_ref().map(|t| t.id).unwrap_or(0);
         let mut wire_bytes = 0usize;
         encode_chunked(codec.as_ref(), &self.pool, &data, chunk_elems, |payload, mut chunk| {
             chunk.codec_tag = tag;
+            chunk.tenant = tenant;
             wire_bytes += payload.wire_bytes();
             self.d2h_in.push(
                 prio,
@@ -746,7 +850,13 @@ impl<'e> PipelineCtx<'e> {
         });
         drop(data);
         self.pending.note_wire_bytes(&key, step, wire_bytes);
+        if let Some(t) = &self.tenancy {
+            // Wake the arbiter's mux AFTER the staging pushes above: a
+            // popped token therefore always finds its messages visible.
+            t.mux_wake.push(0, ());
+        }
         self.trace_counters();
+        Ok(())
     }
 
     /// Sample the driver-owned counter tracks (queue depths, the in-flight
@@ -878,9 +988,15 @@ impl<'e> PipelineCtx<'e> {
     }
 
     /// The CPU updater's shared per-key Adam states (needed by the
-    /// projector manager for subspace-switch re-projection).
+    /// projector manager for subspace-switch re-projection).  On a tenant
+    /// context this is the tenant's OWN moment map inside the shared
+    /// updater pool — the same instance the pool's update loop routes this
+    /// tenant's chunks to.
     pub fn shared_adam_states(&self) -> Option<SharedStates> {
-        self.updater.as_ref().map(|u| u.states.clone())
+        self.updater
+            .as_ref()
+            .map(|u| u.states.clone())
+            .or_else(|| self.tenancy.as_ref().map(|t| t.states.clone()))
     }
 
     /// The run's structured event recorder — a disabled shell unless

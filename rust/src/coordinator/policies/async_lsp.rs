@@ -252,7 +252,7 @@ impl AsyncLspPolicy {
         }
         drop(sync);
         if tail_nnz > 0 {
-            ctx.push_offload(key, tail, prio, step);
+            ctx.push_offload(key, tail, prio, step)?;
         }
         Ok(())
     }

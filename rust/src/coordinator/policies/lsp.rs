@@ -71,7 +71,7 @@ impl LspPolicy {
         let st = &self.projectors[&idx];
         let s_host = compress_subspace(ctx, st, g)?;
         let key = ParamKey { param_index: idx, kind: Some(st.kind.clone()) };
-        ctx.push_offload(key, s_host, prio, step);
+        ctx.push_offload(key, s_host, prio, step)?;
         Ok(())
     }
 }
@@ -106,7 +106,7 @@ impl UpdatePolicy for LspPolicy {
             // Small non-matrix params take the full-gradient path.
             let key = ParamKey { param_index: idx, kind: None };
             let data = ctx.pool.adopt(g.into_data());
-            ctx.push_offload(key, data, prio, step);
+            ctx.push_offload(key, data, prio, step)?;
             Ok(())
         }
     }

@@ -37,7 +37,7 @@ impl UpdatePolicy for ZeroPolicy {
     ) -> Result<()> {
         let key = ParamKey { param_index: idx, kind: None };
         let data = ctx.pool.adopt(g.into_data());
-        ctx.push_offload(key, data, prio, step);
+        ctx.push_offload(key, data, prio, step)?;
         Ok(())
     }
 

@@ -11,7 +11,23 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::fault::PipelineError;
 use crate::util::json::Json;
+
+/// Jain's fairness index over `xs`: `(Σx)² / (n · Σx²)` — 1.0 for a
+/// perfectly even allocation, approaching `1/n` as one party takes
+/// everything.  Empty or all-zero input returns 1.0 (nothing was
+/// allocated, so nothing was allocated unfairly).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        1.0
+    } else {
+        (sum * sum) / (n * sq)
+    }
+}
 
 #[derive(Debug)]
 pub struct TrainReport {
@@ -55,8 +71,11 @@ pub struct TrainReport {
     pub retransmits: u64,
     /// Chunks whose CRC32 failed verification at a link endpoint.
     pub corrupt_chunks: u64,
-    /// Encoded bytes moved by retransmissions only (already included in
-    /// `bytes_up`/`bytes_down` — this is the overhead share).
+    /// Encoded bytes moved by retransmissions only — bandwidth charged ON
+    /// TOP of `bytes_up`/`bytes_down`, which count each chunk's first
+    /// transmission exactly once.  Keeping retries out of the wire totals
+    /// is what makes `compression_ratio()` a property of the codec alone,
+    /// invariant under fault plans (`tests/faults.rs`).
     pub retrans_bytes: u64,
     /// Supervised worker restarts (panics caught, state survived, in-flight
     /// message replayed).
@@ -234,6 +253,127 @@ impl TrainReport {
     }
 }
 
+/// Aggregate report of a multi-tenant run (`--tenants K`): one
+/// [`TrainReport`] (or the tenant's own [`PipelineError`]) per tenant,
+/// plus the fairness view — wire bytes the arbiter's demux delivered per
+/// tenant and Jain's index over their weight-normalized shares.  The
+/// fairness invariant the arbiter's DRR mux maintains: with every tenant
+/// busy, delivered shares track configured weights, so the normalized
+/// Jain index stays ≈ 1.0 (the acceptance gate asks ≥ 0.95 for equal
+/// weights).
+#[derive(Debug)]
+pub struct MultiTenantReport {
+    /// Normalized per-tenant link weights (what the DRR mux actually used).
+    pub weights: Vec<f64>,
+    /// Wire bytes the demux delivered back to each tenant.
+    pub delivered_bytes: Vec<u64>,
+    /// Jain's index over `delivered_bytes[t] / weights[t]`.
+    pub jain_index: f64,
+    /// Σ of the surviving tenants' `stall_secs` — under the virtual clock
+    /// this is the deterministic quantity `simulate --tenants K` predicts.
+    pub aggregate_stall_secs: f64,
+    /// Per-tenant outcome, indexed by tenant id.  A failed tenant carries
+    /// its own typed error; its failure never voids the others' reports.
+    pub reports: Vec<std::result::Result<TrainReport, PipelineError>>,
+}
+
+impl MultiTenantReport {
+    pub fn new(
+        weights: Vec<f64>,
+        delivered_bytes: Vec<u64>,
+        reports: Vec<std::result::Result<TrainReport, PipelineError>>,
+    ) -> MultiTenantReport {
+        let shares: Vec<f64> = delivered_bytes
+            .iter()
+            .zip(&weights)
+            .map(|(&b, &w)| b as f64 / w.max(f64::MIN_POSITIVE))
+            .collect();
+        let aggregate_stall_secs =
+            reports.iter().filter_map(|r| r.as_ref().ok()).map(|r| r.stall_secs).sum();
+        MultiTenantReport {
+            jain_index: jain_index(&shares),
+            weights,
+            delivered_bytes,
+            aggregate_stall_secs,
+            reports,
+        }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.reports.len()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.reports.iter().filter(|r| r.is_err()).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenants", Json::Num(self.tenants() as f64)),
+            ("failed", Json::Num(self.failed() as f64)),
+            ("weights", Json::Arr(self.weights.iter().map(|&w| Json::Num(w)).collect())),
+            (
+                "delivered_bytes",
+                Json::Arr(self.delivered_bytes.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            (
+                "jain_index",
+                if self.jain_index.is_finite() { Json::Num(self.jain_index) } else { Json::Null },
+            ),
+            (
+                "aggregate_stall_secs",
+                if self.aggregate_stall_secs.is_finite() {
+                    Json::Num(self.aggregate_stall_secs)
+                } else {
+                    Json::Null
+                },
+            ),
+            (
+                "reports",
+                Json::Arr(
+                    self.reports
+                        .iter()
+                        .map(|r| match r {
+                            Ok(rep) => rep.to_json(),
+                            Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing multi-tenant report json {}", path.display()))
+    }
+
+    pub fn print(&self) {
+        println!("==== multi-tenant report: {} tenants ====", self.tenants());
+        println!(
+            "fairness: jain {:.4} over weight-normalized delivered bytes  \
+             aggregate stall {:.2}s",
+            self.jain_index, self.aggregate_stall_secs
+        );
+        for (t, r) in self.reports.iter().enumerate() {
+            let delivered = self.delivered_bytes.get(t).copied().unwrap_or(0);
+            let weight = self.weights.get(t).copied().unwrap_or(1.0);
+            match r {
+                Ok(rep) => {
+                    println!(
+                        "-- tenant {t} (weight {weight})  delivered {} --",
+                        crate::util::human_bytes(delivered)
+                    );
+                    rep.print();
+                }
+                Err(e) => {
+                    println!("-- tenant {t} (weight {weight})  FAILED: {e} --");
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,5 +450,48 @@ mod tests {
         r.write_json(&p).unwrap();
         let back = std::fs::read_to_string(&p).unwrap();
         assert_eq!(back.trim_end(), text);
+    }
+
+    #[test]
+    fn jain_index_bounds_and_degenerate_inputs() {
+        assert_eq!(jain_index(&[]), 1.0, "empty allocation is vacuously fair");
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0, "all-zero allocation is vacuously fair");
+        assert!((jain_index(&[5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // One party takes everything among n=4 -> exactly 1/4.
+        assert!((jain_index(&[9.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        let skewed = jain_index(&[3.0, 1.0]);
+        assert!(skewed > 0.25 && skewed < 1.0);
+    }
+
+    #[test]
+    fn multi_tenant_report_aggregates_and_serializes() {
+        let reports = vec![
+            Ok({
+                let mut r = blank();
+                r.stall_secs = 1.5;
+                r
+            }),
+            Err(PipelineError::Other("boom".into())),
+            Ok({
+                let mut r = blank();
+                r.stall_secs = 0.5;
+                r
+            }),
+        ];
+        // Weight-normalized shares 100/1.0, 0/1.0, 300/3.0 -> [100, 0, 100].
+        let m = MultiTenantReport::new(vec![1.0, 1.0, 3.0], vec![100, 0, 300], reports);
+        assert_eq!(m.tenants(), 3);
+        assert_eq!(m.failed(), 1);
+        assert!((m.aggregate_stall_secs - 2.0).abs() < 1e-12, "errors contribute no stall");
+        let expected = jain_index(&[100.0, 0.0, 100.0]);
+        assert!((m.jain_index - expected).abs() < 1e-12);
+
+        let j = Json::parse(&m.to_json().to_string()).expect("multi report json must parse");
+        assert_eq!(j.get("tenants").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("failed").unwrap().as_usize().unwrap(), 1);
+        let reps = j.get("reports").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 3);
+        assert!(reps[1].get("error").is_some(), "failed tenant serializes its error");
+        assert!(reps[0].get("policy").is_some(), "surviving tenant serializes a full report");
     }
 }

@@ -30,7 +30,9 @@ use std::time::Instant;
 use anyhow::Result;
 use xla::PjRtBuffer;
 
-use crate::coordinator::fault::PipelineError;
+use crate::coordinator::arbiter::{Arbiter, TenantCfg};
+use crate::coordinator::comm::TenantId;
+use crate::coordinator::fault::{PipelineError, RetryCfg};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::PipelineCtx;
 use crate::coordinator::policies::{self, make_policy, UpdatePolicy};
@@ -44,7 +46,113 @@ use crate::trace::Track;
 // Re-exported so the established `coordinator::trainer::{TrainConfig,
 // TrainReport}` import paths keep working after the split.
 pub use crate::coordinator::pipeline::TrainConfig;
-pub use crate::coordinator::report::TrainReport;
+pub use crate::coordinator::report::{MultiTenantReport, TrainReport};
+
+/// Fold any step error into the typed pipeline error (the same mapping
+/// [`Trainer::train`] applies to its whole run).
+fn to_pipeline_error(e: anyhow::Error) -> PipelineError {
+    match e.downcast::<PipelineError>() {
+        Ok(pe) => pe,
+        Err(e) => PipelineError::Other(format!("{e:#}")),
+    }
+}
+
+/// Drive `cfg.tenants` tenant pipelines over one shared [`Arbiter`],
+/// round-robin one step each per sweep on this thread (PJRT executables
+/// are not `Send`, so tenants share the driver the way they share the
+/// links: interleaved).  Each tenant runs the SAME `cfg` — same seed, same
+/// data, same policy — so under the f32 codec every tenant's trajectory is
+/// bit-identical to a solo run of that config; per-tenant weights and
+/// retry budgets come from `cfg.tenant_weights` / `tenant_retry_budgets`
+/// (missing entries default to 1.0 / `cfg.retry_budget`).
+///
+/// Failure isolation: a tenant hitting a fatal pipeline error is recorded
+/// in its slot of [`MultiTenantReport::reports`] and dropped from the
+/// rotation; the other tenants keep stepping.  Only a setup failure
+/// (engine, config) aborts the whole run.
+pub fn train_multi(eng: &Engine, cfg: TrainConfig) -> Result<MultiTenantReport> {
+    let n = cfg.tenants.max(1);
+    let weights: Vec<f64> = (0..n)
+        .map(|t| {
+            let w = cfg.tenant_weights.get(t).copied().unwrap_or(1.0);
+            if w.is_finite() && w > 0.0 {
+                w
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    let tenant_cfgs: Vec<TenantCfg> = (0..n)
+        .map(|t| TenantCfg {
+            weight: weights[t],
+            retry: RetryCfg {
+                budget: cfg.tenant_retry_budgets.get(t).copied().unwrap_or(cfg.retry_budget),
+                backoff_ns: cfg.retry_backoff_ns,
+                fallback_after: cfg.codec_fallback_after,
+            },
+            // The run-level fault plan targets tenant 0: plans carry
+            // per-spec fired budgets, so sharing one instance across
+            // tenants would race them, and tenant 0 failing while 1..n
+            // survive is exactly the isolation the chaos lane exercises.
+            plan: if t == 0 { cfg.fault_plan.clone() } else { None },
+        })
+        .collect();
+    let arb = Arbiter::new(&cfg, tenant_cfgs);
+    let mut trainers: Vec<Trainer<'_>> = Vec::with_capacity(n);
+    for t in 0..n {
+        trainers.push(Trainer::for_tenant(eng, cfg.clone(), &arb, t as TenantId)?);
+    }
+
+    let mut failed: Vec<Option<PipelineError>> = (0..n).map(|_| None).collect();
+    let mut halted = vec![false; n]; // wall-limit, not failure
+    let mut steps_done = vec![0u64; n];
+    for step in 0..cfg.steps {
+        let mut live = false;
+        for (t, tr) in trainers.iter_mut().enumerate() {
+            if failed[t].is_some() || halted[t] {
+                continue;
+            }
+            match tr.step_once(step) {
+                Ok(true) => {
+                    steps_done[t] = step + 1;
+                    live = true;
+                }
+                Ok(false) => halted[t] = true,
+                Err(e) => failed[t] = Some(to_pipeline_error(e)),
+            }
+        }
+        if !live {
+            break;
+        }
+    }
+
+    let mut reports: Vec<std::result::Result<TrainReport, PipelineError>> =
+        Vec::with_capacity(n);
+    for (t, mut tr) in trainers.into_iter().enumerate() {
+        if let Some(e) = failed[t].take() {
+            reports.push(Err(e));
+            continue; // its queues close with the trainer's drop
+        }
+        reports.push(tr.finalize(steps_done[t]).map_err(to_pipeline_error));
+    }
+    // All tenants drained (or dead): the demux counters are final.
+    let delivered_bytes = arb.delivered_bytes();
+    // Trace export lives here rather than in the CLI: dropping the arbiter
+    // joins the mux/demux/link/updater threads, so the track buffers are
+    // quiescent when the exporter walks them — and the CLI never holds the
+    // arbiter.  All tenants share one timeline, split by per-tenant tracks.
+    let tracer = arb.tracer.clone();
+    drop(arb);
+    if let Some(path) = &cfg.trace_out {
+        tracer.export_chrome(std::path::Path::new(path), None)?;
+        println!(
+            "wrote trace ({} events, {} dropped) to {path}",
+            tracer.total_events(),
+            tracer.dropped()
+        );
+    }
+    Ok(MultiTenantReport::new(weights, delivered_bytes, reports))
+}
 
 pub struct Trainer<'e> {
     ctx: PipelineCtx<'e>,
@@ -91,6 +199,24 @@ impl<'e> Trainer<'e> {
     pub fn new(eng: &'e Engine, cfg: TrainConfig) -> Result<Trainer<'e>> {
         let (batcher, eval_batches) = build_data(&eng.man, &cfg);
         let mut ctx = PipelineCtx::new(eng, cfg)?;
+        let mut policy = make_policy(ctx.cfg.policy);
+        policy.init(&mut ctx)?;
+        Ok(Trainer { ctx, policy, batcher, eval_batches, t0: Instant::now() })
+    }
+
+    /// A tenant trainer: identical to [`Trainer::new`] except the pipeline
+    /// shares the arbiter's links/updater/clock instead of spawning its
+    /// own.  Same `cfg` (same seed, data, policy) ⇒ the f32 trajectory is
+    /// bit-identical to the solo run — the multi-tenant acceptance
+    /// invariant (`tests/tenancy.rs`).
+    pub fn for_tenant(
+        eng: &'e Engine,
+        cfg: TrainConfig,
+        arb: &Arbiter,
+        id: TenantId,
+    ) -> Result<Trainer<'e>> {
+        let (batcher, eval_batches) = build_data(&eng.man, &cfg);
+        let mut ctx = PipelineCtx::for_tenant(eng, cfg, arb, id)?;
         let mut policy = make_policy(ctx.cfg.policy);
         policy.init(&mut ctx)?;
         Ok(Trainer { ctx, policy, batcher, eval_batches, t0: Instant::now() })
@@ -227,24 +353,38 @@ impl<'e> Trainer<'e> {
 
     fn train_inner(&mut self) -> Result<TrainReport> {
         self.t0 = Instant::now();
+        let mut steps_done = 0u64;
+        for step in 0..self.ctx.cfg.steps {
+            if !self.step_once(step)? {
+                break;
+            }
+            steps_done = step + 1;
+        }
+        self.finalize(steps_done)
+    }
+
+    /// One full training step (fwd, head, bwd + grad dispatch, end-of-step
+    /// policy hook, logging/eval).  Returns `false` — without running the
+    /// step — once `max_wall_secs` is exhausted.  Extracted from the solo
+    /// loop so `train_multi` can interleave K tenants step by step on one
+    /// driver thread (PJRT executables are not `Send`).
+    fn step_once(&mut self, step: u64) -> Result<bool> {
         let eng = self.ctx.eng;
         let man = eng.man.clone();
         let c = man.config.clone();
         let n_layer = c.n_layer;
-        let mut steps_done = 0u64;
         let tracer = self.ctx.tracer().clone();
-        for step in 0..self.ctx.cfg.steps {
-            if self.ctx.cfg.max_wall_secs > 0.0
-                && self.t0.elapsed().as_secs_f64() >= self.ctx.cfg.max_wall_secs
-            {
-                break;
-            }
+        if self.ctx.cfg.max_wall_secs > 0.0
+            && self.t0.elapsed().as_secs_f64() >= self.ctx.cfg.max_wall_secs
+        {
+            return Ok(false);
+        }
+        {
             // A fatal condition recorded by a link or the updater
             // supervisor aborts the schedule at the next step boundary
             // with the typed error (the shutdown cascade has already
             // closed the queues, so nothing below could block anyway).
             self.ctx.fabric.health.ok()?;
-            steps_done = step + 1;
             tracer.begin(Track::Driver, "step", &[("step", step.into())]);
             let batch = self.batcher.next_batch();
             let (tok_buf, tgt_buf) = self.upload_batch(&batch)?;
@@ -357,10 +497,14 @@ impl<'e> Trainer<'e> {
             self.ctx.trace_counters();
             tracer.end(Track::Driver, "step", &[]);
         }
+        Ok(true)
+    }
 
-        // Final drain so reported state is consistent: policies holding
-        // deferred work (async hold buffers) flush first, then the generic
-        // in-flight wait covers the gating policies.
+    /// Final drain + report, shared by the solo and multi-tenant drivers:
+    /// policies holding deferred work (async hold buffers) flush first,
+    /// then the generic in-flight wait covers the gating policies, so the
+    /// reported state is consistent.
+    fn finalize(&mut self, steps_done: u64) -> Result<TrainReport> {
         if self.ctx.cfg.policy.offloads() {
             self.policy.finish(&mut self.ctx)?;
             let all = self.ctx.all_param_indices();
@@ -400,16 +544,28 @@ impl<'e> Trainer<'e> {
         let c = &self.ctx.eng.man.config;
         let tokens = steps_done as f64 * (c.batch * c.seq) as f64;
         use std::sync::atomic::Ordering::Relaxed;
-        let (bytes_up, bytes_down, raw_up, raw_down, link_busy) = match &self.ctx.links {
-            Some((d2h, h2d)) => (
-                d2h.bytes_moved.load(Relaxed),
-                h2d.bytes_moved.load(Relaxed),
-                d2h.raw_bytes_moved.load(Relaxed),
-                h2d.raw_bytes_moved.load(Relaxed),
-                (d2h.busy_secs(), h2d.busy_secs()),
-            ),
-            None => (0, 0, 0, 0, (0.0, 0.0)),
-        };
+        let (bytes_up, bytes_down, raw_up, raw_down, link_busy) =
+            match (&self.ctx.links, &self.ctx.tenancy) {
+                (Some((d2h, h2d)), _) => (
+                    d2h.bytes_moved.load(Relaxed),
+                    h2d.bytes_moved.load(Relaxed),
+                    d2h.raw_bytes_moved.load(Relaxed),
+                    h2d.raw_bytes_moved.load(Relaxed),
+                    (d2h.busy_secs(), h2d.busy_secs()),
+                ),
+                // Tenant pipeline: the shared links belong to the arbiter;
+                // this tenant's slice is what the mux forwarded up and the
+                // demux delivered down.  Link busy time is a shared-medium
+                // quantity with no per-tenant decomposition — left 0.
+                (None, Some(t)) => (
+                    t.up_bytes.load(Relaxed),
+                    t.down_bytes.load(Relaxed),
+                    t.up_raw_bytes.load(Relaxed),
+                    t.down_raw_bytes.load(Relaxed),
+                    (0.0, 0.0),
+                ),
+                (None, None) => (0, 0, 0, 0, (0.0, 0.0)),
+            };
         let metrics = &self.ctx.metrics;
         let health = &self.ctx.fabric.health;
         let mut report = TrainReport {

@@ -47,7 +47,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::codec::Codec;
-use crate::coordinator::comm::{DeltaMsg, OffloadMsg, ParamKey, PrioQueue, WirePayload};
+use crate::coordinator::comm::{DeltaMsg, OffloadMsg, ParamKey, PrioQueue, TenantId, WirePayload};
 use crate::coordinator::fault::{
     crc32, lock_recover, FaultFabric, PipelineError, PipelineHealth, CODEC_TAG_F32_FALLBACK,
 };
@@ -65,6 +65,8 @@ pub type SharedStates = Arc<Mutex<HashMap<ParamKey, AdamState>>>;
 const MAX_WORKER_RESTARTS: u32 = 64;
 
 pub struct CpuUpdater {
+    /// Tenant 0's moment map — THE moment map on a solo pipeline (the
+    /// projector manager re-projects through this handle).
     pub states: SharedStates,
     pub busy_ns: Arc<AtomicU64>,
     pub updates_done: Arc<AtomicU64>,
@@ -81,10 +83,43 @@ impl CpuUpdater {
         codec: Arc<dyn Codec>,
         fabric: FaultFabric,
     ) -> CpuUpdater {
-        let states: SharedStates = Arc::new(Mutex::new(HashMap::new()));
+        CpuUpdater::spawn_shared(
+            ingress,
+            egress,
+            compute_scale,
+            pool,
+            kernel,
+            codec,
+            fabric,
+            vec![SharedStates::default()],
+        )
+    }
+
+    /// The shared-pool form the multi-tenant arbiter uses: ONE updater
+    /// thread serving every tenant, with `tenant_states[t]` holding tenant
+    /// `t`'s Adam moment map (separate maps — `ParamKey`s collide across
+    /// tenants by construction, since every tenant trains its own model
+    /// replica).  `CpuUpdater::spawn` is the `tenant_states = [fresh]`
+    /// special case.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_shared(
+        ingress: Arc<PrioQueue<OffloadMsg>>,
+        egress: Arc<PrioQueue<DeltaMsg>>,
+        compute_scale: f64,
+        pool: BufPool,
+        kernel: KernelConfig,
+        codec: Arc<dyn Codec>,
+        fabric: FaultFabric,
+        mut tenant_states: Vec<SharedStates>,
+    ) -> CpuUpdater {
+        if tenant_states.is_empty() {
+            tenant_states.push(SharedStates::default());
+        }
+        let states = tenant_states[0].clone();
+        let tenant_states = Arc::new(tenant_states);
         let busy_ns = Arc::new(AtomicU64::new(0));
         let updates_done = Arc::new(AtomicU64::new(0));
-        let (st, bn, ud) = (states.clone(), busy_ns.clone(), updates_done.clone());
+        let (st, bn, ud) = (tenant_states.clone(), busy_ns.clone(), updates_done.clone());
         let handle = std::thread::Builder::new()
             .name("cpu-updater".into())
             .spawn(move || {
@@ -92,7 +127,8 @@ impl CpuUpdater {
                 // supervised loop so they survive a restart: a mid-stream
                 // chunk position must not be forgotten, and the panicked
                 // message must be replayed exactly once.
-                let mut in_progress: HashMap<ParamKey, (u64, u32, u32)> = HashMap::new();
+                let mut in_progress: HashMap<(TenantId, ParamKey), (u64, u32, u32)> =
+                    HashMap::new();
                 let slot: Mutex<Option<OffloadMsg>> = Mutex::new(None);
                 let mut restarts: u32 = 0;
                 loop {
@@ -129,7 +165,10 @@ impl CpuUpdater {
                                 ],
                             );
                             if !replayable || restarts > MAX_WORKER_RESTARTS {
-                                fabric.health.fail(PipelineError::WorkerFailed {
+                                // The pool itself died, so EVERY tenant's
+                                // updates stop with it: fail the root and
+                                // all tenant healths (identity on solo).
+                                fabric.fail_all(PipelineError::WorkerFailed {
                                     worker: "cpu-updater",
                                     detail: if replayable {
                                         format!("restart limit ({MAX_WORKER_RESTARTS}) exceeded")
@@ -166,7 +205,10 @@ impl CpuUpdater {
 
 /// The supervised update loop.  Returns on a drained+closed ingress or a
 /// fatal (already recorded) protocol error; panics — injected or organic —
-/// unwind into the supervisor in [`CpuUpdater::spawn`].
+/// unwind into the supervisor in [`CpuUpdater::spawn`].  In multi-tenant
+/// mode (`fabric.is_multi_tenant()`) a per-tenant protocol violation fails
+/// only that tenant's health and the loop keeps serving the others; on a
+/// solo pipeline it exits as before.
 #[allow(clippy::too_many_arguments)]
 fn update_loop(
     ingress: &PrioQueue<OffloadMsg>,
@@ -176,13 +218,13 @@ fn update_loop(
     kernel: &KernelConfig,
     codec: &Arc<dyn Codec>,
     fabric: &FaultFabric,
-    shared: &SharedStates,
+    states_by_tenant: &[SharedStates],
     busy_ns: &AtomicU64,
     updates_done: &AtomicU64,
-    in_progress: &mut HashMap<ParamKey, (u64, u32, u32)>,
+    in_progress: &mut HashMap<(TenantId, ParamKey), (u64, u32, u32)>,
     slot: &Mutex<Option<OffloadMsg>>,
 ) {
-    loop {
+    'msgs: loop {
         // Replay the parked message first (restart path), else pop fresh
         // work.
         let msg = match lock_recover(slot).take() {
@@ -192,11 +234,15 @@ fn update_loop(
                 None => return,
             },
         };
+        let tenant = msg.chunk.tenant;
+        // Fault plan, health, and codec-fallback state all belong to the
+        // message's tenant; `for_tenant` is the identity on solo pipelines.
+        let tf = fabric.for_tenant(tenant);
         // Injected updater panic: park the message for replay BEFORE any
         // state mutation — the plan's fired-counter guarantees the replay
         // does not re-panic, so the message is processed exactly once and
         // the trajectory stays bit-identical through the fault.
-        if fabric.updater_panic(msg.step, &msg.key, msg.chunk.idx) {
+        if tf.updater_panic(msg.step, &msg.key, msg.chunk.idx) {
             fabric.tracer.instant(
                 crate::trace::Track::Updater,
                 "fault_panic",
@@ -204,6 +250,7 @@ fn update_loop(
                     ("param", msg.key.param_index.into()),
                     ("step", msg.step.into()),
                     ("chunk", msg.chunk.idx.into()),
+                    ("tenant", tenant.into()),
                 ],
             );
             *lock_recover(slot) = Some(msg);
@@ -220,10 +267,31 @@ fn update_loop(
                 ("of", msg.chunk.of.into()),
                 ("elems", msg.data.elems.into()),
                 ("codec_tag", (msg.chunk.codec_tag as u32).into()),
+                ("tenant", tenant.into()),
             ],
         );
         let t0 = std::time::Instant::now();
         let OffloadMsg { key, data, prio, step, link_ns, chunk } = msg;
+        // Adam moments are routed by tenant: each tenant trains its own
+        // model replica, so one shared map would collide on `ParamKey`.
+        let Some(shared) = states_by_tenant.get(tenant as usize) else {
+            tf.health.fail(PipelineError::ChunkProtocol {
+                detail: format!(
+                    "{key:?}: message for unregistered tenant {tenant} \
+                     ({} registered)",
+                    states_by_tenant.len(),
+                ),
+            });
+            fabric.tracer.end(
+                crate::trace::Track::Updater,
+                "cpu_adam",
+                &[("tenant", tenant.into())],
+            );
+            if fabric.is_multi_tenant() {
+                continue 'msgs;
+            }
+            return;
+        };
         // The chunk protocol this thread relies on: for any one key,
         // chunks arrive strictly in (gradient, chunk index) order — chunk
         // 0 advances the shared Adam step counter, later chunks reuse its
@@ -234,13 +302,14 @@ fn update_loop(
         // re-prioritized a key mid-flight — so violations fail the
         // pipeline loudly (typed error + shutdown cascade, not a panic).
         // `in_progress` holds (step, next chunk idx, n_chunks) only while
-        // a multi-chunk gradient is mid-stream.
+        // a multi-chunk gradient is mid-stream, keyed per tenant.
+        let stream_key = (tenant, key.clone());
         let mut stream_done = false;
-        match in_progress.get_mut(&key) {
+        match in_progress.get_mut(&stream_key) {
             Some(entry) => {
                 let (s, next, of) = *entry;
                 if step != s || chunk.idx != next || chunk.of != of {
-                    fabric.health.fail(PipelineError::ChunkProtocol {
+                    tf.health.fail(PipelineError::ChunkProtocol {
                         detail: format!(
                             "{key:?}: got step {step} chunk {}/{}, expected step {s} chunk \
                              {next}/{of} — per-key FIFO broken (did a policy re-prioritize \
@@ -248,7 +317,14 @@ fn update_loop(
                             chunk.idx, chunk.of,
                         ),
                     });
-                    fabric.tracer.end(crate::trace::Track::Updater, "cpu_adam", &[]);
+                    fabric.tracer.end(
+                        crate::trace::Track::Updater,
+                        "cpu_adam",
+                        &[("tenant", tenant.into())],
+                    );
+                    if fabric.is_multi_tenant() {
+                        continue 'msgs;
+                    }
                     return;
                 }
                 entry.1 += 1;
@@ -256,28 +332,35 @@ fn update_loop(
             }
             None => {
                 if chunk.idx != 0 {
-                    fabric.health.fail(PipelineError::ChunkProtocol {
+                    tf.health.fail(PipelineError::ChunkProtocol {
                         detail: format!(
                             "{key:?}: stream starts at chunk {}/{} (step {step})",
                             chunk.idx, chunk.of,
                         ),
                     });
-                    fabric.tracer.end(crate::trace::Track::Updater, "cpu_adam", &[]);
+                    fabric.tracer.end(
+                        crate::trace::Track::Updater,
+                        "cpu_adam",
+                        &[("tenant", tenant.into())],
+                    );
+                    if fabric.is_multi_tenant() {
+                        continue 'msgs;
+                    }
                     return;
                 }
                 if chunk.of > 1 {
-                    in_progress.insert(key.clone(), (step, 1, chunk.of));
+                    in_progress.insert(stream_key.clone(), (step, 1, chunk.of));
                 }
             }
         }
         if stream_done {
-            in_progress.remove(&key);
+            in_progress.remove(&stream_key);
         }
         let n = data.elems;
         // Which codec encoded this payload: the negotiated one, or the
         // bit-exact f32 fallback once the key degraded.
         let codec_eff: &dyn Codec = if chunk.codec_tag == CODEC_TAG_F32_FALLBACK {
-            fabric.f32_codec.as_ref()
+            tf.f32_codec.as_ref()
         } else {
             codec.as_ref()
         };
@@ -290,10 +373,10 @@ fn update_loop(
         let sum_ok = chunk.checksum == 0 || crc32(data.as_bytes()) == chunk.checksum;
         let decoded = sum_ok && codec_eff.decode(data.as_bytes(), &mut g).is_ok();
         if decoded {
-            fabric.note_decode_success(&key);
+            tf.note_decode_success(&key);
         } else {
             g.fill(0.0);
-            fabric.note_decode_failure(&key, codec.rel_l2_bound() > 0.0);
+            tf.note_decode_failure(&key, codec.rel_l2_bound() > 0.0);
         }
         // Return the gradient's byte buffer to the pool before encoding
         // the delta so it can serve as that wire buffer.
@@ -314,14 +397,21 @@ fn update_loop(
             // Hard (release-mode) guard: a mis-sized payload would
             // otherwise silently update a prefix of stale moments.
             if state.m.len() != chunk.total_elems {
-                fabric.health.fail(PipelineError::ChunkProtocol {
+                tf.health.fail(PipelineError::ChunkProtocol {
                     detail: format!(
                         "payload for {key:?} disagrees with its moment length ({} vs {})",
                         state.m.len(),
                         chunk.total_elems,
                     ),
                 });
-                fabric.tracer.end(crate::trace::Track::Updater, "cpu_adam", &[]);
+                fabric.tracer.end(
+                    crate::trace::Track::Updater,
+                    "cpu_adam",
+                    &[("tenant", tenant.into())],
+                );
+                if fabric.is_multi_tenant() {
+                    continue 'msgs;
+                }
                 return;
             }
             state.fused_step_chunk_with(&g, &mut delta, chunk.elem_offset, chunk.idx == 0, kernel);
@@ -350,7 +440,7 @@ fn update_loop(
         fabric.tracer.end(
             crate::trace::Track::Updater,
             "cpu_adam",
-            &[("decoded", (decoded as u32).into())],
+            &[("decoded", (decoded as u32).into()), ("tenant", tenant.into())],
         );
         egress.push(prio, DeltaMsg { key, delta: wire, prio, step, link_ns, chunk: out_chunk });
     }

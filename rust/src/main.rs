@@ -8,7 +8,7 @@
 //!                       [--tokens N] [--d-sub N] [--iters N]
 //!                       [--link-codec f32|bf16|int8|sparse-int8]
 //!                       [--async-rho X] [--async-staleness S]
-//!                       [--link-chunk-elems N]
+//!                       [--link-chunk-elems N] [--tenants K]
 //!                       [--fault-plan JSON|path] [--retry-budget N]
 //!                       [--trace-out FILE]
 //!     Discrete-event replay of the offload pipelines (Figs 2/3/6/7a);
@@ -20,8 +20,12 @@
 //!     (same syntax as `train`) the expected-retransmit factor — how much
 //!     the planned drops/corruptions inflate link time under the retry
 //!     protocol — is printed, pricing what the runtime then measures as
-//!     `retrans_bytes`.  `--trace-out` writes the first selected
-//!     schedule's predicted task timeline as Chrome trace-event JSON.
+//!     `retrans_bytes`.  `--tenants K` sets the replica count for the
+//!     `multi-tenant` schedule (K lsp-layerwise pipelines over shared
+//!     links) and prints the closed-form per-tenant + aggregate stall
+//!     prediction that `train --tenants K` then measures.  `--trace-out`
+//!     writes the first selected schedule's predicted task timeline as
+//!     Chrome trace-event JSON.
 //! lsp-offload train     [--preset tiny|small|mid]
 //!                       [--policy lsp|async-lsp|zero|...]
 //!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
@@ -31,6 +35,8 @@
 //!                       [--link-chunk-elems N]
 //!                       [--fault-plan JSON|path] [--retry-budget N]
 //!                       [--retry-backoff-ns N] [--codec-fallback-after K]
+//!                       [--tenants K] [--tenant-weights W1,W2,...]
+//!                       [--tenant-retry-budgets B1,B2,...]
 //!                       [--trace-out FILE] [--report-json FILE]
 //!     Real training over the PJRT artifacts with throttled links; link
 //!     payloads cross in the chosen wire format (`auto` = policy default).
@@ -47,6 +53,13 @@
 //!     payloads fail to decode `--codec-fallback-after` consecutive times
 //!     degrades to the bit-exact f32 wire codec.  The recovery counters
 //!     land in the train report.
+//!     `--tenants K` trains K pipeline replicas that share the two links
+//!     and the CPU-updater pool through a weighted-fair arbiter
+//!     (`--tenant-weights`, comma-separated DRR weights defaulting to 1;
+//!     `--tenant-retry-budgets`, per-tenant retransmit budgets defaulting
+//!     to `--retry-budget`); the fault plan targets tenant 0 and a dead
+//!     tenant fails alone.  Prints per-tenant reports plus a fairness
+//!     aggregate (Jain's index over delivered chunk bytes).
 //!     `--trace-out` (JSON `trace_out`, `LSP_TRACE_OUT` env as fallback)
 //!     records a structured per-event timeline — per-layer driver spans,
 //!     per-chunk link transfers, CPU-Adam spans, fault/retransmit
@@ -171,10 +184,15 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
         // Same validation as the train config: 0 = whole-layer transfers.
         w.link_chunk_elems = lsp_offload::config::parse_link_chunk_elems(v)?;
     }
+    if let Some(v) = args.get_u64("tenants")? {
+        // Same validation as the train config; the multi-tenant schedule
+        // replicates the lsp-layerwise pipeline K times over shared links.
+        w.tenants = lsp_offload::config::parse_tenants(v)?;
+    }
     let iters = args.get_u64("iters")?.unwrap_or(4) as usize;
     let which = args.get("schedule").unwrap_or("all");
     println!(
-        "simulating {} on {} (tokens={}, d={}, codec={}, rho={}, S={}, chunk={}, {} iters)",
+        "simulating {} on {} (tokens={}, d={}, codec={}, rho={}, S={}, chunk={}, tenants={}, {} iters)",
         w.name,
         hw.name,
         w.tokens,
@@ -183,6 +201,7 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
         w.async_rho,
         w.async_staleness,
         w.link_chunk_elems,
+        w.tenants,
         iters
     );
     let kinds: Vec<ScheduleKind> = if which == "all" {
@@ -266,6 +285,25 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
             eq_chunked_iter(&c, w.n_layers, 0.0, 0, 1),
         );
     }
+    if w.tenants > 1 {
+        // Closed-form multi-tenant prediction: virtual-clock transfer
+        // charges are contention-independent, so each tenant's gated link
+        // exposure matches the solo closed form and the aggregate is K
+        // times it — the number `train --tenants K` then measures as the
+        // summed per-tenant stall_secs.
+        use lsp_offload::sim::cost_model::{
+            chunked_gated_link_exposure, multi_tenant_gated_link_exposure, Costs,
+        };
+        let c = Costs::derive(&hw, &w);
+        let chunks = w.sub_payload_chunks();
+        let solo = chunked_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks);
+        let agg = multi_tenant_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks, w.tenants);
+        println!(
+            "predicted multi-tenant gated link exposure ({} tenants): {solo:.4}s per tenant, \
+             {agg:.4}s aggregate per iter",
+            w.tenants
+        );
+    }
     Ok(())
 }
 
@@ -275,6 +313,9 @@ fn cmd_train(args: &CliArgs) -> Result<()> {
     println!("loading artifacts from {} ...", dir.display());
     let eng = Engine::load(&dir).context("loading artifacts (run `make artifacts`)")?;
     let cfg = train_config_from(args)?;
+    if cfg.tenants > 1 {
+        return cmd_train_multi(&eng, cfg);
+    }
     println!(
         "training preset={} policy={} steps={} bw={:.3} GB/s lcfs={}",
         preset,
@@ -326,6 +367,35 @@ fn cmd_train(args: &CliArgs) -> Result<()> {
             tracer.dropped(),
             if sim_ref.is_some() { ", sim overlay" } else { "" },
         );
+    }
+    Ok(())
+}
+
+/// `train --tenants K`: K pipeline replicas share the two links and the
+/// CPU-updater pool through the resource arbiter (`coordinator::arbiter`).
+/// Prints every tenant's report plus the fairness aggregate (Jain's index
+/// over weight-normalized delivered chunk bytes).  A tenant that dies —
+/// e.g. exhausts its `--tenant-retry-budgets` slot under a fault plan —
+/// lands as a per-tenant error in the report without failing the run;
+/// only all tenants failing is a command error.
+fn cmd_train_multi(eng: &Engine, cfg: lsp_offload::coordinator::TrainConfig) -> Result<()> {
+    println!(
+        "training {} tenants policy={} steps={} bw={:.3} GB/s weights={:?}",
+        cfg.tenants,
+        cfg.policy.name(),
+        cfg.steps,
+        cfg.bw_bytes_per_s / 1e9,
+        cfg.tenant_weights,
+    );
+    let report_json = cfg.report_json.clone();
+    let report = lsp_offload::coordinator::trainer::train_multi(eng, cfg)?;
+    if let Some(path) = report_json {
+        report.write_json(std::path::Path::new(&path))?;
+        println!("wrote multi-tenant report to {path}");
+    }
+    report.print();
+    if report.failed() == report.tenants() {
+        bail!("all {} tenants failed", report.tenants());
     }
     Ok(())
 }

@@ -149,6 +149,11 @@ pub struct Workload {
     /// CPU-update -> upload tail pipelines chunk-wise (PIPO-style).  `0` =
     /// whole-payload transfers, the pre-chunking schedule.
     pub link_chunk_elems: usize,
+    /// Concurrent tenant pipelines sharing the links and the CPU updater
+    /// (`--tenants` in the simulator, mirroring `TrainConfig::tenants`).
+    /// 1 = the solo schedules; the `MultiTenant` DES kind lays out this
+    /// many lsp-layerwise replicas over the shared resources.
+    pub tenants: usize,
 }
 
 impl Workload {
@@ -167,6 +172,7 @@ impl Workload {
             async_rho: 0.5,
             async_staleness: 2,
             link_chunk_elems: 0,
+            tenants: 1,
         }
     }
 
@@ -187,6 +193,7 @@ impl Workload {
             async_rho: 0.5,
             async_staleness: 2,
             link_chunk_elems: 0,
+            tenants: 1,
         }
     }
 
@@ -470,6 +477,30 @@ pub fn chunked_gated_link_exposure(
         * crate::coordinator::comm::chunk_pipeline_factor(n_chunks)
 }
 
+/// Closed-form **aggregate** gated link exposure of `tenants` identical
+/// lsp-layerwise pipelines sharing the arbiter's links — the quantity a
+/// multi-tenant run's summed per-tenant virtual `stall_secs`
+/// ([`crate::coordinator::report::MultiTenantReport::aggregate_stall_secs`])
+/// reports per iteration.
+///
+/// Why a plain `K x` is the right model and not a contention term: the
+/// virtual clock charges each chunk pure `wire_bytes / bandwidth`
+/// arithmetic, deliberately independent of queueing (that is what makes
+/// tenant trajectories bit-identical to solo runs), so each tenant's
+/// modeled stall equals its solo exposure and the aggregate is exactly
+/// `tenants` times the solo closed form ([`chunked_gated_link_exposure`]).
+/// `tenants = 1` is bit-for-bit the solo form.
+pub fn multi_tenant_gated_link_exposure(
+    c: &Costs,
+    n: usize,
+    rho: f64,
+    staleness: u64,
+    n_chunks: u64,
+    tenants: usize,
+) -> f64 {
+    tenants.max(1) as f64 * chunked_gated_link_exposure(c, n, rho, staleness, n_chunks)
+}
+
 /// Expected link-time inflation from planned retransmits: each planned
 /// drop/corrupt costs one extra wire crossing per firing (up to the retry
 /// budget), so a schedule moving `base_transfers` chunks prices its links at
@@ -696,6 +727,27 @@ mod tests {
         assert_eq!(
             eq_chunked_iter(&c_pen, n, 0.0, 0, 1).to_bits(),
             eq_async_lsp_iter(&c_pen, n, 0.0, 0).to_bits()
+        );
+    }
+
+    #[test]
+    fn multi_tenant_exposure_is_k_times_solo_and_degenerates_at_one() {
+        let (_, mut w, c) = llama_ws();
+        w.link_chunk_elems = 4096;
+        let chunks = w.sub_payload_chunks();
+        let solo = chunked_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks);
+        // tenants = 1 is the solo closed form, bit for bit.
+        assert_eq!(
+            multi_tenant_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks, 1).to_bits(),
+            solo.to_bits()
+        );
+        // Virtual-clock charges are contention-independent, so K tenants
+        // aggregate to exactly K x solo (and 0 clamps to 1 tenant).
+        let k4 = multi_tenant_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks, 4);
+        assert!((k4 / solo - 4.0).abs() < 1e-12);
+        assert_eq!(
+            multi_tenant_gated_link_exposure(&c, w.n_layers, 0.0, 0, chunks, 0).to_bits(),
+            solo.to_bits()
         );
     }
 

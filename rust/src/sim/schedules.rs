@@ -35,6 +35,12 @@ pub enum ScheduleKind {
     /// crosses the links, and a fwd gates on the tail apply from S+1
     /// iterations back (bounded staleness) instead of the previous one.
     AsyncLsp,
+    /// Multi-tenant arbitration (`Workload::tenants` = K): K independent
+    /// lsp-layerwise tenant replicas — task names prefixed `t{k}.` — share
+    /// the one GPU driver, both links and the CPU updater, modeling the
+    /// runtime's [`crate::coordinator::arbiter::Arbiter`].  `tenants = 1`
+    /// degenerates exactly to [`ScheduleKind::LspLayerwise`].
+    MultiTenant,
 }
 
 impl ScheduleKind {
@@ -47,6 +53,7 @@ impl ScheduleKind {
             "zero-layerwise" | "layerwise" => Some(ScheduleKind::ZeroLayerwise),
             "lsp" | "lsp-layerwise" => Some(ScheduleKind::LspLayerwise),
             "async-lsp" | "async" => Some(ScheduleKind::AsyncLsp),
+            "multi-tenant" | "multi" | "tenants" => Some(ScheduleKind::MultiTenant),
             _ => None,
         }
     }
@@ -60,6 +67,7 @@ impl ScheduleKind {
             ScheduleKind::ZeroLayerwise => "zero-layerwise",
             ScheduleKind::LspLayerwise => "lsp-layerwise",
             ScheduleKind::AsyncLsp => "async-lsp",
+            ScheduleKind::MultiTenant => "multi-tenant",
         }
     }
 
@@ -77,7 +85,7 @@ impl ScheduleKind {
         }
     }
 
-    pub const ALL: [ScheduleKind; 7] = [
+    pub const ALL: [ScheduleKind; 8] = [
         ScheduleKind::Native,
         ScheduleKind::SwapOnly,
         ScheduleKind::Zero,
@@ -85,6 +93,7 @@ impl ScheduleKind {
         ScheduleKind::ZeroLayerwise,
         ScheduleKind::LspLayerwise,
         ScheduleKind::AsyncLsp,
+        ScheduleKind::MultiTenant,
     ];
 }
 
@@ -100,6 +109,7 @@ pub fn build_sim(kind: ScheduleKind, hw: &HardwareProfile, w: &Workload, iters: 
         ScheduleKind::ZeroLayerwise => layerwise(&mut sim, &c, w, iters, false),
         ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
         ScheduleKind::AsyncLsp => layerwise_async(&mut sim, &c, w, iters),
+        ScheduleKind::MultiTenant => multi_tenant(&mut sim, &c, w, iters),
     }
     sim
 }
@@ -121,13 +131,18 @@ pub fn build_schedule(
         ScheduleKind::ZeroLayerwise => layerwise(&mut sim, &c, w, iters, false),
         ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
         ScheduleKind::AsyncLsp => layerwise_async(&mut sim, &c, w, iters),
+        ScheduleKind::MultiTenant => multi_tenant(&mut sim, &c, w, iters),
     }
     let sched = sim.run()?;
+    // Multi-tenant lays out K replicas of the per-iteration work, so the
+    // aggregate GPU-compute baseline scales with the tenant count (the
+    // slowdown column stays total-work / capacity).
+    let replicas = if kind == ScheduleKind::MultiTenant { w.tenants.max(1) } else { 1 };
     Ok(IterReport::from_schedule(
         kind.name(),
         &sched,
         iters,
-        c.gpu_compute(w.n_layers),
+        c.gpu_compute(w.n_layers) * replicas as f64,
         makespan(&sched),
     ))
 }
@@ -404,6 +419,7 @@ fn zero_delayed(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
 #[allow(clippy::too_many_arguments)]
 fn chunked_layer_tail(
     sim: &mut Sim,
+    pfx: &str,
     it: usize,
     l: usize,
     dep: TaskId,
@@ -417,21 +433,21 @@ fn chunked_layer_tail(
     for ch in 0..cch {
         let suffix = if cch == 1 { String::new() } else { format!(".c{ch}") };
         let off = sim.add_prio(
-            format!("i{it}.off{l}{suffix}"),
+            format!("{pfx}i{it}.off{l}{suffix}"),
             Resource::D2H,
             off_t / cch as f64,
             &[dep],
             prio,
         );
         let upd = sim.add_prio(
-            format!("i{it}.upd{l}{suffix}"),
+            format!("{pfx}i{it}.upd{l}{suffix}"),
             Resource::Cpu,
             upd_t / cch as f64,
             &[off],
             prio,
         );
         let up = sim.add_prio(
-            format!("i{it}.up{l}{suffix}"),
+            format!("{pfx}i{it}.up{l}{suffix}"),
             Resource::H2D,
             up_t / cch as f64,
             &[upd],
@@ -446,6 +462,21 @@ fn chunked_layer_tail(
 /// LSP-Offload (subspace-sized comm + CPU update, plus GPU compress/apply);
 /// with `false` it is the "+layerwise" Fig. 6 ablation over full gradients.
 fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: bool) {
+    layerwise_prefixed(sim, c, w, iters, compress, "");
+}
+
+/// [`layerwise`] with every task name prefixed `pfx` — the per-tenant
+/// replica the [`multi_tenant`] builder lays out K times over the shared
+/// resources.  An empty prefix reproduces the solo task names exactly, so
+/// the `tenants = 1` degeneracy holds down to the task list.
+fn layerwise_prefixed(
+    sim: &mut Sim,
+    c: &Costs,
+    w: &Workload,
+    iters: usize,
+    compress: bool,
+    pfx: &str,
+) {
     let n = w.n_layers;
     let (off_t, up_t, upd_t) = if compress {
         (c.offload_layer_sub, c.upload_layer_sub, c.upd_layer_cpu_sub)
@@ -467,12 +498,17 @@ fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: boo
             // Wait for event e_l: fwd after this layer's params updated.
             let mut deps: Vec<_> = prev.into_iter().collect();
             deps.extend(apply_done[l]);
-            prev = Some(sim.add(format!("i{it}.fwd{l}"), Resource::Gpu, c.fwd_layer_gpu, &deps));
+            prev = Some(sim.add(
+                format!("{pfx}i{it}.fwd{l}"),
+                Resource::Gpu,
+                c.fwd_layer_gpu,
+                &deps,
+            ));
         }
         let mut bwd_prev = prev.unwrap();
         for l in (0..n).rev() {
             let bwd = sim.add(
-                format!("i{it}.bwd{l}"),
+                format!("{pfx}i{it}.bwd{l}"),
                 Resource::Gpu,
                 c.bwd_layer_gpu,
                 &[bwd_prev],
@@ -485,7 +521,7 @@ fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: boo
             let prio = if depth < transition { depth as i64 } else { -(l as i64 + 1) };
             let (cmp, compress_dep) = if compress {
                 let t = sim.add(
-                    format!("i{it}.cmp{l}"),
+                    format!("{pfx}i{it}.cmp{l}"),
                     Resource::Gpu,
                     c.compress_layer_gpu,
                     &[bwd],
@@ -508,14 +544,25 @@ fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: boo
             // its parallel-dispatch threshold: price the updater with the
             // chunk penalty.  cch == 1 must stay bit-exact unchunked.
             let upd_eff = if cch > 1 { upd_t * c.upd_chunk_penalty } else { upd_t };
-            let ups = chunked_layer_tail(sim, it, l, compress_dep, off_t, upd_eff, up_t, cch, prio);
+            let ups = chunked_layer_tail(
+                sim,
+                pfx,
+                it,
+                l,
+                compress_dep,
+                off_t,
+                upd_eff,
+                up_t,
+                cch,
+                prio,
+            );
             let apply_cost = if compress { c.apply_layer_gpu } else { c.apply_layer_full_gpu };
             // Apply on GPU; low priority so it never preempts fwd/bwd order
             // but must finish before next iteration's fwd of this layer.
             // The layer event gates on the WHOLE layer, so the apply waits
             // for every chunk's upload.
             let apply = sim.add_prio(
-                format!("i{it}.apply{l}"),
+                format!("{pfx}i{it}.apply{l}"),
                 Resource::Gpu,
                 apply_cost,
                 &ups,
@@ -523,6 +570,24 @@ fn layerwise(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize, compress: boo
             );
             apply_done[l] = Some(apply);
         }
+    }
+}
+
+/// K tenant replicas of the full LSP layer-wise schedule over ONE set of
+/// resources — the DES model of the runtime's multi-tenant arbiter: every
+/// `t{k}.`-prefixed replica competes for the same GPU driver, d2h/h2d
+/// links and CPU updater, exactly as the arbiter's tenants share one link
+/// pair and one updater pool.  `tenants <= 1` falls through to the plain
+/// lsp-layerwise builder (unprefixed task names), making the solo
+/// degeneracy exact.
+fn multi_tenant(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
+    let k = w.tenants.max(1);
+    if k == 1 {
+        layerwise(sim, c, w, iters, true);
+        return;
+    }
+    for t in 0..k {
+        layerwise_prefixed(sim, c, w, iters, true, &format!("t{t}."));
     }
 }
 
@@ -575,7 +640,8 @@ fn layerwise_async(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
                 // Same updater penalty as the synchronous builder: a real
                 // split runs each chunk's Adam single-threaded.
                 let upd_eff = if cch > 1 { upd_t * c.upd_chunk_penalty } else { upd_t };
-                let ups = chunked_layer_tail(sim, it, l, cmp, off_t, upd_eff, up_t, cch, depth);
+                let ups =
+                    chunked_layer_tail(sim, "", it, l, cmp, off_t, upd_eff, up_t, cch, depth);
                 let apply = sim.add_prio(
                     format!("i{it}.apply{l}"),
                     Resource::Gpu,
@@ -771,6 +837,34 @@ mod tests {
             "sub-threshold chunks must pay the single-thread Adam penalty: \
              {sub_threshold} vs {at_threshold}"
         );
+    }
+
+    #[test]
+    fn multi_tenant_degenerates_to_solo_and_scales_with_contention() {
+        let (hw, w) = setup();
+        // tenants = 1: bit-for-bit the lsp-layerwise DES (same task list,
+        // same makespan).
+        let solo = build_schedule(ScheduleKind::LspLayerwise, &hw, &w, 3).unwrap().iter_time;
+        let one = build_schedule(ScheduleKind::MultiTenant, &hw, &w, 3).unwrap().iter_time;
+        assert_eq!(one.to_bits(), solo.to_bits(), "tenants = 1 must be the solo schedule");
+        let s1 = build_sim(ScheduleKind::MultiTenant, &hw, &w, 2);
+        let s0 = build_sim(ScheduleKind::LspLayerwise, &hw, &w, 2);
+        assert_eq!(s1.tasks().len(), s0.tasks().len());
+
+        // K = 4 equal tenants: the DAG validates, carries 4x the tasks
+        // under t{k}. prefixes, and the shared resources make the run at
+        // least as long as solo but no worse than fully serialized.
+        let mut w4 = w.clone();
+        w4.tenants = 4;
+        let sim = build_sim(ScheduleKind::MultiTenant, &hw, &w4, 2);
+        assert_eq!(sim.tasks().len(), 4 * s0.tasks().len());
+        assert!(sim.tasks().iter().any(|t| t.name.starts_with("t0.i0.fwd")));
+        assert!(sim.tasks().iter().any(|t| t.name.starts_with("t3.i0.apply")));
+        let sched = sim.run().unwrap();
+        crate::sim::engine::validate(sim.tasks(), &sched).unwrap();
+        let four = build_schedule(ScheduleKind::MultiTenant, &hw, &w4, 3).unwrap().iter_time;
+        assert!(four >= solo * 0.99, "4 tenants can't beat one: {four} vs {solo}");
+        assert!(four <= solo * 4.0 * 1.01, "sharing can't be worse than serial: {four}");
     }
 
     #[test]

@@ -62,12 +62,27 @@ fn meta_event(pid: u64, tid: u64, what: &str, label: &str, sort: u64) -> Vec<Jso
     out
 }
 
+/// The Chrome `tid` a runtime event lands on: the producing tenant's id
+/// (the `tenant` event arg), 0 for untagged events — solo-mode spans,
+/// driver spans, supervisor instants.  Splitting a track's record order
+/// into per-tenant subsequences preserves both `check_trace.py`
+/// invariants: timestamps stay non-decreasing (a subsequence of a
+/// monotone sequence), and B/E pairs stay on one tid because begin and
+/// end both carry the producing tenant.
+fn event_tenant_tid(ev: &Event) -> u64 {
+    ev.args.iter().find(|(k, _)| *k == "tenant").map_or(0, |(_, v)| match v {
+        Arg::U64(t) => *t,
+        Arg::I64(t) => (*t).max(0) as u64,
+        _ => 0,
+    })
+}
+
 fn runtime_event_json(ev: &Event, pid: u64) -> Json {
     let mut pairs = vec![
         ("name", Json::Str(ev.name.into())),
         ("ph", Json::Str(ev.ph.chrome().into())),
         ("pid", Json::Num(pid as f64)),
-        ("tid", Json::Num(0.0)),
+        ("tid", Json::Num(event_tenant_tid(ev) as f64)),
         ("ts", Json::Num(ev.ts_ns as f64 / 1000.0)),
     ];
     if ev.ph == Ph::Instant {
@@ -155,6 +170,18 @@ impl Tracer {
         for t in Track::ALL {
             for j in meta_event(t.pid(), 0, "process_name", t.name(), t.pid()) {
                 emit(&mut w, &j)?;
+            }
+            // Per-tenant rows: every tenant id > 0 seen on this track gets
+            // a named thread.  Tenant 0 and untagged events stay on the
+            // track's default tid 0, so solo traces keep their shape.
+            let mut tids: Vec<u64> =
+                self.events(t).iter().map(event_tenant_tid).filter(|&tid| tid > 0).collect();
+            tids.sort_unstable();
+            tids.dedup();
+            for tid in tids {
+                for j in meta_event(t.pid(), tid, "thread_name", &format!("tenant{tid}"), 0) {
+                    emit(&mut w, &j)?;
+                }
             }
         }
         if let Some((label, _)) = sim {
@@ -249,6 +276,36 @@ mod tests {
             doc.get("otherData").unwrap().get("clock").unwrap().as_str().unwrap(),
             "virtual"
         );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tenant_tagged_events_land_on_per_tenant_tids() {
+        let clock = LinkClock::new_virtual();
+        let t = Tracer::enabled(clock);
+        t.begin(Track::LinkUp, "xfer", &[("chunk", Arg::U64(0)), ("tenant", Arg::U64(1))]);
+        t.end(Track::LinkUp, "xfer", &[("tenant", Arg::U64(1))]);
+        // Solo-style span (no tenant arg) stays on the default tid 0.
+        t.begin(Track::LinkUp, "xfer", &[("chunk", Arg::U64(1))]);
+        t.end(Track::LinkUp, "xfer", &[]);
+
+        let path = tmp("tenant_tids");
+        t.export_chrome(&path, None).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let tids: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str().ok()) == Some("B"))
+            .map(|e| e.get("tid").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(tids, vec![1.0, 0.0]);
+        // The tenant's row carries a thread_name meta ("tenant1").
+        assert!(events.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str().ok()) == Some("thread_name")
+                && e.get("tid").and_then(|t| t.as_f64().ok()) == Some(1.0)
+                && e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str().ok())
+                    == Some("tenant1")
+        }));
         std::fs::remove_file(&path).ok();
     }
 

@@ -263,6 +263,52 @@ fn chunked_pipeline_matches_unchunked_deltas() {
     }
 }
 
+/// Chunk-count edges shared by the runtime split and the simulator: an
+/// empty payload still COUNTS as one chunk (`n_chunks_for` rounds up — the
+/// hazard `PipelineCtx::push_offload` skips), one element is one chunk,
+/// and a payload exactly filling the budget is one chunk.  The encoder
+/// emits whole-payload headers for all single-chunk cases, and the encoded
+/// bytes round-trip bit-exactly under f32.
+#[test]
+fn chunk_count_and_encoder_edges() {
+    assert_eq!(n_chunks_for(0, 64), 1, "empty still rounds up to one (empty) chunk");
+    assert_eq!(n_chunks_for(1, 64), 1);
+    assert_eq!(n_chunks_for(64, 64), 1, "exactly one budget's worth");
+    assert_eq!(n_chunks_for(65, 64), 2);
+    assert_eq!(n_chunks_for(0, 0), 1);
+    assert_eq!(n_chunks_for(5, 0), 1, "0 budget = whole-payload");
+
+    let codec = make_codec(CodecKind::F32Raw);
+    let pool = BufPool::new();
+    // Empty payload: exactly one zero-element chunk — codec + link +
+    // updater overhead to move nothing, which is why `push_offload`
+    // refuses to ship it (see `push_offload_skips_empty_payloads` below).
+    let mut emitted = Vec::new();
+    encode_chunked(codec.as_ref(), &pool, &[], 64, |payload, hdr| {
+        emitted.push((payload.elems, hdr));
+    });
+    assert_eq!(emitted.len(), 1);
+    assert_eq!(emitted[0].0, 0, "the empty chunk carries zero elements");
+    assert!(emitted[0].1.is_whole());
+
+    // 1-elem and exactly-one-chunk payloads: single WHOLE chunks whose
+    // headers cover the full payload.
+    for n in [1usize, 64] {
+        let data: Vec<f32> = (0..n).map(|i| i as f32 - 2.5).collect();
+        let mut hdrs = Vec::new();
+        let mut out = vec![f32::NAN; n];
+        encode_chunked(codec.as_ref(), &pool, &data, 64, |payload, hdr| {
+            let end = hdr.elem_offset + payload.elems;
+            codec.decode(payload.as_bytes(), &mut out[hdr.elem_offset..end]).unwrap();
+            hdrs.push(hdr);
+        });
+        assert_eq!(hdrs.len(), 1, "n={n} must be a single chunk");
+        assert!(hdrs[0].is_whole(), "n={n}");
+        assert_eq!(hdrs[0].total_elems, n);
+        assert_eq!(out, data, "n={n}: f32 round trip is bit-exact");
+    }
+}
+
 /// The modeled stall accounting at chunk granularity: under the virtual
 /// clock a chunked round trip carries the same total link charge as the
 /// whole-payload one (same bytes, same bandwidth — f32 keeps this exact),
@@ -287,6 +333,72 @@ fn chunked_round_trip_charge_and_exposure_factor() {
     let chunk_charge = chunked[0].link_ns as f64 * chunk_pipeline_factor(4);
     assert_eq!(whole_charge, whole[0].link_ns as f64, "C = 1 is the full charge");
     assert!((chunk_charge / whole_charge - 0.625).abs() < 1e-12, "(4+1)/(2*4) = 0.625");
+}
+
+// ---- `push_offload` edges (artifact-gated like tests/faults.rs) ----------
+
+use lsp_offload::coordinator::comm::LinkClockMode;
+use lsp_offload::coordinator::pipeline::PipelineCtx;
+use lsp_offload::coordinator::trainer::TrainConfig;
+use lsp_offload::model::manifest::find_artifacts;
+use lsp_offload::runtime::Engine;
+use lsp_offload::util::bufpool::PooledBuf;
+
+/// Compile once per thread, share across that thread's tests (the same
+/// artifact-gating idiom as `tests/faults.rs`).
+fn with_engine(f: impl FnOnce(&Engine)) {
+    thread_local! {
+        static ENGINE: std::cell::OnceCell<Option<Engine>> =
+            const { std::cell::OnceCell::new() };
+    }
+    ENGINE.with(|c| {
+        let eng = c.get_or_init(|| {
+            let dir = find_artifacts(None, "tiny").ok()?;
+            Engine::load(&dir).ok()
+        });
+        match eng {
+            Some(e) => f(e),
+            None if std::env::var("LSP_REQUIRE_ARTIFACTS").as_deref() == Ok("1") => {
+                panic!("LSP_REQUIRE_ARTIFACTS=1 but tiny artifacts not found; run `make artifacts`")
+            }
+            None => eprintln!("SKIP: tiny artifacts not found; run `make artifacts`"),
+        }
+    });
+}
+
+/// `push_offload` edges through a real context: an empty payload is
+/// skipped outright (`Ok`, nothing enqueued, nothing in the staleness
+/// ledger), while 1-elem and exactly-one-chunk payloads cross the full
+/// pipeline as single whole chunks and reassemble exactly once.
+#[test]
+fn push_offload_skips_empty_payloads_and_ships_edge_sizes() {
+    with_engine(|eng| {
+        let cfg = TrainConfig {
+            link_codec: Some(CodecKind::F32Raw),
+            link_clock: LinkClockMode::Virtual,
+            link_chunk_elems: 64,
+            ..TrainConfig::default()
+        };
+        let mut ctx = PipelineCtx::new(eng, cfg).unwrap();
+        let key = ParamKey { param_index: 0, kind: None };
+
+        ctx.push_offload(key.clone(), PooledBuf::detached(Vec::new()), 0, 0).unwrap();
+        assert!(ctx.pending.is_empty(), "empty payload must not enter the ledger");
+
+        for (step, n) in [(0u64, 1usize), (1, 64)] {
+            // One key per size: the updater's Adam state is sized by the
+            // first payload a key ships.
+            let key = ParamKey { param_index: n, kind: None };
+            let buf = ctx.pool.adopt((0..n).map(|i| i as f32 + 0.5).collect());
+            ctx.push_offload(key.clone(), buf, 0, step).unwrap();
+            let ld =
+                ctx.recv_logical_delta().unwrap().expect("pipeline delivers the delta");
+            assert_eq!(ld.n_chunks, 1, "n={n} must cross as a single chunk");
+            assert_eq!(ld.data.len(), n);
+            assert_eq!(ld.step, step);
+            assert!(ctx.pending.is_empty(), "ledger cleared after reassembly");
+        }
+    });
 }
 
 /// The bounded-staleness protocol with CHUNKED transfers, end-to-end

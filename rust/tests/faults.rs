@@ -204,6 +204,113 @@ fn retry_budget_zero_fails_clean_not_hung() {
     assert_eq!(fab.health.retransmits.load(Ordering::Relaxed), 0);
 }
 
+/// Wire-byte totals of a run: `(wire_up, wire_down, raw_up, raw_down)`
+/// summed over both links' first-transmission counters — the exact inputs
+/// of `TrainReport::compression_ratio()`.  Same pipeline shape as
+/// [`pipeline_deltas`], but keeps the links in scope to read them.
+fn pipeline_wire_totals(
+    fabric: &FaultFabric,
+    codec: &Arc<dyn Codec>,
+    grads: &[Vec<f32>],
+    chunk_elems: usize,
+) -> (u64, u64, u64, u64) {
+    let pool = BufPool::new();
+    let clock = Arc::new(VirtualClock::default());
+    let d2h_in = Arc::new(PrioQueue::new());
+    let d2h_out = Arc::new(PrioQueue::new());
+    let h2d_in = Arc::new(PrioQueue::new());
+    let delta_out = Arc::new(PrioQueue::<DeltaMsg>::new());
+    let mut d2h = Link::spawn(
+        "d2h",
+        1e9,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        d2h_in.clone(),
+        d2h_out.clone(),
+        FaultDir::D2H,
+        fabric.clone(),
+    );
+    let mut h2d = Link::spawn(
+        "h2d",
+        1e9,
+        1.0,
+        LinkClock::Virtual(clock.clone()),
+        h2d_in.clone(),
+        delta_out.clone(),
+        FaultDir::H2D,
+        fabric.clone(),
+    );
+    let mut upd = CpuUpdater::spawn(
+        d2h_out.clone(),
+        h2d_in.clone(),
+        1.0,
+        pool.clone(),
+        KernelConfig::single_threaded(),
+        codec.clone(),
+        fabric.clone(),
+    );
+
+    let key = ParamKey { param_index: 0, kind: None };
+    let mut pending = InFlight::default();
+    let mut reasm = Reassembler::default();
+    for (step, g) in grads.iter().enumerate() {
+        let step = step as u64;
+        pending.insert_chunked(key.clone(), step, n_chunks_for(g.len(), chunk_elems) as u32);
+        encode_chunked(codec.as_ref(), &pool, g, chunk_elems, |payload, chunk| {
+            d2h_in.push(
+                0,
+                OffloadMsg { key: key.clone(), data: payload, prio: 0, step, link_ns: 0, chunk },
+            );
+        });
+        loop {
+            let msg = delta_out.pop().expect("pipeline alive");
+            if reasm
+                .ingest(codec.as_ref(), &pool, &mut pending, fabric, msg)
+                .expect("chunk ingestion")
+                .is_some()
+            {
+                break;
+            }
+        }
+    }
+    d2h_in.close();
+    d2h.stop();
+    h2d.stop();
+    upd.join();
+    (
+        d2h.bytes_moved.load(Ordering::Relaxed),
+        h2d.bytes_moved.load(Ordering::Relaxed),
+        d2h.raw_bytes_moved.load(Ordering::Relaxed),
+        h2d.raw_bytes_moved.load(Ordering::Relaxed),
+    )
+}
+
+/// Accounting regression (the `compression_ratio()` conflation bug): the
+/// links' wire/raw byte totals count each chunk's FIRST transmission only.
+/// A drop plan that forces retransmissions inflates `retrans_bytes` — the
+/// recovery cost counter — but leaves every first-transmission total, and
+/// therefore the compression ratio, identical to the fault-free run.
+#[test]
+fn compression_ratio_is_invariant_under_drop_plans() {
+    let codec: Arc<dyn Codec> = make_codec(CodecKind::F32Raw);
+    let grads = gradients(77, 3, 768);
+
+    let clean = pipeline_wire_totals(&fabric_with(None, RetryCfg::default()), &codec, &grads, 128);
+    let plan = FaultPlan::new(vec![
+        FaultSpec::new(FaultKind::Drop).with_dir(FaultDir::D2H).with_repeat(2),
+        FaultSpec::new(FaultKind::Drop).with_dir(FaultDir::H2D).with_step(1),
+    ]);
+    let fab = fabric_with(Some(plan), RetryCfg::default());
+    let dropped = pipeline_wire_totals(&fab, &codec, &grads, 128);
+
+    assert!(fab.health.retransmits.load(Ordering::Relaxed) >= 3, "the plan fired");
+    assert!(fab.health.retrans_bytes.load(Ordering::Relaxed) > 0);
+    assert_eq!(dropped, clean, "first-transmission totals must exclude retransmits");
+    let ratio = |(wu, wd, ru, rd): (u64, u64, u64, u64)| (ru + rd) as f64 / (wu + wd) as f64;
+    assert_eq!(ratio(dropped), ratio(clean), "compression ratio is a codec property");
+    assert_eq!(ratio(clean), 1.0, "f32: wire == raw");
+}
+
 /// Chaos property: randomized seeded plans — any mix of drops,
 /// corruptions, mangles, stalls and updater panics with random filters and
 /// repeats — against random payload/chunk shapes, always with ample retry
@@ -476,6 +583,12 @@ fn faulty_training_is_bit_identical_with_nonzero_recovery_counters() {
             assert!(rep.retransmits >= 2, "{policy:?}: retransmits {}", rep.retransmits);
             assert!(rep.corrupt_chunks >= 1, "{policy:?}");
             assert!(rep.retrans_bytes > 0, "{policy:?}");
+            assert_eq!(
+                (rep.bytes_up, rep.bytes_down, rep.raw_bytes_up, rep.raw_bytes_down),
+                (clean.bytes_up, clean.bytes_down, clean.raw_bytes_up, clean.raw_bytes_down),
+                "{policy:?}: retransmits must not inflate first-transmission totals"
+            );
+            assert_eq!(rep.compression_ratio(), clean.compression_ratio(), "{policy:?}");
             assert_eq!(rep.worker_restarts, 1, "{policy:?}");
             assert!(tr.ctx().pending.is_empty(), "{policy:?} left deltas in flight");
         }

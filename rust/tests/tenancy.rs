@@ -1,0 +1,395 @@
+//! Multi-tenant arbiter: N training jobs over ONE shared link pair.
+//!
+//! Three layers, mirroring `tests/faults.rs`:
+//!
+//! 1. **Queue-level routing + fairness** — K tenants stage chunked
+//!    gradient streams through the arbiter's DRR mux; every delta must
+//!    come back on its owner's queue (key-checked), equal weights must
+//!    deliver equal byte shares (Jain >= 0.95), and every tenant's f32
+//!    delta stream must be BIT-IDENTICAL to a solo run of the same
+//!    stream (shared-updater Adam state never leaks across tenants).
+//! 2. **Isolation** — tenant 0 with retry budget 0 and a drop plan fails
+//!    with its own typed `RetryBudgetExhausted` (its delta queue closes,
+//!    no hang) while the other tenants' streams complete untouched and
+//!    the root fabric stays healthy.
+//! 3. **Trainer level** (artifact-gated like `tests/policy_parity.rs`) —
+//!    `--tenants 4` with equal weights reproduces the solo loss
+//!    trajectory bit-exactly per tenant, reports Jain >= 0.95, and its
+//!    aggregate virtual stall matches K x the solo stall (the quantity
+//!    the MultiTenant DES schedule prices as K replicas) within 10%;
+//!    `--tenant-retry-budgets 0` plus a drop plan fails ONLY tenant 0.
+//!
+//! Everything runs under the virtual clock: no real sleeps, fully
+//! deterministic, and a routing or shutdown bug hangs a blocking pop
+//! instead of shrinking an assertion.
+
+use std::sync::Arc;
+
+use lsp_offload::codec::CodecKind;
+use lsp_offload::coordinator::arbiter::{Arbiter, TenantCfg};
+use lsp_offload::coordinator::comm::{
+    encode_chunked, n_chunks_for, LinkClockMode, OffloadMsg, ParamKey,
+};
+use lsp_offload::coordinator::fault::{
+    FaultDir, FaultKind, FaultPlan, FaultSpec, PipelineError, RetryCfg,
+};
+use lsp_offload::coordinator::pipeline::{InFlight, Reassembler, TrainConfig};
+use lsp_offload::coordinator::policies::PolicyKind;
+use lsp_offload::coordinator::report::jain_index;
+use lsp_offload::util::prop::check;
+use lsp_offload::util::rng::Rng;
+
+/// Run-level config every arbiter test shares: an offloading policy (so
+/// the shared links/updater spawn), the bit-exact f32 wire format, and
+/// the deterministic virtual clock.
+fn arbiter_config() -> TrainConfig {
+    TrainConfig {
+        policy: PolicyKind::Lsp,
+        link_codec: Some(CodecKind::F32Raw),
+        link_clock: LinkClockMode::Virtual,
+        bw_bytes_per_s: 1e9,
+        retry_backoff_ns: 1_000,
+        ..TrainConfig::default()
+    }
+}
+
+fn gradients(seed: u64, steps: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut r = Rng::new(seed);
+    (0..steps).map(|_| (0..n).map(|_| r.normal()).collect()).collect()
+}
+
+/// Drive `grads[t]` through tenant `t` of the arbiter in lockstep: every
+/// live tenant stages its step-`s` gradient (chunked under
+/// `chunk_elems`), then every live tenant blocks until its own logical
+/// delta reassembles.  Returns each tenant's decoded f32 delta stream,
+/// or the tenant's own fatal error if its delta queue closed on it.
+/// Blocking pops only — a misrouted or lost chunk hangs the test rather
+/// than masking the bug.
+fn lockstep_deltas(
+    arb: &Arbiter,
+    grads: &[Vec<Vec<f32>>],
+    chunk_elems: usize,
+) -> Vec<Result<Vec<Vec<f32>>, PipelineError>> {
+    let k = grads.len();
+    let keys: Vec<ParamKey> =
+        (0..k).map(|t| ParamKey { param_index: 100 + t, kind: None }).collect();
+    let mut pendings: Vec<InFlight> = (0..k).map(|_| InFlight::default()).collect();
+    let mut reasms: Vec<Reassembler> = (0..k).map(|_| Reassembler::default()).collect();
+    let mut outs: Vec<Vec<Vec<f32>>> = (0..k).map(|_| Vec::new()).collect();
+    let mut dead = vec![false; k];
+    let steps = grads.iter().map(|g| g.len()).max().unwrap_or(0);
+    for step in 0..steps {
+        for t in 0..k {
+            if dead[t] || step >= grads[t].len() {
+                continue;
+            }
+            let g = &grads[t][step];
+            let h = arb.tenant(t as u32).unwrap();
+            pendings[t].insert_chunked(
+                keys[t].clone(),
+                step as u64,
+                n_chunks_for(g.len(), chunk_elems) as u32,
+            );
+            encode_chunked(arb.codec.as_ref(), &arb.pool, g, chunk_elems, |payload, chunk| {
+                h.enqueue(
+                    0,
+                    OffloadMsg {
+                        key: keys[t].clone(),
+                        data: payload,
+                        prio: 0,
+                        step: step as u64,
+                        link_ns: 0,
+                        chunk,
+                    },
+                );
+            });
+        }
+        for t in 0..k {
+            if dead[t] || step >= grads[t].len() {
+                continue;
+            }
+            let h = arb.tenant(t as u32).unwrap();
+            loop {
+                let Some(msg) = h.delta_q.pop() else {
+                    // Closed queue: this tenant's on-fatal hook fired.  Its
+                    // typed error is read back below; the other tenants
+                    // keep stepping.
+                    dead[t] = true;
+                    break;
+                };
+                assert_eq!(msg.key, keys[t], "tenant {t} popped another tenant's delta");
+                if let Some(ld) = reasms[t]
+                    .ingest(arb.codec.as_ref(), &arb.pool, &mut pendings[t], &h.fabric, msg)
+                    .expect("chunk ingestion")
+                {
+                    outs[t].push(ld.data.as_slice().to_vec());
+                    break;
+                }
+            }
+        }
+    }
+    (0..k)
+        .map(|t| match arb.tenant(t as u32).unwrap().fabric.health.fatal() {
+            Some(e) => Err(e),
+            None => {
+                assert!(
+                    pendings[t].is_empty() && reasms[t].is_empty(),
+                    "tenant {t} finished with dangling in-flight state"
+                );
+                Ok(std::mem::take(&mut outs[t]))
+            }
+        })
+        .collect()
+}
+
+/// The solo reference for one tenant's stream: a 1-tenant arbiter over
+/// the same run config.  Bit-identity against this is the isolation
+/// invariant — contention must reorder wire chunks, never arithmetic.
+fn solo_deltas(grads: &[Vec<f32>], chunk_elems: usize) -> Vec<Vec<f32>> {
+    let arb = Arbiter::new(&arbiter_config(), vec![TenantCfg::default()]);
+    let mut res = lockstep_deltas(&arb, &[grads.to_vec()], chunk_elems);
+    res.remove(0).expect("solo run is fault-free")
+}
+
+/// Three equal-weight tenants, identical traffic shapes: every delta
+/// routes home, delivered byte shares are exactly equal (Jain 1.0 >=
+/// the 0.95 acceptance floor), and each tenant's delta stream is
+/// bit-identical to its solo run.
+#[test]
+fn equal_tenants_share_links_fairly_and_bit_identically() {
+    let k = 3;
+    let grads: Vec<Vec<Vec<f32>>> =
+        (0..k).map(|t| gradients(0xA11CE + t as u64, 4, 256)).collect();
+    let arb = Arbiter::new(&arbiter_config(), vec![TenantCfg::default(); k]);
+    let results = lockstep_deltas(&arb, &grads, 64);
+    for (t, res) in results.iter().enumerate() {
+        let deltas = res.as_ref().unwrap_or_else(|e| panic!("tenant {t}: {e}"));
+        assert_eq!(deltas.len(), 4, "tenant {t} delta count");
+        let solo = solo_deltas(&grads[t], 64);
+        assert_eq!(deltas, &solo, "tenant {t}: contention must not change arithmetic");
+    }
+    let delivered = arb.delivered_bytes();
+    assert!(delivered.iter().all(|&b| b > 0 && b == delivered[0]), "{delivered:?}");
+    let shares: Vec<f64> = delivered.iter().map(|&b| b as f64).collect();
+    assert!(jain_index(&shares) >= 0.95, "jain {} over {delivered:?}", jain_index(&shares));
+}
+
+/// Tenant 0 exhausts its retry budget (budget 0 + an unconditional d2h
+/// drop): its delta queue closes with ITS typed error, the other
+/// tenants' streams complete bit-identically to solo, and the root
+/// fabric (the shared links' own health) stays clean.
+#[test]
+fn retry_exhaustion_fails_only_the_faulty_tenant() {
+    let plan = FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop).with_dir(FaultDir::D2H)]);
+    let faulty = TenantCfg {
+        retry: RetryCfg { budget: 0, backoff_ns: 1_000, fallback_after: 2 },
+        plan: Some(Arc::new(plan)),
+        ..TenantCfg::default()
+    };
+    let cfgs = vec![faulty, TenantCfg::default(), TenantCfg::default()];
+    let grads: Vec<Vec<Vec<f32>>> =
+        (0..3).map(|t| gradients(0xBEEF + t as u64, 2, 192)).collect();
+    let arb = Arbiter::new(&arbiter_config(), cfgs);
+    let results = lockstep_deltas(&arb, &grads, 0);
+    match &results[0] {
+        Err(PipelineError::RetryBudgetExhausted { link, attempts, .. }) => {
+            assert_eq!(*link, "d2h");
+            assert_eq!(*attempts, 1);
+        }
+        other => panic!("tenant 0 must exhaust its budget, got {other:?}"),
+    }
+    for t in 1..3 {
+        let deltas = results[t].as_ref().unwrap_or_else(|e| panic!("tenant {t}: {e}"));
+        assert_eq!(deltas.len(), 2, "tenant {t} must complete despite tenant 0's failure");
+        assert_eq!(deltas, &solo_deltas(&grads[t], 0), "tenant {t} stream diverged");
+        assert!(arb.tenant(t as u32).unwrap().fabric.health.fatal().is_none());
+    }
+    assert!(arb.fabric.health.fatal().is_none(), "root fabric must stay healthy");
+}
+
+/// Chaos property: random tenant counts, weights, payload sizes, chunk
+/// budgets and a per-tenant drop/corrupt plan with ample retry budget —
+/// every tenant always completes the full count (no deadlock under the
+/// virtual clock) and stays bit-identical to its solo run.
+#[test]
+fn k_tenant_chaos_stays_bit_identical_to_solo() {
+    check(
+        "tenancy-chaos",
+        8,
+        |r: &mut Rng| {
+            let k = 1 + r.below(4);
+            let steps = 1 + r.below(3);
+            let sizes: Vec<usize> = (0..k).map(|_| 64 * (1 + r.below(6))).collect();
+            let weights: Vec<f64> = (0..k).map(|_| (1 + r.below(4)) as f64).collect();
+            let chunk = [0usize, 64, 128][r.below(3)];
+            let d2h = r.below(2) == 0;
+            let fault_step = r.below(steps) as u64;
+            (k, steps, sizes, weights, chunk, d2h, fault_step, r.next_u64())
+        },
+        |&(k, steps, ref sizes, ref weights, chunk, d2h, fault_step, seed)| {
+            let grads: Vec<Vec<Vec<f32>>> = (0..k)
+                .map(|t| gradients(seed ^ (t as u64), steps, sizes[t]))
+                .collect();
+            // The LAST tenant carries the fault plan (ample budget: one
+            // spec, repeat <= 2, budget 8 always recovers) — isolation
+            // says nobody else may notice.
+            let cfgs: Vec<TenantCfg> = (0..k)
+                .map(|t| {
+                    let plan = (t == k - 1).then(|| {
+                        let dir = if d2h { FaultDir::D2H } else { FaultDir::H2D };
+                        Arc::new(FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop)
+                            .with_dir(dir)
+                            .with_step(fault_step)
+                            .with_repeat(2)]))
+                    });
+                    TenantCfg {
+                        weight: weights[t],
+                        retry: RetryCfg { budget: 8, backoff_ns: 1_000, fallback_after: 2 },
+                        plan,
+                    }
+                })
+                .collect();
+            let arb = Arbiter::new(&arbiter_config(), cfgs);
+            let results = lockstep_deltas(&arb, &grads, chunk);
+            for (t, res) in results.iter().enumerate() {
+                let deltas = res.as_ref().map_err(|e| format!("tenant {t}: {e}"))?;
+                if deltas.len() != steps {
+                    return Err(format!("tenant {t}: {} deltas, want {steps}", deltas.len()));
+                }
+                if deltas != &solo_deltas(&grads[t], chunk) {
+                    return Err(format!("tenant {t}: diverged from solo run"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- Trainer-level acceptance (artifact-gated) ---------------------------
+
+use lsp_offload::coordinator::trainer::{train_multi, Trainer};
+use lsp_offload::model::manifest::find_artifacts;
+use lsp_offload::runtime::Engine;
+
+/// Compile once per thread, share across that thread's tests (the same
+/// artifact-gating idiom as `tests/policy_parity.rs`).
+fn with_engine(f: impl FnOnce(&Engine)) {
+    thread_local! {
+        static ENGINE: std::cell::OnceCell<Option<Engine>> =
+            const { std::cell::OnceCell::new() };
+    }
+    ENGINE.with(|c| {
+        let eng = c.get_or_init(|| {
+            let dir = find_artifacts(None, "tiny").ok()?;
+            Engine::load(&dir).ok()
+        });
+        match eng {
+            Some(e) => f(e),
+            None if std::env::var("LSP_REQUIRE_ARTIFACTS").as_deref() == Ok("1") => {
+                panic!("LSP_REQUIRE_ARTIFACTS=1 but tiny artifacts not found; run `make artifacts`")
+            }
+            None => eprintln!("SKIP: tiny artifacts not found; run `make artifacts`"),
+        }
+    });
+}
+
+fn tenant_train_config() -> TrainConfig {
+    TrainConfig {
+        policy: PolicyKind::Lsp,
+        steps: 6,
+        bw_bytes_per_s: 1e9,
+        check_freq: 3,
+        alpha: 0.9,
+        learn_budget: 5,
+        eval_every: 0,
+        log_every: 0,
+        seed: 20_260_807,
+        link_codec: Some(CodecKind::F32Raw),
+        link_clock: LinkClockMode::Virtual,
+        link_chunk_elems: 256,
+        ..TrainConfig::default()
+    }
+}
+
+/// The multi-tenant acceptance invariants: 4 equal-weight tenants over
+/// one link pair each reproduce the solo f32 loss trajectory BIT-
+/// IDENTICALLY, deliver equal byte shares (Jain >= 0.95), and the
+/// aggregate virtual stall lands within 10% of K x the solo stall —
+/// the same quantity the `multi-tenant` DES schedule and
+/// `sim::cost_model::multi_tenant_gated_link_exposure` predict as K
+/// independent replicas of the solo closed form.
+#[test]
+fn four_equal_tenants_reproduce_solo_trajectory_and_fairness() {
+    with_engine(|eng| {
+        let solo = {
+            let mut tr = Trainer::new(eng, tenant_train_config()).unwrap();
+            tr.train().unwrap()
+        };
+        let mut cfg = tenant_train_config();
+        cfg.tenants = 4;
+        let report = train_multi(eng, cfg).unwrap();
+        assert_eq!(report.tenants(), 4);
+        assert_eq!(report.failed(), 0);
+        let solo_losses: Vec<f32> = solo.loss_curve.iter().map(|&(_, l)| l).collect();
+        for (t, r) in report.reports.iter().enumerate() {
+            let rep = r.as_ref().unwrap_or_else(|e| panic!("tenant {t}: {e}"));
+            let losses: Vec<f32> = rep.loss_curve.iter().map(|&(_, l)| l).collect();
+            assert_eq!(losses, solo_losses, "tenant {t}: trajectory must match solo bit-exactly");
+            assert_eq!(
+                (rep.bytes_up, rep.bytes_down),
+                (solo.bytes_up, solo.bytes_down),
+                "tenant {t}: per-tenant wire totals must match solo"
+            );
+        }
+        assert!(report.jain_index >= 0.95, "jain {}", report.jain_index);
+        let d = &report.delivered_bytes;
+        assert!(d.iter().all(|&b| b > 0 && b == d[0]), "equal weights, equal bytes: {d:?}");
+        let predicted = 4.0 * solo.stall_secs;
+        if predicted > 0.0 {
+            let rel = (report.aggregate_stall_secs - predicted).abs() / predicted;
+            assert!(
+                rel <= 0.10,
+                "aggregate stall {} vs predicted {predicted} (rel {rel})",
+                report.aggregate_stall_secs
+            );
+        } else {
+            assert_eq!(report.aggregate_stall_secs, 0.0);
+        }
+    });
+}
+
+/// `--tenant-retry-budgets 0` + a drop plan (which `train_multi` aims at
+/// tenant 0): tenant 0 alone fails with the typed exhaustion error and
+/// the surviving tenants still reproduce the solo trajectory.
+#[test]
+fn tenant_zero_retry_exhaustion_fails_only_tenant_zero() {
+    with_engine(|eng| {
+        let solo = {
+            let mut tr = Trainer::new(eng, tenant_train_config()).unwrap();
+            tr.train().unwrap()
+        };
+        let mut cfg = tenant_train_config();
+        cfg.tenants = 3;
+        cfg.tenant_retry_budgets = vec![0];
+        cfg.fault_plan = Some(Arc::new(FaultPlan::new(vec![FaultSpec::new(FaultKind::Drop)
+            .with_dir(FaultDir::D2H)
+            .with_step(1)])));
+        let report = train_multi(eng, cfg).unwrap();
+        assert_eq!(report.failed(), 1, "exactly tenant 0 fails");
+        match &report.reports[0] {
+            Err(PipelineError::RetryBudgetExhausted { link, step, .. }) => {
+                assert_eq!(*link, "d2h");
+                assert_eq!(*step, 1);
+            }
+            other => panic!("tenant 0 must fail with RetryBudgetExhausted, got {other:?}"),
+        }
+        let solo_losses: Vec<f32> = solo.loss_curve.iter().map(|&(_, l)| l).collect();
+        for t in 1..3 {
+            let rep = report.reports[t]
+                .as_ref()
+                .unwrap_or_else(|e| panic!("tenant {t} must survive: {e}"));
+            let losses: Vec<f32> = rep.loss_curve.iter().map(|&(_, l)| l).collect();
+            assert_eq!(losses, solo_losses, "tenant {t}: survivor trajectory diverged");
+        }
+    });
+}

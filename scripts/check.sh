@@ -77,7 +77,8 @@ echo "   clean"
 echo "== coordinator no-panic gate =="
 panic_hits=""
 for f in src/coordinator/comm.rs src/coordinator/pipeline.rs \
-         src/coordinator/worker.rs src/coordinator/projector_mgr.rs; do
+         src/coordinator/worker.rs src/coordinator/projector_mgr.rs \
+         src/coordinator/arbiter.rs; do
     hits="$(awk '
         /#\[cfg\(test\)\]/ { exit }
         /\.unwrap\(\)|\.expect\(|panic!/ {
@@ -121,6 +122,13 @@ LSP_FORCE_SCALAR=1 LSP_LINK_CLOCK=virtual cargo test -q --lib -- tensor:: optim:
 echo "== fault-injection chaos suite (LSP_LINK_CLOCK=virtual) =="
 LSP_LINK_CLOCK=virtual cargo test -q --test faults
 
+# The multi-tenant arbiter suite likewise always runs on the virtual
+# clock: DRR interleaving, per-tenant fault isolation and the
+# solo-equivalence invariant are deterministic there (and the blocking
+# pops would sleep out retransmit backoff under `real`).
+echo "== multi-tenant arbiter suite (LSP_LINK_CLOCK=virtual) =="
+LSP_LINK_CLOCK=virtual cargo test -q --test tenancy
+
 echo "== cargo bench --bench hotpath -- smoke =="
 # Remove any previous smoke output first: the bench falls back to writing
 # into rust/ when the repo root is unwritable, and the gate must never
@@ -147,12 +155,20 @@ echo "== trace schema gate (simulate --trace-out + scripts/check_trace.py) =="
 # artifact-free by tests/tracing.rs above.
 trace_tmp="$(mktemp "${TMPDIR:-/tmp}/lsp_trace_gate.XXXXXX.json")"
 ./target/release/lsp_offload simulate --schedule lsp --trace-out "$trace_tmp" >/dev/null
+# Multi-tenant overlay: the DES's K-replica schedule must export a valid
+# trace too (per-tenant task prefixes are ordinary span names to the
+# checker; per-tenant runtime tids are covered by tests/tracing.rs and
+# check_trace.py --require-tenants on traced `train --tenants` runs).
+trace_tmp_mt="$(mktemp "${TMPDIR:-/tmp}/lsp_trace_gate_mt.XXXXXX.json")"
+./target/release/lsp_offload simulate --schedule multi-tenant --tenants 3 \
+    --trace-out "$trace_tmp_mt" >/dev/null
 if ! command -v python3 >/dev/null 2>&1; then
     echo "   schema check skipped: python3 not available"
 else
     python3 "$ROOT/scripts/check_trace.py" "$trace_tmp" --require-sim
+    python3 "$ROOT/scripts/check_trace.py" "$trace_tmp_mt" --require-sim
 fi
-rm -f "$trace_tmp"
+rm -f "$trace_tmp" "$trace_tmp_mt"
 
 echo "== bench trajectory gate (>${BENCH_GATE_PCT:-25}% = fail) =="
 # Live gate: an absent trajectory — or the committed empty sentinel (no

@@ -2,6 +2,7 @@
 """Validate an exported Chrome trace-event file's structural invariants.
 
 Usage: check_trace.py TRACE.json [--require-runtime] [--require-sim]
+                                 [--require-tenants K]
 
 Checks (all stdlib, no Perfetto needed):
   * the file is valid JSON with a `traceEvents` array and an `otherData`
@@ -21,6 +22,13 @@ Checks (all stdlib, no Perfetto needed):
 sim-prediction overlay (pid 10).  `simulate --trace-out` files are
 sim-only; `train --trace-out` files have runtime tracks and, for policies
 the DES models, the overlay too.
+
+--require-tenants K fails unless the runtime tracks fan out over at
+least K distinct tids: multi-tenant runs (`train --tenants K`) lay each
+tenant's events on tid = tenant id (named `tenant<t>` via thread_name
+metadata), so a K-tenant trace must show >= K runtime lanes.  Per-tenant
+tids are ordinary tracks to every other check — nesting and timestamp
+monotonicity are enforced per (pid, tid) as usual.
 """
 
 import json
@@ -42,6 +50,15 @@ def main(argv):
     path = argv[1]
     require_runtime = "--require-runtime" in argv[2:]
     require_sim = "--require-sim" in argv[2:]
+    require_tenants = 0
+    if "--require-tenants" in argv[2:]:
+        i = argv.index("--require-tenants")
+        if i + 1 >= len(argv):
+            return fail("--require-tenants needs a count")
+        try:
+            require_tenants = int(argv[i + 1])
+        except ValueError:
+            return fail("--require-tenants %r is not an integer" % argv[i + 1])
     try:
         with open(path) as f:
             doc = json.load(f)
@@ -59,6 +76,7 @@ def main(argv):
     last_ts = {}  # (pid, tid) -> last timestamp seen
     counts = {"B": 0, "E": 0, "i": 0, "C": 0, "M": 0}
     pids = set()
+    runtime_tids = set()  # tids seen on runtime pids (tenant lanes)
     for n, ev in enumerate(events):
         ph = ev.get("ph")
         if ph not in counts:
@@ -69,6 +87,8 @@ def main(argv):
             return fail("event %d: missing pid/tid" % n)
         key = (int(pid), int(tid))
         pids.add(key[0])
+        if key[0] in RUNTIME_PIDS:
+            runtime_tids.add(key[1])
         if ph == "M":
             continue
         ts = ev.get("ts")
@@ -108,6 +128,11 @@ def main(argv):
         return fail("no runtime-track (pid 1-5) events, --require-runtime set")
     if require_sim and SIM_PID not in pids:
         return fail("no sim-overlay (pid 10) events, --require-sim set")
+    if require_tenants and len(runtime_tids) < require_tenants:
+        return fail(
+            "runtime tracks span %d tid(s) %s, --require-tenants %d set"
+            % (len(runtime_tids), sorted(runtime_tids), require_tenants)
+        )
     dropped = other.get("dropped_events", 0)
     if dropped:
         print("check-trace: WARNING — %s events dropped at the capacity bound" % dropped)
