@@ -368,10 +368,13 @@ fn main() {
             chunk_pipeline_factor, encode_chunked, n_chunks_for, DeltaMsg, Link, LinkClock,
             OffloadMsg, ParamKey, PrioQueue, VirtualClock,
         };
+        use lsp_offload::coordinator::fault::{FaultDir, FaultFabric};
         use lsp_offload::coordinator::pipeline::{InFlight, Reassembler};
         use lsp_offload::coordinator::worker::CpuUpdater;
         use lsp_offload::util::bufpool::BufPool;
         use std::sync::Arc;
+
+        let fabric = FaultFabric::none();
 
         // The smoke run keeps the 2^16 rows so the perf gate shares
         // (name, shape, impl) keys with the full trajectory, like codec's.
@@ -397,9 +400,8 @@ fn main() {
                 LinkClock::Virtual(clock.clone()),
                 d2h_in.clone(),
                 d2h_out.clone(),
-                |m: &OffloadMsg| (m.data.wire_bytes(), m.data.raw_bytes()),
-                |m| m.prio,
-                |m, ns| m.link_ns += ns,
+                FaultDir::D2H,
+                fabric.clone(),
             );
             let mut h2d = Link::spawn(
                 "h2d",
@@ -408,9 +410,8 @@ fn main() {
                 LinkClock::Virtual(clock.clone()),
                 h2d_in.clone(),
                 delta_out.clone(),
-                |m: &DeltaMsg| (m.delta.wire_bytes(), m.delta.raw_bytes()),
-                |m| m.prio,
-                |m, ns| m.link_ns += ns,
+                FaultDir::H2D,
+                fabric.clone(),
             );
             let mut upd = CpuUpdater::spawn(
                 d2h_out.clone(),
@@ -419,6 +420,7 @@ fn main() {
                 pool.clone(),
                 KernelConfig::single_threaded(),
                 codec.clone(),
+                fabric.clone(),
             );
             let key = ParamKey { param_index: 0, kind: None };
             let mut step = 0u64;
@@ -446,7 +448,7 @@ fn main() {
                 loop {
                     let msg = delta_out.pop().expect("pipeline alive");
                     if let Some(ld) = reasm
-                        .ingest(codec.as_ref(), &pool, &mut pending, msg)
+                        .ingest(codec.as_ref(), &pool, &mut pending, &fabric, msg)
                         .expect("chunk ingestion")
                     {
                         std::hint::black_box(ld.data.len());
@@ -482,6 +484,55 @@ fn main() {
             d2h.stop();
             h2d.stop();
             upd.join();
+        }
+    }
+
+    if want("infer_stream") {
+        // The serving data path end-to-end (host weights -> chunked h2d
+        // streams -> per-layer forward, KV spill/restore over d2h) under
+        // the virtual clock, at two prefetch depths.  `secs_min` is the
+        // real wall cost of one full serve (the trajectory gate covers
+        // the path); `gops` carries the deterministic MODEL tokens/s from
+        // the virtual-clock wall, so the depth2 row must sit above depth1
+        // by the pipelining factor regardless of host speed.
+        use lsp_offload::coordinator::comm::LinkClockMode;
+        use lsp_offload::coordinator::{InferConfig, InferEngine};
+        let (layers, ppl) = (6usize, 4096usize);
+        let shape = format!("layers={layers} ppl={ppl}");
+        for depth in [1usize, 2] {
+            let mk = || InferConfig {
+                n_layers: layers,
+                params_per_layer: ppl,
+                d_state: 16,
+                requests: 4,
+                gen_tokens: 4,
+                max_batch: 4,
+                prefetch_depth: depth,
+                bw_bytes_per_s: 0.1e9,
+                gpu_flops: 0.5e9,
+                kv_budget_entries: 8,
+                link_clock: LinkClockMode::Virtual,
+                ..InferConfig::default()
+            };
+            let mut probe = InferEngine::new(mk());
+            let rep = probe.run().expect("infer probe");
+            drop(probe);
+            let r = bench(&format!("infer_stream depth={depth} {shape}"), budget, || {
+                let mut engine = InferEngine::new(mk());
+                std::hint::black_box(engine.run().expect("infer run").tokens_out);
+            });
+            println!(
+                "    -> depth {depth}: {:.1} model tokens/s, virtual wall {} ns",
+                rep.tokens_per_s, rep.wall_virtual_ns
+            );
+            results.push(result_row(
+                "infer_stream",
+                &shape,
+                &format!("depth{depth}"),
+                &r,
+                Some(rep.tokens_per_s),
+                None,
+            ));
         }
     }
 

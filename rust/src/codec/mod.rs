@@ -152,6 +152,28 @@ impl CodecKind {
             CodecKind::SparseInt8 => 0.125 + (1.0 + scale_overhead) * nonzero_frac,
         }
     }
+
+    /// Stable one-byte wire identifier for per-entry codec tagging: the
+    /// KV-cache stamps every spilled entry with the codec that encoded it,
+    /// so a restore decodes with exactly that codec even if the session's
+    /// negotiated codec changed in between.  Distinct namespace from
+    /// `fault::CODEC_TAG_*`, which tags chunk *negotiation state* on the
+    /// link protocol, not codec identity.
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            CodecKind::F32Raw => 0,
+            CodecKind::Bf16 => 1,
+            CodecKind::Int8Block => 2,
+            CodecKind::SparseIdx => 3,
+            CodecKind::SparseInt8 => 4,
+        }
+    }
+
+    /// Inverse of [`CodecKind::wire_tag`]; `None` for unknown tags (a
+    /// corrupt or future-format entry — callers surface a decode error).
+    pub fn from_wire_tag(tag: u8) -> Option<CodecKind> {
+        CodecKind::ALL.iter().copied().find(|k| k.wire_tag() == tag)
+    }
 }
 
 /// Construct the codec object for `kind` — the only codec dispatch;
@@ -254,6 +276,17 @@ mod tests {
         }
         assert_eq!(CodecKind::by_name("bogus"), None);
         assert_eq!(CodecKind::by_name("BF16"), Some(CodecKind::Bf16));
+    }
+
+    #[test]
+    fn wire_tags_round_trip_and_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for kind in CodecKind::ALL {
+            let tag = kind.wire_tag();
+            assert!(seen.insert(tag), "duplicate wire tag {tag} for {kind:?}");
+            assert_eq!(CodecKind::from_wire_tag(tag), Some(kind));
+        }
+        assert_eq!(CodecKind::from_wire_tag(0xff), None);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use crate::codec::CodecKind;
 use crate::coordinator::comm::LinkClockMode;
 use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::infer::InferConfig;
 use crate::coordinator::policies::PolicyKind;
 use crate::coordinator::trainer::TrainConfig;
 use crate::util::json::Json;
@@ -101,6 +102,48 @@ pub fn parse_tenant_retry_budgets(s: &str) -> Result<Vec<u32>> {
             p.trim()
                 .parse::<u32>()
                 .with_context(|| format!("tenant retry budget {p:?} is not an integer"))
+        })
+        .collect()
+}
+
+/// Largest `--prefetch-depth` accepted: each unit is a device-resident
+/// layer weight slot, so the cap is a sanity bound on the modeled device
+/// budget (steady-state throughput saturates at depth 2 anyway — see
+/// `sim::cost_model::eq_infer_iter`).
+pub const MAX_PREFETCH_DEPTH: u64 = 64;
+
+/// Validate a `--prefetch-depth` value: at least 1 (unpipelined), at most
+/// [`MAX_PREFETCH_DEPTH`].
+pub fn parse_prefetch_depth(v: u64) -> Result<usize> {
+    if !(1..=MAX_PREFETCH_DEPTH).contains(&v) {
+        bail!("prefetch_depth {v} must be in [1, {MAX_PREFETCH_DEPTH}]");
+    }
+    Ok(v as usize)
+}
+
+/// Largest `--max-batch` accepted by the serving engine's continuous
+/// batcher.
+pub const MAX_INFER_BATCH: u64 = 1024;
+
+/// Validate a `--max-batch` value: at least 1, at most
+/// [`MAX_INFER_BATCH`].
+pub fn parse_max_batch(v: u64) -> Result<usize> {
+    if !(1..=MAX_INFER_BATCH).contains(&v) {
+        bail!("max_batch {v} must be in [1, {MAX_INFER_BATCH}]");
+    }
+    Ok(v as usize)
+}
+
+/// Parse `--arrivals` (comma-separated iteration indices, e.g. `0,0,2,5`):
+/// entry i is request i's arrival iteration; a list shorter than
+/// `--requests` repeats its last value for the remainder.
+pub fn parse_arrivals(s: &str) -> Result<Vec<u64>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            p.trim()
+                .parse::<u64>()
+                .with_context(|| format!("arrival {p:?} is not an iteration index"))
         })
         .collect()
 }
@@ -466,6 +509,101 @@ pub fn train_config_from(args: &CliArgs) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Build an [`InferConfig`] from defaults + CLI flags — the serving twin
+/// of [`train_config_from`], used by `lsp-offload serve` and
+/// `train --mode infer`.  Link-level flags (`--bw-gbps`, `--link-clock`,
+/// `--link-chunk-elems`, `--fault-plan`, retry knobs, `--trace-out`,
+/// `--report-json`) keep their training semantics; the serving-only knobs
+/// (`--prefetch-depth`, `--kv-codec`, `--max-batch`, ...) are documented
+/// in EXPERIMENTS.md §Serving.
+pub fn infer_config_from(args: &CliArgs) -> Result<InferConfig> {
+    let mut cfg = InferConfig::default();
+    if let Some(v) = args.get_u64("layers")? {
+        cfg.n_layers = v.max(1) as usize;
+    }
+    if let Some(v) = args.get_u64("params-per-layer")? {
+        cfg.params_per_layer = v.max(1) as usize;
+    }
+    if let Some(v) = args.get_u64("d-state")? {
+        cfg.d_state = v.max(1) as usize;
+    }
+    if let Some(v) = args.get_u64("requests")? {
+        cfg.requests = v as usize;
+    }
+    if let Some(v) = args.get_u64("gen-tokens")? {
+        cfg.gen_tokens = v.max(1);
+    }
+    if let Some(v) = args.get_u64("max-batch")? {
+        cfg.max_batch = parse_max_batch(v)?;
+    }
+    if let Some(v) = args.get_u64("prefetch-depth")? {
+        cfg.prefetch_depth = parse_prefetch_depth(v)?;
+    }
+    if let Some(v) = args.get_f64("bw-gbps")? {
+        cfg.bw_bytes_per_s = v * 1e9;
+    }
+    if let Some(v) = args.get_f64("time-scale")? {
+        cfg.time_scale = v;
+    }
+    if let Some(v) = args.get_f64("gpu-flops")? {
+        if !(v.is_finite() && v > 0.0) {
+            bail!("--gpu-flops {v} must be a finite positive number");
+        }
+        cfg.gpu_flops = v;
+    }
+    if let Some(v) = args.get("weight-codec") {
+        cfg.weight_codec = CodecKind::by_name(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown weight codec {v:?}"))?;
+    }
+    if let Some(v) = args.get("kv-codec") {
+        cfg.kv_codec =
+            CodecKind::by_name(v).ok_or_else(|| anyhow::anyhow!("unknown kv codec {v:?}"))?;
+    }
+    if let Some(v) = args.get_u64("kv-budget")? {
+        cfg.kv_budget_entries = v as usize;
+    }
+    if let Some(v) = args.get_u64("link-chunk-elems")? {
+        cfg.link_chunk_elems = parse_link_chunk_elems(v)?;
+    }
+    if let Some(v) = args.get("link-clock") {
+        cfg.link_clock = LinkClockMode::by_name(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown link clock {v:?}"))?;
+    }
+    if let Some(v) = args.get_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get("arrivals") {
+        cfg.arrivals = parse_arrivals(v)?;
+    }
+    match args.get("fault-plan") {
+        Some(v) => cfg.fault_plan = Some(Arc::new(FaultPlan::from_arg(v)?)),
+        None => cfg.fault_plan = FaultPlan::from_env()?.map(Arc::new),
+    }
+    if let Some(v) = args.get_u64("retry-budget")? {
+        cfg.retry_budget = v as u32;
+    }
+    if let Some(v) = args.get_u64("retry-backoff-ns")? {
+        cfg.retry_backoff_ns = v;
+    }
+    if let Some(v) = args.get_u64("codec-fallback-after")? {
+        cfg.codec_fallback_after = v as u32;
+    }
+    match args.get("trace-out") {
+        Some(v) => cfg.trace_out = Some(v.to_string()),
+        None => {
+            if let Ok(p) = std::env::var("LSP_TRACE_OUT") {
+                if !p.is_empty() {
+                    cfg.trace_out = Some(p);
+                }
+            }
+        }
+    }
+    if let Some(v) = args.get("report-json") {
+        cfg.report_json = Some(v.to_string());
+    }
+    Ok(cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -741,6 +879,50 @@ mod tests {
         // Non-positive weights rejected in the array form too.
         let j = Json::parse(r#"{"tenant_weights": [0]}"#).unwrap();
         assert!(apply_json(&mut cfg, &j).is_err());
+    }
+
+    #[test]
+    fn infer_config_flags_and_validation() {
+        // Defaults survive an empty command line.
+        let cfg = infer_config_from(&argv("serve")).unwrap();
+        let d = InferConfig::default();
+        assert_eq!(cfg.n_layers, d.n_layers);
+        assert_eq!(cfg.prefetch_depth, d.prefetch_depth);
+        assert_eq!(cfg.kv_codec, d.kv_codec);
+        assert!(cfg.arrivals.is_empty());
+
+        let a = argv(
+            "serve --layers 8 --params-per-layer 2048 --requests 6 --gen-tokens 5 \
+             --max-batch 3 --prefetch-depth 4 --kv-codec bf16 --weight-codec int8 \
+             --kv-budget 12 --link-chunk-elems 4096 --link-clock virtual --seed 9 \
+             --arrivals 0,0,2 --bw-gbps 0.5 --gpu-flops 1e12",
+        );
+        let cfg = infer_config_from(&a).unwrap();
+        assert_eq!(cfg.n_layers, 8);
+        assert_eq!(cfg.params_per_layer, 2048);
+        assert_eq!(cfg.requests, 6);
+        assert_eq!(cfg.gen_tokens, 5);
+        assert_eq!(cfg.max_batch, 3);
+        assert_eq!(cfg.prefetch_depth, 4);
+        assert_eq!(cfg.kv_codec, CodecKind::Bf16);
+        assert_eq!(cfg.weight_codec, CodecKind::Int8Block);
+        assert_eq!(cfg.kv_budget_entries, 12);
+        assert_eq!(cfg.link_chunk_elems, 4096);
+        assert_eq!(cfg.link_clock, LinkClockMode::Virtual);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.arrivals, vec![0, 0, 2]);
+        assert!((cfg.bw_bytes_per_s - 0.5e9).abs() < 1.0);
+        assert!((cfg.gpu_flops - 1e12).abs() < 1.0);
+
+        // Range / parse errors are loud.
+        assert!(infer_config_from(&argv("serve --prefetch-depth 0")).is_err());
+        assert!(infer_config_from(&argv("serve --prefetch-depth 65")).is_err());
+        assert!(infer_config_from(&argv("serve --max-batch 0")).is_err());
+        assert!(infer_config_from(&argv("serve --kv-codec gzip")).is_err());
+        assert!(infer_config_from(&argv("serve --weight-codec gzip")).is_err());
+        assert!(infer_config_from(&argv("serve --arrivals 1,x")).is_err());
+        assert!(infer_config_from(&argv("serve --gpu-flops -1")).is_err());
+        assert!(infer_config_from(&argv("serve --link-chunk-elems 8")).is_err());
     }
 
     #[test]

@@ -1,0 +1,803 @@
+//! Forward-only serving engine (`lsp-offload serve` / `--mode infer`):
+//! the training substrate's links, codecs, chunking, CRC protocol and
+//! fault fabric re-aimed at inference, where **h2d is the hot direction**
+//! — model weights stay host-resident and stream to the device per layer
+//! (PIPO-style, arXiv:2504.03664), with a configurable prefetch depth of
+//! in-flight layer streams standing in for the device weight budget.
+//!
+//! ## Data path per iteration (one generated token per active request)
+//!
+//! ```text
+//! admit:   pending requests join at the iteration boundary (continuous
+//!          batching; never mid-iteration, so per-request token order is
+//!          trivially preserved)
+//! layer l: issue weight streams for layers l..l+depth-1  [h2d link,
+//!          encode_chunked -> CRC-stamped chunks, retransmit on fault]
+//!          wait for layer l's chunks; decode into the device slot
+//!          restore any spilled KV entries this layer's attention reads
+//!          [h2d link, per-entry codec tags — see coordinator::kv]
+//!          compute the per-request state update; append a KV entry;
+//!          spill oldest entries over d2h while over budget
+//! emit:    one token per active request; completed requests retire with
+//!          their latency (tracer instants: admit/complete/kv_*)
+//! ```
+//!
+//! ## Deterministic wall-clock model
+//!
+//! The shared `VirtualClock` serializes every transfer, so its absolute
+//! reading cannot exhibit prefetch overlap.  The engine instead derives
+//! the pipelined wall time from the per-message deterministic link
+//! charges (`OffloadMsg::link_ns`) with the standard two-resource
+//! recurrence over global layer index `g = iteration * n_layers + layer`:
+//!
+//! ```text
+//! stream_done[g]  = max(stream_done[g-1], compute_done[g-depth]) + S_g
+//! compute_done[g] = max(compute_done[g-1], stream_done[g]) + R_g + C_g
+//! ```
+//!
+//! `S_g` = the layer's weight-chunk link charge, `R_g` = its KV-restore
+//! link charge, `C_g` = the modeled GPU forward
+//! (`2 * params_per_layer * batch_tokens / gpu_flops`, the same
+//! arithmetic as `sim::cost_model::Costs::derive`'s `fwd_layer_gpu`, so
+//! `ScheduleKind::Infer` predictions and this measurement agree by
+//! construction).  The `compute_done[g-depth]` term is the device weight
+//! budget: a stream may not start until the slot `depth` layers back has
+//! been consumed.  At `prefetch_depth = 1` the recurrence degenerates to
+//! the exact serial sum, giving the u64 identity
+//! `wall_virtual_ns == weight_stream_ns + kv_restore_ns + compute_ns`
+//! that `tests/infer.rs` pins.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use crate::codec::{make_codec, Codec, CodecKind};
+use crate::coordinator::comm::{
+    encode_chunked, n_chunks_for, ChunkHeader, Link, LinkClock, LinkClockMode, OffloadMsg,
+    ParamKey, PrioQueue, WirePayload,
+};
+use crate::coordinator::fault::{
+    crc32, FaultDir, FaultFabric, FaultPlan, PipelineError, RetryCfg,
+};
+use crate::coordinator::kv::{KvCache, KvKey, SpilledEntry};
+use crate::coordinator::report::InferReport;
+use crate::trace::{Tracer, Track};
+use crate::util::bufpool::{BufPool, PooledBytes};
+use crate::util::rng::Rng;
+
+/// Token alphabet of the synthetic decode head (any fixed modulus works;
+/// this matches a GPT-2-ish vocabulary so the streams look plausible).
+const VOCAB: u32 = 32_000;
+
+/// Serving-run configuration (the `--mode infer` / `serve` analog of
+/// `TrainConfig`; `config::infer_config_from` builds it from the CLI).
+#[derive(Debug, Clone)]
+pub struct InferConfig {
+    /// Synthetic model depth (layers streamed per iteration).
+    pub n_layers: usize,
+    /// f32 elements per layer weight (host-resident, streamed h2d).
+    pub params_per_layer: usize,
+    /// Per-request state / KV-entry width.
+    pub d_state: usize,
+    /// Total requests served.
+    pub requests: usize,
+    /// Tokens generated per request.
+    pub gen_tokens: u64,
+    /// Continuous-batching admission cap (requests per iteration).
+    pub max_batch: usize,
+    /// In-flight layer weight streams (1 = unpipelined; also the modeled
+    /// device weight budget in layers).
+    pub prefetch_depth: usize,
+    /// Emulated link bandwidth per direction, bytes/s.
+    pub bw_bytes_per_s: f64,
+    /// Multiplier on emulated transfer time.
+    pub time_scale: f64,
+    /// Modeled GPU throughput for the forward charge.
+    pub gpu_flops: f64,
+    /// Wire codec for the streamed weights.
+    pub weight_codec: CodecKind,
+    /// Codec for spilled KV entries (`--kv-codec`; per-entry tagged).
+    pub kv_codec: CodecKind,
+    /// Max device-resident KV entries before spilling (0 = never spill).
+    pub kv_budget_entries: usize,
+    /// Sub-layer chunking budget for the weight streams (0 = whole-layer).
+    pub link_chunk_elems: usize,
+    pub link_clock: LinkClockMode,
+    pub seed: u64,
+    /// Arrival iteration per request (index = request id; missing entries
+    /// repeat the last value, empty = everyone arrives at iteration 0).
+    pub arrivals: Vec<u64>,
+    pub fault_plan: Option<Arc<FaultPlan>>,
+    pub retry_budget: u32,
+    pub retry_backoff_ns: u64,
+    pub codec_fallback_after: u32,
+    pub trace_out: Option<String>,
+    pub report_json: Option<String>,
+}
+
+impl Default for InferConfig {
+    fn default() -> Self {
+        InferConfig {
+            n_layers: 6,
+            params_per_layer: 4096,
+            d_state: 32,
+            requests: 4,
+            gen_tokens: 8,
+            max_batch: 4,
+            prefetch_depth: 2,
+            bw_bytes_per_s: 0.1e9,
+            time_scale: 1.0,
+            gpu_flops: 55e12,
+            weight_codec: CodecKind::F32Raw,
+            kv_codec: CodecKind::F32Raw,
+            kv_budget_entries: 0,
+            link_chunk_elems: 0,
+            link_clock: LinkClockMode::Auto,
+            seed: 1234,
+            arrivals: Vec::new(),
+            fault_plan: None,
+            retry_budget: 3,
+            retry_backoff_ns: 200_000,
+            codec_fallback_after: 2,
+            trace_out: None,
+            report_json: None,
+        }
+    }
+}
+
+/// One in-flight layer weight stream: the decode target plus the
+/// deterministic link charges its chunks accumulated.
+struct WeightSlot {
+    data: Vec<f32>,
+    n_chunks: usize,
+    received: usize,
+    link_ns: u64,
+    wire_bytes: u64,
+    raw_bytes: u64,
+}
+
+/// A request currently in the batch.
+struct ActiveReq {
+    id: u64,
+    state: Vec<f32>,
+    /// Tokens generated so far (also the next KV position).
+    pos: u64,
+    gen_tokens: u64,
+    admit_ns: u64,
+    tokens: Vec<u32>,
+}
+
+/// Per-request state transition: a contraction mixing the request's own
+/// state, the layer weights, and the request's own past KV entries.  It
+/// depends on NOTHING batch-shaped — which is exactly the property the
+/// continuous-batching ordering test pins (a request's token stream is
+/// invariant under co-scheduled requests) — while still making KV
+/// restore correctness load-bearing (a wrong restore shifts the stream).
+fn advance_state(state: &mut [f32], w: &[f32], past_sum: &[f32]) {
+    let wl = w.len().max(1);
+    for i in 0..state.len() {
+        let wv = w[(i * 131 + 7) % wl];
+        let p = past_sum.get(i).copied().unwrap_or(0.0);
+        let x = 0.9 * state[i] + 0.1 * (wv * state[i]).tanh() + 0.01 * p;
+        state[i] = x.clamp(-4.0, 4.0);
+    }
+}
+
+/// The serving engine: host weights, a real link pair under the
+/// negotiated clock, the spillable KV-cache, and the continuous-batching
+/// step driver.  `run()` drives everything to completion and returns the
+/// deterministic [`InferReport`].
+pub struct InferEngine {
+    pub cfg: InferConfig,
+    clock: LinkClock,
+    fabric: FaultFabric,
+    pool: BufPool,
+    weight_codec: Arc<dyn Codec>,
+    host_weights: Vec<Vec<f32>>,
+    kv: KvCache,
+    h2d_in: Arc<PrioQueue<OffloadMsg>>,
+    h2d_out: Arc<PrioQueue<OffloadMsg>>,
+    d2h_in: Arc<PrioQueue<OffloadMsg>>,
+    d2h_out: Arc<PrioQueue<OffloadMsg>>,
+    links: Option<(Link, Link)>,
+    slots: BTreeMap<u64, WeightSlot>,
+    restores_pending: usize,
+    restore_ns_acc: u64,
+}
+
+impl InferEngine {
+    pub fn new(cfg: InferConfig) -> InferEngine {
+        let clock = match cfg.link_clock {
+            LinkClockMode::Real => LinkClock::Real,
+            LinkClockMode::Virtual => LinkClock::new_virtual(),
+            LinkClockMode::Auto => LinkClock::from_env(),
+        };
+        let tracer = if cfg.trace_out.is_some() {
+            Tracer::enabled(clock.clone())
+        } else {
+            Tracer::disabled()
+        };
+        let fabric = FaultFabric::new(
+            cfg.fault_plan.clone(),
+            RetryCfg {
+                budget: cfg.retry_budget,
+                backoff_ns: cfg.retry_backoff_ns,
+                fallback_after: cfg.codec_fallback_after,
+            },
+        )
+        .with_tracer(tracer);
+        let pool = BufPool::new();
+        let h2d_in = Arc::new(PrioQueue::new());
+        let h2d_out = Arc::new(PrioQueue::new());
+        let d2h_in = Arc::new(PrioQueue::new());
+        let d2h_out = Arc::new(PrioQueue::new());
+        // Serving flips the hot direction: weights and KV restores ride
+        // h2d; only KV spills ride d2h.
+        let d2h = Link::spawn(
+            "d2h",
+            cfg.bw_bytes_per_s,
+            cfg.time_scale,
+            clock.clone(),
+            d2h_in.clone(),
+            d2h_out.clone(),
+            FaultDir::D2H,
+            fabric.clone(),
+        );
+        let h2d = Link::spawn(
+            "h2d",
+            cfg.bw_bytes_per_s,
+            cfg.time_scale,
+            clock.clone(),
+            h2d_in.clone(),
+            h2d_out.clone(),
+            FaultDir::H2D,
+            fabric.clone(),
+        );
+        let mut wrng = Rng::new(cfg.seed ^ 0x5EED_0001);
+        let host_weights: Vec<Vec<f32>> =
+            (0..cfg.n_layers.max(1)).map(|_| wrng.normal_vec(cfg.params_per_layer, 0.5)).collect();
+        let kv = KvCache::new(cfg.kv_codec, cfg.kv_budget_entries);
+        let weight_codec = make_codec(cfg.weight_codec);
+        InferEngine {
+            cfg,
+            clock,
+            fabric,
+            pool,
+            weight_codec,
+            host_weights,
+            kv,
+            h2d_in,
+            h2d_out,
+            d2h_in,
+            d2h_out,
+            links: Some((d2h, h2d)),
+            slots: BTreeMap::new(),
+            restores_pending: 0,
+            restore_ns_acc: 0,
+        }
+    }
+
+    /// The run's event recorder (a disabled shell unless `trace_out` set).
+    pub fn tracer(&self) -> &Tracer {
+        &self.fabric.tracer
+    }
+
+    /// Total host-resident weight bytes (the "model size").
+    pub fn weight_bytes_host(&self) -> u64 {
+        (self.cfg.n_layers.max(1) * self.cfg.params_per_layer * 4) as u64
+    }
+
+    /// Modeled device weight budget: `prefetch_depth` resident layer
+    /// slots.  Streaming is the point precisely when the model exceeds
+    /// this (`n_layers > prefetch_depth`).
+    pub fn weight_bytes_device_budget(&self) -> u64 {
+        (self.cfg.prefetch_depth.max(1) * self.cfg.params_per_layer * 4) as u64
+    }
+
+    /// Stream one layer's weights toward the device (global index `g`).
+    fn issue_weight_stream(&mut self, g: u64) {
+        let n = self.cfg.n_layers.max(1);
+        let l = (g as usize) % n;
+        let it = g / n as u64;
+        let data = &self.host_weights[l];
+        let n_chunks = n_chunks_for(data.len(), self.cfg.link_chunk_elems);
+        let mut msgs: Vec<OffloadMsg> = Vec::with_capacity(n_chunks);
+        encode_chunked(
+            self.weight_codec.as_ref(),
+            &self.pool,
+            data,
+            self.cfg.link_chunk_elems,
+            |payload, hdr| {
+                msgs.push(OffloadMsg {
+                    key: ParamKey { param_index: g as usize, kind: None },
+                    data: payload,
+                    prio: g as i64,
+                    step: it,
+                    link_ns: 0,
+                    chunk: hdr,
+                });
+            },
+        );
+        self.slots.insert(
+            g,
+            WeightSlot {
+                data: vec![0.0; data.len()],
+                n_chunks,
+                received: 0,
+                link_ns: 0,
+                wire_bytes: 0,
+                raw_bytes: 0,
+            },
+        );
+        for m in msgs {
+            self.h2d_in.push(m.prio, m);
+        }
+    }
+
+    /// Blocking pop from the h2d egress; a closed queue surfaces the
+    /// fabric's fatal error (the link closes its egress on fatal exit, so
+    /// this can never deadlock under fault plans).
+    fn pop_h2d(&self) -> Result<OffloadMsg, PipelineError> {
+        match self.h2d_out.pop() {
+            Some(m) => Ok(m),
+            None => Err(self
+                .fabric
+                .health
+                .fatal()
+                .unwrap_or(PipelineError::QueueClosed { what: "infer h2d egress" })),
+        }
+    }
+
+    /// Route one arrived h2d message: weight chunks fill their stream
+    /// slot; KV restores (demuxed by the `kv:` kind) commit into the
+    /// cache.  Both re-verify the CRC at the decode seam, like the
+    /// training pipeline's reassembler.
+    fn route_h2d(&mut self, msg: OffloadMsg) -> Result<(), PipelineError> {
+        match msg.key.kind.as_deref() {
+            None => {
+                let g = msg.key.param_index as u64;
+                let want = msg.chunk.checksum;
+                if want != 0 && crc32(msg.data.as_bytes()) != want {
+                    return Err(PipelineError::Decode {
+                        detail: format!("weight chunk for stream {g} failed its checksum"),
+                    });
+                }
+                let slot = self.slots.get_mut(&g).ok_or_else(|| PipelineError::ChunkProtocol {
+                    detail: format!("weight chunk for unknown stream {g}"),
+                })?;
+                let off = msg.chunk.elem_offset;
+                let elems = msg.data.elems;
+                if off + elems > slot.data.len() {
+                    return Err(PipelineError::ChunkProtocol {
+                        detail: format!(
+                            "weight chunk span {off}+{elems} exceeds layer len {}",
+                            slot.data.len()
+                        ),
+                    });
+                }
+                self.weight_codec
+                    .decode(msg.data.as_bytes(), &mut slot.data[off..off + elems])
+                    .map_err(|e| PipelineError::Decode {
+                        detail: format!("weight chunk decode: {e:#}"),
+                    })?;
+                slot.received += 1;
+                slot.link_ns += msg.link_ns;
+                slot.wire_bytes += msg.data.wire_bytes() as u64;
+                slot.raw_bytes += msg.data.raw_bytes() as u64;
+                Ok(())
+            }
+            Some(kind) => match KvKey::parse_wire_kind(kind) {
+                Some(key) => {
+                    self.kv.commit_restore(
+                        key,
+                        msg.data.as_bytes(),
+                        msg.data.elems,
+                        msg.chunk.checksum,
+                        msg.chunk.codec_tag,
+                    )?;
+                    self.restore_ns_acc += msg.link_ns;
+                    self.restores_pending = self.restores_pending.saturating_sub(1);
+                    self.fabric.tracer.instant(
+                        Track::Driver,
+                        "kv_restore",
+                        &[
+                            ("request", key.request.into()),
+                            ("layer", (key.layer as u64).into()),
+                            ("pos", key.pos.into()),
+                            ("bytes", msg.data.wire_bytes().into()),
+                        ],
+                    );
+                    Ok(())
+                }
+                None => Err(PipelineError::ChunkProtocol {
+                    detail: format!("unroutable h2d kind {kind:?}"),
+                }),
+            },
+        }
+    }
+
+    /// Drain the h2d egress until stream `g` has all its chunks (KV
+    /// restores arriving in between are committed as they land).
+    fn wait_for_slot(&mut self, g: u64) -> Result<(), PipelineError> {
+        loop {
+            if let Some(s) = self.slots.get(&g) {
+                if s.received >= s.n_chunks {
+                    return Ok(());
+                }
+            }
+            let m = self.pop_h2d()?;
+            self.route_h2d(m)?;
+        }
+    }
+
+    /// Put every spilled `(request, layer)` entry back on the h2d link
+    /// (restores jump the prefetch queue via priority; they gate compute
+    /// NOW).  Returns the number of restore messages issued.
+    fn issue_restores(&mut self, request: u64, layer: usize, it: u64) -> usize {
+        let keys = self.kv.spilled_keys_for(request, layer);
+        let mut n = 0;
+        for key in keys {
+            if let Some(entry) = self.kv.take_spilled(&key) {
+                let elems = entry.elems;
+                let mut hdr = ChunkHeader::whole(elems).with_checksum(entry.checksum);
+                hdr.codec_tag = entry.kind.wire_tag();
+                let msg = OffloadMsg {
+                    key: ParamKey { param_index: layer, kind: Some(key.wire_kind()) },
+                    data: WirePayload { bytes: PooledBytes::detached(entry.bytes), elems },
+                    prio: -1,
+                    step: it,
+                    link_ns: 0,
+                    chunk: hdr,
+                };
+                self.h2d_in.push(msg.prio, msg);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Drain the h2d egress until every outstanding restore landed.
+    fn drain_restores(&mut self) -> Result<(), PipelineError> {
+        while self.restores_pending > 0 {
+            let m = self.pop_h2d()?;
+            self.route_h2d(m)?;
+        }
+        Ok(())
+    }
+
+    /// While the resident KV set exceeds its budget, evict the oldest
+    /// entry, ship its encoded bytes over d2h, and commit exactly what
+    /// crossed the wire.  Returns the deterministic link charge (reported
+    /// as background d2h traffic, not wall time — h2d is the hot
+    /// direction).
+    fn spill_over_budget(&mut self, it: u64) -> Result<u64, PipelineError> {
+        let mut ns = 0u64;
+        while self.kv.over_budget() {
+            let Some((key, value)) = self.kv.pop_eviction() else {
+                break;
+            };
+            let entry = self.kv.encode_entry(&value);
+            let elems = entry.elems;
+            let mut hdr = ChunkHeader::whole(elems).with_checksum(entry.checksum);
+            hdr.codec_tag = entry.kind.wire_tag();
+            let msg = OffloadMsg {
+                key: ParamKey { param_index: key.layer, kind: Some(key.wire_kind()) },
+                data: WirePayload { bytes: PooledBytes::detached(entry.bytes), elems },
+                prio: 0,
+                step: it,
+                link_ns: 0,
+                chunk: hdr,
+            };
+            self.d2h_in.push(msg.prio, msg);
+            let m = match self.d2h_out.pop() {
+                Some(m) => m,
+                None => {
+                    return Err(self
+                        .fabric
+                        .health
+                        .fatal()
+                        .unwrap_or(PipelineError::QueueClosed { what: "infer d2h egress" }))
+                }
+            };
+            let want = m.chunk.checksum;
+            if want != 0 && crc32(m.data.as_bytes()) != want {
+                return Err(PipelineError::Decode {
+                    detail: format!("kv spill for {key:?} failed its checksum"),
+                });
+            }
+            let kind =
+                CodecKind::from_wire_tag(m.chunk.codec_tag).ok_or(PipelineError::Decode {
+                    detail: format!("kv spill carries unknown codec tag {}", m.chunk.codec_tag),
+                })?;
+            let arrived_key = match m.key.kind.as_deref().and_then(KvKey::parse_wire_kind) {
+                Some(k) => k,
+                None => {
+                    return Err(PipelineError::ChunkProtocol {
+                        detail: "kv spill arrived without a kv kind".to_string(),
+                    })
+                }
+            };
+            ns += m.link_ns;
+            let wire = m.data.wire_bytes() as u64;
+            self.kv.commit_spill(
+                arrived_key,
+                SpilledEntry {
+                    bytes: m.data.as_bytes().to_vec(),
+                    elems: m.data.elems,
+                    checksum: m.chunk.checksum,
+                    kind,
+                },
+            );
+            self.fabric.tracer.instant(
+                Track::Driver,
+                "kv_spill",
+                &[
+                    ("request", arrived_key.request.into()),
+                    ("layer", (arrived_key.layer as u64).into()),
+                    ("pos", arrived_key.pos.into()),
+                    ("bytes", wire.into()),
+                ],
+            );
+        }
+        Ok(ns)
+    }
+
+    /// Serve every configured request to completion and return the
+    /// deterministic report.  Continuous batching: pending requests are
+    /// admitted only at iteration boundaries, so a request's token stream
+    /// can never interleave with another's mid-token.
+    pub fn run(&mut self) -> Result<InferReport, PipelineError> {
+        let n = self.cfg.n_layers.max(1);
+        let depth = self.cfg.prefetch_depth.max(1) as u64;
+        let ppl = self.cfg.params_per_layer as f64;
+        let max_batch = self.cfg.max_batch.max(1);
+
+        // Request queue ordered by (arrival, id): admission scans the
+        // front, so out-of-order arrival configs still admit correctly.
+        let mut pending: Vec<(u64, u64)> = (0..self.cfg.requests as u64)
+            .map(|id| {
+                let arr = self
+                    .cfg
+                    .arrivals
+                    .get(id as usize)
+                    .copied()
+                    .unwrap_or_else(|| self.cfg.arrivals.last().copied().unwrap_or(0));
+                (arr, id)
+            })
+            .collect();
+        pending.sort_unstable();
+        let mut pending: VecDeque<(u64, u64)> = pending.into_iter().collect();
+
+        let mut active: Vec<ActiveReq> = Vec::new();
+        let mut done: Vec<Option<(u64, Vec<u32>)>> = (0..self.cfg.requests).map(|_| None).collect();
+
+        // Pipeline timeline (see module docs).
+        let mut stream_prev_done: u64 = 0;
+        let mut compute_done: Vec<u64> = Vec::new();
+        let mut weight_stream_ns = 0u64;
+        let mut weight_wire = 0u64;
+        let mut weight_raw = 0u64;
+        let mut compute_ns_total = 0u64;
+        let mut restore_ns_total = 0u64;
+        let mut spill_ns_total = 0u64;
+        let mut iterations: u64 = 0;
+        let mut it: u64 = 0;
+        let mut issued: u64 = 0;
+        let mut tokens_out: u64 = 0;
+
+        while !pending.is_empty() || !active.is_empty() {
+            if active.is_empty() {
+                // Idle: jump to the next arrival instead of spinning
+                // through empty iterations.
+                if let Some(&(arr, _)) = pending.front() {
+                    if arr > it {
+                        it = arr;
+                    }
+                }
+            }
+            let now_ns = compute_done.last().copied().unwrap_or(0);
+            while active.len() < max_batch {
+                match pending.front() {
+                    Some(&(arr, id)) if arr <= it => {
+                        pending.pop_front();
+                        let mut rng = Rng::new(self.cfg.seed ^ (0x0A11_CE00 + id));
+                        let state = rng.normal_vec(self.cfg.d_state.max(1), 1.0);
+                        self.fabric.tracer.instant(
+                            Track::Driver,
+                            "admit",
+                            &[("request", id.into()), ("iter", it.into()), ("t_ns", now_ns.into())],
+                        );
+                        active.push(ActiveReq {
+                            id,
+                            state,
+                            pos: 0,
+                            gen_tokens: self.cfg.gen_tokens.max(1),
+                            admit_ns: now_ns,
+                            tokens: Vec::new(),
+                        });
+                    }
+                    _ => break,
+                }
+            }
+            if active.is_empty() {
+                break; // defensive: nothing admitted and nothing pending
+            }
+
+            let batch_tokens = active.len() as f64;
+            let base_g = iterations * n as u64;
+            for l in 0..n {
+                let g = base_g + l as u64;
+                // Keep `depth` streams in flight/resident: issue up to
+                // g + depth - 1 before waiting on g.
+                while issued < g + depth {
+                    let gi = issued;
+                    self.issue_weight_stream(gi);
+                    issued += 1;
+                }
+                self.wait_for_slot(g)?;
+
+                // KV restores this layer's attention reads require.
+                let ids: Vec<u64> = active.iter().map(|r| r.id).collect();
+                let mut issued_restores = 0;
+                for id in &ids {
+                    issued_restores += self.issue_restores(*id, l, it);
+                }
+                self.restores_pending += issued_restores;
+                self.drain_restores()?;
+                let restore_ns = std::mem::take(&mut self.restore_ns_acc);
+                restore_ns_total += restore_ns;
+
+                // Consume the weight slot (frees the modeled device slot).
+                let slot = match self.slots.remove(&g) {
+                    Some(s) => s,
+                    None => {
+                        return Err(PipelineError::ChunkProtocol {
+                            detail: format!("weight slot {g} vanished before compute"),
+                        })
+                    }
+                };
+                weight_stream_ns += slot.link_ns;
+                weight_wire += slot.wire_bytes;
+                weight_raw += slot.raw_bytes;
+
+                for r in active.iter_mut() {
+                    let mut past = vec![0.0f32; self.cfg.d_state.max(1)];
+                    for q in 0..r.pos {
+                        if let Some(v) = self.kv.get(&KvKey { request: r.id, layer: l, pos: q }) {
+                            for (p, x) in past.iter_mut().zip(v) {
+                                *p += *x;
+                            }
+                        }
+                    }
+                    advance_state(&mut r.state, &slot.data, &past);
+                    self.kv.insert(KvKey { request: r.id, layer: l, pos: r.pos }, r.state.clone());
+                }
+                spill_ns_total += self.spill_over_budget(it)?;
+
+                // Advance the deterministic pipeline timeline.
+                let c_ns = ((2.0 * ppl * batch_tokens / self.cfg.gpu_flops)
+                    * self.cfg.time_scale
+                    * 1e9)
+                    .round() as u64;
+                compute_ns_total += c_ns;
+                let slot_free = if g >= depth { compute_done[(g - depth) as usize] } else { 0 };
+                let stream_done_g = stream_prev_done.max(slot_free) + slot.link_ns;
+                let prev_compute = compute_done.last().copied().unwrap_or(0);
+                compute_done.push(prev_compute.max(stream_done_g) + restore_ns + c_ns);
+                stream_prev_done = stream_done_g;
+            }
+
+            // Token emission + completion at the iteration boundary.
+            let t_ns = compute_done.last().copied().unwrap_or(0);
+            let mut still: Vec<ActiveReq> = Vec::with_capacity(active.len());
+            for mut r in active.into_iter() {
+                let sum: f32 = r.state.iter().sum();
+                r.tokens.push(sum.to_bits() % VOCAB);
+                r.pos += 1;
+                tokens_out += 1;
+                if r.pos >= r.gen_tokens {
+                    let latency = t_ns.saturating_sub(r.admit_ns);
+                    self.fabric.tracer.instant(
+                        Track::Driver,
+                        "complete",
+                        &[
+                            ("request", r.id.into()),
+                            ("latency_ns", latency.into()),
+                            ("tokens", (r.tokens.len() as u64).into()),
+                        ],
+                    );
+                    if let Some(d) = done.get_mut(r.id as usize) {
+                        *d = Some((latency, std::mem::take(&mut r.tokens)));
+                    }
+                } else {
+                    still.push(r);
+                }
+            }
+            active = still;
+            self.fabric.tracer.counter(
+                "serve",
+                &[("tokens", tokens_out.into()), ("active", (active.len() as u64).into())],
+            );
+            iterations += 1;
+            it += 1;
+        }
+
+        let wall_ns = compute_done.last().copied().unwrap_or(0);
+        let mut latencies: Vec<u64> = Vec::with_capacity(done.len());
+        let mut request_tokens: Vec<Vec<u32>> = Vec::with_capacity(done.len());
+        for d in done {
+            match d {
+                Some((lat, toks)) => {
+                    latencies.push(lat);
+                    request_tokens.push(toks);
+                }
+                None => {
+                    latencies.push(0);
+                    request_tokens.push(Vec::new());
+                }
+            }
+        }
+        let mut sorted = latencies.clone();
+        sorted.sort_unstable();
+        let pct = |p: u64| -> u64 {
+            if sorted.is_empty() {
+                0
+            } else {
+                sorted[((sorted.len() as u64 - 1) * p / 100) as usize]
+            }
+        };
+        let health = &self.fabric.health;
+        Ok(InferReport {
+            mode: "infer".to_string(),
+            requests: self.cfg.requests as u64,
+            tokens_out,
+            iterations,
+            n_layers: n as u64,
+            prefetch_depth: depth,
+            max_batch: max_batch as u64,
+            weight_codec: self.cfg.weight_codec.name().to_string(),
+            kv_codec: self.cfg.kv_codec.name().to_string(),
+            link_chunk_elems: self.cfg.link_chunk_elems as u64,
+            link_clock: self.clock.name().to_string(),
+            wall_virtual_ns: wall_ns,
+            tokens_per_s: if wall_ns > 0 {
+                tokens_out as f64 / (wall_ns as f64 / 1e9)
+            } else {
+                0.0
+            },
+            p50_latency_ns: pct(50),
+            p95_latency_ns: pct(95),
+            latencies_ns: latencies,
+            weight_stream_ns,
+            compute_ns: compute_ns_total,
+            kv_restore_ns: restore_ns_total,
+            kv_spill_ns: spill_ns_total,
+            weight_wire_bytes: weight_wire,
+            weight_raw_bytes: weight_raw,
+            weight_bytes_host: self.weight_bytes_host(),
+            weight_bytes_device_budget: self.weight_bytes_device_budget(),
+            kv_spill_wire_bytes: self.kv.spill_wire_bytes,
+            kv_restore_wire_bytes: self.kv.restore_wire_bytes,
+            kv_spills: self.kv.spills,
+            kv_restores: self.kv.restores,
+            retransmits: health.retransmits.load(Relaxed),
+            corrupt_chunks: health.corrupt_chunks.load(Relaxed),
+            request_tokens,
+        })
+    }
+}
+
+impl Drop for InferEngine {
+    fn drop(&mut self) {
+        // Close every queue first so the link threads' blocking pops
+        // return None and the threads exit; only then join via stop().
+        self.h2d_in.close();
+        self.h2d_out.close();
+        self.d2h_in.close();
+        self.d2h_out.close();
+        if let Some((mut a, mut b)) = self.links.take() {
+            a.stop();
+            b.stop();
+        }
+    }
+}

@@ -1,0 +1,350 @@
+//! Spillable KV-cache for the forward-only serving engine
+//! (`coordinator::infer`): per-(request, layer, position) f32 entries live
+//! device-resident until a budget forces the oldest positions out to host
+//! memory, encoded by the session codec, CRC-stamped, and shipped over the
+//! d2h link; a later attention read restores them over h2d.
+//!
+//! Design points (Endor/PIPO-style, arXiv:2406.11674 / 2504.03664):
+//!
+//! * **Per-entry codec tags.**  Every spilled entry records the
+//!   `CodecKind` that encoded it (`CodecKind::wire_tag`), so restores
+//!   decode with exactly that codec even if the session's negotiated
+//!   codec changes between spill and restore.  Unknown tags surface as
+//!   `PipelineError::Decode`, never a panic.
+//! * **CRC-verified like PR 6 chunks.**  The spill stores
+//!   `fault::crc32` over the encoded bytes; `decode_entry` re-verifies
+//!   before decoding, so host-side rot and link mangling are caught at
+//!   the same seam the training pipeline uses.
+//! * **Deterministic eviction.**  The victim is the resident entry with
+//!   the smallest `(pos, request, layer)` — oldest position first — found
+//!   by an ordered scan of a `BTreeMap`, so identical insert sequences
+//!   spill identical entries in identical order (the serving
+//!   determinism tests key off this).
+//!
+//! The cache itself never touches a link: the engine pops eviction
+//! victims / spilled entries, moves the bytes, and commits the results
+//! back, keeping all queue/thread concerns in `infer.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::codec::{make_codec, Codec, CodecKind};
+use crate::coordinator::fault::{crc32, PipelineError};
+use crate::util::bufpool::PooledBytes;
+
+/// Identity of one cached KV vector.  The `BTreeMap` order —
+/// `(request, layer, pos)` — makes per-(request, layer) scans range
+/// queries; eviction order is a separate, explicit `(pos, request, layer)`
+/// scan (see [`KvCache::pop_eviction`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct KvKey {
+    pub request: u64,
+    pub layer: usize,
+    pub pos: u64,
+}
+
+impl KvKey {
+    /// Wire identity for restore traffic: the `ParamKey::kind` string the
+    /// serving engine stamps on KV link messages, so the h2d demux can
+    /// tell a KV restore from a weight chunk and recover the key.
+    pub fn wire_kind(&self) -> String {
+        format!("kv:{}:{}:{}", self.request, self.layer, self.pos)
+    }
+
+    /// Inverse of [`KvKey::wire_kind`]; `None` for non-KV kinds.
+    pub fn parse_wire_kind(s: &str) -> Option<KvKey> {
+        let rest = s.strip_prefix("kv:")?;
+        let mut it = rest.split(':');
+        let request = it.next()?.parse().ok()?;
+        let layer = it.next()?.parse().ok()?;
+        let pos = it.next()?.parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some(KvKey { request, layer, pos })
+    }
+}
+
+/// A host-resident (spilled) entry: the codec's wire bytes plus everything
+/// needed to verify and decode them later.
+#[derive(Debug, Clone)]
+pub struct SpilledEntry {
+    pub bytes: Vec<u8>,
+    /// Decoded f32 element count.
+    pub elems: usize,
+    /// `fault::crc32` over `bytes`, stamped at spill time.
+    pub checksum: u32,
+    /// Which codec encoded `bytes` (the per-entry tag).
+    pub kind: CodecKind,
+}
+
+/// The spillable cache: device-resident decoded entries + host-resident
+/// encoded entries, with counters the `InferReport` surfaces.
+pub struct KvCache {
+    kind: CodecKind,
+    codec: Arc<dyn Codec>,
+    /// Max resident entries before eviction (0 = unlimited, never spills).
+    pub budget_entries: usize,
+    resident: BTreeMap<KvKey, Vec<f32>>,
+    spilled: BTreeMap<KvKey, SpilledEntry>,
+    pub spills: u64,
+    pub restores: u64,
+    pub spill_wire_bytes: u64,
+    pub restore_wire_bytes: u64,
+}
+
+impl KvCache {
+    pub fn new(kind: CodecKind, budget_entries: usize) -> KvCache {
+        KvCache {
+            kind,
+            codec: make_codec(kind),
+            budget_entries,
+            resident: BTreeMap::new(),
+            spilled: BTreeMap::new(),
+            spills: 0,
+            restores: 0,
+            spill_wire_bytes: 0,
+            restore_wire_bytes: 0,
+        }
+    }
+
+    pub fn kind(&self) -> CodecKind {
+        self.kind
+    }
+
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn spilled_len(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// Insert a freshly computed entry (device-resident).
+    pub fn insert(&mut self, key: KvKey, value: Vec<f32>) {
+        self.resident.insert(key, value);
+    }
+
+    pub fn get(&self, key: &KvKey) -> Option<&[f32]> {
+        self.resident.get(key).map(|v| v.as_slice())
+    }
+
+    /// Does the resident set exceed the budget (so the engine should spill)?
+    pub fn over_budget(&self) -> bool {
+        self.budget_entries > 0 && self.resident.len() > self.budget_entries
+    }
+
+    /// Remove and return the deterministic eviction victim: the resident
+    /// entry with the smallest `(pos, request, layer)` — oldest position
+    /// first, ties broken by request then layer.  `None` when empty.
+    pub fn pop_eviction(&mut self) -> Option<(KvKey, Vec<f32>)> {
+        let victim = self
+            .resident
+            .keys()
+            .min_by_key(|k| (k.pos, k.request, k.layer))
+            .copied()?;
+        let value = self.resident.remove(&victim)?;
+        Some((victim, value))
+    }
+
+    /// Encode a value with the session codec and stamp the CRC — the host
+    /// half of a spill.  The engine ships the same bytes over the d2h link
+    /// and commits whatever arrived (`commit_spill`), so the stored entry
+    /// is exactly what crossed the wire.
+    pub fn encode_entry(&self, value: &[f32]) -> SpilledEntry {
+        let mut buf = PooledBytes::detached(Vec::with_capacity(self.codec.wire_len(value)));
+        self.codec.encode(value, &mut buf);
+        let bytes = buf.into_vec();
+        let checksum = crc32(&bytes);
+        SpilledEntry { bytes, elems: value.len(), checksum, kind: self.kind }
+    }
+
+    /// Store a spilled entry host-side (after its d2h transfer completed).
+    pub fn commit_spill(&mut self, key: KvKey, entry: SpilledEntry) {
+        self.spills += 1;
+        self.spill_wire_bytes += entry.bytes.len() as u64;
+        self.spilled.insert(key, entry);
+    }
+
+    /// Spilled keys a `(request, layer)` attention read must restore,
+    /// in position order.
+    pub fn spilled_keys_for(&self, request: u64, layer: usize) -> Vec<KvKey> {
+        let lo = KvKey { request, layer, pos: 0 };
+        let hi = KvKey { request, layer, pos: u64::MAX };
+        self.spilled.range(lo..=hi).map(|(k, _)| *k).collect()
+    }
+
+    /// Remove a spilled entry so the engine can put its bytes on the h2d
+    /// link (the entry travels; a fatal link error loses it with the run).
+    pub fn take_spilled(&mut self, key: &KvKey) -> Option<SpilledEntry> {
+        self.spilled.remove(key)
+    }
+
+    /// Verify + decode an entry's bytes — the shared seam for restores and
+    /// direct host reads.  CRC mismatch and unknown codec tags both
+    /// surface as `PipelineError::Decode`.
+    pub fn decode_entry(entry: &SpilledEntry) -> Result<Vec<f32>, PipelineError> {
+        if crc32(&entry.bytes) != entry.checksum {
+            return Err(PipelineError::Decode {
+                detail: format!(
+                    "kv entry checksum mismatch ({} bytes, kind {})",
+                    entry.bytes.len(),
+                    entry.kind.name()
+                ),
+            });
+        }
+        let mut out = vec![0.0f32; entry.elems];
+        make_codec(entry.kind)
+            .decode(&entry.bytes, &mut out)
+            .map_err(|e| PipelineError::Decode { detail: format!("kv entry decode: {e:#}") })?;
+        Ok(out)
+    }
+
+    /// Commit a restore: verify the bytes that arrived over the link
+    /// against the carried checksum/tag, decode, and make the entry
+    /// resident again.
+    pub fn commit_restore(
+        &mut self,
+        key: KvKey,
+        bytes: &[u8],
+        elems: usize,
+        checksum: u32,
+        wire_tag: u8,
+    ) -> Result<(), PipelineError> {
+        let kind = CodecKind::from_wire_tag(wire_tag).ok_or_else(|| PipelineError::Decode {
+            detail: format!("kv restore: unknown codec wire tag {wire_tag}"),
+        })?;
+        let entry = SpilledEntry { bytes: bytes.to_vec(), elems, checksum, kind };
+        let value = KvCache::decode_entry(&entry)?;
+        self.restores += 1;
+        self.restore_wire_bytes += bytes.len() as u64;
+        self.resident.insert(key, value);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn payload(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn f32_spill_restore_is_bit_exact() {
+        let mut kv = KvCache::new(CodecKind::F32Raw, 0);
+        let mut rng = Rng::new(7);
+        let v = payload(&mut rng, 97);
+        let key = KvKey { request: 3, layer: 1, pos: 5 };
+        let entry = kv.encode_entry(&v);
+        kv.commit_spill(key, entry.clone());
+        kv.commit_restore(key, &entry.bytes, entry.elems, entry.checksum, entry.kind.wire_tag())
+            .unwrap();
+        let got = kv.get(&key).unwrap();
+        assert_eq!(got.len(), v.len());
+        for (a, b) in got.iter().zip(&v) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 round-trip must be bit-exact");
+        }
+        assert_eq!(kv.spills, 1);
+        assert_eq!(kv.restores, 1);
+        assert_eq!(kv.spill_wire_bytes, entry.bytes.len() as u64);
+    }
+
+    #[test]
+    fn lossy_spill_restore_within_declared_bound() {
+        for kind in [CodecKind::Bf16, CodecKind::Int8Block] {
+            let kv = KvCache::new(kind, 0);
+            let mut rng = Rng::new(11);
+            let v = payload(&mut rng, 256);
+            let entry = kv.encode_entry(&v);
+            let got = KvCache::decode_entry(&entry).unwrap();
+            let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+            for (a, b) in got.iter().zip(&v) {
+                err2 += ((a - b) as f64).powi(2);
+                ref2 += (*b as f64).powi(2);
+            }
+            let rel = (err2 / ref2.max(1e-30)).sqrt();
+            let bound = make_codec(kind).rel_l2_bound() as f64;
+            assert!(rel <= bound, "{kind:?}: rel {rel} > declared bound {bound}");
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_and_unknown_tags_surface_as_decode_errors() {
+        let mut kv = KvCache::new(CodecKind::F32Raw, 0);
+        let mut rng = Rng::new(3);
+        let v = payload(&mut rng, 16);
+        let entry = kv.encode_entry(&v);
+        let key = KvKey { request: 0, layer: 0, pos: 0 };
+
+        let mut bad = entry.bytes.clone();
+        bad[0] ^= 0x40;
+        let e = kv.commit_restore(key, &bad, entry.elems, entry.checksum, entry.kind.wire_tag());
+        assert!(matches!(e, Err(PipelineError::Decode { .. })), "{e:?}");
+
+        let e = kv.commit_restore(key, &entry.bytes, entry.elems, entry.checksum, 0xff);
+        assert!(matches!(e, Err(PipelineError::Decode { .. })), "{e:?}");
+        assert_eq!(kv.restores, 0, "failed restores must not count");
+        assert!(kv.get(&key).is_none());
+    }
+
+    #[test]
+    fn eviction_is_deterministic_and_oldest_position_first() {
+        let run = || {
+            let mut kv = KvCache::new(CodecKind::F32Raw, 2);
+            let mut rng = Rng::new(5);
+            let mut order = Vec::new();
+            for pos in 0..4u64 {
+                for req in 0..2u64 {
+                    kv.insert(KvKey { request: req, layer: 0, pos }, payload(&mut rng, 8));
+                    while kv.over_budget() {
+                        let (victim, value) = kv.pop_eviction().unwrap();
+                        let entry = kv.encode_entry(&value);
+                        kv.commit_spill(victim, entry);
+                        order.push(victim);
+                    }
+                }
+            }
+            order
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "identical insert sequences must evict identically");
+        // Oldest positions go first.
+        let positions: Vec<u64> = a.iter().map(|k| k.pos).collect();
+        let mut sorted = positions.clone();
+        sorted.sort_unstable();
+        assert_eq!(positions, sorted, "eviction must be oldest-position-first: {a:?}");
+    }
+
+    #[test]
+    fn wire_kind_round_trips() {
+        let key = KvKey { request: 12, layer: 3, pos: 900 };
+        assert_eq!(KvKey::parse_wire_kind(&key.wire_kind()), Some(key));
+        assert_eq!(KvKey::parse_wire_kind("kv:1:2"), None);
+        assert_eq!(KvKey::parse_wire_kind("weights"), None);
+        assert_eq!(KvKey::parse_wire_kind("kv:1:2:3:4"), None);
+    }
+
+    #[test]
+    fn spilled_keys_for_scans_one_request_layer_in_pos_order() {
+        let mut kv = KvCache::new(CodecKind::F32Raw, 0);
+        let mut rng = Rng::new(9);
+        for (req, layer, pos) in [(1, 0, 3), (1, 0, 1), (2, 0, 0), (1, 1, 2)] {
+            let key = KvKey { request: req, layer, pos };
+            let v = payload(&mut rng, 4);
+            let entry = kv.encode_entry(&v);
+            kv.commit_spill(key, entry);
+        }
+        let keys = kv.spilled_keys_for(1, 0);
+        assert_eq!(
+            keys,
+            vec![
+                KvKey { request: 1, layer: 0, pos: 1 },
+                KvKey { request: 1, layer: 0, pos: 3 }
+            ]
+        );
+    }
+}

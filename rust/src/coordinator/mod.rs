@@ -115,6 +115,8 @@
 pub mod arbiter;
 pub mod comm;
 pub mod fault;
+pub mod infer;
+pub mod kv;
 pub mod metrics;
 pub mod pipeline;
 pub mod policies;
@@ -134,5 +136,7 @@ pub use fault::{
 pub use metrics::Metrics;
 pub use pipeline::{ChunkSet, InFlight, LogicalDelta, PipelineCtx, Reassembler, TrainConfig};
 pub use policies::{make_policy, Policy, PolicyKind, UpdatePolicy};
-pub use report::TrainReport;
+pub use infer::{InferConfig, InferEngine};
+pub use kv::{KvCache, KvKey, SpilledEntry};
+pub use report::{InferReport, TrainReport};
 pub use trainer::Trainer;

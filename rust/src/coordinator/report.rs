@@ -253,6 +253,200 @@ impl TrainReport {
     }
 }
 
+/// End-of-run serving report (`lsp-offload serve` / `--mode infer`) —
+/// the inference twin of [`TrainReport`].  Every field is derived from
+/// deterministic quantities (virtual-ns link charges, modeled GPU time,
+/// wire-byte counters), so under `LSP_LINK_CLOCK=virtual` the JSON form
+/// is byte-identical across runs with the same config — the determinism
+/// property `tests/infer.rs` pins.
+#[derive(Debug, Clone)]
+pub struct InferReport {
+    pub mode: String,
+    pub requests: u64,
+    /// Total tokens emitted across all requests.
+    pub tokens_out: u64,
+    /// Continuous-batching iterations executed (idle gaps are skipped).
+    pub iterations: u64,
+    pub n_layers: u64,
+    /// In-flight weight streams == modeled device weight budget in layers.
+    pub prefetch_depth: u64,
+    pub max_batch: u64,
+    pub weight_codec: String,
+    pub kv_codec: String,
+    pub link_chunk_elems: u64,
+    pub link_clock: String,
+    /// Pipelined wall time from the deterministic two-resource recurrence
+    /// (see `coordinator::infer` module docs).
+    pub wall_virtual_ns: u64,
+    pub tokens_per_s: f64,
+    /// Per-request admit->complete latency percentiles, virtual ns.
+    pub p50_latency_ns: u64,
+    pub p95_latency_ns: u64,
+    /// Per-request latency indexed by request id.
+    pub latencies_ns: Vec<u64>,
+    /// Σ link charge of consumed weight streams (the h2d hot direction).
+    pub weight_stream_ns: u64,
+    /// Σ modeled GPU forward charge.
+    pub compute_ns: u64,
+    /// Σ link charge of KV restores (gates compute, counted in the wall).
+    pub kv_restore_ns: u64,
+    /// Σ link charge of KV spills (background d2h; NOT in the wall).
+    pub kv_spill_ns: u64,
+    /// Encoded weight bytes that crossed the wire (consumed streams only).
+    pub weight_wire_bytes: u64,
+    /// f32-equivalent bytes for the same streams (compression baseline).
+    pub weight_raw_bytes: u64,
+    /// Host-resident model size — the point of streaming is that this
+    /// exceeds `weight_bytes_device_budget`.
+    pub weight_bytes_host: u64,
+    /// `prefetch_depth` layer slots worth of device memory.
+    pub weight_bytes_device_budget: u64,
+    pub kv_spill_wire_bytes: u64,
+    pub kv_restore_wire_bytes: u64,
+    pub kv_spills: u64,
+    pub kv_restores: u64,
+    /// Link-level retransmits observed during the run (fault plans).
+    pub retransmits: u64,
+    pub corrupt_chunks: u64,
+    /// Emitted token stream per request, indexed by request id — the
+    /// payload the continuous-batching ordering property is checked on.
+    pub request_tokens: Vec<Vec<u32>>,
+}
+
+impl InferReport {
+    /// f32-equivalent weight bytes / wire bytes (1.0 when nothing moved).
+    pub fn weight_compression_ratio(&self) -> f64 {
+        if self.weight_wire_bytes == 0 {
+            1.0
+        } else {
+            self.weight_raw_bytes as f64 / self.weight_wire_bytes as f64
+        }
+    }
+
+    /// The full report as JSON.  Field order is fixed and every value is
+    /// deterministic under the virtual clock, so equal configs produce
+    /// byte-identical output.
+    pub fn to_json(&self) -> Json {
+        fn num(v: f64) -> Json {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        }
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("tokens_out", Json::Num(self.tokens_out as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("prefetch_depth", Json::Num(self.prefetch_depth as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("weight_codec", Json::Str(self.weight_codec.clone())),
+            ("kv_codec", Json::Str(self.kv_codec.clone())),
+            ("link_chunk_elems", Json::Num(self.link_chunk_elems as f64)),
+            ("link_clock", Json::Str(self.link_clock.clone())),
+            ("wall_virtual_ns", Json::Num(self.wall_virtual_ns as f64)),
+            ("tokens_per_s", num(self.tokens_per_s)),
+            ("p50_latency_ns", Json::Num(self.p50_latency_ns as f64)),
+            ("p95_latency_ns", Json::Num(self.p95_latency_ns as f64)),
+            (
+                "latencies_ns",
+                Json::Arr(self.latencies_ns.iter().map(|&l| Json::Num(l as f64)).collect()),
+            ),
+            ("weight_stream_ns", Json::Num(self.weight_stream_ns as f64)),
+            ("compute_ns", Json::Num(self.compute_ns as f64)),
+            ("kv_restore_ns", Json::Num(self.kv_restore_ns as f64)),
+            ("kv_spill_ns", Json::Num(self.kv_spill_ns as f64)),
+            ("weight_wire_bytes", Json::Num(self.weight_wire_bytes as f64)),
+            ("weight_raw_bytes", Json::Num(self.weight_raw_bytes as f64)),
+            ("weight_compression_ratio", num(self.weight_compression_ratio())),
+            ("weight_bytes_host", Json::Num(self.weight_bytes_host as f64)),
+            (
+                "weight_bytes_device_budget",
+                Json::Num(self.weight_bytes_device_budget as f64),
+            ),
+            ("kv_spill_wire_bytes", Json::Num(self.kv_spill_wire_bytes as f64)),
+            ("kv_restore_wire_bytes", Json::Num(self.kv_restore_wire_bytes as f64)),
+            ("kv_spills", Json::Num(self.kv_spills as f64)),
+            ("kv_restores", Json::Num(self.kv_restores as f64)),
+            ("retransmits", Json::Num(self.retransmits as f64)),
+            ("corrupt_chunks", Json::Num(self.corrupt_chunks as f64)),
+            (
+                "request_tokens",
+                Json::Arr(
+                    self.request_tokens
+                        .iter()
+                        .map(|ts| {
+                            Json::Arr(ts.iter().map(|&t| Json::Num(t as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Serialize the report (`to_json`) to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing infer report json {}", path.display()))
+    }
+
+    pub fn print(&self) {
+        println!("==== infer report: {} requests ====", self.requests);
+        println!(
+            "tokens {}  iterations {}  wall {}  tokens/s {:.1}",
+            self.tokens_out,
+            self.iterations,
+            crate::util::human_secs(self.wall_virtual_ns as f64 / 1e9),
+            self.tokens_per_s
+        );
+        println!(
+            "latency p50 {}  p95 {}  [{} clock]",
+            crate::util::human_secs(self.p50_latency_ns as f64 / 1e9),
+            crate::util::human_secs(self.p95_latency_ns as f64 / 1e9),
+            self.link_clock,
+        );
+        println!(
+            "weights: host {} streamed per layer (device budget {} = depth {})  \
+             wire {} [codec {}] ({:.2}x smaller than f32)",
+            crate::util::human_bytes(self.weight_bytes_host),
+            crate::util::human_bytes(self.weight_bytes_device_budget),
+            self.prefetch_depth,
+            crate::util::human_bytes(self.weight_wire_bytes),
+            self.weight_codec,
+            self.weight_compression_ratio(),
+        );
+        println!(
+            "kv-cache [codec {}]: {} spills ({})  {} restores ({})",
+            self.kv_codec,
+            self.kv_spills,
+            crate::util::human_bytes(self.kv_spill_wire_bytes),
+            self.kv_restores,
+            crate::util::human_bytes(self.kv_restore_wire_bytes),
+        );
+        println!(
+            "time split: stream {:.3}s  compute {:.3}s  kv-restore {:.3}s  \
+             (kv-spill background {:.3}s)",
+            self.weight_stream_ns as f64 / 1e9,
+            self.compute_ns as f64 / 1e9,
+            self.kv_restore_ns as f64 / 1e9,
+            self.kv_spill_ns as f64 / 1e9,
+        );
+        if self.retransmits > 0 || self.corrupt_chunks > 0 {
+            println!(
+                "robustness: retransmits {}  corrupt chunks {}",
+                self.retransmits, self.corrupt_chunks
+            );
+        }
+        // Greppable one-liner for the check.sh smoke lane.
+        println!(
+            "infer-ok tokens={} tokens_per_s={:.1} p50_ns={} p95_ns={}",
+            self.tokens_out, self.tokens_per_s, self.p50_latency_ns, self.p95_latency_ns
+        );
+    }
+}
+
 /// Aggregate report of a multi-tenant run (`--tenants K`): one
 /// [`TrainReport`] (or the tenant's own [`PipelineError`]) per tenant,
 /// plus the fairness view — wire bytes the arbiter's demux delivered per
@@ -450,6 +644,65 @@ mod tests {
         r.write_json(&p).unwrap();
         let back = std::fs::read_to_string(&p).unwrap();
         assert_eq!(back.trim_end(), text);
+    }
+
+    fn blank_infer() -> InferReport {
+        InferReport {
+            mode: "infer".into(),
+            requests: 2,
+            tokens_out: 8,
+            iterations: 4,
+            n_layers: 3,
+            prefetch_depth: 2,
+            max_batch: 2,
+            weight_codec: "f32".into(),
+            kv_codec: "bf16".into(),
+            link_chunk_elems: 0,
+            link_clock: "virtual".into(),
+            wall_virtual_ns: 2_000_000_000,
+            tokens_per_s: 4.0,
+            p50_latency_ns: 1_000_000_000,
+            p95_latency_ns: 2_000_000_000,
+            latencies_ns: vec![1_000_000_000, 2_000_000_000],
+            weight_stream_ns: 1_500_000_000,
+            compute_ns: 400_000_000,
+            kv_restore_ns: 100_000_000,
+            kv_spill_ns: 50_000_000,
+            weight_wire_bytes: 1000,
+            weight_raw_bytes: 2000,
+            weight_bytes_host: 48_000,
+            weight_bytes_device_budget: 32_000,
+            kv_spill_wire_bytes: 64,
+            kv_restore_wire_bytes: 64,
+            kv_spills: 1,
+            kv_restores: 1,
+            retransmits: 0,
+            corrupt_chunks: 0,
+            request_tokens: vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]],
+        }
+    }
+
+    #[test]
+    fn infer_report_json_round_trips() {
+        let r = blank_infer();
+        assert!((r.weight_compression_ratio() - 2.0).abs() < 1e-12);
+        let text = r.to_json().to_string();
+        let j = Json::parse(&text).expect("infer report json must parse");
+        assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "infer");
+        assert_eq!(j.get("tokens_out").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(j.get("wall_virtual_ns").unwrap().as_usize().unwrap(), 2_000_000_000);
+        let lats = j.get("latencies_ns").unwrap().as_arr().unwrap();
+        assert_eq!(lats.len(), 2);
+        let toks = j.get("request_tokens").unwrap().as_arr().unwrap();
+        assert_eq!(toks[1].as_arr().unwrap().len(), 4);
+        // Same struct -> byte-identical serialization (field order fixed).
+        assert_eq!(text, blank_infer().to_json().to_string());
+
+        let dir = std::env::temp_dir().join("lsp_infer_report_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("infer.json");
+        r.write_json(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap().trim_end(), text);
     }
 
     #[test]

@@ -167,11 +167,19 @@ fn build_data(man: &Manifest, cfg: &TrainConfig) -> (DataSource, Vec<Batch>) {
     let c = &man.config;
     if cfg.glue_task {
         let batcher = DataSource::Glue(GlueBatcher::new(c.vocab, c.seq, c.batch, cfg.seed ^ 0x77));
-        // Same planted patterns (same task seed), fresh noise stream.
-        let mut eval_b = GlueBatcher::new(c.vocab, c.seq, c.batch, cfg.seed ^ 0x77);
-        for _ in 0..50 {
-            eval_b.next_batch(); // advance past the training prefix
-        }
+        // Same planted patterns (same task seed) but an INDEPENDENT noise
+        // stream: the old split advanced a clone of the training batcher,
+        // so eval batches were literally training batches 50..50+k and the
+        // eval set silently contaminated the trajectory.  The eval stream
+        // must never touch the training RNG, or changing `eval_batches`
+        // would shift training trajectories.
+        let mut eval_b = GlueBatcher::with_noise_stream(
+            c.vocab,
+            c.seq,
+            c.batch,
+            cfg.seed ^ 0x77,
+            (cfg.seed ^ 0x77) ^ 0x9e37_79b9,
+        );
         let eval: Vec<Batch> = (0..cfg.eval_batches).map(|_| eval_b.next_batch()).collect();
         (batcher, eval)
     } else {
@@ -619,3 +627,68 @@ impl<'e> Trainer<'e> {
     }
 }
 
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            preset: "test-tiny".to_string(),
+            config: crate::model::manifest::ModelCfg {
+                vocab: 64,
+                d_model: 8,
+                n_head: 2,
+                d_ff: 16,
+                n_layer: 2,
+                seq: 16,
+                batch: 4,
+                r: 4,
+                d_frac: 0.25,
+                n_params: 4096,
+            },
+            kinds: BTreeMap::new(),
+            block_params: Vec::new(),
+            axpy_lens: Vec::new(),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Adding eval batches must not shift the training stream: the eval
+    /// split draws from its own seeded RNG stream, never the training one.
+    #[test]
+    fn glue_eval_split_does_not_shift_training_stream() {
+        let man = tiny_manifest();
+        let no_eval = TrainConfig { glue_task: true, eval_batches: 0, ..TrainConfig::default() };
+        let with_eval = TrainConfig { glue_task: true, eval_batches: 8, ..TrainConfig::default() };
+        let (mut a, eval_a) = build_data(&man, &no_eval);
+        let (mut b, eval_b) = build_data(&man, &with_eval);
+        assert!(eval_a.is_empty());
+        assert_eq!(eval_b.len(), 8);
+        for _ in 0..20 {
+            let x = a.next_batch();
+            let y = b.next_batch();
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.targets, y.targets);
+        }
+    }
+
+    /// Eval batches must not duplicate ANY early training batch — the
+    /// pre-fix split made them literally training batches 50..50+k.
+    #[test]
+    fn glue_eval_batches_disjoint_from_training_prefix() {
+        let man = tiny_manifest();
+        let cfg = TrainConfig { glue_task: true, eval_batches: 8, ..TrainConfig::default() };
+        let (mut train, eval) = build_data(&man, &cfg);
+        let prefix: Vec<Batch> = (0..100).map(|_| train.next_batch()).collect();
+        for e in &eval {
+            assert!(
+                prefix.iter().all(|t| t.tokens != e.tokens),
+                "eval batch duplicates a training batch"
+            );
+        }
+    }
+}

@@ -161,6 +161,17 @@ impl GlueLike {
         GlueLike { vocab, seq, pattern_a, pattern_b, rng }
     }
 
+    /// Same planted patterns as `new(vocab, seq, seed)` but with the noise
+    /// RNG reseeded from `noise_seed`, so two tasks can agree on *what* is
+    /// learnable while drawing disjoint example streams.  The eval split
+    /// uses this: eval examples must not be a prefix/suffix of the training
+    /// stream, or adding eval steps would shift training trajectories.
+    pub fn with_noise_stream(vocab: usize, seq: usize, seed: u64, noise_seed: u64) -> GlueLike {
+        let mut g = GlueLike::new(vocab, seq, seed);
+        g.rng = Rng::new(noise_seed);
+        g
+    }
+
     /// Sample one example: (tokens, label). The pattern is placed at a
     /// random early position; everything else is uniform noise.
     pub fn sample(&mut self) -> (Vec<i32>, u8) {
@@ -200,6 +211,18 @@ pub struct GlueBatcher {
 impl GlueBatcher {
     pub fn new(vocab: usize, seq: usize, batch: usize, seed: u64) -> GlueBatcher {
         GlueBatcher { task: GlueLike::new(vocab, seq, seed), batch }
+    }
+
+    /// Same planted patterns (task seed) with an independent noise stream —
+    /// see [`GlueLike::with_noise_stream`].
+    pub fn with_noise_stream(
+        vocab: usize,
+        seq: usize,
+        batch: usize,
+        seed: u64,
+        noise_seed: u64,
+    ) -> GlueBatcher {
+        GlueBatcher { task: GlueLike::with_noise_stream(vocab, seq, seed, noise_seed), batch }
     }
 
     pub fn next_batch(&mut self) -> Batch {
@@ -279,6 +302,47 @@ mod tests {
         assert_eq!(b.targets.len(), 64);
         let mut ds = DataSource::Glue(GlueBatcher::new(64, 16, 2, 9));
         assert_eq!(ds.next_batch().tokens.len(), 32);
+    }
+
+    #[test]
+    fn noise_stream_split_shares_patterns_but_not_examples() {
+        let a = GlueLike::new(64, 32, 5);
+        let b = GlueLike::with_noise_stream(64, 32, 5, 0x9e37_79b9);
+        assert_eq!(a.pattern_a, b.pattern_a, "task seed must fix the planted patterns");
+        assert_eq!(a.pattern_b, b.pattern_b);
+
+        // The eval stream must not reproduce ANY early training batch —
+        // with the old shared-stream split, eval batches were literally
+        // training batches 50..50+k.
+        let mut train = GlueBatcher::new(64, 16, 4, 5);
+        let train_batches: Vec<Batch> = (0..100).map(|_| train.next_batch()).collect();
+        let mut eval = GlueBatcher::with_noise_stream(64, 16, 4, 5, 5 ^ 0x9e37_79b9);
+        for _ in 0..8 {
+            let e = eval.next_batch();
+            assert!(
+                train_batches.iter().all(|t| t.tokens != e.tokens),
+                "eval batch duplicated a training batch (contaminated split)"
+            );
+        }
+    }
+
+    #[test]
+    fn noise_stream_leaves_primary_stream_untouched() {
+        // Constructing (and consuming) an eval batcher must not perturb the
+        // training batcher's stream: trajectories are pinned on this.
+        let mut solo = GlueBatcher::new(64, 16, 4, 7);
+        let solo_batches: Vec<Batch> = (0..10).map(|_| solo.next_batch()).collect();
+
+        let mut train = GlueBatcher::new(64, 16, 4, 7);
+        let mut eval = GlueBatcher::with_noise_stream(64, 16, 4, 7, 7 ^ 0x9e37_79b9);
+        for _ in 0..5 {
+            eval.next_batch();
+        }
+        for want in &solo_batches {
+            let got = train.next_batch();
+            assert_eq!(got.tokens, want.tokens);
+            assert_eq!(got.targets, want.targets);
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //!     prediction that `train --tenants K` then measures.  `--trace-out`
 //!     writes the first selected schedule's predicted task timeline as
 //!     Chrome trace-event JSON.
-//! lsp-offload train     [--preset tiny|small|mid]
+//! lsp-offload train     [--preset tiny|small|mid] [--mode train|infer]
 //!                       [--policy lsp|async-lsp|zero|...]
 //!                       [--steps N] [--bw-gbps X] [--lr X] [--csv out.csv]
 //!                       [--link-codec f32|bf16|int8|sparse|sparse-int8|auto]
@@ -67,6 +67,28 @@
 //!     link clock and exported as Chrome trace-event JSON with the DES's
 //!     predicted schedule overlaid as parallel tracks.  `--report-json`
 //!     serializes the full train report (every counter + curves).
+//! lsp-offload serve     [--layers N] [--params-per-layer N] [--d-state N]
+//!                       [--requests N] [--gen-tokens N] [--max-batch B]
+//!                       [--prefetch-depth D] [--arrivals 0,0,2,...]
+//!                       [--weight-codec f32|bf16|int8|...] [--kv-codec ...]
+//!                       [--kv-budget N] [--bw-gbps X] [--gpu-flops F]
+//!                       [--link-chunk-elems N] [--link-clock real|virtual|auto]
+//!                       [--seed N] [--fault-plan JSON|path] [--retry-budget N]
+//!                       [--trace-out FILE] [--report-json FILE]
+//!     Forward-only serving over the offload substrate (also reachable as
+//!     `train --mode infer`): a synthetic model's weights stay
+//!     host-resident and stream to the device per layer over the chunked
+//!     h2d link with `--prefetch-depth` streams in flight (the modeled
+//!     device weight budget — streaming matters exactly when the model
+//!     exceeds it); the KV-cache spills its oldest entries to the host
+//!     over d2h when `--kv-budget` is exceeded and restores them over the
+//!     link (CRC-verified, per-entry `--kv-codec` tags); requests join the
+//!     batch at iteration boundaries (continuous batching, `--max-batch`
+//!     admission cap, `--arrivals` staggering).  Prints an infer report
+//!     (tokens/s, per-request p50/p95 latency in virtual ns, weight-stream
+//!     and KV-spill wire bytes) ending in a greppable `infer-ok` line;
+//!     `--report-json` serializes it, `--trace-out` records admit/complete
+//!     instants, per-chunk transfers and KV spill/restore events.
 //! lsp-offload analyze-trace FILE [--top K]
 //!     Digest a `--trace-out` file: critical-path stall attribution,
 //!     top-K spans by total time, the fault/retransmit timeline, and
@@ -92,8 +114,9 @@
 
 use anyhow::{bail, Context, Result};
 use lsp_offload::analyze;
-use lsp_offload::config::{train_config_from, CliArgs};
+use lsp_offload::config::{infer_config_from, train_config_from, CliArgs};
 use lsp_offload::coordinator::trainer::Trainer;
+use lsp_offload::coordinator::InferEngine;
 use lsp_offload::model::manifest::find_artifacts;
 use lsp_offload::model::memory::PaperModel;
 use lsp_offload::runtime::Engine;
@@ -106,6 +129,7 @@ fn main() -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "bias" => cmd_bias(&args),
         "tune" => cmd_tune(&args),
         "analyze-trace" => cmd_analyze_trace(&args),
@@ -117,7 +141,7 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "lsp-offload: LSP-Offload (AAAI'25) reproduction.
-subcommands: analyze | simulate | train | bias | tune | analyze-trace   (see module docs)";
+subcommands: analyze | simulate | train | serve | bias | tune | analyze-trace   (see module docs)";
 
 fn profile(args: &CliArgs) -> Result<HardwareProfile> {
     let name = args.get("profile").unwrap_or("workstation");
@@ -188,6 +212,11 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
         // Same validation as the train config; the multi-tenant schedule
         // replicates the lsp-layerwise pipeline K times over shared links.
         w.tenants = lsp_offload::config::parse_tenants(v)?;
+    }
+    if let Some(v) = args.get_u64("prefetch-depth")? {
+        // Same validation as the serve config: weight streams in flight on
+        // h2d for the `infer` schedule.
+        w.prefetch_depth = lsp_offload::config::parse_prefetch_depth(v)?;
     }
     let iters = args.get_u64("iters")?.unwrap_or(4) as usize;
     let which = args.get("schedule").unwrap_or("all");
@@ -304,10 +333,88 @@ fn cmd_simulate(args: &CliArgs) -> Result<()> {
             w.tenants
         );
     }
+    if kinds.contains(&ScheduleKind::Infer) {
+        // Closed-form serving prediction: the DES transient converges to
+        // this steady state (depth 1 = serial stream+compute per layer,
+        // depth >= 2 = the two resources fully overlapped), and the
+        // runtime's deterministic wall recurrence in `coordinator::infer`
+        // runs the same arithmetic per layer.
+        use lsp_offload::sim::cost_model::{eq_infer_iter, infer_tokens_per_s, Costs};
+        let c = Costs::derive(&hw, &w);
+        let d = w.prefetch_depth.max(1);
+        let pipelined = eq_infer_iter(&c, w.n_layers, d);
+        let serial = eq_infer_iter(&c, w.n_layers, 1);
+        println!(
+            "predicted infer iter (prefetch depth {}): {:.4}s vs unpipelined {:.4}s \
+             ({:.0}% reduction); {:.1} tokens/s",
+            d,
+            pipelined,
+            serial,
+            (1.0 - pipelined / serial.max(1e-12)) * 100.0,
+            infer_tokens_per_s(&c, &w, d),
+        );
+    }
+    Ok(())
+}
+
+/// `serve` / `train --mode infer`: forward-only serving over the offload
+/// substrate.  Host-resident weights stream per layer over the chunked
+/// h2d link (`--prefetch-depth` streams in flight against the modeled
+/// device weight budget), the KV-cache spills its oldest entries to the
+/// host over d2h when `--kv-budget` is exceeded and restores them over
+/// the link, and requests join the batch at iteration boundaries
+/// (continuous batching under `--max-batch` / `--arrivals`).  All wall
+/// accounting is a deterministic recurrence over per-message link
+/// nanoseconds, so reports are byte-identical across runs per seed.
+fn cmd_serve(args: &CliArgs) -> Result<()> {
+    let cfg = infer_config_from(args)?;
+    println!(
+        "serving layers={} params/layer={} requests={} gen-tokens={} max-batch={} depth={} \
+         weight-codec={} kv-codec={} kv-budget={} bw={:.3} GB/s",
+        cfg.n_layers,
+        cfg.params_per_layer,
+        cfg.requests,
+        cfg.gen_tokens,
+        cfg.max_batch,
+        cfg.prefetch_depth,
+        cfg.weight_codec.name(),
+        cfg.kv_codec.name(),
+        cfg.kv_budget_entries,
+        cfg.bw_bytes_per_s / 1e9,
+    );
+    let report_json = cfg.report_json.clone();
+    let trace_out = cfg.trace_out.clone();
+    let mut engine = InferEngine::new(cfg);
+    let report = engine.run()?;
+    if let Some(path) = &report_json {
+        report.write_json(std::path::Path::new(path))?;
+        println!("wrote infer report to {path}");
+    }
+    report.print();
+    // Same discipline as `cmd_train`: snapshot the tracer, then drop the
+    // engine FIRST — that joins the link threads, so the track buffers
+    // are quiescent when the exporter walks them.
+    if let Some(path) = trace_out {
+        let tracer = engine.tracer().clone();
+        drop(engine);
+        tracer.export_chrome(std::path::Path::new(&path), None)?;
+        println!(
+            "wrote trace ({} events, {} dropped) to {path}",
+            tracer.total_events(),
+            tracer.dropped(),
+        );
+    }
     Ok(())
 }
 
 fn cmd_train(args: &CliArgs) -> Result<()> {
+    match args.get("mode") {
+        None | Some("train") => {}
+        // The serving path shares the substrate but not the artifacts —
+        // it builds its synthetic host-resident model from the seed.
+        Some("infer") | Some("serve") => return cmd_serve(args),
+        Some(other) => bail!("unknown --mode {other:?} (train | infer)"),
+    }
     let preset = args.get("preset").unwrap_or("tiny");
     let dir = find_artifacts(args.get("artifacts"), preset)?;
     println!("loading artifacts from {} ...", dir.display());

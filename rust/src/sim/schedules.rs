@@ -41,6 +41,15 @@ pub enum ScheduleKind {
     /// runtime's [`crate::coordinator::arbiter::Arbiter`].  `tenants = 1`
     /// degenerates exactly to [`ScheduleKind::LspLayerwise`].
     MultiTenant,
+    /// Forward-only serving (`--schedule infer` / `serve`): host-resident
+    /// weights stream h2d per layer with `Workload::prefetch_depth`
+    /// in-flight streams (the modeled device weight budget), each layer's
+    /// forward gating on its own stream — the DES model of the runtime's
+    /// [`crate::coordinator::infer::InferEngine`].  `prefetch_depth = 1`
+    /// serializes stream and compute (the closed form
+    /// [`crate::sim::cost_model::eq_infer_iter`]'s serial corner);
+    /// `>= 2` overlaps layer l's forward with layer l+1's stream.
+    Infer,
 }
 
 impl ScheduleKind {
@@ -54,6 +63,7 @@ impl ScheduleKind {
             "lsp" | "lsp-layerwise" => Some(ScheduleKind::LspLayerwise),
             "async-lsp" | "async" => Some(ScheduleKind::AsyncLsp),
             "multi-tenant" | "multi" | "tenants" => Some(ScheduleKind::MultiTenant),
+            "infer" | "serve" => Some(ScheduleKind::Infer),
             _ => None,
         }
     }
@@ -68,6 +78,7 @@ impl ScheduleKind {
             ScheduleKind::LspLayerwise => "lsp-layerwise",
             ScheduleKind::AsyncLsp => "async-lsp",
             ScheduleKind::MultiTenant => "multi-tenant",
+            ScheduleKind::Infer => "infer",
         }
     }
 
@@ -85,7 +96,7 @@ impl ScheduleKind {
         }
     }
 
-    pub const ALL: [ScheduleKind; 8] = [
+    pub const ALL: [ScheduleKind; 9] = [
         ScheduleKind::Native,
         ScheduleKind::SwapOnly,
         ScheduleKind::Zero,
@@ -94,6 +105,7 @@ impl ScheduleKind {
         ScheduleKind::LspLayerwise,
         ScheduleKind::AsyncLsp,
         ScheduleKind::MultiTenant,
+        ScheduleKind::Infer,
     ];
 }
 
@@ -110,6 +122,7 @@ pub fn build_sim(kind: ScheduleKind, hw: &HardwareProfile, w: &Workload, iters: 
         ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
         ScheduleKind::AsyncLsp => layerwise_async(&mut sim, &c, w, iters),
         ScheduleKind::MultiTenant => multi_tenant(&mut sim, &c, w, iters),
+        ScheduleKind::Infer => infer(&mut sim, &c, w, iters),
     }
     sim
 }
@@ -132,19 +145,21 @@ pub fn build_schedule(
         ScheduleKind::LspLayerwise => layerwise(&mut sim, &c, w, iters, true),
         ScheduleKind::AsyncLsp => layerwise_async(&mut sim, &c, w, iters),
         ScheduleKind::MultiTenant => multi_tenant(&mut sim, &c, w, iters),
+        ScheduleKind::Infer => infer(&mut sim, &c, w, iters),
     }
     let sched = sim.run()?;
     // Multi-tenant lays out K replicas of the per-iteration work, so the
     // aggregate GPU-compute baseline scales with the tenant count (the
     // slowdown column stays total-work / capacity).
     let replicas = if kind == ScheduleKind::MultiTenant { w.tenants.max(1) } else { 1 };
-    Ok(IterReport::from_schedule(
-        kind.name(),
-        &sched,
-        iters,
-        c.gpu_compute(w.n_layers) * replicas as f64,
-        makespan(&sched),
-    ))
+    // Forward-only serving has no backward: its GPU-compute baseline is
+    // the forward path alone, not `Costs::gpu_compute` (fwd + bwd).
+    let gpu_compute = if kind == ScheduleKind::Infer {
+        c.fwd_layer_gpu * w.n_layers as f64
+    } else {
+        c.gpu_compute(w.n_layers) * replicas as f64
+    };
+    Ok(IterReport::from_schedule(kind.name(), &sched, iters, gpu_compute, makespan(&sched)))
 }
 
 fn native(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
@@ -659,6 +674,50 @@ fn layerwise_async(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
     }
 }
 
+/// Forward-only serving DAG: per decode iteration, every layer's weights
+/// stream h2d (`i{it}.wload{l}`) and its forward runs on the GPU
+/// (`i{it}.fwd{l}`).  Dependencies mirror the runtime engine's
+/// recurrence over the global layer index `g = it * n + l`:
+///
+/// * stream `g` serializes on the link behind stream `g - 1` and may not
+///   start before compute `g - depth` consumed its slot (the device
+///   weight budget holds `prefetch_depth` layers);
+/// * forward `g` waits on its own stream and the previous forward.
+///
+/// The runtime's KV restore charge has no DES task — the agreement test
+/// runs the engine with a KV budget that never spills, which is also the
+/// regime the closed form prices.
+fn infer(sim: &mut Sim, c: &Costs, w: &Workload, iters: usize) {
+    let n = w.n_layers;
+    let depth = w.prefetch_depth.max(1);
+    let mut computes: Vec<TaskId> = Vec::with_capacity(iters * n);
+    let mut last_stream: Option<TaskId> = None;
+    for it in 0..iters {
+        for l in 0..n {
+            let g = it * n + l;
+            let mut sdeps: Vec<TaskId> = last_stream.into_iter().collect();
+            if g >= depth {
+                sdeps.push(computes[g - depth]);
+            }
+            let stream = sim.add(
+                format!("i{it}.wload{l}"),
+                Resource::H2D,
+                c.upload_layer_full,
+                &sdeps,
+            );
+            last_stream = Some(stream);
+            let mut cdeps = vec![stream];
+            cdeps.extend(computes.last().copied());
+            computes.push(sim.add(
+                format!("i{it}.fwd{l}"),
+                Resource::Gpu,
+                c.fwd_layer_gpu,
+                &cdeps,
+            ));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -865,6 +924,37 @@ mod tests {
         let four = build_schedule(ScheduleKind::MultiTenant, &hw, &w4, 3).unwrap().iter_time;
         assert!(four >= solo * 0.99, "4 tenants can't beat one: {four} vs {solo}");
         assert!(four <= solo * 4.0 * 1.01, "sharing can't be worse than serial: {four}");
+    }
+
+    /// Serving DES: depth-1 reproduces the serial closed form exactly,
+    /// depth-2 overlaps stream and compute (>= 20% faster on the paper
+    /// workload, where the two costs are same-order), and steady state
+    /// saturates at depth 2 — the structure `eq_infer_iter` encodes and
+    /// the runtime agreement test (`tests/infer.rs`) measures.
+    #[test]
+    fn infer_schedule_overlap_and_closed_form_degeneracy() {
+        let (hw, w) = setup();
+        let c = super::super::cost_model::Costs::derive(&hw, &w);
+        let run = |depth: usize| {
+            let mut wd = w.clone();
+            wd.prefetch_depth = depth;
+            let sim = build_sim(ScheduleKind::Infer, &hw, &wd, 4);
+            let sched = sim.run().unwrap();
+            crate::sim::engine::validate(sim.tasks(), &sched).unwrap();
+            build_schedule(ScheduleKind::Infer, &hw, &wd, 4).unwrap().iter_time
+        };
+        let d1 = run(1);
+        let d2 = run(2);
+        let d4 = run(4);
+        let eq1 = super::super::cost_model::eq_infer_iter(&c, w.n_layers, 1);
+        let rel1 = (d1 - eq1).abs() / eq1;
+        assert!(rel1 < 1e-9, "depth-1 DES {d1} must be the serial closed form {eq1} ({rel1})");
+        let eq2 = super::super::cost_model::eq_infer_iter(&c, w.n_layers, 2);
+        let rel2 = (d2 - eq2).abs() / eq2;
+        assert!(rel2 < 1e-6, "depth-2 DES {d2} vs closed form {eq2} ({rel2})");
+        assert!(d2 <= d1 * 0.8, "prefetch must cut >= 20%: depth2 {d2} vs depth1 {d1}");
+        let sat = (d4 - d2).abs() / d2;
+        assert!(sat < 1e-6, "steady state saturates at depth 2: {d4} vs {d2}");
     }
 
     #[test]
